@@ -1,0 +1,84 @@
+//! Full PTQ pipeline on a trained model: calibrate -> quantize with each
+//! method -> perplexity on all three corpora. The Table-2-in-miniature
+//! driver. Requires `make artifacts`.
+//!
+//!     cargo run --release --example quantize_and_eval -- \
+//!         --model opt-small --bits 3 --batches 2
+
+use ganq::coordinator::{self, QuantEngine};
+use ganq::data::corpus::{self, Split};
+use ganq::eval::{perplexity, PplEngine};
+use ganq::model::forward::Weights;
+use ganq::model::WeightStore;
+use ganq::runtime::Runtime;
+use ganq::util::cli::Args;
+use ganq::util::timer::{fmt_f, Table};
+
+fn main() {
+    let args = Args::from_env();
+    let model = args.get_or("model", "opt-small").to_string();
+    let bits = args.get_usize("bits", 3) as u8;
+    let batches = args.get_usize("batches", 2);
+
+    let rt = match Runtime::load() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("artifacts required: {} (run `make artifacts`)", e);
+            std::process::exit(1);
+        }
+    };
+    let cfg = rt.manifest.models[&model].config;
+    let store = WeightStore::load(&rt.base, &model, cfg)
+        .expect("trained weights in artifacts/");
+
+    eprintln!("calibrating on c4s (paper: C4 first shard) ...");
+    let calib = coordinator::calibrate(&store, 32, 128);
+
+    let flavors = ["wiki2s", "c4s", "ptbs"];
+    let mut table = Table::new(
+        &format!("perplexity, {} @ {}-bit (HLO nll graph)", model, bits),
+        &["method", "wiki2s", "c4s", "ptbs", "quant time"],
+    );
+
+    // FP16 baseline row
+    {
+        let eng = PplEngine::hlo(&rt, &model, &store, None)
+            .unwrap_or(PplEngine::Native(Weights::Fp(&store)));
+        let mut row = vec!["full (fp)".to_string()];
+        for f in flavors {
+            let fl = corpus::flavor(f).unwrap();
+            let ppl = perplexity(&eng, fl, Split::Valid, batches).unwrap();
+            row.push(fmt_f(ppl, 3));
+        }
+        row.push("-".into());
+        table.row(row);
+    }
+
+    for method in ["rtn", "gptq", "omniq", "ganq", "ganq-star"] {
+        let t0 = std::time::Instant::now();
+        let qm = coordinator::quantize_model(
+            &store,
+            method,
+            bits,
+            &calib,
+            &QuantEngine::Hlo(&rt),
+            false,
+        )
+        .expect("quantize");
+        let dt = t0.elapsed().as_secs_f64();
+        let eng = PplEngine::hlo(&rt, &model, &store, Some(&qm))
+            .unwrap_or(PplEngine::Native(Weights::Quant(&qm)));
+        let mut row = vec![method.to_string()];
+        for f in flavors {
+            let fl = corpus::flavor(f).unwrap();
+            let ppl = perplexity(&eng, fl, Split::Valid, batches).unwrap();
+            row.push(fmt_f(ppl, 3));
+        }
+        row.push(format!("{:.1}s", dt));
+        table.row(row);
+    }
+    table.print();
+    println!(
+        "\nexpected shape (paper Table 2): full < ganq < omniq/gptq < rtn"
+    );
+}

@@ -1,0 +1,414 @@
+"""AOT compile path: lower every L2 graph (which embed the L1 Pallas
+kernels) to HLO *text* artifacts + write the manifest the Rust runtime
+loads. Python runs only here — never on the request path.
+
+HLO text, NOT `.serialize()`: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (under the Rust `xla` crate)
+rejects; the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Also emits golden fixtures (artifacts/golden/*.json) used by cargo tests to
+pin the Rust-native reimplementations (corpus generator, RTN, GANQ, packing,
+model forward) to the Python reference semantics.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import corpus, model, pretrain, ganq
+from .kernels import ref
+from .kernels.lut_gemm import lut_gemm
+
+GANQ_ITERS = 10
+SERVING_MODELS = ["opt-mini", "opt-small", "opt-med"]
+DTYPE_NAME = {np.float32: "f32", np.int32: "i32", np.uint8: "u8"}
+
+
+def dt(x) -> str:
+    return {jnp.float32: "f32", jnp.int32: "i32", jnp.uint8: "u8"}[x]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+class Builder:
+    def __init__(self, out_dir: str, force: bool):
+        self.out = out_dir
+        self.force = force
+        self.graphs = {}
+        os.makedirs(os.path.join(out_dir, "hlo"), exist_ok=True)
+        os.makedirs(os.path.join(out_dir, "golden"), exist_ok=True)
+
+    def lower(self, name, fn, arg_specs, input_names, output_names):
+        """arg_specs: [(name, ShapeDtypeStruct)] in call order."""
+        path = os.path.join("hlo", name + ".hlo.txt")
+        full = os.path.join(self.out, path)
+        self.graphs[name] = {
+            "path": path,
+            "inputs": [
+                {
+                    "name": nm,
+                    "dtype": dt(s.dtype.type)
+                    if hasattr(s.dtype, "type")
+                    else str(s.dtype),
+                    "dims": list(s.shape),
+                }
+                for nm, s in zip(input_names, arg_specs)
+            ],
+            "outputs": output_names,
+        }
+        if os.path.exists(full) and not self.force:
+            return
+        print(f"  lowering {name} ...", flush=True)
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        with open(full, "w") as f:
+            f.write(text)
+
+
+def weight_arg_specs(spec):
+    out = []
+    for name, shape in spec:
+        dtype = jnp.uint8 if name.endswith(".qp") else jnp.float32
+        out.append((name, sds(shape, dtype)))
+    return out
+
+
+def build_graphs(b: Builder):
+    # --- per-config NLL graphs (perplexity eval; weights are args, so one
+    # graph serves FP16-baseline and every quant method via reconstruction)
+    for mname, cfg in model.CONFIGS.items():
+        fn, spec = model.build_nll_fn(cfg, "fp32")
+        wspecs = weight_arg_specs(spec)
+        args = [("tokens", sds((8, 128), jnp.int32))] + wspecs
+        b.lower(
+            f"nll_fp32_{mname}",
+            fn,
+            [s for _, s in args],
+            [n for n, _ in args],
+            ["nll_sum"],
+        )
+
+    # --- serving graphs: decode + prefill, fp32 / lut4 / lut3
+    for mname in SERVING_MODELS:
+        cfg = model.CONFIGS[mname]
+        L, h, ctx = cfg["layers"], cfg["heads"], cfg["ctx"]
+        hd = cfg["d"] // h
+        for fmt, mode, bits in [
+            ("fp32", "fp32", 4),
+            ("lut4", "lut", 4),
+            ("lut3", "lut", 3),
+        ]:
+            fn_d, spec = model.build_decode_fn(cfg, mode, bits)
+            wspecs = weight_arg_specs(spec)
+            for bsz in (1, 4):
+                cache = sds((L, bsz, h, ctx, hd))
+                args = [
+                    ("tok", sds((bsz,), jnp.int32)),
+                    ("pos", sds((bsz,), jnp.int32)),
+                    ("kcache", cache),
+                    ("vcache", cache),
+                ] + wspecs
+                b.lower(
+                    f"decode_{fmt}_{mname}_b{bsz}",
+                    fn_d,
+                    [s for _, s in args],
+                    [n for n, _ in args],
+                    ["logits", "kcache", "vcache"],
+                )
+            fn_p, spec = model.build_prefill_fn(cfg, mode, bits)
+            wspecs = weight_arg_specs(spec)
+            for s_len in (16, 32):
+                args = [("tokens", sds((1, s_len), jnp.int32))] + wspecs
+                b.lower(
+                    f"prefill_{fmt}_{mname}_b1_s{s_len}",
+                    fn_p,
+                    [s for _, s in args],
+                    [n for n, _ in args],
+                    ["logits", "kcache", "vcache"],
+                )
+
+    # --- pallas-kernel serving variant (proves the L1 kernel composes into
+    # a full serving graph end-to-end through the Rust runtime)
+    for mname in ["opt-micro"]:
+        cfg = model.CONFIGS[mname]
+        L, h, ctx = cfg["layers"], cfg["heads"], cfg["ctx"]
+        hd = cfg["d"] // h
+        for fmt, mode in [("fp32", "fp32"), ("lut4", "lut"), ("pallas4", "pallas")]:
+            fn_d, spec = model.build_decode_fn(cfg, mode, 4)
+            wspecs = weight_arg_specs(spec)
+            cache = sds((L, 1, h, ctx, hd))
+            args = [
+                ("tok", sds((1,), jnp.int32)),
+                ("pos", sds((1,), jnp.int32)),
+                ("kcache", cache),
+                ("vcache", cache),
+            ] + wspecs
+            b.lower(
+                f"decode_{fmt}_{mname}_b1",
+                fn_d,
+                [s for _, s in args],
+                [n for n, _ in args],
+                ["logits", "kcache", "vcache"],
+            )
+
+    # --- GANQ solver graphs per layer shape (Algorithm 1 with the L1
+    # back-substitution kernel inside lax.scan)
+    shapes = set()
+    for cfg in model.CONFIGS.values():
+        for _nm, m, n in model.linear_shapes(cfg):
+            shapes.add((m, n))
+    for m, n in sorted(shapes):
+        for bits in (4, 3):
+            k = 2**bits
+            fn, arg_shapes = ganq.build_ganq_fn(m, n, bits, GANQ_ITERS)
+            names = ["w", "l", "t0"]
+            b.lower(
+                f"ganq{bits}_{m}x{n}",
+                fn,
+                arg_shapes,
+                names,
+                ["q", "t", "errs"],
+            )
+
+    # --- solver-piece artifacts: S-step (pallas and plain) and T-step in
+    # isolation, used by the Rust integration tests to pin each stage of
+    # Algorithm 1 against the native implementation
+    m, n, k = 64, 64, 16
+    b.lower(
+        "sstep4_64x64_pallas",
+        lambda w, l, t0: (ganq.sstep(w, l, t0, use_pallas=True),),
+        [sds((m, n)), sds((n, n)), sds((m, k))],
+        ["w", "l", "t0"],
+        ["q"],
+    )
+    b.lower(
+        "sstep4_64x64_plain",
+        lambda w, l, t0: (ganq.sstep(w, l, t0, use_pallas=False),),
+        [sds((m, n)), sds((n, n)), sds((m, k))],
+        ["w", "l", "t0"],
+        ["q"],
+    )
+    b.lower(
+        "tstep4_64x64",
+        lambda w, h, q, tp: (ganq.tstep(w, h, q, tp),),
+        [sds((m, n)), sds((n, n)), sds((m, n), jnp.int32), sds((m, k))],
+        ["w", "h", "q", "tprev"],
+        ["t"],
+    )
+
+    # --- standalone LUT-mpGEMM kernel artifacts (kernel-level bench +
+    # validation through the Rust runtime)
+    for (p, m, n) in [(8, 128, 128), (8, 512, 128), (8, 128, 512)]:
+        for bits in (4, 3):
+            k = 2**bits
+
+            def f(x, qp, t, _bits=bits):
+                return (lut_gemm(x, qp, t, kbits=_bits, block_p=8,
+                                 block_m=64),)
+
+            args = [
+                ("x", sds((p, n))),
+                ("qp", sds((m, n // 2), jnp.uint8)),
+                ("t", sds((m, k))),
+            ]
+            b.lower(
+                f"lutgemm{bits}_p{p}_{m}x{n}",
+                f,
+                [s for _, s in args],
+                [n_ for n_, _ in args],
+                ["y"],
+            )
+
+
+def build_goldens(out_dir: str, all_params: dict):
+    g = os.path.join(out_dir, "golden")
+    rng = np.random.RandomState(42)
+
+    # corpus determinism
+    cj = {}
+    for flavor in corpus.FLAVORS:
+        cj[flavor] = corpus.generate(flavor, "train", 512).decode("ascii")
+        cj[flavor + "_valid"] = corpus.generate(flavor, "valid", 256).decode(
+            "ascii"
+        )
+    cj["instruct"] = corpus.instruct_text(256).decode("ascii")
+    with open(os.path.join(g, "corpus.json"), "w") as f:
+        json.dump(cj, f)
+
+    # GANQ fixture (numpy reference; Rust native must match)
+    m, n, bits = 8, 16, 3
+    w = rng.randn(m, n).astype(np.float32)
+    x = rng.randn(n, 48).astype(np.float32)
+    h = x @ x.T
+    q, t, errs = ref.ganq_reference_np(w, h, bits, iters=6)
+    w_hat = np.take_along_axis(t, q, axis=1)
+    hp = ref.precondition_np(h.astype(np.float64))
+    q_rtn, t_rtn = ref.rtn_codebook_np(w, bits)
+    wh_rtn = np.take_along_axis(t_rtn.astype(np.float64), q_rtn, axis=1)
+    with open(os.path.join(g, "ganq.json"), "w") as f:
+        json.dump(
+            {
+                "m": m,
+                "n": n,
+                "bits": bits,
+                "iters": 6,
+                "w": w.flatten().tolist(),
+                "h": h.flatten().tolist(),
+                "errs": [float(e) for e in errs],
+                "final_err": ref.layer_error_np(
+                    w.astype(np.float64), w_hat, hp
+                ),
+                "rtn_err": ref.layer_error_np(
+                    w.astype(np.float64), wh_rtn, hp
+                ),
+                "w_hat": w_hat.flatten().tolist(),
+            },
+            f,
+        )
+
+    # RTN fixture
+    w4 = rng.randn(4, 8).astype(np.float32)
+    q4, t4 = ref.rtn_codebook_np(w4, 4)
+    with open(os.path.join(g, "rtn.json"), "w") as f:
+        json.dump(
+            {
+                "w": w4.flatten().tolist(),
+                "m": 4,
+                "n": 8,
+                "bits": 4,
+                "q": q4.flatten().tolist(),
+                "t": t4.flatten().tolist(),
+            },
+            f,
+        )
+
+    # packing fixtures
+    qq = rng.randint(0, 16, (3, 10))
+    qp = ref.pack_nibbles(qq)
+    q3 = rng.randint(0, 8, (3, 11))
+    p3 = ref.pack3(q3)
+    with open(os.path.join(g, "pack.json"), "w") as f:
+        json.dump(
+            {
+                "q4": qq.flatten().tolist(),
+                "q4_m": 3,
+                "q4_n": 10,
+                "packed4": qp.flatten().tolist(),
+                "q3": q3.flatten().tolist(),
+                "q3_m": 3,
+                "q3_n": 11,
+                "packed3": p3.flatten().tolist(),
+            },
+            f,
+        )
+
+    # outlier split fixture
+    wo = rng.randn(4, 32).astype(np.float32)
+    sp, dn = ref.outlier_split_np(wo, 0.125)
+    with open(os.path.join(g, "outlier.json"), "w") as f:
+        json.dump(
+            {
+                "w": wo.flatten().tolist(),
+                "m": 4,
+                "n": 32,
+                "ratio": 0.125,
+                "sparse": sp.flatten().tolist(),
+                "dense": dn.flatten().tolist(),
+            },
+            f,
+        )
+
+    # trained-model forward fixture: logits at last position + nll, used to
+    # pin the Rust native forward AND the HLO execution path
+    mname = "opt-micro"
+    cfg = model.CONFIGS[mname]
+    params = {k: jnp.array(v) for k, v in all_params[mname].items()}
+    toks = np.frombuffer(
+        corpus.generate("wiki2s", "valid", 16), dtype=np.uint8
+    ).astype(np.int32)[None, :]
+    logits, _, _ = model.fwd(params, toks, cfg)
+    nll = model.nll_sum(params, toks, cfg)
+    with open(os.path.join(g, "fwd.json"), "w") as f:
+        json.dump(
+            {
+                "model": mname,
+                "tokens": toks.flatten().tolist(),
+                "logits_last": np.asarray(logits[0, -1]).tolist(),
+                "nll_sum": float(nll),
+            },
+            f,
+        )
+
+
+def build_manifest(b: Builder, out_dir: str):
+    models = {}
+    for mname in list(model.CONFIGS) + list(model.INSTRUCT_VARIANTS):
+        cfg = model.config_for(mname)
+        base = model.INSTRUCT_VARIANTS.get(mname, mname)
+        models[mname] = {
+            "config": {k: int(v) for k, v in cfg.items()},
+            "base_config": base,
+            "weights": f"weights/{mname}/weights.bin",
+            "weights_index": f"weights/{mname}/weights.json",
+            "params": [
+                {"name": nm, "shape": list(sh)}
+                for nm, sh in model.param_spec(cfg)
+            ],
+            "linears": [
+                {"name": nm, "m": m, "n": n}
+                for nm, m, n in model.linear_shapes(cfg)
+            ],
+        }
+    manifest = {
+        "version": 1,
+        "ganq_iters": GANQ_ITERS,
+        "models": models,
+        "graphs": b.graphs,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--skip-train", action="store_true")
+    args = ap.parse_args()
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+
+    print("== pretraining model family (cached if present) ==", flush=True)
+    all_params = pretrain.ensure_all(out)
+
+    print("== lowering graphs ==", flush=True)
+    b = Builder(out, args.force)
+    build_graphs(b)
+
+    print("== goldens + manifest ==", flush=True)
+    build_goldens(out, all_params)
+    build_manifest(b, out)
+    print(f"artifacts complete: {out}")
+
+
+if __name__ == "__main__":
+    main()

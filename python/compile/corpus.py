@@ -1,0 +1,196 @@
+"""Synthetic corpus generator — the WikiText-2 / C4 / PTB stand-ins.
+
+Repro band is 0 (no model checkpoints, no datasets in this environment), so
+per the substitution rule we synthesize three related-but-distinct text
+distributions ("wiki2s", "c4s", "ptbs"). The generator is *integer-only*
+(splitmix64 + integer cumulative-weight sampling) so the Rust port in
+``rust/src/data/corpus.rs`` reproduces it byte-for-byte; a golden file
+emitted by aot.py is compared in cargo tests.
+
+Structure: a Zipfian vocabulary of pseudo-words with English-ish letter
+frequencies, sentences of 4..12 words, and a deterministic bigram "chain"
+(with probability 1/4 the next word is a fixed function of the previous
+word) so a small trained transformer has real structure to learn — which is
+what makes quantization-induced degradation measurable.
+"""
+
+from __future__ import annotations
+
+import math
+
+MASK64 = (1 << 64) - 1
+
+# English letter frequencies (per mille, approximately) — fixed table shared
+# with the Rust port.
+LETTER_FREQ = [
+    8167, 1492, 2782, 4253, 12702, 2228, 2015, 6094, 6966, 153, 772, 4025,
+    2406, 6749, 7507, 1929, 95, 5987, 6327, 9056, 2758, 978, 2360, 150,
+    1974, 74,
+]
+
+
+def splitmix64(state: int):
+    """One step of splitmix64. Returns (new_state, output)."""
+    state = (state + 0x9E3779B97F4A7C15) & MASK64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    z = z ^ (z >> 31)
+    return state, z
+
+
+class Rng:
+    """Tiny deterministic RNG shared (algorithmically) with Rust."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state, z = splitmix64(self.state)
+        return z
+
+    def below(self, n: int) -> int:
+        """Uniform integer in [0, n). Uses simple modulo (bias is irrelevant
+        here and modulo keeps the Rust port trivial)."""
+        return self.next_u64() % n
+
+
+def cumsum(ws):
+    out = []
+    total = 0
+    for w in ws:
+        total += w
+        out.append(total)
+    return out, total
+
+
+def sample_cum(rng: Rng, cum, total) -> int:
+    r = rng.below(total)
+    # binary search for first cum[i] > r
+    lo, hi = 0, len(cum) - 1
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if cum[mid] > r:
+            hi = mid
+        else:
+            lo = mid + 1
+    return lo
+
+
+def isqrt(n: int) -> int:
+    return math.isqrt(n)
+
+
+def zipf_weights(vocab: int, alpha2: int):
+    """Integer Zipf-ish weights. alpha2 is twice the exponent, so
+    alpha2=2 -> 1/k, alpha2=3 -> 1/k^1.5, alpha2=4 -> 1/k^2.
+    All-integer so Rust matches exactly."""
+    ws = []
+    for k in range(1, vocab + 1):
+        if alpha2 == 2:
+            w = 10**9 // k
+        elif alpha2 == 4:
+            w = 10**9 // (k * k)
+        else:  # alpha2 == 3
+            w = 10**9 // isqrt(k * k * k)
+        ws.append(max(w, 1))
+    return ws
+
+
+FLAVORS = {
+    # name: (vocab, alpha2, chain_mul, chain_add, base_seed)
+    "wiki2s": (512, 2, 17, 7, 0x57494B49),
+    "c4s": (800, 3, 29, 11, 0x00C40C40),
+    "ptbs": (300, 4, 13, 5, 0x00507442),
+}
+
+
+def build_vocab(flavor: str):
+    vocab, _alpha2, _cm, _ca, base_seed = FLAVORS[flavor]
+    rng = Rng(base_seed ^ 0xA5A5A5A5A5A5A5A5)
+    cum_l, tot_l = cumsum(LETTER_FREQ)
+    words = []
+    seen = set()
+    while len(words) < vocab:
+        wlen = 2 + rng.below(7)
+        w = bytes(
+            ord("a") + sample_cum(rng, cum_l, tot_l) for _ in range(wlen)
+        )
+        if w in seen:
+            continue
+        seen.add(w)
+        words.append(w)
+    return words
+
+
+def generate(flavor: str, split: str, nbytes: int) -> bytes:
+    """Generate `nbytes` of deterministic text for (flavor, split)."""
+    vocab, alpha2, cmul, cadd, base_seed = FLAVORS[flavor]
+    split_off = {"train": 0, "valid": 1, "test": 2, "calib": 3}[split]
+    words = build_vocab(flavor)
+    ws = zipf_weights(vocab, alpha2)
+    cum_w, tot_w = cumsum(ws)
+    rng = Rng((base_seed * 2654435761 + split_off) & MASK64)
+
+    out = bytearray()
+    prev = 0
+    while len(out) < nbytes:
+        slen = 4 + rng.below(9)
+        for i in range(slen):
+            if i > 0:
+                out.append(ord(" "))
+            if i > 0 and rng.below(4) == 0:
+                # deterministic bigram chain
+                idx = (prev * cmul + cadd) % vocab
+            else:
+                idx = sample_cum(rng, cum_w, tot_w)
+            out.extend(words[idx])
+            prev = idx
+            if i == slen - 2 and rng.below(5) == 0:
+                out.append(ord(","))
+        out.extend(b". ")
+    return bytes(out[:nbytes])
+
+
+def instruct_text(nbytes: int, seed: int = 0x1257) -> bytes:
+    """Task-formatted text for the *instruct* fine-tune and the gsm-s /
+    longbench-s analogues. Two patterns, mirrored by rust/src/data/tasks.rs:
+
+      arithmetic:  "3+5=8."
+      kv-recall:   "a=5;b=2;c=7;b?2."
+    """
+    rng = Rng(seed)
+    out = bytearray()
+    while len(out) < nbytes:
+        if rng.below(2) == 0:
+            a = rng.below(10)
+            b = rng.below(10)
+            s = a + b
+            if s < 10:
+                out.extend(f"{a}+{b}={s}. ".encode())
+            else:
+                out.extend(f"{a}+{b}=1{s-10}. ".encode())
+        else:
+            nkv = 2 + rng.below(11)
+            keys = []
+            vals = []
+            for _ in range(nkv):
+                k = chr(ord("a") + rng.below(26))
+                v = rng.below(10)
+                keys.append(k)
+                vals.append(v)
+                out.extend(f"{k}={v};".encode())
+            qi = rng.below(nkv)
+            # last binding of that key wins (matches rust eval)
+            v = None
+            for k2, v2 in zip(keys, vals):
+                if k2 == keys[qi]:
+                    v = v2
+            out.extend(f"{keys[qi]}?{v}. ".encode())
+    return bytes(out[:nbytes])
+
+
+if __name__ == "__main__":
+    for f in FLAVORS:
+        print(f, generate(f, "train", 120))
+    print(instruct_text(120))

@@ -1,0 +1,157 @@
+"""L2: the GANQ solver as a JAX graph (paper Algorithm 1), calling the L1
+Pallas step kernel inside a `lax.scan` over columns.
+
+AOT contract with the Rust coordinator:
+  inputs : W [m, n] f32, L [n, n] f32 (lower Cholesky factor of the
+           *preconditioned* H — Rust computes preconditioning + Cholesky
+           natively, see rust/src/tensor/), T0 [m, 2^N] f32
+  outputs: Q [m, n] i32, T [m, 2^N] f32, errs [K] f32 (per-iteration
+           layer error, for the monotonicity property test)
+
+No jnp.linalg anywhere: on CPU those lower to jaxlib LAPACK custom-calls
+that xla_extension 0.5.1 (the runtime under the Rust `xla` crate) does not
+register. The 2^N x 2^N T-step solve is an unrolled Cholesky written in
+plain jnp (K <= 16, so the unroll is tiny).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ganq_step import ganq_step
+
+
+def chol_solve_small(a, b):
+    """Batched SPD solve via unrolled Cholesky. a [m, K, K], b [m, K].
+    K is a static small constant (8 or 16). Returns x with a @ x = b."""
+    k = a.shape[-1]
+    # Cholesky (unrolled; traced once)
+    l = jnp.zeros_like(a)
+    for j in range(k):
+        s = a[:, j, j] - jnp.sum(l[:, j, :j] ** 2, axis=-1) if j else a[:, j, j]
+        djj = jnp.sqrt(jnp.maximum(s, 1e-20))
+        l = l.at[:, j, j].set(djj)
+        if j + 1 < k:
+            if j:
+                dot = jnp.einsum("mik,mk->mi", l[:, j + 1 :, :j], l[:, j, :j])
+            else:
+                dot = 0.0
+            l = l.at[:, j + 1 :, j].set((a[:, j + 1 :, j] - dot) / djj[:, None])
+    # forward substitution L y = b
+    y = jnp.zeros_like(b)
+    for j in range(k):
+        dot = jnp.einsum("mk,mk->m", l[:, j, :j], y[:, :j]) if j else 0.0
+        y = y.at[:, j].set((b[:, j] - dot) / l[:, j, j])
+    # back substitution L^T x = y
+    x = jnp.zeros_like(b)
+    for j in range(k - 1, -1, -1):
+        if j + 1 < k:
+            dot = jnp.einsum("mk,mk->m", l[:, j + 1 :, j], x[:, j + 1 :])
+        else:
+            dot = 0.0
+        x = x.at[:, j].set((y[:, j] - dot) / l[:, j, j])
+    return x
+
+
+def sstep(w, l, t, use_pallas: bool = True):
+    """Batched back-substitution S-step. w [m,n], l [n,n] lower, t [m,K].
+    Returns q [m, n] i32. Columns processed n-1 .. 0 via lax.scan
+    (reverse=True); the argmin/gather hot spot is the L1 Pallas kernel.
+
+    AOT COMPATIBILITY NOTE: per-column data (w column, L row, L diagonal
+    entry, column index) is threaded through the scan as *xs* rather than
+    indexed out of loop-invariant arrays inside the body. xla_extension
+    0.5.1 (the runtime under the Rust `xla` crate) miscompiles while-loop
+    bodies that dynamic-slice/gather loop-INVARIANT operands at a
+    *data-dependent* index (see rust/tests/bisect_probe.rs: probes v2/v3/
+    v5/v6/v7 broken, v1/v4/v8/v9 correct). Counter-driven xs consumption
+    and carry-indexed gathers execute correctly on both runtimes."""
+    m, n = w.shape
+    wcols = w.T  # [n, m]
+    ldiag = jnp.diagonal(l)  # [n]
+    js = jnp.arange(n, dtype=jnp.int32)
+
+    def body(acc, xs):
+        wj, lrow, ljj, j = xs
+        accj = jnp.take_along_axis(
+            acc, jnp.full((m, 1), j, jnp.int32), axis=1
+        )[:, 0]
+        if use_pallas:
+            idx, r = ganq_step(wj, accj, ljj[None], t)
+        else:
+            e = wj + accj / ljj
+            idx = jnp.argmin(jnp.abs(e[:, None] - t), axis=1).astype(jnp.int32)
+            r = wj - jnp.take_along_axis(t, idx[:, None], axis=1)[:, 0]
+        acc = acc + r[:, None] * lrow[None, :]
+        return acc, idx
+
+    _, idxs = jax.lax.scan(
+        body,
+        jnp.zeros((m, n), w.dtype),
+        (wcols, l, ldiag, js),
+        reverse=True,
+    )
+    # reverse=True stacks ys at forward positions: idxs[j] = column j
+    return idxs.T
+
+
+def tstep(w, h, q, t_prev, eps_rel: float = 1e-6):
+    """Closed-form codebook update (paper eq. 7), batched over rows.
+    w [m,n], h [n,n], q [m,n] i32, t_prev [m,K]."""
+    m, n = w.shape
+    k = t_prev.shape[1]
+    onehot = jax.nn.one_hot(q, k, dtype=w.dtype)  # [m, n, K]
+    g = w @ h  # [m, n]
+    num = jnp.einsum("mn,mns->ms", g, onehot)  # [m, K]
+    hs = jnp.einsum("nk,mks->mns", h, onehot)  # [m, n, K]
+    a = jnp.einsum("mns,mnt->mst", onehot, hs)  # [m, K, K]
+    counts = onehot.sum(axis=1)  # [m, K]
+    tr = jnp.einsum("mss->m", a)
+    eps = eps_rel * jnp.maximum(tr / k, 1e-12)
+    a_reg = a + eps[:, None, None] * jnp.eye(k, dtype=w.dtype)[None]
+    sol = chol_solve_small(a_reg, num)
+    return jnp.where(counts > 0, sol, t_prev)
+
+
+def layer_error(w, w_hat, h):
+    d = w - w_hat
+    return jnp.einsum("ij,jk,ik->", d, h, d)
+
+
+def ganq_solve(w, l, t0, iters: int, use_pallas: bool = True):
+    """Full GANQ: K alternating iterations + final S-step.
+    Returns (q, t, errs[K])."""
+    m, n = w.shape
+    h = l @ l.T  # preconditioned H, reconstructed from its factor
+
+    def it(carry, _):
+        t, _q = carry
+        q = sstep(w, l, t, use_pallas)
+        t = tstep(w, h, q, t)
+        w_hat = jnp.take_along_axis(t, q, axis=1)
+        err = layer_error(w, w_hat, h)
+        return (t, q), err
+
+    q0 = jnp.zeros((m, n), jnp.int32)
+    (t, _), errs = jax.lax.scan(it, (t0, q0), None, length=iters)
+    q = sstep(w, l, t, use_pallas)
+    return q, t, errs
+
+
+def build_ganq_fn(m: int, n: int, bits: int, iters: int = 10,
+                  use_pallas: bool = True):
+    """AOT entry point for a given layer shape."""
+    k = 2**bits
+
+    def f(w, l, t0):
+        return ganq_solve(w, l, t0, iters, use_pallas)
+
+    shapes = [
+        jax.ShapeDtypeStruct((m, n), jnp.float32),
+        jax.ShapeDtypeStruct((n, n), jnp.float32),
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+    ]
+    return f, shapes

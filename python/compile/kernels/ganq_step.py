@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: one back-substitution column step of the GANQ S-step
+(paper eq. 18/21/22, Algorithm 1 inner loop).
+
+For column j, all m rows in parallel (the paper's "GPU-adaptive" axis —
+rows map to TPU lanes):
+
+    e    = W[:, j] + acc[:, j] / L[j, j]
+    idx  = argmin_s |e - T[:, s]|            (codebook lookup, K = 2^N wide)
+    r    = W[:, j] - T[gather idx]
+
+The residual propagation acc += r ⊗ L[j, :] stays at L2 (it is a rank-1
+update XLA fuses well); the kernel owns the codebook-search hot spot.
+Lowered with interpret=True; see DESIGN.md §Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _step_kernel(w_ref, accj_ref, ljj_ref, t_ref, idx_ref, r_ref):
+    """w_ref/accj_ref: [bm] column slices; ljj_ref: [1] scalar diag entry;
+    t_ref: [bm, K] codebook; outputs idx [bm] i32, r [bm] f32."""
+    e = w_ref[...] + accj_ref[...] / ljj_ref[0]
+    d = jnp.abs(e[:, None] - t_ref[...])  # [bm, K]
+    idx = jnp.argmin(d, axis=1).astype(jnp.int32)
+    idx_ref[...] = idx
+    r_ref[...] = w_ref[...] - jnp.take_along_axis(
+        t_ref[...], idx[:, None], axis=1
+    )[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def ganq_step(w_col, acc_col, ljj, t, *, block_m: int = 256):
+    """One GANQ back-substitution step over all rows.
+
+    w_col [m], acc_col [m], ljj [1], t [m, K] -> (idx [m] i32, r [m] f32).
+    """
+    m = w_col.shape[0]
+    bm = min(block_m, m)
+    while m % bm:  # largest divisor of m not exceeding block_m
+        bm -= 1
+    k = t.shape[1]
+    grid = (m // bm,)
+    return pl.pallas_call(
+        _step_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((m,), jnp.int32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ),
+        interpret=True,
+    )(w_col, acc_col, ljj, t)

@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: LUT-based mixed-precision GEMM (the paper's Fig. 1(a)
+right path — dequantization-free inference).
+
+    y[p, m] = x[p, n] @ W_hat[m, n]^T,   W_hat[i, j] = T[i, Q[i, j]]
+
+GPU -> TPU adaptation (DESIGN.md §Hardware-Adaptation): the CUDA kernels the
+paper deploys (SqueezeLLM) keep the per-channel codebook in shared memory
+and gather with warps. Here the codebook tile T[mt, 2^N] sits in VMEM next
+to the activation tile; the packed index tile streams HBM->VMEM via the
+BlockSpec grid; the gather is expressed as a one-hot contraction so that the
+inner product hits the MXU (bf16-able) instead of scalar lookups:
+
+    W_hat_tile = onehot(Q_tile) @ T_tile^T      (per output-channel row)
+    y_tile    += x_tile @ W_hat_tile^T
+
+Lowered with interpret=True (CPU PJRT cannot run Mosaic custom-calls); the
+structure (block shapes, VMEM footprint) is what carries to real TPU, and
+those estimates live in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lut_gemm_kernel(x_ref, qp_ref, t_ref, o_ref, *, block_n: int, kbits: int):
+    """One (p-tile, m-tile) grid cell, looping the n dimension in-kernel.
+
+    x_ref:  [bp, n]      activation tile (full reduction dim in VMEM)
+    qp_ref: [bm, n//2]   packed nibble codes for this m-tile
+    t_ref:  [bm, K]      per-row codebook tile
+    o_ref:  [bp, bm]     output tile
+    """
+    k = 2**kbits
+    n2 = qp_ref.shape[1]
+    n = n2 * 2
+    bm = qp_ref.shape[0]
+
+    qp = qp_ref[...]
+    lo = (qp & 0xF).astype(jnp.int32)
+    hi = (qp >> 4).astype(jnp.int32)
+    idx = jnp.stack([lo, hi], axis=-1).reshape(bm, n)  # [bm, n]
+
+    # one-hot contraction so the dequant itself is an MXU-shaped matmul:
+    # W_hat[i, j] = sum_s onehot[i, j, s] * T[i, s]
+    onehot = (idx[..., None] == jnp.arange(k)[None, None, :]).astype(
+        t_ref.dtype
+    )  # [bm, n, K]
+    w_hat = jnp.einsum("ijs,is->ij", onehot, t_ref[...])  # [bm, n]
+
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_hat.T, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("kbits", "block_p", "block_m"))
+def lut_gemm(x, qp, t, *, kbits: int = 4, block_p: int = 8, block_m: int = 64):
+    """Pallas LUT-mpGEMM. x [p, n] f32, qp [m, n//2] u8, t [m, 2^kbits] f32.
+
+    Grid tiles (p, m); the reduction dim n stays resident per tile (our
+    layer widths, <= 768 floats/row, fit VMEM comfortably: an (8, 768) x
+    tile + (64, 384) u8 + (64, 16) T is ~50 KiB of the ~16 MiB VMEM).
+    """
+    p, n = x.shape
+    m = qp.shape[0]
+    bp = min(block_p, p)
+    bm = min(block_m, m)
+    assert p % bp == 0 and m % bm == 0, (p, m, bp, bm)
+    grid = (p // bp, m // bm)
+    return pl.pallas_call(
+        functools.partial(_lut_gemm_kernel, block_n=n, kbits=kbits),
+        out_shape=jax.ShapeDtypeStruct((p, m), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bp, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, n // 2), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, 2**kbits), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bp, bm), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, qp, t)
+
+
+def vmem_bytes(bp: int, bm: int, n: int, kbits: int) -> int:
+    """Static VMEM footprint estimate for one grid cell (f32 activations/out,
+    u8 codes). Used by the §Perf block-shape sweep."""
+    k = 2**kbits
+    return 4 * bp * n + bm * (n // 2) + 4 * bm * k + 4 * bp * bm
+
+
+def mxu_utilization_estimate(bp: int, bm: int, n: int) -> float:
+    """Fraction of MXU (128x128 systolic) lanes covered by the main dot for
+    a given block shape — an analytic stand-in for real-TPU profiling."""
+    return min(bp / 128.0, 1.0) * min(bm / 128.0, 1.0) * min(n / 128.0, 1.0)

@@ -1,0 +1,263 @@
+"""Pure-jnp / numpy correctness oracles for the Pallas kernels and the GANQ
+solver. Everything here is the *reference semantics*; the Pallas kernels in
+lut_gemm.py / ganq_step.py and the Rust-native implementations in
+rust/src/quant/ are validated against these (pytest + golden fixtures).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# 4-bit / 3-bit code packing (nibble container)
+# ---------------------------------------------------------------------------
+# Byte j of a packed row holds the codes of columns 2j (low nibble) and
+# 2j+1 (high nibble). 3-bit codes use the same container (values 0..7); the
+# Rust native serving path additionally supports dense 3-bit packing — the
+# HLO graphs use the nibble container for both (documented in DESIGN.md).
+
+
+def pack_nibbles(q: np.ndarray) -> np.ndarray:
+    """q: [m, n] integer codes in 0..15 -> packed uint8 [m, n//2]."""
+    m, n = q.shape
+    assert n % 2 == 0, "n must be even for nibble packing"
+    q = q.astype(np.uint8)
+    lo = q[:, 0::2]
+    hi = q[:, 1::2]
+    return (lo | (hi << 4)).astype(np.uint8)
+
+
+def unpack_nibbles_np(qp: np.ndarray, n: int) -> np.ndarray:
+    m = qp.shape[0]
+    lo = qp & 0xF
+    hi = qp >> 4
+    out = np.empty((m, n), dtype=np.int32)
+    out[:, 0::2] = lo
+    out[:, 1::2] = hi
+    return out
+
+
+def unpack_nibbles(qp, n: int):
+    """jnp version usable inside lowered graphs. qp: uint8 [m, n//2]."""
+    lo = (qp & 0xF).astype(jnp.int32)
+    hi = (qp >> 4).astype(jnp.int32)
+    return jnp.stack([lo, hi], axis=-1).reshape(qp.shape[0], n)
+
+
+def pack3(q: np.ndarray) -> np.ndarray:
+    """Dense 3-bit packing: 8 codes -> 3 bytes (row-padded to multiple of 8).
+    Only used by the Rust native LUT path; provided here for the golden
+    fixture + cross-language tests."""
+    m, n = q.shape
+    npad = (n + 7) // 8 * 8
+    qq = np.zeros((m, npad), dtype=np.uint32)
+    qq[:, :n] = q.astype(np.uint32)
+    out = np.zeros((m, npad // 8 * 3), dtype=np.uint8)
+    for g in range(npad // 8):
+        v = np.zeros(m, dtype=np.uint32)
+        for i in range(8):
+            v |= qq[:, g * 8 + i] << (3 * i)
+        out[:, 3 * g + 0] = v & 0xFF
+        out[:, 3 * g + 1] = (v >> 8) & 0xFF
+        out[:, 3 * g + 2] = (v >> 16) & 0xFF
+    return out
+
+
+def unpack3(qp: np.ndarray, n: int) -> np.ndarray:
+    m = qp.shape[0]
+    ngroups = qp.shape[1] // 3
+    out = np.zeros((m, ngroups * 8), dtype=np.int32)
+    for g in range(ngroups):
+        v = (
+            qp[:, 3 * g].astype(np.uint32)
+            | (qp[:, 3 * g + 1].astype(np.uint32) << 8)
+            | (qp[:, 3 * g + 2].astype(np.uint32) << 16)
+        )
+        for i in range(8):
+            out[:, g * 8 + i] = (v >> (3 * i)) & 0x7
+    return out[:, :n]
+
+
+# ---------------------------------------------------------------------------
+# LUT-based mpGEMM reference
+# ---------------------------------------------------------------------------
+
+
+def lut_dequant(qp, t, n: int):
+    """Reconstruct W_hat [m, n] from packed codes + per-row codebook."""
+    idx = unpack_nibbles(qp, n)
+    return jnp.take_along_axis(t, idx, axis=1)
+
+
+def lut_matmul_ref(x, qp, t):
+    """y[p, m] = x[p, n] @ W_hat[m, n]^T, W_hat via LUT gather."""
+    n = x.shape[-1]
+    w = lut_dequant(qp, t, n)
+    return x @ w.T
+
+
+def lut_matmul_np(x: np.ndarray, q: np.ndarray, t: np.ndarray) -> np.ndarray:
+    w = np.take_along_axis(t, q.astype(np.int64), axis=1)
+    return x @ w.T
+
+
+# ---------------------------------------------------------------------------
+# Uniform RTN reference (the basic baseline, eq. in §1)
+# ---------------------------------------------------------------------------
+
+
+def rtn_quantize_np(w: np.ndarray, bits: int):
+    """Per-channel (row) asymmetric uniform quantization.
+    Returns (q codes int, scale [m,1], zero [m,1])."""
+    levels = 2**bits - 1
+    wmin = w.min(axis=1, keepdims=True)
+    wmax = w.max(axis=1, keepdims=True)
+    scale = np.maximum((wmax - wmin) / levels, 1e-12)
+    zero = np.round(-wmin / scale)
+    q = np.clip(np.round(w / scale) + zero, 0, levels)
+    return q.astype(np.int32), scale, zero
+
+
+def rtn_dequant_np(q, scale, zero):
+    return (q.astype(np.float32) - zero) * scale
+
+
+def rtn_codebook_np(w: np.ndarray, bits: int):
+    """RTN expressed as a LUT: per-row uniform grid codebook + codes.
+    This is also GANQ's T^0 initialization."""
+    q, scale, zero = rtn_quantize_np(w, bits)
+    k = 2**bits
+    grid = np.arange(k, dtype=np.float32)[None, :]
+    t = (grid - zero) * scale
+    return q, t.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# GANQ reference solver (numpy, float64 internals) — Algorithm 1
+# ---------------------------------------------------------------------------
+
+
+def precondition_np(h: np.ndarray) -> np.ndarray:
+    """Adaptive diagonal-dominance preconditioning (paper eq. 23-24)."""
+    absrow = np.abs(h).sum(axis=1)
+    delta = np.maximum(absrow - 2.0 * np.diag(h), 1e-8)
+    return h + np.diag(delta)
+
+
+def ganq_sstep_np(w, l, t):
+    """Back-substitution S-step (paper eq. 22), all rows batched.
+    w: [m, n], l: [n, n] lower-triangular, t: [m, K].
+    Returns q [m, n] int32."""
+    m, n = w.shape
+    q = np.zeros((m, n), dtype=np.int32)
+    acc = np.zeros((m, n), dtype=w.dtype)  # acc[:, j] accumulates c_j
+    for j in range(n - 1, -1, -1):
+        e = w[:, j] + acc[:, j] / l[j, j]
+        d = np.abs(e[:, None] - t)  # [m, K]
+        idx = np.argmin(d, axis=1)
+        q[:, j] = idx
+        r = w[:, j] - t[np.arange(m), idx]
+        # propagate residual to remaining (earlier) columns via row j of L
+        acc += r[:, None] * l[j, :][None, :]
+    return q
+
+
+def ganq_tstep_np(w, h, q, t_prev, k: int, eps_rel: float = 1e-6):
+    """Closed-form codebook update (paper eq. 7) with regularized solve.
+    Empty buckets keep their previous codeword (robustness tweak, noted in
+    DESIGN.md)."""
+    m, n = w.shape
+    g = w @ h  # [m, n]
+    t_new = np.empty_like(t_prev)
+    for i in range(m):
+        onehot = np.zeros((n, k), dtype=w.dtype)
+        onehot[np.arange(n), q[i]] = 1.0
+        num = g[i] @ onehot  # [K]
+        a = onehot.T @ h @ onehot  # [K, K]
+        counts = onehot.sum(axis=0)
+        eps = eps_rel * max(np.trace(a) / k, 1e-12)
+        a_reg = a + eps * np.eye(k, dtype=w.dtype)
+        sol = np.linalg.solve(a_reg, num)
+        t_new[i] = np.where(counts > 0, sol, t_prev[i])
+    return t_new
+
+
+def layer_error_np(w, w_hat, h):
+    """||WX - W_hat X||_F^2 = tr((W - W_hat) H (W - W_hat)^T)."""
+    d = w - w_hat
+    return float(np.einsum("ij,jk,ik->", d, h, d))
+
+
+def ganq_reference_np(w, h, bits: int, iters: int = 10):
+    """Full GANQ reference: precondition -> cholesky -> K alternating
+    iterations. Returns (q, t, per-iteration layer errors)."""
+    w = np.asarray(w, dtype=np.float64)
+    h = np.asarray(h, dtype=np.float64)
+    k = 2**bits
+    hp = precondition_np(h)
+    l = np.linalg.cholesky(hp)
+    _, t = rtn_codebook_np(w.astype(np.float32), bits)
+    t = t.astype(np.float64)
+    m = w.shape[0]
+    errs = []
+    q = None
+    for _ in range(iters):
+        q = ganq_sstep_np(w, l, t)
+        t = ganq_tstep_np(w, hp, q, t, k)
+        w_hat = t[np.arange(m)[:, None], q]
+        errs.append(layer_error_np(w, w_hat, hp))
+    # final S-step so Q is consistent with the last T
+    q = ganq_sstep_np(w, l, t)
+    return q, t, errs
+
+
+def miqp_bruteforce_np(w, h, bits: int):
+    """Exact solution of model (2) by enumeration over S for tiny instances
+    (test-only). For each assignment Q the optimal T is the closed form, so
+    we enumerate codes jointly. Feasible only for m<=2, n<=6, bits<=2."""
+    import itertools
+
+    m, n = w.shape
+    k = 2**bits
+    hp = precondition_np(np.asarray(h, dtype=np.float64))
+    w = np.asarray(w, dtype=np.float64)
+    best = []
+    for i in range(m):
+        best_row = None
+        for codes in itertools.product(range(k), repeat=n):
+            q = np.array(codes)
+            onehot = np.zeros((n, k))
+            onehot[np.arange(n), q] = 1.0
+            a = onehot.T @ hp @ onehot + 1e-9 * np.eye(k)
+            num = (w[i] @ hp) @ onehot
+            t = np.linalg.solve(a, num)
+            w_hat = t[q]
+            d = w[i] - w_hat
+            err = float(d @ hp @ d)
+            if best_row is None or err < best_row[0]:
+                best_row = (err, q.copy(), t.copy())
+        best.append(best_row)
+    total_err = sum(b[0] for b in best)
+    return total_err, best
+
+
+# ---------------------------------------------------------------------------
+# Outlier extraction reference (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+
+def outlier_split_np(w: np.ndarray, ratio: float):
+    """Row-wise symmetric-percentile outlier split -> (sparse, dense)."""
+    m, n = w.shape
+    p = 1.0 - 0.5 * ratio
+    upper = min(int(np.floor(n * p)), n - 1)
+    lower = int(np.ceil(n * (1.0 - p)))
+    ws = np.sort(w, axis=1)
+    c_up = ws[:, upper][:, None]
+    c_lo = ws[:, lower][:, None]
+    mask = (w >= c_up) | (w <= c_lo)
+    sparse = np.where(mask, w, 0.0)
+    dense = w - sparse
+    return sparse, dense

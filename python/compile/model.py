@@ -1,0 +1,319 @@
+"""L2: OPT-style decoder-only transformer in JAX — FP32 and LUT-quantized
+variants, prefill/decode graphs with explicit KV cache, and the NLL graph
+used for perplexity evaluation.
+
+All graphs take weights as *arguments* (never baked constants) so one
+compiled artifact serves every quantization method: the Rust pipeline feeds
+either original or reconstructed weights into `nll_fp32_*`, and packed
+(Q, T) pairs into the `*_lut*` serving graphs.
+
+Parameter ordering is canonical (`param_spec`); the AOT manifest records
+the exact argument list per graph so the Rust runtime can marshal literals
+without guessing.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels.ref import lut_matmul_ref
+from .kernels.lut_gemm import lut_gemm
+
+# model family — the OPT-125M..6.7B / LLaMA-7B stand-ins (DESIGN.md
+# substitution table). byte-level vocab.
+CONFIGS = {
+    "opt-micro": dict(d=64, layers=2, heads=2, ff=256, ctx=128, vocab=256),
+    "opt-mini": dict(d=96, layers=3, heads=4, ff=384, ctx=128, vocab=256),
+    "opt-small": dict(d=128, layers=4, heads=4, ff=512, ctx=128, vocab=256),
+    "opt-med": dict(d=192, layers=6, heads=6, ff=768, ctx=128, vocab=256),
+}
+# instruct variants share the base architecture (fine-tuned on task text)
+INSTRUCT_VARIANTS = {
+    "opt-mini-instruct": "opt-mini",
+    "opt-small-instruct": "opt-small",
+}
+
+
+def config_for(model: str) -> dict:
+    if model in CONFIGS:
+        return CONFIGS[model]
+    return CONFIGS[INSTRUCT_VARIANTS[model]]
+
+
+# the six quantizable linears per decoder layer (the paper quantizes decoder
+# weights; embeddings / layernorms / biases stay FP)
+QUANT_LINEARS = ["wq", "wk", "wv", "wo", "w1", "w2"]
+
+
+def linear_shapes(cfg) -> list:
+    """[(name, m, n)] for every quantizable linear, in canonical order."""
+    d, ff = cfg["d"], cfg["ff"]
+    out = []
+    for li in range(cfg["layers"]):
+        for nm in ["wq", "wk", "wv", "wo"]:
+            out.append((f"l{li}.{nm}", d, d))
+        out.append((f"l{li}.w1", ff, d))
+        out.append((f"l{li}.w2", d, ff))
+    return out
+
+
+def param_spec(cfg) -> list:
+    """Canonical ordered [(name, shape)] of all FP32 parameters."""
+    d, ff, v, ctx = cfg["d"], cfg["ff"], cfg["vocab"], cfg["ctx"]
+    spec = [("tok_emb", (v, d)), ("pos_emb", (ctx, d))]
+    for li in range(cfg["layers"]):
+        p = f"l{li}."
+        spec += [
+            (p + "ln1_g", (d,)),
+            (p + "ln1_b", (d,)),
+            (p + "wq", (d, d)),
+            (p + "bq", (d,)),
+            (p + "wk", (d, d)),
+            (p + "bk", (d,)),
+            (p + "wv", (d, d)),
+            (p + "bv", (d,)),
+            (p + "wo", (d, d)),
+            (p + "bo", (d,)),
+            (p + "ln2_g", (d,)),
+            (p + "ln2_b", (d,)),
+            (p + "w1", (ff, d)),
+            (p + "b1", (ff,)),
+            (p + "w2", (d, ff)),
+            (p + "b2", (d,)),
+        ]
+    spec += [("ln_f_g", (d,)), ("ln_f_b", (d,))]
+    return spec
+
+
+def lut_param_spec(cfg, bits: int) -> list:
+    """Param spec for the LUT serving graphs: every quantizable linear W is
+    replaced by (W.qp uint8 [m, n//2], W.t f32 [m, 2^bits])."""
+    k = 2**bits
+    qnames = {nm for nm, _m, _n in linear_shapes(cfg)}
+    spec = []
+    for name, shape in param_spec(cfg):
+        if name in qnames:
+            m, n = shape
+            spec.append((name + ".qp", (m, n // 2)))
+            spec.append((name + ".t", (m, k)))
+        else:
+            spec.append((name, shape))
+    return spec
+
+
+def init_params(seed: int, cfg) -> dict:
+    rng = np.random.RandomState(seed)
+    params = {}
+    for name, shape in param_spec(cfg):
+        base = name.split(".")[-1]
+        if base.endswith("_g"):
+            params[name] = np.ones(shape, np.float32)
+        elif base.endswith("_b") or base.startswith("b"):
+            params[name] = np.zeros(shape, np.float32)
+        elif base in ("wo", "w2"):
+            # residual-branch projections scaled down (GPT-2 style)
+            std = 0.08 / np.sqrt(2.0 * cfg["layers"])
+            params[name] = rng.normal(0, std, shape).astype(np.float32)
+        else:
+            params[name] = rng.normal(0, 0.08, shape).astype(np.float32)
+    return params
+
+
+def params_to_list(params: dict, spec) -> list:
+    return [params[name] for name, _ in spec]
+
+
+def list_to_params(vals, spec) -> dict:
+    return {name: v for (name, _), v in zip(spec, vals)}
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def gelu(x):
+    # tanh approximation — avoids any erf custom-call question entirely
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608 * (x + 0.044715 * x**3)))
+
+
+def make_linear(params, name, mode):
+    """Returns f(x2d [p, n]) -> [p, m] for the named quantizable linear.
+    mode: 'fp32' (plain W), 'lut' (jnp gather path), 'pallas' (L1 kernel)."""
+    if mode == "fp32":
+        w = params[name]
+        return lambda x: x @ w.T
+    qp, t = params[name + ".qp"], params[name + ".t"]
+    if mode == "lut":
+        return lambda x: lut_matmul_ref(x, qp, t)
+    kbits = int(np.log2(t.shape[1]))
+
+    def f(x):
+        p = x.shape[0]
+        bp = 8 if p % 8 == 0 else (p if p < 8 else 1)
+        m = qp.shape[0]
+        bm = 64 if m % 64 == 0 else m
+        return lut_gemm(x, qp, t, kbits=kbits, block_p=bp, block_m=bm)
+
+    return f
+
+
+def block_fwd(params, li, x, cfg, mode, mask, kv=None):
+    """One decoder block. x: [B, S, d].
+
+    If kv is given as (kc, vc, pos) (caches [B, h, ctx, hd], pos [B]) this is
+    a decode step (S == 1): new K/V are scattered at per-slot positions via a
+    one-hot blend and attention runs over the cache. Otherwise: causal
+    self-attention over x; returns (x, k, v) so prefill can seed the cache.
+    """
+    d, h = cfg["d"], cfg["heads"]
+    hd = d // h
+    p = f"l{li}."
+    B, S, _ = x.shape
+
+    def lin(name, y2d):
+        f = make_linear(params, p + name, mode)
+        return f(y2d) + params[p + "b" + name[1:]]
+
+    a = layer_norm(x, params[p + "ln1_g"], params[p + "ln1_b"])
+    a2 = a.reshape(B * S, d)
+    q = lin("wq", a2).reshape(B, S, h, hd).transpose(0, 2, 1, 3)
+    k = lin("wk", a2).reshape(B, S, h, hd).transpose(0, 2, 1, 3)
+    v = lin("wv", a2).reshape(B, S, h, hd).transpose(0, 2, 1, 3)
+
+    if kv is None:
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(hd)
+        scores = jnp.where(mask, scores, -1e9)
+        att = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        kc_out, vc_out = k, v
+    else:
+        kc, vc, posv = kv
+        ctx = kc.shape[2]
+        oh = jax.nn.one_hot(posv, ctx, dtype=x.dtype)  # [B, ctx]
+        ohb = oh[:, None, :, None]  # [B, 1, ctx, 1]
+        kc_out = kc * (1.0 - ohb) + ohb * k  # k: [B, h, 1, hd] broadcast
+        vc_out = vc * (1.0 - ohb) + ohb * v
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, kc_out) / np.sqrt(hd)
+        valid = (
+            jnp.arange(ctx)[None, None, None, :] <= posv[:, None, None, None]
+        )
+        scores = jnp.where(valid, scores, -1e9)
+        att = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", att, vc_out)
+
+    o = o.transpose(0, 2, 1, 3).reshape(B * S, d)
+    x = x + lin("wo", o).reshape(B, S, d)
+
+    mlp_in = layer_norm(x, params[p + "ln2_g"], params[p + "ln2_b"])
+    hmid = gelu(lin("w1", mlp_in.reshape(B * S, d)))
+    x = x + lin("w2", hmid).reshape(B, S, d)
+    return x, kc_out, vc_out
+
+
+def fwd(params, tokens, cfg, mode="fp32"):
+    """Full causal forward. tokens [B, S] i32 -> logits [B, S, V]."""
+    B, S = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :S]
+    mask = jnp.tril(jnp.ones((S, S), bool))[None, None]
+    kcs, vcs = [], []
+    for li in range(cfg["layers"]):
+        x, kc, vc = block_fwd(params, li, x, cfg, mode, mask)
+        kcs.append(kc)
+        vcs.append(vc)
+    x = layer_norm(x, params["ln_f_g"], params["ln_f_b"])
+    logits = x @ params["tok_emb"].T  # tied head
+    return logits, kcs, vcs
+
+
+def nll_sum(params, tokens, cfg, mode="fp32"):
+    """Sum of next-token negative log-likelihoods (f32 scalar). The Rust
+    side aggregates sums/counts across batches to report perplexity."""
+    logits, _, _ = fwd(params, tokens, cfg, mode)
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll)
+
+
+def prefill(params, tokens, cfg, mode="fp32"):
+    """tokens [B, S] -> (last-position logits [B, V], kcache, vcache) with
+    caches shaped [L, B, h, ctx, hd], filled at positions 0..S-1."""
+    B, S = tokens.shape
+    d, h, ctx = cfg["d"], cfg["heads"], cfg["ctx"]
+    hd = d // h
+    logits, kcs, vcs = fwd(params, tokens, cfg, mode)
+    kcache = jnp.zeros((cfg["layers"], B, h, ctx, hd), jnp.float32)
+    vcache = jnp.zeros_like(kcache)
+    for li in range(cfg["layers"]):
+        kcache = kcache.at[li, :, :, :S].set(kcs[li])
+        vcache = vcache.at[li, :, :, :S].set(vcs[li])
+    return logits[:, -1], kcache, vcache
+
+
+def decode_step(params, tok, pos, kcache, vcache, cfg, mode="fp32"):
+    """One generation step with per-slot positions (continuous batching).
+
+    tok [B] i32, pos [B] i32, caches [L, B, h, ctx, hd]
+    -> (logits [B, V], kcache', vcache')."""
+    kcache = jnp.asarray(kcache)
+    vcache = jnp.asarray(vcache)
+    x = params["tok_emb"][tok][:, None, :] + params["pos_emb"][pos][:, None, :]
+    kc_new = kcache
+    vc_new = vcache
+    for li in range(cfg["layers"]):
+        x, kc, vc = block_fwd(
+            params, li, x, cfg, mode, None, kv=(kcache[li], vcache[li], pos)
+        )
+        kc_new = kc_new.at[li].set(kc)
+        vc_new = vc_new.at[li].set(vc)
+    x = layer_norm(x, params["ln_f_g"], params["ln_f_b"])
+    logits = (x @ params["tok_emb"].T)[:, 0]
+    return logits, kc_new, vc_new
+
+
+# ---------------------------------------------------------------------------
+# graph builders (arg-list entry points for AOT lowering)
+# ---------------------------------------------------------------------------
+
+
+def spec_for(cfg, mode: str, bits: int = 4):
+    return param_spec(cfg) if mode == "fp32" else lut_param_spec(cfg, bits)
+
+
+def build_nll_fn(cfg, mode="fp32", bits=4):
+    spec = spec_for(cfg, mode, bits)
+
+    def f(tokens, *weights):
+        params = list_to_params(weights, spec)
+        return (nll_sum(params, tokens, cfg, mode),)
+
+    return f, spec
+
+
+def build_prefill_fn(cfg, mode="fp32", bits=4):
+    spec = spec_for(cfg, mode, bits)
+
+    def f(tokens, *weights):
+        params = list_to_params(weights, spec)
+        return prefill(params, tokens, cfg, mode)
+
+    return f, spec
+
+
+def build_decode_fn(cfg, mode="fp32", bits=4):
+    spec = spec_for(cfg, mode, bits)
+
+    def f(tok, pos, kcache, vcache, *weights):
+        params = list_to_params(weights, spec)
+        return decode_step(params, tok, pos, kcache, vcache, cfg, mode)
+
+    return f, spec

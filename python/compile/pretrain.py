@@ -1,0 +1,190 @@
+"""Build-time pretraining of the model family on the synthetic corpus.
+
+Repro band is 0: no OPT/LLaMA checkpoints exist in this environment, so the
+"small real models" the pipeline quantizes are trained here, from scratch,
+on the wiki2s synthetic corpus (DESIGN.md substitution table). Instruct
+variants are fine-tuned from their base on a corpus/task-text mixture so the
+gsm-s / longbench-s analogues (Table 4) measure something real.
+
+Runs once under `make artifacts`; weights land in artifacts/weights/<model>/
+as raw little-endian f32 (`weights.bin`) plus a JSON tensor index. The loss
+curve is logged to train_log.json and summarized in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import corpus, model
+
+TRAIN_STEPS = {
+    "opt-micro": 500,
+    "opt-mini": 600,
+    "opt-small": 700,
+    "opt-med": 700,
+}
+BATCH = {"opt-micro": 32, "opt-mini": 32, "opt-small": 24, "opt-med": 16}
+INSTRUCT_STEPS = 900
+SEQ = 128
+CORPUS_BYTES = 1_500_000
+
+
+def adam_update(params, grads, mstate, vstate, step, lr, b1=0.9, b2=0.99,
+                eps=1e-8, wd=0.01):
+    def upd(p, g, mm, vv):
+        mm = b1 * mm + (1 - b1) * g
+        vv = b2 * vv + (1 - b2) * g * g
+        mhat = mm / (1 - b1**step)
+        vhat = vv / (1 - b2**step)
+        return p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p), mm, vv
+
+    out = jax.tree_util.tree_map(upd, params, grads, mstate, vstate)
+    new_p = jax.tree_util.tree_map(lambda t: t[0], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, new_m, new_v
+
+
+def batches(data: np.ndarray, bs: int, seq: int, rng: np.random.RandomState):
+    n = len(data) - seq - 1
+    while True:
+        idx = rng.randint(0, n, bs)
+        yield np.stack([data[i : i + seq] for i in idx]).astype(np.int32)
+
+
+def train_model(name: str, out_dir: str, base_weights: dict | None = None,
+                log=print) -> dict:
+    cfg = model.config_for(name)
+    is_instruct = name in model.INSTRUCT_VARIANTS
+    steps = INSTRUCT_STEPS if is_instruct else TRAIN_STEPS[name]
+    bs = BATCH[model.INSTRUCT_VARIANTS.get(name, name)]
+
+    text = corpus.generate("wiki2s", "train", CORPUS_BYTES)
+    data = np.frombuffer(text, dtype=np.uint8)
+    if is_instruct:
+        itext = corpus.instruct_text(CORPUS_BYTES // 2)
+        idata = np.frombuffer(itext, dtype=np.uint8)
+
+    if base_weights is not None:
+        params = {k: jnp.array(v) for k, v in base_weights.items()}
+    else:
+        params = {k: jnp.array(v) for k, v in model.init_params(7, cfg).items()}
+
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    mstate, vstate = zeros, jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def loss_fn(p, toks):
+        return model.nll_sum(p, toks, cfg) / (toks.shape[0] * (SEQ - 1))
+
+    @jax.jit
+    def step_fn(p, m, v, toks, stepno, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(p, toks)
+        p, m, v = adam_update(p, grads, m, v, stepno, lr)
+        return p, m, v, loss
+
+    rng = np.random.RandomState(0xBEEF)
+    gen = batches(data, bs, SEQ, rng)
+    if is_instruct:
+        igen = batches(idata, bs, SEQ, rng)
+
+    base_lr = 3e-3 if not is_instruct else 2e-3
+    warmup = 20
+    hist = []
+    t0 = time.time()
+    for s in range(1, steps + 1):
+        lr = base_lr * min(1.0, s / warmup)
+        lr = lr * 0.5 * (1 + np.cos(np.pi * s / steps))
+        # instruct fine-tune: 3/4 task-format batches, 1/4 corpus replay
+        toks = next(igen) if (is_instruct and s % 4 != 0) else next(gen)
+        params, mstate, vstate, loss = step_fn(
+            params, mstate, vstate, toks, s, lr
+        )
+        if s % 25 == 0 or s == 1:
+            hist.append({"step": s, "loss": float(loss)})
+            log(f"  [{name}] step {s}/{steps} loss {float(loss):.4f}")
+
+    # held-out perplexity
+    vtext = corpus.generate("wiki2s", "valid", 200_000)
+    vdata = np.frombuffer(vtext, dtype=np.uint8)
+    vgen = batches(vdata, bs, SEQ, np.random.RandomState(1))
+    tot, cnt = 0.0, 0
+    nll_j = jax.jit(lambda p, t: model.nll_sum(p, t, cfg))
+    for _ in range(8):
+        toks = next(vgen)
+        tot += float(nll_j(params, toks))
+        cnt += toks.shape[0] * (SEQ - 1)
+    ppl = float(np.exp(tot / cnt))
+    log(f"  [{name}] valid ppl {ppl:.3f}  ({time.time()-t0:.0f}s)")
+
+    params_np = {k: np.asarray(v, np.float32) for k, v in params.items()}
+    save_weights(name, cfg, params_np, out_dir, hist, ppl)
+    return params_np
+
+
+def save_weights(name, cfg, params_np, out_dir, hist, ppl):
+    mdir = os.path.join(out_dir, "weights", name)
+    os.makedirs(mdir, exist_ok=True)
+    spec = model.param_spec(cfg)
+    tensors = []
+    offset = 0
+    with open(os.path.join(mdir, "weights.bin"), "wb") as f:
+        for pname, shape in spec:
+            arr = params_np[pname].astype("<f4")
+            f.write(arr.tobytes())
+            tensors.append(
+                {
+                    "name": pname,
+                    "shape": list(shape),
+                    "offset": offset,
+                    "numel": int(arr.size),
+                }
+            )
+            offset += arr.size * 4
+    with open(os.path.join(mdir, "weights.json"), "w") as f:
+        json.dump({"model": name, "tensors": tensors}, f)
+    with open(os.path.join(mdir, "train_log.json"), "w") as f:
+        json.dump({"loss_curve": hist, "valid_ppl": ppl}, f)
+
+
+def load_weights(name: str, out_dir: str) -> dict | None:
+    mdir = os.path.join(out_dir, "weights", name)
+    jpath = os.path.join(mdir, "weights.json")
+    bpath = os.path.join(mdir, "weights.bin")
+    if not (os.path.exists(jpath) and os.path.exists(bpath)):
+        return None
+    with open(jpath) as f:
+        index = json.load(f)
+    raw = np.fromfile(bpath, dtype="<f4")
+    params = {}
+    for t in index["tensors"]:
+        off = t["offset"] // 4
+        params[t["name"]] = raw[off : off + t["numel"]].reshape(t["shape"])
+    return params
+
+
+def ensure_all(out_dir: str, log=print) -> dict:
+    """Train any missing model; returns {name: params}."""
+    all_params = {}
+    for name in model.CONFIGS:
+        p = load_weights(name, out_dir)
+        if p is None:
+            log(f"training {name} ...")
+            p = train_model(name, out_dir, log=log)
+        all_params[name] = p
+    for name, base in model.INSTRUCT_VARIANTS.items():
+        p = load_weights(name, out_dir)
+        if p is None:
+            log(f"fine-tuning {name} from {base} ...")
+            p = train_model(name, out_dir, base_weights=all_params[base],
+                            log=log)
+        all_params[name] = p
+    return all_params

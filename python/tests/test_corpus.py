@@ -1,0 +1,78 @@
+"""Synthetic corpus generator invariants (the Rust port is additionally
+pinned to these bytes via artifacts/golden/corpus.json)."""
+
+import numpy as np
+
+from compile import corpus
+
+
+def test_deterministic():
+    a = corpus.generate("wiki2s", "train", 1000)
+    b = corpus.generate("wiki2s", "train", 1000)
+    assert a == b
+
+
+def test_prefix_stable():
+    a = corpus.generate("c4s", "train", 400)
+    b = corpus.generate("c4s", "train", 800)
+    assert b[:400] == a
+
+
+def test_splits_differ():
+    assert corpus.generate("wiki2s", "train", 500) != corpus.generate(
+        "wiki2s", "valid", 500
+    )
+
+
+def test_flavors_differ():
+    outs = {f: corpus.generate(f, "train", 500) for f in corpus.FLAVORS}
+    vals = list(outs.values())
+    assert len({v for v in vals}) == 3
+
+
+def test_ascii_printable():
+    text = corpus.generate("ptbs", "train", 2000)
+    allowed = set(b"abcdefghijklmnopqrstuvwxyz ,.")
+    assert set(text) <= allowed
+
+
+def test_zipfian_head_heavy():
+    """The most frequent word should dominate — that's the non-uniformity
+    the language model learns."""
+    text = corpus.generate("wiki2s", "train", 60_000).decode()
+    words = text.replace(",", "").replace(".", "").split()
+    from collections import Counter
+
+    c = Counter(words)
+    top = c.most_common(10)
+    assert top[0][1] > 5 * top[9][1] / 2  # clearly decaying
+
+
+def test_bigram_structure_present():
+    """The deterministic chain must make some bigram far more likely than
+    independence predicts; a trained LM exploits exactly this."""
+    text = corpus.generate("wiki2s", "train", 120_000).decode()
+    words = text.replace(",", "").replace(".", "").split()
+    from collections import Counter
+
+    uni = Counter(words)
+    bi = Counter(zip(words, words[1:]))
+    (w1, w2), cnt = bi.most_common(1)[0]
+    n = len(words)
+    p_joint = cnt / n
+    p_ind = (uni[w1] / n) * (uni[w2] / n)
+    assert p_joint > 3 * p_ind
+
+
+def test_instruct_text_wellformed():
+    text = corpus.instruct_text(5000).decode()
+    assert "=" in text and "?" in text
+    # every arithmetic statement is actually correct
+    for frag in text.split(". "):
+        if "+" in frag and "=" in frag and ";" not in frag:
+            try:
+                lhs, rhs = frag.split("=")
+                a, b = lhs.split("+")
+                assert int(a) + int(b) == int(rhs)
+            except ValueError:
+                pass  # clipped fragment at the end

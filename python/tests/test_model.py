@@ -1,0 +1,148 @@
+"""L2 model graph checks: shapes, decode/prefill/fwd consistency, LUT mode
+equivalence with dequantized FP32, and graph-builder arg plumbing."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def micro():
+    cfg = model.CONFIGS["opt-micro"]
+    params = model.init_params(0, cfg)
+    return cfg, params
+
+
+def quantize_params(params, cfg, bits):
+    """RTN-as-LUT quantization of every quantizable linear -> lut params."""
+    out = dict(params)
+    for name, m, n in model.linear_shapes(cfg):
+        q, t = ref.rtn_codebook_np(params[name], bits)
+        out[name + ".qp"] = ref.pack_nibbles(q)
+        out[name + ".t"] = t
+        del out[name]
+    return out
+
+
+def test_fwd_shapes(micro):
+    cfg, params = micro
+    toks = np.zeros((2, 10), np.int32)
+    logits, kcs, vcs = model.fwd(params, toks, cfg)
+    assert logits.shape == (2, 10, cfg["vocab"])
+    assert len(kcs) == cfg["layers"]
+    assert kcs[0].shape == (2, cfg["heads"], 10, cfg["d"] // cfg["heads"])
+
+
+def test_decode_matches_fwd(micro):
+    cfg, params = micro
+    rng = np.random.RandomState(0)
+    toks = rng.randint(0, 256, (2, 12)).astype(np.int32)
+    lg, kc, vc = model.prefill(params, toks, cfg)
+    logits_full, _, _ = model.fwd(params, toks, cfg)
+    np.testing.assert_allclose(
+        np.array(lg), np.array(logits_full[:, -1]), atol=1e-5
+    )
+    nxt = np.argmax(np.array(lg), -1).astype(np.int32)
+    pos = np.array([12, 12], np.int32)
+    lg2, _, _ = model.decode_step(params, nxt, pos, kc, vc, cfg)
+    toks13 = np.concatenate([toks, nxt[:, None]], 1).astype(np.int32)
+    logits13, _, _ = model.fwd(params, toks13, cfg)
+    np.testing.assert_allclose(
+        np.array(lg2), np.array(logits13[:, -1]), atol=1e-4
+    )
+
+
+def test_decode_per_slot_positions(micro):
+    """Slots at different positions must behave like independent sequences."""
+    cfg, params = micro
+    rng = np.random.RandomState(1)
+    t_a = rng.randint(0, 256, (1, 8)).astype(np.int32)
+    t_b = rng.randint(0, 256, (1, 5)).astype(np.int32)
+    _, kc_a, vc_a = model.prefill(params, t_a, cfg)
+    _, kc_b, vc_b = model.prefill(params, t_b, cfg)
+    # batched caches
+    kc = np.concatenate([np.array(kc_a), np.array(kc_b)], axis=1)
+    vc = np.concatenate([np.array(vc_a), np.array(vc_b)], axis=1)
+    tok = np.array([65, 66], np.int32)
+    pos = np.array([8, 5], np.int32)
+    lg, _, _ = model.decode_step(params, tok, pos, kc, vc, cfg)
+    # singletons
+    lg_a, _, _ = model.decode_step(
+        params, tok[:1], pos[:1], np.array(kc_a), np.array(vc_a), cfg
+    )
+    lg_b, _, _ = model.decode_step(
+        params, tok[1:], pos[1:], np.array(kc_b), np.array(vc_b), cfg
+    )
+    np.testing.assert_allclose(np.array(lg[0]), np.array(lg_a[0]), atol=1e-4)
+    np.testing.assert_allclose(np.array(lg[1]), np.array(lg_b[0]), atol=1e-4)
+
+
+@pytest.mark.parametrize("bits", [4, 3])
+def test_lut_mode_equals_dequantized_fp32(micro, bits):
+    """Running the LUT graph on (Q,T) must equal the FP32 graph on the
+    reconstructed W-hat — the serving path computes exactly W_hat X."""
+    cfg, params = micro
+    qparams = quantize_params(params, cfg, bits)
+    deq = dict(params)
+    for name, m, n in model.linear_shapes(cfg):
+        idx = ref.unpack_nibbles_np(qparams[name + ".qp"], n)
+        deq[name] = np.take_along_axis(qparams[name + ".t"], idx, axis=1)
+    toks = np.random.RandomState(2).randint(0, 256, (1, 9)).astype(np.int32)
+    lg_lut, _, _ = model.fwd(qparams, toks, cfg, mode="lut")
+    lg_fp, _, _ = model.fwd(deq, toks, cfg, mode="fp32")
+    np.testing.assert_allclose(
+        np.array(lg_lut), np.array(lg_fp), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_pallas_mode_equals_lut_mode(micro):
+    cfg, params = micro
+    qparams = quantize_params(params, cfg, 4)
+    tok = np.array([65], np.int32)
+    pos = np.array([0], np.int32)
+    L, h = cfg["layers"], cfg["heads"]
+    hd = cfg["d"] // h
+    kc = np.zeros((L, 1, h, cfg["ctx"], hd), np.float32)
+    vc = np.zeros_like(kc)
+    lg1, _, _ = model.decode_step(qparams, tok, pos, kc, vc, cfg, mode="lut")
+    lg2, _, _ = model.decode_step(
+        qparams, tok, pos, kc, vc, cfg, mode="pallas"
+    )
+    np.testing.assert_allclose(np.array(lg1), np.array(lg2), atol=1e-4)
+
+
+def test_nll_matches_manual(micro):
+    cfg, params = micro
+    toks = np.random.RandomState(3).randint(0, 256, (2, 7)).astype(np.int32)
+    s = float(model.nll_sum(params, toks, cfg))
+    logits, _, _ = model.fwd(params, toks, cfg)
+    lp = np.array(logits[:, :-1])
+    lp = lp - lp.max(-1, keepdims=True)
+    lp = lp - np.log(np.exp(lp).sum(-1, keepdims=True))
+    manual = -sum(
+        lp[b, i, toks[b, i + 1]] for b in range(2) for i in range(6)
+    )
+    assert abs(s - manual) < 1e-3
+
+
+def test_param_specs_consistent(micro):
+    cfg, _ = micro
+    spec = model.param_spec(cfg)
+    names = [n for n, _ in spec]
+    assert len(names) == len(set(names))
+    lspec = model.lut_param_spec(cfg, 4)
+    lnames = [n for n, _ in lspec]
+    for name, m, n in model.linear_shapes(cfg):
+        assert name in names and name not in lnames
+        assert name + ".qp" in lnames and name + ".t" in lnames
+
+
+def test_graph_builders_run(micro):
+    cfg, params = micro
+    fn, spec = model.build_nll_fn(cfg, "fp32")
+    toks = np.zeros((8, 128), np.int32)
+    (out,) = fn(toks, *model.params_to_list(params, spec))
+    assert np.isfinite(float(out))

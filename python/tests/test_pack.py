@@ -1,0 +1,51 @@
+"""Code-packing roundtrips (nibble container + dense 3-bit), hypothesis."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 20),
+    n2=st.integers(1, 40),
+    bits=st.sampled_from([3, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_nibble_roundtrip(m, n2, bits, seed):
+    n = 2 * n2
+    q = np.random.RandomState(seed).randint(0, 2**bits, (m, n))
+    qp = ref.pack_nibbles(q)
+    assert qp.shape == (m, n // 2)
+    back = ref.unpack_nibbles_np(qp, n)
+    assert (back == q).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(1, 10), n=st.integers(1, 50), seed=st.integers(0, 2**31 - 1))
+def test_pack3_roundtrip(m, n, seed):
+    q = np.random.RandomState(seed).randint(0, 8, (m, n))
+    qp = ref.pack3(q)
+    assert qp.shape[1] == (n + 7) // 8 * 3
+    back = ref.unpack3(qp, n)
+    assert (back == q).all()
+
+
+def test_nibble_matches_jnp_unpack():
+    import jax.numpy as jnp
+
+    q = np.random.RandomState(0).randint(0, 16, (6, 12))
+    qp = ref.pack_nibbles(q)
+    out = np.array(ref.unpack_nibbles(jnp.array(qp), 12))
+    assert (out == q).all()
+
+
+def test_storage_ratio_table1():
+    """Paper Table 1: LUT-based 4-bit storage vs FP16, per-channel.
+    theory: (0.5*m*n + 32*m) / (2*m*n)."""
+    for mn in (2048, 4096, 8192):
+        lut = 0.5 * mn * mn + 32 * mn
+        full = 2.0 * mn * mn
+        ratio = lut / full
+        assert 0.25 < ratio < 0.26

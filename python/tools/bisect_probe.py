@@ -1,0 +1,123 @@
+import sys, os, json, glob
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+import jax, jax.numpy as jnp, numpy as np
+from jax._src.lib import xla_client as xc
+
+for f in glob.glob('/tmp/bisect_*'):
+    os.remove(f)
+
+n, m = 16, 8
+rng = np.random.RandomState(0)
+W = rng.randn(m, n).astype(np.float32)
+L = np.tril(rng.randn(n, n).astype(np.float32)) + 3*np.eye(n, dtype=np.float32)
+T = rng.randn(m, 16).astype(np.float32)
+
+def scan_over(body, outshape):
+    def f(w, l, t):
+        js = jnp.arange(n - 1, -1, -1)
+        acc, ys = jax.lax.scan(lambda a, j: body(w, l, t, a, j), jnp.zeros((m, n), jnp.float32), js)
+        # keep all params live so jit doesn't prune unused args
+        ys = ys + 0.0 * (w[0, 0] + l[0, 0] + t[0, 0])
+        return (acc, ys)
+    return f
+
+# v1: xs consumption only (carry += j broadcast)
+def v1(w, l, t, acc, j):
+    acc = acc + j.astype(jnp.float32)
+    return acc, jnp.float32(0)
+
+# v2: dynamic_slice row of l by j
+def v2(w, l, t, acc, j):
+    lrow = jax.lax.dynamic_slice(l, (j, 0), (1, n))[0]
+    acc = acc + lrow[None, :]
+    return acc, lrow[0]
+
+# v3: gather w[:, j]
+def v3(w, l, t, acc, j):
+    wj = w[:, j]
+    acc = acc + wj[:, None]
+    return acc, wj[0]
+
+# v4: gather from CARRY acc[:, j]
+def v4(w, l, t, acc, j):
+    aj = acc[:, j]
+    acc = acc + 1.0 + aj[:, None] * 0.01
+    return acc, aj[0]
+
+# v5: argmin over codebook
+def v5(w, l, t, acc, j):
+    e = w[:, j]
+    idx = jnp.argmin(jnp.abs(e[:, None] - t), axis=1).astype(jnp.int32)
+    acc = acc + idx.astype(jnp.float32)[:, None] * 0.1
+    return acc, idx[0]
+
+# v6: take_along_axis per-row gather
+def v6(w, l, t, acc, j):
+    e = w[:, j]
+    idx = jnp.argmin(jnp.abs(e[:, None] - t), axis=1).astype(jnp.int32)
+    tv = jnp.take_along_axis(t, idx[:, None], axis=1)[:, 0]
+    acc = acc + tv[:, None] * 0.1
+    return acc, tv[0]
+
+# v7: full body (= real sstep body)
+def v7(w, l, t, acc, j):
+    ljj = jax.lax.dynamic_slice(jnp.diagonal(l), (j,), (1,))
+    wj = w[:, j]
+    accj = acc[:, j]
+    e = wj + accj / ljj[0]
+    idx = jnp.argmin(jnp.abs(e[:, None] - t), axis=1).astype(jnp.int32)
+    r = wj - jnp.take_along_axis(t, idx[:, None], axis=1)[:, 0]
+    lrow = jax.lax.dynamic_slice(l, (j, 0), (1, n))[0]
+    acc = acc + r[:, None] * lrow[None, :]
+    return acc, r[0]
+
+for name, body in [('v1',v1),('v2',v2),('v3',v3),('v4',v4),('v5',v5),('v6',v6),('v7',v7)]:
+    f = scan_over(body, None)
+    acc, ys = f(jnp.array(W), jnp.array(L), jnp.array(T))
+    lowered = jax.jit(f).lower(*[jax.ShapeDtypeStruct(a.shape, a.dtype) for a in (W, L, T)])
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(str(lowered.compiler_ir('stablehlo')), use_tuple_args=False, return_tuple=True)
+    open(f'/tmp/bisect_{name}.hlo.txt','w').write(comp.as_hlo_text())
+    json.dump({'m':m,'n':n,
+      'w':W.flatten().tolist(),'l':L.flatten().tolist(),'t':T.flatten().tolist(),
+      'acc':np.array(acc).flatten().tolist(),
+      'ys':np.array(ys).astype(np.float32).flatten().tolist()},
+      open(f'/tmp/bisect_{name}.json','w'))
+    print('wrote', name)
+
+# --- v8/v9/v10: the candidate FIXED formulation ---
+def gen_fixed(name, use_tl):
+    def f(w, l, t):
+        wcols = w.T              # [n, m]
+        ldiag = jnp.diagonal(l)  # [n]
+        def body(acc, xs):
+            wj, lrow, ljj, j = xs
+            accj = jnp.take_along_axis(acc, jnp.full((m, 1), j, jnp.int32), axis=1)[:, 0]
+            e = wj + accj / ljj
+            idx = jnp.argmin(jnp.abs(e[:, None] - t), axis=1).astype(jnp.int32)
+            if use_tl:
+                tv = jnp.take_along_axis(t, idx[:, None], axis=1)[:, 0]
+            else:
+                oh = jax.nn.one_hot(idx, t.shape[1], dtype=w.dtype)
+                tv = jnp.sum(oh * t, axis=1)
+            r = wj - tv
+            acc = acc + r[:, None] * lrow[None, :]
+            return acc, idx
+        js = jnp.arange(n, dtype=jnp.int32)
+        acc, idxs = jax.lax.scan(body, jnp.zeros((m, n), jnp.float32), (wcols, l, ldiag, js), reverse=True)
+        ys = idxs.astype(jnp.float32)[:, 0]
+        ys = ys + 0.0 * (w[0, 0] + l[0, 0] + t[0, 0])
+        return (acc, ys)
+    return f
+
+for name, use_tl in [('v8', True), ('v9', False)]:
+    f = gen_fixed(name, use_tl)
+    acc, ys = f(jnp.array(W), jnp.array(L), jnp.array(T))
+    lowered = jax.jit(f).lower(*[jax.ShapeDtypeStruct(a.shape, a.dtype) for a in (W, L, T)])
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(str(lowered.compiler_ir('stablehlo')), use_tuple_args=False, return_tuple=True)
+    open(f'/tmp/bisect_{name}.hlo.txt','w').write(comp.as_hlo_text())
+    json.dump({'m':m,'n':n,
+      'w':W.flatten().tolist(),'l':L.flatten().tolist(),'t':T.flatten().tolist(),
+      'acc':np.array(acc).flatten().tolist(),
+      'ys':np.array(ys).astype(np.float32).flatten().tolist()},
+      open(f'/tmp/bisect_{name}.json','w'))
+    print('wrote', name)

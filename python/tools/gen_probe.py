@@ -1,0 +1,27 @@
+import sys, os; sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+import sys, json
+import jax, jax.numpy as jnp, numpy as np
+from jax._src.lib import xla_client as xc
+from compile import ganq
+from compile.kernels import ref
+
+m, n, bits = int(sys.argv[1]), int(sys.argv[2]), int(sys.argv[3])
+rng = np.random.RandomState(11)
+w = rng.randn(m, n).astype(np.float32)
+x = rng.randn(n, 2*n+32).astype(np.float32)
+h = (x @ x.T)
+hp = ref.precondition_np(h.astype(np.float64))
+l = np.linalg.cholesky(hp).astype(np.float32)
+_, t0 = ref.rtn_codebook_np(w, bits)
+
+def f(w, l, t0):
+    return (ganq.sstep(w, l, t0, use_pallas=False),)
+
+q = np.array(f(jnp.array(w), jnp.array(l), jnp.array(t0))[0])
+lowered = jax.jit(f).lower(*[jax.ShapeDtypeStruct(a.shape, a.dtype) for a in (w, l, t0)])
+comp = xc._xla.mlir.mlir_module_to_xla_computation(str(lowered.compiler_ir('stablehlo')), use_tuple_args=False, return_tuple=True)
+open('/tmp/probe.hlo.txt','w').write(comp.as_hlo_text())
+json.dump({'m':m,'n':n,'k':2**bits,
+  'w':w.flatten().tolist(),'l':l.flatten().tolist(),'t0':t0.flatten().tolist(),
+  'q':q.flatten().tolist()}, open('/tmp/probe.json','w'))
+print('wrote probe for', m, n, bits)

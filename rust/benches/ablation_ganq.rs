@@ -1,0 +1,103 @@
+//! GANQ ablations (DESIGN.md): iteration-count K sweep, the GPU-adaptive
+//! batched-rows formulation vs a serial per-row loop (the paper's §3.2
+//! parallelization claim), and native-vs-HLO solver agreement + timing.
+
+use ganq::bench::BenchCtx;
+use ganq::quant::ganq::Precond;
+use ganq::quant::ganq as solver;
+use ganq::quant::rtn::rtn_codebook;
+use ganq::util::pool::default_threads;
+use ganq::runtime::ganq_hlo;
+use ganq::tensor::{linalg, Mat};
+use ganq::util::rng::Rng;
+use ganq::util::timer::{bench, Table};
+
+fn main() {
+    let ctx = BenchCtx::load();
+    let mut rng = Rng::new(0xAB1A);
+    let (m, n, p) = (768, 512, 1024);
+    let w = Mat::from_vec(m, n, rng.normal_vec_f32(m * n));
+    let x = Mat::from_vec(n, p, rng.normal_vec_f32(n * p));
+    let h = x.gram();
+    let hp = linalg::precondition(&h);
+
+    // --- K sweep (error vs iterations; paper uses K=10)
+    let mut t = Table::new(
+        "ablation: GANQ iterations K (layer error, 4-bit, 768x512)",
+        &["K", "layer err", "vs K=1"],
+    );
+    let mut e1 = None;
+    for k in [1usize, 2, 4, 6, 10, 16] {
+        let sol = solver::solve(&w, &h, 4, k, Precond::Adaptive, false);
+        let w_hat = solver::reconstruct(m, n, &sol.codes, &sol.codebook);
+        let err = linalg::layer_error(&w, &w_hat, &hp);
+        if e1.is_none() {
+            e1 = Some(err);
+        }
+        t.row(vec![
+            k.to_string(),
+            format!("{:.4e}", err),
+            format!("{:.3}x", err / e1.unwrap()),
+        ]);
+    }
+    t.print();
+
+    // --- GPU-adaptive (all rows in parallel) vs serial per-row loop
+    let l = linalg::cholesky(&hp).unwrap();
+    let (_, t0) = rtn_codebook(&w, 4);
+    let mut tt = Table::new(
+        "ablation: batched-row S-step (paper's GPU-adaptive axis) vs serial",
+        &["variant", "ms / S-step", "speedup"],
+    );
+    let threads = default_threads();
+    let s_serial = bench(1, 5, || {
+        let _ = solver::sstep(&w, &l, &t0, 1);
+    });
+    let s_par = bench(1, 5, || {
+        let _ = solver::sstep(&w, &l, &t0, threads);
+    });
+    tt.row(vec![
+        "serial (1 row-lane)".into(),
+        format!("{:.2}", s_serial.mean_ms()),
+        "1.00x".into(),
+    ]);
+    tt.row(vec![
+        "batched rows (all lanes)".into(),
+        format!("{:.2}", s_par.mean_ms()),
+        format!("{:.2}x", s_serial.mean_s / s_par.mean_s),
+    ]);
+    tt.print();
+
+    // --- native vs HLO solver (same algorithm through the AOT stack)
+    if let Some(rt) = ctx.rt.as_ref() {
+        let mut rng2 = Rng::new(0xCD);
+        let w2 = Mat::from_vec(64, 64, rng2.normal_vec_f32(64 * 64));
+        let x2 = Mat::from_vec(64, 160, rng2.normal_vec_f32(64 * 160));
+        let h2 = x2.gram();
+        let hp2 = linalg::precondition(&h2);
+        let mut te = Table::new(
+            "ablation: native solver vs AOT HLO graph (64x64, K=10)",
+            &["engine", "time (s)", "layer err"],
+        );
+        let tn = std::time::Instant::now();
+        let sol = solver::solve(&w2, &h2, 4, 10, Precond::Adaptive, false);
+        let wn = solver::reconstruct(64, 64, &sol.codes, &sol.codebook);
+        te.row(vec![
+            "native (rust)".into(),
+            format!("{:.3}", tn.elapsed().as_secs_f64()),
+            format!("{:.4e}", linalg::layer_error(&w2, &wn, &hp2)),
+        ]);
+        let th = std::time::Instant::now();
+        if let Ok(Some(r)) = ganq_hlo::quantize_layer_hlo(rt, &w2, &h2, 4) {
+            te.row(vec![
+                "AOT HLO (pallas step)".into(),
+                format!("{:.3}", th.elapsed().as_secs_f64()),
+                format!(
+                    "{:.4e}",
+                    linalg::layer_error(&w2, &r.w_hat, &hp2)
+                ),
+            ]);
+        }
+        te.print();
+    }
+}

@@ -1,0 +1,77 @@
+//! L1 kernel bench: the AOT LUT-mpGEMM artifact (Pallas, interpret-lowered)
+//! vs the Rust-native LUT matmul vs dense f32 matmul, per layer shape.
+//! Interpret-mode wall-clock is NOT a TPU proxy (DESIGN.md); the structural
+//! VMEM/MXU estimates that carry to hardware live in EXPERIMENTS.md §Perf.
+
+use ganq::bench::BenchCtx;
+use ganq::quant::lut::lut_from_parts;
+use ganq::runtime::HostTensor;
+use ganq::tensor::Mat;
+use ganq::util::rng::Rng;
+use ganq::util::timer::{bench_for, Table};
+
+fn main() {
+    let ctx = BenchCtx::load();
+    let mut t = Table::new(
+        "LUT-mpGEMM kernel paths (p=8 activations)",
+        &["shape", "bits", "dense f32 us", "native LUT us", "HLO (pallas) us"],
+    );
+    for (m, n) in [(128usize, 128usize), (512, 128), (128, 512)] {
+        for bits in [4u8, 3] {
+            let mut rng = Rng::new(7 + m as u64);
+            let k = 1usize << bits;
+            let codes: Vec<u8> =
+                (0..m * n).map(|_| rng.below(k as u64) as u8).collect();
+            let cb = Mat::from_vec(m, k, rng.normal_vec_f32(m * k));
+            let lut = lut_from_parts(m, n, bits, codes, cb);
+            let w = lut.dequant();
+            let x = Mat::from_vec(8, n, rng.normal_vec_f32(8 * n));
+
+            let s_dense = bench_for(0.3, 500, || {
+                let _ = x.matmul_tb(&w);
+            });
+            let s_lut = bench_for(0.3, 500, || {
+                let _ = lut.lut_matmul(&x);
+            });
+            let hlo_us = match ctx.rt.as_ref() {
+                Some(rt) => {
+                    let name = format!("lutgemm{}_p{}_{}x{}", bits, 8, m, n);
+                    if rt.has_graph(&name) {
+                        let inputs = [
+                            HostTensor::F32(vec![8, n], x.data.clone()),
+                            HostTensor::U8(
+                                vec![m, n / 2],
+                                lut.packed_nibbles(),
+                            ),
+                            HostTensor::F32(
+                                vec![m, k],
+                                lut.codebook.data.clone(),
+                            ),
+                        ];
+                        let _ = rt.run(&name, &inputs); // compile+warm
+                        let s = bench_for(0.3, 200, || {
+                            let _ = rt.run(&name, &inputs).unwrap();
+                        });
+                        format!("{:.1}", s.mean_us())
+                    } else {
+                        "-".into()
+                    }
+                }
+                None => "-".into(),
+            };
+            t.row(vec![
+                format!("{}x{}", m, n),
+                bits.to_string(),
+                format!("{:.1}", s_dense.mean_us()),
+                format!("{:.1}", s_lut.mean_us()),
+                hlo_us,
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\nnote: on CPU the dense f32 GEMM is compute-bound and fast; the \
+         LUT path wins on *bytes moved* (see table6), which is what the \
+         paper's GPU kernels exploit."
+    );
+}

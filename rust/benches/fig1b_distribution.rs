@@ -1,0 +1,41 @@
+//! Figure 1(b): weight-distribution summaries (violin-plot analogue) for
+//! the first decoder layer — the non-uniformity that motivates GANQ.
+
+use ganq::bench::BenchCtx;
+use ganq::quant::stats;
+use ganq::util::cli::Args;
+use ganq::util::timer::Table;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let model = args.get_or("model", "opt-small").to_string();
+    let ctx = BenchCtx::load();
+    let store = match ctx.store(&model) {
+        Some(s) => s,
+        None => return,
+    };
+    let mut t = Table::new(
+        &format!("Fig 1(b): first-layer weight distributions, {}", model),
+        &["matrix", "min", "max", "std", "kurtosis", "central-99% range"],
+    );
+    for nm in ["wq", "wk", "wv", "wo", "w1", "w2"] {
+        let name = format!("l0.{}", nm);
+        let w = store.mat(&name);
+        let s = stats::dist_stats(&name, &w);
+        t.row(vec![
+            name.clone(),
+            format!("{:.3}", s.min),
+            format!("{:.3}", s.max),
+            format!("{:.4}", s.std),
+            format!("{:+.2}", s.kurtosis),
+            format!("{:.1}%", 100.0 * s.central99_range_frac),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nkurtosis > 0 and central-99% range << 100% => heavy tails: a \
+         uniform grid wastes levels on outliers (the paper's motivation)."
+    );
+    let w = store.mat("l0.w2");
+    println!("\nASCII violin of l0.w2:\n{}", stats::ascii_violin(&w, 17, 50));
+}

@@ -1,0 +1,55 @@
+//! §4.4: quantization cost — wall-clock and peak working-set proxy per
+//! method per model. The paper's point: GANQ's GPU-adaptive row-parallel
+//! formulation quantizes a 7B model in ~1h; gradient-based methods
+//! (OmniQuant / SqueezeLLM's Fisher pass) cost far more.
+
+use ganq::bench::BenchCtx;
+use ganq::util::cli::Args;
+use ganq::util::timer::Table;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let default_models = "opt-micro,opt-small".to_string();
+    let models_arg = args.get_or("models", &default_models).to_string();
+    let models: Vec<&str> = models_arg.split(',').collect();
+    let ctx = BenchCtx::load();
+
+    let mut headers = vec!["method"];
+    headers.extend(models.iter().copied());
+    let mut t = Table::new(
+        "quantization cost (seconds, 4-bit, incl. all layers)",
+        &headers,
+    );
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for method in
+        ["rtn", "gptq", "awq-g128", "omniq", "squeezellm", "ganq", "ganq-star"]
+    {
+        rows.push(vec![method.to_string()]);
+    }
+    for model in &models {
+        let Some(store) = ctx.store(model) else {
+            for r in rows.iter_mut() {
+                r.push("-".into());
+            }
+            continue;
+        };
+        let calib = ctx.calibrate(&store, 32);
+        for (mi, method) in
+            ["rtn", "gptq", "awq-g128", "omniq", "squeezellm", "ganq", "ganq-star"]
+                .iter()
+                .enumerate()
+        {
+            let t0 = std::time::Instant::now();
+            let _ = ctx.quantize(&store, &calib, method, 4);
+            rows[mi].push(format!("{:.2}", t0.elapsed().as_secs_f64()));
+        }
+    }
+    for r in rows {
+        t.row(r);
+    }
+    t.print();
+    println!(
+        "\npaper shape: RTN fastest; GANQ between GPTQ and the \
+         search/clustering methods, and far below OmniQuant's 3h-per-7B."
+    );
+}

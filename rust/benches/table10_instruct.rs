@@ -1,0 +1,27 @@
+//! Table 10 (Appendix C): quantized *instruct* models — wiki2s and c4s
+//! perplexity at 4-bit and 3-bit.
+
+use ganq::bench::{ppl_grid, print_ppl_table, BenchCtx};
+use ganq::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let batches = args.get_usize("batches", 1);
+    let models = ["opt-mini-instruct", "opt-small-instruct"];
+    let ctx = BenchCtx::load();
+    for flavor in ["wiki2s", "c4s"] {
+        let rows = ppl_grid(
+            &ctx,
+            &models,
+            &["rtn", "gptq", "omniq", "ganq"],
+            flavor,
+            batches,
+        );
+        print_ppl_table(
+            &format!("Table 10: {} perplexity (instruct models)", flavor),
+            &models,
+            &rows,
+        );
+    }
+    println!("\npaper shape: GANQ most stable at 3-bit on instruct models.");
+}

@@ -1,0 +1,31 @@
+//! Table 2: wiki2s perplexity of quantized models, 4-bit and 3-bit,
+//! RTN/GPTQ/OmniQuant-like/GANQ across the model family.
+//! Expected shape: full < GANQ < OmniQ/GPTQ < RTN; 4-bit < 3-bit gaps.
+
+use ganq::bench::{ppl_grid, print_ppl_table, BenchCtx};
+use ganq::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let batches = args.get_usize("batches", 1);
+    let default_models = "opt-micro,opt-mini,opt-small,opt-med".to_string();
+    let models_arg =
+        args.get_or("models", &default_models).to_string();
+    let models: Vec<&str> = models_arg.split(',').collect();
+    let ctx = BenchCtx::load();
+    let rows = ppl_grid(
+        &ctx,
+        &models,
+        &["rtn", "gptq", "omniq", "ganq"],
+        "wiki2s",
+        batches,
+    );
+    print_ppl_table(
+        "Table 2: wiki2s perplexity (lower is better)",
+        &models,
+        &rows,
+    );
+    println!(
+        "\npaper shape: GANQ lowest at both widths; RTN collapses at 3-bit."
+    );
+}

@@ -1,0 +1,30 @@
+//! Table 5: weight-only quantization WITH outlier handling — grouped
+//! uniform baselines (g128), SqueezeLLM-like, and GANQ* (GANQ + sparse
+//! outlier split). wiki2s perplexity.
+
+use ganq::bench::{ppl_grid, print_ppl_table, BenchCtx};
+use ganq::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let batches = args.get_usize("batches", 1);
+    let default_models = "opt-micro,opt-mini,opt-small".to_string();
+    let models_arg = args.get_or("models", &default_models).to_string();
+    let models: Vec<&str> = models_arg.split(',').collect();
+    let ctx = BenchCtx::load();
+    // note: group 128 on our layer widths (128-768 cols) still subdivides
+    // the wider mlp rows; on d=128 attention mats it equals per-channel
+    let rows = ppl_grid(
+        &ctx,
+        &models,
+        &["rtn-g128", "gptq-g128", "awq-g128", "omniq-g128", "squeezellm", "ganq-star"],
+        "wiki2s",
+        batches,
+    );
+    print_ppl_table(
+        "Table 5: wiki2s perplexity with outlier handling",
+        &models,
+        &rows,
+    );
+    println!("\npaper shape: GANQ* lowest, SqueezeLLM second.");
+}

@@ -1,0 +1,22 @@
+//! Table 9 (Appendix C): ptbs perplexity for the OPT-family stand-ins
+//! (the paper reports PTB for OPT models only).
+
+use ganq::bench::{ppl_grid, print_ppl_table, BenchCtx};
+use ganq::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let batches = args.get_usize("batches", 1);
+    let default_models = "opt-micro,opt-mini,opt-small".to_string();
+    let models_arg = args.get_or("models", &default_models).to_string();
+    let models: Vec<&str> = models_arg.split(',').collect();
+    let ctx = BenchCtx::load();
+    let rows = ppl_grid(
+        &ctx,
+        &models,
+        &["rtn", "gptq", "omniq", "ganq"],
+        "ptbs",
+        batches,
+    );
+    print_ppl_table("Table 9: ptbs perplexity", &models, &rows);
+}

@@ -1,0 +1,156 @@
+//! Shared scaffolding for the bench binaries (benches/table*.rs): loading
+//! trained models + runtime, one-shot calibration reuse, and the
+//! quantize->perplexity grid used by Tables 2/5/8/9/10.
+
+use crate::coordinator::{self, Calibration, QuantEngine};
+use crate::data::corpus::{self, Flavor, Split};
+use crate::eval::{perplexity, PplEngine};
+use crate::model::forward::Weights;
+use crate::model::{QuantizedModel, WeightStore};
+use crate::runtime::Runtime;
+
+pub struct BenchCtx {
+    pub rt: Option<Runtime>,
+}
+
+impl BenchCtx {
+    pub fn load() -> BenchCtx {
+        let rt = match Runtime::load() {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!(
+                    "NOTE: no artifacts ({}); benches fall back to the \
+                     native path where possible",
+                    e
+                );
+                None
+            }
+        };
+        BenchCtx { rt }
+    }
+
+    pub fn store(&self, model: &str) -> Option<WeightStore> {
+        let cfg = match self.rt.as_ref().and_then(|r| r.manifest.models.get(model)) {
+            Some(e) => e.config,
+            None => crate::model::ModelConfig::builtin(model)?,
+        };
+        let base = crate::util::artifacts_dir();
+        match WeightStore::load(&base, model, cfg) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                eprintln!("skipping {}: {}", model, e);
+                None
+            }
+        }
+    }
+
+    pub fn calibrate(&self, store: &WeightStore, seqs: usize) -> Calibration {
+        coordinator::calibrate(store, seqs, 128)
+    }
+
+    pub fn quantize(
+        &self,
+        store: &WeightStore,
+        calib: &Calibration,
+        method: &str,
+        bits: u8,
+    ) -> QuantizedModel {
+        let engine = match &self.rt {
+            Some(rt) => QuantEngine::Hlo(rt),
+            None => QuantEngine::Native,
+        };
+        coordinator::quantize_model(store, method, bits, calib, &engine, false)
+            .expect("quantize")
+    }
+
+    /// Perplexity via the HLO nll graph when available, native otherwise.
+    pub fn ppl(
+        &self,
+        model: &str,
+        store: &WeightStore,
+        qm: Option<&QuantizedModel>,
+        flavor: Flavor,
+        batches: usize,
+    ) -> f64 {
+        if let Some(rt) = &self.rt {
+            if let Ok(eng) = PplEngine::hlo(rt, model, store, qm) {
+                return perplexity(&eng, flavor, Split::Valid, batches)
+                    .expect("ppl");
+            }
+        }
+        let eng = match qm {
+            Some(q) => PplEngine::Native(Weights::Quant(q)),
+            None => PplEngine::Native(Weights::Fp(store)),
+        };
+        perplexity(&eng, flavor, Split::Valid, batches).expect("ppl")
+    }
+}
+
+/// The standard ppl-grid row set for Tables 2/8/9: full + 4 basic methods
+/// at 4 and 3 bits.
+pub fn ppl_grid(
+    ctx: &BenchCtx,
+    models: &[&str],
+    methods: &[&str],
+    flavor_name: &str,
+    batches: usize,
+) -> Vec<(String, u8, Vec<Option<f64>>)> {
+    let flavor = corpus::flavor(flavor_name).expect("flavor");
+    let stores: Vec<Option<(WeightStore, Calibration)>> = models
+        .iter()
+        .map(|m| {
+            ctx.store(m).map(|s| {
+                let c = ctx.calibrate(&s, 32);
+                (s, c)
+            })
+        })
+        .collect();
+    let mut rows = Vec::new();
+    // FP baseline
+    let full: Vec<Option<f64>> = stores
+        .iter()
+        .enumerate()
+        .map(|(i, sc)| {
+            sc.as_ref()
+                .map(|(s, _)| ctx.ppl(models[i], s, None, flavor, batches))
+        })
+        .collect();
+    rows.push(("full".to_string(), 16, full));
+    for &bits in &[4u8, 3] {
+        for &method in methods {
+            let vals: Vec<Option<f64>> = stores
+                .iter()
+                .enumerate()
+                .map(|(i, sc)| {
+                    sc.as_ref().map(|(s, c)| {
+                        let qm = ctx.quantize(s, c, method, bits);
+                        ctx.ppl(models[i], s, Some(&qm), flavor, batches)
+                    })
+                })
+                .collect();
+            rows.push((method.to_string(), bits, vals));
+        }
+    }
+    rows
+}
+
+pub fn print_ppl_table(
+    title: &str,
+    models: &[&str],
+    rows: &[(String, u8, Vec<Option<f64>>)],
+) {
+    let mut headers = vec!["method", "bits"];
+    headers.extend(models.iter().copied());
+    let mut t = crate::util::timer::Table::new(title, &headers);
+    for (method, bits, vals) in rows {
+        let mut cells = vec![method.clone(), bits.to_string()];
+        for v in vals {
+            cells.push(match v {
+                Some(p) => crate::util::timer::fmt_f(*p, 3),
+                None => "-".to_string(),
+            });
+        }
+        t.row(cells);
+    }
+    t.print();
+}

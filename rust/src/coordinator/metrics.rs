@@ -1,0 +1,143 @@
+//! Serving metrics: per-request latency breakdown and aggregate
+//! throughput / weight-traffic numbers (Table 6 columns).
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct RequestMetrics {
+    pub id: u64,
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    pub enqueued: Instant,
+    pub first_token: Option<Instant>,
+    pub finished: Option<Instant>,
+}
+
+impl RequestMetrics {
+    pub fn ttft(&self) -> Option<Duration> {
+        self.first_token.map(|t| t - self.enqueued)
+    }
+
+    pub fn total(&self) -> Option<Duration> {
+        self.finished.map(|t| t - self.enqueued)
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    pub requests: Vec<RequestMetrics>,
+    pub decode_steps: usize,
+    pub wall_s: f64,
+    /// weight bytes streamed per decode step (the memory-bound quantity
+    /// the paper's LUT kernels optimize)
+    pub weight_bytes_per_step: usize,
+    /// KV-cache bytes touched per step
+    pub kv_bytes_per_step: usize,
+}
+
+impl ServeMetrics {
+    pub fn total_generated(&self) -> usize {
+        self.requests.iter().map(|r| r.generated_tokens).sum()
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.total_generated() as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mean_ttft_ms(&self) -> f64 {
+        let vals: Vec<f64> = self
+            .requests
+            .iter()
+            .filter_map(|r| r.ttft())
+            .map(|d| d.as_secs_f64() * 1e3)
+            .collect();
+        if vals.is_empty() {
+            f64::NAN
+        } else {
+            vals.iter().sum::<f64>() / vals.len() as f64
+        }
+    }
+
+    pub fn p95_latency_ms(&self) -> f64 {
+        let mut vals: Vec<f64> = self
+            .requests
+            .iter()
+            .filter_map(|r| r.total())
+            .map(|d| d.as_secs_f64() * 1e3)
+            .collect();
+        if vals.is_empty() {
+            return f64::NAN;
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        vals[((vals.len() - 1) as f64 * 0.95) as usize]
+    }
+
+    /// Total weight traffic over the run (bytes) — scales with steps.
+    pub fn total_weight_bytes(&self) -> usize {
+        self.weight_bytes_per_step * self.decode_steps
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} reqs, {} tokens in {:.2}s ({:.1} tok/s), ttft {:.1}ms, p95 {:.1}ms, {:.1} MiB weights/step",
+            self.requests.len(),
+            self.total_generated(),
+            self.wall_s,
+            self.tokens_per_s(),
+            self.mean_ttft_ms(),
+            self.p95_latency_ms(),
+            self.weight_bytes_per_step as f64 / (1 << 20) as f64,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_aggregate() {
+        let t0 = Instant::now();
+        let m = ServeMetrics {
+            requests: vec![
+                RequestMetrics {
+                    id: 1,
+                    prompt_tokens: 4,
+                    generated_tokens: 10,
+                    enqueued: t0,
+                    first_token: Some(t0 + Duration::from_millis(5)),
+                    finished: Some(t0 + Duration::from_millis(50)),
+                },
+                RequestMetrics {
+                    id: 2,
+                    prompt_tokens: 4,
+                    generated_tokens: 20,
+                    enqueued: t0,
+                    first_token: Some(t0 + Duration::from_millis(9)),
+                    finished: Some(t0 + Duration::from_millis(80)),
+                },
+            ],
+            decode_steps: 30,
+            wall_s: 0.1,
+            weight_bytes_per_step: 1000,
+            kv_bytes_per_step: 10,
+        };
+        assert_eq!(m.total_generated(), 30);
+        assert!((m.tokens_per_s() - 300.0).abs() < 1e-9);
+        assert!((m.mean_ttft_ms() - 7.0).abs() < 1e-9);
+        assert_eq!(m.total_weight_bytes(), 30_000);
+        assert!(m.summary().contains("2 reqs"));
+    }
+
+    #[test]
+    fn empty_metrics_are_safe() {
+        let m = ServeMetrics::default();
+        assert_eq!(m.tokens_per_s(), 0.0);
+        assert!(m.mean_ttft_ms().is_nan());
+        assert!(m.p95_latency_ms().is_nan());
+    }
+}

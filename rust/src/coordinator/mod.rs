@@ -1,0 +1,24 @@
+//! L3 coordinator — the system around the paper's quantization method:
+//!
+//! * `pipeline` — the offline layer-wise PTQ path: calibration capture,
+//!   per-layer GANQ/baseline quantization (native or through the AOT HLO
+//!   solver graph), servable model assembly.
+//! * `serve` — the online path: token-level continuous batching over the
+//!   AOT decode graphs (PJRT) or the native fallback, with per-slot
+//!   positions and KV caches.
+//! * `metrics` — request latency + throughput + weight-traffic accounting
+//!   (Table 6's CUDA-time/speedup/peak-memory analogues).
+//! * `server` — a threaded front: submit requests from any thread; a
+//!   dedicated engine thread owns the (non-Send) runtime.
+
+pub mod metrics;
+pub mod pipeline;
+pub mod serve;
+pub mod server;
+
+pub use metrics::ServeMetrics;
+pub use pipeline::{calibrate, quantize_model, Calibration, QuantEngine};
+pub use serve::{
+    serve, DecodeBackend, HloBackend, NativeBackend, Request, Response,
+    WeightFmt,
+};

@@ -1,0 +1,608 @@
+//! Serving: token-level continuous batching (Orca-style) over a decode
+//! backend. Two backends implement the same scheduler contract:
+//!
+//! * [`HloBackend`] — the AOT decode graph via PJRT (`decode_{fmt}_{model}
+//!   _b{B}`), per-slot positions as a vector input, KV caches threaded
+//!   through the graph outputs; weights optionally staged as device-
+//!   resident buffers (the §Perf optimization).
+//! * [`NativeBackend`] — the pure-Rust forward path (works without
+//!   artifacts; also the reference for cross-checking the HLO path).
+//!
+//! The scheduler admits requests into free slots, feeds one token per slot
+//! per step (prompt tokens first — "prefill as decode" keeps the graph set
+//! small; exact-size prefill graphs exist for the common 16/32-token
+//! prompts and are used by the latency bench), and collects per-request
+//! latency metrics.
+
+use std::time::Instant;
+
+use crate::model::forward::{self, KvCache, Weights};
+use crate::model::{LayerWeights, ModelConfig, QuantizedModel, WeightStore};
+use crate::runtime::{HostTensor, Runtime};
+
+use super::metrics::{RequestMetrics, ServeMetrics};
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+}
+
+pub trait DecodeBackend {
+    fn slots(&self) -> usize;
+    fn cfg(&self) -> ModelConfig;
+    /// Advance every active slot by one token; returns logits per slot.
+    fn step(
+        &mut self,
+        tok: &[i32],
+        active: &[bool],
+    ) -> Result<Vec<Vec<f32>>, String>;
+    fn reset_slot(&mut self, slot: usize);
+    fn slot_pos(&self, slot: usize) -> usize;
+    fn weight_bytes_per_step(&self) -> usize;
+    fn kv_bytes_per_step(&self) -> usize;
+}
+
+// ---------------------------------------------------------------------------
+// scheduler
+// ---------------------------------------------------------------------------
+
+struct SlotState {
+    req: Request,
+    prompt_idx: usize,
+    generated: Vec<i32>,
+    metrics: RequestMetrics,
+}
+
+/// Serve a batch of requests to completion with continuous batching.
+pub fn serve(
+    backend: &mut dyn DecodeBackend,
+    requests: Vec<Request>,
+) -> Result<(Vec<Response>, ServeMetrics), String> {
+    let nslots = backend.slots();
+    let ctx = backend.cfg().ctx;
+    let t_start = Instant::now();
+    let mut queue: std::collections::VecDeque<Request> = requests
+        .into_iter()
+        .map(|mut r| {
+            // left-truncate prompts that cannot fit with generation room
+            let budget = ctx.saturating_sub(r.max_new + 1).max(1);
+            if r.prompt.len() > budget {
+                r.prompt = r.prompt[r.prompt.len() - budget..].to_vec();
+            }
+            r
+        })
+        .collect();
+    let mut slots: Vec<Option<SlotState>> =
+        (0..nslots).map(|_| None).collect();
+    let mut done: Vec<(Vec<Response>, RequestMetrics)> = Vec::new();
+    let mut responses = Vec::new();
+    let mut all_metrics = Vec::new();
+    let mut steps = 0usize;
+
+    loop {
+        // admit
+        for (si, slot) in slots.iter_mut().enumerate() {
+            if slot.is_none() {
+                if let Some(req) = queue.pop_front() {
+                    backend.reset_slot(si);
+                    let m = RequestMetrics {
+                        id: req.id,
+                        prompt_tokens: req.prompt.len(),
+                        generated_tokens: 0,
+                        enqueued: Instant::now(),
+                        first_token: None,
+                        finished: None,
+                    };
+                    *slot = Some(SlotState {
+                        req,
+                        prompt_idx: 0,
+                        generated: Vec::new(),
+                        metrics: m,
+                    });
+                }
+            }
+        }
+        if slots.iter().all(|s| s.is_none()) {
+            break;
+        }
+
+        // build step inputs
+        let mut tok = vec![0i32; nslots];
+        let mut active = vec![false; nslots];
+        for (si, slot) in slots.iter().enumerate() {
+            if let Some(st) = slot {
+                active[si] = true;
+                tok[si] = if st.prompt_idx < st.req.prompt.len() {
+                    st.req.prompt[st.prompt_idx]
+                } else {
+                    *st.generated.last().expect("generated nonempty")
+                };
+            }
+        }
+        let logits = backend.step(&tok, &active)?;
+        steps += 1;
+
+        // consume outputs
+        for (si, slot) in slots.iter_mut().enumerate() {
+            let finished = if let Some(st) = slot.as_mut() {
+                if st.prompt_idx < st.req.prompt.len() {
+                    st.prompt_idx += 1;
+                }
+                if st.prompt_idx >= st.req.prompt.len() {
+                    // this step's logits yield the next generated token
+                    let next = forward::argmax(&logits[si]) as i32;
+                    st.generated.push(next);
+                    st.metrics.generated_tokens = st.generated.len();
+                    if st.metrics.first_token.is_none() {
+                        st.metrics.first_token = Some(Instant::now());
+                    }
+                }
+                st.generated.len() >= st.req.max_new
+                    || backend.slot_pos(si) + 1 >= ctx
+            } else {
+                false
+            };
+            if finished {
+                let st = slot.take().unwrap();
+                let mut m = st.metrics;
+                m.finished = Some(Instant::now());
+                responses.push(Response { id: st.req.id, tokens: st.generated });
+                all_metrics.push(m);
+            }
+        }
+    }
+    let _ = &mut done;
+
+    let metrics = ServeMetrics {
+        requests: all_metrics,
+        decode_steps: steps,
+        wall_s: t_start.elapsed().as_secs_f64(),
+        weight_bytes_per_step: backend.weight_bytes_per_step(),
+        kv_bytes_per_step: backend.kv_bytes_per_step(),
+    };
+    responses.sort_by_key(|r| r.id);
+    Ok((responses, metrics))
+}
+
+// ---------------------------------------------------------------------------
+// native backend
+// ---------------------------------------------------------------------------
+
+pub struct NativeBackend<'a> {
+    w: Weights<'a>,
+    caches: Vec<KvCache>,
+    weight_bytes: usize,
+}
+
+impl<'a> NativeBackend<'a> {
+    pub fn new(w: Weights<'a>, slots: usize) -> NativeBackend<'a> {
+        let cfg = w.store().cfg;
+        let weight_bytes = weight_bytes_of(&w);
+        NativeBackend {
+            w,
+            caches: (0..slots).map(|_| KvCache::new(cfg)).collect(),
+            weight_bytes,
+        }
+    }
+}
+
+fn weight_bytes_of(w: &Weights) -> usize {
+    let store = w.store();
+    match w {
+        Weights::Fp(_) => store
+            .cfg
+            .linear_shapes()
+            .iter()
+            .map(|(_, m, n)| m * n * 4)
+            .sum(),
+        Weights::Quant(q) => q
+            .linears
+            .values()
+            .map(|lw| match lw {
+                LayerWeights::Dense(m) => m.data.len() * 4,
+                LayerWeights::Lut(l) => l.bytes_per_decode(),
+                LayerWeights::LutSparse(l, s) => {
+                    l.bytes_per_decode() + s.storage_bytes()
+                }
+            })
+            .sum(),
+    }
+}
+
+impl<'a> DecodeBackend for NativeBackend<'a> {
+    fn slots(&self) -> usize {
+        self.caches.len()
+    }
+
+    fn cfg(&self) -> ModelConfig {
+        self.w.store().cfg
+    }
+
+    fn step(
+        &mut self,
+        tok: &[i32],
+        active: &[bool],
+    ) -> Result<Vec<Vec<f32>>, String> {
+        let vocab = self.cfg().vocab;
+        let mut out = Vec::with_capacity(tok.len());
+        for si in 0..tok.len() {
+            if active[si] {
+                out.push(forward::decode_step(
+                    &self.w,
+                    tok[si],
+                    &mut self.caches[si],
+                ));
+            } else {
+                out.push(vec![0.0; vocab]);
+            }
+        }
+        Ok(out)
+    }
+
+    fn reset_slot(&mut self, slot: usize) {
+        self.caches[slot] = KvCache::new(self.cfg());
+    }
+
+    fn slot_pos(&self, slot: usize) -> usize {
+        self.caches[slot].len
+    }
+
+    fn weight_bytes_per_step(&self) -> usize {
+        self.weight_bytes
+    }
+
+    fn kv_bytes_per_step(&self) -> usize {
+        let c = self.cfg();
+        // read whole cache + write one position, per layer, K and V
+        c.layers * c.heads * c.ctx * c.head_dim() * 4 * 2
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HLO backend
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightFmt {
+    Fp32,
+    Lut4,
+    Lut3,
+}
+
+impl WeightFmt {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            WeightFmt::Fp32 => "fp32",
+            WeightFmt::Lut4 => "lut4",
+            WeightFmt::Lut3 => "lut3",
+        }
+    }
+
+    pub fn bits(&self) -> u8 {
+        match self {
+            WeightFmt::Fp32 => 32,
+            WeightFmt::Lut4 => 4,
+            WeightFmt::Lut3 => 3,
+        }
+    }
+}
+
+/// Weight argument list for the LUT serving graphs (lut_param_spec order):
+/// quantizable linears as (qp u8 [m, n/2], t f32 [m, 2^bits]).
+pub fn weight_tensors_lut(
+    cfg: &ModelConfig,
+    qm: &QuantizedModel,
+    bits: u8,
+) -> Result<Vec<HostTensor>, String> {
+    let k = 1usize << bits;
+    let quant_names: std::collections::BTreeSet<String> = cfg
+        .linear_shapes()
+        .into_iter()
+        .map(|(n, _, _)| n)
+        .collect();
+    let mut out = Vec::new();
+    for (name, shape) in cfg.param_spec() {
+        if quant_names.contains(&name) {
+            let lut = match qm.linears.get(&name) {
+                Some(LayerWeights::Lut(l)) => l,
+                Some(LayerWeights::LutSparse(..)) => {
+                    return Err(format!(
+                        "{}: dense+sparse models (GANQ*/SqueezeLLM) need \
+                         the sparse branch — serve via NativeBackend",
+                        name
+                    ))
+                }
+                _ => {
+                    return Err(format!(
+                        "{} has no LUT form (method {})",
+                        name, qm.method
+                    ))
+                }
+            };
+            if lut.bits != bits {
+                return Err(format!(
+                    "{}: lut bits {} != graph bits {}",
+                    name, lut.bits, bits
+                ));
+            }
+            let (m, n) = (shape[0], shape[1]);
+            out.push(HostTensor::U8(vec![m, n / 2], lut.packed_nibbles()));
+            out.push(HostTensor::F32(vec![m, k], lut.codebook.data.clone()));
+        } else {
+            let t = qm.base.get(&name);
+            out.push(HostTensor::F32(t.shape.clone(), t.data.clone()));
+        }
+    }
+    Ok(out)
+}
+
+pub struct HloBackend<'a> {
+    rt: &'a Runtime,
+    graph: String,
+    cfg: ModelConfig,
+    b: usize,
+    kcache: HostTensor,
+    vcache: HostTensor,
+    pos: Vec<usize>,
+    weights: Vec<HostTensor>,
+    resident: Option<Vec<xla::PjRtBuffer>>,
+    weight_bytes: usize,
+}
+
+impl<'a> HloBackend<'a> {
+    /// Build for `decode_{fmt}_{model}_b{B}`. `resident` stages weights as
+    /// device buffers once (the optimized path).
+    pub fn new(
+        rt: &'a Runtime,
+        model: &str,
+        fmt: WeightFmt,
+        b: usize,
+        store: &WeightStore,
+        qm: Option<&QuantizedModel>,
+        resident: bool,
+    ) -> Result<HloBackend<'a>, String> {
+        let entry = rt
+            .manifest
+            .models
+            .get(model)
+            .ok_or_else(|| format!("unknown model {}", model))?;
+        let cfg = entry.config;
+        let graph =
+            format!("decode_{}_{}_b{}", fmt.tag(), entry.base_config, b);
+        if !rt.has_graph(&graph) {
+            return Err(format!("graph {} not in artifacts", graph));
+        }
+        let weights = match fmt {
+            WeightFmt::Fp32 => {
+                crate::eval::weight_tensors_fp32(&cfg, store, qm)
+            }
+            WeightFmt::Lut4 | WeightFmt::Lut3 => weight_tensors_lut(
+                &cfg,
+                qm.ok_or("LUT format requires a quantized model")?,
+                fmt.bits(),
+            )?,
+        };
+        let weight_bytes = match (fmt, qm) {
+            (WeightFmt::Fp32, _) => cfg
+                .linear_shapes()
+                .iter()
+                .map(|(_, m, n)| m * n * 4)
+                .sum(),
+            (_, Some(q)) => q
+                .linears
+                .values()
+                .map(|lw| match lw {
+                    LayerWeights::Lut(l) => l.bytes_per_decode(),
+                    LayerWeights::LutSparse(l, s) => {
+                        l.bytes_per_decode() + s.storage_bytes()
+                    }
+                    LayerWeights::Dense(m) => m.data.len() * 4,
+                })
+                .sum(),
+            _ => 0,
+        };
+        let cache_dims = vec![
+            cfg.layers,
+            b,
+            cfg.heads,
+            cfg.ctx,
+            cfg.head_dim(),
+        ];
+        let cache_len: usize = cache_dims.iter().product();
+        let resident_bufs = if resident {
+            Some(rt.stage(&weights)?)
+        } else {
+            None
+        };
+        Ok(HloBackend {
+            rt,
+            graph,
+            cfg,
+            b,
+            kcache: HostTensor::F32(cache_dims.clone(), vec![0.0; cache_len]),
+            vcache: HostTensor::F32(cache_dims, vec![0.0; cache_len]),
+            pos: vec![0; b],
+            weights,
+            resident: resident_bufs,
+            weight_bytes,
+        })
+    }
+}
+
+impl<'a> HloBackend<'a> {
+    /// Variant constructor with an explicit graph name (used by the
+    /// pallas-kernel serving graph, which shares the lut4 signature).
+    pub fn new_with_graph(
+        rt: &'a Runtime,
+        model: &str,
+        graph: &str,
+        b: usize,
+        store: &WeightStore,
+        qm: Option<&QuantizedModel>,
+    ) -> Result<HloBackend<'a>, String> {
+        let mut be =
+            HloBackend::new(rt, model, WeightFmt::Lut4, b, store, qm, false)?;
+        if !rt.has_graph(graph) {
+            return Err(format!("graph {} not in artifacts", graph));
+        }
+        be.graph = graph.to_string();
+        Ok(be)
+    }
+}
+
+impl<'a> DecodeBackend for HloBackend<'a> {
+    fn slots(&self) -> usize {
+        self.b
+    }
+
+    fn cfg(&self) -> ModelConfig {
+        self.cfg
+    }
+
+    fn step(
+        &mut self,
+        tok: &[i32],
+        active: &[bool],
+    ) -> Result<Vec<Vec<f32>>, String> {
+        assert_eq!(tok.len(), self.b);
+        // inactive slots write to the scratch position ctx-1 (overwritten
+        // before any real read — see module docs)
+        let pos: Vec<i32> = (0..self.b)
+            .map(|i| {
+                if active[i] {
+                    self.pos[i] as i32
+                } else {
+                    (self.cfg.ctx - 1) as i32
+                }
+            })
+            .collect();
+        let head = [
+            HostTensor::I32(vec![self.b], tok.to_vec()),
+            HostTensor::I32(vec![self.b], pos),
+            self.kcache.clone(),
+            self.vcache.clone(),
+        ];
+        let out = match &self.resident {
+            Some(bufs) => {
+                self.rt.run_with_resident(&self.graph, &head, bufs)?
+            }
+            None => {
+                let mut inputs = head.to_vec();
+                inputs.extend(self.weights.iter().cloned());
+                self.rt.run(&self.graph, &inputs)?
+            }
+        };
+        if out.len() != 3 {
+            return Err(format!("decode returned {} outputs", out.len()));
+        }
+        let logits_flat = out[0].as_f32();
+        let vocab = self.cfg.vocab;
+        let logits: Vec<Vec<f32>> = (0..self.b)
+            .map(|i| logits_flat[i * vocab..(i + 1) * vocab].to_vec())
+            .collect();
+        self.kcache = out[1].clone();
+        self.vcache = out[2].clone();
+        for i in 0..self.b {
+            if active[i] {
+                self.pos[i] += 1;
+            }
+        }
+        Ok(logits)
+    }
+
+    fn reset_slot(&mut self, slot: usize) {
+        self.pos[slot] = 0;
+    }
+
+    fn slot_pos(&self, slot: usize) -> usize {
+        self.pos[slot]
+    }
+
+    fn weight_bytes_per_step(&self) -> usize {
+        self.weight_bytes
+    }
+
+    fn kv_bytes_per_step(&self) -> usize {
+        self.cfg.layers
+            * self.b
+            * self.cfg.heads
+            * self.cfg.ctx
+            * self.cfg.head_dim()
+            * 4
+            * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::WeightStore;
+
+    fn backend() -> (WeightStore, Vec<Request>) {
+        let cfg = ModelConfig::builtin("opt-micro").unwrap();
+        let store = WeightStore::random("t", cfg, 31);
+        let reqs = vec![
+            Request { id: 1, prompt: vec![104, 105], max_new: 4 },
+            Request { id: 2, prompt: vec![97, 98, 99], max_new: 6 },
+            Request { id: 3, prompt: vec![120], max_new: 3 },
+        ];
+        (store, reqs)
+    }
+
+    #[test]
+    fn native_continuous_batching_completes_all() {
+        let (store, reqs) = backend();
+        let w = Weights::Fp(&store);
+        let mut be = NativeBackend::new(w, 2); // 3 reqs through 2 slots
+        let (resp, metrics) = serve(&mut be, reqs).unwrap();
+        assert_eq!(resp.len(), 3);
+        assert_eq!(resp[0].tokens.len(), 4);
+        assert_eq!(resp[1].tokens.len(), 6);
+        assert_eq!(resp[2].tokens.len(), 3);
+        assert_eq!(metrics.total_generated(), 13);
+        assert!(metrics.decode_steps > 0);
+        assert!(metrics.weight_bytes_per_step > 0);
+    }
+
+    #[test]
+    fn batched_output_matches_sequential_generation() {
+        let (store, reqs) = backend();
+        let w = Weights::Fp(&store);
+        let mut be = NativeBackend::new(w, 3);
+        let (resp, _) = serve(&mut be, reqs.clone()).unwrap();
+        for r in &reqs {
+            let w2 = Weights::Fp(&store);
+            let expect =
+                forward::generate_greedy(&w2, &r.prompt, r.max_new);
+            let got = &resp
+                .iter()
+                .find(|x| x.id == r.id)
+                .unwrap()
+                .tokens;
+            assert_eq!(got, &expect, "req {}", r.id);
+        }
+    }
+
+    #[test]
+    fn oversized_prompt_is_truncated() {
+        let cfg = ModelConfig::builtin("opt-micro").unwrap();
+        let store = WeightStore::random("t", cfg, 32);
+        let w = Weights::Fp(&store);
+        let mut be = NativeBackend::new(w, 1);
+        let reqs = vec![Request {
+            id: 1,
+            prompt: (0..300).map(|i| i % 256).collect(),
+            max_new: 5,
+        }];
+        let (resp, _) = serve(&mut be, reqs).unwrap();
+        assert_eq!(resp[0].tokens.len(), 5);
+    }
+}

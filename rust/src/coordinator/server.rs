@@ -1,0 +1,151 @@
+//! Threaded serving front-end. PJRT handles are not Send, so a dedicated
+//! engine thread owns the backend; callers submit requests through a
+//! channel and receive responses on per-request channels. Requests are
+//! micro-batched: the engine drains whatever is queued (up to a window)
+//! and runs one continuous-batching round.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use super::metrics::ServeMetrics;
+use super::serve::{Request, Response};
+
+pub enum Job {
+    Run(Request, Sender<Response>),
+    Shutdown(Sender<ServeMetrics>),
+}
+
+pub struct ServerHandle {
+    tx: Sender<Job>,
+    join: Option<JoinHandle<()>>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl ServerHandle {
+    /// Spawn the engine thread. `make_backend_and_serve` is called on the
+    /// engine thread with each drained batch (it owns any non-Send state
+    /// via the closure's captured constructor).
+    pub fn spawn<F>(mut engine_loop: F) -> ServerHandle
+    where
+        F: FnMut(Vec<(Request, Sender<Response>)>) -> ServeMetrics
+            + Send
+            + 'static,
+    {
+        let (tx, rx): (Sender<Job>, Receiver<Job>) = mpsc::channel();
+        let join = std::thread::spawn(move || {
+            let mut total = ServeMetrics::default();
+            loop {
+                // block for the first job, then drain a window
+                let first = match rx.recv() {
+                    Ok(j) => j,
+                    Err(_) => break,
+                };
+                let mut batch = Vec::new();
+                let mut shutdown: Option<Sender<ServeMetrics>> = None;
+                match first {
+                    Job::Run(r, s) => batch.push((r, s)),
+                    Job::Shutdown(s) => shutdown = Some(s),
+                }
+                if shutdown.is_none() {
+                    // micro-batch window: drain whatever is already queued
+                    while batch.len() < 16 {
+                        match rx.try_recv() {
+                            Ok(Job::Run(r, s)) => batch.push((r, s)),
+                            Ok(Job::Shutdown(s)) => {
+                                shutdown = Some(s);
+                                break;
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                }
+                if !batch.is_empty() {
+                    let m = engine_loop(batch);
+                    total.requests.extend(m.requests);
+                    total.decode_steps += m.decode_steps;
+                    total.wall_s += m.wall_s;
+                    total.weight_bytes_per_step = m.weight_bytes_per_step;
+                    total.kv_bytes_per_step = m.kv_bytes_per_step;
+                }
+                if let Some(s) = shutdown {
+                    let _ = s.send(total.clone());
+                    break;
+                }
+            }
+        });
+        ServerHandle {
+            tx,
+            join: Some(join),
+            next_id: std::sync::atomic::AtomicU64::new(1),
+        }
+    }
+
+    /// Submit a request; returns the receiver for its response.
+    pub fn submit(
+        &self,
+        prompt: Vec<i32>,
+        max_new: usize,
+    ) -> Receiver<Response> {
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let _ = self.tx.send(Job::Run(
+            Request { id, prompt, max_new },
+            tx,
+        ));
+        rx
+    }
+
+    /// Drain, stop the engine thread, and return aggregate metrics.
+    pub fn shutdown(mut self) -> ServeMetrics {
+        let (tx, rx) = mpsc::channel();
+        let _ = self.tx.send(Job::Shutdown(tx));
+        let m = rx.recv().unwrap_or_default();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::serve::{serve, NativeBackend};
+    use crate::model::forward::Weights;
+    use crate::model::{ModelConfig, WeightStore};
+
+    #[test]
+    fn threaded_server_round_trip() {
+        let handle = ServerHandle::spawn(move |batch| {
+            // engine thread: build a fresh native backend per micro-batch
+            let cfg = ModelConfig::builtin("opt-micro").unwrap();
+            let store = WeightStore::random("t", cfg, 41);
+            let w = Weights::Fp(&store);
+            let mut be = NativeBackend::new(w, 2);
+            let (reqs, senders): (Vec<_>, Vec<_>) = batch
+                .into_iter()
+                .map(|(r, s)| (r, s))
+                .unzip();
+            let ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+            let (resps, m) = serve(&mut be, reqs).unwrap();
+            for (resp, (id, s)) in resps
+                .into_iter()
+                .zip(ids.into_iter().zip(senders))
+            {
+                assert_eq!(resp.id, id);
+                let _ = s.send(resp);
+            }
+            m
+        });
+        let rx1 = handle.submit(vec![104, 105], 3);
+        let rx2 = handle.submit(vec![97], 5);
+        let r1 = rx1.recv().unwrap();
+        let r2 = rx2.recv().unwrap();
+        assert_eq!(r1.tokens.len(), 3);
+        assert_eq!(r2.tokens.len(), 5);
+        let m = handle.shutdown();
+        assert_eq!(m.total_generated(), 8);
+    }
+}

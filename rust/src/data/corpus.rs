@@ -1,0 +1,266 @@
+//! Rust port of python/compile/corpus.py — byte-for-byte identical output
+//! (pinned by artifacts/golden/corpus.json in integration tests). The
+//! coordinator generates calibration and evaluation text natively so the
+//! request path never needs Python.
+
+use crate::util::rng::Rng;
+
+pub const LETTER_FREQ: [u64; 26] = [
+    8167, 1492, 2782, 4253, 12702, 2228, 2015, 6094, 6966, 153, 772, 4025,
+    2406, 6749, 7507, 1929, 95, 5987, 6327, 9056, 2758, 978, 2360, 150,
+    1974, 74,
+];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Flavor {
+    pub name: &'static str,
+    pub vocab: u64,
+    pub alpha2: u32,
+    pub chain_mul: u64,
+    pub chain_add: u64,
+    pub base_seed: u64,
+}
+
+pub const FLAVORS: [Flavor; 3] = [
+    Flavor { name: "wiki2s", vocab: 512, alpha2: 2, chain_mul: 17, chain_add: 7, base_seed: 0x57494B49 },
+    Flavor { name: "c4s", vocab: 800, alpha2: 3, chain_mul: 29, chain_add: 11, base_seed: 0x00C40C40 },
+    Flavor { name: "ptbs", vocab: 300, alpha2: 4, chain_mul: 13, chain_add: 5, base_seed: 0x00507442 },
+];
+
+pub fn flavor(name: &str) -> Option<Flavor> {
+    FLAVORS.iter().find(|f| f.name == name).copied()
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Valid,
+    Test,
+    Calib,
+}
+
+impl Split {
+    fn offset(self) -> u64 {
+        match self {
+            Split::Train => 0,
+            Split::Valid => 1,
+            Split::Test => 2,
+            Split::Calib => 3,
+        }
+    }
+}
+
+fn cumsum(ws: &[u64]) -> (Vec<u64>, u64) {
+    let mut total = 0u64;
+    let cum = ws
+        .iter()
+        .map(|&w| {
+            total += w;
+            total
+        })
+        .collect();
+    (cum, total)
+}
+
+fn isqrt(n: u64) -> u64 {
+    if n == 0 {
+        return 0;
+    }
+    let mut x = (n as f64).sqrt() as u64;
+    // fix float rounding both ways; checked_mul treats overflow as "> n"
+    while x.checked_mul(x).map_or(true, |v| v > n) {
+        x -= 1;
+    }
+    while (x + 1).checked_mul(x + 1).is_some_and(|v| v <= n) {
+        x += 1;
+    }
+    x
+}
+
+fn zipf_weights(vocab: u64, alpha2: u32) -> Vec<u64> {
+    (1..=vocab)
+        .map(|k| {
+            let w = match alpha2 {
+                2 => 1_000_000_000 / k,
+                4 => 1_000_000_000 / (k * k),
+                _ => 1_000_000_000 / isqrt(k * k * k),
+            };
+            w.max(1)
+        })
+        .collect()
+}
+
+pub fn build_vocab(f: Flavor) -> Vec<Vec<u8>> {
+    let mut rng = Rng::new(f.base_seed ^ 0xA5A5_A5A5_A5A5_A5A5);
+    let (cum_l, tot_l) = cumsum(&LETTER_FREQ);
+    let mut words: Vec<Vec<u8>> = Vec::with_capacity(f.vocab as usize);
+    let mut seen = std::collections::HashSet::new();
+    while words.len() < f.vocab as usize {
+        let wlen = 2 + rng.below(7);
+        let w: Vec<u8> = (0..wlen)
+            .map(|_| b'a' + rng.sample_cum(&cum_l, tot_l) as u8)
+            .collect();
+        if !seen.insert(w.clone()) {
+            continue;
+        }
+        words.push(w);
+    }
+    words
+}
+
+/// Generate `nbytes` of deterministic text — identical to corpus.generate.
+pub fn generate(f: Flavor, split: Split, nbytes: usize) -> Vec<u8> {
+    let words = build_vocab(f);
+    let ws = zipf_weights(f.vocab, f.alpha2);
+    let (cum_w, tot_w) = cumsum(&ws);
+    let seed = f
+        .base_seed
+        .wrapping_mul(2_654_435_761)
+        .wrapping_add(split.offset());
+    let mut rng = Rng::new(seed);
+
+    let mut out: Vec<u8> = Vec::with_capacity(nbytes + 64);
+    let mut prev: u64 = 0;
+    while out.len() < nbytes {
+        let slen = 4 + rng.below(9);
+        for i in 0..slen {
+            if i > 0 {
+                out.push(b' ');
+            }
+            let idx = if i > 0 && rng.below(4) == 0 {
+                (prev * f.chain_mul + f.chain_add) % f.vocab
+            } else {
+                rng.sample_cum(&cum_w, tot_w) as u64
+            };
+            out.extend_from_slice(&words[idx as usize]);
+            prev = idx;
+            if i == slen - 2 && rng.below(5) == 0 {
+                out.push(b',');
+            }
+        }
+        out.extend_from_slice(b". ");
+    }
+    out.truncate(nbytes);
+    out
+}
+
+/// Task-formatted text (arithmetic + kv-recall), identical to
+/// corpus.instruct_text — used by the instruct fine-tune and the Table 4
+/// task generators.
+pub fn instruct_text(nbytes: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Rng::new(seed);
+    let mut out: Vec<u8> = Vec::with_capacity(nbytes + 64);
+    while out.len() < nbytes {
+        if rng.below(2) == 0 {
+            let a = rng.below(10);
+            let b = rng.below(10);
+            let s = a + b;
+            if s < 10 {
+                out.extend_from_slice(format!("{}+{}={}. ", a, b, s).as_bytes());
+            } else {
+                out.extend_from_slice(
+                    format!("{}+{}=1{}. ", a, b, s - 10).as_bytes(),
+                );
+            }
+        } else {
+            let nkv = 2 + rng.below(11);
+            let mut keys = Vec::new();
+            let mut vals = Vec::new();
+            for _ in 0..nkv {
+                let k = (b'a' + rng.below(26) as u8) as char;
+                let v = rng.below(10);
+                keys.push(k);
+                vals.push(v);
+                out.extend_from_slice(format!("{}={};", k, v).as_bytes());
+            }
+            let qi = rng.below(nkv) as usize;
+            let mut v = 0;
+            for (k2, v2) in keys.iter().zip(&vals) {
+                if *k2 == keys[qi] {
+                    v = *v2;
+                }
+            }
+            out.extend_from_slice(format!("{}?{}. ", keys[qi], v).as_bytes());
+        }
+    }
+    out.truncate(nbytes);
+    out
+}
+
+pub const INSTRUCT_SEED: u64 = 0x1257;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_prefix_stable() {
+        let f = flavor("wiki2s").unwrap();
+        let a = generate(f, Split::Train, 400);
+        let b = generate(f, Split::Train, 800);
+        assert_eq!(&b[..400], &a[..]);
+    }
+
+    #[test]
+    fn splits_and_flavors_differ() {
+        let f = flavor("wiki2s").unwrap();
+        assert_ne!(
+            generate(f, Split::Train, 300),
+            generate(f, Split::Valid, 300)
+        );
+        let g = flavor("c4s").unwrap();
+        assert_ne!(
+            generate(f, Split::Train, 300),
+            generate(g, Split::Train, 300)
+        );
+    }
+
+    #[test]
+    fn charset_is_clean() {
+        let f = flavor("ptbs").unwrap();
+        let text = generate(f, Split::Train, 2000);
+        assert!(text
+            .iter()
+            .all(|&b| b.is_ascii_lowercase() || b == b' ' || b == b',' || b == b'.'));
+    }
+
+    #[test]
+    fn isqrt_exact() {
+        for n in 0..2000u64 {
+            let r = isqrt(n);
+            assert!(r * r <= n && (r + 1) * (r + 1) > n, "n={}", n);
+        }
+        assert_eq!(isqrt(u64::MAX), 4294967295);
+    }
+
+    #[test]
+    fn vocab_is_unique_and_sized() {
+        let f = flavor("wiki2s").unwrap();
+        let v = build_vocab(f);
+        assert_eq!(v.len(), 512);
+        let set: std::collections::HashSet<_> = v.iter().collect();
+        assert_eq!(set.len(), 512);
+    }
+
+    #[test]
+    fn instruct_arithmetic_is_correct() {
+        let text = instruct_text(4000, INSTRUCT_SEED);
+        let s = String::from_utf8(text).unwrap();
+        for frag in s.split(". ") {
+            if frag.contains('+') && frag.contains('=') && !frag.contains(';')
+            {
+                let parts: Vec<&str> = frag.split('=').collect();
+                if parts.len() == 2 {
+                    let lhs: Vec<&str> = parts[0].split('+').collect();
+                    if let (Ok(a), Ok(b), Ok(r)) = (
+                        lhs[0].parse::<u32>(),
+                        lhs[1].parse::<u32>(),
+                        parts[1].parse::<u32>(),
+                    ) {
+                        assert_eq!(a + b, r, "bad arithmetic: {}", frag);
+                    }
+                }
+            }
+        }
+    }
+}

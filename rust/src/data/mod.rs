@@ -1,0 +1,42 @@
+//! Data substrates: the synthetic corpus (WikiText-2/C4/PTB stand-ins),
+//! evaluation-task generators, and calibration sampling (the paper uses
+//! 32-128 sequences of 2,048 tokens from C4's first shard; we sample
+//! sequences from the c4s calib split at our context length).
+
+pub mod corpus;
+pub mod tasks;
+
+use crate::data::corpus::{Flavor, Split};
+
+/// Contiguous non-overlapping sequences of `seq` bytes for evaluation.
+pub fn eval_sequences(flavor: Flavor, split: Split, seq: usize, count: usize) -> Vec<Vec<u8>> {
+    let text = corpus::generate(flavor, split, seq * count);
+    text.chunks(seq).take(count).map(|c| c.to_vec()).collect()
+}
+
+/// Calibration sequences — mirrors the paper's protocol (C4 -> c4s).
+pub fn calibration_sequences(seq: usize, count: usize) -> Vec<Vec<u8>> {
+    let f = corpus::flavor("c4s").unwrap();
+    eval_sequences(f, Split::Calib, seq, count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_sequences_shape() {
+        let f = corpus::flavor("wiki2s").unwrap();
+        let seqs = eval_sequences(f, Split::Valid, 64, 10);
+        assert_eq!(seqs.len(), 10);
+        assert!(seqs.iter().all(|s| s.len() == 64));
+    }
+
+    #[test]
+    fn calibration_differs_from_eval() {
+        let f = corpus::flavor("c4s").unwrap();
+        let calib = calibration_sequences(64, 2);
+        let eval = eval_sequences(f, Split::Valid, 64, 2);
+        assert_ne!(calib[0], eval[0]);
+    }
+}

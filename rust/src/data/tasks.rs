@@ -1,0 +1,319 @@
+//! Synthetic evaluation-task generators — the zero-shot / GSM8K /
+//! LongBench stand-ins (DESIGN.md substitution table).
+//!
+//! * Six likelihood-scored binary tasks (Table 3): the model must assign a
+//!   lower NLL to a real corpus sentence than to a corrupted variant. Each
+//!   task corrupts differently; scoring matches LM-Harness (answer
+//!   likelihood), so quantization-induced degradation shows the same way.
+//! * gsm-s (Table 4 GSM8K analogue): "a+b=" prompts, exact-match digit(s).
+//! * longbench-s (Table 4 LongBench analogue): long "k=v;" contexts, query
+//!   "k?" at the end, exact-match recall of the bound value.
+
+use crate::data::corpus::{self, Flavor, Split};
+use crate::util::rng::Rng;
+
+/// One binary likelihood comparison: model should prefer `good` over `bad`.
+#[derive(Debug, Clone)]
+pub struct PairCase {
+    pub good: Vec<u8>,
+    pub bad: Vec<u8>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PairTask {
+    /// word order shuffled (HellaSwag-ish "plausible continuation")
+    Shuffle,
+    /// random characters swapped in-place (BoolQ-ish wellformedness)
+    CharSwap,
+    /// continuation taken from a different flavor (RTE-ish entailment)
+    WrongContinuation,
+    /// a word duplicated several times (WinoGrande-ish fluency)
+    RepeatWord,
+    /// word boundaries removed in a span (Arc-e-ish)
+    JoinWords,
+    /// span replaced by uniform-random letters (Arc-c-ish)
+    RandomBytes,
+}
+
+pub const PAIR_TASKS: [PairTask; 6] = [
+    PairTask::Shuffle,
+    PairTask::CharSwap,
+    PairTask::WrongContinuation,
+    PairTask::RepeatWord,
+    PairTask::JoinWords,
+    PairTask::RandomBytes,
+];
+
+impl PairTask {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PairTask::Shuffle => "shuffle",
+            PairTask::CharSwap => "charswap",
+            PairTask::WrongContinuation => "wrongcont",
+            PairTask::RepeatWord => "repeat",
+            PairTask::JoinWords => "join",
+            PairTask::RandomBytes => "randbytes",
+        }
+    }
+}
+
+fn sentences(flavor: Flavor, split: Split, count: usize, min_len: usize) -> Vec<Vec<u8>> {
+    let text = corpus::generate(flavor, split, count * 120 + 4096);
+    let mut out = Vec::new();
+    for frag in text.split(|&b| b == b'.') {
+        let s: Vec<u8> = frag
+            .iter()
+            .copied()
+            .skip_while(|&b| b == b' ')
+            .collect();
+        if s.len() >= min_len && s.len() < 110 {
+            out.push(s);
+        }
+        if out.len() >= count {
+            break;
+        }
+    }
+    out
+}
+
+/// Build `n` cases of one pair task, deterministic per (task, seed).
+pub fn pair_cases(task: PairTask, n: usize, seed: u64) -> Vec<PairCase> {
+    let f = corpus::flavor("wiki2s").unwrap();
+    let goods = sentences(f, Split::Test, n, 24);
+    let mut rng = Rng::new(seed ^ (task as u64).wrapping_mul(0x9E37));
+    let alt_f = corpus::flavor("ptbs").unwrap();
+    let alts = sentences(alt_f, Split::Test, n, 24);
+    let mut out = Vec::with_capacity(goods.len());
+    for (ci, good) in goods.into_iter().enumerate() {
+        let bad = corrupt(&good, task, &mut rng, alts.get(ci));
+        out.push(PairCase { good, bad });
+    }
+    out
+}
+
+fn corrupt(
+    good: &[u8],
+    task: PairTask,
+    rng: &mut Rng,
+    alt: Option<&Vec<u8>>,
+) -> Vec<u8> {
+    let words: Vec<&[u8]> = good.split(|&b| b == b' ').collect();
+    match task {
+        PairTask::Shuffle => {
+            let mut idx: Vec<usize> = (0..words.len()).collect();
+            rng.shuffle(&mut idx);
+            // ensure it actually changed
+            if idx.iter().enumerate().all(|(i, &j)| i == j) {
+                idx.rotate_left(1);
+            }
+            join(&idx.iter().map(|&i| words[i]).collect::<Vec<_>>())
+        }
+        PairTask::CharSwap => {
+            let mut v = good.to_vec();
+            let swaps = (v.len() / 6).max(2);
+            for _ in 0..swaps {
+                let i = rng.below(v.len() as u64) as usize;
+                let j = rng.below(v.len() as u64) as usize;
+                v.swap(i, j);
+            }
+            v
+        }
+        PairTask::WrongContinuation => {
+            let half = words.len() / 2;
+            let mut keep: Vec<&[u8]> = words[..half.max(1)].to_vec();
+            if let Some(a) = alt {
+                let awords: Vec<&[u8]> = a.split(|&b| b == b' ').collect();
+                keep.extend(awords.iter().take(words.len() - keep.len()));
+            } else {
+                keep.extend(words.iter().rev().take(words.len() - keep.len()));
+            }
+            join(&keep)
+        }
+        PairTask::RepeatWord => {
+            let wi = rng.below(words.len() as u64) as usize;
+            let mut v: Vec<&[u8]> = Vec::new();
+            for (i, w) in words.iter().enumerate() {
+                v.push(w);
+                if i == wi {
+                    v.push(w);
+                    v.push(w);
+                    v.push(w);
+                }
+            }
+            join(&v)
+        }
+        PairTask::JoinWords => {
+            good.iter().copied().filter(|&b| b != b' ').collect()
+        }
+        PairTask::RandomBytes => {
+            let mut v = good.to_vec();
+            let start = v.len() / 3;
+            let end = (2 * v.len() / 3).min(v.len());
+            for b in &mut v[start..end] {
+                *b = b'a' + rng.below(26) as u8;
+            }
+            v
+        }
+    }
+}
+
+fn join(words: &[&[u8]]) -> Vec<u8> {
+    let mut out = Vec::new();
+    for (i, w) in words.iter().enumerate() {
+        if i > 0 {
+            out.push(b' ');
+        }
+        out.extend_from_slice(w);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// gsm-s: arithmetic exact-match generation task
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct GenCase {
+    /// prompt ends right before the answer digits
+    pub prompt: Vec<u8>,
+    /// expected generated prefix
+    pub answer: Vec<u8>,
+}
+
+pub fn gsm_cases(n: usize, seed: u64) -> Vec<GenCase> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        // few-shot style context of solved examples, then the query
+        let mut prompt = Vec::new();
+        for _ in 0..3 {
+            let a = rng.below(10);
+            let b = rng.below(10);
+            prompt.extend_from_slice(fmt_sum(a, b).as_bytes());
+        }
+        let a = rng.below(10);
+        let b = rng.below(10);
+        prompt.extend_from_slice(format!("{}+{}=", a, b).as_bytes());
+        let s = a + b;
+        let answer = if s < 10 {
+            format!("{}", s)
+        } else {
+            format!("1{}", s - 10)
+        };
+        out.push(GenCase { prompt, answer: answer.into_bytes() });
+    }
+    out
+}
+
+fn fmt_sum(a: u64, b: u64) -> String {
+    let s = a + b;
+    if s < 10 {
+        format!("{}+{}={}. ", a, b, s)
+    } else {
+        format!("{}+{}=1{}. ", a, b, s - 10)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// longbench-s: long-context key-value recall
+// ---------------------------------------------------------------------------
+
+pub fn longbench_cases(n: usize, ctx_bindings: usize, seed: u64) -> Vec<GenCase> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut prompt = Vec::new();
+        let mut keys = Vec::new();
+        let mut vals = Vec::new();
+        for _ in 0..ctx_bindings {
+            let k = (b'a' + rng.below(26) as u8) as char;
+            let v = rng.below(10);
+            keys.push(k);
+            vals.push(v);
+            prompt.extend_from_slice(format!("{}={};", k, v).as_bytes());
+        }
+        let qi = rng.below(ctx_bindings as u64) as usize;
+        // last binding wins (matches corpus::instruct_text semantics)
+        let mut v = 0;
+        for (k2, v2) in keys.iter().zip(&vals) {
+            if *k2 == keys[qi] {
+                v = *v2;
+            }
+        }
+        prompt.extend_from_slice(format!("{}?", keys[qi]).as_bytes());
+        out.push(GenCase {
+            prompt,
+            answer: format!("{}", v).into_bytes(),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_cases_all_tasks_nonempty_and_distinct() {
+        for task in PAIR_TASKS {
+            let cases = pair_cases(task, 10, 1);
+            assert!(cases.len() >= 8, "{:?}", task);
+            for c in &cases {
+                assert_ne!(c.good, c.bad, "{:?} produced identical pair", task);
+                assert!(!c.good.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn pair_cases_deterministic() {
+        let a = pair_cases(PairTask::Shuffle, 5, 9);
+        let b = pair_cases(PairTask::Shuffle, 5, 9);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.bad, y.bad);
+        }
+    }
+
+    #[test]
+    fn gsm_answers_are_correct() {
+        for c in gsm_cases(50, 3) {
+            let s = String::from_utf8(c.prompt.clone()).unwrap();
+            let q = s.rsplit(". ").next().unwrap();
+            let lhs = q.trim_end_matches('=');
+            let parts: Vec<&str> = lhs.split('+').collect();
+            let a: u32 = parts[0].parse().unwrap();
+            let b: u32 = parts[1].parse().unwrap();
+            let ans: u32 =
+                String::from_utf8(c.answer.clone()).unwrap().parse().unwrap();
+            assert_eq!(a + b, ans);
+        }
+    }
+
+    #[test]
+    fn longbench_recalls_last_binding() {
+        for c in longbench_cases(30, 12, 5) {
+            let s = String::from_utf8(c.prompt.clone()).unwrap();
+            let q = s.chars().rev().nth(1).unwrap(); // "<k>?"
+            let mut expect = None;
+            for b in s.split(';') {
+                if let Some((k, v)) = b.split_once('=') {
+                    if k.chars().next() == Some(q) {
+                        expect = Some(v.to_string());
+                    }
+                }
+            }
+            assert_eq!(
+                expect.unwrap(),
+                String::from_utf8(c.answer.clone()).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn longbench_prompt_length_scales() {
+        let short = longbench_cases(1, 4, 1)[0].prompt.len();
+        let long = longbench_cases(1, 24, 1)[0].prompt.len();
+        assert!(long > 4 * short / 2);
+    }
+}

@@ -1,0 +1,152 @@
+//! Evaluation harness: perplexity (Tables 2/5/8/9/10), likelihood-scored
+//! zero-shot tasks (Table 3), and generation-based tasks (Table 4).
+//!
+//! Perplexity runs through either the AOT `nll_fp32_*` HLO graph (one graph
+//! per architecture; reconstructed weights are passed as arguments, so a
+//! single artifact serves every quantization method) or the native forward
+//! fallback. Both paths are cross-checked in integration tests.
+
+pub mod tasks;
+
+use crate::data::corpus::{Flavor, Split};
+use crate::model::forward::{self, Weights};
+use crate::model::{ModelConfig, QuantizedModel, WeightStore};
+use crate::runtime::{HostTensor, Runtime};
+
+/// The fixed NLL-graph batch geometry (must match aot.py).
+pub const NLL_BATCH: usize = 8;
+pub const NLL_SEQ: usize = 128;
+
+/// Weight tensors in canonical param order, with quantized linears
+/// reconstructed to dense f32 — the argument list of `nll_fp32_*`.
+pub fn weight_tensors_fp32(
+    cfg: &ModelConfig,
+    store: &WeightStore,
+    qm: Option<&QuantizedModel>,
+) -> Vec<HostTensor> {
+    let quant_names: std::collections::BTreeSet<String> = cfg
+        .linear_shapes()
+        .into_iter()
+        .map(|(n, _, _)| n)
+        .collect();
+    cfg.param_spec()
+        .into_iter()
+        .map(|(name, shape)| {
+            let data = if quant_names.contains(&name) {
+                match qm {
+                    Some(q) => q.dense_linear(&name).data,
+                    None => store.get(&name).data.clone(),
+                }
+            } else {
+                store.get(&name).data.clone()
+            };
+            HostTensor::F32(shape, data)
+        })
+        .collect()
+}
+
+/// A perplexity engine: sums NLL over fixed-size batches.
+pub enum PplEngine<'a> {
+    Native(Weights<'a>),
+    Hlo {
+        rt: &'a Runtime,
+        graph: String,
+        weights: Vec<HostTensor>,
+    },
+}
+
+impl<'a> PplEngine<'a> {
+    /// HLO engine for a model; graph name comes from the base config.
+    pub fn hlo(
+        rt: &'a Runtime,
+        model_name: &str,
+        store: &WeightStore,
+        qm: Option<&QuantizedModel>,
+    ) -> Result<PplEngine<'a>, String> {
+        let entry = rt
+            .manifest
+            .models
+            .get(model_name)
+            .ok_or_else(|| format!("model {} not in manifest", model_name))?;
+        let graph = format!("nll_fp32_{}", entry.base_config);
+        if !rt.has_graph(&graph) {
+            return Err(format!("graph {} missing", graph));
+        }
+        let weights = weight_tensors_fp32(&entry.config, store, qm);
+        Ok(PplEngine::Hlo { rt, graph, weights })
+    }
+
+    /// NLL sum over one batch of NLL_BATCH x NLL_SEQ tokens.
+    pub fn nll_batch(&self, tokens: &[Vec<i32>]) -> Result<f64, String> {
+        match self {
+            PplEngine::Native(w) => Ok(forward::nll_sum(w, tokens)),
+            PplEngine::Hlo { rt, graph, weights } => {
+                assert_eq!(tokens.len(), NLL_BATCH);
+                let flat: Vec<i32> =
+                    tokens.iter().flat_map(|t| t.iter().copied()).collect();
+                let mut inputs =
+                    vec![HostTensor::I32(vec![NLL_BATCH, NLL_SEQ], flat)];
+                inputs.extend(weights.iter().cloned());
+                let out = rt.run(graph, &inputs)?;
+                Ok(out[0].scalar_f32() as f64)
+            }
+        }
+    }
+}
+
+/// Perplexity over `n_batches` batches of a corpus split.
+pub fn perplexity(
+    engine: &PplEngine,
+    flavor: Flavor,
+    split: Split,
+    n_batches: usize,
+) -> Result<f64, String> {
+    let seqs = crate::data::eval_sequences(
+        flavor,
+        split,
+        NLL_SEQ,
+        n_batches * NLL_BATCH,
+    );
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for chunk in seqs.chunks(NLL_BATCH) {
+        let tokens: Vec<Vec<i32>> = chunk
+            .iter()
+            .map(|s| s.iter().map(|&b| b as i32).collect())
+            .collect();
+        total += engine.nll_batch(&tokens)?;
+        count += tokens.len() * (NLL_SEQ - 1);
+    }
+    Ok((total / count as f64).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus;
+
+    #[test]
+    fn native_ppl_of_random_model_near_vocab() {
+        // an untrained model is ~uniform over 256 bytes, but the corpus
+        // uses ~29 distinct bytes; ppl must be >> trained-model ppl and
+        // <= vocab size-ish
+        let cfg = ModelConfig::builtin("opt-micro").unwrap();
+        let store = WeightStore::random("r", cfg, 5);
+        let eng = PplEngine::Native(Weights::Fp(&store));
+        let f = corpus::flavor("wiki2s").unwrap();
+        let ppl = perplexity(&eng, f, Split::Valid, 1).unwrap();
+        assert!(ppl > 20.0 && ppl < 2000.0, "ppl {}", ppl);
+    }
+
+    #[test]
+    fn weight_tensors_order_matches_spec() {
+        let cfg = ModelConfig::builtin("opt-micro").unwrap();
+        let store = WeightStore::random("r", cfg, 6);
+        let ts = weight_tensors_fp32(&cfg, &store, None);
+        let spec = cfg.param_spec();
+        assert_eq!(ts.len(), spec.len());
+        for (t, (_, shape)) in ts.iter().zip(&spec) {
+            assert_eq!(t.dims(), &shape[..]);
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! Task evaluation: likelihood-scored binary tasks (Table 3) and
+//! generation/exact-match tasks (Table 4: gsm-s, longbench-s).
+
+use crate::data::tasks::{GenCase, PairCase};
+use crate::model::forward::{self, Weights};
+
+/// Length-normalized NLL of one variable-length sequence (native path;
+/// the HLO nll graph has fixed geometry, tasks need arbitrary lengths).
+pub fn seq_nll_per_byte(w: &Weights, text: &[u8]) -> f64 {
+    let toks: Vec<i32> = text.iter().map(|&b| b as i32).collect();
+    if toks.len() < 2 {
+        return 0.0;
+    }
+    forward::nll_sum(w, &[toks.clone()]) / (toks.len() - 1) as f64
+}
+
+/// Accuracy of one pair task: fraction of cases where the model assigns a
+/// lower per-byte NLL to the real sentence (LM-Harness-style likelihood
+/// comparison; length-normalized because corruptions change length).
+pub fn pair_accuracy(w: &Weights, cases: &[PairCase]) -> f64 {
+    if cases.is_empty() {
+        return 0.0;
+    }
+    let mut correct = 0usize;
+    for c in cases {
+        let n_good = seq_nll_per_byte(w, &c.good);
+        let n_bad = seq_nll_per_byte(w, &c.bad);
+        if n_good < n_bad {
+            correct += 1;
+        }
+    }
+    correct as f64 / cases.len() as f64
+}
+
+/// Run all six pair tasks; returns (task name, accuracy %) rows + mean.
+pub fn zero_shot_suite(
+    w: &Weights,
+    cases_per_task: usize,
+    seed: u64,
+) -> (Vec<(String, f64)>, f64) {
+    let mut rows = Vec::new();
+    let mut sum = 0.0;
+    for task in crate::data::tasks::PAIR_TASKS {
+        let cases =
+            crate::data::tasks::pair_cases(task, cases_per_task, seed);
+        let acc = 100.0 * pair_accuracy(w, &cases);
+        sum += acc;
+        rows.push((task.name().to_string(), acc));
+    }
+    let mean = sum / rows.len() as f64;
+    (rows, mean)
+}
+
+/// Exact-match accuracy on generation cases (greedy decode, native path).
+/// The prompt is truncated from the left to fit the context window —
+/// mirrors how long-context evaluation clips inputs.
+pub fn exact_match(w: &Weights, cases: &[GenCase]) -> f64 {
+    let cfg = w.store().cfg;
+    if cases.is_empty() {
+        return 0.0;
+    }
+    let mut correct = 0usize;
+    for c in cases {
+        let start = c.prompt.len().saturating_sub(cfg.ctx - c.answer.len() - 1);
+        let toks: Vec<i32> =
+            c.prompt[start..].iter().map(|&b| b as i32).collect();
+        let out = forward::generate_greedy(w, &toks, c.answer.len());
+        let got: Vec<u8> = out.iter().map(|&t| t as u8).collect();
+        if got == c.answer {
+            correct += 1;
+        }
+    }
+    correct as f64 / cases.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::{self, PairTask};
+    use crate::model::{ModelConfig, WeightStore};
+
+    #[test]
+    fn random_model_near_chance_on_pairs() {
+        let cfg = ModelConfig::builtin("opt-micro").unwrap();
+        let store = WeightStore::random("r", cfg, 7);
+        let w = Weights::Fp(&store);
+        let cases = tasks::pair_cases(PairTask::Shuffle, 12, 3);
+        let acc = pair_accuracy(&w, &cases);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn exact_match_zero_for_random_model() {
+        let cfg = ModelConfig::builtin("opt-micro").unwrap();
+        let store = WeightStore::random("r", cfg, 8);
+        let w = Weights::Fp(&store);
+        let cases = tasks::gsm_cases(5, 1);
+        let acc = exact_match(&w, &cases);
+        assert!(acc <= 0.4); // random bytes ~never match digits
+    }
+
+    #[test]
+    fn long_prompt_is_clipped_not_panicking() {
+        let cfg = ModelConfig::builtin("opt-micro").unwrap();
+        let store = WeightStore::random("r", cfg, 9);
+        let w = Weights::Fp(&store);
+        let cases = tasks::longbench_cases(2, 60, 2); // prompt > ctx
+        let _ = exact_match(&w, &cases); // must not panic
+    }
+}

@@ -1,0 +1,27 @@
+//! # ganq — GPU-Adaptive Non-Uniform Quantization for LLMs
+//!
+//! A from-scratch reproduction of *GANQ* (Zhao & Yuan, ICML 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** (python, build-time): Pallas kernels for LUT-based mpGEMM and
+//!   the GANQ back-substitution step.
+//! * **L2** (python, build-time): the JAX transformer + GANQ solver graph,
+//!   AOT-lowered to HLO text artifacts.
+//! * **L3** (this crate): the coordinator — PJRT runtime, layer-wise PTQ
+//!   pipeline (GANQ + every baseline), serving with continuous batching,
+//!   evaluation harness, and the bench suite regenerating the paper's
+//!   tables.
+//!
+//! See DESIGN.md for the system inventory and experiment index.
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod sparse;
+pub mod tensor;
+pub mod tokenizer;
+pub mod util;

@@ -1,0 +1,455 @@
+//! Native CPU forward path — numerically mirrors python/compile/model.py
+//! (layer_norm eps, tanh-GELU, attention scaling, tied head). Used for:
+//! calibration capture (per-linear input activations -> Gram matrices),
+//! evaluation fallback when HLO artifacts are absent, task scoring on
+//! variable-length sequences, and cross-validation of the HLO path
+//! (tests/golden.rs pins both against the python fixture).
+
+use crate::model::{LayerWeights, ModelConfig, QuantizedModel, WeightStore};
+use crate::tensor::{self, Mat};
+
+/// Who provides the six quantizable linears.
+pub enum Weights<'a> {
+    Fp(&'a WeightStore),
+    Quant(&'a QuantizedModel),
+}
+
+impl<'a> Weights<'a> {
+    pub fn store(&self) -> &WeightStore {
+        match self {
+            Weights::Fp(s) => s,
+            Weights::Quant(q) => &q.base,
+        }
+    }
+
+    /// y = x @ W^T for the named quantizable linear (bias added by caller).
+    fn linear(&self, name: &str, x: &Mat) -> Mat {
+        match self {
+            Weights::Fp(s) => x.matmul_tb(&s.mat(name)),
+            Weights::Quant(q) => match q.linears.get(name) {
+                Some(LayerWeights::Dense(w)) => x.matmul_tb(w),
+                Some(LayerWeights::Lut(l)) => l.lut_matmul(x),
+                Some(LayerWeights::LutSparse(l, sp)) => {
+                    let mut y = l.lut_matmul(x);
+                    sp.spmm_add(x, &mut y);
+                    y
+                }
+                None => x.matmul_tb(&q.base.mat(name)),
+            },
+        }
+    }
+}
+
+pub fn layer_norm_rows(x: &mut Mat, g: &[f32], b: &[f32]) {
+    let d = x.cols;
+    for row in x.data.chunks_mut(d) {
+        let mu: f32 = row.iter().sum::<f32>() / d as f32;
+        let var: f32 =
+            row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for (v, (&gi, &bi)) in row.iter_mut().zip(g.iter().zip(b)) {
+            *v = (*v - mu) * inv * gi + bi;
+        }
+    }
+}
+
+pub fn gelu_tanh(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        let x3 = *v * *v * *v;
+        *v = 0.5 * *v * (1.0 + (0.7978845608 * (*v + 0.044715 * x3)).tanh());
+    }
+}
+
+fn add_bias(x: &mut Mat, b: &[f32]) {
+    for row in x.data.chunks_mut(b.len()) {
+        for (v, &bi) in row.iter_mut().zip(b) {
+            *v += bi;
+        }
+    }
+}
+
+/// Optional calibration observer: called with (linear_name, input [p, n]).
+pub type Observer<'o> = &'o mut dyn FnMut(&str, &Mat);
+
+/// Full causal forward over a batch of equal-length sequences.
+/// tokens: B x S. Returns logits [(B*S), vocab].
+pub fn forward_full(
+    w: &Weights,
+    tokens: &[Vec<i32>],
+    mut observer: Option<Observer>,
+) -> Mat {
+    let store = w.store();
+    let cfg = store.cfg;
+    let bsz = tokens.len();
+    let s_len = tokens[0].len();
+    assert!(tokens.iter().all(|t| t.len() == s_len));
+    assert!(s_len <= cfg.ctx);
+    let d = cfg.d;
+    let tok_emb = store.get("tok_emb");
+    let pos_emb = store.get("pos_emb");
+
+    let mut x = Mat::zeros(bsz * s_len, d);
+    for (b, seq) in tokens.iter().enumerate() {
+        for (s, &t) in seq.iter().enumerate() {
+            let row = x.row_mut(b * s_len + s);
+            let te = &tok_emb.data[(t as usize) * d..(t as usize + 1) * d];
+            let pe = &pos_emb.data[s * d..(s + 1) * d];
+            for (o, (&a, &b2)) in row.iter_mut().zip(te.iter().zip(pe)) {
+                *o = a + b2;
+            }
+        }
+    }
+
+    for li in 0..cfg.layers {
+        let p = format!("l{}.", li);
+        x = block_full(w, &p, x, cfg, bsz, s_len, &mut observer);
+    }
+    layer_norm_rows(&mut x, store.vec("ln_f_g"), store.vec("ln_f_b"));
+    // tied head: logits = x @ tok_emb^T
+    let emb = tok_emb.as_mat();
+    x.matmul_tb(&emb)
+}
+
+fn block_full(
+    w: &Weights,
+    p: &str,
+    mut x: Mat,
+    cfg: ModelConfig,
+    bsz: usize,
+    s_len: usize,
+    observer: &mut Option<Observer>,
+) -> Mat {
+    let store = w.store();
+    let d = cfg.d;
+    let h = cfg.heads;
+    let hd = cfg.head_dim();
+    let scale = 1.0 / (hd as f32).sqrt();
+
+    let mut a = x.clone();
+    layer_norm_rows(
+        &mut a,
+        store.vec(&format!("{}ln1_g", p)),
+        store.vec(&format!("{}ln1_b", p)),
+    );
+    let mut lin = |name: &str, inp: &Mat, bias: &str| -> Mat {
+        let full = format!("{}{}", p, name);
+        if let Some(obs) = observer.as_mut() {
+            obs(&full, inp);
+        }
+        let mut y = w.linear(&full, inp);
+        add_bias(&mut y, store.vec(&format!("{}{}", p, bias)));
+        y
+    };
+    let q = lin("wq", &a, "bq");
+    let k = lin("wk", &a, "bk");
+    let v = lin("wv", &a, "bv");
+
+    // attention per (batch, head)
+    let mut o = Mat::zeros(bsz * s_len, d);
+    let mut scores = vec![0.0f32; s_len];
+    for b in 0..bsz {
+        for hi in 0..h {
+            for si in 0..s_len {
+                let qrow = &q.row(b * s_len + si)[hi * hd..(hi + 1) * hd];
+                for (sj, sc) in scores.iter_mut().enumerate().take(si + 1) {
+                    let krow =
+                        &k.row(b * s_len + sj)[hi * hd..(hi + 1) * hd];
+                    *sc = tensor::dot(qrow, krow) * scale;
+                }
+                tensor::softmax(&mut scores[..si + 1]);
+                let orow =
+                    &mut o.row_mut(b * s_len + si)[hi * hd..(hi + 1) * hd];
+                for (sj, &w_att) in scores.iter().enumerate().take(si + 1) {
+                    let vrow =
+                        &v.row(b * s_len + sj)[hi * hd..(hi + 1) * hd];
+                    for (ov, &vv) in orow.iter_mut().zip(vrow) {
+                        *ov += w_att * vv;
+                    }
+                }
+            }
+        }
+    }
+    let attn_out = lin("wo", &o, "bo");
+    x.add_assign(&attn_out);
+
+    let mut m = x.clone();
+    layer_norm_rows(
+        &mut m,
+        store.vec(&format!("{}ln2_g", p)),
+        store.vec(&format!("{}ln2_b", p)),
+    );
+    let mut h1 = lin("w1", &m, "b1");
+    gelu_tanh(&mut h1.data);
+    let h2 = lin("w2", &h1, "b2");
+    x.add_assign(&h2);
+    x
+}
+
+/// Sum of next-token NLLs over a batch (matches python nll_sum).
+pub fn nll_sum(w: &Weights, tokens: &[Vec<i32>]) -> f64 {
+    let logits = forward_full(w, tokens, None);
+    let s_len = tokens[0].len();
+    let vocab = w.store().cfg.vocab;
+    let mut total = 0.0f64;
+    for (b, seq) in tokens.iter().enumerate() {
+        for s in 0..s_len - 1 {
+            let row = &logits.row(b * s_len + s)[..vocab];
+            total -=
+                tensor::log_softmax_at(row, seq[s + 1] as usize) as f64;
+        }
+    }
+    total
+}
+
+// ---------------------------------------------------------------------------
+// KV-cache decode (native serving fallback + generation-based evals)
+// ---------------------------------------------------------------------------
+
+/// Per-sequence KV cache for the native path.
+pub struct KvCache {
+    cfg: ModelConfig,
+    /// [layers][heads][ctx][hd], flattened
+    k: Vec<f32>,
+    v: Vec<f32>,
+    pub len: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: ModelConfig) -> KvCache {
+        let sz = cfg.layers * cfg.heads * cfg.ctx * cfg.head_dim();
+        KvCache { cfg, k: vec![0.0; sz], v: vec![0.0; sz], len: 0 }
+    }
+
+    fn idx(&self, li: usize, hi: usize, pos: usize) -> usize {
+        let hd = self.cfg.head_dim();
+        ((li * self.cfg.heads + hi) * self.cfg.ctx + pos) * hd
+    }
+}
+
+/// One decode step for a single sequence; appends to the cache.
+/// Returns the logits row [vocab].
+pub fn decode_step(w: &Weights, tok: i32, cache: &mut KvCache) -> Vec<f32> {
+    let store = w.store();
+    let cfg = store.cfg;
+    let d = cfg.d;
+    let h = cfg.heads;
+    let hd = cfg.head_dim();
+    let pos = cache.len;
+    assert!(pos < cfg.ctx, "context overflow");
+    let scale = 1.0 / (hd as f32).sqrt();
+
+    let mut x = Mat::zeros(1, d);
+    {
+        let te = &store.get("tok_emb").data
+            [(tok as usize) * d..(tok as usize + 1) * d];
+        let pe = &store.get("pos_emb").data[pos * d..(pos + 1) * d];
+        for (o, (&a, &b)) in x.row_mut(0).iter_mut().zip(te.iter().zip(pe)) {
+            *o = a + b;
+        }
+    }
+
+    for li in 0..cfg.layers {
+        let p = format!("l{}.", li);
+        let mut a = x.clone();
+        layer_norm_rows(
+            &mut a,
+            store.vec(&format!("{}ln1_g", p)),
+            store.vec(&format!("{}ln1_b", p)),
+        );
+        let lin = |name: &str, inp: &Mat, bias: &str| -> Mat {
+            let mut y = w.linear(&format!("{}{}", p, name), inp);
+            add_bias(&mut y, store.vec(&format!("{}{}", p, bias)));
+            y
+        };
+        let q = lin("wq", &a, "bq");
+        let k = lin("wk", &a, "bk");
+        let v = lin("wv", &a, "bv");
+        // write cache at pos
+        for hi in 0..h {
+            let base = cache.idx(li, hi, pos);
+            cache.k[base..base + hd]
+                .copy_from_slice(&k.row(0)[hi * hd..(hi + 1) * hd]);
+            cache.v[base..base + hd]
+                .copy_from_slice(&v.row(0)[hi * hd..(hi + 1) * hd]);
+        }
+        // attend over 0..=pos
+        let mut o = Mat::zeros(1, d);
+        let mut scores = vec![0.0f32; pos + 1];
+        for hi in 0..h {
+            let qrow = &q.row(0)[hi * hd..(hi + 1) * hd];
+            for (sj, sc) in scores.iter_mut().enumerate() {
+                let base = cache.idx(li, hi, sj);
+                *sc = tensor::dot(qrow, &cache.k[base..base + hd]) * scale;
+            }
+            tensor::softmax(&mut scores);
+            let orow = &mut o.row_mut(0)[hi * hd..(hi + 1) * hd];
+            for (sj, &w_att) in scores.iter().enumerate() {
+                let base = cache.idx(li, hi, sj);
+                let vrow = &cache.v[base..base + hd];
+                for (ov, &vv) in orow.iter_mut().zip(vrow) {
+                    *ov += w_att * vv;
+                }
+            }
+        }
+        let attn_out = lin("wo", &o, "bo");
+        x.add_assign(&attn_out);
+        let mut m = x.clone();
+        layer_norm_rows(
+            &mut m,
+            store.vec(&format!("{}ln2_g", p)),
+            store.vec(&format!("{}ln2_b", p)),
+        );
+        let mut h1 = lin("w1", &m, "b1");
+        gelu_tanh(&mut h1.data);
+        let h2 = lin("w2", &h1, "b2");
+        x.add_assign(&h2);
+    }
+    cache.len = pos + 1;
+    layer_norm_rows(&mut x, store.vec("ln_f_g"), store.vec("ln_f_b"));
+    let emb = store.get("tok_emb").as_mat();
+    let logits = x.matmul_tb(&emb);
+    logits.data
+}
+
+/// Greedy generation with the native path.
+pub fn generate_greedy(
+    w: &Weights,
+    prompt: &[i32],
+    max_new: usize,
+) -> Vec<i32> {
+    let cfg = w.store().cfg;
+    let mut cache = KvCache::new(cfg);
+    let mut logits = Vec::new();
+    for &t in prompt {
+        logits = decode_step(w, t, &mut cache);
+    }
+    let mut out = Vec::with_capacity(max_new);
+    for _ in 0..max_new {
+        if cache.len >= cfg.ctx {
+            break;
+        }
+        let next = argmax(&logits) as i32;
+        out.push(next);
+        logits = decode_step(w, next, &mut cache);
+    }
+    out
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::WeightStore;
+    use crate::util::prop;
+
+    fn micro() -> WeightStore {
+        let cfg = ModelConfig::builtin("opt-micro").unwrap();
+        WeightStore::random("t", cfg, 11)
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let s = micro();
+        let toks = vec![vec![1, 2, 3, 4, 5], vec![9, 8, 7, 6, 5]];
+        let logits = forward_full(&Weights::Fp(&s), &toks, None);
+        assert_eq!(logits.rows, 10);
+        assert_eq!(logits.cols, 256);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn decode_matches_full_forward() {
+        let s = micro();
+        let w = Weights::Fp(&s);
+        let seq: Vec<i32> = vec![10, 65, 97, 32, 101, 120, 5];
+        let logits_full = forward_full(&w, &[seq.clone()], None);
+        let mut cache = KvCache::new(s.cfg);
+        let mut last = Vec::new();
+        for &t in &seq {
+            last = decode_step(&w, t, &mut cache);
+        }
+        let expect = logits_full.row(seq.len() - 1);
+        assert!(
+            prop::all_close(&last, expect, 1e-3, 1e-3),
+            "maxdiff {}",
+            prop::max_abs_diff(&last, expect)
+        );
+    }
+
+    #[test]
+    fn nll_positive_and_batch_additive() {
+        let s = micro();
+        let w = Weights::Fp(&s);
+        let a = vec![vec![1, 2, 3, 4]];
+        let b = vec![vec![5, 6, 7, 8]];
+        let both = vec![a[0].clone(), b[0].clone()];
+        let n_a = nll_sum(&w, &a);
+        let n_b = nll_sum(&w, &b);
+        let n_ab = nll_sum(&w, &both);
+        assert!(n_a > 0.0 && n_b > 0.0);
+        assert!(
+            prop::close(n_ab, n_a + n_b, 1e-4, 1e-3),
+            "{} vs {}",
+            n_ab,
+            n_a + n_b
+        );
+    }
+
+    #[test]
+    fn observer_sees_every_linear() {
+        let s = micro();
+        let mut seen = std::collections::BTreeSet::new();
+        let mut obs = |name: &str, x: &Mat| {
+            assert!(x.rows > 0);
+            seen.insert(name.to_string());
+        };
+        forward_full(&Weights::Fp(&s), &[vec![1, 2, 3]], Some(&mut obs));
+        assert_eq!(seen.len(), s.cfg.layers * 6);
+        assert!(seen.contains("l0.wq") && seen.contains("l1.w2"));
+    }
+
+    #[test]
+    fn generate_respects_ctx() {
+        let s = micro();
+        let w = Weights::Fp(&s);
+        let prompt: Vec<i32> = (0..120).map(|i| i % 256).collect();
+        let out = generate_greedy(&w, &prompt, 50);
+        assert!(out.len() <= s.cfg.ctx - prompt.len());
+    }
+
+    #[test]
+    fn quantized_identity_matches_fp() {
+        // a QuantizedModel whose linears are the exact FP weights must give
+        // identical logits
+        let s = micro();
+        let mut linears = std::collections::BTreeMap::new();
+        for (name, _m, _n) in s.cfg.linear_shapes() {
+            linears.insert(
+                name.clone(),
+                crate::model::LayerWeights::Dense(s.mat(&name)),
+            );
+        }
+        let qm = crate::model::QuantizedModel {
+            base: s.clone(),
+            method: "identity".into(),
+            bits: 16,
+            linears,
+            weight_bits: 0,
+        };
+        let toks = vec![vec![3, 1, 4, 1, 5]];
+        let l1 = forward_full(&Weights::Fp(&s), &toks, None);
+        let l2 = forward_full(&Weights::Quant(&qm), &toks, None);
+        assert!(prop::all_close(&l1.data, &l2.data, 1e-5, 1e-5));
+    }
+}

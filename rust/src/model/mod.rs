@@ -1,0 +1,306 @@
+//! Model substrate: configs (mirroring python/compile/model.py CONFIGS),
+//! the FP32 weight store loaded from `artifacts/weights/`, quantized
+//! stores, and storage accounting (Table 1).
+
+pub mod forward;
+pub mod storage;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::quant::{LutLayer, QuantResult};
+use crate::sparse::Csr;
+use crate::tensor::Mat;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub d: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ff: usize,
+    pub ctx: usize,
+    pub vocab: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d / self.heads
+    }
+
+    pub fn from_json(j: &Json) -> Option<ModelConfig> {
+        Some(ModelConfig {
+            d: j.get("d")?.as_usize()?,
+            layers: j.get("layers")?.as_usize()?,
+            heads: j.get("heads")?.as_usize()?,
+            ff: j.get("ff")?.as_usize()?,
+            ctx: j.get("ctx")?.as_usize()?,
+            vocab: j.get("vocab")?.as_usize()?,
+        })
+    }
+
+    /// Built-in fallback configs (match python CONFIGS) so unit tests run
+    /// without artifacts.
+    pub fn builtin(name: &str) -> Option<ModelConfig> {
+        let (d, layers, heads, ff) = match name {
+            "opt-micro" => (64, 2, 2, 256),
+            "opt-mini" | "opt-mini-instruct" => (96, 3, 4, 384),
+            "opt-small" | "opt-small-instruct" => (128, 4, 4, 512),
+            "opt-med" => (192, 6, 6, 768),
+            _ => return None,
+        };
+        Some(ModelConfig { d, layers, heads, ff, ctx: 128, vocab: 256 })
+    }
+
+    /// The six quantizable linears per layer, canonical order — mirrors
+    /// python model.linear_shapes.
+    pub fn linear_shapes(&self) -> Vec<(String, usize, usize)> {
+        let mut out = Vec::new();
+        for li in 0..self.layers {
+            for nm in ["wq", "wk", "wv", "wo"] {
+                out.push((format!("l{}.{}", li, nm), self.d, self.d));
+            }
+            out.push((format!("l{}.w1", li), self.ff, self.d));
+            out.push((format!("l{}.w2", li), self.d, self.ff));
+        }
+        out
+    }
+
+    /// Canonical FP32 param spec (name, shape) — mirrors python
+    /// model.param_spec; the AOT graphs consume weights in this order.
+    pub fn param_spec(&self) -> Vec<(String, Vec<usize>)> {
+        let d = self.d;
+        let ff = self.ff;
+        let mut spec: Vec<(String, Vec<usize>)> = vec![
+            ("tok_emb".into(), vec![self.vocab, d]),
+            ("pos_emb".into(), vec![self.ctx, d]),
+        ];
+        for li in 0..self.layers {
+            let p = format!("l{}.", li);
+            let mut push = |nm: &str, sh: Vec<usize>| {
+                spec.push((format!("{}{}", p, nm), sh));
+            };
+            push("ln1_g", vec![d]);
+            push("ln1_b", vec![d]);
+            push("wq", vec![d, d]);
+            push("bq", vec![d]);
+            push("wk", vec![d, d]);
+            push("bk", vec![d]);
+            push("wv", vec![d, d]);
+            push("bv", vec![d]);
+            push("wo", vec![d, d]);
+            push("bo", vec![d]);
+            push("ln2_g", vec![d]);
+            push("ln2_b", vec![d]);
+            push("w1", vec![ff, d]);
+            push("b1", vec![ff]);
+            push("w2", vec![d, ff]);
+            push("b2", vec![d]);
+        }
+        spec.push(("ln_f_g".into(), vec![d]));
+        spec.push(("ln_f_b".into(), vec![d]));
+        spec
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.param_spec().iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+}
+
+/// A named tensor (row-major f32).
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn as_mat(&self) -> Mat {
+        assert_eq!(self.shape.len(), 2, "not a matrix: {:?}", self.shape);
+        Mat::from_vec(self.shape[0], self.shape[1], self.data.clone())
+    }
+}
+
+/// FP32 weight store for one model.
+#[derive(Debug, Clone)]
+pub struct WeightStore {
+    pub name: String,
+    pub cfg: ModelConfig,
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl WeightStore {
+    /// Load from artifacts/weights/<model>/ (weights.json + weights.bin).
+    pub fn load(artifacts: &Path, name: &str, cfg: ModelConfig) -> Result<WeightStore, String> {
+        let dir = artifacts.join("weights").join(name);
+        let idx_txt = std::fs::read_to_string(dir.join("weights.json"))
+            .map_err(|e| format!("read weights.json: {}", e))?;
+        let idx = Json::parse(&idx_txt)?;
+        let raw = std::fs::read(dir.join("weights.bin"))
+            .map_err(|e| format!("read weights.bin: {}", e))?;
+        let mut tensors = BTreeMap::new();
+        for t in idx
+            .get("tensors")
+            .and_then(|t| t.as_arr())
+            .ok_or("bad index")?
+        {
+            let name = t.get("name").and_then(|v| v.as_str()).ok_or("name")?;
+            let shape =
+                t.get("shape").and_then(|v| v.as_usize_vec()).ok_or("shape")?;
+            let offset =
+                t.get("offset").and_then(|v| v.as_usize()).ok_or("offset")?;
+            let numel =
+                t.get("numel").and_then(|v| v.as_usize()).ok_or("numel")?;
+            if offset + numel * 4 > raw.len() {
+                return Err(format!("tensor {} out of bounds", name));
+            }
+            let mut data = vec![0.0f32; numel];
+            for (k, chunk) in
+                raw[offset..offset + numel * 4].chunks_exact(4).enumerate()
+            {
+                data[k] =
+                    f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            }
+            tensors.insert(name.to_string(), Tensor { shape, data });
+        }
+        Ok(WeightStore { name: name.to_string(), cfg, tensors })
+    }
+
+    /// Random-initialized store (tests / fixtures without artifacts).
+    pub fn random(name: &str, cfg: ModelConfig, seed: u64) -> WeightStore {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut tensors = BTreeMap::new();
+        for (pname, shape) in cfg.param_spec() {
+            let numel: usize = shape.iter().product();
+            let base = pname.rsplit('.').next().unwrap();
+            let data = if base.ends_with("_g") {
+                vec![1.0; numel]
+            } else if base.ends_with("_b") || base.starts_with('b') {
+                vec![0.0; numel]
+            } else {
+                rng.normal_vec_f32(numel)
+                    .into_iter()
+                    .map(|v| v * 0.08)
+                    .collect()
+            };
+            tensors.insert(pname, Tensor { shape, data });
+        }
+        WeightStore { name: name.to_string(), cfg, tensors }
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        self.tensors
+            .get(name)
+            .unwrap_or_else(|| panic!("missing tensor {}", name))
+    }
+
+    pub fn mat(&self, name: &str) -> Mat {
+        self.get(name).as_mat()
+    }
+
+    pub fn vec(&self, name: &str) -> &[f32] {
+        &self.get(name).data
+    }
+
+    pub fn fp_bits(&self) -> usize {
+        // paper baseline is FP16 storage
+        self.tensors.values().map(|t| t.data.len() * 16).sum()
+    }
+}
+
+/// One quantized linear in a servable model.
+#[derive(Debug, Clone)]
+pub enum LayerWeights {
+    Dense(Mat),
+    Lut(LutLayer),
+    LutSparse(LutLayer, Csr),
+}
+
+impl LayerWeights {
+    pub fn dense(&self) -> Mat {
+        match self {
+            LayerWeights::Dense(m) => m.clone(),
+            LayerWeights::Lut(l) => l.dequant(),
+            LayerWeights::LutSparse(l, s) => {
+                let mut m = l.dequant();
+                m.add_assign(&s.to_dense());
+                m
+            }
+        }
+    }
+
+    pub fn from_result(r: &QuantResult) -> LayerWeights {
+        match (&r.lut, &r.sparse) {
+            (Some(l), Some(s)) => LayerWeights::LutSparse(l.clone(), s.clone()),
+            (Some(l), None) => LayerWeights::Lut(l.clone()),
+            _ => LayerWeights::Dense(r.w_hat.clone()),
+        }
+    }
+}
+
+/// A quantized model: FP parts from the base store + per-linear quantized
+/// weights, plus bookkeeping for Table 1/6.
+#[derive(Debug, Clone)]
+pub struct QuantizedModel {
+    pub base: WeightStore,
+    pub method: String,
+    pub bits: u8,
+    pub linears: BTreeMap<String, LayerWeights>,
+    pub weight_bits: usize,
+}
+
+impl QuantizedModel {
+    /// Reconstructed dense weight for a linear (for the shared nll graph).
+    pub fn dense_linear(&self, name: &str) -> Mat {
+        match self.linears.get(name) {
+            Some(lw) => lw.dense(),
+            None => self.base.mat(name),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_configs_match_python() {
+        let c = ModelConfig::builtin("opt-small").unwrap();
+        assert_eq!((c.d, c.layers, c.heads, c.ff), (128, 4, 4, 512));
+        assert_eq!(c.head_dim(), 32);
+        assert_eq!(c.linear_shapes().len(), 6 * 4);
+        assert!(ModelConfig::builtin("nope").is_none());
+    }
+
+    #[test]
+    fn param_spec_counts() {
+        let c = ModelConfig::builtin("opt-micro").unwrap();
+        let spec = c.param_spec();
+        // 2 emb + 16/layer * 2 + 2 final
+        assert_eq!(spec.len(), 2 + 16 * 2 + 2);
+        let n = c.n_params();
+        // micro ~ 0.13M params
+        assert!(n > 80_000 && n < 300_000, "{}", n);
+    }
+
+    #[test]
+    fn random_store_has_all_params() {
+        let c = ModelConfig::builtin("opt-micro").unwrap();
+        let s = WeightStore::random("t", c, 1);
+        for (name, shape) in c.param_spec() {
+            let t = s.get(&name);
+            assert_eq!(t.shape, shape);
+        }
+        // layernorm gains are 1
+        assert!(s.vec("l0.ln1_g").iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn layer_weights_roundtrip() {
+        let c = ModelConfig::builtin("opt-micro").unwrap();
+        let s = WeightStore::random("t", c, 2);
+        let w = s.mat("l0.wq");
+        let lw = LayerWeights::Dense(w.clone());
+        assert_eq!(lw.dense(), w);
+    }
+}

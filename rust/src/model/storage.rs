@@ -1,0 +1,79 @@
+//! Storage accounting — regenerates Table 1 (FP16 vs basic uniform vs
+//! LUT-based, per weight matrix) and whole-model weight-memory figures
+//! for Table 6's peak-memory column.
+
+use crate::model::{ModelConfig, QuantizedModel};
+
+/// Table 1 theory rows, in bits, for an m x n matrix.
+pub fn fp16_bits(m: usize, n: usize) -> usize {
+    16 * m * n
+}
+
+pub fn uniform_bits(m: usize, n: usize, bits: usize) -> usize {
+    bits * m * n + m * 2 * 16 // scale + zero per channel (fp16)
+}
+
+pub fn lut_bits(m: usize, n: usize, bits: usize) -> usize {
+    bits * m * n + m * (1 << bits) * 16 // codebook per channel (fp16)
+}
+
+/// Percentage vs FP16 (the numbers printed in Table 1).
+pub fn pct_of_fp16(total_bits: usize, m: usize, n: usize) -> f64 {
+    100.0 * total_bits as f64 / fp16_bits(m, n) as f64
+}
+
+/// Whole-model weight memory in bytes for a quantized model: quantized
+/// linears at their stored size + FP16 for everything else (embeddings,
+/// layernorms, biases) — matching the deployment the paper profiles.
+pub fn model_weight_bytes(qm: &QuantizedModel) -> usize {
+    let mut bits = qm.weight_bits;
+    let quant_names: std::collections::BTreeSet<_> =
+        qm.linears.keys().cloned().collect();
+    for (name, t) in &qm.base.tensors {
+        if !quant_names.contains(name) {
+            bits += t.data.len() * 16;
+        }
+    }
+    bits.div_ceil(8)
+}
+
+pub fn fp16_model_bytes(cfg: &ModelConfig) -> usize {
+    cfg.n_params() * 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_percentages() {
+        // paper Table 1: 4-bit values
+        for (mn, uni_pct, lut_pct) in [
+            (2048usize, 25.10, 25.78),
+            (4096, 25.05, 25.39),
+            (8192, 25.02, 25.20),
+        ] {
+            let u = pct_of_fp16(uniform_bits(mn, mn, 4), mn, mn);
+            let l = pct_of_fp16(lut_bits(mn, mn, 4), mn, mn);
+            assert!((u - uni_pct).abs() < 0.02, "uniform {} vs {}", u, uni_pct);
+            assert!((l - lut_pct).abs() < 0.02, "lut {} vs {}", l, lut_pct);
+        }
+    }
+
+    #[test]
+    fn lut_overhead_is_small() {
+        // difference between LUT and basic uniform < 0.8% of FP16 at 2048
+        let mn = 2048;
+        let diff = pct_of_fp16(lut_bits(mn, mn, 4), mn, mn)
+            - pct_of_fp16(uniform_bits(mn, mn, 4), mn, mn);
+        assert!(diff < 0.8);
+    }
+
+    #[test]
+    fn fp16_model_bytes_sane() {
+        let cfg = ModelConfig::builtin("opt-small").unwrap();
+        let b = fp16_model_bytes(&cfg);
+        assert_eq!(b, cfg.n_params() * 2);
+        assert!(b > 1_000_000); // opt-small ~0.9M params
+    }
+}

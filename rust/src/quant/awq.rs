@@ -1,0 +1,123 @@
+//! AWQ-like baseline (Lin et al., 2024): activation-aware per-input-channel
+//! scaling before group-wise uniform quantization. Salient channels (large
+//! activation magnitude) get scaled up so rounding error lands on channels
+//! the layer output is least sensitive to; the inverse scale folds into the
+//! (conceptual) preceding op. The scale exponent alpha is grid-searched
+//! against the true layer objective tr(D H D^T), mirroring AWQ's search.
+
+use crate::tensor::Mat;
+
+use super::{rtn::Rtn, QuantResult, Quantizer};
+
+#[derive(Debug, Clone)]
+pub struct Awq {
+    pub bits: u8,
+    pub group: usize,
+    pub n_grid: usize,
+}
+
+impl Awq {
+    pub fn new(bits: u8, group: usize) -> Self {
+        Awq { bits, group, n_grid: 12 }
+    }
+}
+
+impl Quantizer for Awq {
+    fn name(&self) -> String {
+        format!("awq-g{}", self.group)
+    }
+
+    fn quantize(&self, w: &Mat, h: &Mat) -> QuantResult {
+        let n = w.cols;
+        // per-input-channel activation magnitude proxy: sqrt(E[x_j^2])
+        // from the Gram diagonal
+        let sx: Vec<f32> = (0..n)
+            .map(|j| (h[(j, j)].max(1e-12)).sqrt())
+            .collect();
+        let inner = Rtn::grouped(self.bits, self.group);
+
+        let mut best: Option<(f64, QuantResult)> = None;
+        for gi in 0..self.n_grid {
+            let alpha = gi as f32 / (self.n_grid - 1) as f32; // 0..1
+            // scale columns: w'_j = w_j * s_j^alpha; dequant divides back
+            let mut ws = w.clone();
+            let scales: Vec<f32> =
+                sx.iter().map(|&s| s.powf(alpha).max(1e-6)).collect();
+            for i in 0..w.rows {
+                let row = ws.row_mut(i);
+                for (v, &s) in row.iter_mut().zip(&scales) {
+                    *v *= s;
+                }
+            }
+            let mut r = inner.quantize(&ws, h);
+            for i in 0..w.rows {
+                let row = r.w_hat.row_mut(i);
+                for (v, &s) in row.iter_mut().zip(&scales) {
+                    *v /= s;
+                }
+            }
+            let err = crate::tensor::linalg::layer_error(w, &r.w_hat, h);
+            if best.as_ref().map(|(e, _)| err < *e).unwrap_or(true) {
+                r.method = self.name();
+                // fp16 per-channel scales add to metadata storage
+                r.storage.meta_bits += n * 16;
+                best = Some((err, r));
+            }
+        }
+        best.unwrap().1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn skewed_problem(rng: &mut Rng, m: usize, n: usize) -> (Mat, Mat) {
+        let w = Mat::from_vec(m, n, rng.normal_vec_f32(m * n));
+        // strongly anisotropic activations: a few salient channels
+        let p = 3 * n;
+        let mut x = Mat::from_vec(n, p, rng.normal_vec_f32(n * p));
+        for j in 0..n / 8 {
+            let scale = 8.0;
+            for v in x.row_mut(j) {
+                *v *= scale;
+            }
+        }
+        (w, x.gram())
+    }
+
+    #[test]
+    fn beats_plain_grouped_rtn_on_skewed_activations() {
+        let mut rng = Rng::new(71);
+        let (w, h) = skewed_problem(&mut rng, 16, 64);
+        let e_awq = Awq::new(3, 16).quantize(&w, &h).layer_error(&w, &h);
+        let e_rtn =
+            Rtn::grouped(3, 16).quantize(&w, &h).layer_error(&w, &h);
+        assert!(e_awq <= e_rtn, "awq {} !<= rtn {}", e_awq, e_rtn);
+    }
+
+    #[test]
+    fn alpha_zero_is_in_grid_so_never_worse_than_inner() {
+        // the grid includes alpha=0 (identity scaling), so AWQ can never
+        // be worse than its inner quantizer on the same objective
+        let mut rng = Rng::new(72);
+        let (w, h) = skewed_problem(&mut rng, 8, 32);
+        let e_awq = Awq::new(4, 8).quantize(&w, &h).layer_error(&w, &h);
+        let e_rtn = Rtn::grouped(4, 8).quantize(&w, &h).layer_error(&w, &h);
+        assert!(e_awq <= e_rtn + 1e-9);
+    }
+
+    #[test]
+    fn finite_with_zero_activation_channels() {
+        let mut rng = Rng::new(73);
+        let w = Mat::from_vec(4, 16, rng.normal_vec_f32(64));
+        let mut x = Mat::from_vec(16, 32, rng.normal_vec_f32(512));
+        for v in x.row_mut(0) {
+            *v = 0.0; // dead channel -> H[0,0] = 0
+        }
+        let h = x.gram();
+        let r = Awq::new(4, 8).quantize(&w, &h);
+        assert!(r.w_hat.data.iter().all(|v| v.is_finite()));
+    }
+}

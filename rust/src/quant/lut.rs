@@ -1,0 +1,254 @@
+//! LUT-servable layer representation: per-row codebook T [m, 2^N] + codes
+//! Q [m, n], with nibble packing (shared with the HLO serving graphs — see
+//! python/compile/kernels/ref.py for the layout contract) and dense 3-bit
+//! packing for the native path, plus the native LUT-mpGEMM used by the
+//! fallback forward and the kernel benches.
+
+use crate::tensor::Mat;
+use crate::util::pool;
+
+use super::Storage;
+
+#[derive(Debug, Clone)]
+pub struct LutLayer {
+    pub m: usize,
+    pub n: usize,
+    pub bits: u8,
+    /// codes, row-major [m * n], values in 0..2^bits
+    pub codes: Vec<u8>,
+    /// per-row codebook [m, 2^bits]
+    pub codebook: Mat,
+}
+
+impl LutLayer {
+    pub fn k(&self) -> usize {
+        1usize << self.bits
+    }
+
+    pub fn code(&self, i: usize, j: usize) -> u8 {
+        self.codes[i * self.n + j]
+    }
+
+    /// Reconstruct the dense W_hat.
+    pub fn dequant(&self) -> Mat {
+        let mut out = Mat::zeros(self.m, self.n);
+        let k = self.k();
+        for i in 0..self.m {
+            let t = self.codebook.row(i);
+            let row = out.row_mut(i);
+            for (j, r) in row.iter_mut().enumerate() {
+                let c = self.codes[i * self.n + j] as usize;
+                debug_assert!(c < k);
+                *r = t[c];
+            }
+        }
+        out
+    }
+
+    /// Nibble packing: byte j holds columns 2j (low) and 2j+1 (high) —
+    /// identical to ref.pack_nibbles, the layout the HLO graphs unpack.
+    pub fn packed_nibbles(&self) -> Vec<u8> {
+        assert!(self.n % 2 == 0, "nibble packing needs even n");
+        let mut out = vec![0u8; self.m * self.n / 2];
+        for i in 0..self.m {
+            for j2 in 0..self.n / 2 {
+                let lo = self.codes[i * self.n + 2 * j2];
+                let hi = self.codes[i * self.n + 2 * j2 + 1];
+                out[i * self.n / 2 + j2] = lo | (hi << 4);
+            }
+        }
+        out
+    }
+
+    /// Dense 3-bit packing: 8 codes -> 3 bytes per group, row-padded to a
+    /// multiple of 8 — identical to ref.pack3.
+    pub fn packed3(&self) -> Vec<u8> {
+        assert!(self.bits == 3);
+        let npad = self.n.div_ceil(8) * 8;
+        let gbytes = npad / 8 * 3;
+        let mut out = vec![0u8; self.m * gbytes];
+        for i in 0..self.m {
+            for g in 0..npad / 8 {
+                let mut v: u32 = 0;
+                for b in 0..8 {
+                    let j = g * 8 + b;
+                    let code = if j < self.n {
+                        self.codes[i * self.n + j] as u32
+                    } else {
+                        0
+                    };
+                    v |= code << (3 * b);
+                }
+                out[i * gbytes + 3 * g] = (v & 0xFF) as u8;
+                out[i * gbytes + 3 * g + 1] = ((v >> 8) & 0xFF) as u8;
+                out[i * gbytes + 3 * g + 2] = ((v >> 16) & 0xFF) as u8;
+            }
+        }
+        out
+    }
+
+    pub fn unpack3(packed: &[u8], m: usize, n: usize) -> Vec<u8> {
+        let npad = n.div_ceil(8) * 8;
+        let gbytes = npad / 8 * 3;
+        assert_eq!(packed.len(), m * gbytes);
+        let mut out = vec![0u8; m * n];
+        for i in 0..m {
+            for g in 0..npad / 8 {
+                let v = packed[i * gbytes + 3 * g] as u32
+                    | (packed[i * gbytes + 3 * g + 1] as u32) << 8
+                    | (packed[i * gbytes + 3 * g + 2] as u32) << 16;
+                for b in 0..8 {
+                    let j = g * 8 + b;
+                    if j < n {
+                        out[i * n + j] = ((v >> (3 * b)) & 0x7) as u8;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Native LUT-based mpGEMM: y[p, m] = x[p, n] @ W_hat^T without ever
+    /// materializing W_hat — mirrors the dequantization-free inference
+    /// kernel (Fig. 1(a) right). Threaded across output channels.
+    pub fn lut_matmul(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols, self.n);
+        let p = x.rows;
+        let mut out = Mat::zeros(p, self.m);
+        let k = self.k();
+        let threads = pool::default_threads();
+        let codes = &self.codes;
+        let cb = &self.codebook;
+        let n = self.n;
+        let m = self.m;
+        // parallelize over m by transposing the loop: compute y^T tiles
+        let mut yt = vec![0.0f32; m * p];
+        pool::par_rows_mut(&mut yt, p, threads, |row0, chunk| {
+            let mut partial = vec![0.0f32; k];
+            for (ri, yrow) in chunk.chunks_mut(p).enumerate() {
+                let i = row0 + ri;
+                let t = cb.row(i);
+                let crow = &codes[i * n..(i + 1) * n];
+                for (pi, y) in yrow.iter_mut().enumerate() {
+                    // LUT trick: accumulate x into per-code buckets, then
+                    // one K-wide dot with the codebook (dequant-free).
+                    partial.iter_mut().for_each(|v| *v = 0.0);
+                    let xr = x.row(pi);
+                    for (j, &c) in crow.iter().enumerate() {
+                        partial[c as usize] += xr[j];
+                    }
+                    let mut acc = 0.0f32;
+                    for s in 0..k {
+                        acc += partial[s] * t[s];
+                    }
+                    *y = acc;
+                }
+            }
+        });
+        for i in 0..m {
+            for pi in 0..p {
+                out[(pi, i)] = yt[i * p + pi];
+            }
+        }
+        out
+    }
+
+    /// Storage accounting (Table 1 LUT row): N bits/code + fp16 codebook.
+    pub fn storage(&self) -> Storage {
+        Storage {
+            code_bits: self.m * self.n * self.bits as usize,
+            meta_bits: self.m * self.k() * 16,
+            sparse_bits: 0,
+        }
+    }
+
+    /// Weight bytes that must stream per token in decode (the memory-bound
+    /// quantity behind the paper's speedup): packed codes + codebook.
+    pub fn bytes_per_decode(&self) -> usize {
+        let code_bytes = match self.bits {
+            3 => self.m * (self.n.div_ceil(8) * 3),
+            _ => self.m * self.n / 2,
+        };
+        code_bytes + self.m * self.k() * 4
+    }
+}
+
+/// Build a LutLayer from explicit parts (used by quantizers).
+pub fn lut_from_parts(m: usize, n: usize, bits: u8, codes: Vec<u8>, codebook: Mat) -> LutLayer {
+    assert_eq!(codes.len(), m * n);
+    assert_eq!(codebook.rows, m);
+    assert_eq!(codebook.cols, 1 << bits);
+    LutLayer { m, n, bits, codes, codebook }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_lut(rng: &mut Rng, m: usize, n: usize, bits: u8) -> LutLayer {
+        let k = 1usize << bits;
+        let codes = (0..m * n).map(|_| rng.below(k as u64) as u8).collect();
+        let codebook = Mat::from_vec(m, k, rng.normal_vec_f32(m * k));
+        lut_from_parts(m, n, bits, codes, codebook)
+    }
+
+    #[test]
+    fn nibble_pack_layout_matches_python_contract() {
+        // byte j = lo | hi<<4 with lo = col 2j, hi = col 2j+1
+        let codes = vec![1u8, 2, 3, 4];
+        let l = lut_from_parts(1, 4, 4, codes, Mat::zeros(1, 16));
+        assert_eq!(l.packed_nibbles(), vec![1 | 2 << 4, 3 | 4 << 4]);
+    }
+
+    #[test]
+    fn pack3_roundtrip() {
+        prop::check("pack3", 31, 12, |rng, _| {
+            let m = 1 + rng.below(6) as usize;
+            let n = 1 + rng.below(40) as usize;
+            let l = random_lut(rng, m, n, 3);
+            let packed = l.packed3();
+            let back = LutLayer::unpack3(&packed, m, n);
+            crate::prop_assert!(back == l.codes, "roundtrip failed");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lut_matmul_equals_dequant_matmul() {
+        prop::check("lut_matmul", 32, 8, |rng, _| {
+            let m = 1 + rng.below(24) as usize;
+            let n = 1 + rng.below(24) as usize;
+            let p = 1 + rng.below(6) as usize;
+            let bits = if rng.below(2) == 0 { 3 } else { 4 };
+            let l = random_lut(rng, m, n, bits);
+            let x = Mat::from_vec(p, n, rng.normal_vec_f32(p * n));
+            let direct = x.matmul_tb(&l.dequant());
+            let lutted = l.lut_matmul(&x);
+            crate::prop_assert!(
+                prop::all_close(&direct.data, &lutted.data, 1e-3, 1e-3),
+                "maxdiff {}",
+                prop::max_abs_diff(&direct.data, &lutted.data)
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn storage_matches_table1_formula() {
+        let l = random_lut(&mut Rng::new(3), 2048, 2048, 4);
+        let st = l.storage();
+        // theory: 0.5*m*n + 32*m bytes => ratio 25.78% (Table 1, row 1)
+        let ratio = st.ratio_vs_fp16(2048, 2048);
+        assert!((ratio - 0.2578).abs() < 0.001, "{}", ratio);
+    }
+
+    #[test]
+    fn bytes_per_decode_3bit_smaller_than_4bit() {
+        let mut rng = Rng::new(4);
+        let l4 = random_lut(&mut rng, 128, 512, 4);
+        let l3 = random_lut(&mut rng, 128, 512, 3);
+        assert!(l3.bytes_per_decode() < l4.bytes_per_decode());
+    }
+}

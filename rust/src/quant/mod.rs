@@ -1,0 +1,179 @@
+//! Post-training weight-only quantization library: GANQ (paper §3) plus
+//! every baseline the evaluation compares against (RTN, GPTQ, AWQ,
+//! OmniQuant-like, SqueezeLLM-like; each with optional g128 grouping and
+//! outlier handling).
+//!
+//! Every method consumes the layer weight `W [m, n]` and the calibration
+//! Gram matrix `H = X X^T [n, n]` and produces a [`QuantResult`]:
+//! reconstructed weights (for perplexity evaluation through the shared
+//! `nll_fp32_*` graph), an optional LUT-servable form (codes + per-channel
+//! codebook, for the `*_lut*` serving graphs and the native LUT path), and
+//! exact storage accounting (Table 1).
+
+pub mod awq;
+pub mod ganq;
+pub mod gptq;
+pub mod lut;
+pub mod omniq;
+pub mod outlier;
+pub mod rtn;
+pub mod squeezellm;
+pub mod stats;
+
+use crate::sparse::Csr;
+use crate::tensor::{linalg, Mat};
+pub use lut::LutLayer;
+
+/// Storage accounting in bits (paper Table 1 rows).
+#[derive(Debug, Clone, Default)]
+pub struct Storage {
+    pub code_bits: usize,
+    pub meta_bits: usize,
+    pub sparse_bits: usize,
+}
+
+impl Storage {
+    pub fn total_bits(&self) -> usize {
+        self.code_bits + self.meta_bits + self.sparse_bits
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.total_bits().div_ceil(8)
+    }
+
+    pub fn ratio_vs_fp16(&self, m: usize, n: usize) -> f64 {
+        self.total_bits() as f64 / (16.0 * (m * n) as f64)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct QuantResult {
+    pub method: String,
+    pub bits: u8,
+    /// Reconstructed dense weights (sparse outliers already added back):
+    /// exactly what the layer computes at inference.
+    pub w_hat: Mat,
+    /// LUT-servable form (per-channel codebook methods only).
+    pub lut: Option<LutLayer>,
+    /// Outlier component (GANQ*/SqueezeLLM dense-and-sparse).
+    pub sparse: Option<Csr>,
+    pub storage: Storage,
+}
+
+impl QuantResult {
+    /// Layer-wise objective value ||W X - W_hat X||_F^2 = tr(D H D^T).
+    pub fn layer_error(&self, w: &Mat, h: &Mat) -> f64 {
+        linalg::layer_error(w, &self.w_hat, h)
+    }
+}
+
+/// A layer-wise PTQ method.
+pub trait Quantizer: Send + Sync {
+    fn name(&self) -> String;
+    fn quantize(&self, w: &Mat, h: &Mat) -> QuantResult;
+}
+
+/// Method registry for the CLI and benches.
+/// Names: rtn, rtn-g128, gptq, gptq-g128, awq-g128, omniq, omniq-g128,
+/// squeezellm, ganq, ganq-star.
+pub fn by_name(name: &str, bits: u8) -> Option<Box<dyn Quantizer>> {
+    Some(match name {
+        "rtn" => Box::new(rtn::Rtn::new(bits)),
+        "rtn-g128" => Box::new(rtn::Rtn::grouped(bits, 128)),
+        "gptq" => Box::new(gptq::Gptq::new(bits)),
+        "gptq-g128" => Box::new(gptq::Gptq::grouped(bits, 128)),
+        "awq-g128" => Box::new(awq::Awq::new(bits, 128)),
+        "omniq" => Box::new(omniq::OmniQ::new(bits)),
+        "omniq-g128" => Box::new(omniq::OmniQ::grouped(bits, 128)),
+        "squeezellm" => Box::new(squeezellm::SqueezeLlm::new(bits)),
+        "ganq" => Box::new(ganq::Ganq::new(bits)),
+        "ganq-star" => Box::new(outlier::GanqStar::new(bits, 0.005, 0)),
+        _ => return None,
+    })
+}
+
+pub const BASIC_METHODS: [&str; 4] = ["rtn", "gptq", "omniq", "ganq"];
+pub const OUTLIER_METHODS: [&str; 6] = [
+    "rtn-g128",
+    "gptq-g128",
+    "awq-g128",
+    "omniq-g128",
+    "squeezellm",
+    "ganq-star",
+];
+
+/// Shared helper: uniform asymmetric quantization of one row-segment.
+/// Returns (codes, scale, zero) with code = clamp(round(w/scale)+zero).
+pub fn uniform_quant_segment(seg: &[f32], bits: u8) -> (Vec<u8>, f32, f32) {
+    let levels = ((1u32 << bits) - 1) as f32;
+    let mut wmin = f32::INFINITY;
+    let mut wmax = f32::NEG_INFINITY;
+    for &v in seg {
+        wmin = wmin.min(v);
+        wmax = wmax.max(v);
+    }
+    if !wmin.is_finite() || !wmax.is_finite() {
+        return (vec![0; seg.len()], 1.0, 0.0);
+    }
+    let scale = ((wmax - wmin) / levels).max(1e-12);
+    let zero = (-wmin / scale).round();
+    let codes = seg
+        .iter()
+        .map(|&v| ((v / scale).round() + zero).clamp(0.0, levels) as u8)
+        .collect();
+    (codes, scale, zero)
+}
+
+pub fn dequant_code(code: u8, scale: f32, zero: f32) -> f32 {
+    (code as f32 - zero) * scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn registry_covers_all_methods() {
+        for name in BASIC_METHODS.iter().chain(OUTLIER_METHODS.iter()) {
+            assert!(by_name(name, 4).is_some(), "{}", name);
+            assert!(by_name(name, 3).is_some(), "{}", name);
+        }
+        assert!(by_name("nope", 4).is_none());
+    }
+
+    #[test]
+    fn uniform_segment_roundtrip_accuracy() {
+        let mut rng = Rng::new(1);
+        let seg = rng.normal_vec_f32(64);
+        let (codes, scale, zero) = uniform_quant_segment(&seg, 8);
+        let maxerr = seg
+            .iter()
+            .zip(&codes)
+            .map(|(&v, &c)| (v - dequant_code(c, scale, zero)).abs())
+            .fold(0.0f32, f32::max);
+        assert!(maxerr <= scale * 0.5 + 1e-6, "{} vs {}", maxerr, scale);
+    }
+
+    #[test]
+    fn uniform_segment_range_endpoints() {
+        let seg = vec![-1.0f32, 0.0, 2.0];
+        let (codes, scale, zero) = uniform_quant_segment(&seg, 4);
+        assert_eq!(dequant_code(codes[0], scale, zero), -1.0);
+        assert!((dequant_code(codes[2], scale, zero) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn storage_ratio_table1_shape() {
+        // LUT-based 4-bit at m=n=4096 should be ~25.39% of FP16 (Table 1)
+        let m = 4096;
+        let n = 4096;
+        let st = Storage {
+            code_bits: m * n * 4,
+            meta_bits: m * 16 * 16,
+            sparse_bits: 0,
+        };
+        let r = st.ratio_vs_fp16(m, n);
+        assert!((r - 0.2539).abs() < 0.001, "{}", r);
+    }
+}

@@ -1,0 +1,226 @@
+//! Outlier extraction (paper Algorithm 2, Appendix B) and GANQ* — GANQ
+//! composed with the dense-and-sparse decomposition (§3.3): W is split
+//! row-wise at symmetric tail percentiles into W_sparse (outliers, kept
+//! FP in CSR) and W_dense (quantized by GANQ). Optionally whole rows with
+//! the highest sensitivity are retained in full precision ("10 full rows",
+//! the SqueezeLLM-comparable configuration of Table 5).
+
+use crate::sparse::Csr;
+use crate::tensor::Mat;
+
+use super::{ganq::Ganq, QuantResult, Quantizer};
+
+/// Row-wise symmetric-percentile split (Algorithm 2).
+/// Returns (sparse, dense) with sparse + dense == w.
+pub fn split_outliers(w: &Mat, ratio: f64) -> (Mat, Mat) {
+    let (m, n) = (w.rows, w.cols);
+    let p = 1.0 - 0.5 * ratio;
+    let upper = ((n as f64 * p).floor() as usize).min(n - 1);
+    let lower = (n as f64 * (1.0 - p)).ceil() as usize;
+    let mut sparse = Mat::zeros(m, n);
+    let mut dense = w.clone();
+    let mut sorted = vec![0.0f32; n];
+    for i in 0..m {
+        sorted.copy_from_slice(w.row(i));
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let c_up = sorted[upper];
+        let c_lo = sorted[lower];
+        for j in 0..n {
+            let v = w[(i, j)];
+            if v >= c_up || v <= c_lo {
+                sparse[(i, j)] = v;
+                dense[(i, j)] = 0.0;
+            }
+        }
+    }
+    (sparse, dense)
+}
+
+/// Pick the `count` rows with the highest output sensitivity
+/// (diag-H-weighted squared row norm) to retain at full precision.
+pub fn sensitive_rows(w: &Mat, h: &Mat, count: usize) -> Vec<usize> {
+    let mut scored: Vec<(f64, usize)> = (0..w.rows)
+        .map(|i| {
+            let s: f64 = w
+                .row(i)
+                .iter()
+                .enumerate()
+                .map(|(j, &v)| h[(j, j)] as f64 * (v as f64) * (v as f64))
+                .sum();
+            (s, i)
+        })
+        .collect();
+    scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut rows: Vec<usize> =
+        scored.into_iter().take(count).map(|(_, i)| i).collect();
+    rows.sort_unstable();
+    rows
+}
+
+#[derive(Debug, Clone)]
+pub struct GanqStar {
+    pub bits: u8,
+    pub outlier_ratio: f64,
+    pub full_rows: usize,
+    pub iters: usize,
+}
+
+impl GanqStar {
+    pub fn new(bits: u8, outlier_ratio: f64, full_rows: usize) -> Self {
+        GanqStar { bits, outlier_ratio, full_rows, iters: 10 }
+    }
+}
+
+impl Quantizer for GanqStar {
+    fn name(&self) -> String {
+        "ganq-star".to_string()
+    }
+
+    fn quantize(&self, w: &Mat, h: &Mat) -> QuantResult {
+        let (m, n) = (w.rows, w.cols);
+        // 1) full-precision rows (optional)
+        let keep = if self.full_rows > 0 {
+            sensitive_rows(w, h, self.full_rows.min(m))
+        } else {
+            Vec::new()
+        };
+        let kept: std::collections::HashSet<usize> =
+            keep.iter().copied().collect();
+        // 2) percentile outlier split on the remaining weights
+        let (mut sparse_m, mut dense_m) = split_outliers(w, self.outlier_ratio);
+        for &i in &keep {
+            // whole row goes to the sparse component
+            for j in 0..n {
+                sparse_m[(i, j)] = w[(i, j)];
+                dense_m[(i, j)] = 0.0;
+            }
+        }
+        // 3) GANQ on the dense component
+        let inner = Ganq::with_iters(self.bits, self.iters);
+        let mut r = inner.quantize(&dense_m, h);
+        // rows kept in FP: zero their codes' contribution by zeroing the
+        // codebook row (the sparse part carries the real values)
+        if let Some(lut) = &mut r.lut {
+            for &i in &keep {
+                for v in lut.codebook.row_mut(i) {
+                    *v = 0.0;
+                }
+                for c in &mut lut.codes[i * n..(i + 1) * n] {
+                    *c = 0;
+                }
+            }
+            r.w_hat = lut.dequant();
+        }
+        let csr = Csr::from_dense(&sparse_m);
+        r.w_hat.add_assign(&sparse_m);
+        r.storage.sparse_bits = csr.nnz() * (16 + 32) + (m + 1) * 32;
+        let _ = kept;
+        QuantResult {
+            method: self.name(),
+            bits: self.bits,
+            w_hat: r.w_hat,
+            lut: r.lut,
+            sparse: Some(csr),
+            storage: r.storage,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::ganq::Ganq;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn problem_with_outliers(
+        rng: &mut Rng,
+        m: usize,
+        n: usize,
+    ) -> (Mat, Mat) {
+        let mut w = Mat::from_vec(m, n, rng.normal_vec_f32(m * n));
+        for i in 0..m {
+            let j = rng.below(n as u64) as usize;
+            w[(i, j)] = 10.0 + rng.uniform() as f32 * 5.0;
+        }
+        let x = Mat::from_vec(n, 2 * n, rng.normal_vec_f32(2 * n * n));
+        (w, x.gram())
+    }
+
+    #[test]
+    fn split_reconstructs_exactly() {
+        prop::check("outlier_split", 101, 8, |rng, _| {
+            let m = 2 + rng.below(8) as usize;
+            let n = 8 + rng.below(40) as usize;
+            let w = Mat::from_vec(m, n, rng.normal_vec_f32(m * n));
+            let (s, d) = split_outliers(&w, 0.1);
+            for idx in 0..m * n {
+                crate::prop_assert!(
+                    (s.data[idx] + d.data[idx] - w.data[idx]).abs() == 0.0,
+                    "not a partition at {}",
+                    idx
+                );
+                crate::prop_assert!(
+                    s.data[idx] == 0.0 || d.data[idx] == 0.0,
+                    "overlap at {}",
+                    idx
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn split_shrinks_dense_range() {
+        let mut rng = Rng::new(102);
+        let (w, _h) = problem_with_outliers(&mut rng, 8, 64);
+        let (_s, d) = split_outliers(&w, 0.05);
+        assert!(d.max_abs() < w.max_abs());
+    }
+
+    #[test]
+    fn ganq_star_beats_plain_ganq_with_outliers() {
+        let mut rng = Rng::new(103);
+        let (w, h) = problem_with_outliers(&mut rng, 16, 64);
+        let e_star = GanqStar::new(3, 0.03, 0)
+            .quantize(&w, &h)
+            .layer_error(&w, &h);
+        let e_plain = Ganq::new(3).quantize(&w, &h).layer_error(&w, &h);
+        assert!(e_star < e_plain, "star {} !< plain {}", e_star, e_plain);
+    }
+
+    #[test]
+    fn full_rows_are_exact() {
+        let mut rng = Rng::new(104);
+        let (w, h) = problem_with_outliers(&mut rng, 12, 32);
+        let r = GanqStar::new(3, 0.01, 3).quantize(&w, &h);
+        let rows = sensitive_rows(&w, &h, 3);
+        for &i in &rows {
+            for j in 0..w.cols {
+                assert!(
+                    (r.w_hat[(i, j)] - w[(i, j)]).abs() < 1e-6,
+                    "row {} not exact",
+                    i
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_density_tracks_ratio() {
+        let mut rng = Rng::new(105);
+        let (w, h) = problem_with_outliers(&mut rng, 16, 128);
+        let r = GanqStar::new(4, 0.02, 0).quantize(&w, &h);
+        let d = r.sparse.as_ref().unwrap().density();
+        assert!(d > 0.005 && d < 0.08, "density {}", d);
+    }
+
+    #[test]
+    fn sensitive_rows_sorted_unique() {
+        let mut rng = Rng::new(106);
+        let (w, h) = problem_with_outliers(&mut rng, 10, 16);
+        let rows = sensitive_rows(&w, &h, 4);
+        assert_eq!(rows.len(), 4);
+        assert!(rows.windows(2).all(|w| w[0] < w[1]));
+    }
+}

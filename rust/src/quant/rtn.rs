@@ -1,0 +1,191 @@
+//! RTN: round-to-nearest per-channel uniform quantization (the basic
+//! baseline of §1) with optional group-wise variant (g128, Table 5).
+//! The per-channel (ungrouped) form is also expressible as a LUT with a
+//! uniform-grid codebook — which is exactly GANQ's T^0 initialization.
+
+use crate::tensor::Mat;
+
+use super::{
+    dequant_code, lut::lut_from_parts, uniform_quant_segment, QuantResult,
+    Quantizer, Storage,
+};
+
+#[derive(Debug, Clone)]
+pub struct Rtn {
+    pub bits: u8,
+    pub group: Option<usize>,
+}
+
+impl Rtn {
+    pub fn new(bits: u8) -> Self {
+        Rtn { bits, group: None }
+    }
+
+    pub fn grouped(bits: u8, group: usize) -> Self {
+        Rtn { bits, group: Some(group) }
+    }
+}
+
+/// Uniform-grid codebook for one row (RTN-as-LUT; GANQ T^0 init).
+pub fn rtn_codebook_row(row: &[f32], bits: u8) -> (Vec<u8>, Vec<f32>) {
+    let (codes, scale, zero) = uniform_quant_segment(row, bits);
+    let k = 1usize << bits;
+    let t = (0..k)
+        .map(|s| dequant_code(s as u8, scale, zero))
+        .collect();
+    (codes, t)
+}
+
+/// Full-matrix RTN-as-LUT (per-channel): codes + uniform grid per row.
+pub fn rtn_codebook(w: &Mat, bits: u8) -> (Vec<u8>, Mat) {
+    let k = 1usize << bits;
+    let mut codes = vec![0u8; w.rows * w.cols];
+    let mut t = Mat::zeros(w.rows, k);
+    for i in 0..w.rows {
+        let (c, grid) = rtn_codebook_row(w.row(i), bits);
+        codes[i * w.cols..(i + 1) * w.cols].copy_from_slice(&c);
+        t.row_mut(i).copy_from_slice(&grid);
+    }
+    (codes, t)
+}
+
+impl Quantizer for Rtn {
+    fn name(&self) -> String {
+        match self.group {
+            Some(g) => format!("rtn-g{}", g),
+            None => "rtn".to_string(),
+        }
+    }
+
+    fn quantize(&self, w: &Mat, _h: &Mat) -> QuantResult {
+        let (m, n) = (w.rows, w.cols);
+        let g = self.group.unwrap_or(n).min(n);
+        let mut w_hat = Mat::zeros(m, n);
+        let mut groups = 0usize;
+        for i in 0..m {
+            let row = w.row(i);
+            let mut out = vec![0.0f32; n];
+            for (gi, seg) in row.chunks(g).enumerate() {
+                let (codes, scale, zero) =
+                    uniform_quant_segment(seg, self.bits);
+                for (jj, &c) in codes.iter().enumerate() {
+                    out[gi * g + jj] = dequant_code(c, scale, zero);
+                }
+                if i == 0 {
+                    groups = gi + 1;
+                }
+            }
+            w_hat.row_mut(i).copy_from_slice(&out);
+        }
+        let lut = if self.group.is_none() && n % 2 == 0 {
+            let (codes, t) = rtn_codebook(w, self.bits);
+            Some(lut_from_parts(m, n, self.bits, codes, t))
+        } else {
+            None
+        };
+        let storage = Storage {
+            code_bits: m * n * self.bits as usize,
+            // scale + zero per group, fp16 each
+            meta_bits: m * groups * 2 * 16,
+            sparse_bits: 0,
+        };
+        QuantResult {
+            method: self.name(),
+            bits: self.bits,
+            w_hat,
+            lut,
+            sparse: None,
+            storage,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::linalg;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn rand_wh(rng: &mut Rng, m: usize, n: usize) -> (Mat, Mat) {
+        let w = Mat::from_vec(m, n, rng.normal_vec_f32(m * n));
+        let x = Mat::from_vec(n, 2 * n, rng.normal_vec_f32(2 * n * n));
+        (w, x.gram())
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        prop::check("rtn_halfstep", 41, 10, |rng, _| {
+            let (w, h) = rand_wh(rng, 4, 16);
+            let r = Rtn::new(4).quantize(&w, &h);
+            for i in 0..4 {
+                let row = w.row(i);
+                let span = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b))
+                    - row.iter().fold(f32::INFINITY, |a, &b| a.min(b));
+                let step = span / 15.0;
+                for j in 0..16 {
+                    crate::prop_assert!(
+                        (w[(i, j)] - r.w_hat[(i, j)]).abs()
+                            <= step * 0.5 + 1e-5,
+                        "({},{})",
+                        i,
+                        j
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lut_form_matches_dense_form() {
+        let mut rng = Rng::new(42);
+        let (w, h) = rand_wh(&mut rng, 6, 32);
+        let r = Rtn::new(3).quantize(&w, &h);
+        let lut = r.lut.as_ref().unwrap();
+        assert!(prop::all_close(
+            &lut.dequant().data,
+            &r.w_hat.data,
+            1e-6,
+            1e-6
+        ));
+    }
+
+    #[test]
+    fn grouping_never_hurts() {
+        // smaller groups adapt ranges better: g8 error <= per-row error
+        prop::check("rtn_group", 43, 8, |rng, _| {
+            let (w, h) = rand_wh(rng, 8, 64);
+            let e_row = Rtn::new(3).quantize(&w, &h).layer_error(&w, &h);
+            let e_g8 = Rtn::grouped(3, 8).quantize(&w, &h).layer_error(&w, &h);
+            crate::prop_assert!(
+                e_g8 <= e_row * 1.001 + 1e-9,
+                "g8 {} vs row {}",
+                e_g8,
+                e_row
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut rng = Rng::new(44);
+        let (w, h) = rand_wh(&mut rng, 8, 32);
+        let e3 = Rtn::new(3).quantize(&w, &h).layer_error(&w, &h);
+        let e4 = Rtn::new(4).quantize(&w, &h).layer_error(&w, &h);
+        let e8 = Rtn::new(8).quantize(&w, &h).layer_error(&w, &h);
+        assert!(e4 < e3 && e8 < e4, "{} {} {}", e3, e4, e8);
+    }
+
+    #[test]
+    fn storage_per_channel_matches_table1() {
+        let mut rng = Rng::new(45);
+        let (w, h) = rand_wh(&mut rng, 32, 32);
+        let r = Rtn::new(4).quantize(&w, &h);
+        // 0.25*mn*16 bits codes + 2 fp16 per row
+        assert_eq!(r.storage.code_bits, 32 * 32 * 4);
+        assert_eq!(r.storage.meta_bits, 32 * 2 * 16);
+        let _ = linalg::layer_error(&w, &r.w_hat, &h); // smoke
+    }
+}

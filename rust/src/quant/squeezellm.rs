@@ -1,0 +1,268 @@
+//! SqueezeLLM-like baseline (Kim et al., 2024): sensitivity-weighted
+//! k-means codebooks (dense) + optional sparse outlier extraction
+//! (dense-and-sparse decomposition). Sensitivity weights use diag(H) as
+//! the Fisher-information proxy, exactly as the paper approximates the
+//! Hessian by the diagonal Fisher.
+
+use crate::sparse::Csr;
+use crate::tensor::Mat;
+use crate::util::pool;
+
+use super::{
+    lut::lut_from_parts, outlier::split_outliers, QuantResult, Quantizer,
+};
+
+#[derive(Debug, Clone)]
+pub struct SqueezeLlm {
+    pub bits: u8,
+    /// outlier extraction ratio (paper default 0.45-0.5%); 0 disables
+    pub outlier_ratio: f64,
+    pub kmeans_iters: usize,
+}
+
+impl SqueezeLlm {
+    pub fn new(bits: u8) -> Self {
+        SqueezeLlm { bits, outlier_ratio: 0.005, kmeans_iters: 25 }
+    }
+
+    pub fn dense_only(bits: u8) -> Self {
+        SqueezeLlm { bits, outlier_ratio: 0.0, kmeans_iters: 25 }
+    }
+}
+
+/// Weighted 1-D k-means (Lloyd) for one row. Returns (codes, centroids).
+/// Init: weighted quantiles (stable and deterministic).
+pub fn weighted_kmeans_row(
+    vals: &[f32],
+    weights: &[f32],
+    k: usize,
+    iters: usize,
+) -> (Vec<u8>, Vec<f32>) {
+    let n = vals.len();
+    // init centroids at weighted quantiles
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| vals[a].partial_cmp(&vals[b]).unwrap());
+    let total_w: f64 = weights.iter().map(|&w| w.max(1e-12) as f64).sum();
+    let mut centroids = vec![0.0f32; k];
+    {
+        let mut acc = 0.0f64;
+        let mut ci = 0usize;
+        for &idx in &order {
+            acc += weights[idx].max(1e-12) as f64;
+            while ci < k && acc >= total_w * (ci as f64 + 0.5) / k as f64 {
+                centroids[ci] = vals[idx];
+                ci += 1;
+            }
+        }
+        while ci < k {
+            centroids[ci] = vals[order[n - 1]];
+            ci += 1;
+        }
+    }
+    let mut codes = vec![0u8; n];
+    for _ in 0..iters {
+        // assign
+        for (j, &v) in vals.iter().enumerate() {
+            let mut best = 0usize;
+            let mut bestd = f32::INFINITY;
+            for (s, &c) in centroids.iter().enumerate() {
+                let d = (v - c).abs();
+                if d < bestd {
+                    bestd = d;
+                    best = s;
+                }
+            }
+            codes[j] = best as u8;
+        }
+        // update (weighted means)
+        let mut sums = vec![0.0f64; k];
+        let mut wsum = vec![0.0f64; k];
+        for (j, &c) in codes.iter().enumerate() {
+            let w = weights[j].max(1e-12) as f64;
+            sums[c as usize] += w * vals[j] as f64;
+            wsum[c as usize] += w;
+        }
+        let mut changed = false;
+        for s in 0..k {
+            if wsum[s] > 0.0 {
+                let nc = (sums[s] / wsum[s]) as f32;
+                if (nc - centroids[s]).abs() > 1e-9 {
+                    changed = true;
+                }
+                centroids[s] = nc;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    // final assign for consistency
+    for (j, &v) in vals.iter().enumerate() {
+        let mut best = 0usize;
+        let mut bestd = f32::INFINITY;
+        for (s, &c) in centroids.iter().enumerate() {
+            let d = (v - c).abs();
+            if d < bestd {
+                bestd = d;
+                best = s;
+            }
+        }
+        codes[j] = best as u8;
+    }
+    (codes, centroids)
+}
+
+impl Quantizer for SqueezeLlm {
+    fn name(&self) -> String {
+        "squeezellm".to_string()
+    }
+
+    fn quantize(&self, w: &Mat, h: &Mat) -> QuantResult {
+        let (m, n) = (w.rows, w.cols);
+        let k = 1usize << self.bits;
+        let (sparse, dense) = if self.outlier_ratio > 0.0 {
+            let (s, d) = split_outliers(w, self.outlier_ratio);
+            (Some(Csr::from_dense(&s)), d)
+        } else {
+            (None, w.clone())
+        };
+        let weights: Vec<f32> = (0..n).map(|j| h[(j, j)].max(1e-12)).collect();
+        let mut codes = vec![0u8; m * n];
+        let mut codebook = Mat::zeros(m, k);
+        let iters = self.kmeans_iters;
+        let threads = pool::default_threads();
+        // parallel across rows: codes and codebook rows are disjoint
+        let dense_ref = &dense;
+        let weights_ref = &weights;
+        let cb_ptr = codebook.data.as_mut_ptr() as usize;
+        pool::par_rows_mut(&mut codes, n, threads, |row0, chunk| {
+            for (ri, crow) in chunk.chunks_mut(n).enumerate() {
+                let i = row0 + ri;
+                let (c, cent) = weighted_kmeans_row(
+                    dense_ref.row(i),
+                    weights_ref,
+                    k,
+                    iters,
+                );
+                crow.copy_from_slice(&c);
+                // disjoint row write (i is unique per chunk element)
+                unsafe {
+                    let dst = (cb_ptr as *mut f32).add(i * k);
+                    std::ptr::copy_nonoverlapping(cent.as_ptr(), dst, k);
+                }
+            }
+        });
+        let lut = lut_from_parts(m, n, self.bits, codes, codebook);
+        let mut w_hat = lut.dequant();
+        let mut storage = lut.storage();
+        if let Some(sp) = &sparse {
+            w_hat.add_assign(&sp.to_dense());
+            storage.sparse_bits = sp.nnz() * (16 + 32) + (m + 1) * 32;
+        }
+        QuantResult {
+            method: self.name(),
+            bits: self.bits,
+            w_hat,
+            lut: Some(lut),
+            sparse,
+            storage,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn::Rtn;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn problem(rng: &mut Rng, m: usize, n: usize) -> (Mat, Mat) {
+        let w = Mat::from_vec(m, n, rng.normal_vec_f32(m * n));
+        let x = Mat::from_vec(n, 2 * n, rng.normal_vec_f32(2 * n * n));
+        (w, x.gram())
+    }
+
+    #[test]
+    fn kmeans_reduces_weighted_distortion_vs_uniform_grid() {
+        prop::check("kmeans_vs_grid", 91, 6, |rng, _| {
+            let vals = rng.normal_vec_f32(128);
+            let weights = vec![1.0f32; 128];
+            let (codes, cents) = weighted_kmeans_row(&vals, &weights, 8, 30);
+            let e_km: f64 = vals
+                .iter()
+                .zip(&codes)
+                .map(|(&v, &c)| {
+                    let d = (v - cents[c as usize]) as f64;
+                    d * d
+                })
+                .sum();
+            let (gcodes, grid) =
+                crate::quant::rtn::rtn_codebook_row(&vals, 3);
+            let e_grid: f64 = vals
+                .iter()
+                .zip(&gcodes)
+                .map(|(&v, &c)| {
+                    let d = (v - grid[c as usize]) as f64;
+                    d * d
+                })
+                .sum();
+            crate::prop_assert!(
+                e_km < e_grid,
+                "kmeans {} !< grid {}",
+                e_km,
+                e_grid
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn kmeans_handles_constant_input() {
+        let vals = vec![0.7f32; 32];
+        let weights = vec![1.0f32; 32];
+        let (codes, cents) = weighted_kmeans_row(&vals, &weights, 4, 10);
+        assert!(codes.iter().all(|&c| (c as usize) < 4));
+        assert!((cents[codes[0] as usize] - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dense_only_beats_rtn() {
+        let mut rng = Rng::new(92);
+        let (w, h) = problem(&mut rng, 12, 48);
+        let e_s = SqueezeLlm::dense_only(3)
+            .quantize(&w, &h)
+            .layer_error(&w, &h);
+        let e_r = Rtn::new(3).quantize(&w, &h).layer_error(&w, &h);
+        assert!(e_s < e_r, "squeezellm {} !< rtn {}", e_s, e_r);
+    }
+
+    #[test]
+    fn outlier_split_reduces_error_further() {
+        let mut rng = Rng::new(93);
+        let (mut w, h) = problem(&mut rng, 12, 64);
+        for i in 0..12 {
+            let j = rng.below(64) as usize;
+            w[(i, j)] = 15.0;
+        }
+        let e_dense = SqueezeLlm::dense_only(3)
+            .quantize(&w, &h)
+            .layer_error(&w, &h);
+        let e_star = SqueezeLlm { bits: 3, outlier_ratio: 0.02, kmeans_iters: 25 }
+            .quantize(&w, &h)
+            .layer_error(&w, &h);
+        assert!(e_star < e_dense, "{} vs {}", e_star, e_dense);
+    }
+
+    #[test]
+    fn sparse_plus_lut_reconstructs_w_hat() {
+        let mut rng = Rng::new(94);
+        let (w, h) = problem(&mut rng, 8, 32);
+        let r = SqueezeLlm::new(4).quantize(&w, &h);
+        let mut recon = r.lut.as_ref().unwrap().dequant();
+        if let Some(sp) = &r.sparse {
+            recon.add_assign(&sp.to_dense());
+        }
+        assert!(prop::all_close(&recon.data, &r.w_hat.data, 1e-6, 1e-6));
+    }
+}

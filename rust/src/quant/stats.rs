@@ -1,0 +1,142 @@
+//! Weight-distribution statistics — regenerates Figure 1(b) (violin plots
+//! of decoder weights showing non-uniformity) as quantile/moment summaries
+//! printable in a terminal.
+
+use crate::tensor::Mat;
+
+#[derive(Debug, Clone)]
+pub struct DistStats {
+    pub name: String,
+    pub min: f32,
+    pub max: f32,
+    pub mean: f64,
+    pub std: f64,
+    /// excess kurtosis: 0 for a gaussian, > 0 = heavy tails (the paper's
+    /// argument for non-uniform quantization)
+    pub kurtosis: f64,
+    /// quantiles at 0.1%, 1%, 25%, 50%, 75%, 99%, 99.9%
+    pub quantiles: [f32; 7],
+    /// fraction of range occupied by the central 99% of mass — tiny values
+    /// mean uniform grids waste most of their levels on tails
+    pub central99_range_frac: f64,
+}
+
+pub const QUANTILE_PROBS: [f64; 7] =
+    [0.001, 0.01, 0.25, 0.5, 0.75, 0.99, 0.999];
+
+pub fn dist_stats(name: &str, w: &Mat) -> DistStats {
+    let mut v: Vec<f32> = w.data.clone();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    let mean = v.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+    let m2 = v
+        .iter()
+        .map(|&x| (x as f64 - mean).powi(2))
+        .sum::<f64>()
+        / n as f64;
+    let m4 = v
+        .iter()
+        .map(|&x| (x as f64 - mean).powi(4))
+        .sum::<f64>()
+        / n as f64;
+    let std = m2.sqrt();
+    let kurtosis = if m2 > 0.0 { m4 / (m2 * m2) - 3.0 } else { 0.0 };
+    let q = |p: f64| v[((n - 1) as f64 * p).round() as usize];
+    let quantiles = [
+        q(0.001),
+        q(0.01),
+        q(0.25),
+        q(0.5),
+        q(0.75),
+        q(0.99),
+        q(0.999),
+    ];
+    let full = (v[n - 1] - v[0]) as f64;
+    let central = (q(0.995) - q(0.005)) as f64;
+    DistStats {
+        name: name.to_string(),
+        min: v[0],
+        max: v[n - 1],
+        mean,
+        std,
+        kurtosis,
+        quantiles,
+        central99_range_frac: if full > 0.0 { central / full } else { 1.0 },
+    }
+}
+
+/// ASCII "violin": a histogram strip over the value range.
+pub fn ascii_violin(w: &Mat, bins: usize, width: usize) -> String {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in &w.data {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let span = (hi - lo).max(1e-12);
+    let mut hist = vec![0usize; bins];
+    for &v in &w.data {
+        let b = (((v - lo) / span) * bins as f32) as usize;
+        hist[b.min(bins - 1)] += 1;
+    }
+    let mx = *hist.iter().max().unwrap_or(&1) as f64;
+    let mut out = String::new();
+    for (bi, &c) in hist.iter().enumerate() {
+        let x = lo + span * (bi as f32 + 0.5) / bins as f32;
+        let bar = ((c as f64 / mx) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{:>9.4} |{}\n",
+            x,
+            "#".repeat(bar)
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gaussian_has_near_zero_kurtosis() {
+        let mut rng = Rng::new(1);
+        let w = Mat::from_vec(64, 64, rng.normal_vec_f32(64 * 64));
+        let s = dist_stats("g", &w);
+        assert!(s.kurtosis.abs() < 0.3, "{}", s.kurtosis);
+        assert!(s.mean.abs() < 0.05);
+        assert!((s.std - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn heavy_tails_detected() {
+        let mut rng = Rng::new(2);
+        let mut data = rng.normal_vec_f32(4000);
+        for i in 0..10 {
+            data[i] = 25.0; // outliers (0.25% — outside the central 99%)
+        }
+        let w = Mat::from_vec(40, 100, data);
+        let s = dist_stats("t", &w);
+        assert!(s.kurtosis > 5.0, "{}", s.kurtosis);
+        assert!(s.central99_range_frac < 0.5, "{}", s.central99_range_frac);
+    }
+
+    #[test]
+    fn quantiles_monotone() {
+        let mut rng = Rng::new(3);
+        let w = Mat::from_vec(10, 50, rng.normal_vec_f32(500));
+        let s = dist_stats("q", &w);
+        for win in s.quantiles.windows(2) {
+            assert!(win[0] <= win[1]);
+        }
+        assert!(s.min <= s.quantiles[0] && s.quantiles[6] <= s.max);
+    }
+
+    #[test]
+    fn violin_renders() {
+        let mut rng = Rng::new(4);
+        let w = Mat::from_vec(8, 32, rng.normal_vec_f32(256));
+        let v = ascii_violin(&w, 11, 30);
+        assert_eq!(v.lines().count(), 11);
+    }
+}

@@ -1,0 +1,176 @@
+//! Manifest parsing: artifacts/manifest.json describes every AOT graph
+//! (path, ordered input specs, output names) and every model (config,
+//! weight files, param order). Written by python/compile/aot.py.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::model::ModelConfig;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U8,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Option<Dtype> {
+        match s {
+            "f32" => Some(Dtype::F32),
+            "i32" => Some(Dtype::I32),
+            "u8" => Some(Dtype::U8),
+            _ => None,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::U8 => 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GraphSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub config: ModelConfig,
+    pub base_config: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub ganq_iters: usize,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub graphs: BTreeMap<String, GraphSpec>,
+}
+
+impl Manifest {
+    pub fn load(base: &Path) -> Result<Manifest, String> {
+        let txt = std::fs::read_to_string(base.join("manifest.json"))
+            .map_err(|e| format!("read manifest: {}", e))?;
+        Self::parse(&txt, base)
+    }
+
+    pub fn parse(txt: &str, base: &Path) -> Result<Manifest, String> {
+        let j = Json::parse(txt)?;
+        let ganq_iters = j
+            .get("ganq_iters")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(10);
+        let mut models = BTreeMap::new();
+        for (name, m) in
+            j.get("models").and_then(|v| v.as_obj()).ok_or("models")?
+        {
+            let config = ModelConfig::from_json(
+                m.get("config").ok_or("model config")?,
+            )
+            .ok_or("bad config")?;
+            let base_config = m
+                .get("base_config")
+                .and_then(|v| v.as_str())
+                .unwrap_or(name)
+                .to_string();
+            models.insert(name.clone(), ModelEntry { config, base_config });
+        }
+        let mut graphs = BTreeMap::new();
+        for (name, g) in
+            j.get("graphs").and_then(|v| v.as_obj()).ok_or("graphs")?
+        {
+            let rel = g.get("path").and_then(|v| v.as_str()).ok_or("path")?;
+            let mut inputs = Vec::new();
+            for i in
+                g.get("inputs").and_then(|v| v.as_arr()).ok_or("inputs")?
+            {
+                inputs.push(TensorSpec {
+                    name: i
+                        .get("name")
+                        .and_then(|v| v.as_str())
+                        .ok_or("input name")?
+                        .to_string(),
+                    dtype: Dtype::parse(
+                        i.get("dtype").and_then(|v| v.as_str()).ok_or("dt")?,
+                    )
+                    .ok_or("bad dtype")?,
+                    dims: i
+                        .get("dims")
+                        .and_then(|v| v.as_usize_vec())
+                        .ok_or("dims")?,
+                });
+            }
+            let outputs = g
+                .get("outputs")
+                .and_then(|v| v.as_arr())
+                .ok_or("outputs")?
+                .iter()
+                .map(|o| o.as_str().unwrap_or("").to_string())
+                .collect();
+            graphs.insert(
+                name.clone(),
+                GraphSpec {
+                    name: name.clone(),
+                    path: base.join(rel),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        Ok(Manifest { ganq_iters, models, graphs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "ganq_iters": 10,
+      "models": {"opt-micro": {"config": {"d":64,"layers":2,"heads":2,"ff":256,"ctx":128,"vocab":256}, "base_config": "opt-micro"}},
+      "graphs": {"g1": {"path": "hlo/g1.hlo.txt",
+        "inputs": [{"name":"x","dtype":"f32","dims":[2,3]},
+                   {"name":"q","dtype":"u8","dims":[4]}],
+        "outputs": ["y"]}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        assert_eq!(m.ganq_iters, 10);
+        let g = &m.graphs["g1"];
+        assert_eq!(g.inputs.len(), 2);
+        assert_eq!(g.inputs[0].dtype, Dtype::F32);
+        assert_eq!(g.inputs[0].numel(), 6);
+        assert_eq!(g.inputs[1].dtype, Dtype::U8);
+        assert!(g.path.ends_with("hlo/g1.hlo.txt"));
+        let cfg = m.models["opt-micro"].config;
+        assert_eq!(cfg.d, 64);
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = SAMPLE.replace("\"u8\"", "\"u7\"");
+        assert!(Manifest::parse(&bad, Path::new("/")).is_err());
+    }
+}

@@ -1,0 +1,90 @@
+//! GANQ through the AOT stack: the L2 solver graph (with the L1 Pallas
+//! back-substitution kernel inside its scan) executed via PJRT. The Rust
+//! side computes the preconditioning + Cholesky factor natively (tensor::
+//! linalg) and hands (W, L, T0) to the `ganq{bits}_{m}x{n}` artifact.
+//!
+//! Cross-validated against the native solver (quant::ganq) in integration
+//! tests; the ablation bench compares their wall-clock.
+
+use crate::quant::lut::lut_from_parts;
+use crate::quant::{rtn, QuantResult, Storage};
+use crate::tensor::{linalg, Mat};
+
+use super::{HostTensor, Runtime};
+
+/// Quantize one layer via the AOT GANQ graph. Returns None if no artifact
+/// exists for this (bits, m, n) shape — callers fall back to the native
+/// solver.
+pub fn quantize_layer_hlo(
+    rt: &Runtime,
+    w: &Mat,
+    h: &Mat,
+    bits: u8,
+) -> Result<Option<QuantResult>, String> {
+    let (m, n) = (w.rows, w.cols);
+    let graph = format!("ganq{}_{}x{}", bits, m, n);
+    if !rt.has_graph(&graph) {
+        return Ok(None);
+    }
+    let hp = linalg::precondition(h);
+    let l = linalg::cholesky(&hp)
+        .ok_or("preconditioned H not SPD (unexpected)")?;
+    let (_, t0) = rtn::rtn_codebook(w, bits);
+    let k = 1usize << bits;
+
+    let inputs = [
+        HostTensor::F32(vec![m, n], w.data.clone()),
+        HostTensor::F32(vec![n, n], l.data.clone()),
+        HostTensor::F32(vec![m, k], t0.data.clone()),
+    ];
+    let out = rt.run(&graph, &inputs)?;
+    if out.len() != 3 {
+        return Err(format!("ganq graph returned {} outputs", out.len()));
+    }
+    let q = out[0].as_i32();
+    let t = Mat::from_vec(m, k, out[1].as_f32().to_vec());
+    let codes: Vec<u8> = q.iter().map(|&c| c.clamp(0, 255) as u8).collect();
+    let lut = lut_from_parts(m, n, bits, codes, t);
+    let w_hat = lut.dequant();
+    let storage = Storage {
+        code_bits: m * n * bits as usize,
+        meta_bits: m * k * 16,
+        sparse_bits: 0,
+    };
+    Ok(Some(QuantResult {
+        method: "ganq-hlo".into(),
+        bits,
+        w_hat,
+        lut: Some(lut),
+        sparse: None,
+        storage,
+    }))
+}
+
+/// Per-iteration errors from the graph (third output) — used by the
+/// monotonicity integration test and the ablation bench.
+pub fn solve_errors_hlo(
+    rt: &Runtime,
+    w: &Mat,
+    h: &Mat,
+    bits: u8,
+) -> Result<Option<Vec<f32>>, String> {
+    let (m, n) = (w.rows, w.cols);
+    let graph = format!("ganq{}_{}x{}", bits, m, n);
+    if !rt.has_graph(&graph) {
+        return Ok(None);
+    }
+    let hp = linalg::precondition(h);
+    let l = linalg::cholesky(&hp).ok_or("not SPD")?;
+    let (_, t0) = rtn::rtn_codebook(w, bits);
+    let k = 1usize << bits;
+    let out = rt.run(
+        &graph,
+        &[
+            HostTensor::F32(vec![m, n], w.data.clone()),
+            HostTensor::F32(vec![n, n], l.data.clone()),
+            HostTensor::F32(vec![m, k], t0.data.clone()),
+        ],
+    )?;
+    Ok(Some(out[2].as_f32().to_vec()))
+}

@@ -1,0 +1,355 @@
+//! PJRT runtime: loads AOT HLO-text artifacts, compiles them once per
+//! process (executable cache), and executes them from the coordinator hot
+//! path. Adapts the /opt/xla-example/load_hlo pattern: HLO *text* is the
+//! interchange format (jax >= 0.5 protos are rejected by xla_extension
+//! 0.5.1; the text parser reassigns instruction ids).
+
+pub mod artifacts;
+pub mod ganq_hlo;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+pub use artifacts::{Dtype, GraphSpec, Manifest, TensorSpec};
+
+/// Host-side tensor value crossing the runtime boundary.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<usize>, Vec<f32>),
+    I32(Vec<usize>, Vec<i32>),
+    U8(Vec<usize>, Vec<u8>),
+}
+
+impl HostTensor {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(d, _) | HostTensor::I32(d, _) | HostTensor::U8(d, _) => d,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims().iter().product()
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32(..) => Dtype::F32,
+            HostTensor::I32(..) => Dtype::I32,
+            HostTensor::U8(..) => Dtype::U8,
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            HostTensor::F32(_, v) => v,
+            _ => panic!("not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            HostTensor::I32(_, v) => v,
+            _ => panic!("not i32"),
+        }
+    }
+
+    pub fn as_u8(&self) -> &[u8] {
+        match self {
+            HostTensor::U8(_, v) => v,
+            _ => panic!("not u8"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> f32 {
+        self.as_f32()[0]
+    }
+
+    /// (element type, dims, little-endian bytes) for raw-buffer upload.
+    pub fn to_raw(&self) -> (xla::ElementType, &[usize], Vec<u8>) {
+        match self {
+            HostTensor::F32(d, v) => (
+                xla::ElementType::F32,
+                d,
+                v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            ),
+            HostTensor::I32(d, v) => (
+                xla::ElementType::S32,
+                d,
+                v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            ),
+            HostTensor::U8(d, v) => (xla::ElementType::U8, d, v.clone()),
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal, String> {
+        let (ty, dims, bytes): (xla::ElementType, &[usize], Vec<u8>) =
+            match self {
+                HostTensor::F32(d, v) => (
+                    xla::ElementType::F32,
+                    d,
+                    v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+                ),
+                HostTensor::I32(d, v) => (
+                    xla::ElementType::S32,
+                    d,
+                    v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+                ),
+                HostTensor::U8(d, v) => {
+                    (xla::ElementType::U8, d, v.clone())
+                }
+            };
+        xla::Literal::create_from_shape_and_untyped_data(ty, dims, &bytes)
+            .map_err(|e| format!("literal: {:?}", e))
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor, String> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| format!("shape: {:?}", e))?;
+        let dims: Vec<usize> =
+            shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::F32(
+                dims,
+                lit.to_vec::<f32>().map_err(|e| format!("{:?}", e))?,
+            )),
+            xla::ElementType::S32 => Ok(HostTensor::I32(
+                dims,
+                lit.to_vec::<i32>().map_err(|e| format!("{:?}", e))?,
+            )),
+            xla::ElementType::U8 => Ok(HostTensor::U8(
+                dims,
+                lit.to_vec::<u8>().map_err(|e| format!("{:?}", e))?,
+            )),
+            other => Err(format!("unsupported output dtype {:?}", other)),
+        }
+    }
+}
+
+/// The PJRT runtime. Not Sync: owns raw PJRT handles; the coordinator
+/// keeps it on a single engine thread.
+pub struct Runtime {
+    pub base: PathBuf,
+    pub manifest: Manifest,
+    pub client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Load from the resolved artifacts directory.
+    pub fn load() -> Result<Runtime, String> {
+        let base = crate::util::artifacts_dir();
+        let manifest = Manifest::load(&base)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| format!("pjrt cpu client: {:?}", e))?;
+        Ok(Runtime {
+            base,
+            manifest,
+            client,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn has_graph(&self, name: &str) -> bool {
+        self.manifest.graphs.contains_key(name)
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&GraphSpec, String> {
+        self.manifest
+            .graphs
+            .get(name)
+            .ok_or_else(|| format!("no graph '{}' in manifest", name))
+    }
+
+    /// Compile (or fetch cached) executable for a graph.
+    pub fn executable(
+        &self,
+        name: &str,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>, String> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.graph(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.path.to_str().ok_or("bad path")?,
+        )
+        .map_err(|e| format!("parse hlo {}: {:?}", name, e))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| format!("compile {}: {:?}", name, e))?;
+        let rc = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Validate inputs against the manifest spec (shape + dtype).
+    fn check_inputs(
+        spec: &GraphSpec,
+        inputs: &[HostTensor],
+    ) -> Result<(), String> {
+        if spec.inputs.len() != inputs.len() {
+            return Err(format!(
+                "graph {} expects {} inputs, got {}",
+                spec.name,
+                spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (ts, ht) in spec.inputs.iter().zip(inputs) {
+            if ts.dims != ht.dims() || ts.dtype != ht.dtype() {
+                return Err(format!(
+                    "graph {} input '{}': expected {:?}{:?}, got {:?}{:?}",
+                    spec.name,
+                    ts.name,
+                    ts.dtype,
+                    ts.dims,
+                    ht.dtype(),
+                    ht.dims()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute a graph with host tensors; returns the decomposed output
+    /// tuple as host tensors.
+    pub fn run(
+        &self,
+        name: &str,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>, String> {
+        let spec = self.graph(name)?.clone();
+        Self::check_inputs(&spec, inputs)?;
+        let exe = self.executable(name)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_, _>>()?;
+        let out = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| format!("execute {}: {:?}", name, e))?;
+        let result = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("to_literal {}: {:?}", name, e))?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| format!("tuple {}: {:?}", name, e))?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Execute with pre-staged device buffers for the weight suffix of the
+    /// argument list (serving hot path: weights upload once). `head` are
+    /// per-step host tensors; `tail` are resident buffers.
+    pub fn run_with_resident(
+        &self,
+        name: &str,
+        head: &[HostTensor],
+        tail: &[xla::PjRtBuffer],
+    ) -> Result<Vec<HostTensor>, String> {
+        let exe = self.executable(name)?;
+        let mut bufs: Vec<&xla::PjRtBuffer> = Vec::new();
+        let head_bufs: Vec<xla::PjRtBuffer> = head
+            .iter()
+            .map(|t| self.upload(t))
+            .collect::<Result<_, String>>()?;
+        bufs.extend(head_bufs.iter());
+        bufs.extend(tail.iter());
+        let out = exe
+            .execute_b(&bufs)
+            .map_err(|e| format!("execute_b {}: {:?}", name, e))?;
+        let result = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("to_literal {}: {:?}", name, e))?;
+        let parts =
+            result.to_tuple().map_err(|e| format!("tuple: {:?}", e))?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Upload one host tensor to a device buffer. Uses the *typed*
+    /// buffer_from_host_buffer path: the C shim runs it with
+    /// kImmutableOnlyDuringCall semantics (synchronous copy), whereas
+    /// buffer_from_host_literal copies *asynchronously* and races with the
+    /// literal being dropped (observed SIGSEGV in AbstractTfrtCpuBuffer::
+    /// CopyFromLiteral). The raw-bytes variant is also unusable: it passes
+    /// `ElementType as i32` where the C API expects a PrimitiveType value
+    /// (F32 -> F16), corrupting the buffer size.
+    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer, String> {
+        match t {
+            HostTensor::F32(d, v) => self
+                .client
+                .buffer_from_host_buffer(v, d, None)
+                .map_err(|e| format!("upload f32: {:?}", e)),
+            HostTensor::I32(d, v) => self
+                .client
+                .buffer_from_host_buffer(v, d, None)
+                .map_err(|e| format!("upload i32: {:?}", e)),
+            HostTensor::U8(d, v) => self
+                .client
+                .buffer_from_host_buffer(v, d, None)
+                .map_err(|e| format!("upload u8: {:?}", e)),
+        }
+    }
+
+    /// Upload host tensors to device buffers (weights staging).
+    pub fn stage(
+        &self,
+        tensors: &[HostTensor],
+    ) -> Result<Vec<xla::PjRtBuffer>, String> {
+        tensors.iter().map(|t| self.upload(t)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_roundtrip_via_literal() {
+        for t in [
+            HostTensor::F32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.5]),
+            HostTensor::I32(vec![4], vec![-1, 0, 7, 2_000_000]),
+            HostTensor::U8(vec![2, 2], vec![0, 127, 200, 255]),
+        ] {
+            let lit = t.to_literal().unwrap();
+            let back = HostTensor::from_literal(&lit).unwrap();
+            assert_eq!(back.dims(), t.dims());
+            match (&t, &back) {
+                (HostTensor::F32(_, a), HostTensor::F32(_, b)) => {
+                    assert_eq!(a, b)
+                }
+                (HostTensor::I32(_, a), HostTensor::I32(_, b)) => {
+                    assert_eq!(a, b)
+                }
+                (HostTensor::U8(_, a), HostTensor::U8(_, b)) => {
+                    assert_eq!(a, b)
+                }
+                _ => panic!("dtype changed"),
+            }
+        }
+    }
+
+    #[test]
+    fn shape_validation_messages() {
+        let spec = GraphSpec {
+            name: "g".into(),
+            path: "x".into(),
+            inputs: vec![TensorSpec {
+                name: "a".into(),
+                dtype: Dtype::F32,
+                dims: vec![2],
+            }],
+            outputs: vec!["y".into()],
+        };
+        let bad = [HostTensor::F32(vec![3], vec![0.0; 3])];
+        let err = Runtime::check_inputs(&spec, &bad).unwrap_err();
+        assert!(err.contains("input 'a'"), "{}", err);
+        let wrong_count: [HostTensor; 0] = [];
+        assert!(Runtime::check_inputs(&spec, &wrong_count).is_err());
+        let ok = [HostTensor::F32(vec![2], vec![0.0; 2])];
+        assert!(Runtime::check_inputs(&spec, &ok).is_ok());
+    }
+}

@@ -1,0 +1,173 @@
+//! CSR sparse matrix + SpMV/SpMM — the substrate for GANQ*'s outlier
+//! branch (paper §3.3): y = W_dense_hat x + W_sparse x, where W_sparse
+//! holds the extracted outliers (~0.5% nnz).
+
+use crate::tensor::Mat;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from a dense matrix keeping nonzeros.
+    pub fn from_dense(m: &Mat) -> Csr {
+        let mut row_ptr = Vec::with_capacity(m.rows + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0);
+        for i in 0..m.rows {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    col_idx.push(j as u32);
+                    values.push(v);
+                }
+            }
+            row_ptr.push(values.len());
+        }
+        Csr { rows: m.rows, cols: m.cols, row_ptr, col_idx, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Storage bytes: values f32 + 32-bit col indices + row pointers.
+    pub fn storage_bytes(&self) -> usize {
+        self.values.len() * 4 + self.col_idx.len() * 4 + self.row_ptr.len() * 8
+    }
+
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                out[(i, self.col_idx[k] as usize)] = self.values[k];
+            }
+        }
+        out
+    }
+
+    /// y += A x for a single activation vector x (len = cols).
+    pub fn spmv_add(&self, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.cols);
+        debug_assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            let mut acc = 0.0f32;
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                acc += self.values[k] * x[self.col_idx[k] as usize];
+            }
+            y[i] += acc;
+        }
+    }
+
+    /// Y += X A^T for a batch X [p, cols] -> adds into Y [p, rows]
+    /// (activation-major layout used by the serving path).
+    pub fn spmm_add(&self, x: &Mat, y: &mut Mat) {
+        assert_eq!(x.cols, self.cols);
+        assert_eq!(y.cols, self.rows);
+        assert_eq!(x.rows, y.rows);
+        for p in 0..x.rows {
+            let xr = x.row(p);
+            let yr = y.row_mut(p);
+            for i in 0..self.rows {
+                let mut acc = 0.0f32;
+                for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                    acc += self.values[k] * xr[self.col_idx[k] as usize];
+                }
+                yr[i] += acc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn rand_sparse(rng: &mut Rng, r: usize, c: usize, density: f64) -> Mat {
+        let mut m = Mat::zeros(r, c);
+        for v in &mut m.data {
+            if rng.uniform() < density {
+                *v = rng.normal() as f32;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        prop::check("csr_roundtrip", 21, 10, |rng, _| {
+            let r = 1 + rng.below(20) as usize;
+            let c = 1 + rng.below(20) as usize;
+            let m = rand_sparse(rng, r, c, 0.2);
+            let csr = Csr::from_dense(&m);
+            crate::prop_assert!(csr.to_dense() == m, "roundtrip failed");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        prop::check("spmv", 22, 10, |rng, _| {
+            let r = 1 + rng.below(16) as usize;
+            let c = 1 + rng.below(16) as usize;
+            let m = rand_sparse(rng, r, c, 0.3);
+            let csr = Csr::from_dense(&m);
+            let x: Vec<f32> = rng.normal_vec_f32(c);
+            let mut y = vec![0.0f32; r];
+            csr.spmv_add(&x, &mut y);
+            for i in 0..r {
+                let expect = crate::tensor::dot(m.row(i), &x);
+                crate::prop_assert!(
+                    prop::close(y[i] as f64, expect as f64, 1e-4, 1e-4),
+                    "row {}",
+                    i
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn spmm_matches_matmul_tb() {
+        let mut rng = Rng::new(23);
+        let m = rand_sparse(&mut rng, 12, 8, 0.25);
+        let csr = Csr::from_dense(&m);
+        let x = Mat::from_vec(5, 8, rng.normal_vec_f32(40));
+        let mut y = Mat::zeros(5, 12);
+        csr.spmm_add(&x, &mut y);
+        let expect = x.matmul_tb(&m);
+        assert!(prop::all_close(&y.data, &expect.data, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn nnz_and_density() {
+        let mut m = Mat::zeros(10, 10);
+        m[(0, 0)] = 1.0;
+        m[(9, 9)] = -1.0;
+        let csr = Csr::from_dense(&m);
+        assert_eq!(csr.nnz(), 2);
+        assert!((csr.density() - 0.02).abs() < 1e-12);
+        assert!(csr.storage_bytes() > 0);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = Mat::zeros(3, 4);
+        let csr = Csr::from_dense(&m);
+        assert_eq!(csr.nnz(), 0);
+        let mut y = vec![0.0f32; 3];
+        csr.spmv_add(&[1.0; 4], &mut y);
+        assert_eq!(y, vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,318 @@
+//! Linear algebra for the GANQ pipeline: adaptive diagonal-dominance
+//! preconditioning (paper eq. 23-24), Cholesky factorization (f64
+//! internals), triangular solves, and small SPD solves for the T-step
+//! (paper eq. 7). No LAPACK exists here; everything is from scratch and
+//! pinned by tests (including against numpy via the golden fixtures).
+
+use super::Mat;
+
+/// Paper eq. 23: delta_i = max(sum_j |H_ij| - 2 H_ii, 1e-8); returns the
+/// preconditioned H + Diag(delta) (eq. 24 input).
+pub fn precondition(h: &Mat) -> Mat {
+    assert_eq!(h.rows, h.cols);
+    let n = h.rows;
+    let mut out = h.clone();
+    for i in 0..n {
+        let absrow: f64 =
+            h.row(i).iter().map(|&v| (v as f64).abs()).sum();
+        let delta = (absrow - 2.0 * h[(i, i)] as f64).max(1e-8);
+        out[(i, i)] = (h[(i, i)] as f64 + delta) as f32;
+    }
+    out
+}
+
+/// Fixed-lambda preconditioning (Remark 3.1) — the Table 7 ablation arm.
+pub fn precondition_lambda(h: &Mat, lambda: f64) -> Mat {
+    assert_eq!(h.rows, h.cols);
+    let mut out = h.clone();
+    for i in 0..h.rows {
+        out[(i, i)] = (h[(i, i)] as f64 + lambda) as f32;
+    }
+    out
+}
+
+/// Cholesky factorization A = L L^T (lower). f64 accumulation; returns
+/// None if A is not positive definite (caller should precondition).
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = vec![0.0f64; n * n];
+    for j in 0..n {
+        let mut d = a[(j, j)] as f64;
+        for k in 0..j {
+            d -= l[j * n + k] * l[j * n + k];
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return None;
+        }
+        let dj = d.sqrt();
+        l[j * n + j] = dj;
+        for i in j + 1..n {
+            let mut s = a[(i, j)] as f64;
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            l[i * n + j] = s / dj;
+        }
+    }
+    Some(Mat::from_vec(
+        n,
+        n,
+        l.into_iter().map(|v| v as f32).collect(),
+    ))
+}
+
+/// Solve L y = b (forward substitution), L lower-triangular.
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[(i, k)] as f64 * y[k];
+        }
+        y[i] = s / l[(i, i)] as f64;
+    }
+    y
+}
+
+/// Solve L^T x = y (back substitution).
+pub fn solve_lower_t(l: &Mat, y: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in i + 1..n {
+            s -= l[(k, i)] as f64 * x[k];
+        }
+        x[i] = s / l[(i, i)] as f64;
+    }
+    x
+}
+
+/// Small dense SPD solve A x = b in f64 (the 2^N x 2^N T-step system).
+/// Adds `eps` to the diagonal. Returns None if the (regularized) matrix
+/// still fails to factor.
+pub fn solve_spd_small(a: &[f64], n: usize, b: &[f64], eps: f64) -> Option<Vec<f64>> {
+    let mut l = vec![0.0f64; n * n];
+    for j in 0..n {
+        let mut d = a[j * n + j] + eps;
+        for k in 0..j {
+            d -= l[j * n + k] * l[j * n + k];
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return None;
+        }
+        let dj = d.sqrt();
+        l[j * n + j] = dj;
+        for i in j + 1..n {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            l[i * n + j] = s / dj;
+        }
+    }
+    // forward then back substitution
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * n + k] * y[k];
+        }
+        y[i] = s / l[i * n + i];
+    }
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in i + 1..n {
+            s -= l[k * n + i] * x[k];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    Some(x)
+}
+
+/// tr((W - W_hat) H (W - W_hat)^T) — the layer-wise objective (eq. 1),
+/// f64 accumulation.
+pub fn layer_error(w: &Mat, w_hat: &Mat, h: &Mat) -> f64 {
+    assert_eq!(w.rows, w_hat.rows);
+    assert_eq!(w.cols, w_hat.cols);
+    assert_eq!(h.rows, w.cols);
+    let n = w.cols;
+    let mut total = 0.0f64;
+    let mut dh = vec![0.0f64; n];
+    for i in 0..w.rows {
+        let wr = w.row(i);
+        let wh = w_hat.row(i);
+        // d = w - w_hat; total += d H d^T
+        for j in 0..n {
+            let mut s = 0.0f64;
+            let hrow = h.row(j);
+            for k in 0..n {
+                s += (wr[k] - wh[k]) as f64 * hrow[k] as f64;
+            }
+            dh[j] = s;
+        }
+        for j in 0..n {
+            total += dh[j] * (wr[j] - wh[j]) as f64;
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn rand_spd(rng: &mut Rng, n: usize, p: usize) -> Mat {
+        let x = Mat::from_vec(n, p, rng.normal_vec_f32(n * p));
+        x.gram()
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        prop::check("chol", 5, 10, |rng, _| {
+            let n = 2 + rng.below(20) as usize;
+            let a = precondition(&rand_spd(rng, n, 2 * n + 4));
+            let l = cholesky(&a).ok_or("factorization failed")?;
+            let back = l.matmul(&l.t());
+            crate::prop_assert!(
+                prop::all_close(&back.data, &a.data, 2e-2, 2e-2),
+                "LL^T != A (n={}), maxdiff {}",
+                n,
+                prop::max_abs_diff(&back.data, &a.data)
+            );
+            // strictly lower-triangular above diagonal is zero
+            for i in 0..n {
+                for j in i + 1..n {
+                    crate::prop_assert!(l[(i, j)] == 0.0, "upper nonzero");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eig -1
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn precondition_fixes_rank_deficient() {
+        // fc2-style degenerate Gram (rank << n) must factor afterwards
+        let mut rng = Rng::new(9);
+        let mut x = Mat::zeros(12, 30);
+        for i in 0..3 {
+            let row = rng.normal_vec_f32(30);
+            x.row_mut(i).copy_from_slice(&row);
+        }
+        let h = x.gram();
+        assert!(cholesky(&h).is_none(), "degenerate H should not factor");
+        let hp = precondition(&h);
+        assert!(cholesky(&hp).is_some());
+    }
+
+    #[test]
+    fn precondition_is_diagonally_dominant() {
+        let mut rng = Rng::new(10);
+        let h = rand_spd(&mut rng, 16, 8);
+        let hp = precondition(&h);
+        for i in 0..16 {
+            let off: f64 = hp
+                .row(i)
+                .iter()
+                .enumerate()
+                .filter(|(j, _)| *j != i)
+                .map(|(_, &v)| (v as f64).abs())
+                .sum();
+            assert!(
+                hp[(i, i)] as f64 >= off - 1e-3,
+                "row {} not dominant",
+                i
+            );
+        }
+    }
+
+    #[test]
+    fn triangular_solves_invert() {
+        let mut rng = Rng::new(11);
+        let a = precondition(&rand_spd(&mut rng, 10, 24));
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f64> = (0..10).map(|i| i as f64 - 4.0).collect();
+        let y = solve_lower(&l, &b);
+        let x = solve_lower_t(&l, &y);
+        // check A x = b
+        for i in 0..10 {
+            let mut s = 0.0f64;
+            for j in 0..10 {
+                s += a[(i, j)] as f64 * x[j];
+            }
+            assert!((s - b[i]).abs() < 1e-2, "row {}: {} vs {}", i, s, b[i]);
+        }
+    }
+
+    #[test]
+    fn spd_small_solve() {
+        prop::check("spd_small", 12, 10, |rng, _| {
+            let n = 1 + rng.below(16) as usize;
+            let m = 2 * n + 2;
+            let r: Vec<f64> =
+                (0..n * m).map(|_| rng.normal()).collect();
+            let mut a = vec![0.0f64; n * n];
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = 0.0;
+                    for k in 0..m {
+                        s += r[i * m + k] * r[j * m + k];
+                    }
+                    a[i * n + j] = s;
+                }
+            }
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let x = solve_spd_small(&a, n, &b, 1e-9)
+                .ok_or("solve failed")?;
+            for i in 0..n {
+                let mut s = 0.0;
+                for j in 0..n {
+                    s += a[i * n + j] * x[j];
+                }
+                crate::prop_assert!(
+                    prop::close(s, b[i], 1e-5, 1e-5),
+                    "Ax != b at {}",
+                    i
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn layer_error_zero_when_exact() {
+        let mut rng = Rng::new(13);
+        let w = Mat::from_vec(4, 6, rng.normal_vec_f32(24));
+        let h = rand_spd(&mut rng, 6, 12);
+        assert_eq!(layer_error(&w, &w, &h), 0.0);
+    }
+
+    #[test]
+    fn layer_error_matches_direct_frobenius() {
+        // ||W X - W_hat X||_F^2 computed directly must equal the trace form
+        let mut rng = Rng::new(14);
+        let w = Mat::from_vec(3, 5, rng.normal_vec_f32(15));
+        let wh = Mat::from_vec(3, 5, rng.normal_vec_f32(15));
+        let x = Mat::from_vec(5, 20, rng.normal_vec_f32(100));
+        let h = x.gram();
+        let direct = w.matmul(&x).sub(&wh.matmul(&x)).frob_sq();
+        let trace = layer_error(&w, &wh, &h);
+        assert!(
+            prop::close(direct, trace, 1e-3, 1e-3),
+            "{} vs {}",
+            direct,
+            trace
+        );
+    }
+}

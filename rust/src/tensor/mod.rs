@@ -1,0 +1,337 @@
+//! Dense f32 matrix substrate for the native quantizers, calibration
+//! capture, and the fallback forward path. Row-major `Mat` with blocked +
+//! threaded matmul, plus the linear algebra the GANQ pipeline needs
+//! (Cholesky, triangular solves, SPD solve) implemented from scratch —
+//! no BLAS/LAPACK exists in this environment.
+
+pub mod linalg;
+
+use crate::util::pool;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// C = A @ B, blocked over k with the i-loop parallelized.
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let mut out = Mat::zeros(m, n);
+        let threads = pool::default_threads();
+        let a = &self.data;
+        let bd = &b.data;
+        pool::par_rows_mut(&mut out.data, n, threads, |row0, chunk| {
+            for (ri, orow) in chunk.chunks_mut(n).enumerate() {
+                let i = row0 + ri;
+                let arow = &a[i * k..(i + 1) * k];
+                for (kk, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &bd[kk * n..(kk + 1) * n];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// C = A @ B^T — the layout used by linear layers (W stored [out, in]).
+    pub fn matmul_tb(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.cols, "matmul_tb shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, b.rows);
+        let mut out = Mat::zeros(m, n);
+        let threads = pool::default_threads();
+        let a = &self.data;
+        let bd = &b.data;
+        pool::par_rows_mut(&mut out.data, n, threads, |row0, chunk| {
+            for (ri, orow) in chunk.chunks_mut(n).enumerate() {
+                let i = row0 + ri;
+                let arow = &a[i * k..(i + 1) * k];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    let brow = &bd[j * k..(j + 1) * k];
+                    *o = dot(arow, brow);
+                }
+            }
+        });
+        out
+    }
+
+    /// H = X @ X^T accumulated in f64 (the calibration Gram matrix —
+    /// numerical accuracy here feeds straight into GANQ's Cholesky).
+    pub fn gram(&self) -> Mat {
+        let n = self.rows;
+        let k = self.cols;
+        let mut out = Mat::zeros(n, n);
+        let d = &self.data;
+        let threads = pool::default_threads();
+        pool::par_rows_mut(&mut out.data, n, threads, |row0, chunk| {
+            for (ri, orow) in chunk.chunks_mut(n).enumerate() {
+                let i = row0 + ri;
+                let xi = &d[i * k..(i + 1) * k];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    let xj = &d[j * k..(j + 1) * k];
+                    let mut acc = 0.0f64;
+                    for (a, b) in xi.iter().zip(xj) {
+                        acc += *a as f64 * *b as f64;
+                    }
+                    *o = acc as f32;
+                }
+            }
+        });
+        out
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!(self.data.len(), other.data.len());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!(self.data.len(), other.data.len());
+        Mat::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        )
+    }
+
+    pub fn frob_sq(&self) -> f64 {
+        self.data.iter().map(|&v| v as f64 * v as f64).sum()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: autovectorizes well and keeps error low
+    let mut s0 = 0.0f32;
+    let mut s1 = 0.0f32;
+    let mut s2 = 0.0f32;
+    let mut s3 = 0.0f32;
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    for i in chunks * 4..a.len() {
+        s0 += a[i] * b[i];
+    }
+    s0 + s1 + s2 + s3
+}
+
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// softmax in place over a slice (f32, max-subtracted).
+pub fn softmax(xs: &mut [f32]) {
+    let mx = xs.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let mut sum = 0.0f32;
+    for v in xs.iter_mut() {
+        *v = (*v - mx).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in xs.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// log-softmax value at one index (for NLL) without materializing the
+/// whole distribution twice.
+pub fn log_softmax_at(xs: &[f32], idx: usize) -> f32 {
+    let mx = xs.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let lse: f32 = xs.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln() + mx;
+    xs[idx] - lse
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn randm(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_vec(r, c, rng.normal_vec_f32(r * c))
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = randm(&mut rng, 5, 7);
+        let i = Mat::eye(7);
+        let c = a.matmul(&i);
+        assert!(prop::all_close(&c.data, &a.data, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        prop::check("matmul", 11, 10, |rng, _| {
+            let (m, k, n) = (
+                1 + rng.below(20) as usize,
+                1 + rng.below(20) as usize,
+                1 + rng.below(20) as usize,
+            );
+            let a = randm(rng, m, k);
+            let b = randm(rng, k, n);
+            let c = a.matmul(&b);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut s = 0.0f64;
+                    for kk in 0..k {
+                        s += a[(i, kk)] as f64 * b[(kk, j)] as f64;
+                    }
+                    crate::prop_assert!(
+                        prop::close(c[(i, j)] as f64, s, 1e-4, 1e-4),
+                        "mismatch at ({}, {}): {} vs {}",
+                        i, j, c[(i, j)], s
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matmul_tb_consistent() {
+        prop::check("matmul_tb", 13, 8, |rng, _| {
+            let (m, k, n) = (
+                1 + rng.below(16) as usize,
+                1 + rng.below(16) as usize,
+                1 + rng.below(16) as usize,
+            );
+            let a = randm(rng, m, k);
+            let b = randm(rng, n, k);
+            let c1 = a.matmul_tb(&b);
+            let c2 = a.matmul(&b.t());
+            crate::prop_assert!(
+                prop::all_close(&c1.data, &c2.data, 1e-4, 1e-4),
+                "tb != explicit transpose"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd_diag() {
+        let mut rng = Rng::new(3);
+        let x = randm(&mut rng, 10, 30);
+        let h = x.gram();
+        for i in 0..10 {
+            assert!(h[(i, i)] >= 0.0);
+            for j in 0..10 {
+                assert!((h[(i, j)] - h[(j, i)]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut xs = vec![1.0, 2.0, 3.0, -1e9];
+        softmax(&mut xs);
+        let s: f32 = xs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(xs[3] < 1e-12);
+    }
+
+    #[test]
+    fn log_softmax_at_matches_softmax() {
+        let xs = vec![0.3f32, -1.0, 2.5, 0.0];
+        let mut sm = xs.clone();
+        softmax(&mut sm);
+        for i in 0..4 {
+            assert!(
+                (log_softmax_at(&xs, i) - sm[i].ln()).abs() < 1e-5,
+                "idx {}",
+                i
+            );
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(4);
+        let a = randm(&mut rng, 6, 9);
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn matmul_shape_guard() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(4, 2);
+        let _ = a.matmul(&b);
+    }
+}

@@ -1,0 +1,54 @@
+//! Byte-level tokenizer. The model family is byte-level (vocab 256), so
+//! tokenization is identity over bytes — this module still owns the
+//! boundary (token type, detokenization, prompt assembly) so a subword
+//! tokenizer could be swapped in without touching the coordinator.
+
+pub type Token = i32;
+
+#[derive(Debug, Clone, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn new() -> Self {
+        ByteTokenizer
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        256
+    }
+
+    pub fn encode(&self, text: &[u8]) -> Vec<Token> {
+        text.iter().map(|&b| b as Token).collect()
+    }
+
+    pub fn decode(&self, tokens: &[Token]) -> Vec<u8> {
+        tokens
+            .iter()
+            .map(|&t| t.clamp(0, 255) as u8)
+            .collect()
+    }
+
+    pub fn decode_string(&self, tokens: &[Token]) -> String {
+        String::from_utf8_lossy(&self.decode(tokens)).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = ByteTokenizer::new();
+        let text = b"hello, ganq. 3+4=7";
+        let toks = t.encode(text);
+        assert_eq!(toks.len(), text.len());
+        assert_eq!(t.decode(&toks), text.to_vec());
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let t = ByteTokenizer::new();
+        assert_eq!(t.decode(&[-5, 300]), vec![0u8, 255]);
+    }
+}

@@ -1,0 +1,469 @@
+//! Minimal JSON parser + writer.
+//!
+//! The offline environment vendors only the `xla` crate closure (no serde),
+//! so manifest/golden/result I/O is handled by this module. It supports the
+//! full JSON grammar we emit from `python/compile/aot.py` (objects, arrays,
+//! strings with escapes, numbers, bools, null) and is covered by unit +
+//! property tests (roundtrip through the writer).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(s: &str) -> Result<Json, String> {
+        let b = s.as_bytes();
+        let mut p = Parser { b, i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != b.len() {
+            return Err(format!("trailing data at byte {}", p.i));
+        }
+        Ok(v)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// Path access: `j.at(&["models", "opt-small", "config"])`.
+    pub fn at(&self, path: &[&str]) -> Option<&Json> {
+        let mut cur = self;
+        for k in path {
+            cur = cur.get(k)?;
+        }
+        Some(cur)
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|x| x as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Array of numbers -> Vec<f32> (common golden-fixture shape).
+    pub fn as_f32_vec(&self) -> Option<Vec<f32>> {
+        Some(
+            self.as_arr()?
+                .iter()
+                .map(|v| v.as_f64().unwrap_or(f64::NAN) as f32)
+                .collect(),
+        )
+    }
+
+    pub fn as_f64_vec(&self) -> Option<Vec<f64>> {
+        Some(
+            self.as_arr()?
+                .iter()
+                .map(|v| v.as_f64().unwrap_or(f64::NAN))
+                .collect(),
+        )
+    }
+
+    pub fn as_usize_vec(&self) -> Option<Vec<usize>> {
+        Some(
+            self.as_arr()?
+                .iter()
+                .map(|v| v.as_f64().unwrap_or(0.0) as usize)
+                .collect(),
+        )
+    }
+
+    pub fn to_string_pretty(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0, true);
+        s
+    }
+
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0, false);
+        s
+    }
+
+    fn write(&self, out: &mut String, indent: usize, pretty: bool) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.fract() == 0.0 && x.abs() < 1e15 {
+                    let _ = write!(out, "{}", *x as i64);
+                } else {
+                    let _ = write!(out, "{}", x);
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, e) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                        if pretty {
+                            out.push(' ');
+                        }
+                    }
+                    e.write(out, indent, pretty);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    if pretty {
+                        out.push('\n');
+                        for _ in 0..indent + 1 {
+                            out.push_str("  ");
+                        }
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    if pretty {
+                        out.push(' ');
+                    }
+                    v.write(out, indent + 1, pretty);
+                }
+                if pretty && !m.is_empty() {
+                    out.push('\n');
+                    for _ in 0..indent {
+                        out.push_str("  ");
+                    }
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Builder helpers so call sites stay terse.
+pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+pub fn arr_f64(v: &[f64]) -> Json {
+    Json::Arr(v.iter().map(|x| Json::Num(*x)).collect())
+}
+
+pub fn arr_f32(v: &[f32]) -> Json {
+    Json::Arr(v.iter().map(|x| Json::Num(*x as f64)).collect())
+}
+
+pub fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+pub fn s(x: &str) -> Json {
+    Json::Str(x.to_string())
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!(
+                "expected '{}' at byte {} (found {:?})",
+                c as char,
+                self.i,
+                self.peek().map(|x| x as char)
+            ))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(_) => self.number(),
+            None => Err("unexpected end of input".into()),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut m = BTreeMap::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            let v = self.value()?;
+            m.insert(k, v);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                _ => return Err(format!("bad object at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut v = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            v.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(v));
+                }
+                _ => return Err(format!("bad array at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            if self.i + 4 >= self.b.len() {
+                                return Err("bad \\u escape".into());
+                            }
+                            let hex = std::str::from_utf8(
+                                &self.b[self.i + 1..self.i + 5],
+                            )
+                            .map_err(|e| e.to_string())?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|e| e.to_string())?;
+                            out.push(
+                                char::from_u32(cp).unwrap_or('\u{fffd}'),
+                            );
+                            self.i += 4;
+                        }
+                        _ => return Err("bad escape".into()),
+                    }
+                    self.i += 1;
+                }
+                Some(_) => {
+                    // copy a run of plain utf-8 bytes
+                    let start = self.i;
+                    while self.i < self.b.len()
+                        && self.b[self.i] != b'"'
+                        && self.b[self.i] != b'\\'
+                    {
+                        self.i += 1;
+                    }
+                    out.push_str(
+                        std::str::from_utf8(&self.b[start..self.i])
+                            .map_err(|e| e.to_string())?,
+                    );
+                }
+                None => return Err("unterminated string".into()),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i],
+                b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let txt = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|e| e.to_string())?;
+        txt.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("bad number '{}' at byte {}", txt, start))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let j = Json::parse(
+            r#"{"a": 1, "b": [1.5, -2e3, true, null], "c": "x\ny"}"#,
+        )
+        .unwrap();
+        assert_eq!(j.at(&["a"]).unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.at(&["b"]).unwrap().as_arr().unwrap().len(), 4);
+        assert_eq!(j.at(&["c"]).unwrap().as_str(), Some("x\ny"));
+    }
+
+    #[test]
+    fn roundtrip() {
+        let src = r#"{"m":{"k":[0.25,"s",false]},"n":-3.5}"#;
+        let j = Json::parse(src).unwrap();
+        let back = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(j, back);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("12 34").is_err());
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(Json::parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
+        assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
+    }
+
+    #[test]
+    fn unicode_escape() {
+        let j = Json::parse(r#""aAb""#).unwrap();
+        assert_eq!(j.as_str(), Some("aAb"));
+    }
+
+    #[test]
+    fn property_roundtrip_random() {
+        // mini property test: random JSON trees survive write->parse
+        let mut rng = crate::util::rng::Rng::new(7);
+        for _ in 0..50 {
+            let v = random_json(&mut rng, 3);
+            let s = v.to_string_pretty();
+            let back = Json::parse(&s).unwrap();
+            assert_eq!(v, back, "{}", s);
+        }
+    }
+
+    fn random_json(rng: &mut crate::util::rng::Rng, depth: usize) -> Json {
+        let choice = if depth == 0 { rng.below(4) } else { rng.below(6) };
+        match choice {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.below(2001) as f64 - 1000.0) / 8.0),
+            3 => Json::Str(format!("s{}\n\"x", rng.below(100))),
+            4 => Json::Arr(
+                (0..rng.below(4))
+                    .map(|_| random_json(rng, depth - 1))
+                    .collect(),
+            ),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{}", i), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+}

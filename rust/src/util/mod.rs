@@ -1,0 +1,28 @@
+//! Environment substrates built in-repo because the offline crate set only
+//! contains the `xla` closure: JSON, RNG, CLI parsing, scoped-thread
+//! parallelism, bench timing/statistics, and a mini property-test harness.
+
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod timer;
+
+/// Repo-root-relative artifact dir resolution: honors GANQ_ARTIFACTS, else
+/// walks up from cwd looking for `artifacts/manifest.json`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("GANQ_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Scoped-thread parallelism helpers (no rayon in the offline crate set).
+//!
+//! The quantizers and the native forward path parallelize across weight
+//! rows / batch items with `par_chunks`; the serving coordinator uses
+//! ordinary `std::thread` + channels (see coordinator/).
+
+/// Number of worker threads to use for compute-bound loops.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Run `f(chunk_index, start, end)` over `n` items split into contiguous
+/// chunks across `threads` scoped threads. `f` must be Sync; chunks are
+/// disjoint so callers typically write into distinct slices via raw
+/// pointers or split_at_mut beforehand.
+pub fn par_ranges<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n == 0 {
+        f(0, 0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let start = t * chunk;
+            let end = ((t + 1) * chunk).min(n);
+            if start >= end {
+                break;
+            }
+            let fr = &f;
+            s.spawn(move || fr(t, start, end));
+        }
+    });
+}
+
+/// Parallel map over disjoint mutable row-chunks of a flat buffer:
+/// splits `data` (len = n * stride) into per-thread sub-slices and calls
+/// `f(row_start, rows_chunk)`.
+pub fn par_rows_mut<T: Send, F>(
+    data: &mut [T],
+    stride: usize,
+    threads: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(stride > 0 && data.len() % stride == 0);
+    let n = data.len() / stride;
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        f(0, data);
+        return;
+    }
+    let chunk_rows = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut row = 0usize;
+        let fr = &f;
+        while !rest.is_empty() {
+            let take = (chunk_rows * stride).min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let r0 = row;
+            row += take / stride;
+            s.spawn(move || fr(r0, head));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn par_ranges_covers_everything_once() {
+        let n = 1003;
+        let counts: Vec<AtomicUsize> =
+            (0..n).map(|_| AtomicUsize::new(0)).collect();
+        par_ranges(n, 7, |_t, s, e| {
+            for i in s..e {
+                counts[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_rows_mut_writes_disjoint() {
+        let mut data = vec![0u32; 12 * 5];
+        par_rows_mut(&mut data, 5, 4, |row0, chunk| {
+            for (i, row) in chunk.chunks_mut(5).enumerate() {
+                for v in row.iter_mut() {
+                    *v = (row0 + i) as u32;
+                }
+            }
+        });
+        for r in 0..12 {
+            assert!(data[r * 5..(r + 1) * 5].iter().all(|&v| v == r as u32));
+        }
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        par_ranges(0, 4, |_t, s, e| {
+            assert_eq!((s, e), (0, 0));
+        });
+        par_ranges(5, 1, |_t, s, e| {
+            assert_eq!((s, e), (0, 5));
+        });
+        let mut v = vec![1u8; 4];
+        par_rows_mut(&mut v, 2, 1, |_r, c| {
+            for x in c.iter_mut() {
+                *x = 9;
+            }
+        });
+        assert!(v.iter().all(|&x| x == 9));
+    }
+}

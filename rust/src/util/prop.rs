@@ -1,0 +1,88 @@
+//! Mini property-testing harness (proptest is not in the offline crate
+//! set). Runs a property over N seeded random cases and reports the first
+//! failing seed so the case is reproducible; used across quant/ and
+//! coordinator/ tests for the paper's invariants (error monotonicity,
+//! routing/batching/state invariants, pack/unpack roundtrips, ...).
+
+use crate::util::rng::Rng;
+
+/// Run `prop(rng, case_index)` for `cases` seeds derived from `base_seed`.
+/// Panics with the failing seed on the first violation.
+pub fn check<F>(name: &str, base_seed: u64, cases: usize, prop: F)
+where
+    F: Fn(&mut Rng, usize) -> Result<(), String>,
+{
+    for i in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(i as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, i) {
+            panic!(
+                "property '{}' failed on case {} (seed {:#x}): {}",
+                name, i, seed, msg
+            );
+        }
+    }
+}
+
+/// Assert helper producing Result for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Relative/absolute closeness for float properties.
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+}
+
+pub fn all_close(a: &[f32], b: &[f32], rtol: f64, atol: f64) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(&x, &y)| close(x as f64, y as f64, rtol, atol))
+}
+
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| (x as f64 - y as f64).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("adds", 1, 20, |rng, _| {
+            let a = rng.below(100) as i64;
+            let b = rng.below(100) as i64;
+            prop_assert!(a + b == b + a, "commutativity");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 2, 10, |rng, _| {
+            prop_assert!(rng.below(10) > 100, "impossible");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn closeness() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6, 0.0));
+        assert!(!close(1.0, 1.1, 1e-6, 1e-6));
+        assert!(all_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-5));
+        assert_eq!(max_abs_diff(&[1.0], &[3.0]), 2.0);
+    }
+}

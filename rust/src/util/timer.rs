@@ -1,0 +1,183 @@
+//! Measurement harness for the benches (criterion is not in the offline
+//! crate set): warmup + timed iterations, robust summary statistics, and a
+//! tiny fixed-width table printer used by every `benches/table*.rs` binary
+//! to render the paper's tables.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Stats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean_s * 1e6
+    }
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Time `f` with `warmup` unrecorded runs then `iters` recorded runs.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(&times)
+}
+
+/// Adaptive: run until `budget_s` seconds of measurement or `max_iters`.
+pub fn bench_for<F: FnMut()>(budget_s: f64, max_iters: usize, mut f: F) -> Stats {
+    f(); // warmup
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while start.elapsed().as_secs_f64() < budget_s && times.len() < max_iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(&times)
+}
+
+pub fn summarize(times: &[f64]) -> Stats {
+    let mut s: Vec<f64> = times.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = if s.is_empty() {
+        f64::NAN
+    } else {
+        s.iter().sum::<f64>() / s.len() as f64
+    };
+    Stats {
+        iters: s.len(),
+        mean_s: mean,
+        p50_s: percentile(&s, 0.5),
+        p95_s: percentile(&s, 0.95),
+        min_s: s.first().copied().unwrap_or(f64::NAN),
+        max_s: s.last().copied().unwrap_or(f64::NAN),
+    }
+}
+
+/// Fixed-width table printer (paper-style rows).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut w: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<width$} |", c, width = w[i]));
+            }
+            println!("{}", s);
+        };
+        line(&self.headers);
+        let mut sep = String::from("|");
+        for wi in &w {
+            sep.push_str(&format!("{}|", "-".repeat(wi + 2)));
+        }
+        println!("{}", sep);
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+pub fn fmt_f(x: f64, prec: usize) -> String {
+    if !x.is_finite() {
+        return "-".into();
+    }
+    if x.abs() >= 1e4 {
+        format!("{:.1e}", x)
+    } else {
+        format!("{:.*}", prec, x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.iters, 4);
+        assert!((s.mean_s - 2.5).abs() < 1e-12);
+        assert!((s.p50_s - 2.5).abs() < 1e-12);
+        assert_eq!(s.min_s, 1.0);
+        assert_eq!(s.max_s, 4.0);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut n = 0u64;
+        let s = bench(1, 5, || n += 1);
+        assert_eq!(s.iters, 5);
+        assert_eq!(n, 6);
+        assert!(s.mean_s >= 0.0);
+    }
+
+    #[test]
+    fn fmt_handles_extremes() {
+        assert_eq!(fmt_f(f64::NAN, 2), "-");
+        assert_eq!(fmt_f(1.23456, 2), "1.23");
+        assert!(fmt_f(54321.0, 2).contains('e'));
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new("t", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print(); // smoke: must not panic
+    }
+}

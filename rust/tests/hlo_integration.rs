@@ -1,0 +1,368 @@
+//! HLO-path integration: every class of AOT artifact executed through the
+//! PJRT runtime and cross-checked against the Rust-native implementation.
+//! These are the tests proving the three layers compose. Skipped when
+//! artifacts are absent.
+
+use ganq::coordinator::{self, QuantEngine, Request, WeightFmt};
+use ganq::data::corpus::{self, Split};
+use ganq::eval::{self, PplEngine};
+use ganq::model::forward::Weights;
+use ganq::model::{ModelConfig, WeightStore};
+use ganq::quant::Quantizer;
+use ganq::runtime::{ganq_hlo, HostTensor, Runtime};
+use ganq::tensor::{linalg, Mat};
+use ganq::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::load() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping HLO tests: {}", e);
+            None
+        }
+    }
+}
+
+fn store_for(rt: &Runtime, model: &str) -> Option<WeightStore> {
+    let cfg = rt.manifest.models.get(model)?.config;
+    WeightStore::load(&rt.base, model, cfg).ok()
+}
+
+macro_rules! require {
+    ($e:expr) => {
+        match $e {
+            Some(v) => v,
+            None => return,
+        }
+    };
+}
+
+#[test]
+fn lutgemm_kernel_artifact_matches_native() {
+    let rt = require!(runtime());
+    for bits in [4u8, 3] {
+        let name = format!("lutgemm{}_p8_128x128", bits);
+        if !rt.has_graph(&name) {
+            eprintln!("skipping: {} not built", name);
+            continue;
+        }
+        let mut rng = Rng::new(7);
+        let k = 1usize << bits;
+        let codes: Vec<u8> =
+            (0..128 * 128).map(|_| rng.below(k as u64) as u8).collect();
+        let t = Mat::from_vec(128, k, rng.normal_vec_f32(128 * k));
+        let x = Mat::from_vec(8, 128, rng.normal_vec_f32(8 * 128));
+        let lut =
+            ganq::quant::lut::lut_from_parts(128, 128, bits, codes, t);
+        let want = lut.lut_matmul(&x);
+        let out = rt
+            .run(
+                &name,
+                &[
+                    HostTensor::F32(vec![8, 128], x.data.clone()),
+                    HostTensor::U8(vec![128, 64], lut.packed_nibbles()),
+                    HostTensor::F32(
+                        vec![128, k],
+                        lut.codebook.data.clone(),
+                    ),
+                ],
+            )
+            .unwrap();
+        let got = out[0].as_f32();
+        let maxdiff: f32 = got
+            .iter()
+            .zip(&want.data)
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(maxdiff < 1e-3, "{}: maxdiff {}", name, maxdiff);
+    }
+}
+
+#[test]
+fn resident_buffer_execution_matches_literal_execution() {
+    // the execute_b (device-resident weights) fast path vs plain execute
+    let rt = require!(runtime());
+    let name = "lutgemm4_p8_128x128";
+    if !rt.has_graph(name) {
+        return;
+    }
+    let mut rng = Rng::new(3);
+    let codes: Vec<u8> =
+        (0..128 * 128).map(|_| rng.below(16) as u8).collect();
+    let t = Mat::from_vec(128, 16, rng.normal_vec_f32(128 * 16));
+    let x = Mat::from_vec(8, 128, rng.normal_vec_f32(8 * 128));
+    let lut = ganq::quant::lut::lut_from_parts(128, 128, 4, codes, t);
+    let inputs = [
+        HostTensor::F32(vec![8, 128], x.data.clone()),
+        HostTensor::U8(vec![128, 64], lut.packed_nibbles()),
+        HostTensor::F32(vec![128, 16], lut.codebook.data.clone()),
+    ];
+    let via_lit = rt.run(name, &inputs).unwrap();
+    let staged = rt.stage(&inputs[1..]).unwrap();
+    let via_buf = rt
+        .run_with_resident(name, &inputs[..1], &staged)
+        .unwrap();
+    assert_eq!(via_lit[0].as_f32(), via_buf[0].as_f32());
+    // 5-D tensors (KV-cache shaped) must also stage cleanly
+    let cache = HostTensor::F32(vec![2, 1, 2, 16, 8], vec![0.5; 512]);
+    let b = rt.stage(&[cache]).unwrap();
+    assert_eq!(b.len(), 1);
+}
+
+#[test]
+fn ganq_hlo_graph_matches_native_solver() {
+    let rt = require!(runtime());
+    if !rt.has_graph("ganq4_64x64") {
+        eprintln!("skipping: ganq4_64x64 not built");
+        return;
+    }
+    let mut rng = Rng::new(11);
+    let w = Mat::from_vec(64, 64, rng.normal_vec_f32(64 * 64));
+    let x = Mat::from_vec(64, 160, rng.normal_vec_f32(64 * 160));
+    let h = x.gram();
+    let hlo = ganq_hlo::quantize_layer_hlo(&rt, &w, &h, 4)
+        .unwrap()
+        .expect("artifact exists");
+    let native = ganq::quant::ganq::Ganq::new(4).quantize(&w, &h);
+    let hp = linalg::precondition(&h);
+    let e_hlo = linalg::layer_error(&w, &hlo.w_hat, &hp);
+    let e_nat = linalg::layer_error(&w, &native.w_hat, &hp);
+    // same algorithm, different float orders: quality must match closely
+    assert!(
+        (e_hlo - e_nat).abs() < 0.05 * e_nat.max(1e-9),
+        "hlo {} vs native {}",
+        e_hlo,
+        e_nat
+    );
+    // and the HLO per-iteration errors must be monotone (Algorithm 1)
+    let errs = ganq_hlo::solve_errors_hlo(&rt, &w, &h, 4)
+        .unwrap()
+        .unwrap();
+    for win in errs.windows(2) {
+        assert!(win[1] <= win[0] * 1.001 + 1e-4, "{:?}", errs);
+    }
+}
+
+#[test]
+fn nll_graph_matches_native_forward() {
+    let rt = require!(runtime());
+    let store = require!(store_for(&rt, "opt-micro"));
+    if !rt.has_graph("nll_fp32_opt-micro") {
+        return;
+    }
+    let f = corpus::flavor("wiki2s").unwrap();
+    let eng_h = PplEngine::hlo(&rt, "opt-micro", &store, None).unwrap();
+    let eng_n = PplEngine::Native(Weights::Fp(&store));
+    let ppl_h = eval::perplexity(&eng_h, f, Split::Valid, 1).unwrap();
+    let ppl_n = eval::perplexity(&eng_n, f, Split::Valid, 1).unwrap();
+    assert!(
+        (ppl_h - ppl_n).abs() < 0.02 * ppl_n,
+        "hlo ppl {} vs native {}",
+        ppl_h,
+        ppl_n
+    );
+}
+
+#[test]
+fn decode_graph_matches_native_decode() {
+    let rt = require!(runtime());
+    let store = require!(store_for(&rt, "opt-micro"));
+    if !rt.has_graph("decode_fp32_opt-micro_b1") {
+        return;
+    }
+    let prompt: Vec<i32> = b"the quick brown".iter().map(|&b| b as i32).collect();
+    // native
+    let w = Weights::Fp(&store);
+    let mut be_n = coordinator::NativeBackend::new(w, 1);
+    let reqs = vec![Request { id: 1, prompt: prompt.clone(), max_new: 8 }];
+    let (resp_n, _) = coordinator::serve(&mut be_n, reqs.clone()).unwrap();
+    // hlo
+    let mut be_h = coordinator::HloBackend::new(
+        &rt,
+        "opt-micro",
+        WeightFmt::Fp32,
+        1,
+        &store,
+        None,
+        false,
+    )
+    .unwrap();
+    let (resp_h, metrics) = coordinator::serve(&mut be_h, reqs).unwrap();
+    assert_eq!(
+        resp_n[0].tokens, resp_h[0].tokens,
+        "HLO and native generation diverged"
+    );
+    assert!(metrics.decode_steps >= 8);
+}
+
+#[test]
+fn pallas_decode_graph_matches_lut_decode_graph() {
+    let rt = require!(runtime());
+    let store = require!(store_for(&rt, "opt-micro"));
+    if !rt.has_graph("decode_pallas4_opt-micro_b1")
+        || !rt.has_graph("decode_lut4_opt-micro_b1")
+    {
+        return;
+    }
+    let calib = coordinator::calibrate(&store, 4, 64);
+    let qm = coordinator::quantize_model(
+        &store,
+        "ganq",
+        4,
+        &calib,
+        &QuantEngine::Native,
+        false,
+    )
+    .unwrap();
+    let prompt: Vec<i32> = b"lorem ipsum".iter().map(|&b| b as i32).collect();
+    let reqs = vec![Request { id: 1, prompt, max_new: 6 }];
+    let mut outs = Vec::new();
+    for graph_fmt in ["lut4", "pallas4"] {
+        // HloBackend derives the graph name from WeightFmt; the pallas
+        // variant shares the lut4 weight layout
+        let mut be = coordinator::HloBackend::new(
+            &rt,
+            "opt-micro",
+            WeightFmt::Lut4,
+            1,
+            &store,
+            Some(&qm),
+            false,
+        )
+        .unwrap();
+        if graph_fmt == "pallas4" {
+            // swap the graph name (same inputs/outputs signature)
+            be = coordinator::HloBackend::new_with_graph(
+                &rt,
+                "opt-micro",
+                "decode_pallas4_opt-micro_b1",
+                1,
+                &store,
+                Some(&qm),
+            )
+            .unwrap();
+        }
+        let (resp, _) = coordinator::serve(&mut be, reqs.clone()).unwrap();
+        outs.push(resp[0].tokens.clone());
+    }
+    assert_eq!(outs[0], outs[1], "pallas kernel path diverged from LUT path");
+}
+
+#[test]
+fn lut_serving_matches_dequantized_eval() {
+    // generation through the LUT decode graph == native generation with
+    // the dequantized model (W_hat identical by construction)
+    let rt = require!(runtime());
+    let store = require!(store_for(&rt, "opt-small"));
+    if !rt.has_graph("decode_lut4_opt-small_b1") {
+        return;
+    }
+    let calib = coordinator::calibrate(&store, 8, 64);
+    let qm = coordinator::quantize_model(
+        &store,
+        "ganq",
+        4,
+        &calib,
+        &QuantEngine::Native,
+        false,
+    )
+    .unwrap();
+    let prompt: Vec<i32> = b"counting one two".iter().map(|&b| b as i32).collect();
+    let reqs = vec![Request { id: 1, prompt, max_new: 10 }];
+    let mut be_h = coordinator::HloBackend::new(
+        &rt,
+        "opt-small",
+        WeightFmt::Lut4,
+        1,
+        &store,
+        Some(&qm),
+        true, // resident weights: also covers the execute_b path
+    )
+    .unwrap();
+    let (resp_h, _) = coordinator::serve(&mut be_h, reqs.clone()).unwrap();
+    let w = Weights::Quant(&qm);
+    let mut be_n = coordinator::NativeBackend::new(w, 1);
+    let (resp_n, _) = coordinator::serve(&mut be_n, reqs).unwrap();
+    assert_eq!(resp_h[0].tokens, resp_n[0].tokens);
+}
+
+#[test]
+fn batched_decode_graph_consistent_with_b1() {
+    let rt = require!(runtime());
+    let store = require!(store_for(&rt, "opt-small"));
+    if !rt.has_graph("decode_fp32_opt-small_b4") {
+        return;
+    }
+    let mk = |id: u64, text: &str| Request {
+        id,
+        prompt: text.bytes().map(|b| b as i32).collect(),
+        max_new: 5,
+    };
+    let reqs =
+        vec![mk(1, "alpha beta"), mk(2, "gamma"), mk(3, "delta epsilon z")];
+    let mut be4 = coordinator::HloBackend::new(
+        &rt, "opt-small", WeightFmt::Fp32, 4, &store, None, false,
+    )
+    .unwrap();
+    let (r4, _) = coordinator::serve(&mut be4, reqs.clone()).unwrap();
+    let mut be1 = coordinator::HloBackend::new(
+        &rt, "opt-small", WeightFmt::Fp32, 1, &store, None, false,
+    )
+    .unwrap();
+    let (r1, _) = coordinator::serve(&mut be1, reqs).unwrap();
+    for (a, b) in r4.iter().zip(&r1) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "req {} diverged across batch sizes", a.id);
+    }
+}
+
+#[test]
+fn ppl_ordering_full_vs_quant_on_trained_model() {
+    // Table 2's shape at the smallest scale: FP16 <= GANQ-4bit <= GANQ-3bit
+    // (perplexity, trained opt-micro)
+    let rt = require!(runtime());
+    let store = require!(store_for(&rt, "opt-micro"));
+    if !rt.has_graph("nll_fp32_opt-micro") {
+        return;
+    }
+    let f = corpus::flavor("wiki2s").unwrap();
+    let calib = coordinator::calibrate(&store, 16, 128);
+    let mut ppls = Vec::new();
+    for bits in [16u8, 4, 3] {
+        let qm = if bits == 16 {
+            None
+        } else {
+            Some(
+                coordinator::quantize_model(
+                    &store,
+                    "ganq",
+                    bits,
+                    &calib,
+                    &QuantEngine::Native,
+                    false,
+                )
+                .unwrap(),
+            )
+        };
+        let eng =
+            PplEngine::hlo(&rt, "opt-micro", &store, qm.as_ref()).unwrap();
+        ppls.push(eval::perplexity(&eng, f, Split::Valid, 2).unwrap());
+    }
+    assert!(
+        ppls[0] <= ppls[1] * 1.02 && ppls[1] <= ppls[2] * 1.02,
+        "ppl ordering violated: fp {} / 4b {} / 3b {}",
+        ppls[0],
+        ppls[1],
+        ppls[2]
+    );
+}
+
+#[test]
+fn model_config_from_manifest_matches_builtin() {
+    let rt = require!(runtime());
+    for (name, entry) in &rt.manifest.models {
+        if let Some(b) = ModelConfig::builtin(name) {
+            assert_eq!(entry.config, b, "config drift for {}", name);
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! Parameterized probe runner: executes /tmp/probe.hlo.txt with the inputs
+//! in /tmp/probe.json and compares q against the jax-computed expectation.
+//! Used with python/tools gen_probe.py to bisect the size-dependent
+//! S-step miscompilation on xla_extension 0.5.1.
+
+use ganq::util::json::Json;
+
+#[test]
+fn param_probe() {
+    let (Ok(hlo), Ok(meta)) = (
+        std::fs::read_to_string("/tmp/probe.hlo.txt"),
+        std::fs::read_to_string("/tmp/probe.json"),
+    ) else {
+        eprintln!("skipping: no probe files");
+        return;
+    };
+    let _ = hlo;
+    let j = Json::parse(&meta).unwrap();
+    let m = j.get("m").unwrap().as_usize().unwrap();
+    let n = j.get("n").unwrap().as_usize().unwrap();
+    let k = j.get("k").unwrap().as_usize().unwrap();
+    let w = j.get("w").unwrap().as_f32_vec().unwrap();
+    let l = j.get("l").unwrap().as_f32_vec().unwrap();
+    let t0 = j.get("t0").unwrap().as_f32_vec().unwrap();
+    let expect: Vec<i32> = j
+        .get("q")
+        .unwrap()
+        .as_f32_vec()
+        .unwrap()
+        .iter()
+        .map(|&v| v as i32)
+        .collect();
+
+    let client = xla::PjRtClient::cpu().unwrap();
+    let proto =
+        xla::HloModuleProto::from_text_file("/tmp/probe.hlo.txt").unwrap();
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).unwrap();
+    let args = [
+        xla::Literal::vec1(&w).reshape(&[m as i64, n as i64]).unwrap(),
+        xla::Literal::vec1(&l).reshape(&[n as i64, n as i64]).unwrap(),
+        xla::Literal::vec1(&t0).reshape(&[m as i64, k as i64]).unwrap(),
+    ];
+    let out = exe.execute::<xla::Literal>(&args).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let parts = out.to_tuple().unwrap();
+    let q = parts[0].to_vec::<i32>().unwrap();
+    let mismatch = q.iter().zip(&expect).filter(|(a, b)| a != b).count();
+    eprintln!(
+        "m={} n={} k={}: {}/{} mismatches",
+        m,
+        n,
+        k,
+        mismatch,
+        q.len()
+    );
+    assert_eq!(mismatch, 0, "old-XLA output diverges from jax");
+}

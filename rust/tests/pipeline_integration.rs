@@ -1,0 +1,195 @@
+//! End-to-end pipeline integration on trained weights (no HLO required):
+//! calibrate -> quantize with every method -> evaluate. Pins the paper's
+//! qualitative claims at the model level. Skipped without artifacts.
+
+use ganq::coordinator::{self, QuantEngine};
+use ganq::data::corpus::{self, Split};
+use ganq::eval::tasks as etasks;
+use ganq::eval::{perplexity, PplEngine};
+use ganq::model::forward::Weights;
+use ganq::model::{ModelConfig, WeightStore};
+
+fn trained(name: &str) -> Option<WeightStore> {
+    let cfg = ModelConfig::builtin(name)?;
+    let base = ganq::util::artifacts_dir();
+    match WeightStore::load(&base, name, cfg) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("skipping: {}", e);
+            None
+        }
+    }
+}
+
+macro_rules! require {
+    ($e:expr) => {
+        match $e {
+            Some(v) => v,
+            None => return,
+        }
+    };
+}
+
+#[test]
+fn all_methods_quantize_trained_micro_and_order_sanely() {
+    let store = require!(trained("opt-micro"));
+    let calib = coordinator::calibrate(&store, 16, 128);
+    let f = corpus::flavor("wiki2s").unwrap();
+    let fp_ppl = {
+        let eng = PplEngine::Native(Weights::Fp(&store));
+        perplexity(&eng, f, Split::Valid, 1).unwrap()
+    };
+    let mut ppls = std::collections::BTreeMap::new();
+    for method in ["rtn", "gptq", "omniq", "ganq"] {
+        let qm = coordinator::quantize_model(
+            &store,
+            method,
+            3,
+            &calib,
+            &QuantEngine::Native,
+            false,
+        )
+        .unwrap();
+        let eng = PplEngine::Native(Weights::Quant(&qm));
+        let ppl = perplexity(&eng, f, Split::Valid, 1).unwrap();
+        ppls.insert(method.to_string(), ppl);
+    }
+    // the paper's headline ordering at 3-bit: GANQ closest to FP16,
+    // RTN worst. (gptq/omniq relative order can wobble at tiny scale.)
+    assert!(ppls["ganq"] >= fp_ppl * 0.98, "{:?} fp={}", ppls, fp_ppl);
+    assert!(
+        ppls["ganq"] <= ppls["rtn"],
+        "ganq {} !<= rtn {}",
+        ppls["ganq"],
+        ppls["rtn"]
+    );
+    assert!(
+        ppls["ganq"] <= ppls["gptq"] * 1.02
+            && ppls["ganq"] <= ppls["omniq"] * 1.02,
+        "{:?}",
+        ppls
+    );
+    // and the absolute gap from FP16 must be small at 3 bits for GANQ
+    assert!(
+        ppls["ganq"] < fp_ppl * 2.0,
+        "ganq 3-bit collapsed: {} vs fp {}",
+        ppls["ganq"],
+        fp_ppl
+    );
+}
+
+#[test]
+fn outlier_methods_improve_over_plain_at_3bit() {
+    let store = require!(trained("opt-micro"));
+    let calib = coordinator::calibrate(&store, 16, 128);
+    let e = |method: &str| {
+        let qm = coordinator::quantize_model(
+            &store,
+            method,
+            3,
+            &calib,
+            &QuantEngine::Native,
+            false,
+        )
+        .unwrap();
+        coordinator::pipeline::total_layer_error(&store, &qm, &calib)
+    };
+    let plain = e("ganq");
+    let star = e("ganq-star");
+    assert!(
+        star <= plain * 1.001,
+        "ganq* {} !<= ganq {}",
+        star,
+        plain
+    );
+    let sq = e("squeezellm");
+    assert!(sq < e("rtn-g128"), "squeezellm should beat grouped rtn");
+}
+
+#[test]
+fn zero_shot_accuracy_degrades_gracefully() {
+    // Table 3's shape: trained model beats chance; 4-bit GANQ stays close
+    let store = require!(trained("opt-small"));
+    let w = Weights::Fp(&store);
+    let (_rows, mean_fp) = etasks::zero_shot_suite(&w, 20, 5);
+    assert!(mean_fp > 60.0, "trained model should beat chance: {}", mean_fp);
+    let calib = coordinator::calibrate(&store, 16, 128);
+    let qm = coordinator::quantize_model(
+        &store,
+        "ganq",
+        4,
+        &calib,
+        &QuantEngine::Native,
+        false,
+    )
+    .unwrap();
+    let wq = Weights::Quant(&qm);
+    let (_rows, mean_q) = etasks::zero_shot_suite(&wq, 20, 5);
+    assert!(
+        mean_q > mean_fp - 12.0,
+        "4-bit ganq collapsed on tasks: {} vs {}",
+        mean_q,
+        mean_fp
+    );
+}
+
+#[test]
+fn instruct_model_solves_tasks_and_quantized_keeps_most() {
+    let store = require!(trained("opt-mini-instruct"));
+    let w = Weights::Fp(&store);
+    let gsm = ganq::data::tasks::gsm_cases(30, 11);
+    let acc_fp = etasks::exact_match(&w, &gsm);
+    assert!(
+        acc_fp > 0.5,
+        "instruct model should solve most single-digit sums: {}",
+        acc_fp
+    );
+    let calib = coordinator::calibrate(&store, 16, 128);
+    let qm = coordinator::quantize_model(
+        &store,
+        "ganq",
+        4,
+        &calib,
+        &QuantEngine::Native,
+        false,
+    )
+    .unwrap();
+    let acc_q = etasks::exact_match(&Weights::Quant(&qm), &gsm);
+    assert!(
+        acc_q >= acc_fp - 0.3,
+        "4-bit ganq collapsed on gsm-s: {} vs {}",
+        acc_q,
+        acc_fp
+    );
+}
+
+#[test]
+fn longbench_recall_works_on_instruct() {
+    // kv recall is the hardest task for these tiny models (Table 4's
+    // longbench-s column sits at ~20-24% vs 10% digit chance); the test
+    // pins "clearly above chance", the bench reports the full picture
+    let store = require!(trained("opt-small-instruct"));
+    let w = Weights::Fp(&store);
+    let cases = ganq::data::tasks::longbench_cases(60, 8, 13);
+    let acc = etasks::exact_match(&w, &cases);
+    assert!(acc > 0.15, "kv recall at/below chance: {}", acc);
+}
+
+#[test]
+fn quantization_cost_scales_reasonably() {
+    // §4.4: GANQ quantizes a model quickly; sanity-bound wall time
+    let store = require!(trained("opt-micro"));
+    let calib = coordinator::calibrate(&store, 8, 64);
+    let t0 = std::time::Instant::now();
+    let _ = coordinator::quantize_model(
+        &store,
+        "ganq",
+        4,
+        &calib,
+        &QuantEngine::Native,
+        false,
+    )
+    .unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    assert!(dt < 120.0, "ganq on opt-micro took {}s", dt);
+}

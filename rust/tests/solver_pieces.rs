@@ -1,0 +1,129 @@
+//! Piecewise validation of the AOT GANQ solver graph (Algorithm 1) against
+//! the native implementation: S-step (pallas and plain jnp variants) and
+//! T-step in isolation. Pinpoints any HLO-semantics gap between the jax
+//! lowering and the xla_extension 0.5.1 runtime.
+
+use ganq::quant::ganq as solver;
+use ganq::quant::rtn;
+use ganq::runtime::{HostTensor, Runtime};
+use ganq::tensor::{linalg, Mat};
+use ganq::util::rng::Rng;
+
+fn setup() -> (Mat, Mat, Mat, Mat) {
+    let mut rng = Rng::new(11);
+    let w = Mat::from_vec(64, 64, rng.normal_vec_f32(64 * 64));
+    let x = Mat::from_vec(64, 160, rng.normal_vec_f32(64 * 160));
+    let h = x.gram();
+    let hp = linalg::precondition(&h);
+    let l = linalg::cholesky(&hp).unwrap();
+    (w, hp, l, x)
+}
+
+#[test]
+fn sstep_graphs_match_native() {
+    let rt = match Runtime::load() {
+        Ok(rt) => rt,
+        Err(_) => return,
+    };
+    let (w, _hp, l, _x) = setup();
+    let (_, t0) = rtn::rtn_codebook(&w, 4);
+    let native = solver::sstep(&w, &l, &t0, 1);
+    for graph in ["sstep4_64x64_plain", "sstep4_64x64_pallas"] {
+        if !rt.has_graph(graph) {
+            eprintln!("skipping {}", graph);
+            continue;
+        }
+        let out = rt
+            .run(
+                graph,
+                &[
+                    HostTensor::F32(vec![64, 64], w.data.clone()),
+                    HostTensor::F32(vec![64, 64], l.data.clone()),
+                    HostTensor::F32(vec![64, 16], t0.data.clone()),
+                ],
+            )
+            .unwrap();
+        let q = out[0].as_i32();
+        let count = |f: &dyn Fn(usize, usize) -> i32| {
+            (0..64 * 64)
+                .filter(|&idx| {
+                    let (i, j) = (idx / 64, idx % 64);
+                    q[idx] != f(i, j)
+                })
+                .count()
+        };
+        let direct = count(&|i, j| native[i * 64 + j] as i32);
+        let colrev = count(&|i, j| native[i * 64 + (63 - j)] as i32);
+        let transp = count(&|i, j| native[j * 64 + i] as i32);
+        // nearest-code assignment without any error propagation (what the
+        // scan would produce if the residual accumulator never fired)
+        let mut nearest = vec![0i32; 64 * 64];
+        for i in 0..64 {
+            for j in 0..64 {
+                let e = w[(i, j)];
+                let trow = t0.row(i);
+                let mut best = 0;
+                let mut bd = f32::INFINITY;
+                for (s, &tv) in trow.iter().enumerate() {
+                    if (e - tv).abs() < bd {
+                        bd = (e - tv).abs();
+                        best = s as i32;
+                    }
+                }
+                nearest[i * 64 + j] = best;
+            }
+        }
+        let vs_nearest = count(&|i, j| nearest[i * 64 + j]);
+        let vs_nearest_rev = count(&|i, j| nearest[i * 64 + (63 - j)]);
+        assert!(
+            direct * 100 < 4096,
+            "{}: direct {} colrev {} transp {} nearest {} nearestrev {} (of 4096)",
+            graph,
+            direct,
+            colrev,
+            transp,
+            vs_nearest,
+            vs_nearest_rev
+        );
+    }
+}
+
+#[test]
+fn tstep_graph_matches_native() {
+    let rt = match Runtime::load() {
+        Ok(rt) => rt,
+        Err(_) => return,
+    };
+    if !rt.has_graph("tstep4_64x64") {
+        return;
+    }
+    let (w, hp, l, _x) = setup();
+    let (_, t0) = rtn::rtn_codebook(&w, 4);
+    let codes = solver::sstep(&w, &l, &t0, 1);
+    let native_t = solver::tstep(&w, &hp, &codes, &t0, 1);
+    let q_i32: Vec<i32> = codes.iter().map(|&c| c as i32).collect();
+    let out = rt
+        .run(
+            "tstep4_64x64",
+            &[
+                HostTensor::F32(vec![64, 64], w.data.clone()),
+                HostTensor::F32(vec![64, 64], hp.data.clone()),
+                HostTensor::I32(vec![64, 64], q_i32),
+                HostTensor::F32(vec![64, 16], t0.data.clone()),
+            ],
+        )
+        .unwrap();
+    let t_hlo = out[0].as_f32();
+    let maxdiff: f32 = t_hlo
+        .iter()
+        .zip(&native_t.data)
+        .map(|(&a, &b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    let scale = native_t.max_abs();
+    assert!(
+        maxdiff < 0.02 * scale + 1e-3,
+        "tstep maxdiff {} (scale {})",
+        maxdiff,
+        scale
+    );
+}

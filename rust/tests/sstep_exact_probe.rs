@@ -1,0 +1,37 @@
+//! Third probe: the EXACT compile.ganq.sstep code at miniature size
+//! (m=2, n=4, 2-bit) through the HLO-text round-trip.
+//! Expected q (from jax): [0,1,2,3, 0,1,2,3].
+
+#[test]
+fn exact_sstep_miniature() {
+    let path = "/tmp/sstep_exact.hlo.txt";
+    if !std::path::Path::new(path).exists() {
+        eprintln!("skipping: probe HLO not generated");
+        return;
+    }
+    let client = xla::PjRtClient::cpu().unwrap();
+    let proto = xla::HloModuleProto::from_text_file(path).unwrap();
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).unwrap();
+    let w: Vec<f32> = (0..8).map(|i| i as f32 * 0.3).collect();
+    let mut l = vec![0f32; 16];
+    for i in 0..4 {
+        for j in 0..=i {
+            l[i * 4 + j] = 1.0;
+        }
+        l[i * 4 + i] = 2.0;
+    }
+    let t0: Vec<f32> = vec![0.0, 0.3, 0.6, 0.9, 1.2, 1.5, 1.8, 2.1];
+    let args = [
+        xla::Literal::vec1(&w).reshape(&[2, 4]).unwrap(),
+        xla::Literal::vec1(&l).reshape(&[4, 4]).unwrap(),
+        xla::Literal::vec1(&t0).reshape(&[2, 4]).unwrap(),
+    ];
+    let out = exe.execute::<xla::Literal>(&args).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let parts = out.to_tuple().unwrap();
+    let q = parts[0].to_vec::<i32>().unwrap();
+    eprintln!("q = {:?}", q);
+    assert_eq!(q, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+}

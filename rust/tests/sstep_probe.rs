@@ -1,0 +1,61 @@
+//! Second root-cause probe (see while_loop_probe.rs): a 4-column miniature
+//! of the GANQ S-step scan, with known expected outputs computed by jax.
+//! Exposes whether dynamic-slice-by-scanned-index / reverse / layout
+//! behaviour diverges on xla_extension 0.5.1.
+
+#[test]
+fn sstep_miniature_roundtrip() {
+    let path = "/tmp/sstep_probe.hlo.txt";
+    if !std::path::Path::new(path).exists() {
+        eprintln!("skipping: probe HLO not generated");
+        return;
+    }
+    let client = xla::PjRtClient::cpu().unwrap();
+    let proto = xla::HloModuleProto::from_text_file(path).unwrap();
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).unwrap();
+    let w: Vec<f32> = (0..8).map(|i| i as f32 * 0.3).collect();
+    let mut l = vec![0f32; 16];
+    for i in 0..4 {
+        for j in 0..=i {
+            l[i * 4 + j] = 1.0;
+        }
+        l[i * 4 + i] = 2.0;
+    }
+    let wl = xla::Literal::vec1(&w).reshape(&[2, 4]).unwrap();
+    let ll = xla::Literal::vec1(&l).reshape(&[4, 4]).unwrap();
+    let out = exe.execute::<xla::Literal>(&[wl, ll]).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let parts = out.to_tuple().unwrap();
+    let q = parts[0].to_vec::<i32>().unwrap();
+    let acc = parts[1].to_vec::<f32>().unwrap();
+    eprintln!("q   = {:?}", q);
+    eprintln!("acc = {:?}", acc);
+    let expect_q = vec![0, 0, 1, 1, 1, 1, 2, 2];
+    let expect_acc = vec![
+        -0.19999993f32,
+        0.10000008,
+        -0.8999999,
+        -0.19999993,
+        0.8000003,
+        0.9000002,
+        -0.2999997,
+        0.20000029,
+    ];
+    // NOTE: q's entry layout in the HLO text is {0,1} (column-major);
+    // whether the raw read needs delinearization is exactly what this
+    // probe decides.
+    let q_transposed: Vec<i32> =
+        (0..8).map(|p| q[(p % 2) * 4 + p / 2]).collect();
+    eprintln!("q^T = {:?}", q_transposed);
+    assert!(
+        q == expect_q || q_transposed == expect_q,
+        "q diverged beyond layout: {:?} (expected {:?})",
+        q,
+        expect_q
+    );
+    for (a, b) in acc.iter().zip(&expect_acc) {
+        assert!((a - b).abs() < 1e-4, "acc diverged: {:?}", acc);
+    }
+}

@@ -1,0 +1,38 @@
+//! Probe: does an HLO `while` loop (from lax.scan) survive the HLO-text
+//! round-trip into xla_extension 0.5.1? This pins down the root cause of
+//! the GANQ solver-graph divergence (see solver_pieces.rs) at the smallest
+//! possible reproducer: scan body c += x over 5 steps.
+//!
+//! Expected with x = [1,2,3]: c = [5,10,15], ys = [1,2,3,4,5].
+
+#[test]
+fn minimal_scan_roundtrip() {
+    let path = "/tmp/while_test.hlo.txt";
+    if !std::path::Path::new(path).exists() {
+        eprintln!("skipping: probe HLO not generated");
+        return;
+    }
+    let client = xla::PjRtClient::cpu().unwrap();
+    let proto = xla::HloModuleProto::from_text_file(path).unwrap();
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).unwrap();
+    let x = xla::Literal::vec1(&[1f32, 2f32, 3f32]);
+    let out = exe.execute::<xla::Literal>(&[x]).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let parts = out.to_tuple().unwrap();
+    let c = parts[0].to_vec::<f32>().unwrap();
+    let ys = parts[1].to_vec::<f32>().unwrap();
+    eprintln!("c = {:?}, ys = {:?}", c, ys);
+    // length-agnostic: c = L*[1,2,3], ys = [1..L] (probe may be
+    // regenerated at different lengths to toggle loop unrolling)
+    let l = ys.len() as f32;
+    assert_eq!(
+        c,
+        vec![l, 2.0 * l, 3.0 * l],
+        "scan carry broken on old XLA"
+    );
+    for (k, &y) in ys.iter().enumerate() {
+        assert_eq!(y, (k + 1) as f32, "scan stacking broken on old XLA");
+    }
+}
