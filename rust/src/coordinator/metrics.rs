@@ -1,7 +1,11 @@
 //! Serving metrics: per-request latency breakdown and aggregate
-//! throughput / weight-traffic numbers (Table 6 columns).
+//! throughput / weight-traffic numbers (Table 6 columns), plus paged-KV
+//! counters (block-pool occupancy, prefix-hit rate, preemptions) when
+//! the backend pages its cache.
 
 use std::time::{Duration, Instant};
+
+use crate::kv::KvPoolStats;
 
 #[derive(Debug, Clone)]
 pub struct RequestMetrics {
@@ -33,6 +37,15 @@ pub struct ServeMetrics {
     pub weight_bytes_per_step: usize,
     /// KV-cache bytes touched per step
     pub kv_bytes_per_step: usize,
+    /// requests preempted and requeued by the scheduler (paged backends)
+    pub preemptions: usize,
+    /// requests that could never fit in the KV pool; their responses
+    /// carry whatever was generated before rejection (usually nothing)
+    pub rejected: usize,
+    /// maximum simultaneously-decoding requests observed
+    pub peak_concurrency: usize,
+    /// block-pool counters (None for contiguous-cache backends)
+    pub kv: Option<KvPoolStats>,
 }
 
 impl ServeMetrics {
@@ -82,7 +95,7 @@ impl ServeMetrics {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} reqs, {} tokens in {:.2}s ({:.1} tok/s), ttft {:.1}ms, p95 {:.1}ms, {:.1} MiB weights/step",
             self.requests.len(),
             self.total_generated(),
@@ -91,7 +104,22 @@ impl ServeMetrics {
             self.mean_ttft_ms(),
             self.p95_latency_ms(),
             self.weight_bytes_per_step as f64 / (1 << 20) as f64,
-        )
+        );
+        if let Some(kv) = &self.kv {
+            s.push_str(&format!(
+                ", kv pool {}/{} blocks (peak {:.0}%), prefix hit {:.0}%, {} preempt, {} evict",
+                kv.blocks_in_use,
+                kv.blocks_total,
+                100.0 * kv.peak_occupancy(),
+                100.0 * kv.prefix_hit_rate(),
+                self.preemptions,
+                kv.evictions,
+            ));
+        }
+        if self.rejected > 0 {
+            s.push_str(&format!(", {} rejected", self.rejected));
+        }
+        s
     }
 }
 
@@ -125,6 +153,7 @@ mod tests {
             wall_s: 0.1,
             weight_bytes_per_step: 1000,
             kv_bytes_per_step: 10,
+            ..Default::default()
         };
         assert_eq!(m.total_generated(), 30);
         assert!((m.tokens_per_s() - 300.0).abs() < 1e-9);
@@ -139,5 +168,31 @@ mod tests {
         assert_eq!(m.tokens_per_s(), 0.0);
         assert!(m.mean_ttft_ms().is_nan());
         assert!(m.p95_latency_ms().is_nan());
+        assert!(m.kv.is_none());
+        assert!(!m.summary().contains("kv pool"));
+    }
+
+    #[test]
+    fn kv_pool_counters_surface_in_summary() {
+        let m = ServeMetrics {
+            preemptions: 3,
+            kv: Some(KvPoolStats {
+                blocks_total: 16,
+                blocks_in_use: 4,
+                peak_blocks_in_use: 12,
+                prefix_lookup_tokens: 100,
+                prefix_hit_tokens: 25,
+                evictions: 2,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let kv = m.kv.as_ref().unwrap();
+        assert!((kv.peak_occupancy() - 0.75).abs() < 1e-9);
+        assert!((kv.prefix_hit_rate() - 0.25).abs() < 1e-9);
+        let s = m.summary();
+        assert!(s.contains("kv pool 4/16"), "{}", s);
+        assert!(s.contains("prefix hit 25%"), "{}", s);
+        assert!(s.contains("3 preempt"), "{}", s);
     }
 }

@@ -4,10 +4,12 @@
 //!   per-layer GANQ/baseline quantization (native or through the AOT HLO
 //!   solver graph), servable model assembly.
 //! * `serve` — the online path: token-level continuous batching over the
-//!   AOT decode graphs (PJRT) or the native fallback, with per-slot
-//!   positions and KV caches.
+//!   AOT decode graphs (PJRT), the native fallback with contiguous KV
+//!   caches, or the paged-KV native backend (block tables + prefix
+//!   sharing + preemption; see `kv`).
 //! * `metrics` — request latency + throughput + weight-traffic accounting
-//!   (Table 6's CUDA-time/speedup/peak-memory analogues).
+//!   (Table 6's CUDA-time/speedup/peak-memory analogues), plus block-pool
+//!   occupancy / prefix-hit / preemption counters for paged serving.
 //! * `server` — a threaded front: submit requests from any thread; a
 //!   dedicated engine thread owns the (non-Send) runtime.
 
@@ -19,6 +21,6 @@ pub mod server;
 pub use metrics::ServeMetrics;
 pub use pipeline::{calibrate, quantize_model, Calibration, QuantEngine};
 pub use serve::{
-    serve, DecodeBackend, HloBackend, NativeBackend, Request, Response,
-    WeightFmt,
+    serve, DecodeBackend, HloBackend, KvStoreKind, NativeBackend,
+    PagedNativeBackend, Request, Response, WeightFmt,
 };

@@ -1,21 +1,48 @@
 //! Serving: token-level continuous batching (Orca-style) over a decode
-//! backend. Two backends implement the same scheduler contract:
+//! backend. Three backends implement the same scheduler contract:
 //!
 //! * [`HloBackend`] — the AOT decode graph via PJRT (`decode_{fmt}_{model}
 //!   _b{B}`), per-slot positions as a vector input, KV caches threaded
 //!   through the graph outputs; weights optionally staged as device-
 //!   resident buffers (the §Perf optimization).
-//! * [`NativeBackend`] — the pure-Rust forward path (works without
-//!   artifacts; also the reference for cross-checking the HLO path).
+//! * [`NativeBackend`] — the pure-Rust forward path with one contiguous
+//!   [`KvCache`] per slot (works without artifacts; also the reference
+//!   for cross-checking the HLO path).
+//! * [`PagedNativeBackend`] — the native path over the paged KV cache
+//!   (`kv::PagedKv`): block tables, prefix sharing, and dynamic capacity.
 //!
 //! The scheduler admits requests into free slots, feeds one token per slot
 //! per step (prompt tokens first — "prefill as decode" keeps the graph set
 //! small; exact-size prefill graphs exist for the common 16/32-token
 //! prompts and are used by the latency bench), and collects per-request
 //! latency metrics.
+//!
+//! ## Admission / preemption contract (paged backends)
+//!
+//! Capacity is dynamic: [`DecodeBackend::admit`] may refuse a request
+//! (`None`) while the block pool is full — the scheduler keeps it queued
+//! in FIFO order and retries each round. An admit may also report `k`
+//! prompt positions already covered by shared prefix blocks; the
+//! scheduler skips feeding those tokens (`k` is always less than the
+//! prompt length so the final prompt token still produces first-token
+//! logits). Before every step the scheduler calls
+//! [`DecodeBackend::pre_step`]; a backend that ran out of blocks preempts
+//! its youngest-admitted slots there, and the scheduler requeues the
+//! victims at the front of the queue with their generated tokens folded
+//! into the replay prompt (recompute-style preemption — with greedy
+//! decoding the final output is unchanged). Finished slots are returned
+//! with [`DecodeBackend::release_slot`]; their shared blocks stay cached
+//! for future prefix hits. A request that can never fit in the pool
+//! (admission keeps refusing with an idle backend, or every admit is
+//! immediately preempted) is rejected rather than wedging the batch: it
+//! completes with whatever it generated so far (usually nothing) and is
+//! counted in `ServeMetrics::rejected`.
 
 use std::time::Instant;
 
+use crate::kv::{
+    F32Blocks, KvBlockStore, KvLayout, KvPoolStats, LutBlocks, PagedKv,
+};
 use crate::model::forward::{self, KvCache, Weights};
 use crate::model::{LayerWeights, ModelConfig, QuantizedModel, WeightStore};
 use crate::runtime::{HostTensor, Runtime};
@@ -48,6 +75,41 @@ pub trait DecodeBackend {
     fn slot_pos(&self, slot: usize) -> usize;
     fn weight_bytes_per_step(&self) -> usize;
     fn kv_bytes_per_step(&self) -> usize;
+
+    /// Admit a request into `slot` before its first step. `Some(k)`
+    /// means `k` prompt positions are already cached (prefix hit, always
+    /// `< prompt.len()`); the scheduler skips feeding them. `None` means
+    /// the backend has no KV capacity right now and the scheduler should
+    /// retry later. Static-capacity backends always admit at position 0.
+    fn admit(
+        &mut self,
+        slot: usize,
+        prompt: &[i32],
+        max_new: usize,
+    ) -> Option<usize> {
+        let _ = (prompt, max_new);
+        self.reset_slot(slot);
+        Some(0)
+    }
+
+    /// Called with the active mask before every step. Returns the slots
+    /// the backend preempted to reclaim KV memory (their state is gone);
+    /// the scheduler requeues those requests. Default: none.
+    fn pre_step(&mut self, active: &[bool]) -> Vec<usize> {
+        let _ = active;
+        Vec::new()
+    }
+
+    /// Release a slot's KV state once its request finished. Paged
+    /// backends return blocks to the pool (shared prefixes stay cached).
+    fn release_slot(&mut self, slot: usize) {
+        let _ = slot;
+    }
+
+    /// Block-pool counters (paged backends only).
+    fn pool_stats(&self) -> Option<KvPoolStats> {
+        None
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -56,9 +118,41 @@ pub trait DecodeBackend {
 
 struct SlotState {
     req: Request,
+    /// tokens generated before a preemption (already part of `prompt`)
+    gen_prefix: Vec<i32>,
+    /// effective prompt for this residency: original prompt + gen_prefix
+    prompt: Vec<i32>,
     prompt_idx: usize,
     generated: Vec<i32>,
     metrics: RequestMetrics,
+}
+
+/// A queued request, possibly carrying state from a preemption.
+struct Queued {
+    req: Request,
+    gen_prefix: Vec<i32>,
+    metrics: Option<RequestMetrics>,
+}
+
+/// Finish a request that cannot fit in the backend's KV pool: it gets a
+/// response with whatever was generated before (usually empty) instead
+/// of poisoning the whole serve call.
+fn reject(
+    q: Queued,
+    responses: &mut Vec<Response>,
+    all_metrics: &mut Vec<RequestMetrics>,
+) {
+    let mut m = q.metrics.unwrap_or(RequestMetrics {
+        id: q.req.id,
+        prompt_tokens: q.req.prompt.len(),
+        generated_tokens: q.gen_prefix.len(),
+        enqueued: Instant::now(),
+        first_token: None,
+        finished: None,
+    });
+    m.finished = Some(Instant::now());
+    responses.push(Response { id: q.req.id, tokens: q.gen_prefix });
+    all_metrics.push(m);
 }
 
 /// Serve a batch of requests to completion with continuous batching.
@@ -69,7 +163,8 @@ pub fn serve(
     let nslots = backend.slots();
     let ctx = backend.cfg().ctx;
     let t_start = Instant::now();
-    let mut queue: std::collections::VecDeque<Request> = requests
+    let total_reqs = requests.len();
+    let mut queue: std::collections::VecDeque<Queued> = requests
         .into_iter()
         .map(|mut r| {
             // left-truncate prompts that cannot fit with generation room
@@ -77,41 +172,79 @@ pub fn serve(
             if r.prompt.len() > budget {
                 r.prompt = r.prompt[r.prompt.len() - budget..].to_vec();
             }
-            r
+            Queued { req: r, gen_prefix: Vec::new(), metrics: None }
         })
         .collect();
     let mut slots: Vec<Option<SlotState>> =
         (0..nslots).map(|_| None).collect();
-    let mut done: Vec<(Vec<Response>, RequestMetrics)> = Vec::new();
     let mut responses = Vec::new();
     let mut all_metrics = Vec::new();
     let mut steps = 0usize;
+    let mut preemptions = 0usize;
+    let mut rejected = 0usize;
+    let mut peak_concurrency = 0usize;
+    let mut stalls = 0usize;
 
     loop {
-        // admit
-        for (si, slot) in slots.iter_mut().enumerate() {
-            if slot.is_none() {
-                if let Some(req) = queue.pop_front() {
-                    backend.reset_slot(si);
-                    let m = RequestMetrics {
-                        id: req.id,
-                        prompt_tokens: req.prompt.len(),
-                        generated_tokens: 0,
-                        enqueued: Instant::now(),
-                        first_token: None,
-                        finished: None,
-                    };
-                    *slot = Some(SlotState {
-                        req,
-                        prompt_idx: 0,
+        // admit in FIFO order; a paged backend may refuse (pool full)
+        for si in 0..nslots {
+            if slots[si].is_some() {
+                continue;
+            }
+            let Some(q) = queue.front() else { break };
+            let prompt: Vec<i32> = q
+                .req
+                .prompt
+                .iter()
+                .chain(q.gen_prefix.iter())
+                .copied()
+                .collect();
+            let max_new = q.req.max_new - q.gen_prefix.len();
+            match backend.admit(si, &prompt, max_new) {
+                Some(cached) => {
+                    debug_assert!(
+                        cached < prompt.len().max(1),
+                        "prefix hit must leave the last prompt token"
+                    );
+                    let q = queue.pop_front().expect("front checked");
+                    let metrics =
+                        q.metrics.clone().unwrap_or(RequestMetrics {
+                            id: q.req.id,
+                            prompt_tokens: q.req.prompt.len(),
+                            generated_tokens: 0,
+                            enqueued: Instant::now(),
+                            first_token: None,
+                            finished: None,
+                        });
+                    slots[si] = Some(SlotState {
+                        req: q.req,
+                        gen_prefix: q.gen_prefix,
+                        prompt,
+                        prompt_idx: cached,
                         generated: Vec::new(),
-                        metrics: m,
+                        metrics,
                     });
                 }
+                None => break,
             }
         }
         if slots.iter().all(|s| s.is_none()) {
-            break;
+            if queue.is_empty() {
+                break;
+            }
+            // the front request cannot be admitted into an idle backend;
+            // give the rest of the queue a turn, and once everyone has
+            // had one (a full rotation) reject the front as unserveable
+            stalls += 1;
+            if stalls > queue.len() + 1 {
+                let q = queue.pop_front().expect("queue nonempty");
+                reject(q, &mut responses, &mut all_metrics);
+                rejected += 1;
+                stalls = 0;
+            } else {
+                queue.rotate_left(1);
+            }
+            continue;
         }
 
         // build step inputs
@@ -120,46 +253,87 @@ pub fn serve(
         for (si, slot) in slots.iter().enumerate() {
             if let Some(st) = slot {
                 active[si] = true;
-                tok[si] = if st.prompt_idx < st.req.prompt.len() {
-                    st.req.prompt[st.prompt_idx]
+                tok[si] = if st.prompt_idx < st.prompt.len() {
+                    st.prompt[st.prompt_idx]
                 } else {
                     *st.generated.last().expect("generated nonempty")
                 };
             }
         }
+
+        // let the backend reclaim KV memory; requeue its victims with
+        // their generated tokens folded into the replay prompt
+        for vi in backend.pre_step(&active) {
+            let st = slots[vi].take().expect("victim slot was active");
+            active[vi] = false;
+            preemptions += 1;
+            let mut gen_prefix = st.gen_prefix;
+            gen_prefix.extend_from_slice(&st.generated);
+            let mut m = st.metrics;
+            m.generated_tokens = gen_prefix.len();
+            queue.push_front(Queued {
+                req: st.req,
+                gen_prefix,
+                metrics: Some(m),
+            });
+        }
+        if !active.iter().any(|&a| a) {
+            // every admitted slot was immediately preempted: if this
+            // persists, the front request (the requeued victim) cannot
+            // fit in the pool at all — reject it and move on
+            stalls += 1;
+            if stalls > total_reqs + 2 {
+                if let Some(q) = queue.pop_front() {
+                    reject(q, &mut responses, &mut all_metrics);
+                    rejected += 1;
+                }
+                stalls = 0;
+            }
+            continue;
+        }
+        stalls = 0;
+
         let logits = backend.step(&tok, &active)?;
         steps += 1;
+        peak_concurrency = peak_concurrency
+            .max(active.iter().filter(|&&a| a).count());
 
         // consume outputs
         for (si, slot) in slots.iter_mut().enumerate() {
+            if !active[si] {
+                continue;
+            }
             let finished = if let Some(st) = slot.as_mut() {
-                if st.prompt_idx < st.req.prompt.len() {
+                if st.prompt_idx < st.prompt.len() {
                     st.prompt_idx += 1;
                 }
-                if st.prompt_idx >= st.req.prompt.len() {
+                if st.prompt_idx >= st.prompt.len() {
                     // this step's logits yield the next generated token
                     let next = forward::argmax(&logits[si]) as i32;
                     st.generated.push(next);
-                    st.metrics.generated_tokens = st.generated.len();
+                    st.metrics.generated_tokens =
+                        st.gen_prefix.len() + st.generated.len();
                     if st.metrics.first_token.is_none() {
                         st.metrics.first_token = Some(Instant::now());
                     }
                 }
-                st.generated.len() >= st.req.max_new
+                st.gen_prefix.len() + st.generated.len() >= st.req.max_new
                     || backend.slot_pos(si) + 1 >= ctx
             } else {
                 false
             };
             if finished {
-                let st = slot.take().unwrap();
+                let st = slot.take().expect("finished slot");
+                backend.release_slot(si);
                 let mut m = st.metrics;
                 m.finished = Some(Instant::now());
-                responses.push(Response { id: st.req.id, tokens: st.generated });
+                let mut tokens = st.gen_prefix;
+                tokens.extend_from_slice(&st.generated);
+                responses.push(Response { id: st.req.id, tokens });
                 all_metrics.push(m);
             }
         }
     }
-    let _ = &mut done;
 
     let metrics = ServeMetrics {
         requests: all_metrics,
@@ -167,6 +341,10 @@ pub fn serve(
         wall_s: t_start.elapsed().as_secs_f64(),
         weight_bytes_per_step: backend.weight_bytes_per_step(),
         kv_bytes_per_step: backend.kv_bytes_per_step(),
+        preemptions,
+        rejected,
+        peak_concurrency,
+        kv: backend.pool_stats(),
     };
     responses.sort_by_key(|r| r.id);
     Ok((responses, metrics))
@@ -231,7 +409,6 @@ impl<'a> DecodeBackend for NativeBackend<'a> {
         tok: &[i32],
         active: &[bool],
     ) -> Result<Vec<Vec<f32>>, String> {
-        let vocab = self.cfg().vocab;
         let mut out = Vec::with_capacity(tok.len());
         for si in 0..tok.len() {
             if active[si] {
@@ -241,7 +418,8 @@ impl<'a> DecodeBackend for NativeBackend<'a> {
                     &mut self.caches[si],
                 ));
             } else {
-                out.push(vec![0.0; vocab]);
+                // the scheduler never reads inactive rows
+                out.push(Vec::new());
             }
         }
         Ok(out)
@@ -263,6 +441,152 @@ impl<'a> DecodeBackend for NativeBackend<'a> {
         let c = self.cfg();
         // read whole cache + write one position, per layer, K and V
         c.layers * c.heads * c.ctx * c.head_dim() * 4 * 2
+    }
+}
+
+// ---------------------------------------------------------------------------
+// paged native backend
+// ---------------------------------------------------------------------------
+
+/// Which representation backs the paged KV blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvStoreKind {
+    /// dense f32 — bit-exact with the contiguous [`NativeBackend`] path
+    F32,
+    /// per-(layer, head) 4-bit non-uniform codebooks, fitted on block
+    /// fill with the GANQ machinery (~8x more blocks per byte)
+    Lut4,
+}
+
+/// Native forward path over the paged KV cache: dynamic admission
+/// (capacity is the block pool, not the slot count), prefix sharing,
+/// CoW, LRU prefix caching, and youngest-first preemption.
+pub struct PagedNativeBackend<'a> {
+    w: Weights<'a>,
+    kv: PagedKv,
+    weight_bytes: usize,
+}
+
+impl<'a> PagedNativeBackend<'a> {
+    /// `slots` bounds concurrency; real capacity is `num_blocks` blocks
+    /// of `block_size` positions each.
+    pub fn new(
+        w: Weights<'a>,
+        slots: usize,
+        block_size: usize,
+        num_blocks: usize,
+        kind: KvStoreKind,
+    ) -> PagedNativeBackend<'a> {
+        let cfg = w.store().cfg;
+        let layout = KvLayout::new(&cfg, block_size);
+        let store: Box<dyn KvBlockStore> = match kind {
+            KvStoreKind::F32 => Box::new(F32Blocks::new(layout, num_blocks)),
+            KvStoreKind::Lut4 => {
+                Box::new(LutBlocks::new(layout, num_blocks))
+            }
+        };
+        let weight_bytes = weight_bytes_of(&w);
+        PagedNativeBackend {
+            w,
+            kv: PagedKv::new(store, num_blocks, slots),
+            weight_bytes,
+        }
+    }
+
+    /// Size the pool from a KV memory budget in bytes (at least one
+    /// block).
+    pub fn with_memory_budget(
+        w: Weights<'a>,
+        slots: usize,
+        block_size: usize,
+        kind: KvStoreKind,
+        budget_bytes: usize,
+    ) -> PagedNativeBackend<'a> {
+        let layout = KvLayout::new(&w.store().cfg, block_size);
+        let bpb = match kind {
+            KvStoreKind::F32 => F32Blocks::bytes_per_block_for(layout),
+            KvStoreKind::Lut4 => LutBlocks::bytes_per_block_for(layout),
+        };
+        let num_blocks = (budget_bytes / bpb).max(1);
+        PagedNativeBackend::new(w, slots, block_size, num_blocks, kind)
+    }
+
+    pub fn kv(&self) -> &PagedKv {
+        &self.kv
+    }
+}
+
+impl<'a> DecodeBackend for PagedNativeBackend<'a> {
+    fn slots(&self) -> usize {
+        self.kv.num_slots()
+    }
+
+    fn cfg(&self) -> ModelConfig {
+        self.w.store().cfg
+    }
+
+    fn step(
+        &mut self,
+        tok: &[i32],
+        active: &[bool],
+    ) -> Result<Vec<Vec<f32>>, String> {
+        let mut out = Vec::with_capacity(tok.len());
+        for si in 0..tok.len() {
+            if active[si] {
+                self.kv.push_token(si, tok[si]);
+                let mut view = self.kv.slot_view(si);
+                out.push(forward::decode_step_kv(
+                    &self.w,
+                    tok[si],
+                    &mut view,
+                ));
+            } else {
+                // the scheduler never reads inactive rows
+                out.push(Vec::new());
+            }
+        }
+        Ok(out)
+    }
+
+    fn reset_slot(&mut self, slot: usize) {
+        self.kv.release(slot);
+    }
+
+    fn slot_pos(&self, slot: usize) -> usize {
+        self.kv.pos(slot)
+    }
+
+    fn weight_bytes_per_step(&self) -> usize {
+        self.weight_bytes
+    }
+
+    fn kv_bytes_per_step(&self) -> usize {
+        // peak resident block bytes — the paged analogue of the
+        // contiguous backends' ctx-sized per-slot caches (sampled at end
+        // of run, when current occupancy is just prefix-cache residue)
+        self.kv.bytes_per_block() * self.kv.stats().peak_blocks_in_use
+    }
+
+    fn admit(
+        &mut self,
+        slot: usize,
+        prompt: &[i32],
+        max_new: usize,
+    ) -> Option<usize> {
+        self.kv.release(slot);
+        self.kv.admit(slot, prompt, max_new)
+    }
+
+    fn pre_step(&mut self, active: &[bool]) -> Vec<usize> {
+        self.kv.prepare_step(active)
+    }
+
+    fn release_slot(&mut self, slot: usize) {
+        self.kv.release(slot);
+    }
+
+    fn pool_stats(&self) -> Option<KvPoolStats> {
+        Some(self.kv.stats())
     }
 }
 
@@ -334,7 +658,10 @@ pub fn weight_tensors_lut(
                 ));
             }
             let (m, n) = (shape[0], shape[1]);
-            out.push(HostTensor::U8(vec![m, n / 2], lut.packed_nibbles()));
+            out.push(HostTensor::U8(
+                vec![m, n.div_ceil(2)],
+                lut.packed_nibbles(),
+            ));
             out.push(HostTensor::F32(vec![m, k], lut.codebook.data.clone()));
         } else {
             let t = qm.base.get(&name);
@@ -503,7 +830,7 @@ impl<'a> DecodeBackend for HloBackend<'a> {
         if out.len() != 3 {
             return Err(format!("decode returned {} outputs", out.len()));
         }
-        let logits_flat = out[0].as_f32();
+        let logits_flat = out[0].as_f32()?;
         let vocab = self.cfg.vocab;
         let logits: Vec<Vec<f32>> = (0..self.b)
             .map(|i| logits_flat[i * vocab..(i + 1) * vocab].to_vec())
@@ -589,6 +916,106 @@ mod tests {
                 .tokens;
             assert_eq!(got, &expect, "req {}", r.id);
         }
+    }
+
+    #[test]
+    fn paged_f32_serving_matches_contiguous_native() {
+        let (store, reqs) = backend();
+        let w = Weights::Fp(&store);
+        let mut be = NativeBackend::new(w, 3);
+        let (resp_c, _) = serve(&mut be, reqs.clone()).unwrap();
+
+        let w2 = Weights::Fp(&store);
+        let mut bp =
+            PagedNativeBackend::new(w2, 3, 4, 64, KvStoreKind::F32);
+        let (resp_p, m) = serve(&mut bp, reqs).unwrap();
+        assert_eq!(resp_c.len(), resp_p.len());
+        for (c, p) in resp_c.iter().zip(&resp_p) {
+            assert_eq!(c.id, p.id);
+            assert_eq!(c.tokens, p.tokens, "req {}", c.id);
+        }
+        let kv = m.kv.expect("paged backend reports pool stats");
+        assert!(kv.sealed_blocks > 0);
+        assert!(kv.peak_blocks_in_use > 0);
+    }
+
+    #[test]
+    fn paged_preemption_preserves_greedy_output() {
+        let cfg = ModelConfig::builtin("opt-micro").unwrap();
+        let store = WeightStore::random("t", cfg, 33);
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| Request {
+                id: i,
+                prompt: vec![10 + i as i32, 20, 30],
+                max_new: 12,
+            })
+            .collect();
+        let w = Weights::Fp(&store);
+        let mut be = NativeBackend::new(w, 4);
+        let (expect, _) = serve(&mut be, reqs.clone()).unwrap();
+
+        // a pool too small for 4 full requests forces preemption
+        let w2 = Weights::Fp(&store);
+        let mut bp =
+            PagedNativeBackend::new(w2, 4, 4, 8, KvStoreKind::F32);
+        let (got, m) = serve(&mut bp, reqs).unwrap();
+        assert_eq!(expect.len(), got.len());
+        for (e, g) in expect.iter().zip(&got) {
+            assert_eq!(e.tokens, g.tokens, "req {}", e.id);
+        }
+        // with 8 blocks and 4 requests needing 4 blocks each, someone
+        // must have been preempted or queued; either way all finished
+        assert!(m.preemptions > 0 || m.peak_concurrency < 4);
+    }
+
+    #[test]
+    fn unserveable_request_is_rejected_not_fatal() {
+        let cfg = ModelConfig::builtin("opt-micro").unwrap();
+        let store = WeightStore::random("t", cfg, 35);
+        // 2-block pool (bs 4): a 12-token prompt can never fit, the
+        // 2-token one can
+        let reqs = vec![
+            Request { id: 1, prompt: (0..12).collect(), max_new: 4 },
+            Request { id: 2, prompt: vec![7, 8], max_new: 3 },
+        ];
+        let w = Weights::Fp(&store);
+        let mut bp =
+            PagedNativeBackend::new(w, 2, 4, 2, KvStoreKind::F32);
+        let (resp, m) = serve(&mut bp, reqs).unwrap();
+        assert_eq!(resp.len(), 2);
+        assert!(resp[0].tokens.is_empty(), "oversized req rejected");
+        assert_eq!(resp[1].tokens.len(), 3, "small req still served");
+        assert_eq!(m.rejected, 1);
+    }
+
+    #[test]
+    fn paged_prefix_sharing_reports_hits() {
+        let cfg = ModelConfig::builtin("opt-micro").unwrap();
+        let store = WeightStore::random("t", cfg, 34);
+        let shared: Vec<i32> = (0..8).collect();
+        let reqs: Vec<Request> = (0..3)
+            .map(|i| Request {
+                id: i,
+                prompt: shared.clone(),
+                max_new: 4,
+            })
+            .collect();
+        let w = Weights::Fp(&store);
+        let mut bp =
+            PagedNativeBackend::new(w, 1, 4, 32, KvStoreKind::F32);
+        // one slot: requests run serially, later ones hit the cached
+        // prefix left by the first
+        let (resp, m) = serve(&mut bp, reqs).unwrap();
+        assert_eq!(resp.len(), 3);
+        assert_eq!(resp[0].tokens, resp[1].tokens);
+        assert_eq!(resp[0].tokens, resp[2].tokens);
+        let kv = m.kv.unwrap();
+        assert!(
+            kv.prefix_hit_tokens >= 8,
+            "expected shared-prefix hits, got {:?}",
+            kv
+        );
+        assert!(kv.prefix_hit_rate() > 0.0);
     }
 
     #[test]

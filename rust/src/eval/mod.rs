@@ -88,7 +88,7 @@ impl<'a> PplEngine<'a> {
                     vec![HostTensor::I32(vec![NLL_BATCH, NLL_SEQ], flat)];
                 inputs.extend(weights.iter().cloned());
                 let out = rt.run(graph, &inputs)?;
-                Ok(out[0].scalar_f32() as f64)
+                Ok(out[0].scalar_f32()? as f64)
             }
         }
     }

@@ -1,0 +1,68 @@
+//! Paged KV-cache subsystem (vLLM-style block tables + RadixAttention-
+//! style prefix sharing), the serving-scale counterpart of the paper's
+//! LUT weight compression: once weights stream as 3–4-bit codes, the KV
+//! cache dominates serving memory and caps batch size.
+//!
+//! * [`BlockPool`] — fixed-size physical blocks with refcounts.
+//! * [`PrefixIndex`] — radix tree over full token chunks; requests whose
+//!   prompts share a prefix share physical blocks, and finished requests
+//!   leave their blocks cached until LRU eviction reclaims them.
+//! * [`KvBlockStore`] — block storage trait with two implementations:
+//!   dense [`F32Blocks`] (bit-exact with the contiguous cache) and
+//!   [`LutBlocks`] (per-(layer, head) 4-bit non-uniform codebooks fitted
+//!   with the GANQ machinery on block fill).
+//! * [`PagedKv`] — per-slot block tables, admission with prefix reuse,
+//!   copy-on-write on the first divergent append into a shared block,
+//!   and youngest-first preemption when the pool runs dry.
+//!
+//! The serving integration lives in `coordinator::serve`
+//! (`PagedNativeBackend`); the decode step reads and appends through
+//! [`crate::model::forward::KvSeq`].
+
+pub mod paged;
+pub mod pool;
+pub mod prefix;
+pub mod store;
+
+pub use paged::{PagedKv, SlotView};
+pub use pool::BlockPool;
+pub use prefix::PrefixIndex;
+pub use store::{F32Blocks, KvBlockStore, KvLayout, LutBlocks, KV_LUT_BITS};
+
+/// Counters exported to the serving metrics (`ServeMetrics.kv`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct KvPoolStats {
+    pub blocks_total: usize,
+    pub blocks_in_use: usize,
+    pub peak_blocks_in_use: usize,
+    /// blocks held (possibly only) by the prefix index
+    pub cached_blocks: usize,
+    /// prompt tokens examined by prefix lookups at admission
+    pub prefix_lookup_tokens: usize,
+    /// prompt tokens served from shared prefix blocks
+    pub prefix_hit_tokens: usize,
+    pub preemptions: usize,
+    pub cow_copies: usize,
+    pub evictions: usize,
+    pub sealed_blocks: usize,
+}
+
+impl KvPoolStats {
+    /// Peak fraction of the pool in use.
+    pub fn peak_occupancy(&self) -> f64 {
+        if self.blocks_total == 0 {
+            0.0
+        } else {
+            self.peak_blocks_in_use as f64 / self.blocks_total as f64
+        }
+    }
+
+    /// Fraction of admitted prompt tokens served from shared blocks.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookup_tokens == 0 {
+            0.0
+        } else {
+            self.prefix_hit_tokens as f64 / self.prefix_lookup_tokens as f64
+        }
+    }
+}

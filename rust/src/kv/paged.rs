@@ -1,0 +1,496 @@
+//! The paged KV cache: per-request block tables over a refcounted
+//! [`BlockPool`], prefix sharing through a [`PrefixIndex`], copy-on-write
+//! on the first divergent append into a shared block, and LRU eviction of
+//! freed-but-cached prefixes.
+//!
+//! Lifecycle of a slot:
+//!
+//! 1. `admit` — match the prompt against the prefix index; share every
+//!    reusable block (pool refcount++) and resume decoding after the
+//!    shared positions (capped at `prompt.len() - 1` so the final prompt
+//!    token still produces logits).
+//! 2. `prepare_step` — before every scheduler step, make each active slot
+//!    appendable: allocate a fresh tail block on a block boundary, or CoW
+//!    a partially-shared tail. When the pool is dry even after evicting
+//!    cached prefixes, the youngest-admitted slots are preempted
+//!    (released and reported back for requeueing).
+//! 3. `push_token` + [`SlotView`] — the decode step reads/writes through
+//!    the block table ([`crate::model::forward::KvSeq`]).
+//! 4. On a block-boundary advance the filled block is sealed (quantized
+//!    stores compress here) and indexed for future prefix hits.
+//! 5. `release` — drop the slot's references; blocks also held by the
+//!    index stay cached until evicted.
+
+use crate::model::forward::KvSeq;
+
+use super::pool::BlockPool;
+use super::prefix::PrefixIndex;
+use super::store::KvBlockStore;
+use super::KvPoolStats;
+
+struct Seq {
+    /// physical block per `block_size` positions, in order
+    blocks: Vec<usize>,
+    /// token history (the prefix index needs token identity at seal time)
+    tokens: Vec<i32>,
+    /// positions cached so far == tokens.len() after `push_token`
+    pos: usize,
+    /// admission order; preemption victims are picked youngest-first
+    admitted_at: u64,
+}
+
+pub struct PagedKv {
+    pool: BlockPool,
+    store: Box<dyn KvBlockStore>,
+    index: PrefixIndex,
+    slots: Vec<Option<Seq>>,
+    clock: u64,
+    prefix_lookup_tokens: usize,
+    prefix_hit_tokens: usize,
+    preemptions: usize,
+    cow_copies: usize,
+    evictions: usize,
+    sealed_blocks: usize,
+}
+
+impl PagedKv {
+    pub fn new(store: Box<dyn KvBlockStore>, num_blocks: usize, slots: usize) -> PagedKv {
+        PagedKv {
+            pool: BlockPool::new(num_blocks),
+            store,
+            index: PrefixIndex::new(),
+            slots: (0..slots).map(|_| None).collect(),
+            clock: 0,
+            prefix_lookup_tokens: 0,
+            prefix_hit_tokens: 0,
+            preemptions: 0,
+            cow_copies: 0,
+            evictions: 0,
+            sealed_blocks: 0,
+        }
+    }
+
+    pub fn num_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.store.layout().block_size
+    }
+
+    pub fn bytes_per_block(&self) -> usize {
+        self.store.bytes_per_block()
+    }
+
+    /// Cached positions of a slot (0 when vacant).
+    pub fn pos(&self, slot: usize) -> usize {
+        self.slots[slot].as_ref().map_or(0, |s| s.pos)
+    }
+
+    /// Free blocks plus cached blocks that eviction could reclaim.
+    pub fn reclaimable_blocks(&self) -> usize {
+        let pool = &self.pool;
+        self.pool.free_blocks()
+            + self.index.evictable_blocks(|b| pool.refcount(b) == 1)
+    }
+
+    /// Admission headroom check: blocks for the uncached prompt part plus
+    /// one decode block must be reclaimable.
+    pub fn can_admit(&self, prompt: &[i32], _max_new: usize) -> bool {
+        let bs = self.block_size();
+        let cached = self.index.peek(prompt, bs) * bs;
+        let hit = cached.min(prompt.len().saturating_sub(1));
+        let needed = (prompt.len() - hit).div_ceil(bs) + 1;
+        self.reclaimable_blocks() >= needed
+    }
+
+    /// Admit a request into a vacant slot. Returns the number of prompt
+    /// positions covered by shared prefix blocks — always less than
+    /// `prompt.len()`, so the caller still decodes the final prompt token
+    /// — or `None` when the pool lacks headroom.
+    pub fn admit(
+        &mut self,
+        slot: usize,
+        prompt: &[i32],
+        max_new: usize,
+    ) -> Option<usize> {
+        assert!(self.slots[slot].is_none(), "admit into occupied slot {}", slot);
+        if !self.can_admit(prompt, max_new) {
+            return None;
+        }
+        let bs = self.block_size();
+        let matched = self.index.lookup(prompt, bs);
+        let hit = (matched.len() * bs).min(prompt.len().saturating_sub(1));
+        let nshare = hit.div_ceil(bs);
+        let mut blocks = Vec::with_capacity(nshare);
+        for &b in &matched[..nshare] {
+            self.pool.retain(b);
+            blocks.push(b);
+        }
+        self.prefix_lookup_tokens += prompt.len();
+        self.prefix_hit_tokens += hit;
+        self.clock += 1;
+        self.slots[slot] = Some(Seq {
+            blocks,
+            tokens: prompt[..hit].to_vec(),
+            pos: hit,
+            admitted_at: self.clock,
+        });
+        Some(hit)
+    }
+
+    /// Drop the slot's block references; blocks still cached in the
+    /// prefix index survive for future hits.
+    pub fn release(&mut self, slot: usize) {
+        if let Some(seq) = self.slots[slot].take() {
+            for &b in &seq.blocks {
+                if self.pool.release(b) {
+                    self.store.clear(b);
+                }
+            }
+        }
+    }
+
+    /// Allocate a block, evicting LRU cached prefixes if needed.
+    fn alloc_block(&mut self) -> Option<usize> {
+        if let Some(b) = self.pool.alloc() {
+            return Some(b);
+        }
+        let pool = &self.pool;
+        let victim = self.index.evict_lru(|b| pool.refcount(b) == 1)?;
+        self.evictions += 1;
+        let freed = self.pool.release(victim);
+        debug_assert!(freed, "evicted block must become free");
+        self.store.clear(victim);
+        self.pool.alloc()
+    }
+
+    /// Make `slot` writable at its current position: fresh tail block on
+    /// a block boundary, copy-on-write for the first divergent append
+    /// into a partially-shared tail. False when the pool is exhausted.
+    fn ensure_appendable(&mut self, slot: usize) -> bool {
+        let bs = self.block_size();
+        let (pos, nblocks, tail) = {
+            let seq = self.slots[slot].as_ref().expect("active slot");
+            (seq.pos, seq.blocks.len(), seq.blocks.last().copied())
+        };
+        if pos == nblocks * bs {
+            match self.alloc_block() {
+                Some(b) => {
+                    self.slots[slot].as_mut().unwrap().blocks.push(b);
+                    true
+                }
+                None => false,
+            }
+        } else {
+            debug_assert!(pos < nblocks * bs, "block table ahead of pos");
+            let tail = tail.expect("mid-block position implies a tail");
+            if self.pool.refcount(tail) > 1 {
+                match self.alloc_block() {
+                    Some(dst) => {
+                        self.store.copy_block(tail, dst);
+                        self.pool.release(tail);
+                        *self.slots[slot]
+                            .as_mut()
+                            .unwrap()
+                            .blocks
+                            .last_mut()
+                            .unwrap() = dst;
+                        self.cow_copies += 1;
+                        true
+                    }
+                    None => false,
+                }
+            } else {
+                true
+            }
+        }
+    }
+
+    /// Guarantee every active slot can append one position this step,
+    /// preempting the youngest-admitted slots when blocks run out.
+    /// Returns the preempted slots; their state is already released and
+    /// the caller requeues the requests (recompute-style preemption).
+    pub fn prepare_step(&mut self, active: &[bool]) -> Vec<usize> {
+        let mut victims = Vec::new();
+        let mut alive: Vec<usize> = (0..active.len().min(self.slots.len()))
+            .filter(|&i| active[i] && self.slots[i].is_some())
+            .collect();
+        // oldest admission first: under pressure the young yield to the old
+        alive.sort_by_key(|&i| self.slots[i].as_ref().unwrap().admitted_at);
+        let mut idx = 0;
+        while idx < alive.len() {
+            let slot = alive[idx];
+            if self.ensure_appendable(slot) {
+                idx += 1;
+                continue;
+            }
+            let victim = *alive.last().unwrap();
+            self.release(victim);
+            self.preemptions += 1;
+            victims.push(victim);
+            alive.pop();
+            // if the victim was `slot` itself the loop index now points
+            // past it; otherwise retry `slot` with the freed blocks
+        }
+        victims
+    }
+
+    /// Record the token about to be decoded at the slot's current
+    /// position (sealing indexes the chunk under its token content).
+    pub fn push_token(&mut self, slot: usize, tok: i32) {
+        let seq = self.slots[slot].as_mut().expect("active slot");
+        debug_assert_eq!(seq.tokens.len(), seq.pos, "one token per step");
+        seq.tokens.push(tok);
+    }
+
+    /// KvSeq view of one slot for `forward::decode_step_kv`.
+    pub fn slot_view(&mut self, slot: usize) -> SlotView<'_> {
+        SlotView { kv: self, slot }
+    }
+
+    fn locate(&self, slot: usize, sj: usize) -> (usize, usize) {
+        let seq = self.slots[slot].as_ref().expect("active slot");
+        let bs = self.block_size();
+        (seq.blocks[sj / bs], sj % bs)
+    }
+
+    fn advance(&mut self, slot: usize) {
+        let bs = self.block_size();
+        let pos = {
+            let seq = self.slots[slot].as_mut().expect("active slot");
+            debug_assert_eq!(seq.tokens.len(), seq.pos + 1, "push_token first");
+            seq.pos += 1;
+            seq.pos
+        };
+        if pos % bs == 0 {
+            // The block holding positions [pos-bs, pos) just filled.
+            // insert_chain re-walks the chain from the root on every
+            // seal: ctx/bs is small (<= 16 for the builtin configs) and
+            // a cached node handle could go stale under LRU eviction of
+            // ancestors between seals.
+            let (blk, tokens, blocks) = {
+                let seq = self.slots[slot].as_ref().unwrap();
+                (
+                    seq.blocks[pos / bs - 1],
+                    seq.tokens[..pos].to_vec(),
+                    seq.blocks[..pos / bs].to_vec(),
+                )
+            };
+            self.store.seal(blk);
+            self.sealed_blocks += 1;
+            for b in self.index.insert_chain(&tokens, bs, &blocks) {
+                self.pool.retain(b);
+            }
+        }
+    }
+
+    pub fn stats(&self) -> KvPoolStats {
+        KvPoolStats {
+            blocks_total: self.pool.num_blocks(),
+            blocks_in_use: self.pool.used_blocks(),
+            peak_blocks_in_use: self.pool.peak_used(),
+            cached_blocks: self.index.cached_blocks(),
+            prefix_lookup_tokens: self.prefix_lookup_tokens,
+            prefix_hit_tokens: self.prefix_hit_tokens,
+            preemptions: self.preemptions,
+            cow_copies: self.cow_copies,
+            evictions: self.evictions,
+            sealed_blocks: self.sealed_blocks,
+        }
+    }
+}
+
+/// Mutable view of one slot implementing the decode-step KV contract.
+pub struct SlotView<'a> {
+    kv: &'a mut PagedKv,
+    slot: usize,
+}
+
+impl KvSeq for SlotView<'_> {
+    fn pos(&self) -> usize {
+        self.kv.pos(self.slot)
+    }
+
+    fn write(&mut self, li: usize, hi: usize, k: &[f32], v: &[f32]) {
+        let pos = self.kv.pos(self.slot);
+        let (blk, off) = self.kv.locate(self.slot, pos);
+        self.kv.store.write(blk, li, hi, off, k, v);
+    }
+
+    fn read_k(&self, li: usize, hi: usize, sj: usize, out: &mut [f32]) {
+        let (blk, off) = self.kv.locate(self.slot, sj);
+        self.kv.store.read_k(blk, li, hi, off, out);
+    }
+
+    fn read_v(&self, li: usize, hi: usize, sj: usize, out: &mut [f32]) {
+        let (blk, off) = self.kv.locate(self.slot, sj);
+        self.kv.store.read_v(blk, li, hi, off, out);
+    }
+
+    fn k_slice(&self, li: usize, hi: usize, sj: usize) -> Option<&[f32]> {
+        let (blk, off) = self.kv.locate(self.slot, sj);
+        self.kv.store.k_slice(blk, li, hi, off)
+    }
+
+    fn v_slice(&self, li: usize, hi: usize, sj: usize) -> Option<&[f32]> {
+        let (blk, off) = self.kv.locate(self.slot, sj);
+        self.kv.store.v_slice(blk, li, hi, off)
+    }
+
+    fn advance(&mut self) {
+        self.kv.advance(self.slot);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::store::{F32Blocks, KvLayout};
+    use super::*;
+
+    fn layout() -> KvLayout {
+        KvLayout { layers: 1, heads: 1, head_dim: 2, block_size: 4 }
+    }
+
+    fn paged(num_blocks: usize, slots: usize) -> PagedKv {
+        PagedKv::new(
+            Box::new(F32Blocks::new(layout(), num_blocks)),
+            num_blocks,
+            slots,
+        )
+    }
+
+    /// Drive `n` decode positions through a slot: prepare, token, write
+    /// one marker row per (layer, head), advance.
+    fn run_tokens(kv: &mut PagedKv, slot: usize, toks: &[i32]) {
+        for &t in toks {
+            let mut active = vec![false; kv.num_slots()];
+            active[slot] = true;
+            let victims = kv.prepare_step(&active);
+            assert!(victims.is_empty(), "unexpected preemption");
+            kv.push_token(slot, t);
+            let mut view = kv.slot_view(slot);
+            let row = [t as f32, -(t as f32)];
+            view.write(0, 0, &row, &row);
+            view.advance();
+        }
+    }
+
+    #[test]
+    fn shared_prefix_refcounts_and_release() {
+        let mut kv = paged(8, 2);
+        let prompt: Vec<i32> = (0..8).collect();
+        assert_eq!(kv.admit(0, &prompt, 4), Some(0));
+        run_tokens(&mut kv, 0, &prompt);
+        // two sealed blocks, both cached and pinned by slot 0 and index
+        let s = kv.stats();
+        assert_eq!(s.sealed_blocks, 2);
+        assert_eq!(s.cached_blocks, 2);
+
+        // identical prompt: slot 1 shares the first block fully; position
+        // 7 stays uncached (the last prompt token must produce logits),
+        // so the second block is shared partially
+        let hit = kv.admit(1, &prompt, 4).unwrap();
+        assert_eq!(hit, 7);
+        let b0 = kv.slots[0].as_ref().unwrap().blocks.clone();
+        let b1 = kv.slots[1].as_ref().unwrap().blocks.clone();
+        assert_eq!(b0[0], b1[0]);
+        assert_eq!(b0[1], b1[1]);
+        // refcounts: slot0 + slot1 + index
+        assert_eq!(kv.pool.refcount(b0[0]), 3);
+        assert_eq!(kv.pool.refcount(b0[1]), 3);
+
+        kv.release(0);
+        assert_eq!(kv.pool.refcount(b0[0]), 2);
+        kv.release(1);
+        // blocks stay cached (index ref), not freed
+        assert_eq!(kv.pool.refcount(b0[0]), 1);
+        assert_eq!(kv.pool.used_blocks(), 2);
+    }
+
+    #[test]
+    fn divergent_append_copies_on_write() {
+        let mut kv = paged(8, 2);
+        let prompt: Vec<i32> = (0..8).collect(); // exactly 2 blocks
+        kv.admit(0, &prompt, 4).unwrap();
+        run_tokens(&mut kv, 0, &prompt);
+        let b0 = kv.slots[0].as_ref().unwrap().blocks.clone();
+
+        // identical prompt: hit caps at 7, so the second block is shared
+        // partially and the first append into it must copy-on-write
+        let hit = kv.admit(1, &prompt, 4).unwrap();
+        assert_eq!(hit, 7);
+        let before = kv.slots[1].as_ref().unwrap().blocks.clone();
+        assert_eq!(before[1], b0[1]);
+
+        // decode the last prompt token with a divergent value, then one
+        // generated token
+        run_tokens(&mut kv, 1, &[70, 200]);
+        let after = kv.slots[1].as_ref().unwrap().blocks.clone();
+        assert_eq!(after[0], b0[0], "full block still shared");
+        assert_ne!(after[1], b0[1], "divergent tail was copied");
+        assert_eq!(kv.stats().cow_copies, 1);
+
+        // the copy preserved the shared positions...
+        let mut row = [0.0f32; 2];
+        let mut view = kv.slot_view(1);
+        view.read_k(0, 0, 4, &mut row);
+        assert_eq!(row, [4.0, -4.0]);
+        // ...took the divergent write privately...
+        view.read_k(0, 0, 7, &mut row);
+        assert_eq!(row, [70.0, -70.0]);
+        // ...and left slot 0's block untouched
+        let mut view0 = kv.slot_view(0);
+        view0.read_k(0, 0, 7, &mut row);
+        assert_eq!(row, [7.0, -7.0], "slot 0 unaffected");
+    }
+
+    #[test]
+    fn eviction_frees_lru_cached_prefixes() {
+        let mut kv = paged(4, 1);
+        // request A fills 2 blocks, finishes; blocks stay cached
+        let a: Vec<i32> = (0..8).collect();
+        kv.admit(0, &a, 1).unwrap();
+        run_tokens(&mut kv, 0, &a);
+        kv.release(0);
+        assert_eq!(kv.stats().cached_blocks, 2);
+        assert_eq!(kv.pool.free_blocks(), 2);
+
+        // request B needs 3 fresh blocks: 2 free + 1 evicted (LRU leaf)
+        let b: Vec<i32> = (100..112).collect();
+        kv.admit(0, &b, 1).unwrap();
+        run_tokens(&mut kv, 0, &b);
+        let s = kv.stats();
+        assert_eq!(s.evictions, 1);
+        // A's first block is still cached; its tail was evicted
+        assert_eq!(kv.index.peek(&a, 4), 1);
+    }
+
+    #[test]
+    fn preemption_picks_youngest_and_reports_it() {
+        let mut kv = paged(3, 2);
+        let a: Vec<i32> = (0..4).collect();
+        let b: Vec<i32> = (50..54).collect();
+        kv.admit(0, &a, 8).unwrap();
+        run_tokens(&mut kv, 0, &a); // slot 0 owns 1 sealed block
+        kv.admit(1, &b, 8).unwrap();
+        run_tokens(&mut kv, 1, &b); // slot 1 owns 1 sealed block
+        // one free block left; both slots hit a boundary next step:
+        // the younger slot 1 must yield
+        let victims = kv.prepare_step(&[true, true]);
+        assert_eq!(victims, vec![1]);
+        assert_eq!(kv.stats().preemptions, 1);
+        assert!(kv.slots[1].is_none());
+        // slot 0 got the tail it needed
+        assert_eq!(kv.slots[0].as_ref().unwrap().blocks.len(), 2);
+    }
+
+    #[test]
+    fn admission_respects_pool_headroom() {
+        let mut kv = paged(2, 2);
+        let long: Vec<i32> = (0..12).collect(); // needs 4 blocks
+        assert_eq!(kv.admit(0, &long, 4), None);
+        let short: Vec<i32> = vec![1, 2];
+        assert!(kv.admit(0, &short, 2).is_some());
+    }
+}

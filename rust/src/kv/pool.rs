@@ -1,0 +1,106 @@
+//! Fixed-size physical block pool with reference counting.
+//!
+//! A block is the unit of KV-cache allocation: `block_size` token
+//! positions across all layers and heads (see [`super::KvLayout`]).
+//! References come from two places — request block tables (one per slot
+//! that maps the block) and the prefix index (one per cached chunk). A
+//! block returns to the free list only when both are gone.
+
+#[derive(Debug)]
+pub struct BlockPool {
+    refs: Vec<u32>,
+    free: Vec<usize>,
+    used_peak: usize,
+}
+
+impl BlockPool {
+    pub fn new(num_blocks: usize) -> BlockPool {
+        BlockPool {
+            refs: vec![0; num_blocks],
+            // pop from the back: hand out low block ids first
+            free: (0..num_blocks).rev().collect(),
+            used_peak: 0,
+        }
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.refs.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.refs.len() - self.free.len()
+    }
+
+    pub fn peak_used(&self) -> usize {
+        self.used_peak
+    }
+
+    pub fn refcount(&self, blk: usize) -> u32 {
+        self.refs[blk]
+    }
+
+    /// Allocate a free block with refcount 1; `None` when exhausted (the
+    /// caller then evicts from the prefix cache or preempts a request).
+    pub fn alloc(&mut self) -> Option<usize> {
+        let blk = self.free.pop()?;
+        debug_assert_eq!(self.refs[blk], 0);
+        self.refs[blk] = 1;
+        self.used_peak = self.used_peak.max(self.used_blocks());
+        Some(blk)
+    }
+
+    /// Add a reference (prefix share or cache pin).
+    pub fn retain(&mut self, blk: usize) {
+        assert!(self.refs[blk] > 0, "retain on free block {}", blk);
+        self.refs[blk] += 1;
+    }
+
+    /// Drop a reference; returns true when the block became free.
+    pub fn release(&mut self, blk: usize) -> bool {
+        assert!(self.refs[blk] > 0, "release on free block {}", blk);
+        self.refs[blk] -= 1;
+        if self.refs[blk] == 0 {
+            self.free.push(blk);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_retain_release_cycle() {
+        let mut p = BlockPool::new(2);
+        assert_eq!(p.free_blocks(), 2);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b);
+        assert!(p.alloc().is_none());
+        assert_eq!(p.used_blocks(), 2);
+
+        p.retain(a); // shared
+        assert!(!p.release(a)); // still referenced
+        assert!(p.release(a)); // now free
+        assert_eq!(p.free_blocks(), 1);
+        assert!(p.release(b));
+        assert_eq!(p.used_blocks(), 0);
+        assert_eq!(p.peak_used(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "release on free block")]
+    fn double_free_panics() {
+        let mut p = BlockPool::new(1);
+        let a = p.alloc().unwrap();
+        p.release(a);
+        p.release(a);
+    }
+}

@@ -1,0 +1,264 @@
+//! Radix-tree prefix index at block granularity (RadixAttention-style).
+//!
+//! Each edge is labelled with one full block of tokens; a node maps that
+//! chunk to the physical block holding its KV. Requests whose prompts
+//! share a prefix of full blocks share the physical blocks (the pool
+//! refcounts them). Finished requests leave their sealed blocks cached in
+//! the tree; when the pool runs dry the least-recently-used leaves are
+//! evicted first (leaf-first keeps every cached path reachable from the
+//! root).
+
+use std::collections::BTreeMap;
+
+const ROOT: usize = 0;
+const NO_BLOCK: usize = usize::MAX;
+
+#[derive(Debug)]
+struct Node {
+    children: BTreeMap<Vec<i32>, usize>,
+    parent: usize,
+    /// token chunk labelling the edge from `parent` (empty for the root)
+    key: Vec<i32>,
+    /// physical block holding this chunk's KV (`NO_BLOCK` for the root
+    /// and tombstoned slab entries)
+    block: usize,
+    last_use: u64,
+}
+
+#[derive(Debug)]
+pub struct PrefixIndex {
+    nodes: Vec<Node>,
+    free_nodes: Vec<usize>,
+    tick: u64,
+    cached: usize,
+}
+
+impl Default for PrefixIndex {
+    fn default() -> Self {
+        PrefixIndex::new()
+    }
+}
+
+impl PrefixIndex {
+    pub fn new() -> PrefixIndex {
+        PrefixIndex {
+            nodes: vec![Node {
+                children: BTreeMap::new(),
+                parent: ROOT,
+                key: Vec::new(),
+                block: NO_BLOCK,
+                last_use: 0,
+            }],
+            free_nodes: Vec::new(),
+            tick: 0,
+            cached: 0,
+        }
+    }
+
+    /// Number of blocks currently indexed.
+    pub fn cached_blocks(&self) -> usize {
+        self.cached
+    }
+
+    /// Refresh LRU stamps along the path from `node` to the root so an
+    /// ancestor is never older than a live descendant (eviction is
+    /// leaf-first).
+    fn touch(&mut self, mut node: usize) {
+        self.tick += 1;
+        while node != ROOT {
+            self.nodes[node].last_use = self.tick;
+            node = self.nodes[node].parent;
+        }
+    }
+
+    /// Longest cached chain of full `bs`-token chunks prefixing `tokens`;
+    /// returns the physical blocks, position order. Touches the LRU.
+    pub fn lookup(&mut self, tokens: &[i32], bs: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut node = ROOT;
+        for chunk in tokens.chunks_exact(bs) {
+            match self.nodes[node].children.get(chunk) {
+                Some(&c) => {
+                    out.push(self.nodes[c].block);
+                    node = c;
+                }
+                None => break,
+            }
+        }
+        if node != ROOT {
+            self.touch(node);
+        }
+        out
+    }
+
+    /// Non-mutating lookup for admission headroom checks: number of
+    /// matched full blocks.
+    pub fn peek(&self, tokens: &[i32], bs: usize) -> usize {
+        let mut node = ROOT;
+        let mut hits = 0;
+        for chunk in tokens.chunks_exact(bs) {
+            match self.nodes[node].children.get(chunk) {
+                Some(&c) => {
+                    node = c;
+                    hits += 1;
+                }
+                None => break,
+            }
+        }
+        hits
+    }
+
+    /// Index a sequence's sealed blocks: `blocks[i]` holds the KV of
+    /// `tokens[i*bs..(i+1)*bs]`. Chunks already cached (possibly under a
+    /// different physical block) are left as-is; the return value lists
+    /// the physical blocks newly cached, which the caller must pin with a
+    /// pool reference.
+    pub fn insert_chain(
+        &mut self,
+        tokens: &[i32],
+        bs: usize,
+        blocks: &[usize],
+    ) -> Vec<usize> {
+        let mut fresh = Vec::new();
+        let mut node = ROOT;
+        for (ci, chunk) in tokens.chunks_exact(bs).enumerate() {
+            node = match self.nodes[node].children.get(chunk) {
+                Some(&c) => c,
+                None => {
+                    let nid = self.new_node(node, chunk.to_vec(), blocks[ci]);
+                    fresh.push(blocks[ci]);
+                    self.cached += 1;
+                    nid
+                }
+            };
+        }
+        if node != ROOT {
+            self.touch(node);
+        }
+        fresh
+    }
+
+    fn new_node(&mut self, parent: usize, key: Vec<i32>, block: usize) -> usize {
+        let node = Node {
+            children: BTreeMap::new(),
+            parent,
+            key: key.clone(),
+            block,
+            last_use: self.tick,
+        };
+        let id = match self.free_nodes.pop() {
+            Some(id) => {
+                self.nodes[id] = node;
+                id
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        };
+        self.nodes[parent].children.insert(key, id);
+        id
+    }
+
+    /// Blocks that could eventually be reclaimed by eviction. `free`
+    /// approves blocks held only by the cache; because a request pins its
+    /// whole matched path, such blocks always form leaf-closed subtrees,
+    /// so the count is exact.
+    pub fn evictable_blocks<F: Fn(usize) -> bool>(&self, free: F) -> usize {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|&(id, n)| {
+                id != ROOT && n.block != NO_BLOCK && free(n.block)
+            })
+            .count()
+    }
+
+    /// Evict the least-recently-used leaf whose block `free` approves
+    /// (the caller passes "only the cache references it"); returns the
+    /// evicted block, which the caller must release back to the pool.
+    pub fn evict_lru<F: Fn(usize) -> bool>(&mut self, free: F) -> Option<usize> {
+        let mut best: Option<(u64, usize)> = None;
+        for (id, n) in self.nodes.iter().enumerate() {
+            if id == ROOT || n.block == NO_BLOCK || !n.children.is_empty() {
+                continue;
+            }
+            if !free(n.block) {
+                continue;
+            }
+            if best.map_or(true, |(t, _)| n.last_use < t) {
+                best = Some((n.last_use, id));
+            }
+        }
+        let (_, id) = best?;
+        let key = std::mem::take(&mut self.nodes[id].key);
+        let parent = self.nodes[id].parent;
+        self.nodes[parent].children.remove(&key);
+        let block = self.nodes[id].block;
+        self.nodes[id].block = NO_BLOCK;
+        self.nodes[id].children = BTreeMap::new();
+        self.free_nodes.push(id);
+        self.cached -= 1;
+        Some(block)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_matches_longest_prefix() {
+        let mut ix = PrefixIndex::new();
+        let toks: Vec<i32> = (0..12).collect();
+        assert!(ix.insert_chain(&toks, 4, &[10, 11, 12]).len() == 3);
+        assert_eq!(ix.cached_blocks(), 3);
+
+        // identical prefix, divergent tail
+        let mut other = toks.clone();
+        other[9] = 99;
+        assert_eq!(ix.lookup(&other, 4), vec![10, 11]);
+        // re-inserting the shared path caches only the divergent chunk
+        let fresh = ix.insert_chain(&other, 4, &[10, 11, 20]);
+        assert_eq!(fresh, vec![20]);
+        assert_eq!(ix.lookup(&other, 4), vec![10, 11, 20]);
+        // partial chunks never match
+        assert_eq!(ix.peek(&toks[..7], 4), 1);
+    }
+
+    #[test]
+    fn eviction_is_leaf_first_and_lru_ordered() {
+        let mut ix = PrefixIndex::new();
+        let a: Vec<i32> = (0..8).collect();
+        let mut b = a.clone();
+        b[7] = 77; // shares the first chunk
+        ix.insert_chain(&a, 4, &[1, 2]);
+        ix.insert_chain(&b, 4, &[1, 3]);
+        assert_eq!(ix.cached_blocks(), 3);
+
+        // touch branch b: branch a's leaf becomes LRU
+        ix.lookup(&b, 4);
+        assert_eq!(ix.evict_lru(|_| true), Some(2));
+        // shared chunk 1 has a child left (leaf-first): next is leaf 3
+        assert_eq!(ix.evict_lru(|_| true), Some(3));
+        assert_eq!(ix.evict_lru(|_| true), Some(1));
+        assert_eq!(ix.evict_lru(|_| true), None);
+        assert_eq!(ix.cached_blocks(), 0);
+
+        // slab reuse after tombstoning
+        ix.insert_chain(&a, 4, &[5, 6]);
+        assert_eq!(ix.lookup(&a, 4), vec![5, 6]);
+    }
+
+    #[test]
+    fn eviction_respects_pins() {
+        let mut ix = PrefixIndex::new();
+        let a: Vec<i32> = (0..8).collect();
+        ix.insert_chain(&a, 4, &[1, 2]);
+        // block 2 pinned (e.g. a running request still reads it)
+        assert_eq!(ix.evict_lru(|b| b != 2), None); // 1 is not a leaf
+        assert_eq!(ix.evictable_blocks(|b| b != 2), 1);
+        assert_eq!(ix.evict_lru(|_| true), Some(2));
+        assert_eq!(ix.evict_lru(|_| true), Some(1));
+    }
+}

@@ -1,0 +1,531 @@
+//! Physical KV block storage. One block holds `block_size` token
+//! positions for every (layer, head): K and V rows of `head_dim` floats.
+//!
+//! Two representations implement [`KvBlockStore`]:
+//!
+//! * [`F32Blocks`] — dense f32, bit-exact with the contiguous
+//!   [`crate::model::forward::KvCache`] path.
+//! * [`LutBlocks`] — LUT-GEMM-style table storage for the cache: a block
+//!   is quantized when it fills (seal) to 4-bit codes plus one non-uniform
+//!   codebook per (layer, head), fitted with the GANQ machinery under an
+//!   identity Hessian (`quant::ganq::fit_codebook_identity`). The open
+//!   tail block stays f32 so appends and the just-written position are
+//!   exact.
+
+use crate::model::ModelConfig;
+use crate::quant::ganq;
+use crate::quant::lut::{nibble_at, pack_nibbles_flat};
+
+/// Geometry of the paged cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvLayout {
+    pub layers: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    /// token positions per block
+    pub block_size: usize,
+}
+
+impl KvLayout {
+    pub fn new(cfg: &ModelConfig, block_size: usize) -> KvLayout {
+        assert!(block_size > 0, "block_size must be positive");
+        KvLayout {
+            layers: cfg.layers,
+            heads: cfg.heads,
+            head_dim: cfg.head_dim(),
+            block_size,
+        }
+    }
+
+    /// f32 values per (layer, head) segment of one block.
+    pub fn vals_per_seg(&self) -> usize {
+        self.block_size * self.head_dim
+    }
+
+    /// f32 values per block (K or V side).
+    pub fn vals_per_block(&self) -> usize {
+        self.layers * self.heads * self.vals_per_seg()
+    }
+
+    fn seg(&self, li: usize, hi: usize) -> usize {
+        li * self.heads + hi
+    }
+
+    /// Offset of the (layer, head, in-block position) row in a dense
+    /// block buffer.
+    fn off(&self, li: usize, hi: usize, off: usize) -> usize {
+        (self.seg(li, hi) * self.block_size + off) * self.head_dim
+    }
+}
+
+/// Storage backend for physical KV blocks, addressed by block id.
+pub trait KvBlockStore {
+    fn layout(&self) -> KvLayout;
+
+    /// Store the K/V rows (`head_dim` floats each) for (layer, head,
+    /// in-block offset). The block must be exclusively owned — the paged
+    /// cache copies shared blocks before the first divergent append.
+    fn write(
+        &mut self,
+        blk: usize,
+        li: usize,
+        hi: usize,
+        off: usize,
+        k: &[f32],
+        v: &[f32],
+    );
+
+    /// Copy the cached K row into `out` (dequantizing if sealed).
+    fn read_k(&self, blk: usize, li: usize, hi: usize, off: usize, out: &mut [f32]);
+    fn read_v(&self, blk: usize, li: usize, hi: usize, off: usize, out: &mut [f32]);
+
+    /// Borrow the K row in place when it exists as contiguous f32
+    /// (dense blocks, staged tails); `None` routes the reader through
+    /// `read_k` + scratch (sealed LUT blocks).
+    fn k_slice(&self, blk: usize, li: usize, hi: usize, off: usize) -> Option<&[f32]> {
+        let _ = (blk, li, hi, off);
+        None
+    }
+    fn v_slice(&self, blk: usize, li: usize, hi: usize, off: usize) -> Option<&[f32]> {
+        let _ = (blk, li, hi, off);
+        None
+    }
+
+    /// Copy `src`'s contents into `dst` as mutable state (the
+    /// copy-on-write target of a divergent append).
+    fn copy_block(&mut self, src: usize, dst: usize);
+
+    /// The block just filled and will not be written again until cleared:
+    /// compressed stores quantize here.
+    fn seal(&mut self, blk: usize) {
+        let _ = blk;
+    }
+
+    /// The block returned to the free list: drop its state.
+    fn clear(&mut self, blk: usize) {
+        let _ = blk;
+    }
+
+    /// Resident bytes per physical block (K + V + metadata) — the
+    /// capacity-accounting quantity.
+    fn bytes_per_block(&self) -> usize;
+}
+
+// ---------------------------------------------------------------------------
+// dense f32 blocks
+// ---------------------------------------------------------------------------
+
+pub struct F32Blocks {
+    layout: KvLayout,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl F32Blocks {
+    pub fn new(layout: KvLayout, num_blocks: usize) -> F32Blocks {
+        let sz = layout.vals_per_block() * num_blocks;
+        F32Blocks { layout, k: vec![0.0; sz], v: vec![0.0; sz] }
+    }
+
+    pub fn bytes_per_block_for(layout: KvLayout) -> usize {
+        layout.vals_per_block() * 4 * 2
+    }
+
+    fn base(&self, blk: usize, li: usize, hi: usize, off: usize) -> usize {
+        blk * self.layout.vals_per_block() + self.layout.off(li, hi, off)
+    }
+}
+
+impl KvBlockStore for F32Blocks {
+    fn layout(&self) -> KvLayout {
+        self.layout
+    }
+
+    fn write(
+        &mut self,
+        blk: usize,
+        li: usize,
+        hi: usize,
+        off: usize,
+        k: &[f32],
+        v: &[f32],
+    ) {
+        let hd = self.layout.head_dim;
+        let b = self.base(blk, li, hi, off);
+        self.k[b..b + hd].copy_from_slice(k);
+        self.v[b..b + hd].copy_from_slice(v);
+    }
+
+    fn read_k(&self, blk: usize, li: usize, hi: usize, off: usize, out: &mut [f32]) {
+        let hd = self.layout.head_dim;
+        let b = self.base(blk, li, hi, off);
+        out.copy_from_slice(&self.k[b..b + hd]);
+    }
+
+    fn read_v(&self, blk: usize, li: usize, hi: usize, off: usize, out: &mut [f32]) {
+        let hd = self.layout.head_dim;
+        let b = self.base(blk, li, hi, off);
+        out.copy_from_slice(&self.v[b..b + hd]);
+    }
+
+    fn k_slice(&self, blk: usize, li: usize, hi: usize, off: usize) -> Option<&[f32]> {
+        let hd = self.layout.head_dim;
+        let b = self.base(blk, li, hi, off);
+        Some(&self.k[b..b + hd])
+    }
+
+    fn v_slice(&self, blk: usize, li: usize, hi: usize, off: usize) -> Option<&[f32]> {
+        let hd = self.layout.head_dim;
+        let b = self.base(blk, li, hi, off);
+        Some(&self.v[b..b + hd])
+    }
+
+    fn copy_block(&mut self, src: usize, dst: usize) {
+        let n = self.layout.vals_per_block();
+        self.k.copy_within(src * n..(src + 1) * n, dst * n);
+        self.v.copy_within(src * n..(src + 1) * n, dst * n);
+    }
+
+    fn bytes_per_block(&self) -> usize {
+        F32Blocks::bytes_per_block_for(self.layout)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4-bit non-uniform LUT blocks
+// ---------------------------------------------------------------------------
+
+pub const KV_LUT_BITS: u8 = 4;
+const KV_LUT_K: usize = 1 << KV_LUT_BITS;
+/// Alternating S/T refinement passes per codebook fit at seal time.
+const KV_FIT_ITERS: usize = 2;
+
+struct Staged {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl Staged {
+    fn zeros(layout: KvLayout) -> Staged {
+        let n = layout.vals_per_block();
+        Staged { k: vec![0.0; n], v: vec![0.0; n] }
+    }
+}
+
+struct Sealed {
+    /// nibble-packed 4-bit codes per (layer, head) segment
+    kq: Vec<u8>,
+    vq: Vec<u8>,
+    /// per-(layer, head) codebooks, `KV_LUT_K` entries each
+    kt: Vec<f32>,
+    vt: Vec<f32>,
+}
+
+pub struct LutBlocks {
+    layout: KvLayout,
+    staged: Vec<Option<Staged>>,
+    sealed: Vec<Option<Sealed>>,
+}
+
+impl LutBlocks {
+    pub fn new(layout: KvLayout, num_blocks: usize) -> LutBlocks {
+        assert!(
+            layout.vals_per_seg() % 2 == 0,
+            "LUT blocks need an even per-segment value count for nibble \
+             packing (block_size {} x head_dim {})",
+            layout.block_size,
+            layout.head_dim
+        );
+        LutBlocks {
+            layout,
+            staged: (0..num_blocks).map(|_| None).collect(),
+            sealed: (0..num_blocks).map(|_| None).collect(),
+        }
+    }
+
+    pub fn bytes_per_block_for(layout: KvLayout) -> usize {
+        let segs = layout.layers * layout.heads;
+        // packed codes (K + V) + f32 codebooks (K + V)
+        2 * segs * layout.vals_per_seg() / 2 + 2 * segs * KV_LUT_K * 4
+    }
+
+    fn seg_range(&self, li: usize, hi: usize) -> std::ops::Range<usize> {
+        let n = self.layout.vals_per_seg();
+        let s = self.layout.seg(li, hi);
+        s * n..(s + 1) * n
+    }
+
+    fn quantize_seg(vals: &[f32]) -> (Vec<u8>, Vec<f32>) {
+        let (codes, t) =
+            ganq::fit_codebook_identity(vals, KV_LUT_BITS, KV_FIT_ITERS);
+        (pack_nibbles_flat(&codes), t)
+    }
+
+    fn dequant_row(
+        &self,
+        side_q: &[u8],
+        side_t: &[f32],
+        li: usize,
+        hi: usize,
+        off: usize,
+        out: &mut [f32],
+    ) {
+        let hd = self.layout.head_dim;
+        let seg = self.layout.seg(li, hi);
+        let segb = self.layout.vals_per_seg() / 2;
+        let q = &side_q[seg * segb..(seg + 1) * segb];
+        let t = &side_t[seg * KV_LUT_K..(seg + 1) * KV_LUT_K];
+        for (d, o) in out.iter_mut().enumerate() {
+            *o = t[nibble_at(q, off * hd + d) as usize];
+        }
+    }
+
+    fn dequant_block(&self, blk: usize) -> Staged {
+        let sealed = self.sealed[blk].as_ref().expect("sealed block");
+        let mut st = Staged::zeros(self.layout);
+        let hd = self.layout.head_dim;
+        for li in 0..self.layout.layers {
+            for hi in 0..self.layout.heads {
+                for off in 0..self.layout.block_size {
+                    let b = self.layout.off(li, hi, off);
+                    self.dequant_row(
+                        &sealed.kq,
+                        &sealed.kt,
+                        li,
+                        hi,
+                        off,
+                        &mut st.k[b..b + hd],
+                    );
+                    self.dequant_row(
+                        &sealed.vq,
+                        &sealed.vt,
+                        li,
+                        hi,
+                        off,
+                        &mut st.v[b..b + hd],
+                    );
+                }
+            }
+        }
+        st
+    }
+}
+
+impl KvBlockStore for LutBlocks {
+    fn layout(&self) -> KvLayout {
+        self.layout
+    }
+
+    fn write(
+        &mut self,
+        blk: usize,
+        li: usize,
+        hi: usize,
+        off: usize,
+        k: &[f32],
+        v: &[f32],
+    ) {
+        debug_assert!(
+            self.sealed[blk].is_none(),
+            "write into sealed block {} (CoW missing)",
+            blk
+        );
+        let layout = self.layout;
+        let st = self.staged[blk].get_or_insert_with(|| Staged::zeros(layout));
+        let hd = layout.head_dim;
+        let b = layout.off(li, hi, off);
+        st.k[b..b + hd].copy_from_slice(k);
+        st.v[b..b + hd].copy_from_slice(v);
+    }
+
+    fn read_k(&self, blk: usize, li: usize, hi: usize, off: usize, out: &mut [f32]) {
+        let hd = self.layout.head_dim;
+        if let Some(st) = &self.staged[blk] {
+            let b = self.layout.off(li, hi, off);
+            out.copy_from_slice(&st.k[b..b + hd]);
+        } else {
+            let sealed = self.sealed[blk]
+                .as_ref()
+                .unwrap_or_else(|| panic!("read of unwritten block {}", blk));
+            self.dequant_row(&sealed.kq, &sealed.kt, li, hi, off, out);
+        }
+    }
+
+    fn read_v(&self, blk: usize, li: usize, hi: usize, off: usize, out: &mut [f32]) {
+        let hd = self.layout.head_dim;
+        if let Some(st) = &self.staged[blk] {
+            let b = self.layout.off(li, hi, off);
+            out.copy_from_slice(&st.v[b..b + hd]);
+        } else {
+            let sealed = self.sealed[blk]
+                .as_ref()
+                .unwrap_or_else(|| panic!("read of unwritten block {}", blk));
+            self.dequant_row(&sealed.vq, &sealed.vt, li, hi, off, out);
+        }
+    }
+
+    fn k_slice(&self, blk: usize, li: usize, hi: usize, off: usize) -> Option<&[f32]> {
+        let hd = self.layout.head_dim;
+        self.staged[blk].as_ref().map(|st| {
+            let b = self.layout.off(li, hi, off);
+            &st.k[b..b + hd]
+        })
+    }
+
+    fn v_slice(&self, blk: usize, li: usize, hi: usize, off: usize) -> Option<&[f32]> {
+        let hd = self.layout.head_dim;
+        self.staged[blk].as_ref().map(|st| {
+            let b = self.layout.off(li, hi, off);
+            &st.v[b..b + hd]
+        })
+    }
+
+    fn copy_block(&mut self, src: usize, dst: usize) {
+        let st = match (&self.staged[src], &self.sealed[src]) {
+            (Some(s), _) => Staged { k: s.k.clone(), v: s.v.clone() },
+            (None, Some(_)) => self.dequant_block(src),
+            (None, None) => Staged::zeros(self.layout),
+        };
+        self.staged[dst] = Some(st);
+        self.sealed[dst] = None;
+    }
+
+    fn seal(&mut self, blk: usize) {
+        let st = self.staged[blk].take().expect("seal of unwritten block");
+        let segs = self.layout.layers * self.layout.heads;
+        let segb = self.layout.vals_per_seg() / 2;
+        let mut sealed = Sealed {
+            kq: vec![0u8; segs * segb],
+            vq: vec![0u8; segs * segb],
+            kt: vec![0.0; segs * KV_LUT_K],
+            vt: vec![0.0; segs * KV_LUT_K],
+        };
+        for li in 0..self.layout.layers {
+            for hi in 0..self.layout.heads {
+                let seg = self.layout.seg(li, hi);
+                let r = self.seg_range(li, hi);
+                let (kq, kt) = LutBlocks::quantize_seg(&st.k[r.clone()]);
+                sealed.kq[seg * segb..(seg + 1) * segb].copy_from_slice(&kq);
+                sealed.kt[seg * KV_LUT_K..(seg + 1) * KV_LUT_K]
+                    .copy_from_slice(&kt);
+                let (vq, vt) = LutBlocks::quantize_seg(&st.v[r]);
+                sealed.vq[seg * segb..(seg + 1) * segb].copy_from_slice(&vq);
+                sealed.vt[seg * KV_LUT_K..(seg + 1) * KV_LUT_K]
+                    .copy_from_slice(&vt);
+            }
+        }
+        self.sealed[blk] = Some(sealed);
+    }
+
+    fn clear(&mut self, blk: usize) {
+        self.staged[blk] = None;
+        self.sealed[blk] = None;
+    }
+
+    fn bytes_per_block(&self) -> usize {
+        LutBlocks::bytes_per_block_for(self.layout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn layout() -> KvLayout {
+        KvLayout { layers: 2, heads: 2, head_dim: 8, block_size: 4 }
+    }
+
+    fn fill_block(
+        store: &mut dyn KvBlockStore,
+        blk: usize,
+        rng: &mut Rng,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let l = store.layout();
+        let mut ks = Vec::new();
+        let mut vs = Vec::new();
+        for li in 0..l.layers {
+            for hi in 0..l.heads {
+                for off in 0..l.block_size {
+                    let k = rng.normal_vec_f32(l.head_dim);
+                    let v = rng.normal_vec_f32(l.head_dim);
+                    store.write(blk, li, hi, off, &k, &v);
+                    ks.extend_from_slice(&k);
+                    vs.extend_from_slice(&v);
+                }
+            }
+        }
+        (ks, vs)
+    }
+
+    fn read_all(store: &dyn KvBlockStore, blk: usize) -> (Vec<f32>, Vec<f32>) {
+        let l = store.layout();
+        let mut ks = Vec::new();
+        let mut vs = Vec::new();
+        let mut row = vec![0.0f32; l.head_dim];
+        for li in 0..l.layers {
+            for hi in 0..l.heads {
+                for off in 0..l.block_size {
+                    store.read_k(blk, li, hi, off, &mut row);
+                    ks.extend_from_slice(&row);
+                    store.read_v(blk, li, hi, off, &mut row);
+                    vs.extend_from_slice(&row);
+                }
+            }
+        }
+        (ks, vs)
+    }
+
+    #[test]
+    fn f32_store_roundtrips_and_copies() {
+        let mut rng = Rng::new(7);
+        let mut s = F32Blocks::new(layout(), 3);
+        let (ks, vs) = fill_block(&mut s, 1, &mut rng);
+        let (rk, rv) = read_all(&s, 1);
+        assert_eq!(ks, rk);
+        assert_eq!(vs, rv);
+        s.copy_block(1, 2);
+        let (ck, cv) = read_all(&s, 2);
+        assert_eq!(ks, ck);
+        assert_eq!(vs, cv);
+    }
+
+    #[test]
+    fn lut_store_seal_keeps_values_within_tolerance() {
+        let mut rng = Rng::new(8);
+        let mut s = LutBlocks::new(layout(), 3);
+        let (ks, vs) = fill_block(&mut s, 0, &mut rng);
+        // open block reads are exact
+        let (rk, rv) = read_all(&s, 0);
+        assert_eq!(ks, rk);
+        assert_eq!(vs, rv);
+
+        s.seal(0);
+        let (qk, qv) = read_all(&s, 0);
+        // 4-bit non-uniform on ~N(0,1): coarse but bounded
+        let worst_k = crate::util::prop::max_abs_diff(&ks, &qk);
+        let worst_v = crate::util::prop::max_abs_diff(&vs, &qv);
+        assert!(worst_k < 0.8, "K error {}", worst_k);
+        assert!(worst_v < 0.8, "V error {}", worst_v);
+
+        // CoW from a sealed block materializes the dequantized values
+        s.copy_block(0, 2);
+        let (ck, cv) = read_all(&s, 2);
+        assert_eq!(qk, ck);
+        assert_eq!(qv, cv);
+
+        s.clear(0);
+        s.write(0, 0, 0, 0, &vec![1.0; 8], &vec![2.0; 8]);
+        let mut row = vec![0.0f32; 8];
+        s.read_k(0, 0, 0, 0, &mut row);
+        assert_eq!(row, vec![1.0; 8]);
+    }
+
+    #[test]
+    fn lut_blocks_are_much_smaller_than_f32() {
+        let l = layout();
+        let f = F32Blocks::bytes_per_block_for(l);
+        let q = LutBlocks::bytes_per_block_for(l);
+        assert!(q * 4 < f, "lut {} vs f32 {}", q, f);
+    }
+}

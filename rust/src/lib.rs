@@ -12,12 +12,28 @@
 //!   evaluation harness, and the bench suite regenerating the paper's
 //!   tables.
 //!
+//! ## Serving memory: the paged KV cache
+//!
+//! The `kv` module extends the paper's storage story from weights to the
+//! KV cache, the memory consumer that dominates once weights are 3–4-bit
+//! LUT codes. The cache is paged into fixed-size token blocks
+//! (`kv::BlockPool`) mapped per request through block tables; prompts
+//! sharing a prefix share physical blocks via a radix index
+//! (`kv::PrefixIndex`) with copy-on-write on the first divergent append,
+//! and freed prefixes stay cached until LRU eviction. Blocks are stored
+//! either dense (`kv::F32Blocks`, bit-exact with the contiguous path) or
+//! as per-(layer, head) 4-bit non-uniform codebooks fitted with the GANQ
+//! machinery on block fill (`kv::LutBlocks`). The serve scheduler
+//! (`coordinator::serve`) admits dynamically while free blocks remain and
+//! preempts-and-requeues the youngest requests on pool exhaustion.
+//!
 //! See DESIGN.md for the system inventory and experiment index.
 
 pub mod bench;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod kv;
 pub mod model;
 pub mod quant;
 pub mod runtime;

@@ -205,7 +205,36 @@ pub fn nll_sum(w: &Weights, tokens: &[Vec<i32>]) -> f64 {
 // KV-cache decode (native serving fallback + generation-based evals)
 // ---------------------------------------------------------------------------
 
-/// Per-sequence KV cache for the native path.
+/// Abstract per-sequence KV storage driving one decode step. The
+/// contiguous [`KvCache`] and the paged cache (`kv::PagedKv` slot views)
+/// both implement it, so `decode_step_kv` is the single attention path
+/// and the dense variants stay bit-identical by construction.
+pub trait KvSeq {
+    /// Positions cached so far (the next write lands here).
+    fn pos(&self) -> usize;
+    /// Store the K/V rows (`head_dim` floats each) for (layer, head) at
+    /// position `pos()`.
+    fn write(&mut self, li: usize, hi: usize, k: &[f32], v: &[f32]);
+    /// Copy the cached K row at (layer, head, position `sj`) into `out`.
+    fn read_k(&self, li: usize, hi: usize, sj: usize, out: &mut [f32]);
+    fn read_v(&self, li: usize, hi: usize, sj: usize, out: &mut [f32]);
+    /// Borrow the K row in place when the store holds it as contiguous
+    /// f32 (dense caches, unsealed paged tails). `None` routes the
+    /// caller to `read_k` + a scratch buffer (e.g. sealed LUT blocks).
+    /// Keeps the dense hot path copy-free.
+    fn k_slice(&self, li: usize, hi: usize, sj: usize) -> Option<&[f32]> {
+        let _ = (li, hi, sj);
+        None
+    }
+    fn v_slice(&self, li: usize, hi: usize, sj: usize) -> Option<&[f32]> {
+        let _ = (li, hi, sj);
+        None
+    }
+    /// Commit the step: `pos += 1`.
+    fn advance(&mut self);
+}
+
+/// Per-sequence contiguous KV cache for the native path.
 pub struct KvCache {
     cfg: ModelConfig,
     /// [layers][heads][ctx][hd], flattened
@@ -226,15 +255,68 @@ impl KvCache {
     }
 }
 
+impl KvSeq for KvCache {
+    fn pos(&self) -> usize {
+        self.len
+    }
+
+    fn write(&mut self, li: usize, hi: usize, k: &[f32], v: &[f32]) {
+        let hd = self.cfg.head_dim();
+        let base = self.idx(li, hi, self.len);
+        self.k[base..base + hd].copy_from_slice(k);
+        self.v[base..base + hd].copy_from_slice(v);
+    }
+
+    fn read_k(&self, li: usize, hi: usize, sj: usize, out: &mut [f32]) {
+        let hd = self.cfg.head_dim();
+        let base = self.idx(li, hi, sj);
+        out.copy_from_slice(&self.k[base..base + hd]);
+    }
+
+    fn read_v(&self, li: usize, hi: usize, sj: usize, out: &mut [f32]) {
+        let hd = self.cfg.head_dim();
+        let base = self.idx(li, hi, sj);
+        out.copy_from_slice(&self.v[base..base + hd]);
+    }
+
+    fn k_slice(&self, li: usize, hi: usize, sj: usize) -> Option<&[f32]> {
+        let hd = self.cfg.head_dim();
+        let base = self.idx(li, hi, sj);
+        Some(&self.k[base..base + hd])
+    }
+
+    fn v_slice(&self, li: usize, hi: usize, sj: usize) -> Option<&[f32]> {
+        let hd = self.cfg.head_dim();
+        let base = self.idx(li, hi, sj);
+        Some(&self.v[base..base + hd])
+    }
+
+    fn advance(&mut self) {
+        self.len += 1;
+    }
+}
+
 /// One decode step for a single sequence; appends to the cache.
 /// Returns the logits row [vocab].
 pub fn decode_step(w: &Weights, tok: i32, cache: &mut KvCache) -> Vec<f32> {
+    decode_step_kv(w, tok, cache)
+}
+
+/// One decode step through any [`KvSeq`] (contiguous or paged). The
+/// attention loop iterates positions in ascending order with identical
+/// f32 accumulation to the historical contiguous path, so two stores
+/// holding the same values produce bit-identical logits.
+pub fn decode_step_kv(
+    w: &Weights,
+    tok: i32,
+    cache: &mut dyn KvSeq,
+) -> Vec<f32> {
     let store = w.store();
     let cfg = store.cfg;
     let d = cfg.d;
     let h = cfg.heads;
     let hd = cfg.head_dim();
-    let pos = cache.len;
+    let pos = cache.pos();
     assert!(pos < cfg.ctx, "context overflow");
     let scale = 1.0 / (hd as f32).sqrt();
 
@@ -248,6 +330,8 @@ pub fn decode_step(w: &Weights, tok: i32, cache: &mut KvCache) -> Vec<f32> {
         }
     }
 
+    let mut krow = vec![0.0f32; hd];
+    let mut vrow = vec![0.0f32; hd];
     for li in 0..cfg.layers {
         let p = format!("l{}.", li);
         let mut a = x.clone();
@@ -266,11 +350,12 @@ pub fn decode_step(w: &Weights, tok: i32, cache: &mut KvCache) -> Vec<f32> {
         let v = lin("wv", &a, "bv");
         // write cache at pos
         for hi in 0..h {
-            let base = cache.idx(li, hi, pos);
-            cache.k[base..base + hd]
-                .copy_from_slice(&k.row(0)[hi * hd..(hi + 1) * hd]);
-            cache.v[base..base + hd]
-                .copy_from_slice(&v.row(0)[hi * hd..(hi + 1) * hd]);
+            cache.write(
+                li,
+                hi,
+                &k.row(0)[hi * hd..(hi + 1) * hd],
+                &v.row(0)[hi * hd..(hi + 1) * hd],
+            );
         }
         // attend over 0..=pos
         let mut o = Mat::zeros(1, d);
@@ -278,15 +363,26 @@ pub fn decode_step(w: &Weights, tok: i32, cache: &mut KvCache) -> Vec<f32> {
         for hi in 0..h {
             let qrow = &q.row(0)[hi * hd..(hi + 1) * hd];
             for (sj, sc) in scores.iter_mut().enumerate() {
-                let base = cache.idx(li, hi, sj);
-                *sc = tensor::dot(qrow, &cache.k[base..base + hd]) * scale;
+                let kr = match cache.k_slice(li, hi, sj) {
+                    Some(s) => s,
+                    None => {
+                        cache.read_k(li, hi, sj, &mut krow);
+                        &krow[..]
+                    }
+                };
+                *sc = tensor::dot(qrow, kr) * scale;
             }
             tensor::softmax(&mut scores);
             let orow = &mut o.row_mut(0)[hi * hd..(hi + 1) * hd];
             for (sj, &w_att) in scores.iter().enumerate() {
-                let base = cache.idx(li, hi, sj);
-                let vrow = &cache.v[base..base + hd];
-                for (ov, &vv) in orow.iter_mut().zip(vrow) {
+                let vr = match cache.v_slice(li, hi, sj) {
+                    Some(s) => s,
+                    None => {
+                        cache.read_v(li, hi, sj, &mut vrow);
+                        &vrow[..]
+                    }
+                };
+                for (ov, &vv) in orow.iter_mut().zip(vr) {
                     *ov += w_att * vv;
                 }
             }
@@ -304,7 +400,7 @@ pub fn decode_step(w: &Weights, tok: i32, cache: &mut KvCache) -> Vec<f32> {
         let h2 = lin("w2", &h1, "b2");
         x.add_assign(&h2);
     }
-    cache.len = pos + 1;
+    cache.advance();
     layer_norm_rows(&mut x, store.vec("ln_f_g"), store.vec("ln_f_b"));
     let emb = store.get("tok_emb").as_mat();
     let logits = x.matmul_tb(&emb);

@@ -254,6 +254,57 @@ pub fn solve_init(
     GanqSolution { codes, codebook: t, errors }
 }
 
+/// Fit one K-entry non-uniform codebook to a flat value set: the
+/// alternating solver specialized to an identity Hessian. With H = I the
+/// S-step (eq. 18) degenerates to nearest-codeword assignment and the
+/// T-step (eq. 7) to bucket means (empty buckets keep their codeword),
+/// so both are computed directly in O(n * 2^bits) — no factor, no n x n
+/// matrices. Used on the serving hot path by the KV-cache block store
+/// (`kv::LutBlocks`), where values are consumed directly by attention
+/// and no activation statistics exist. Close to
+/// `squeezellm::weighted_kmeans_row` with uniform weights, but keeps
+/// GANQ's T^0 convention (the RTN uniform grid) so iteration 0 exactly
+/// reproduces the RTN assignment. Returns (codes, codebook[2^bits]).
+pub fn fit_codebook_identity(
+    vals: &[f32],
+    bits: u8,
+    iters: usize,
+) -> (Vec<u8>, Vec<f32>) {
+    let k = 1usize << bits;
+    let mut t = rtn::rtn_codebook_row(vals, bits).1;
+    let mut codes = vec![0u8; vals.len()];
+    let assign = |t: &[f32], codes: &mut [u8]| {
+        for (c, &v) in codes.iter_mut().zip(vals) {
+            let mut best = 0usize;
+            let mut bestd = f32::INFINITY;
+            for (s, &ts) in t.iter().enumerate() {
+                let d = (v - ts).abs();
+                if d < bestd {
+                    bestd = d;
+                    best = s;
+                }
+            }
+            *c = best as u8;
+        }
+    };
+    assign(&t, &mut codes);
+    for _ in 0..iters {
+        let mut sum = vec![0.0f64; k];
+        let mut cnt = vec![0usize; k];
+        for (&c, &v) in codes.iter().zip(vals) {
+            sum[c as usize] += v as f64;
+            cnt[c as usize] += 1;
+        }
+        for s in 0..k {
+            if cnt[s] > 0 {
+                t[s] = (sum[s] / cnt[s] as f64) as f32;
+            }
+        }
+        assign(&t, &mut codes);
+    }
+    (codes, t)
+}
+
 pub fn reconstruct(m: usize, n: usize, codes: &[u8], t: &Mat) -> Mat {
     let mut out = Mat::zeros(m, n);
     for i in 0..m {
@@ -408,6 +459,34 @@ mod tests {
             .layer_error(&w, &h);
         let e_rtn = Rtn::new(3).quantize(&w, &h).layer_error(&w, &h);
         assert!(e_km.is_finite() && e_km < e_rtn, "{} vs {}", e_km, e_rtn);
+    }
+
+    #[test]
+    fn identity_codebook_beats_rtn_reconstruction() {
+        let mut rng = Rng::new(59);
+        let vals = rng.normal_vec_f32(256);
+        let (codes, t) = fit_codebook_identity(&vals, 4, 3);
+        assert_eq!(codes.len(), 256);
+        assert_eq!(t.len(), 16);
+        let err: f64 = vals
+            .iter()
+            .zip(&codes)
+            .map(|(&v, &c)| (v - t[c as usize]) as f64)
+            .map(|d| d * d)
+            .sum();
+        let (rcodes, rt) = rtn::rtn_codebook_row(&vals, 4);
+        let rerr: f64 = vals
+            .iter()
+            .zip(&rcodes)
+            .map(|(&v, &c)| (v - rt[c as usize]) as f64)
+            .map(|d| d * d)
+            .sum();
+        assert!(
+            err <= rerr * 1.0001 + 1e-9,
+            "identity fit {} !<= rtn {}",
+            err,
+            rerr
+        );
     }
 
     #[test]

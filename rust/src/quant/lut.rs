@@ -47,14 +47,29 @@ impl LutLayer {
 
     /// Nibble packing: byte j holds columns 2j (low) and 2j+1 (high) —
     /// identical to ref.pack_nibbles, the layout the HLO graphs unpack.
+    /// Odd n pads the final high nibble of each row with 0 (the HLO
+    /// serving graphs only ever see even-n layers, where this is
+    /// byte-identical to the python contract).
     pub fn packed_nibbles(&self) -> Vec<u8> {
-        assert!(self.n % 2 == 0, "nibble packing needs even n");
-        let mut out = vec![0u8; self.m * self.n / 2];
+        let rowb = self.n.div_ceil(2);
+        let mut out = Vec::with_capacity(self.m * rowb);
         for i in 0..self.m {
-            for j2 in 0..self.n / 2 {
-                let lo = self.codes[i * self.n + 2 * j2];
-                let hi = self.codes[i * self.n + 2 * j2 + 1];
-                out[i * self.n / 2 + j2] = lo | (hi << 4);
+            out.extend(pack_nibbles_flat(
+                &self.codes[i * self.n..(i + 1) * self.n],
+            ));
+        }
+        out
+    }
+
+    /// Inverse of [`packed_nibbles`](Self::packed_nibbles).
+    pub fn unpack_nibbles(packed: &[u8], m: usize, n: usize) -> Vec<u8> {
+        let rowb = n.div_ceil(2);
+        assert_eq!(packed.len(), m * rowb);
+        let mut out = vec![0u8; m * n];
+        for i in 0..m {
+            let row = &packed[i * rowb..(i + 1) * rowb];
+            for j in 0..n {
+                out[i * n + j] = nibble_at(row, j);
             }
         }
         out
@@ -167,9 +182,34 @@ impl LutLayer {
     pub fn bytes_per_decode(&self) -> usize {
         let code_bytes = match self.bits {
             3 => self.m * (self.n.div_ceil(8) * 3),
-            _ => self.m * self.n / 2,
+            _ => self.m * self.n.div_ceil(2),
         };
         code_bytes + self.m * self.k() * 4
+    }
+}
+
+/// Pack a flat code slice two-per-byte — low nibble first, the single
+/// source of truth for the nibble layout (LutLayer rows and the KV-cache
+/// block store both use it). Odd length pads the final high nibble with 0.
+pub fn pack_nibbles_flat(codes: &[u8]) -> Vec<u8> {
+    let mut out = vec![0u8; codes.len().div_ceil(2)];
+    for (j2, b) in out.iter_mut().enumerate() {
+        let lo = codes[2 * j2];
+        let hi = if 2 * j2 + 1 < codes.len() { codes[2 * j2 + 1] } else { 0 };
+        *b = lo | (hi << 4);
+    }
+    out
+}
+
+/// Code `j` of a flat nibble-packed buffer (inverse of
+/// [`pack_nibbles_flat`]).
+#[inline]
+pub fn nibble_at(packed: &[u8], j: usize) -> u8 {
+    let byte = packed[j / 2];
+    if j % 2 == 0 {
+        byte & 0x0F
+    } else {
+        byte >> 4
     }
 }
 
@@ -213,6 +253,42 @@ mod tests {
             crate::prop_assert!(back == l.codes, "roundtrip failed");
             Ok(())
         });
+    }
+
+    #[test]
+    fn nibble_pack_roundtrip() {
+        // pack -> unpack -> identical codes, odd and even n
+        prop::check("pack_nibbles", 33, 16, |rng, case| {
+            let m = 1 + rng.below(6) as usize;
+            // force odd n on half the cases so the padded tail is covered
+            let mut n = 1 + rng.below(40) as usize;
+            if case % 2 == 0 && n % 2 == 0 {
+                n += 1;
+            }
+            let l = random_lut(rng, m, n, 4);
+            let packed = l.packed_nibbles();
+            crate::prop_assert!(
+                packed.len() == m * n.div_ceil(2),
+                "packed len {} for {}x{}",
+                packed.len(),
+                m,
+                n
+            );
+            let back = LutLayer::unpack_nibbles(&packed, m, n);
+            crate::prop_assert!(back == l.codes, "roundtrip failed");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pack3_odd_n_edge_cases() {
+        // explicit odd-n shapes around the 8-code group boundary
+        let mut rng = Rng::new(35);
+        for n in [1usize, 7, 9, 15, 17, 23] {
+            let l = random_lut(&mut rng, 3, n, 3);
+            let back = LutLayer::unpack3(&l.packed3(), 3, n);
+            assert_eq!(back, l.codes, "n={}", n);
+        }
     }
 
     #[test]

@@ -41,8 +41,8 @@ pub fn quantize_layer_hlo(
     if out.len() != 3 {
         return Err(format!("ganq graph returned {} outputs", out.len()));
     }
-    let q = out[0].as_i32();
-    let t = Mat::from_vec(m, k, out[1].as_f32().to_vec());
+    let q = out[0].as_i32()?;
+    let t = Mat::from_vec(m, k, out[1].as_f32()?.to_vec());
     let codes: Vec<u8> = q.iter().map(|&c| c.clamp(0, 255) as u8).collect();
     let lut = lut_from_parts(m, n, bits, codes, t);
     let w_hat = lut.dequant();
@@ -86,5 +86,5 @@ pub fn solve_errors_hlo(
             HostTensor::F32(vec![m, k], t0.data.clone()),
         ],
     )?;
-    Ok(Some(out[2].as_f32().to_vec()))
+    Ok(Some(out[2].as_f32()?.to_vec()))
 }

@@ -22,6 +22,30 @@ pub enum HostTensor {
     U8(Vec<usize>, Vec<u8>),
 }
 
+/// A dtype accessor was called on a tensor of a different dtype —
+/// carries both sides so graph-output mismatches are diagnosable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DtypeMismatch {
+    pub expected: Dtype,
+    pub actual: Dtype,
+}
+
+impl std::fmt::Display for DtypeMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "dtype mismatch: expected {:?}, got {:?}",
+            self.expected, self.actual
+        )
+    }
+}
+
+impl From<DtypeMismatch> for String {
+    fn from(e: DtypeMismatch) -> String {
+        e.to_string()
+    }
+}
+
 impl HostTensor {
     pub fn dims(&self) -> &[usize] {
         match self {
@@ -41,29 +65,33 @@ impl HostTensor {
         }
     }
 
-    pub fn as_f32(&self) -> &[f32] {
+    fn mismatch(&self, expected: Dtype) -> DtypeMismatch {
+        DtypeMismatch { expected, actual: self.dtype() }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32], DtypeMismatch> {
         match self {
-            HostTensor::F32(_, v) => v,
-            _ => panic!("not f32"),
+            HostTensor::F32(_, v) => Ok(v),
+            _ => Err(self.mismatch(Dtype::F32)),
         }
     }
 
-    pub fn as_i32(&self) -> &[i32] {
+    pub fn as_i32(&self) -> Result<&[i32], DtypeMismatch> {
         match self {
-            HostTensor::I32(_, v) => v,
-            _ => panic!("not i32"),
+            HostTensor::I32(_, v) => Ok(v),
+            _ => Err(self.mismatch(Dtype::I32)),
         }
     }
 
-    pub fn as_u8(&self) -> &[u8] {
+    pub fn as_u8(&self) -> Result<&[u8], DtypeMismatch> {
         match self {
-            HostTensor::U8(_, v) => v,
-            _ => panic!("not u8"),
+            HostTensor::U8(_, v) => Ok(v),
+            _ => Err(self.mismatch(Dtype::U8)),
         }
     }
 
-    pub fn scalar_f32(&self) -> f32 {
-        self.as_f32()[0]
+    pub fn scalar_f32(&self) -> Result<f32, DtypeMismatch> {
+        Ok(self.as_f32()?[0])
     }
 
     /// (element type, dims, little-endian bytes) for raw-buffer upload.
@@ -330,6 +358,23 @@ mod tests {
                 _ => panic!("dtype changed"),
             }
         }
+    }
+
+    #[test]
+    fn dtype_accessors_carry_expected_and_actual() {
+        let t = HostTensor::I32(vec![1], vec![7]);
+        assert_eq!(t.as_i32().unwrap(), &[7]);
+        let err = t.as_f32().unwrap_err();
+        assert_eq!(
+            err,
+            DtypeMismatch { expected: Dtype::F32, actual: Dtype::I32 }
+        );
+        let msg: String = err.into();
+        assert!(msg.contains("expected F32"), "{}", msg);
+        assert!(msg.contains("got I32"), "{}", msg);
+        assert!(t.scalar_f32().is_err());
+        assert!(HostTensor::F32(vec![1], vec![2.5]).scalar_f32().unwrap() == 2.5);
+        assert!(HostTensor::U8(vec![1], vec![3]).as_u8().is_ok());
     }
 
     #[test]

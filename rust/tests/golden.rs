@@ -210,6 +210,59 @@ fn native_forward_matches_python_on_trained_weights() {
 }
 
 #[test]
+fn paged_f32_decode_bit_identical_on_golden_fixture() {
+    // acceptance: the paged F32 block store reproduces the pre-refactor
+    // native decode path bit-for-bit on the trained-weights fixture
+    let g = require!(golden("fwd.json"));
+    let model = g.get("model").unwrap().as_str().unwrap().to_string();
+    let cfg = ModelConfig::builtin(&model).unwrap();
+    let base = ganq::util::artifacts_dir();
+    let store = match WeightStore::load(&base, &model, cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("skipping: weights not built ({})", e);
+            return;
+        }
+    };
+    let tokens: Vec<i32> = g
+        .get("tokens")
+        .unwrap()
+        .as_f32_vec()
+        .unwrap()
+        .iter()
+        .map(|&v| v as i32)
+        .collect();
+
+    let w = ganq::model::forward::Weights::Fp(&store);
+    let mut cache = ganq::model::forward::KvCache::new(cfg);
+    let mut native_last = Vec::new();
+    for &t in &tokens {
+        native_last = ganq::model::forward::decode_step(&w, t, &mut cache);
+    }
+
+    let layout = ganq::kv::KvLayout::new(&cfg, 8);
+    let blocks = tokens.len().div_ceil(8) + 2;
+    let mut kv = ganq::kv::PagedKv::new(
+        Box::new(ganq::kv::F32Blocks::new(layout, blocks)),
+        blocks,
+        1,
+    );
+    kv.admit(0, &tokens, 1).unwrap();
+    let mut paged_last = Vec::new();
+    for &t in &tokens {
+        assert!(kv.prepare_step(&[true]).is_empty());
+        kv.push_token(0, t);
+        let mut view = kv.slot_view(0);
+        paged_last =
+            ganq::model::forward::decode_step_kv(&w, t, &mut view);
+    }
+    assert_eq!(
+        native_last, paged_last,
+        "paged decode diverged from the native path on the fixture"
+    );
+}
+
+#[test]
 fn quant_methods_ordering_on_trained_layer() {
     // the paper's per-layer story on REAL trained weights: ganq < gptq,
     // ganq < omniq, ganq < rtn (layer error, 3-bit)

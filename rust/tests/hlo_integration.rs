@@ -68,7 +68,7 @@ fn lutgemm_kernel_artifact_matches_native() {
                 ],
             )
             .unwrap();
-        let got = out[0].as_f32();
+        let got = out[0].as_f32().unwrap();
         let maxdiff: f32 = got
             .iter()
             .zip(&want.data)
@@ -102,7 +102,7 @@ fn resident_buffer_execution_matches_literal_execution() {
     let via_buf = rt
         .run_with_resident(name, &inputs[..1], &staged)
         .unwrap();
-    assert_eq!(via_lit[0].as_f32(), via_buf[0].as_f32());
+    assert_eq!(via_lit[0].as_f32().unwrap(), via_buf[0].as_f32().unwrap());
     // 5-D tensors (KV-cache shaped) must also stage cleanly
     let cache = HostTensor::F32(vec![2, 1, 2, 16, 8], vec![0.5; 512]);
     let b = rt.stage(&[cache]).unwrap();

@@ -1,0 +1,155 @@
+//! Paged KV-cache integration tests: bit-exactness of the F32 block
+//! store against the contiguous cache, tolerance of the LUT block store,
+//! and the admission-capacity win of paging + prefix sharing at a fixed
+//! KV memory budget (the PR's acceptance criterion).
+
+use ganq::coordinator::{
+    serve, KvStoreKind, NativeBackend, PagedNativeBackend, Request,
+};
+use ganq::kv::{F32Blocks, KvLayout, LutBlocks, PagedKv};
+use ganq::model::forward::{self, KvCache, Weights};
+use ganq::model::{ModelConfig, WeightStore};
+
+fn micro_store(seed: u64) -> WeightStore {
+    let cfg = ModelConfig::builtin("opt-micro").unwrap();
+    WeightStore::random("t", cfg, seed)
+}
+
+/// Decode `seq` through a fresh PagedKv slot, returning per-step logits.
+/// `resume_from` positions are assumed cached (prefix hit) and skipped.
+fn paged_decode(
+    kv: &mut PagedKv,
+    w: &Weights,
+    slot: usize,
+    seq: &[i32],
+    resume_from: usize,
+) -> Vec<Vec<f32>> {
+    let mut out = Vec::new();
+    for &t in &seq[resume_from..] {
+        let mut active = vec![false; kv.num_slots()];
+        active[slot] = true;
+        assert!(kv.prepare_step(&active).is_empty(), "no preemption");
+        kv.push_token(slot, t);
+        let mut view = kv.slot_view(slot);
+        out.push(forward::decode_step_kv(w, t, &mut view));
+    }
+    out
+}
+
+#[test]
+fn paged_f32_decode_bit_identical_to_contiguous() {
+    let store = micro_store(71);
+    let cfg = store.cfg;
+    let w = Weights::Fp(&store);
+    let seq: Vec<i32> = (0..20).map(|i| (i * 13 + 5) % 256).collect();
+
+    // pre-refactor native path: contiguous KvCache
+    let mut cache = KvCache::new(cfg);
+    let mut reference = Vec::new();
+    for &t in &seq {
+        reference.push(forward::decode_step(&w, t, &mut cache));
+    }
+
+    // paged F32, cold
+    let layout = KvLayout::new(&cfg, 4);
+    let mut kv = PagedKv::new(Box::new(F32Blocks::new(layout, 32)), 32, 2);
+    assert_eq!(kv.admit(0, &seq, 1), Some(0));
+    let paged = paged_decode(&mut kv, &w, 0, &seq, 0);
+    assert_eq!(reference, paged, "paged F32 logits must be bit-identical");
+
+    // paged F32 resuming from shared prefix blocks: the final prompt
+    // token re-decodes on top of cached KV and must still match bitwise
+    let hit = kv.admit(1, &seq, 1).unwrap();
+    assert!(hit > 0, "second admit should hit the cached prefix");
+    let tail = paged_decode(&mut kv, &w, 1, &seq, hit);
+    assert_eq!(
+        &reference[hit..],
+        &tail[..],
+        "prefix-shared decode diverged from the contiguous path"
+    );
+}
+
+#[test]
+fn paged_lut4_decode_tracks_f32_within_tolerance() {
+    let store = micro_store(72);
+    let cfg = store.cfg;
+    let w = Weights::Fp(&store);
+    let seq: Vec<i32> = (0..24).map(|i| (i * 7 + 3) % 256).collect();
+
+    let layout = KvLayout::new(&cfg, 4);
+    let mut kv_f = PagedKv::new(Box::new(F32Blocks::new(layout, 32)), 32, 1);
+    kv_f.admit(0, &seq, 1).unwrap();
+    let exact = paged_decode(&mut kv_f, &w, 0, &seq, 0);
+
+    let mut kv_q = PagedKv::new(Box::new(LutBlocks::new(layout, 32)), 32, 1);
+    kv_q.admit(0, &seq, 1).unwrap();
+    let quant = paged_decode(&mut kv_q, &w, 0, &seq, 0);
+    assert!(kv_q.stats().sealed_blocks >= 5, "blocks must have sealed");
+
+    // golden tolerance: 4-bit non-uniform KV blocks stay close to the
+    // exact attention output in relative L2 over the whole sequence
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (e, q) in exact.iter().zip(&quant) {
+        for (&a, &b) in e.iter().zip(q) {
+            num += ((a - b) as f64).powi(2);
+            den += (a as f64).powi(2);
+        }
+    }
+    let rel = (num / den.max(1e-12)).sqrt();
+    assert!(rel < 0.30, "relative L2 {} too large", rel);
+}
+
+#[test]
+fn paged_admits_1_5x_more_concurrent_requests_at_same_memory() {
+    let store = micro_store(73);
+    let cfg = store.cfg;
+    // 50%-shared-prefix workload: 32-token prompts, first 16 shared
+    let shared: Vec<i32> = (0..16).map(|i| 200 + i).collect();
+    let reqs: Vec<Request> = (0..12)
+        .map(|i| {
+            let mut prompt = shared.clone();
+            prompt.extend((0..16).map(|j| (i * 16 + j) as i32 % 199));
+            Request { id: i as u64, prompt, max_new: 16 }
+        })
+        .collect();
+
+    // contiguous baseline: ctx-sized cache per slot
+    let slot_bytes =
+        cfg.layers * cfg.heads * cfg.ctx * cfg.head_dim() * 4 * 2;
+    let budget = 4 * slot_bytes;
+    let mut contiguous = NativeBackend::new(Weights::Fp(&store), 4);
+    let (resp_c, m_c) = serve(&mut contiguous, reqs.clone()).unwrap();
+    assert_eq!(m_c.peak_concurrency, 4);
+
+    // paged backend at the same KV memory budget
+    let mut paged = PagedNativeBackend::with_memory_budget(
+        Weights::Fp(&store),
+        16,
+        16,
+        KvStoreKind::F32,
+        budget,
+    );
+    let (resp_p, m_p) = serve(&mut paged, reqs).unwrap();
+
+    // identical greedy outputs, even across preemptions
+    assert_eq!(resp_c.len(), resp_p.len());
+    for (c, p) in resp_c.iter().zip(&resp_p) {
+        assert_eq!(c.id, p.id);
+        assert_eq!(c.tokens, p.tokens, "req {}", c.id);
+    }
+
+    // the acceptance criterion: >= 1.5x concurrent requests
+    assert!(
+        m_p.peak_concurrency * 2 >= m_c.peak_concurrency * 3,
+        "paged {} vs contiguous {}: below 1.5x",
+        m_p.peak_concurrency,
+        m_c.peak_concurrency
+    );
+    let kv = m_p.kv.expect("pool stats");
+    assert!(
+        kv.peak_blocks_in_use <= kv.blocks_total,
+        "pool overcommitted physically: {:?}",
+        kv
+    );
+}

@@ -43,7 +43,7 @@ fn sstep_graphs_match_native() {
                 ],
             )
             .unwrap();
-        let q = out[0].as_i32();
+        let q = out[0].as_i32().unwrap();
         let count = |f: &dyn Fn(usize, usize) -> i32| {
             (0..64 * 64)
                 .filter(|&idx| {
@@ -113,7 +113,7 @@ fn tstep_graph_matches_native() {
             ],
         )
         .unwrap();
-    let t_hlo = out[0].as_f32();
+    let t_hlo = out[0].as_f32().unwrap();
     let maxdiff: f32 = t_hlo
         .iter()
         .zip(&native_t.data)
