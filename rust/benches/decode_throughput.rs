@@ -1,0 +1,244 @@
+//! Decode-throughput bench: batched `decode_step_batch` vs per-sequence
+//! `decode_step_kv` at batch 1/4/16 for fp32 / 4-bit LUT / 3-bit LUT on
+//! the micro model, plus the packed-code kernel vs the unpacked LUT
+//! matmul at batch 1. Emits `BENCH_decode.json` so the decode perf
+//! trajectory is tracked from this PR on.
+//!
+//! Asserts the PR acceptance criteria: batch=16 batched decode on the
+//! LUT-quantized model is >= 2x the tokens/sec of 16 sequential
+//! `decode_step_kv` calls, and the packed kernel is no slower than the
+//! unpacked path at batch 1. `GANQ_SMOKE=1` shrinks the run for CI and
+//! relaxes the throughput bar to >= 1x (shared runners are noisy).
+
+use std::time::Instant;
+
+use ganq::model::forward::{
+    decode_step_batch, decode_step_kv, DecodeEngine, KvCache, KvSeq,
+    SeqRefs, Weights,
+};
+use ganq::model::{LayerWeights, ModelConfig, QuantizedModel, WeightStore};
+use ganq::quant::ganq::fit_codebook_identity;
+use ganq::quant::lut::lut_from_parts;
+use ganq::quant::PackedLut;
+use ganq::tensor::Mat;
+use ganq::util::json::{self, Json};
+use ganq::util::rng::Rng;
+use ganq::util::timer::{bench_for, Table};
+
+const PREFILL: usize = 8;
+
+fn smoke() -> bool {
+    std::env::var("GANQ_SMOKE").is_ok()
+}
+
+/// Quantize every linear to a per-row non-uniform LUT (identity
+/// Hessian) — the servable form the batched engine packs.
+fn lut_model(store: &WeightStore, bits: u8) -> QuantizedModel {
+    let k = 1usize << bits;
+    let mut linears = std::collections::BTreeMap::new();
+    for (name, _m, _n) in store.cfg.linear_shapes() {
+        let w = store.mat(&name);
+        let mut codes = vec![0u8; w.rows * w.cols];
+        let mut cb = Mat::zeros(w.rows, k);
+        for i in 0..w.rows {
+            let (c, t) = fit_codebook_identity(w.row(i), bits, 2);
+            codes[i * w.cols..(i + 1) * w.cols].copy_from_slice(&c);
+            cb.row_mut(i).copy_from_slice(&t);
+        }
+        linears.insert(
+            name,
+            LayerWeights::Lut(lut_from_parts(
+                w.rows, w.cols, bits, codes, cb,
+            )),
+        );
+    }
+    QuantizedModel {
+        base: store.clone(),
+        method: format!("lut{}-identity", bits),
+        bits,
+        linears,
+        weight_bits: 0,
+    }
+}
+
+/// Wall seconds for `steps` batched decode steps over `b` sequences
+/// (fresh caches, `PREFILL` unmeasured warmup tokens per sequence).
+fn run_batched(w: &Weights, b: usize, steps: usize) -> f64 {
+    let cfg = w.store().cfg;
+    let mut caches = vec![KvCache::new(cfg); b];
+    let mut engine = DecodeEngine::new(w);
+    let mut step = |s: usize, caches: &mut [KvCache]| {
+        let toks: Vec<i32> =
+            (0..b).map(|i| ((11 * i + s) % 256) as i32).collect();
+        let mut refs: Vec<&mut dyn KvSeq> = caches
+            .iter_mut()
+            .map(|c| c as &mut dyn KvSeq)
+            .collect();
+        decode_step_batch(&mut engine, &toks, &mut SeqRefs(&mut refs));
+    };
+    for s in 0..PREFILL {
+        step(s, &mut caches);
+    }
+    let t0 = Instant::now();
+    for s in 0..steps {
+        step(PREFILL + s, &mut caches);
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// Wall seconds for the same token schedule fed as `b` independent
+/// sequential `decode_step_kv` calls per step (the pre-batching path).
+fn run_sequential(w: &Weights, b: usize, steps: usize) -> f64 {
+    let cfg = w.store().cfg;
+    let mut caches = vec![KvCache::new(cfg); b];
+    for s in 0..PREFILL {
+        for (i, c) in caches.iter_mut().enumerate() {
+            decode_step_kv(w, ((11 * i + s) % 256) as i32, c);
+        }
+    }
+    let t0 = Instant::now();
+    for s in 0..steps {
+        for (i, c) in caches.iter_mut().enumerate() {
+            decode_step_kv(w, ((11 * i + PREFILL + s) % 256) as i32, c);
+        }
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// Best-of-`reps` tokens/sec for both paths.
+fn measure(w: &Weights, b: usize, steps: usize, reps: usize) -> (f64, f64) {
+    let tokens = (b * steps) as f64;
+    let mut best_b = f64::INFINITY;
+    let mut best_s = f64::INFINITY;
+    for _ in 0..reps {
+        best_b = best_b.min(run_batched(w, b, steps));
+        best_s = best_s.min(run_sequential(w, b, steps));
+    }
+    (tokens / best_b, tokens / best_s)
+}
+
+fn main() {
+    let cfg = ModelConfig::builtin("opt-micro").unwrap();
+    let store = WeightStore::random("bench", cfg, 411);
+    let qm4 = lut_model(&store, 4);
+    let qm3 = lut_model(&store, 3);
+    let (steps, reps) = if smoke() { (8, 1) } else { (40, 3) };
+    println!(
+        "opt-micro decode throughput, {} timed steps (+{} prefill), \
+         best of {} rep(s){}",
+        steps,
+        PREFILL,
+        reps,
+        if smoke() { " [smoke]" } else { "" }
+    );
+
+    let mut t = Table::new(
+        "batched decode engine vs sequential decode_step_kv",
+        &["fmt", "batch", "batched tok/s", "sequential tok/s", "speedup"],
+    );
+    let mut rows = Vec::new();
+    let mut lut4_b16_speedup = 0.0f64;
+    for (fmt, w) in [
+        ("fp32", Weights::Fp(&store)),
+        ("lut4", Weights::Quant(&qm4)),
+        ("lut3", Weights::Quant(&qm3)),
+    ] {
+        for b in [1usize, 4, 16] {
+            let (tb, ts) = measure(&w, b, steps, reps);
+            let speedup = tb / ts;
+            if fmt == "lut4" && b == 16 {
+                lut4_b16_speedup = speedup;
+            }
+            t.row(vec![
+                fmt.into(),
+                format!("{}", b),
+                format!("{:.0}", tb),
+                format!("{:.0}", ts),
+                format!("{:.2}x", speedup),
+            ]);
+            rows.push(json::obj(vec![
+                ("fmt", json::s(fmt)),
+                ("batch", json::num(b as f64)),
+                ("batched_tok_s", json::num(tb)),
+                ("sequential_tok_s", json::num(ts)),
+                ("speedup", json::num(speedup)),
+            ]));
+        }
+    }
+    t.print();
+
+    // packed-code kernel vs unpacked LUT matmul at batch 1, on the two
+    // micro linear shapes (d x d and ff x d)
+    let mut kernel_rows = Vec::new();
+    let mut kt = Table::new(
+        "packed vs unpacked LUT kernel (p=1)",
+        &["shape", "bits", "unpacked us", "packed us"],
+    );
+    let mut packed_ok = true;
+    for (m, n) in [(cfg.d, cfg.d), (cfg.ff, cfg.d)] {
+        for bits in [4u8, 3] {
+            let mut rng = Rng::new(5 + m as u64 + bits as u64);
+            let k = 1usize << bits;
+            let codes: Vec<u8> =
+                (0..m * n).map(|_| rng.below(k as u64) as u8).collect();
+            let cb = Mat::from_vec(m, k, rng.normal_vec_f32(m * k));
+            let lut = lut_from_parts(m, n, bits, codes, cb);
+            let pl = PackedLut::pack(&lut);
+            let x = Mat::from_vec(1, n, rng.normal_vec_f32(n));
+            let budget = if smoke() { 0.05 } else { 0.25 };
+            let s_unpacked = bench_for(budget, 2000, || {
+                let _ = lut.lut_matmul(&x);
+            });
+            let s_packed = bench_for(budget, 2000, || {
+                let _ = pl.matmul(&x);
+            });
+            if s_packed.p50_s > s_unpacked.p50_s * 1.5 {
+                packed_ok = false;
+            }
+            kt.row(vec![
+                format!("{}x{}", m, n),
+                bits.to_string(),
+                format!("{:.1}", s_unpacked.mean_us()),
+                format!("{:.1}", s_packed.mean_us()),
+            ]);
+            kernel_rows.push(json::obj(vec![
+                ("m", json::num(m as f64)),
+                ("n", json::num(n as f64)),
+                ("bits", json::num(bits as f64)),
+                ("unpacked_us", json::num(s_unpacked.mean_us())),
+                ("packed_us", json::num(s_packed.mean_us())),
+            ]));
+        }
+    }
+    kt.print();
+
+    let out = json::obj(vec![
+        ("model", json::s("opt-micro")),
+        ("steps", json::num(steps as f64)),
+        ("prefill", json::num(PREFILL as f64)),
+        ("smoke", Json::Bool(smoke())),
+        ("decode", Json::Arr(rows)),
+        ("kernel_p1", Json::Arr(kernel_rows)),
+    ]);
+    std::fs::write("BENCH_decode.json", out.to_string_pretty())
+        .expect("write BENCH_decode.json");
+    println!("\nwrote BENCH_decode.json");
+
+    let bar = if smoke() { 1.0 } else { 2.0 };
+    assert!(
+        lut4_b16_speedup >= bar,
+        "acceptance FAILED: lut4 batch=16 batched/sequential = {:.2}x \
+         (need >= {:.1}x)",
+        lut4_b16_speedup,
+        bar
+    );
+    assert!(
+        packed_ok,
+        "acceptance FAILED: packed kernel slower than unpacked at p=1"
+    );
+    println!(
+        "acceptance OK: lut4 batch=16 batched decode is {:.2}x sequential; \
+         packed kernel holds at p=1",
+        lut4_b16_speedup
+    );
+}

@@ -5,11 +5,16 @@
 //!   _b{B}`), per-slot positions as a vector input, KV caches threaded
 //!   through the graph outputs; weights optionally staged as device-
 //!   resident buffers (the §Perf optimization).
-//! * [`NativeBackend`] — the pure-Rust forward path with one contiguous
-//!   [`KvCache`] per slot (works without artifacts; also the reference
-//!   for cross-checking the HLO path).
-//! * [`PagedNativeBackend`] — the native path over the paged KV cache
-//!   (`kv::PagedKv`): block tables, prefix sharing, and dynamic capacity.
+//! * [`NativeBackend`] — the pure-Rust batched decode engine
+//!   (`forward::decode_step_batch`) with one contiguous [`KvCache`] per
+//!   slot: every step advances the whole active set through each layer
+//!   together, so quantized weights stream once per token-step instead
+//!   of once per slot (works without artifacts; also the reference for
+//!   cross-checking the HLO path — bit-identical to per-sequence
+//!   `decode_step_kv`).
+//! * [`PagedNativeBackend`] — the same batched engine over the paged KV
+//!   cache (`kv::PagedKv`): block tables, prefix sharing, and dynamic
+//!   capacity.
 //!
 //! The scheduler admits requests into free slots, feeds one token per slot
 //! per step (prompt tokens first — "prefill as decode" keeps the graph set
@@ -43,7 +48,9 @@ use std::time::Instant;
 use crate::kv::{
     F32Blocks, KvBlockStore, KvLayout, KvPoolStats, LutBlocks, PagedKv,
 };
-use crate::model::forward::{self, KvCache, Weights};
+use crate::model::forward::{
+    self, DecodeEngine, KvCache, KvSeq, SeqRefs, Weights,
+};
 use crate::model::{LayerWeights, ModelConfig, QuantizedModel, WeightStore};
 use crate::runtime::{HostTensor, Runtime};
 
@@ -355,44 +362,34 @@ pub fn serve(
 // ---------------------------------------------------------------------------
 
 pub struct NativeBackend<'a> {
-    w: Weights<'a>,
+    engine: DecodeEngine<'a>,
     caches: Vec<KvCache>,
-    weight_bytes: usize,
 }
 
 impl<'a> NativeBackend<'a> {
     pub fn new(w: Weights<'a>, slots: usize) -> NativeBackend<'a> {
         let cfg = w.store().cfg;
-        let weight_bytes = weight_bytes_of(&w);
         NativeBackend {
-            w,
+            engine: DecodeEngine::new(&w),
             caches: (0..slots).map(|_| KvCache::new(cfg)).collect(),
-            weight_bytes,
         }
     }
 }
 
-fn weight_bytes_of(w: &Weights) -> usize {
-    let store = w.store();
-    match w {
-        Weights::Fp(_) => store
-            .cfg
-            .linear_shapes()
-            .iter()
-            .map(|(_, m, n)| m * n * 4)
-            .sum(),
-        Weights::Quant(q) => q
-            .linears
-            .values()
-            .map(|lw| match lw {
-                LayerWeights::Dense(m) => m.data.len() * 4,
-                LayerWeights::Lut(l) => l.bytes_per_decode(),
-                LayerWeights::LutSparse(l, s) => {
-                    l.bytes_per_decode() + s.storage_bytes()
-                }
-            })
-            .sum(),
+/// Scatter the batched engine's per-active-sequence logits rows back to
+/// slot-indexed rows (the scheduler never reads inactive rows).
+fn scatter_logits(
+    logits: Vec<Vec<f32>>,
+    active: &[bool],
+) -> Vec<Vec<f32>> {
+    let mut out = vec![Vec::new(); active.len()];
+    let mut rows = logits.into_iter();
+    for (si, o) in out.iter_mut().enumerate() {
+        if active[si] {
+            *o = rows.next().expect("one logits row per active slot");
+        }
     }
+    out
 }
 
 impl<'a> DecodeBackend for NativeBackend<'a> {
@@ -401,7 +398,7 @@ impl<'a> DecodeBackend for NativeBackend<'a> {
     }
 
     fn cfg(&self) -> ModelConfig {
-        self.w.store().cfg
+        self.engine.cfg()
     }
 
     fn step(
@@ -409,20 +406,22 @@ impl<'a> DecodeBackend for NativeBackend<'a> {
         tok: &[i32],
         active: &[bool],
     ) -> Result<Vec<Vec<f32>>, String> {
-        let mut out = Vec::with_capacity(tok.len());
-        for si in 0..tok.len() {
+        // one batched step over the whole active set: each linear's
+        // weights stream once per token-step instead of once per slot
+        let mut toks = Vec::with_capacity(tok.len());
+        let mut refs: Vec<&mut dyn KvSeq> = Vec::with_capacity(tok.len());
+        for (si, cache) in self.caches.iter_mut().enumerate() {
             if active[si] {
-                out.push(forward::decode_step(
-                    &self.w,
-                    tok[si],
-                    &mut self.caches[si],
-                ));
-            } else {
-                // the scheduler never reads inactive rows
-                out.push(Vec::new());
+                toks.push(tok[si]);
+                refs.push(cache);
             }
         }
-        Ok(out)
+        let logits = forward::decode_step_batch(
+            &mut self.engine,
+            &toks,
+            &mut SeqRefs(&mut refs),
+        );
+        Ok(scatter_logits(logits, active))
     }
 
     fn reset_slot(&mut self, slot: usize) {
@@ -434,7 +433,9 @@ impl<'a> DecodeBackend for NativeBackend<'a> {
     }
 
     fn weight_bytes_per_step(&self) -> usize {
-        self.weight_bytes
+        // the engine's resolved plan is the ground truth for what
+        // actually streams (packed codes, dense fallbacks, outliers)
+        self.engine.weight_bytes_per_step()
     }
 
     fn kv_bytes_per_step(&self) -> usize {
@@ -462,9 +463,8 @@ pub enum KvStoreKind {
 /// (capacity is the block pool, not the slot count), prefix sharing,
 /// CoW, LRU prefix caching, and youngest-first preemption.
 pub struct PagedNativeBackend<'a> {
-    w: Weights<'a>,
+    engine: DecodeEngine<'a>,
     kv: PagedKv,
-    weight_bytes: usize,
 }
 
 impl<'a> PagedNativeBackend<'a> {
@@ -485,11 +485,9 @@ impl<'a> PagedNativeBackend<'a> {
                 Box::new(LutBlocks::new(layout, num_blocks))
             }
         };
-        let weight_bytes = weight_bytes_of(&w);
         PagedNativeBackend {
-            w,
+            engine: DecodeEngine::new(&w),
             kv: PagedKv::new(store, num_blocks, slots),
-            weight_bytes,
         }
     }
 
@@ -522,7 +520,7 @@ impl<'a> DecodeBackend for PagedNativeBackend<'a> {
     }
 
     fn cfg(&self) -> ModelConfig {
-        self.w.store().cfg
+        self.engine.cfg()
     }
 
     fn step(
@@ -530,22 +528,21 @@ impl<'a> DecodeBackend for PagedNativeBackend<'a> {
         tok: &[i32],
         active: &[bool],
     ) -> Result<Vec<Vec<f32>>, String> {
-        let mut out = Vec::with_capacity(tok.len());
+        // batched step over the admitted set; slot views are handed to
+        // the engine one at a time (they alias the shared block pool)
+        let mut toks = Vec::with_capacity(tok.len());
+        let mut slots = Vec::with_capacity(tok.len());
         for si in 0..tok.len() {
             if active[si] {
                 self.kv.push_token(si, tok[si]);
-                let mut view = self.kv.slot_view(si);
-                out.push(forward::decode_step_kv(
-                    &self.w,
-                    tok[si],
-                    &mut view,
-                ));
-            } else {
-                // the scheduler never reads inactive rows
-                out.push(Vec::new());
+                toks.push(tok[si]);
+                slots.push(si);
             }
         }
-        Ok(out)
+        let mut seqs = self.kv.seqs(slots);
+        let logits =
+            forward::decode_step_batch(&mut self.engine, &toks, &mut seqs);
+        Ok(scatter_logits(logits, active))
     }
 
     fn reset_slot(&mut self, slot: usize) {
@@ -557,7 +554,7 @@ impl<'a> DecodeBackend for PagedNativeBackend<'a> {
     }
 
     fn weight_bytes_per_step(&self) -> usize {
-        self.weight_bytes
+        self.engine.weight_bytes_per_step()
     }
 
     fn kv_bytes_per_step(&self) -> usize {

@@ -24,7 +24,7 @@ pub mod pool;
 pub mod prefix;
 pub mod store;
 
-pub use paged::{PagedKv, SlotView};
+pub use paged::{PagedKv, PagedSeqs, SlotView};
 pub use pool::BlockPool;
 pub use prefix::PrefixIndex;
 pub use store::{F32Blocks, KvBlockStore, KvLayout, LutBlocks, KV_LUT_BITS};

@@ -21,7 +21,7 @@
 //! 5. `release` — drop the slot's references; blocks also held by the
 //!    index stay cached until evicted.
 
-use crate::model::forward::KvSeq;
+use crate::model::forward::{KvSeq, SeqAccess};
 
 use super::pool::BlockPool;
 use super::prefix::PrefixIndex;
@@ -249,10 +249,64 @@ impl PagedKv {
         SlotView { kv: self, slot }
     }
 
+    /// [`SeqAccess`] adapter over a set of active slots for
+    /// `forward::decode_step_batch`: sequences are visited one at a time
+    /// because slot views alias the shared block pool.
+    pub fn seqs(&mut self, slots: Vec<usize>) -> PagedSeqs<'_> {
+        PagedSeqs { kv: self, slots }
+    }
+
     fn locate(&self, slot: usize, sj: usize) -> (usize, usize) {
         let seq = self.slots[slot].as_ref().expect("active slot");
         let bs = self.block_size();
         (seq.blocks[sj / bs], sj % bs)
+    }
+
+    /// Copy `rows` consecutive positions starting at `sj0` for one
+    /// (layer, head), walking the block table in whole-block runs and
+    /// taking the store's contiguous fast path where available.
+    fn read_rows(
+        &self,
+        slot: usize,
+        li: usize,
+        hi: usize,
+        sj0: usize,
+        rows: usize,
+        out: &mut [f32],
+        k_side: bool,
+    ) {
+        if rows == 0 {
+            return;
+        }
+        let bs = self.block_size();
+        let hd = out.len() / rows;
+        let seq = self.slots[slot].as_ref().expect("active slot");
+        let mut done = 0usize;
+        while done < rows {
+            let sj = sj0 + done;
+            let blk = seq.blocks[sj / bs];
+            let off = sj % bs;
+            let run = (bs - off).min(rows - done);
+            let dst = &mut out[done * hd..(done + run) * hd];
+            let fast = if k_side {
+                self.store.k_rows_slice(blk, li, hi, off, run)
+            } else {
+                self.store.v_rows_slice(blk, li, hi, off, run)
+            };
+            match fast {
+                Some(src) => dst.copy_from_slice(src),
+                None => {
+                    for (r, drow) in dst.chunks_mut(hd).enumerate() {
+                        if k_side {
+                            self.store.read_k(blk, li, hi, off + r, drow);
+                        } else {
+                            self.store.read_v(blk, li, hi, off + r, drow);
+                        }
+                    }
+                }
+            }
+            done += run;
+        }
     }
 
     fn advance(&mut self, slot: usize) {
@@ -338,8 +392,48 @@ impl KvSeq for SlotView<'_> {
         self.kv.store.v_slice(blk, li, hi, off)
     }
 
+    fn read_k_rows(
+        &self,
+        li: usize,
+        hi: usize,
+        sj0: usize,
+        rows: usize,
+        out: &mut [f32],
+    ) {
+        self.kv.read_rows(self.slot, li, hi, sj0, rows, out, true);
+    }
+
+    fn read_v_rows(
+        &self,
+        li: usize,
+        hi: usize,
+        sj0: usize,
+        rows: usize,
+        out: &mut [f32],
+    ) {
+        self.kv.read_rows(self.slot, li, hi, sj0, rows, out, false);
+    }
+
     fn advance(&mut self) {
         self.kv.advance(self.slot);
+    }
+}
+
+/// Mutable multi-slot access for the batched decode engine
+/// ([`SeqAccess`]): hands the engine one [`SlotView`] at a time.
+pub struct PagedSeqs<'a> {
+    kv: &'a mut PagedKv,
+    slots: Vec<usize>,
+}
+
+impl SeqAccess for PagedSeqs<'_> {
+    fn count(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn with_seq(&mut self, i: usize, f: &mut dyn FnMut(&mut dyn KvSeq)) {
+        let mut view = self.kv.slot_view(self.slots[i]);
+        f(&mut view);
     }
 }
 
@@ -483,6 +577,55 @@ mod tests {
         assert!(kv.slots[1].is_none());
         // slot 0 got the tail it needed
         assert_eq!(kv.slots[0].as_ref().unwrap().blocks.len(), 2);
+    }
+
+    #[test]
+    fn batched_row_reads_cross_block_boundaries() {
+        // dense store: ranges spanning sealed + tail blocks come back
+        // identical to per-row reads
+        let mut kv = paged(8, 1);
+        let toks: Vec<i32> = (0..10).collect(); // 2.5 blocks of 4
+        kv.admit(0, &toks, 1).unwrap();
+        run_tokens(&mut kv, 0, &toks);
+        let view = SlotView { kv: &mut kv, slot: 0 };
+        let mut ranged = vec![0.0f32; 10 * 2];
+        view.read_k_rows(0, 0, 0, 10, &mut ranged);
+        let mut single = vec![0.0f32; 2];
+        for sj in 0..10 {
+            view.read_k(0, 0, sj, &mut single);
+            assert_eq!(&ranged[sj * 2..sj * 2 + 2], &single[..], "pos {}", sj);
+        }
+        // offset range starting mid-block
+        let mut mid = vec![0.0f32; 5 * 2];
+        view.read_v_rows(0, 0, 3, 5, &mut mid);
+        for (r, sj) in (3..8).enumerate() {
+            view.read_v(0, 0, sj, &mut single);
+            assert_eq!(&mid[r * 2..r * 2 + 2], &single[..], "pos {}", sj);
+        }
+    }
+
+    #[test]
+    fn batched_row_reads_through_sealed_lut_blocks() {
+        use super::super::store::LutBlocks;
+        let l = KvLayout { layers: 1, heads: 1, head_dim: 2, block_size: 4 };
+        let mut kv =
+            PagedKv::new(Box::new(LutBlocks::new(l, 8)), 8, 1);
+        let toks: Vec<i32> = (0..6).collect(); // one sealed + one tail
+        kv.admit(0, &toks, 1).unwrap();
+        run_tokens(&mut kv, 0, &toks);
+        let view = SlotView { kv: &mut kv, slot: 0 };
+        let mut ranged = vec![0.0f32; 6 * 2];
+        view.read_k_rows(0, 0, 0, 6, &mut ranged);
+        let mut single = vec![0.0f32; 2];
+        for sj in 0..6 {
+            view.read_k(0, 0, sj, &mut single);
+            assert_eq!(
+                &ranged[sj * 2..sj * 2 + 2],
+                &single[..],
+                "sealed/tail pos {}",
+                sj
+            );
+        }
     }
 
     #[test]

@@ -91,6 +91,34 @@ pub trait KvBlockStore {
         None
     }
 
+    /// Borrow `rows` consecutive in-block K rows (offsets
+    /// `off..off+rows`) as one contiguous f32 run when the
+    /// representation allows it — the batched decode gather then pays a
+    /// single memcpy per (layer, head, block) instead of a dispatch per
+    /// position. `None` falls back to per-row reads (sealed LUT blocks).
+    fn k_rows_slice(
+        &self,
+        blk: usize,
+        li: usize,
+        hi: usize,
+        off: usize,
+        rows: usize,
+    ) -> Option<&[f32]> {
+        let _ = (blk, li, hi, off, rows);
+        None
+    }
+    fn v_rows_slice(
+        &self,
+        blk: usize,
+        li: usize,
+        hi: usize,
+        off: usize,
+        rows: usize,
+    ) -> Option<&[f32]> {
+        let _ = (blk, li, hi, off, rows);
+        None
+    }
+
     /// Copy `src`'s contents into `dst` as mutable state (the
     /// copy-on-write target of a divergent append).
     fn copy_block(&mut self, src: usize, dst: usize);
@@ -178,6 +206,34 @@ impl KvBlockStore for F32Blocks {
         let hd = self.layout.head_dim;
         let b = self.base(blk, li, hi, off);
         Some(&self.v[b..b + hd])
+    }
+
+    fn k_rows_slice(
+        &self,
+        blk: usize,
+        li: usize,
+        hi: usize,
+        off: usize,
+        rows: usize,
+    ) -> Option<&[f32]> {
+        debug_assert!(off + rows <= self.layout.block_size);
+        let hd = self.layout.head_dim;
+        let b = self.base(blk, li, hi, off);
+        Some(&self.k[b..b + rows * hd])
+    }
+
+    fn v_rows_slice(
+        &self,
+        blk: usize,
+        li: usize,
+        hi: usize,
+        off: usize,
+        rows: usize,
+    ) -> Option<&[f32]> {
+        debug_assert!(off + rows <= self.layout.block_size);
+        let hd = self.layout.head_dim;
+        let b = self.base(blk, li, hi, off);
+        Some(&self.v[b..b + rows * hd])
     }
 
     fn copy_block(&mut self, src: usize, dst: usize) {
@@ -377,6 +433,40 @@ impl KvBlockStore for LutBlocks {
         self.staged[blk].as_ref().map(|st| {
             let b = self.layout.off(li, hi, off);
             &st.v[b..b + hd]
+        })
+    }
+
+    fn k_rows_slice(
+        &self,
+        blk: usize,
+        li: usize,
+        hi: usize,
+        off: usize,
+        rows: usize,
+    ) -> Option<&[f32]> {
+        debug_assert!(off + rows <= self.layout.block_size);
+        let hd = self.layout.head_dim;
+        // staged (open / CoW'd) blocks are dense f32; sealed blocks
+        // dequantize per row through the fallback
+        self.staged[blk].as_ref().map(|st| {
+            let b = self.layout.off(li, hi, off);
+            &st.k[b..b + rows * hd]
+        })
+    }
+
+    fn v_rows_slice(
+        &self,
+        blk: usize,
+        li: usize,
+        hi: usize,
+        off: usize,
+        rows: usize,
+    ) -> Option<&[f32]> {
+        debug_assert!(off + rows <= self.layout.block_size);
+        let hd = self.layout.head_dim;
+        self.staged[blk].as_ref().map(|st| {
+            let b = self.layout.off(li, hi, off);
+            &st.v[b..b + rows * hd]
         })
     }
 

@@ -5,17 +5,24 @@
 //! variable-length sequences, and cross-validation of the HLO path
 //! (tests/golden.rs pins both against the python fixture).
 
-use crate::model::{LayerWeights, ModelConfig, QuantizedModel, WeightStore};
+use crate::model::{
+    LayerWeights, ModelConfig, QuantizedModel, Tensor, WeightStore,
+};
+use crate::quant::kernels::{self, LutScratch, PackedLut};
+use crate::quant::LutLayer;
+use crate::sparse::Csr;
 use crate::tensor::{self, Mat};
+use crate::util::pool;
 
 /// Who provides the six quantizable linears.
+#[derive(Clone, Copy)]
 pub enum Weights<'a> {
     Fp(&'a WeightStore),
     Quant(&'a QuantizedModel),
 }
 
 impl<'a> Weights<'a> {
-    pub fn store(&self) -> &WeightStore {
+    pub fn store(&self) -> &'a WeightStore {
         match self {
             Weights::Fp(s) => s,
             Weights::Quant(q) => &q.base,
@@ -230,11 +237,49 @@ pub trait KvSeq {
         let _ = (li, hi, sj);
         None
     }
+    /// Copy `rows` consecutive K rows (positions `sj0..sj0+rows`) into
+    /// `out` (`rows * head_dim` floats). Default loops `read_k`; stores
+    /// whose rows are physically contiguous override this so the batched
+    /// decode gather pays one call (and ideally one memcpy) per
+    /// (layer, head) instead of two virtual dispatches per position.
+    fn read_k_rows(
+        &self,
+        li: usize,
+        hi: usize,
+        sj0: usize,
+        rows: usize,
+        out: &mut [f32],
+    ) {
+        if rows == 0 {
+            return;
+        }
+        let hd = out.len() / rows;
+        for (r, orow) in out.chunks_mut(hd).enumerate() {
+            self.read_k(li, hi, sj0 + r, orow);
+        }
+    }
+    fn read_v_rows(
+        &self,
+        li: usize,
+        hi: usize,
+        sj0: usize,
+        rows: usize,
+        out: &mut [f32],
+    ) {
+        if rows == 0 {
+            return;
+        }
+        let hd = out.len() / rows;
+        for (r, orow) in out.chunks_mut(hd).enumerate() {
+            self.read_v(li, hi, sj0 + r, orow);
+        }
+    }
     /// Commit the step: `pos += 1`.
     fn advance(&mut self);
 }
 
 /// Per-sequence contiguous KV cache for the native path.
+#[derive(Clone)]
 pub struct KvCache {
     cfg: ModelConfig,
     /// [layers][heads][ctx][hd], flattened
@@ -291,8 +336,71 @@ impl KvSeq for KvCache {
         Some(&self.v[base..base + hd])
     }
 
+    fn read_k_rows(
+        &self,
+        li: usize,
+        hi: usize,
+        sj0: usize,
+        rows: usize,
+        out: &mut [f32],
+    ) {
+        // positions are contiguous within a (layer, head): one memcpy
+        let base = self.idx(li, hi, sj0);
+        out.copy_from_slice(&self.k[base..base + rows * self.cfg.head_dim()]);
+    }
+
+    fn read_v_rows(
+        &self,
+        li: usize,
+        hi: usize,
+        sj0: usize,
+        rows: usize,
+        out: &mut [f32],
+    ) {
+        let base = self.idx(li, hi, sj0);
+        out.copy_from_slice(&self.v[base..base + rows * self.cfg.head_dim()]);
+    }
+
     fn advance(&mut self) {
         self.len += 1;
+    }
+}
+
+/// Interned parameter names for one transformer layer — built once per
+/// decoder/engine so per-token hot loops never run `format!`.
+pub struct LayerKeys {
+    pub ln1_g: String,
+    pub ln1_b: String,
+    pub ln2_g: String,
+    pub ln2_b: String,
+    /// (weight, bias) names in canonical order: wq, wk, wv, wo, w1, w2
+    pub lin: [(String, String); 6],
+}
+
+impl LayerKeys {
+    pub fn build(layers: usize) -> Vec<LayerKeys> {
+        (0..layers)
+            .map(|li| {
+                let p = format!("l{}.", li);
+                let nb = |w: &str, b: &str| {
+                    (format!("{}{}", p, w), format!("{}{}", p, b))
+                };
+                LayerKeys {
+                    ln1_g: format!("{}ln1_g", p),
+                    ln1_b: format!("{}ln1_b", p),
+                    ln2_g: format!("{}ln2_g", p),
+                    ln2_b: format!("{}ln2_b", p),
+                    lin: [
+                        nb("wq", "bq"),
+                        nb("wk", "bk"),
+                        nb("wv", "bv"),
+                        nb("wo", "bo"),
+                        nb("w1", "b1"),
+                        nb("w2", "b2"),
+                    ],
+                }
+            })
+            .collect()
     }
 }
 
@@ -306,105 +414,133 @@ pub fn decode_step(w: &Weights, tok: i32, cache: &mut KvCache) -> Vec<f32> {
 /// attention loop iterates positions in ascending order with identical
 /// f32 accumulation to the historical contiguous path, so two stores
 /// holding the same values produce bit-identical logits.
+///
+/// Token-loop callers should hold a [`SeqDecoder`] instead: this
+/// convenience wrapper rebuilds the key table and scratch every call.
 pub fn decode_step_kv(
     w: &Weights,
     tok: i32,
     cache: &mut dyn KvSeq,
 ) -> Vec<f32> {
-    let store = w.store();
-    let cfg = store.cfg;
-    let d = cfg.d;
-    let h = cfg.heads;
-    let hd = cfg.head_dim();
-    let pos = cache.pos();
-    assert!(pos < cfg.ctx, "context overflow");
-    let scale = 1.0 / (hd as f32).sqrt();
+    SeqDecoder::new(*w).step(tok, cache)
+}
 
-    let mut x = Mat::zeros(1, d);
-    {
-        let te = &store.get("tok_emb").data
-            [(tok as usize) * d..(tok as usize + 1) * d];
-        let pe = &store.get("pos_emb").data[pos * d..(pos + 1) * d];
-        for (o, (&a, &b)) in x.row_mut(0).iter_mut().zip(te.iter().zip(pe)) {
-            *o = a + b;
+/// Sequential (one-sequence-at-a-time) decoder with the per-token
+/// constants hoisted out of the token loop: interned layer keys (no
+/// `format!` per layer per token) and `scores`/`krow`/`vrow` attention
+/// scratch reused across layers and steps.
+pub struct SeqDecoder<'w> {
+    w: Weights<'w>,
+    keys: Vec<LayerKeys>,
+    scores: Vec<f32>,
+    krow: Vec<f32>,
+    vrow: Vec<f32>,
+}
+
+impl<'w> SeqDecoder<'w> {
+    pub fn new(w: Weights<'w>) -> SeqDecoder<'w> {
+        let cfg = w.store().cfg;
+        SeqDecoder {
+            w,
+            keys: LayerKeys::build(cfg.layers),
+            scores: Vec::with_capacity(cfg.ctx),
+            krow: vec![0.0; cfg.head_dim()],
+            vrow: vec![0.0; cfg.head_dim()],
         }
     }
 
-    let mut krow = vec![0.0f32; hd];
-    let mut vrow = vec![0.0f32; hd];
-    for li in 0..cfg.layers {
-        let p = format!("l{}.", li);
-        let mut a = x.clone();
-        layer_norm_rows(
-            &mut a,
-            store.vec(&format!("{}ln1_g", p)),
-            store.vec(&format!("{}ln1_b", p)),
-        );
-        let lin = |name: &str, inp: &Mat, bias: &str| -> Mat {
-            let mut y = w.linear(&format!("{}{}", p, name), inp);
-            add_bias(&mut y, store.vec(&format!("{}{}", p, bias)));
-            y
-        };
-        let q = lin("wq", &a, "bq");
-        let k = lin("wk", &a, "bk");
-        let v = lin("wv", &a, "bv");
-        // write cache at pos
-        for hi in 0..h {
-            cache.write(
-                li,
-                hi,
-                &k.row(0)[hi * hd..(hi + 1) * hd],
-                &v.row(0)[hi * hd..(hi + 1) * hd],
-            );
-        }
-        // attend over 0..=pos
-        let mut o = Mat::zeros(1, d);
-        let mut scores = vec![0.0f32; pos + 1];
-        for hi in 0..h {
-            let qrow = &q.row(0)[hi * hd..(hi + 1) * hd];
-            for (sj, sc) in scores.iter_mut().enumerate() {
-                let kr = match cache.k_slice(li, hi, sj) {
-                    Some(s) => s,
-                    None => {
-                        cache.read_k(li, hi, sj, &mut krow);
-                        &krow[..]
-                    }
-                };
-                *sc = tensor::dot(qrow, kr) * scale;
+    /// One decode step; math identical to the historical
+    /// `decode_step_kv` (same op order per element).
+    pub fn step(&mut self, tok: i32, cache: &mut dyn KvSeq) -> Vec<f32> {
+        let SeqDecoder { w, keys, scores, krow, vrow } = self;
+        let w = *w;
+        let store = w.store();
+        let cfg = store.cfg;
+        let d = cfg.d;
+        let h = cfg.heads;
+        let hd = cfg.head_dim();
+        let pos = cache.pos();
+        assert!(pos < cfg.ctx, "context overflow");
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        let mut x = Mat::zeros(1, d);
+        {
+            let te = &store.get("tok_emb").data
+                [(tok as usize) * d..(tok as usize + 1) * d];
+            let pe = &store.get("pos_emb").data[pos * d..(pos + 1) * d];
+            for (o, (&a, &b)) in
+                x.row_mut(0).iter_mut().zip(te.iter().zip(pe))
+            {
+                *o = a + b;
             }
-            tensor::softmax(&mut scores);
-            let orow = &mut o.row_mut(0)[hi * hd..(hi + 1) * hd];
-            for (sj, &w_att) in scores.iter().enumerate() {
-                let vr = match cache.v_slice(li, hi, sj) {
-                    Some(s) => s,
-                    None => {
-                        cache.read_v(li, hi, sj, &mut vrow);
-                        &vrow[..]
+        }
+
+        scores.resize(pos + 1, 0.0);
+        for (li, key) in keys.iter().enumerate() {
+            let mut a = x.clone();
+            layer_norm_rows(&mut a, store.vec(&key.ln1_g), store.vec(&key.ln1_b));
+            let lin = |slot: usize, inp: &Mat| -> Mat {
+                let (wname, bname) = &key.lin[slot];
+                let mut y = w.linear(wname, inp);
+                add_bias(&mut y, store.vec(bname));
+                y
+            };
+            let q = lin(0, &a);
+            let k = lin(1, &a);
+            let v = lin(2, &a);
+            // write cache at pos
+            for hi in 0..h {
+                cache.write(
+                    li,
+                    hi,
+                    &k.row(0)[hi * hd..(hi + 1) * hd],
+                    &v.row(0)[hi * hd..(hi + 1) * hd],
+                );
+            }
+            // attend over 0..=pos
+            let mut o = Mat::zeros(1, d);
+            for hi in 0..h {
+                let qrow = &q.row(0)[hi * hd..(hi + 1) * hd];
+                for (sj, sc) in scores.iter_mut().enumerate() {
+                    let kr = match cache.k_slice(li, hi, sj) {
+                        Some(s) => s,
+                        None => {
+                            cache.read_k(li, hi, sj, krow);
+                            &krow[..]
+                        }
+                    };
+                    *sc = tensor::dot(qrow, kr) * scale;
+                }
+                tensor::softmax(scores);
+                let orow = &mut o.row_mut(0)[hi * hd..(hi + 1) * hd];
+                for (sj, &w_att) in scores.iter().enumerate() {
+                    let vr = match cache.v_slice(li, hi, sj) {
+                        Some(s) => s,
+                        None => {
+                            cache.read_v(li, hi, sj, vrow);
+                            &vrow[..]
+                        }
+                    };
+                    for (ov, &vv) in orow.iter_mut().zip(vr) {
+                        *ov += w_att * vv;
                     }
-                };
-                for (ov, &vv) in orow.iter_mut().zip(vr) {
-                    *ov += w_att * vv;
                 }
             }
+            let attn_out = lin(3, &o);
+            x.add_assign(&attn_out);
+            let mut m = x.clone();
+            layer_norm_rows(&mut m, store.vec(&key.ln2_g), store.vec(&key.ln2_b));
+            let mut h1 = lin(4, &m);
+            gelu_tanh(&mut h1.data);
+            let h2 = lin(5, &h1);
+            x.add_assign(&h2);
         }
-        let attn_out = lin("wo", &o, "bo");
-        x.add_assign(&attn_out);
-        let mut m = x.clone();
-        layer_norm_rows(
-            &mut m,
-            store.vec(&format!("{}ln2_g", p)),
-            store.vec(&format!("{}ln2_b", p)),
-        );
-        let mut h1 = lin("w1", &m, "b1");
-        gelu_tanh(&mut h1.data);
-        let h2 = lin("w2", &h1, "b2");
-        x.add_assign(&h2);
+        cache.advance();
+        layer_norm_rows(&mut x, store.vec("ln_f_g"), store.vec("ln_f_b"));
+        let emb = store.get("tok_emb").as_mat();
+        let logits = x.matmul_tb(&emb);
+        logits.data
     }
-    cache.advance();
-    layer_norm_rows(&mut x, store.vec("ln_f_g"), store.vec("ln_f_b"));
-    let emb = store.get("tok_emb").as_mat();
-    let logits = x.matmul_tb(&emb);
-    logits.data
 }
 
 /// Greedy generation with the native path.
@@ -415,9 +551,10 @@ pub fn generate_greedy(
 ) -> Vec<i32> {
     let cfg = w.store().cfg;
     let mut cache = KvCache::new(cfg);
+    let mut dec = SeqDecoder::new(*w);
     let mut logits = Vec::new();
     for &t in prompt {
-        logits = decode_step(w, t, &mut cache);
+        logits = dec.step(t, &mut cache);
     }
     let mut out = Vec::with_capacity(max_new);
     for _ in 0..max_new {
@@ -426,7 +563,7 @@ pub fn generate_greedy(
         }
         let next = argmax(&logits) as i32;
         out.push(next);
-        logits = decode_step(w, next, &mut cache);
+        logits = dec.step(next, &mut cache);
     }
     out
 }
@@ -441,6 +578,439 @@ pub fn argmax(xs: &[f32]) -> usize {
         }
     }
     best
+}
+
+// ---------------------------------------------------------------------------
+// batched decode engine (the serving hot path)
+// ---------------------------------------------------------------------------
+
+/// Per-step access to a batch of per-sequence KV stores. The paged cache
+/// can hand out only one mutable slot view at a time (views alias the
+/// shared block pool), so the batched decode engine visits sequences
+/// through a closure instead of holding simultaneous `&mut` views.
+pub trait SeqAccess {
+    fn count(&self) -> usize;
+    fn with_seq(&mut self, i: usize, f: &mut dyn FnMut(&mut dyn KvSeq));
+}
+
+/// [`SeqAccess`] over independently owned caches (the contiguous
+/// backend: one [`KvCache`] per slot).
+pub struct SeqRefs<'a, 'b>(pub &'a mut [&'b mut dyn KvSeq]);
+
+impl SeqAccess for SeqRefs<'_, '_> {
+    fn count(&self) -> usize {
+        self.0.len()
+    }
+
+    fn with_seq(&mut self, i: usize, f: &mut dyn FnMut(&mut dyn KvSeq)) {
+        f(&mut *self.0[i]);
+    }
+}
+
+/// How the engine serves one linear. Built once at engine construction;
+/// the hot loop dispatches on this enum instead of string-keyed maps.
+/// Every variant borrows or repacks — the engine never clones dense
+/// weights.
+enum LinearPlan<'w> {
+    /// dense f32 borrowed straight from the FP store's tensor (also the
+    /// fallback for linears missing from a quantized model)
+    Fp(&'w Tensor),
+    /// dense f32 borrowed from the quantized store
+    DenseRef(&'w Mat),
+    /// packed LUT codes — the dequantization-free mpGEMM hot path
+    Packed(PackedLut),
+    /// packed LUT plus the CSR outlier branch (GANQ*/SqueezeLLM)
+    PackedSparse(PackedLut, &'w Csr),
+    /// unpacked-code LUT (>4-bit widths have no packed form): the same
+    /// bucket kernel as `LutLayer::lut_matmul`, so bit-identity with
+    /// the sequential path holds at every code width
+    Codes(&'w LutLayer),
+    CodesSparse(&'w LutLayer, &'w Csr),
+}
+
+impl LinearPlan<'_> {
+    fn apply(&self, x: &Mat, sc: &mut LutScratch, out: &mut Mat) {
+        match self {
+            LinearPlan::Fp(t) => {
+                tensor::matmul_tb_slice_into(x, &t.data, t.shape[0], out)
+            }
+            LinearPlan::DenseRef(w) => x.matmul_tb_into(w, out),
+            LinearPlan::Packed(pl) => pl.matmul_into(x, sc, out),
+            LinearPlan::PackedSparse(pl, sp) => {
+                pl.matmul_into(x, sc, out);
+                sp.spmm_add(x, out);
+            }
+            LinearPlan::Codes(l) => kernels::lut_gemm_codes_into(
+                &l.codes,
+                &l.codebook,
+                l.n,
+                x,
+                sc,
+                out,
+            ),
+            LinearPlan::CodesSparse(l, sp) => {
+                kernels::lut_gemm_codes_into(
+                    &l.codes,
+                    &l.codebook,
+                    l.n,
+                    x,
+                    sc,
+                    out,
+                );
+                sp.spmm_add(x, out);
+            }
+        }
+    }
+
+    /// Weight bytes this linear streams per step.
+    fn bytes_per_step(&self) -> usize {
+        match self {
+            LinearPlan::Fp(t) => t.data.len() * 4,
+            LinearPlan::DenseRef(w) => w.data.len() * 4,
+            LinearPlan::Packed(pl) => pl.bytes_per_decode(),
+            LinearPlan::PackedSparse(pl, sp) => {
+                pl.bytes_per_decode() + sp.storage_bytes()
+            }
+            // one byte per code + f32 codebook
+            LinearPlan::Codes(l) => l.m * l.n + l.m * l.k() * 4,
+            LinearPlan::CodesSparse(l, sp) => {
+                l.m * l.n + l.m * l.k() * 4 + sp.storage_bytes()
+            }
+        }
+    }
+}
+
+/// Resolved per-layer decode plan: layernorm/bias slices and linear
+/// implementations, indexed — no name lookups or `format!` per step.
+struct LayerPlan<'w> {
+    ln1_g: &'w [f32],
+    ln1_b: &'w [f32],
+    ln2_g: &'w [f32],
+    ln2_b: &'w [f32],
+    /// canonical order wq, wk, wv, wo, w1, w2
+    linears: Vec<LinearPlan<'w>>,
+    biases: Vec<&'w [f32]>,
+}
+
+/// Preallocated per-step scratch: activation/projection matrices, the
+/// K/V gather buffers, attention job rows, and the LUT kernel scratch.
+/// Reused across layers and steps — the batched hot loop performs no
+/// per-step heap allocation beyond the returned logits rows and the
+/// kernels' small per-thread bucket blocks.
+struct BatchScratch {
+    x: Mat,
+    a: Mat,
+    q: Mat,
+    k: Mat,
+    v: Mat,
+    att: Mat,
+    o: Mat,
+    h1: Mat,
+    h2: Mat,
+    logits: Mat,
+    /// gathered K/V history, (seq, head)-major, strided by the batch's
+    /// longest sequence
+    kg: Vec<f32>,
+    vg: Vec<f32>,
+    /// attention job rows: `[b*h, hd + max_rows]` = output accumulator
+    /// + scores
+    jb: Vec<f32>,
+    pos: Vec<usize>,
+    lut: LutScratch,
+}
+
+impl BatchScratch {
+    fn new() -> BatchScratch {
+        let z = || Mat::zeros(0, 0);
+        BatchScratch {
+            x: z(),
+            a: z(),
+            q: z(),
+            k: z(),
+            v: z(),
+            att: z(),
+            o: z(),
+            h1: z(),
+            h2: z(),
+            logits: z(),
+            kg: Vec::new(),
+            vg: Vec::new(),
+            jb: Vec::new(),
+            pos: Vec::new(),
+            lut: LutScratch::new(),
+        }
+    }
+}
+
+/// Batched decode engine: weights resolved, packed, and interned once,
+/// then every [`decode_step_batch`] advances all sequences through each
+/// layer together so the quantized weights stream once per token-step
+/// instead of once per sequence.
+pub struct DecodeEngine<'w> {
+    cfg: ModelConfig,
+    /// token embedding, borrowed — doubles as the tied head weight
+    /// (`Tensor::as_mat` clones per call; the engine never does)
+    tok_emb: &'w Tensor,
+    pos_emb: &'w [f32],
+    ln_f_g: &'w [f32],
+    ln_f_b: &'w [f32],
+    layers: Vec<LayerPlan<'w>>,
+    scratch: BatchScratch,
+}
+
+impl<'w> DecodeEngine<'w> {
+    pub fn new(w: &Weights<'w>) -> DecodeEngine<'w> {
+        let store = w.store();
+        let cfg = store.cfg;
+        let layers = LayerKeys::build(cfg.layers)
+            .iter()
+            .map(|key| LayerPlan {
+                ln1_g: store.vec(&key.ln1_g),
+                ln1_b: store.vec(&key.ln1_b),
+                ln2_g: store.vec(&key.ln2_g),
+                ln2_b: store.vec(&key.ln2_b),
+                linears: key
+                    .lin
+                    .iter()
+                    .map(|(wn, _)| plan_linear(w, wn))
+                    .collect(),
+                biases: key.lin.iter().map(|(_, bn)| store.vec(bn)).collect(),
+            })
+            .collect();
+        DecodeEngine {
+            cfg,
+            tok_emb: store.get("tok_emb"),
+            pos_emb: &store.get("pos_emb").data,
+            ln_f_g: store.vec("ln_f_g"),
+            ln_f_b: store.vec("ln_f_b"),
+            layers,
+            scratch: BatchScratch::new(),
+        }
+    }
+
+    pub fn cfg(&self) -> ModelConfig {
+        self.cfg
+    }
+
+    /// Weight bytes streamed per batched step (each linear exactly once,
+    /// regardless of batch size — the memory-bound quantity).
+    pub fn weight_bytes_per_step(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| l.linears.iter())
+            .map(|p| p.bytes_per_step())
+            .sum()
+    }
+}
+
+fn plan_linear<'w>(w: &Weights<'w>, name: &str) -> LinearPlan<'w> {
+    match *w {
+        Weights::Fp(s) => LinearPlan::Fp(s.get(name)),
+        Weights::Quant(q) => match q.linears.get(name) {
+            Some(LayerWeights::Dense(m)) => LinearPlan::DenseRef(m),
+            Some(LayerWeights::Lut(l)) if l.bits <= 4 => {
+                LinearPlan::Packed(PackedLut::pack(l))
+            }
+            Some(LayerWeights::Lut(l)) => LinearPlan::Codes(l),
+            Some(LayerWeights::LutSparse(l, sp)) if l.bits <= 4 => {
+                LinearPlan::PackedSparse(PackedLut::pack(l), sp)
+            }
+            Some(LayerWeights::LutSparse(l, sp)) => {
+                LinearPlan::CodesSparse(l, sp)
+            }
+            None => LinearPlan::Fp(q.base.get(name)),
+        },
+    }
+}
+
+/// One decode step advancing a whole batch of sequences through each
+/// layer together. Every linear runs as a single `[b, n]` matmul (or
+/// packed LUT-mpGEMM), attention runs one job per (sequence, head)
+/// against that sequence's own cache history, and the per-sequence op
+/// order is identical to [`decode_step_kv`] — so for dense (f32) KV
+/// stores the logits are bit-identical to the sequential path at any
+/// batch size or thread count.
+pub fn decode_step_batch(
+    engine: &mut DecodeEngine,
+    toks: &[i32],
+    seqs: &mut dyn SeqAccess,
+) -> Vec<Vec<f32>> {
+    let b = toks.len();
+    assert_eq!(seqs.count(), b, "one token per sequence");
+    if b == 0 {
+        return Vec::new();
+    }
+    let cfg = engine.cfg;
+    let (d, h, hd) = (cfg.d, cfg.heads, cfg.head_dim());
+    let scale = 1.0 / (hd as f32).sqrt();
+    let DecodeEngine {
+        tok_emb,
+        pos_emb,
+        ln_f_g,
+        ln_f_b,
+        layers,
+        scratch,
+        ..
+    } = engine;
+    let BatchScratch {
+        x,
+        a,
+        q,
+        k,
+        v,
+        att,
+        o,
+        h1,
+        h2,
+        logits,
+        kg,
+        vg,
+        jb,
+        pos,
+        lut,
+    } = scratch;
+
+    pos.clear();
+    for i in 0..b {
+        let mut p = 0usize;
+        seqs.with_seq(i, &mut |s| p = s.pos());
+        assert!(p < cfg.ctx, "context overflow");
+        pos.push(p);
+    }
+
+    // token + position embeddings
+    x.reset(b, d);
+    for (i, (&t, row)) in
+        toks.iter().zip(x.data.chunks_mut(d)).enumerate()
+    {
+        let te = &tok_emb.data[(t as usize) * d..(t as usize + 1) * d];
+        let pe = &pos_emb[pos[i] * d..(pos[i] + 1) * d];
+        for (xo, (&e1, &e2)) in row.iter_mut().zip(te.iter().zip(pe)) {
+            *xo = e1 + e2;
+        }
+    }
+
+    // gather/job strides sized to the longest sequence in *this* batch
+    // (not ctx), so short batches keep the scratch arena small and the
+    // copies cache-resident; Vec::resize retains the high-water
+    // allocation across steps
+    let max_rows = pos.iter().map(|&p| p + 1).max().expect("b > 0");
+    let gstride = max_rows * hd; // per-(seq, head) gather region
+    let jstride = hd + max_rows; // job row: out accumulator + scores
+    kg.resize(b * h * gstride, 0.0);
+    vg.resize(b * h * gstride, 0.0);
+    jb.resize(b * h * jstride, 0.0);
+
+    for (li, lp) in layers.iter().enumerate() {
+        a.copy_from(x);
+        layer_norm_rows(a, lp.ln1_g, lp.ln1_b);
+        q.reset(b, d);
+        lp.linears[0].apply(a, lut, q);
+        add_bias(q, lp.biases[0]);
+        k.reset(b, d);
+        lp.linears[1].apply(a, lut, k);
+        add_bias(k, lp.biases[1]);
+        v.reset(b, d);
+        lp.linears[2].apply(a, lut, v);
+        add_bias(v, lp.biases[2]);
+
+        // append this step's K/V rows, then gather each sequence's
+        // history (including the just-written position) so the math
+        // below can run thread-parallel over plain buffers
+        for i in 0..b {
+            let rows = pos[i] + 1;
+            let (kx, vx) = (k.row(i), v.row(i));
+            seqs.with_seq(i, &mut |s| {
+                for hi in 0..h {
+                    s.write(
+                        li,
+                        hi,
+                        &kx[hi * hd..(hi + 1) * hd],
+                        &vx[hi * hd..(hi + 1) * hd],
+                    );
+                }
+                for hi in 0..h {
+                    let g = (i * h + hi) * gstride;
+                    s.read_k_rows(li, hi, 0, rows, &mut kg[g..g + rows * hd]);
+                    s.read_v_rows(li, hi, 0, rows, &mut vg[g..g + rows * hd]);
+                }
+            });
+        }
+
+        // attention: one job per (sequence, head); each job owns a
+        // disjoint row of jb = [out accumulator | scores]
+        let att_ops =
+            pos.iter().map(|&p| (p + 1) * hd * 2).sum::<usize>() * h;
+        let threads = pool::threads_for(att_ops);
+        let qref: &Mat = q;
+        let kgr: &[f32] = kg;
+        let vgr: &[f32] = vg;
+        let posr: &[usize] = pos;
+        pool::par_rows_mut(
+            &mut jb[..b * h * jstride],
+            jstride,
+            threads,
+            |row0, chunk| {
+                for (r, jrow) in chunk.chunks_mut(jstride).enumerate() {
+                    let ji = row0 + r;
+                    let (i, hi) = (ji / h, ji % h);
+                    let rows = posr[i] + 1;
+                    let (orow, rest) = jrow.split_at_mut(hd);
+                    let scores = &mut rest[..rows];
+                    let qrow = &qref.row(i)[hi * hd..(hi + 1) * hd];
+                    let kbase = &kgr[ji * gstride..ji * gstride + rows * hd];
+                    for (sj, sc) in scores.iter_mut().enumerate() {
+                        *sc = tensor::dot(qrow, &kbase[sj * hd..(sj + 1) * hd])
+                            * scale;
+                    }
+                    tensor::softmax(scores);
+                    orow.fill(0.0);
+                    let vbase = &vgr[ji * gstride..ji * gstride + rows * hd];
+                    for (sj, &w_att) in scores.iter().enumerate() {
+                        let vr = &vbase[sj * hd..(sj + 1) * hd];
+                        for (ov, &vv) in orow.iter_mut().zip(vr) {
+                            *ov += w_att * vv;
+                        }
+                    }
+                }
+            },
+        );
+        att.reset(b, d);
+        for ji in 0..b * h {
+            let (i, hi) = (ji / h, ji % h);
+            att.row_mut(i)[hi * hd..(hi + 1) * hd]
+                .copy_from_slice(&jb[ji * jstride..ji * jstride + hd]);
+        }
+
+        o.reset(b, d);
+        lp.linears[3].apply(att, lut, o);
+        add_bias(o, lp.biases[3]);
+        x.add_assign(o);
+        a.copy_from(x);
+        layer_norm_rows(a, lp.ln2_g, lp.ln2_b);
+        h1.reset(b, cfg.ff);
+        lp.linears[4].apply(a, lut, h1);
+        add_bias(h1, lp.biases[4]);
+        gelu_tanh(&mut h1.data);
+        h2.reset(b, d);
+        lp.linears[5].apply(h1, lut, h2);
+        add_bias(h2, lp.biases[5]);
+        x.add_assign(h2);
+    }
+
+    for i in 0..b {
+        seqs.with_seq(i, &mut |s| s.advance());
+    }
+
+    layer_norm_rows(x, ln_f_g, ln_f_b);
+    // tied head straight off the borrowed embedding tensor
+    logits.reset(b, tok_emb.shape[0]);
+    tensor::matmul_tb_slice_into(x, &tok_emb.data, tok_emb.shape[0], logits);
+    logits
+        .data
+        .chunks_exact(logits.cols)
+        .map(|r| r.to_vec())
+        .collect()
 }
 
 #[cfg(test)]
@@ -522,6 +1092,89 @@ mod tests {
         let prompt: Vec<i32> = (0..120).map(|i| i % 256).collect();
         let out = generate_greedy(&w, &prompt, 50);
         assert!(out.len() <= s.cfg.ctx - prompt.len());
+    }
+
+    #[test]
+    fn batched_decode_matches_sequential_bitwise() {
+        let s = micro();
+        let w = Weights::Fp(&s);
+        // ragged warmup through the sequential path
+        let prompts: [&[i32]; 3] = [&[1, 2, 3], &[9], &[5, 6, 7, 8, 20]];
+        let mut caches: Vec<KvCache> =
+            prompts.iter().map(|_| KvCache::new(s.cfg)).collect();
+        for (p, c) in prompts.iter().zip(&mut caches) {
+            for &t in *p {
+                decode_step_kv(&w, t, c);
+            }
+        }
+        let toks = [11i32, 22, 33];
+        let mut seq_caches = caches.clone();
+        let seq_logits: Vec<Vec<f32>> = toks
+            .iter()
+            .zip(&mut seq_caches)
+            .map(|(&t, c)| decode_step_kv(&w, t, c))
+            .collect();
+
+        let mut engine = DecodeEngine::new(&w);
+        let mut refs: Vec<&mut dyn KvSeq> = caches
+            .iter_mut()
+            .map(|c| c as &mut dyn KvSeq)
+            .collect();
+        let got =
+            decode_step_batch(&mut engine, &toks, &mut SeqRefs(&mut refs));
+        assert_eq!(got, seq_logits, "batched logits must be bit-identical");
+
+        // the cache state written by the batched step must match too:
+        // one more sequential step on both sides agrees
+        for (c_b, c_s) in caches.iter_mut().zip(&mut seq_caches) {
+            let a = decode_step_kv(&w, 40, c_b);
+            let b = decode_step_kv(&w, 40, c_s);
+            assert_eq!(a, b, "cache divergence after batched step");
+        }
+    }
+
+    #[test]
+    fn batched_decode_batch_of_one_matches() {
+        let s = micro();
+        let w = Weights::Fp(&s);
+        let mut engine = DecodeEngine::new(&w);
+        let mut c_batch = KvCache::new(s.cfg);
+        let mut c_seq = KvCache::new(s.cfg);
+        for &t in &[7i32, 3, 250, 0] {
+            let seq = decode_step_kv(&w, t, &mut c_seq);
+            let mut refs: Vec<&mut dyn KvSeq> = vec![&mut c_batch];
+            let got =
+                decode_step_batch(&mut engine, &[t], &mut SeqRefs(&mut refs));
+            assert_eq!(got[0], seq);
+        }
+    }
+
+    #[test]
+    fn decode_engine_weight_bytes_accounting() {
+        let s = micro();
+        let w = Weights::Fp(&s);
+        let engine = DecodeEngine::new(&w);
+        let expect: usize = s
+            .cfg
+            .linear_shapes()
+            .iter()
+            .map(|(_, m, n)| m * n * 4)
+            .sum();
+        assert_eq!(engine.weight_bytes_per_step(), expect);
+    }
+
+    #[test]
+    fn seq_decoder_matches_one_shot_steps() {
+        let s = micro();
+        let w = Weights::Fp(&s);
+        let mut dec = SeqDecoder::new(w);
+        let mut c1 = KvCache::new(s.cfg);
+        let mut c2 = KvCache::new(s.cfg);
+        for &t in &[4i32, 99, 1, 255] {
+            let a = dec.step(t, &mut c1);
+            let b = decode_step_kv(&w, t, &mut c2);
+            assert_eq!(a, b, "hoisted-scratch decoder must be bitwise");
+        }
     }
 
     #[test]

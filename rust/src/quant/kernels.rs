@@ -1,0 +1,388 @@
+//! Batched LUT-mpGEMM kernels over **packed** code buffers — the native
+//! serving hot path.
+//!
+//! # Packed-code layout contract (shared with `python/compile/kernels/ref.py`)
+//!
+//! * **Nibble container** (`bits <= 4`): byte `j` of a row holds the codes
+//!   of columns `2j` (low nibble) and `2j+1` (high nibble); rows are
+//!   `ceil(n/2)` bytes, an odd `n` pads the final high nibble with 0.
+//!   Identical to `ref.pack_nibbles` / [`LutLayer::packed_nibbles`].
+//! * **Dense 3-bit** (`bits == 3`): 8 codes -> 3 little-endian bytes per
+//!   group, rows padded to a multiple of 8 codes (`ceil(n/8)*3` bytes).
+//!   Identical to `ref.pack3` / [`LutLayer::packed3`]. This is the layout
+//!   [`PackedLut`] uses for 3-bit weights: 3 bits/code of traffic instead
+//!   of the nibble container's 4.
+//!
+//! # Kernel structure
+//!
+//! `y[p, m] = x[p, n] @ W_hat^T` without materializing `W_hat` and without
+//! unpacking the codes to one byte each (the dequantization-free mpGEMM of
+//! the paper, Fig. 1(a) right). Per output channel `i`:
+//!
+//! 1. stream the packed code row **once**, decoding two (nibble) or eight
+//!    (3-bit) codes per load in-register;
+//! 2. scatter-accumulate the activation columns into `K = 2^bits`
+//!    per-code buckets of `p` lanes each (`buckets[c*p + pi] += x[pi, j]`)
+//!    — the batch dimension is contiguous, so each code costs one
+//!    `p`-wide vector add regardless of batch size: weight traffic is
+//!    amortized over the whole batch;
+//! 3. finish with one `K`-wide dot against the row's codebook.
+//!
+//! Output rows are register/cache-tiled: worker threads (sized to the
+//! work by [`pool::threads_for`], so micro shapes stay on the caller's
+//! thread) own disjoint `tile_m x p` tiles of `y^T`, and the `K*p` bucket
+//! block stays L1-resident. The accumulation order per output element is
+//! identical at every batch size and thread count — `j` ascending into
+//! buckets, then `s` ascending over the codebook — so batched results are
+//! bit-identical to the `p = 1` path, which the batched decode engine
+//! relies on for its sequential-equivalence guarantee.
+
+use crate::tensor::Mat;
+use crate::util::pool;
+
+use super::lut::LutLayer;
+
+/// A LUT linear in packed-code form, ready for the serving hot path:
+/// codes stay packed (nibble container or dense 3-bit) and are decoded
+/// in-register by the mpGEMM, halving (4-bit) or ~2.7x-ing (3-bit) the
+/// weight bytes streamed per token versus one-byte-per-code buffers.
+#[derive(Debug, Clone)]
+pub struct PackedLut {
+    pub m: usize,
+    pub n: usize,
+    pub bits: u8,
+    /// bytes per packed code row
+    pub row_bytes: usize,
+    /// packed codes, `m * row_bytes`
+    pub codes: Vec<u8>,
+    /// per-row codebook [m, 2^bits]
+    pub codebook: Mat,
+}
+
+impl PackedLut {
+    /// Pack a [`LutLayer`]'s codes once, ahead of serving. 3-bit layers
+    /// use the dense 3-bit layout; other widths (<= 4 bits) the nibble
+    /// container.
+    pub fn pack(l: &LutLayer) -> PackedLut {
+        assert!(
+            l.bits <= 4,
+            "packed serving supports <= 4-bit codes, got {}",
+            l.bits
+        );
+        let (codes, row_bytes) = if l.bits == 3 {
+            (l.packed3(), l.n.div_ceil(8) * 3)
+        } else {
+            (l.packed_nibbles(), l.n.div_ceil(2))
+        };
+        PackedLut {
+            m: l.m,
+            n: l.n,
+            bits: l.bits,
+            row_bytes,
+            codes,
+            codebook: l.codebook.clone(),
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        1usize << self.bits
+    }
+
+    /// Weight bytes streamed per decode step: packed codes + f32
+    /// codebooks (the memory-bound quantity of Table 6).
+    pub fn bytes_per_decode(&self) -> usize {
+        self.m * self.row_bytes + self.m * self.k() * 4
+    }
+
+    /// Allocating convenience wrapper around [`PackedLut::matmul_into`].
+    pub fn matmul(&self, x: &Mat) -> Mat {
+        let mut out = Mat::zeros(x.rows, self.m);
+        let mut sc = LutScratch::new();
+        self.matmul_into(x, &mut sc, &mut out);
+        out
+    }
+
+    /// `out[p, m] = x[p, n] @ W_hat^T` from packed codes. `out` must
+    /// already be shaped [p, m]; every element is overwritten.
+    pub fn matmul_into(&self, x: &Mat, sc: &mut LutScratch, out: &mut Mat) {
+        assert_eq!(x.cols, self.n, "activation width");
+        let n = self.n;
+        let rb = self.row_bytes;
+        let codes = &self.codes;
+        if self.bits == 3 {
+            mpgemm_driver(&self.codebook, n, x, sc, out, |i, p, xt, bk| {
+                row_buckets_pack3(&codes[i * rb..(i + 1) * rb], n, p, xt, bk);
+            });
+        } else {
+            mpgemm_driver(&self.codebook, n, x, sc, out, |i, p, xt, bk| {
+                row_buckets_nibble(&codes[i * rb..(i + 1) * rb], n, p, xt, bk);
+            });
+        }
+    }
+}
+
+/// Reusable kernel scratch: transposed activations `x^T [n, p]` and the
+/// transposed output tile `y^T [m, p]`. Owned by the decode engine's
+/// per-step arena so these buffers are allocated once; the only
+/// remaining per-call allocation is each worker thread's small `K*p`
+/// bucket block.
+#[derive(Debug, Default)]
+pub struct LutScratch {
+    xt: Vec<f32>,
+    yt: Vec<f32>,
+}
+
+impl LutScratch {
+    pub fn new() -> LutScratch {
+        LutScratch::default()
+    }
+}
+
+/// Unpacked-code variant (one byte per code) sharing the bucket kernel —
+/// the backing implementation of [`LutLayer::lut_matmul`], kept so both
+/// paths have identical accumulation order.
+pub fn lut_gemm_codes_into(
+    codes: &[u8],
+    codebook: &Mat,
+    n: usize,
+    x: &Mat,
+    sc: &mut LutScratch,
+    out: &mut Mat,
+) {
+    assert_eq!(x.cols, n, "activation width");
+    assert_eq!(codes.len(), codebook.rows * n, "code buffer shape");
+    mpgemm_driver(codebook, n, x, sc, out, |i, p, xt, bk| {
+        for (j, &c) in codes[i * n..(i + 1) * n].iter().enumerate() {
+            bucket_add(bk, c as usize, p, &xt[j * p..(j + 1) * p]);
+        }
+    });
+}
+
+/// One p-lane bucket update: `buckets[c, :] += x^T[j, :]`.
+#[inline]
+fn bucket_add(buckets: &mut [f32], c: usize, p: usize, x_col: &[f32]) {
+    let dst = &mut buckets[c * p..c * p + p];
+    for (d, &xv) in dst.iter_mut().zip(x_col) {
+        *d += xv;
+    }
+}
+
+/// Nibble-container code row -> buckets, codes decoded in-register two
+/// per byte, `j` ascending (the bit-identity contract).
+fn row_buckets_nibble(
+    crow: &[u8],
+    n: usize,
+    p: usize,
+    xt: &[f32],
+    buckets: &mut [f32],
+) {
+    for (j2, &byte) in crow.iter().enumerate() {
+        let j = 2 * j2;
+        bucket_add(buckets, (byte & 0x0F) as usize, p, &xt[j * p..(j + 1) * p]);
+        if j + 1 < n {
+            bucket_add(
+                buckets,
+                (byte >> 4) as usize,
+                p,
+                &xt[(j + 1) * p..(j + 2) * p],
+            );
+        }
+    }
+}
+
+/// Dense 3-bit code row -> buckets, eight codes per 3-byte group.
+fn row_buckets_pack3(
+    crow: &[u8],
+    n: usize,
+    p: usize,
+    xt: &[f32],
+    buckets: &mut [f32],
+) {
+    for g in 0..n.div_ceil(8) {
+        let v = crow[3 * g] as u32
+            | (crow[3 * g + 1] as u32) << 8
+            | (crow[3 * g + 2] as u32) << 16;
+        let in_group = (n - g * 8).min(8);
+        for b in 0..in_group {
+            let j = g * 8 + b;
+            bucket_add(
+                buckets,
+                ((v >> (3 * b)) & 0x7) as usize,
+                p,
+                &xt[j * p..(j + 1) * p],
+            );
+        }
+    }
+}
+
+/// Shared mpGEMM driver: transpose activations once, tile output rows
+/// across work-sized threads, accumulate `K*p` buckets per row, finish
+/// with the codebook dot, transpose back.
+fn mpgemm_driver<F>(
+    codebook: &Mat,
+    n: usize,
+    x: &Mat,
+    sc: &mut LutScratch,
+    out: &mut Mat,
+    fill_row: F,
+) where
+    F: Fn(usize, usize, &[f32], &mut [f32]) + Sync,
+{
+    let p = x.rows;
+    let m = codebook.rows;
+    let k = codebook.cols;
+    assert_eq!((out.rows, out.cols), (p, m), "output shape");
+    if p == 0 || m == 0 {
+        return;
+    }
+
+    // x^T so each code's batch lanes are contiguous for the bucket add
+    sc.xt.clear();
+    sc.xt.resize(n * p, 0.0);
+    for (pi, row) in x.data.chunks_exact(n).enumerate() {
+        for (j, &v) in row.iter().enumerate() {
+            sc.xt[j * p + pi] = v;
+        }
+    }
+    sc.yt.clear();
+    sc.yt.resize(m * p, 0.0);
+
+    let threads = pool::threads_for(m * p * (n + k));
+    let xt = &sc.xt[..];
+    pool::par_rows_mut(&mut sc.yt, p, threads, |row0, chunk| {
+        let mut buckets = vec![0.0f32; k * p];
+        for (ri, yrow) in chunk.chunks_mut(p).enumerate() {
+            let i = row0 + ri;
+            buckets.fill(0.0);
+            fill_row(i, p, xt, &mut buckets);
+            let t = codebook.row(i);
+            for (pi, y) in yrow.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                for (s, &ts) in t.iter().enumerate() {
+                    acc += buckets[s * p + pi] * ts;
+                }
+                *y = acc;
+            }
+        }
+    });
+
+    for (i, yrow) in sc.yt.chunks_exact(p).enumerate() {
+        for (pi, &v) in yrow.iter().enumerate() {
+            out.data[pi * m + i] = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::lut::lut_from_parts;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_lut(rng: &mut Rng, m: usize, n: usize, bits: u8) -> LutLayer {
+        let k = 1usize << bits;
+        let codes = (0..m * n).map(|_| rng.below(k as u64) as u8).collect();
+        let codebook = Mat::from_vec(m, k, rng.normal_vec_f32(m * k));
+        lut_from_parts(m, n, bits, codes, codebook)
+    }
+
+    #[test]
+    fn packed_matmul_matches_dequant_matmul() {
+        prop::check("packed_mpgemm", 71, 14, |rng, case| {
+            let m = 1 + rng.below(40) as usize;
+            // force odd n on half the cases (padded-tail decode)
+            let mut n = 1 + rng.below(40) as usize;
+            if case % 2 == 0 && n % 2 == 0 {
+                n += 1;
+            }
+            let p = 1 + rng.below(6) as usize;
+            let bits = if rng.below(2) == 0 { 3 } else { 4 };
+            let l = random_lut(rng, m, n, bits);
+            let pl = PackedLut::pack(&l);
+            let x = Mat::from_vec(p, n, rng.normal_vec_f32(p * n));
+            let direct = x.matmul_tb(&l.dequant());
+            let packed = pl.matmul(&x);
+            crate::prop_assert!(
+                prop::all_close(&direct.data, &packed.data, 1e-3, 1e-3),
+                "maxdiff {}",
+                prop::max_abs_diff(&direct.data, &packed.data)
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_matmul_bitwise_matches_lut_matmul() {
+        // both paths share the bucket kernel's accumulation order, so
+        // they must agree exactly — the batched decode engine's
+        // equivalence with the sequential path rests on this
+        prop::check("packed_vs_unpacked", 72, 10, |rng, _| {
+            let m = 1 + rng.below(32) as usize;
+            let n = 1 + rng.below(32) as usize;
+            let p = 1 + rng.below(5) as usize;
+            let bits = if rng.below(2) == 0 { 3 } else { 4 };
+            let l = random_lut(rng, m, n, bits);
+            let pl = PackedLut::pack(&l);
+            let x = Mat::from_vec(p, n, rng.normal_vec_f32(p * n));
+            let a = l.lut_matmul(&x);
+            let b = pl.matmul(&x);
+            crate::prop_assert!(a.data == b.data, "packed != unpacked");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_rows_match_single_row_calls_bitwise() {
+        // bit-identity across batch sizes: row pi of the batched result
+        // equals the p=1 result on that activation row alone
+        let mut rng = Rng::new(73);
+        let l = random_lut(&mut rng, 24, 30, 4);
+        let pl = PackedLut::pack(&l);
+        let p = 5;
+        let x = Mat::from_vec(p, 30, rng.normal_vec_f32(p * 30));
+        let batched = pl.matmul(&x);
+        for pi in 0..p {
+            let xr = Mat::from_vec(1, 30, x.row(pi).to_vec());
+            let single = pl.matmul(&xr);
+            assert_eq!(batched.row(pi), single.row(0), "row {}", pi);
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_shapes_is_clean() {
+        let mut rng = Rng::new(74);
+        let mut sc = LutScratch::new();
+        for (m, n, p) in [(8usize, 12usize, 3usize), (16, 6, 1), (4, 40, 6)] {
+            let l = random_lut(&mut rng, m, n, 4);
+            let pl = PackedLut::pack(&l);
+            let x = Mat::from_vec(p, n, rng.normal_vec_f32(p * n));
+            let mut out = Mat::zeros(p, m);
+            pl.matmul_into(&x, &mut sc, &mut out);
+            let fresh = pl.matmul(&x);
+            assert_eq!(out.data, fresh.data);
+        }
+    }
+
+    #[test]
+    fn packed_bytes_match_lut_accounting() {
+        let mut rng = Rng::new(75);
+        for bits in [3u8, 4] {
+            let l = random_lut(&mut rng, 64, 96, bits);
+            let pl = PackedLut::pack(&l);
+            assert_eq!(pl.bytes_per_decode(), l.bytes_per_decode());
+        }
+    }
+
+    #[test]
+    fn three_bit_rows_use_three_bits_per_code() {
+        let mut rng = Rng::new(76);
+        let l3 = random_lut(&mut rng, 4, 64, 3);
+        let l4 = random_lut(&mut rng, 4, 64, 4);
+        let p3 = PackedLut::pack(&l3);
+        let p4 = PackedLut::pack(&l4);
+        assert_eq!(p3.row_bytes, 64 / 8 * 3);
+        assert_eq!(p4.row_bytes, 32);
+        assert!(p3.codes.len() < p4.codes.len());
+    }
+}

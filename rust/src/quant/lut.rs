@@ -5,7 +5,6 @@
 //! fallback forward and the kernel benches.
 
 use crate::tensor::Mat;
-use crate::util::pool;
 
 use super::Storage;
 
@@ -125,46 +124,22 @@ impl LutLayer {
 
     /// Native LUT-based mpGEMM: y[p, m] = x[p, n] @ W_hat^T without ever
     /// materializing W_hat — mirrors the dequantization-free inference
-    /// kernel (Fig. 1(a) right). Threaded across output channels.
+    /// kernel (Fig. 1(a) right). Backed by the shared bucket kernel in
+    /// [`crate::quant::kernels`]: one code scan per output channel fills
+    /// all `p` batch lanes' buckets at once (instead of a bucket
+    /// clear-and-rescan per output element), then one K-wide codebook dot
+    /// per element. Bit-identical to the packed-code serving kernel.
     pub fn lut_matmul(&self, x: &Mat) -> Mat {
-        assert_eq!(x.cols, self.n);
-        let p = x.rows;
-        let mut out = Mat::zeros(p, self.m);
-        let k = self.k();
-        let threads = pool::default_threads();
-        let codes = &self.codes;
-        let cb = &self.codebook;
-        let n = self.n;
-        let m = self.m;
-        // parallelize over m by transposing the loop: compute y^T tiles
-        let mut yt = vec![0.0f32; m * p];
-        pool::par_rows_mut(&mut yt, p, threads, |row0, chunk| {
-            let mut partial = vec![0.0f32; k];
-            for (ri, yrow) in chunk.chunks_mut(p).enumerate() {
-                let i = row0 + ri;
-                let t = cb.row(i);
-                let crow = &codes[i * n..(i + 1) * n];
-                for (pi, y) in yrow.iter_mut().enumerate() {
-                    // LUT trick: accumulate x into per-code buckets, then
-                    // one K-wide dot with the codebook (dequant-free).
-                    partial.iter_mut().for_each(|v| *v = 0.0);
-                    let xr = x.row(pi);
-                    for (j, &c) in crow.iter().enumerate() {
-                        partial[c as usize] += xr[j];
-                    }
-                    let mut acc = 0.0f32;
-                    for s in 0..k {
-                        acc += partial[s] * t[s];
-                    }
-                    *y = acc;
-                }
-            }
-        });
-        for i in 0..m {
-            for pi in 0..p {
-                out[(pi, i)] = yt[i * p + pi];
-            }
-        }
+        let mut out = Mat::zeros(x.rows, self.m);
+        let mut sc = super::kernels::LutScratch::new();
+        super::kernels::lut_gemm_codes_into(
+            &self.codes,
+            &self.codebook,
+            self.n,
+            x,
+            &mut sc,
+            &mut out,
+        );
         out
     }
 

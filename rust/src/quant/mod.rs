@@ -13,6 +13,7 @@
 pub mod awq;
 pub mod ganq;
 pub mod gptq;
+pub mod kernels;
 pub mod lut;
 pub mod omniq;
 pub mod outlier;
@@ -22,6 +23,7 @@ pub mod stats;
 
 use crate::sparse::Csr;
 use crate::tensor::{linalg, Mat};
+pub use kernels::{LutScratch, PackedLut};
 pub use lut::LutLayer;
 
 /// Storage accounting in bits (paper Table 1 rows).

@@ -56,7 +56,7 @@ impl Mat {
         assert_eq!(self.cols, b.rows, "matmul shape mismatch");
         let (m, k, n) = (self.rows, self.cols, b.cols);
         let mut out = Mat::zeros(m, n);
-        let threads = pool::default_threads();
+        let threads = pool::threads_for(m * k * n);
         let a = &self.data;
         let bd = &b.data;
         pool::par_rows_mut(&mut out.data, n, threads, |row0, chunk| {
@@ -79,23 +79,36 @@ impl Mat {
 
     /// C = A @ B^T — the layout used by linear layers (W stored [out, in]).
     pub fn matmul_tb(&self, b: &Mat) -> Mat {
-        assert_eq!(self.cols, b.cols, "matmul_tb shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, b.rows);
-        let mut out = Mat::zeros(m, n);
-        let threads = pool::default_threads();
-        let a = &self.data;
-        let bd = &b.data;
-        pool::par_rows_mut(&mut out.data, n, threads, |row0, chunk| {
-            for (ri, orow) in chunk.chunks_mut(n).enumerate() {
-                let i = row0 + ri;
-                let arow = &a[i * k..(i + 1) * k];
-                for (j, o) in orow.iter_mut().enumerate() {
-                    let brow = &bd[j * k..(j + 1) * k];
-                    *o = dot(arow, brow);
-                }
-            }
-        });
+        let mut out = Mat::zeros(self.rows, b.rows);
+        self.matmul_tb_into(b, &mut out);
         out
+    }
+
+    /// C = A @ B^T written into a caller-owned matrix (the decode scratch
+    /// arena reuses `out` across steps). `out` must be [self.rows,
+    /// b.rows]; every element is overwritten. Row-disjoint parallel
+    /// writes keep this bit-identical to [`matmul_tb`] at any thread
+    /// count.
+    pub fn matmul_tb_into(&self, b: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, b.cols, "matmul_tb shape mismatch");
+        matmul_tb_slice_into(self, &b.data, b.rows, out);
+    }
+
+    /// Resize in place to [rows, cols] without preserving contents (the
+    /// scratch-arena reshape: no reallocation once capacity is reached).
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Copy `src` into self, adopting its shape (arena-friendly clone).
+    pub fn copy_from(&mut self, src: &Mat) {
+        self.rows = src.rows;
+        self.cols = src.cols;
+        self.data.clear();
+        self.data.extend_from_slice(&src.data);
     }
 
     /// H = X @ X^T accumulated in f64 (the calibration Gram matrix —
@@ -165,6 +178,29 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
     fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
         &mut self.data[i * self.cols + j]
     }
+}
+
+/// C = A @ B^T with B supplied as a raw row-major `[n, k]` slice
+/// (`k = A.cols`) — lets the decode engine borrow FP weights straight
+/// from tensor storage without cloning them into a `Mat`. Same per-row
+/// dot and row-disjoint parallel writes as [`Mat::matmul_tb`], so the
+/// result is bit-identical at any thread count.
+pub fn matmul_tb_slice_into(a: &Mat, bd: &[f32], n: usize, out: &mut Mat) {
+    let (m, k) = (a.rows, a.cols);
+    assert_eq!(bd.len(), n * k, "weight slice shape");
+    assert_eq!((out.rows, out.cols), (m, n), "matmul_tb_into out shape");
+    let threads = pool::threads_for(m * k * n);
+    let ad = &a.data;
+    pool::par_rows_mut(&mut out.data, n, threads, |row0, chunk| {
+        for (ri, orow) in chunk.chunks_mut(n).enumerate() {
+            let i = row0 + ri;
+            let arow = &ad[i * k..(i + 1) * k];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let brow = &bd[j * k..(j + 1) * k];
+                *o = dot(arow, brow);
+            }
+        }
+    });
 }
 
 #[inline]
@@ -282,6 +318,25 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    #[test]
+    fn matmul_tb_into_reuses_scratch_bitwise() {
+        let mut rng = Rng::new(9);
+        let mut out = Mat::zeros(1, 1);
+        for _ in 0..4 {
+            let (m, k, n) = (
+                1 + rng.below(12) as usize,
+                1 + rng.below(12) as usize,
+                1 + rng.below(12) as usize,
+            );
+            let a = randm(&mut rng, m, k);
+            let b = randm(&mut rng, n, k);
+            out.reset(m, n);
+            a.matmul_tb_into(&b, &mut out);
+            let fresh = a.matmul_tb(&b);
+            assert_eq!(out.data, fresh.data, "into-variant must be bitwise");
+        }
     }
 
     #[test]

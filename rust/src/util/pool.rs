@@ -12,6 +12,19 @@ pub fn default_threads() -> usize {
         .min(16)
 }
 
+/// Minimum arithmetic ops a worker thread must amortize before spawning
+/// it pays for itself (scoped-thread spawn + join is ~tens of µs; below
+/// this the serial loop wins).
+pub const MIN_OPS_PER_THREAD: usize = 128 * 1024;
+
+/// Thread count sized to the work: one thread per [`MIN_OPS_PER_THREAD`]
+/// arithmetic ops, at least 1, at most [`default_threads`]. The decode
+/// hot path calls this so micro-model shapes stay on the caller's thread
+/// instead of paying spawn latency per matmul.
+pub fn threads_for(ops: usize) -> usize {
+    (ops / MIN_OPS_PER_THREAD).clamp(1, default_threads())
+}
+
 /// Run `f(chunk_index, start, end)` over `n` items split into contiguous
 /// chunks across `threads` scoped threads. `f` must be Sync; chunks are
 /// disjoint so callers typically write into distinct slices via raw
@@ -104,6 +117,14 @@ mod tests {
         for r in 0..12 {
             assert!(data[r * 5..(r + 1) * 5].iter().all(|&v| v == r as u32));
         }
+    }
+
+    #[test]
+    fn threads_for_scales_with_work() {
+        assert_eq!(threads_for(0), 1);
+        assert_eq!(threads_for(MIN_OPS_PER_THREAD - 1), 1);
+        assert!(threads_for(MIN_OPS_PER_THREAD * 2) >= 2);
+        assert!(threads_for(usize::MAX / 2) <= default_threads());
     }
 
     #[test]

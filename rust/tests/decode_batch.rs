@@ -1,0 +1,282 @@
+//! Batched decode engine integration tests: `decode_step_batch` pinned
+//! against per-sequence `decode_step_kv` across mixed batch sizes,
+//! ragged positions, dense/LUT/LutSparse linears, and contiguous/paged
+//! (F32 + LUT) KV stores. Dense stores must agree **bitwise**; LUT block
+//! stores within 1e-3.
+
+use std::collections::BTreeMap;
+
+use ganq::kv::{F32Blocks, KvLayout, LutBlocks, PagedKv};
+use ganq::model::forward::{
+    decode_step_batch, decode_step_kv, DecodeEngine, KvCache, KvSeq,
+    SeqRefs, Weights,
+};
+use ganq::model::{LayerWeights, ModelConfig, QuantizedModel, WeightStore};
+use ganq::quant::ganq::fit_codebook_identity;
+use ganq::quant::lut::{lut_from_parts, LutLayer};
+use ganq::sparse::Csr;
+use ganq::tensor::Mat;
+use ganq::util::prop;
+use ganq::util::rng::Rng;
+
+fn micro_store(seed: u64) -> WeightStore {
+    let cfg = ModelConfig::builtin("opt-micro").unwrap();
+    WeightStore::random("t", cfg, seed)
+}
+
+/// Per-row non-uniform LUT fit of a dense weight (identity Hessian).
+fn lut_layer_from(w: &Mat, bits: u8) -> LutLayer {
+    let k = 1usize << bits;
+    let mut codes = vec![0u8; w.rows * w.cols];
+    let mut cb = Mat::zeros(w.rows, k);
+    for i in 0..w.rows {
+        let (c, t) = fit_codebook_identity(w.row(i), bits, 2);
+        codes[i * w.cols..(i + 1) * w.cols].copy_from_slice(&c);
+        cb.row_mut(i).copy_from_slice(&t);
+    }
+    lut_from_parts(w.rows, w.cols, bits, codes, cb)
+}
+
+/// A quantized model cycling through every linear representation the
+/// engine dispatches on: Dense, 4-bit LUT, 3-bit LUT, LUT+sparse — plus
+/// one linear left unquantized (the base-store fallback).
+fn mixed_quant(store: &WeightStore, seed: u64) -> QuantizedModel {
+    let mut rng = Rng::new(seed);
+    let mut linears = BTreeMap::new();
+    for (idx, (name, _m, _n)) in
+        store.cfg.linear_shapes().into_iter().enumerate()
+    {
+        if idx == 5 {
+            continue; // exercise the missing-linear fallback
+        }
+        let w = store.mat(&name);
+        let lw = match idx % 4 {
+            0 => LayerWeights::Dense(w),
+            1 => LayerWeights::Lut(lut_layer_from(&w, 4)),
+            2 => LayerWeights::Lut(lut_layer_from(&w, 3)),
+            _ => {
+                let lut = lut_layer_from(&w, 4);
+                let mut sp = Mat::zeros(w.rows, w.cols);
+                for _ in 0..8 {
+                    let i = rng.below(w.rows as u64) as usize;
+                    let j = rng.below(w.cols as u64) as usize;
+                    sp[(i, j)] = rng.normal() as f32 * 0.1;
+                }
+                LayerWeights::LutSparse(lut, Csr::from_dense(&sp))
+            }
+        };
+        linears.insert(name, lw);
+    }
+    QuantizedModel {
+        base: store.clone(),
+        method: "mixed-test".into(),
+        bits: 4,
+        linears,
+        weight_bits: 0,
+    }
+}
+
+/// Drive `steps` batched decode steps over contiguous caches and check
+/// each against per-sequence sequential decode on cloned caches.
+fn check_contiguous(w: &Weights, caches: &mut [KvCache], rng: &mut Rng) {
+    let mut engine = DecodeEngine::new(w);
+    for _ in 0..3 {
+        let toks: Vec<i32> =
+            caches.iter().map(|_| rng.below(256) as i32).collect();
+        let mut seq_caches: Vec<KvCache> = caches.to_vec();
+        let expect: Vec<Vec<f32>> = toks
+            .iter()
+            .zip(&mut seq_caches)
+            .map(|(&t, c)| decode_step_kv(w, t, c))
+            .collect();
+        let mut refs: Vec<&mut dyn KvSeq> = caches
+            .iter_mut()
+            .map(|c| c as &mut dyn KvSeq)
+            .collect();
+        let got =
+            decode_step_batch(&mut engine, &toks, &mut SeqRefs(&mut refs));
+        assert_eq!(got, expect, "batched != sequential (dense store)");
+        for (c, s) in caches.iter_mut().zip(seq_caches) {
+            *c = s; // keep both paths on the sequential-written state
+        }
+    }
+}
+
+#[test]
+fn batched_matches_sequential_fp_ragged_batches() {
+    let store = micro_store(81);
+    let w = Weights::Fp(&store);
+    let mut rng = Rng::new(811);
+    for b in [1usize, 2, 4, 5] {
+        let mut caches = vec![KvCache::new(store.cfg); b];
+        // ragged warmup: every sequence at a different position
+        for (i, c) in caches.iter_mut().enumerate() {
+            for _ in 0..=(3 * i) % 7 {
+                decode_step_kv(&w, rng.below(256) as i32, c);
+            }
+        }
+        check_contiguous(&w, &mut caches, &mut rng);
+    }
+}
+
+#[test]
+fn batched_matches_sequential_mixed_quant_bitwise() {
+    // dense KV store + quantized weights (packed LUT kernels, sparse
+    // branch, dense fallback): still bit-identical to the sequential
+    // path — the packed and unpacked kernels share accumulation order
+    let store = micro_store(82);
+    let qm = mixed_quant(&store, 821);
+    let w = Weights::Quant(&qm);
+    let mut rng = Rng::new(822);
+    for b in [1usize, 3, 4] {
+        let mut caches = vec![KvCache::new(store.cfg); b];
+        for (i, c) in caches.iter_mut().enumerate() {
+            for _ in 0..(5 * i + 1) % 6 {
+                decode_step_kv(&w, rng.below(256) as i32, c);
+            }
+        }
+        check_contiguous(&w, &mut caches, &mut rng);
+    }
+}
+
+#[test]
+fn batched_membership_changes_match_sequential() {
+    // continuous-batching shape: sequences join and leave the batch
+    // between steps; per-sequence results must not depend on who else
+    // is in the step
+    let store = micro_store(83);
+    let qm = mixed_quant(&store, 831);
+    let w = Weights::Quant(&qm);
+    let mut engine = DecodeEngine::new(&w);
+    let mut rng = Rng::new(832);
+    let mut batched: Vec<KvCache> = vec![KvCache::new(store.cfg); 4];
+    let mut sequential = batched.clone();
+    let subsets: [&[usize]; 4] = [&[0, 1, 2, 3], &[0, 2], &[1], &[1, 3]];
+    for subset in subsets {
+        let toks: Vec<i32> =
+            subset.iter().map(|_| rng.below(256) as i32).collect();
+        let expect: Vec<Vec<f32>> = subset
+            .iter()
+            .zip(&toks)
+            .map(|(&i, &t)| decode_step_kv(&w, t, &mut sequential[i]))
+            .collect();
+        let mut refs: Vec<&mut dyn KvSeq> = Vec::new();
+        let mut rest: &mut [KvCache] = &mut batched;
+        let mut base = 0usize;
+        for &i in subset {
+            let (_, tail) = rest.split_at_mut(i - base);
+            let (c, tail) = tail.split_first_mut().unwrap();
+            refs.push(c);
+            rest = tail;
+            base = i + 1;
+        }
+        let got =
+            decode_step_batch(&mut engine, &toks, &mut SeqRefs(&mut refs));
+        assert_eq!(got, expect, "subset {:?}", subset);
+    }
+}
+
+#[test]
+fn batched_paged_f32_matches_sequential_contiguous_bitwise() {
+    let store = micro_store(84);
+    let cfg = store.cfg;
+    let w = Weights::Fp(&store);
+    let prompts: [&[i32]; 3] = [&[1, 2, 3, 4, 5], &[9, 8], &[50]];
+    let new_tokens = 6usize;
+
+    // sequential contiguous reference
+    let mut reference: Vec<Vec<Vec<f32>>> = Vec::new();
+    for p in &prompts {
+        let mut c = KvCache::new(cfg);
+        let mut logits = Vec::new();
+        for &t in *p {
+            logits.push(decode_step_kv(&w, t, &mut c));
+        }
+        for s in 0..new_tokens {
+            logits.push(decode_step_kv(&w, (60 + s) as i32, &mut c));
+        }
+        reference.push(logits);
+    }
+
+    // batched over a paged F32 store: prompts fed raggedly (sequence i
+    // joins the batch only once earlier ones are past their prompts)
+    let layout = KvLayout::new(&cfg, 4);
+    let mut kv =
+        PagedKv::new(Box::new(F32Blocks::new(layout, 64)), 64, 3);
+    for (slot, p) in prompts.iter().enumerate() {
+        assert_eq!(kv.admit(slot, p, new_tokens), Some(0));
+    }
+    let mut engine = DecodeEngine::new(&w);
+    let mut fed = [0usize; 3]; // tokens fed so far per slot
+    let total: Vec<usize> =
+        prompts.iter().map(|p| p.len() + new_tokens).collect();
+    while (0..3).any(|i| fed[i] < total[i]) {
+        let slots: Vec<usize> =
+            (0..3).filter(|&i| fed[i] < total[i]).collect();
+        let active: Vec<bool> =
+            (0..3).map(|i| slots.contains(&i)).collect();
+        assert!(kv.prepare_step(&active).is_empty(), "no preemption");
+        let toks: Vec<i32> = slots
+            .iter()
+            .map(|&i| {
+                let t = if fed[i] < prompts[i].len() {
+                    prompts[i][fed[i]]
+                } else {
+                    (60 + (fed[i] - prompts[i].len())) as i32
+                };
+                kv.push_token(i, t);
+                t
+            })
+            .collect();
+        let mut seqs = kv.seqs(slots.clone());
+        let got = decode_step_batch(&mut engine, &toks, &mut seqs);
+        for (row, &slot) in got.iter().zip(&slots) {
+            assert_eq!(
+                row, &reference[slot][fed[slot]],
+                "slot {} step {}",
+                slot, fed[slot]
+            );
+            fed[slot] += 1;
+        }
+    }
+}
+
+#[test]
+fn batched_paged_lut_matches_sequential_paged_lut() {
+    // quantized KV blocks: batched and sequential read the same
+    // dequantized rows, so they stay within 1e-3 of each other
+    let store = micro_store(85);
+    let cfg = store.cfg;
+    let w = Weights::Fp(&store);
+    let seq: Vec<i32> = (0..18).map(|i| (i * 11 + 2) % 256).collect();
+    let layout = KvLayout::new(&cfg, 4);
+
+    let mut kv_s =
+        PagedKv::new(Box::new(LutBlocks::new(layout, 32)), 32, 1);
+    kv_s.admit(0, &seq, 1).unwrap();
+    let mut sequential = Vec::new();
+    for &t in &seq {
+        assert!(kv_s.prepare_step(&[true]).is_empty());
+        kv_s.push_token(0, t);
+        let mut view = kv_s.slot_view(0);
+        sequential.push(decode_step_kv(&w, t, &mut view));
+    }
+    assert!(kv_s.stats().sealed_blocks > 0, "blocks must have sealed");
+
+    let mut kv_b =
+        PagedKv::new(Box::new(LutBlocks::new(layout, 32)), 32, 1);
+    kv_b.admit(0, &seq, 1).unwrap();
+    let mut engine = DecodeEngine::new(&w);
+    for (si, &t) in seq.iter().enumerate() {
+        assert!(kv_b.prepare_step(&[true]).is_empty());
+        kv_b.push_token(0, t);
+        let mut seqs = kv_b.seqs(vec![0]);
+        let got = decode_step_batch(&mut engine, &[t], &mut seqs);
+        assert!(
+            prop::all_close(&got[0], &sequential[si], 1e-3, 1e-3),
+            "step {}: maxdiff {}",
+            si,
+            prop::max_abs_diff(&got[0], &sequential[si])
+        );
+    }
+}
