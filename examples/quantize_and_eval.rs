@@ -42,12 +42,13 @@ fn main() {
 
     // FP16 baseline row
     {
-        let eng = PplEngine::hlo(&rt, &model, &store, None)
-            .unwrap_or(PplEngine::Native(Weights::Fp(&store)));
+        let mut eng = PplEngine::hlo(&rt, &model, &store, None)
+            .unwrap_or_else(|_| PplEngine::native(Weights::Fp(&store)));
         let mut row = vec!["full (fp)".to_string()];
         for f in flavors {
             let fl = corpus::flavor(f).unwrap();
-            let ppl = perplexity(&eng, fl, Split::Valid, batches).unwrap();
+            let ppl =
+                perplexity(&mut eng, fl, Split::Valid, batches).unwrap();
             row.push(fmt_f(ppl, 3));
         }
         row.push("-".into());
@@ -66,12 +67,13 @@ fn main() {
         )
         .expect("quantize");
         let dt = t0.elapsed().as_secs_f64();
-        let eng = PplEngine::hlo(&rt, &model, &store, Some(&qm))
-            .unwrap_or(PplEngine::Native(Weights::Quant(&qm)));
+        let mut eng = PplEngine::hlo(&rt, &model, &store, Some(&qm))
+            .unwrap_or_else(|_| PplEngine::native(Weights::Quant(&qm)));
         let mut row = vec![method.to_string()];
         for f in flavors {
             let fl = corpus::flavor(f).unwrap();
-            let ppl = perplexity(&eng, fl, Split::Valid, batches).unwrap();
+            let ppl =
+                perplexity(&mut eng, fl, Split::Valid, batches).unwrap();
             row.push(fmt_f(ppl, 3));
         }
         row.push(format!("{:.1}s", dt));

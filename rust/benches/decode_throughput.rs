@@ -1,21 +1,18 @@
-//! Decode-throughput bench: batched `decode_step_batch` vs per-sequence
-//! `decode_step_kv` at batch 1/4/16 for fp32 / 4-bit LUT / 3-bit LUT on
-//! the micro model, plus the packed-code kernel vs the unpacked LUT
+//! Decode-throughput bench: one batched `Engine::step` vs per-sequence
+//! single-item steps at batch 1/4/16 for fp32 / 4-bit LUT / 3-bit LUT
+//! on the micro model, plus the packed-code kernel vs the unpacked LUT
 //! matmul at batch 1. Emits `BENCH_decode.json` so the decode perf
-//! trajectory is tracked from this PR on.
+//! trajectory is tracked.
 //!
-//! Asserts the PR acceptance criteria: batch=16 batched decode on the
-//! LUT-quantized model is >= 2x the tokens/sec of 16 sequential
-//! `decode_step_kv` calls, and the packed kernel is no slower than the
-//! unpacked path at batch 1. `GANQ_SMOKE=1` shrinks the run for CI and
-//! relaxes the throughput bar to >= 1x (shared runners are noisy).
+//! Asserts the acceptance criteria: batch=16 batched decode on the
+//! LUT-quantized model is >= 2x the tokens/sec of 16 per-sequence
+//! steps, and the packed kernel is no slower than the unpacked path at
+//! batch 1. `GANQ_SMOKE=1` shrinks the run for CI and relaxes the
+//! throughput bar to >= 1x (shared runners are noisy).
 
 use std::time::Instant;
 
-use ganq::model::forward::{
-    decode_step_batch, decode_step_kv, DecodeEngine, KvCache, KvSeq,
-    SeqRefs, Weights,
-};
+use ganq::model::forward::{Engine, KvCache, KvSeq, SeqRefs, Weights};
 use ganq::model::{LayerWeights, ModelConfig, QuantizedModel, WeightStore};
 use ganq::quant::ganq::fit_codebook_identity;
 use ganq::quant::lut::lut_from_parts;
@@ -66,7 +63,7 @@ fn lut_model(store: &WeightStore, bits: u8) -> QuantizedModel {
 fn run_batched(w: &Weights, b: usize, steps: usize) -> f64 {
     let cfg = w.store().cfg;
     let mut caches = vec![KvCache::new(cfg); b];
-    let mut engine = DecodeEngine::new(w);
+    let mut engine = Engine::new(w);
     let mut step = |s: usize, caches: &mut [KvCache]| {
         let toks: Vec<i32> =
             (0..b).map(|i| ((11 * i + s) % 256) as i32).collect();
@@ -74,7 +71,7 @@ fn run_batched(w: &Weights, b: usize, steps: usize) -> f64 {
             .iter_mut()
             .map(|c| c as &mut dyn KvSeq)
             .collect();
-        decode_step_batch(&mut engine, &toks, &mut SeqRefs(&mut refs));
+        engine.decode_batch(&toks, &mut SeqRefs(&mut refs));
     };
     for s in 0..PREFILL {
         step(s, &mut caches);
@@ -87,19 +84,25 @@ fn run_batched(w: &Weights, b: usize, steps: usize) -> f64 {
 }
 
 /// Wall seconds for the same token schedule fed as `b` independent
-/// sequential `decode_step_kv` calls per step (the pre-batching path).
+/// single-sequence engine steps per step (the pre-batching path: each
+/// sequence streams the full weight set on its own).
 fn run_sequential(w: &Weights, b: usize, steps: usize) -> f64 {
     let cfg = w.store().cfg;
     let mut caches = vec![KvCache::new(cfg); b];
+    let mut engine = Engine::new(w);
+    let mut one = |tok: i32, c: &mut KvCache| {
+        let mut refs: Vec<&mut dyn KvSeq> = vec![c];
+        engine.decode_batch(&[tok], &mut SeqRefs(&mut refs));
+    };
     for s in 0..PREFILL {
         for (i, c) in caches.iter_mut().enumerate() {
-            decode_step_kv(w, ((11 * i + s) % 256) as i32, c);
+            one(((11 * i + s) % 256) as i32, c);
         }
     }
     let t0 = Instant::now();
     for s in 0..steps {
         for (i, c) in caches.iter_mut().enumerate() {
-            decode_step_kv(w, ((11 * i + PREFILL + s) % 256) as i32, c);
+            one(((11 * i + PREFILL + s) % 256) as i32, c);
         }
     }
     t0.elapsed().as_secs_f64()
@@ -133,7 +136,7 @@ fn main() {
     );
 
     let mut t = Table::new(
-        "batched decode engine vs sequential decode_step_kv",
+        "batched engine step vs per-sequence steps",
         &["fmt", "batch", "batched tok/s", "sequential tok/s", "speedup"],
     );
     let mut rows = Vec::new();

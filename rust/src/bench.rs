@@ -73,16 +73,16 @@ impl BenchCtx {
         batches: usize,
     ) -> f64 {
         if let Some(rt) = &self.rt {
-            if let Ok(eng) = PplEngine::hlo(rt, model, store, qm) {
-                return perplexity(&eng, flavor, Split::Valid, batches)
+            if let Ok(mut eng) = PplEngine::hlo(rt, model, store, qm) {
+                return perplexity(&mut eng, flavor, Split::Valid, batches)
                     .expect("ppl");
             }
         }
-        let eng = match qm {
-            Some(q) => PplEngine::Native(Weights::Quant(q)),
-            None => PplEngine::Native(Weights::Fp(store)),
+        let mut eng = match qm {
+            Some(q) => PplEngine::native(Weights::Quant(q)),
+            None => PplEngine::native(Weights::Fp(store)),
         };
-        perplexity(&eng, flavor, Split::Valid, batches).expect("ppl")
+        perplexity(&mut eng, flavor, Split::Valid, batches).expect("ppl")
     }
 }
 

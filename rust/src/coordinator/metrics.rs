@@ -27,10 +27,27 @@ impl RequestMetrics {
     }
 }
 
+/// `q`-th percentile (0..=1) by nearest-rank (`ceil(q*n)`-th order
+/// statistic) over an unsorted sample — never below the true quantile,
+/// so tail numbers are not flattered.
+fn percentile_ms(mut vals: Vec<f64>, q: f64) -> f64 {
+    if vals.is_empty() {
+        return f64::NAN;
+    }
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (vals.len() as f64 * q).ceil() as usize;
+    vals[rank.clamp(1, vals.len()) - 1]
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct ServeMetrics {
     pub requests: Vec<RequestMetrics>,
     pub decode_steps: usize,
+    /// prompt positions fed through steps (prefill work; decode
+    /// positions are not counted). Divided by steps this shows how many
+    /// prompt tokens ride along per weight-stream — the chunked-prefill
+    /// win.
+    pub prompt_positions: usize,
     pub wall_s: f64,
     /// weight bytes streamed per decode step (the memory-bound quantity
     /// the paper's LUT kernels optimize)
@@ -61,13 +78,16 @@ impl ServeMetrics {
         }
     }
 
-    pub fn mean_ttft_ms(&self) -> f64 {
-        let vals: Vec<f64> = self
-            .requests
+    fn ttfts_ms(&self) -> Vec<f64> {
+        self.requests
             .iter()
             .filter_map(|r| r.ttft())
             .map(|d| d.as_secs_f64() * 1e3)
-            .collect();
+            .collect()
+    }
+
+    pub fn mean_ttft_ms(&self) -> f64 {
+        let vals = self.ttfts_ms();
         if vals.is_empty() {
             f64::NAN
         } else {
@@ -75,18 +95,35 @@ impl ServeMetrics {
         }
     }
 
+    /// Median time-to-first-token across requests.
+    pub fn ttft_p50_ms(&self) -> f64 {
+        percentile_ms(self.ttfts_ms(), 0.50)
+    }
+
+    /// Tail time-to-first-token across requests.
+    pub fn ttft_p95_ms(&self) -> f64 {
+        percentile_ms(self.ttfts_ms(), 0.95)
+    }
+
     pub fn p95_latency_ms(&self) -> f64 {
-        let mut vals: Vec<f64> = self
-            .requests
-            .iter()
-            .filter_map(|r| r.total())
-            .map(|d| d.as_secs_f64() * 1e3)
-            .collect();
-        if vals.is_empty() {
-            return f64::NAN;
+        percentile_ms(
+            self.requests
+                .iter()
+                .filter_map(|r| r.total())
+                .map(|d| d.as_secs_f64() * 1e3)
+                .collect(),
+            0.95,
+        )
+    }
+
+    /// Average prompt positions advanced per step (1.0 with per-token
+    /// prefill; larger when chunks amortize the weight stream).
+    pub fn prompt_positions_per_step(&self) -> f64 {
+        if self.decode_steps > 0 {
+            self.prompt_positions as f64 / self.decode_steps as f64
+        } else {
+            0.0
         }
-        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        vals[((vals.len() - 1) as f64 * 0.95) as usize]
     }
 
     /// Total weight traffic over the run (bytes) — scales with steps.
@@ -96,13 +133,15 @@ impl ServeMetrics {
 
     pub fn summary(&self) -> String {
         let mut s = format!(
-            "{} reqs, {} tokens in {:.2}s ({:.1} tok/s), ttft {:.1}ms, p95 {:.1}ms, {:.1} MiB weights/step",
+            "{} reqs, {} tokens in {:.2}s ({:.1} tok/s), ttft p50 {:.1}ms p95 {:.1}ms, e2e p95 {:.1}ms, {:.1} prompt-pos/step, {:.1} MiB weights/step",
             self.requests.len(),
             self.total_generated(),
             self.wall_s,
             self.tokens_per_s(),
-            self.mean_ttft_ms(),
+            self.ttft_p50_ms(),
+            self.ttft_p95_ms(),
             self.p95_latency_ms(),
+            self.prompt_positions_per_step(),
             self.weight_bytes_per_step as f64 / (1 << 20) as f64,
         );
         if let Some(kv) = &self.kv {
@@ -158,8 +197,24 @@ mod tests {
         assert_eq!(m.total_generated(), 30);
         assert!((m.tokens_per_s() - 300.0).abs() < 1e-9);
         assert!((m.mean_ttft_ms() - 7.0).abs() < 1e-9);
+        // nearest-rank percentiles over {5, 9}: p50 = ceil(1.0)th = 5,
+        // p95 = ceil(1.9)th = 9 (the tail is never flattered)
+        assert!((m.ttft_p50_ms() - 5.0).abs() < 1e-9);
+        assert!((m.ttft_p95_ms() - 9.0).abs() < 1e-9);
         assert_eq!(m.total_weight_bytes(), 30_000);
         assert!(m.summary().contains("2 reqs"));
+        assert!(m.summary().contains("ttft p50"), "{}", m.summary());
+    }
+
+    #[test]
+    fn prompt_positions_per_step_surfaces() {
+        let m = ServeMetrics {
+            decode_steps: 10,
+            prompt_positions: 64,
+            ..Default::default()
+        };
+        assert!((m.prompt_positions_per_step() - 6.4).abs() < 1e-9);
+        assert!(m.summary().contains("prompt-pos/step"), "{}", m.summary());
     }
 
     #[test]

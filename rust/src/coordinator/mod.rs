@@ -3,10 +3,13 @@
 //! * `pipeline` — the offline layer-wise PTQ path: calibration capture,
 //!   per-layer GANQ/baseline quantization (native or through the AOT HLO
 //!   solver graph), servable model assembly.
-//! * `serve` — the online path: token-level continuous batching over the
-//!   AOT decode graphs (PJRT), the native fallback with contiguous KV
-//!   caches, or the paged-KV native backend (block tables + prefix
-//!   sharing + preemption; see `kv`).
+//! * `serve` — the online path: continuous batching over the AOT decode
+//!   graphs (PJRT), the native engine with contiguous KV caches, or the
+//!   paged-KV native backend (block tables + prefix sharing +
+//!   preemption; see `kv`). The scheduler plans mixed steps of prefill
+//!   chunks and decode positions under a per-step prefill budget
+//!   (`ServeOptions::prefill_chunk`); backends map them onto
+//!   `forward::Engine::step`.
 //! * `metrics` — request latency + throughput + weight-traffic accounting
 //!   (Table 6's CUDA-time/speedup/peak-memory analogues), plus block-pool
 //!   occupancy / prefix-hit / preemption counters for paged serving.
@@ -21,6 +24,7 @@ pub mod server;
 pub use metrics::ServeMetrics;
 pub use pipeline::{calibrate, quantize_model, Calibration, QuantEngine};
 pub use serve::{
-    serve, DecodeBackend, HloBackend, KvStoreKind, NativeBackend,
-    PagedNativeBackend, Request, Response, WeightFmt,
+    serve, serve_with, DecodeBackend, HloBackend, KvStoreKind,
+    NativeBackend, PagedNativeBackend, Request, Response, ServeOptions,
+    SlotWork, WeightFmt, DEFAULT_PREFILL_CHUNK,
 };

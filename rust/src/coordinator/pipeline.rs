@@ -6,8 +6,8 @@
 
 use std::collections::BTreeMap;
 
-use crate::model::forward::Weights;
-use crate::model::{forward, LayerWeights, QuantizedModel, WeightStore};
+use crate::model::forward::{Engine, Weights};
+use crate::model::{LayerWeights, QuantizedModel, WeightStore};
 use crate::quant::{self, Quantizer};
 use crate::runtime::{ganq_hlo, Runtime};
 use crate::tensor::Mat;
@@ -19,12 +19,16 @@ pub struct Calibration {
 }
 
 /// Run the FP model over calibration sequences, accumulating per-linear
-/// input Grams. `n_seqs` sequences of `seq` tokens (paper: 32-128 x 2048).
+/// input Grams. `n_seqs` sequences of `seq` tokens (paper: 32-128 x
+/// 2048). Capture runs as full-length prefill chunks on one
+/// [`Engine`] with the observation hook — the same code path serving
+/// and evaluation use.
 pub fn calibrate(store: &WeightStore, n_seqs: usize, seq: usize) -> Calibration {
     let seqs = crate::data::calibration_sequences(seq, n_seqs);
     let mut grams: BTreeMap<String, Mat> = BTreeMap::new();
     let mut n_tokens = 0usize;
     let w = Weights::Fp(store);
+    let mut engine = Engine::new(&w);
     for chunk in seqs.chunks(4) {
         let tokens: Vec<Vec<i32>> = chunk
             .iter()
@@ -39,7 +43,7 @@ pub fn calibrate(store: &WeightStore, n_seqs: usize, seq: usize) -> Calibration 
                 .and_modify(|h| h.add_assign(&ht))
                 .or_insert(ht);
         };
-        forward::forward_full(&w, &tokens, Some(&mut obs));
+        engine.prefill_full(&tokens, Some(&mut obs));
     }
     Calibration { grams, n_tokens }
 }
@@ -139,10 +143,12 @@ pub fn quantize_model_sequential(
     };
     for li in 0..store.cfg.layers {
         let prefix = format!("l{}.", li);
-        // capture Grams for this block under the quantized prefix
+        // capture Grams for this block under the quantized prefix (the
+        // engine is rebuilt per block because the weights just changed)
         let mut grams: BTreeMap<String, Mat> = BTreeMap::new();
         {
             let w = Weights::Quant(&qm);
+            let mut engine = Engine::new(&w);
             for batch in &tokens {
                 let mut obs = |name: &str, x: &Mat| {
                     if name.starts_with(&prefix) {
@@ -153,7 +159,7 @@ pub fn quantize_model_sequential(
                             .or_insert(ht);
                     }
                 };
-                forward::forward_full(&w, batch, Some(&mut obs));
+                engine.prefill_full(batch, Some(&mut obs));
             }
         }
         for (name, _m, _n) in store.cfg.linear_shapes() {

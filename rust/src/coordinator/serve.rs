@@ -1,26 +1,26 @@
 //! Serving: token-level continuous batching (Orca-style) over a decode
-//! backend. Three backends implement the same scheduler contract:
+//! backend. The scheduler is a thin admission/planning policy: every
+//! step it hands the backend a list of [`SlotWork`] items — one per
+//! active slot, each either a **prefill chunk** (a run of prompt
+//! positions, bounded by the per-step prefill budget so decode latency
+//! stays bounded while prompts drain) or a **single decode position**.
+//! Backends map that plan onto `forward::Engine::step` (native paths)
+//! or the AOT decode graphs.
+//!
+//! Three backends implement the same contract:
 //!
 //! * [`HloBackend`] — the AOT decode graph via PJRT (`decode_{fmt}_{model}
 //!   _b{B}`), per-slot positions as a vector input, KV caches threaded
 //!   through the graph outputs; weights optionally staged as device-
-//!   resident buffers (the §Perf optimization).
-//! * [`NativeBackend`] — the pure-Rust batched decode engine
-//!   (`forward::decode_step_batch`) with one contiguous [`KvCache`] per
-//!   slot: every step advances the whole active set through each layer
-//!   together, so quantized weights stream once per token-step instead
-//!   of once per slot (works without artifacts; also the reference for
-//!   cross-checking the HLO path — bit-identical to per-sequence
-//!   `decode_step_kv`).
-//! * [`PagedNativeBackend`] — the same batched engine over the paged KV
-//!   cache (`kv::PagedKv`): block tables, prefix sharing, and dynamic
-//!   capacity.
-//!
-//! The scheduler admits requests into free slots, feeds one token per slot
-//! per step (prompt tokens first — "prefill as decode" keeps the graph set
-//! small; exact-size prefill graphs exist for the common 16/32-token
-//! prompts and are used by the latency bench), and collects per-request
-//! latency metrics.
+//!   resident buffers (the §Perf optimization). The graphs advance one
+//!   position per slot, so `max_chunk() == 1` (prompts feed per-token).
+//! * [`NativeBackend`] — the pure-Rust engine with one contiguous
+//!   [`KvCache`] per slot: every step advances the whole active set
+//!   through each layer together, so quantized weights stream once per
+//!   step regardless of how many prompt positions ride along.
+//! * [`PagedNativeBackend`] — the same engine over the paged KV cache
+//!   (`kv::PagedKv`): block tables, prefix sharing, and dynamic
+//!   capacity; prefill chunks append whole block runs at a time.
 //!
 //! ## Admission / preemption contract (paged backends)
 //!
@@ -31,13 +31,14 @@
 //! scheduler skips feeding those tokens (`k` is always less than the
 //! prompt length so the final prompt token still produces first-token
 //! logits). Before every step the scheduler calls
-//! [`DecodeBackend::pre_step`]; a backend that ran out of blocks preempts
-//! its youngest-admitted slots there, and the scheduler requeues the
-//! victims at the front of the queue with their generated tokens folded
-//! into the replay prompt (recompute-style preemption — with greedy
-//! decoding the final output is unchanged). Finished slots are returned
-//! with [`DecodeBackend::release_slot`]; their shared blocks stay cached
-//! for future prefix hits. A request that can never fit in the pool
+//! [`DecodeBackend::pre_step`] with the per-slot position counts it
+//! plans to feed; a backend that ran out of blocks preempts its
+//! youngest-admitted slots there, and the scheduler requeues the victims
+//! at the front of the queue with their generated tokens folded into the
+//! replay prompt (recompute-style preemption — with greedy decoding the
+//! final output is unchanged). Finished slots are returned with
+//! [`DecodeBackend::release_slot`]; their shared blocks stay cached for
+//! future prefix hits. A request that can never fit in the pool
 //! (admission keeps refusing with an idle backend, or every admit is
 //! immediately preempted) is rejected rather than wedging the batch: it
 //! completes with whatever it generated so far (usually nothing) and is
@@ -49,7 +50,8 @@ use crate::kv::{
     F32Blocks, KvBlockStore, KvLayout, KvPoolStats, LutBlocks, PagedKv,
 };
 use crate::model::forward::{
-    self, DecodeEngine, KvCache, KvSeq, SeqRefs, Weights,
+    self, Engine, KvCache, KvSeq, LogitsMode, SeqRefs, StepItem, StepPlan,
+    Weights,
 };
 use crate::model::{LayerWeights, ModelConfig, QuantizedModel, WeightStore};
 use crate::runtime::{HostTensor, Runtime};
@@ -69,15 +71,30 @@ pub struct Response {
     pub tokens: Vec<i32>,
 }
 
+/// One slot's work for a step: a run of tokens to feed, in ascending
+/// slot order. `tokens.len() == 1` is a decode position; longer runs are
+/// prefill chunks. `want_logits` is set when the run's last position
+/// must produce logits (the final prompt token, or any decode).
+#[derive(Debug, Clone)]
+pub struct SlotWork {
+    pub slot: usize,
+    pub tokens: Vec<i32>,
+    pub want_logits: bool,
+}
+
 pub trait DecodeBackend {
     fn slots(&self) -> usize;
     fn cfg(&self) -> ModelConfig;
-    /// Advance every active slot by one token; returns logits per slot.
-    fn step(
-        &mut self,
-        tok: &[i32],
-        active: &[bool],
-    ) -> Result<Vec<Vec<f32>>, String>;
+    /// Most prompt positions one slot can feed in a single step. The
+    /// engine-backed natives take whole chunks; the fixed decode graphs
+    /// advance one position per slot.
+    fn max_chunk(&self) -> usize {
+        1
+    }
+    /// Advance the slots in `work` (one entry per active slot, ascending
+    /// slot order); returns one logits row per work item (empty when
+    /// `want_logits` was false).
+    fn step(&mut self, work: &[SlotWork]) -> Result<Vec<Vec<f32>>, String>;
     fn reset_slot(&mut self, slot: usize);
     fn slot_pos(&self, slot: usize) -> usize;
     fn weight_bytes_per_step(&self) -> usize;
@@ -99,11 +116,12 @@ pub trait DecodeBackend {
         Some(0)
     }
 
-    /// Called with the active mask before every step. Returns the slots
-    /// the backend preempted to reclaim KV memory (their state is gone);
-    /// the scheduler requeues those requests. Default: none.
-    fn pre_step(&mut self, active: &[bool]) -> Vec<usize> {
-        let _ = active;
+    /// Called before every step with the positions the scheduler plans
+    /// to append per slot (`0` = idle this step). Returns the slots the
+    /// backend preempted to reclaim KV memory (their state is gone); the
+    /// scheduler requeues those requests. Default: none.
+    fn pre_step(&mut self, need: &[usize]) -> Vec<usize> {
+        let _ = need;
         Vec::new()
     }
 
@@ -122,6 +140,24 @@ pub trait DecodeBackend {
 // ---------------------------------------------------------------------------
 // scheduler
 // ---------------------------------------------------------------------------
+
+/// Default per-step prefill budget (prompt positions across all slots).
+pub const DEFAULT_PREFILL_CHUNK: usize = 128;
+
+/// Scheduling knobs (`--prefill-chunk` on the CLI).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOptions {
+    /// Prompt positions the scheduler may feed per step, across slots.
+    /// Every prompting slot still gets at least one position so it
+    /// cannot starve; `1` reproduces the historical per-token prefill.
+    pub prefill_chunk: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions { prefill_chunk: DEFAULT_PREFILL_CHUNK }
+    }
+}
 
 struct SlotState {
     req: Request,
@@ -162,13 +198,24 @@ fn reject(
     all_metrics.push(m);
 }
 
-/// Serve a batch of requests to completion with continuous batching.
+/// Serve a batch of requests to completion with continuous batching and
+/// the default prefill budget.
 pub fn serve(
     backend: &mut dyn DecodeBackend,
     requests: Vec<Request>,
 ) -> Result<(Vec<Response>, ServeMetrics), String> {
+    serve_with(backend, requests, ServeOptions::default())
+}
+
+/// Serve a batch of requests to completion with continuous batching.
+pub fn serve_with(
+    backend: &mut dyn DecodeBackend,
+    requests: Vec<Request>,
+    opts: ServeOptions,
+) -> Result<(Vec<Response>, ServeMetrics), String> {
     let nslots = backend.slots();
     let ctx = backend.cfg().ctx;
+    let max_chunk = backend.max_chunk().max(1);
     let t_start = Instant::now();
     let total_reqs = requests.len();
     let mut queue: std::collections::VecDeque<Queued> = requests
@@ -187,6 +234,7 @@ pub fn serve(
     let mut responses = Vec::new();
     let mut all_metrics = Vec::new();
     let mut steps = 0usize;
+    let mut prompt_positions = 0usize;
     let mut preemptions = 0usize;
     let mut rejected = 0usize;
     let mut peak_concurrency = 0usize;
@@ -254,25 +302,29 @@ pub fn serve(
             continue;
         }
 
-        // build step inputs
-        let mut tok = vec![0i32; nslots];
-        let mut active = vec![false; nslots];
+        // plan the step: positions to append per slot. Prompting slots
+        // take a chunk of up to max_chunk positions from the shared
+        // prefill budget (never less than one — progress is guaranteed);
+        // decoding slots always take their single position.
+        let mut need = vec![0usize; nslots];
+        let mut budget = opts.prefill_chunk;
         for (si, slot) in slots.iter().enumerate() {
-            if let Some(st) = slot {
-                active[si] = true;
-                tok[si] = if st.prompt_idx < st.prompt.len() {
-                    st.prompt[st.prompt_idx]
-                } else {
-                    *st.generated.last().expect("generated nonempty")
-                };
+            let Some(st) = slot else { continue };
+            if st.prompt_idx < st.prompt.len() {
+                let remaining = st.prompt.len() - st.prompt_idx;
+                let take = remaining.min(max_chunk).min(budget.max(1));
+                budget = budget.saturating_sub(take);
+                need[si] = take;
+            } else {
+                need[si] = 1;
             }
         }
 
         // let the backend reclaim KV memory; requeue its victims with
         // their generated tokens folded into the replay prompt
-        for vi in backend.pre_step(&active) {
+        for vi in backend.pre_step(&need) {
             let st = slots[vi].take().expect("victim slot was active");
-            active[vi] = false;
+            need[vi] = 0;
             preemptions += 1;
             let mut gen_prefix = st.gen_prefix;
             gen_prefix.extend_from_slice(&st.generated);
@@ -284,7 +336,7 @@ pub fn serve(
                 metrics: Some(m),
             });
         }
-        if !active.iter().any(|&a| a) {
+        if need.iter().all(|&n| n == 0) {
             // every admitted slot was immediately preempted: if this
             // persists, the front request (the requeued victim) cannot
             // fit in the pool at all — reject it and move on
@@ -300,23 +352,46 @@ pub fn serve(
         }
         stalls = 0;
 
-        let logits = backend.step(&tok, &active)?;
-        steps += 1;
-        peak_concurrency = peak_concurrency
-            .max(active.iter().filter(|&&a| a).count());
-
-        // consume outputs
-        for (si, slot) in slots.iter_mut().enumerate() {
-            if !active[si] {
+        // build the work list (ascending slot order)
+        let mut work: Vec<SlotWork> = Vec::new();
+        for (si, slot) in slots.iter().enumerate() {
+            if need[si] == 0 {
                 continue;
             }
-            let finished = if let Some(st) = slot.as_mut() {
+            let st = slot.as_ref().expect("need only set for occupied slots");
+            if st.prompt_idx < st.prompt.len() {
+                let take = need[si];
+                let tokens =
+                    st.prompt[st.prompt_idx..st.prompt_idx + take].to_vec();
+                let want = st.prompt_idx + take >= st.prompt.len();
+                prompt_positions += take;
+                work.push(SlotWork { slot: si, tokens, want_logits: want });
+            } else {
+                let t = *st.generated.last().expect("generated nonempty");
+                work.push(SlotWork {
+                    slot: si,
+                    tokens: vec![t],
+                    want_logits: true,
+                });
+            }
+        }
+
+        let logits = backend.step(&work)?;
+        debug_assert_eq!(logits.len(), work.len());
+        steps += 1;
+        peak_concurrency = peak_concurrency.max(work.len());
+
+        // consume outputs
+        for (wi, wk) in work.iter().enumerate() {
+            let si = wk.slot;
+            let finished = {
+                let st = slots[si].as_mut().expect("worked slot occupied");
                 if st.prompt_idx < st.prompt.len() {
-                    st.prompt_idx += 1;
+                    st.prompt_idx += wk.tokens.len();
                 }
-                if st.prompt_idx >= st.prompt.len() {
+                if wk.want_logits {
                     // this step's logits yield the next generated token
-                    let next = forward::argmax(&logits[si]) as i32;
+                    let next = forward::argmax(&logits[wi]) as i32;
                     st.generated.push(next);
                     st.metrics.generated_tokens =
                         st.gen_prefix.len() + st.generated.len();
@@ -326,11 +401,9 @@ pub fn serve(
                 }
                 st.gen_prefix.len() + st.generated.len() >= st.req.max_new
                     || backend.slot_pos(si) + 1 >= ctx
-            } else {
-                false
             };
             if finished {
-                let st = slot.take().expect("finished slot");
+                let st = slots[si].take().expect("finished slot");
                 backend.release_slot(si);
                 let mut m = st.metrics;
                 m.finished = Some(Instant::now());
@@ -345,6 +418,7 @@ pub fn serve(
     let metrics = ServeMetrics {
         requests: all_metrics,
         decode_steps: steps,
+        prompt_positions,
         wall_s: t_start.elapsed().as_secs_f64(),
         weight_bytes_per_step: backend.weight_bytes_per_step(),
         kv_bytes_per_step: backend.kv_bytes_per_step(),
@@ -357,12 +431,36 @@ pub fn serve(
     Ok((responses, metrics))
 }
 
+/// Map a slot-ordered work list onto engine step items (`seq` = index
+/// within the work list) — shared by both native backends.
+fn plan_from_work(work: &[SlotWork]) -> StepPlan {
+    debug_assert!(
+        work.windows(2).all(|w| w[0].slot < w[1].slot),
+        "work must be in ascending slot order"
+    );
+    StepPlan {
+        items: work
+            .iter()
+            .enumerate()
+            .map(|(i, wk)| StepItem {
+                seq: i,
+                tokens: wk.tokens.clone(),
+                logits: if wk.want_logits {
+                    LogitsMode::Last
+                } else {
+                    LogitsMode::None
+                },
+            })
+            .collect(),
+    }
+}
+
 // ---------------------------------------------------------------------------
 // native backend
 // ---------------------------------------------------------------------------
 
 pub struct NativeBackend<'a> {
-    engine: DecodeEngine<'a>,
+    engine: Engine<'a>,
     caches: Vec<KvCache>,
 }
 
@@ -370,26 +468,10 @@ impl<'a> NativeBackend<'a> {
     pub fn new(w: Weights<'a>, slots: usize) -> NativeBackend<'a> {
         let cfg = w.store().cfg;
         NativeBackend {
-            engine: DecodeEngine::new(&w),
+            engine: Engine::new(&w),
             caches: (0..slots).map(|_| KvCache::new(cfg)).collect(),
         }
     }
-}
-
-/// Scatter the batched engine's per-active-sequence logits rows back to
-/// slot-indexed rows (the scheduler never reads inactive rows).
-fn scatter_logits(
-    logits: Vec<Vec<f32>>,
-    active: &[bool],
-) -> Vec<Vec<f32>> {
-    let mut out = vec![Vec::new(); active.len()];
-    let mut rows = logits.into_iter();
-    for (si, o) in out.iter_mut().enumerate() {
-        if active[si] {
-            *o = rows.next().expect("one logits row per active slot");
-        }
-    }
-    out
 }
 
 impl<'a> DecodeBackend for NativeBackend<'a> {
@@ -401,27 +483,24 @@ impl<'a> DecodeBackend for NativeBackend<'a> {
         self.engine.cfg()
     }
 
-    fn step(
-        &mut self,
-        tok: &[i32],
-        active: &[bool],
-    ) -> Result<Vec<Vec<f32>>, String> {
-        // one batched step over the whole active set: each linear's
-        // weights stream once per token-step instead of once per slot
-        let mut toks = Vec::with_capacity(tok.len());
-        let mut refs: Vec<&mut dyn KvSeq> = Vec::with_capacity(tok.len());
-        for (si, cache) in self.caches.iter_mut().enumerate() {
-            if active[si] {
-                toks.push(tok[si]);
-                refs.push(cache);
-            }
-        }
-        let logits = forward::decode_step_batch(
-            &mut self.engine,
-            &toks,
-            &mut SeqRefs(&mut refs),
-        );
-        Ok(scatter_logits(logits, active))
+    fn max_chunk(&self) -> usize {
+        usize::MAX
+    }
+
+    fn step(&mut self, work: &[SlotWork]) -> Result<Vec<Vec<f32>>, String> {
+        // one engine step over the whole active set: each linear's
+        // weights stream once regardless of slots or chunk lengths
+        let plan = plan_from_work(work);
+        let wanted: Vec<usize> = work.iter().map(|wk| wk.slot).collect();
+        let mut refs: Vec<&mut dyn KvSeq> = self
+            .caches
+            .iter_mut()
+            .enumerate()
+            .filter(|(si, _)| wanted.contains(si))
+            .map(|(_, c)| c as &mut dyn KvSeq)
+            .collect();
+        let outs = self.engine.step(&plan, &mut SeqRefs(&mut refs));
+        Ok(outs.into_iter().map(|m| m.data).collect())
     }
 
     fn reset_slot(&mut self, slot: usize) {
@@ -459,11 +538,11 @@ pub enum KvStoreKind {
     Lut4,
 }
 
-/// Native forward path over the paged KV cache: dynamic admission
-/// (capacity is the block pool, not the slot count), prefix sharing,
-/// CoW, LRU prefix caching, and youngest-first preemption.
+/// Native engine over the paged KV cache: dynamic admission (capacity is
+/// the block pool, not the slot count), prefix sharing, CoW, LRU prefix
+/// caching, and youngest-first preemption.
 pub struct PagedNativeBackend<'a> {
-    engine: DecodeEngine<'a>,
+    engine: Engine<'a>,
     kv: PagedKv,
 }
 
@@ -486,7 +565,7 @@ impl<'a> PagedNativeBackend<'a> {
             }
         };
         PagedNativeBackend {
-            engine: DecodeEngine::new(&w),
+            engine: Engine::new(&w),
             kv: PagedKv::new(store, num_blocks, slots),
         }
     }
@@ -523,26 +602,21 @@ impl<'a> DecodeBackend for PagedNativeBackend<'a> {
         self.engine.cfg()
     }
 
-    fn step(
-        &mut self,
-        tok: &[i32],
-        active: &[bool],
-    ) -> Result<Vec<Vec<f32>>, String> {
-        // batched step over the admitted set; slot views are handed to
-        // the engine one at a time (they alias the shared block pool)
-        let mut toks = Vec::with_capacity(tok.len());
-        let mut slots = Vec::with_capacity(tok.len());
-        for si in 0..tok.len() {
-            if active[si] {
-                self.kv.push_token(si, tok[si]);
-                toks.push(tok[si]);
-                slots.push(si);
-            }
+    fn max_chunk(&self) -> usize {
+        usize::MAX
+    }
+
+    fn step(&mut self, work: &[SlotWork]) -> Result<Vec<Vec<f32>>, String> {
+        // one engine step over the admitted set; slot views are handed
+        // to the engine one at a time (they alias the shared block pool)
+        for wk in work {
+            self.kv.push_tokens(wk.slot, &wk.tokens);
         }
+        let plan = plan_from_work(work);
+        let slots: Vec<usize> = work.iter().map(|wk| wk.slot).collect();
         let mut seqs = self.kv.seqs(slots);
-        let logits =
-            forward::decode_step_batch(&mut self.engine, &toks, &mut seqs);
-        Ok(scatter_logits(logits, active))
+        let outs = self.engine.step(&plan, &mut seqs);
+        Ok(outs.into_iter().map(|m| m.data).collect())
     }
 
     fn reset_slot(&mut self, slot: usize) {
@@ -574,8 +648,8 @@ impl<'a> DecodeBackend for PagedNativeBackend<'a> {
         self.kv.admit(slot, prompt, max_new)
     }
 
-    fn pre_step(&mut self, active: &[bool]) -> Vec<usize> {
-        self.kv.prepare_step(active)
+    fn pre_step(&mut self, need: &[usize]) -> Vec<usize> {
+        self.kv.prepare_step_n(need)
     }
 
     fn release_slot(&mut self, slot: usize) {
@@ -791,14 +865,20 @@ impl<'a> DecodeBackend for HloBackend<'a> {
         self.cfg
     }
 
-    fn step(
-        &mut self,
-        tok: &[i32],
-        active: &[bool],
-    ) -> Result<Vec<Vec<f32>>, String> {
-        assert_eq!(tok.len(), self.b);
+    fn step(&mut self, work: &[SlotWork]) -> Result<Vec<Vec<f32>>, String> {
         // inactive slots write to the scratch position ctx-1 (overwritten
         // before any real read — see module docs)
+        let mut tok = vec![0i32; self.b];
+        let mut active = vec![false; self.b];
+        for wk in work {
+            if wk.tokens.len() != 1 {
+                return Err(
+                    "decode graphs advance one position per slot".into()
+                );
+            }
+            tok[wk.slot] = wk.tokens[0];
+            active[wk.slot] = true;
+        }
         let pos: Vec<i32> = (0..self.b)
             .map(|i| {
                 if active[i] {
@@ -809,7 +889,7 @@ impl<'a> DecodeBackend for HloBackend<'a> {
             })
             .collect();
         let head = [
-            HostTensor::I32(vec![self.b], tok.to_vec()),
+            HostTensor::I32(vec![self.b], tok),
             HostTensor::I32(vec![self.b], pos),
             self.kcache.clone(),
             self.vcache.clone(),
@@ -829,9 +909,6 @@ impl<'a> DecodeBackend for HloBackend<'a> {
         }
         let logits_flat = out[0].as_f32()?;
         let vocab = self.cfg.vocab;
-        let logits: Vec<Vec<f32>> = (0..self.b)
-            .map(|i| logits_flat[i * vocab..(i + 1) * vocab].to_vec())
-            .collect();
         self.kcache = out[1].clone();
         self.vcache = out[2].clone();
         for i in 0..self.b {
@@ -839,7 +916,17 @@ impl<'a> DecodeBackend for HloBackend<'a> {
                 self.pos[i] += 1;
             }
         }
-        Ok(logits)
+        Ok(work
+            .iter()
+            .map(|wk| {
+                if wk.want_logits {
+                    logits_flat[wk.slot * vocab..(wk.slot + 1) * vocab]
+                        .to_vec()
+                } else {
+                    Vec::new()
+                }
+            })
+            .collect())
     }
 
     fn reset_slot(&mut self, slot: usize) {
@@ -894,6 +981,7 @@ mod tests {
         assert_eq!(metrics.total_generated(), 13);
         assert!(metrics.decode_steps > 0);
         assert!(metrics.weight_bytes_per_step > 0);
+        assert!(metrics.prompt_positions >= 6, "prompts fed through steps");
     }
 
     #[test]
@@ -913,6 +1001,79 @@ mod tests {
                 .tokens;
             assert_eq!(got, &expect, "req {}", r.id);
         }
+    }
+
+    #[test]
+    fn chunked_prefill_serving_matches_per_token() {
+        // the same workload served with per-token prefill (chunk=1),
+        // modest chunks, and the default budget must produce identical
+        // greedy outputs on dense KV — chunking changes wall clock, not
+        // math
+        let cfg = ModelConfig::builtin("opt-micro").unwrap();
+        let store = WeightStore::random("t", cfg, 37);
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| Request {
+                id: i,
+                prompt: (0..40 + i as i32 * 7)
+                    .map(|j| (j * 13 + i as i32) % 256)
+                    .collect(),
+                max_new: 5,
+            })
+            .collect();
+        let serve_chunk = |chunk: usize| {
+            let w = Weights::Fp(&store);
+            let mut be = NativeBackend::new(w, 2);
+            serve_with(
+                &mut be,
+                reqs.clone(),
+                ServeOptions { prefill_chunk: chunk },
+            )
+            .unwrap()
+        };
+        let (resp_1, m_1) = serve_chunk(1);
+        let (resp_16, m_16) = serve_chunk(16);
+        let (resp_def, _) = serve_chunk(DEFAULT_PREFILL_CHUNK);
+        for (a, b) in resp_1.iter().zip(&resp_16) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "req {}", a.id);
+        }
+        for (a, b) in resp_1.iter().zip(&resp_def) {
+            assert_eq!(a.tokens, b.tokens, "req {}", a.id);
+        }
+        // chunked prefill takes strictly fewer steps for the same work
+        assert!(m_16.decode_steps < m_1.decode_steps);
+        assert_eq!(m_16.prompt_positions, m_1.prompt_positions);
+        assert!(m_16.prompt_positions_per_step() > 1.0);
+    }
+
+    #[test]
+    fn chunked_prefill_paged_matches_contiguous() {
+        let cfg = ModelConfig::builtin("opt-micro").unwrap();
+        let store = WeightStore::random("t", cfg, 38);
+        let reqs: Vec<Request> = (0..3)
+            .map(|i| Request {
+                id: i,
+                prompt: (0..30).map(|j| (j * 7 + i as i32) % 256).collect(),
+                max_new: 4,
+            })
+            .collect();
+        let w = Weights::Fp(&store);
+        let mut be = NativeBackend::new(w, 3);
+        let (resp_c, _) = serve(&mut be, reqs.clone()).unwrap();
+        let w2 = Weights::Fp(&store);
+        let mut bp =
+            PagedNativeBackend::new(w2, 3, 4, 64, KvStoreKind::F32);
+        let (resp_p, m) = serve_with(
+            &mut bp,
+            reqs,
+            ServeOptions { prefill_chunk: 16 },
+        )
+        .unwrap();
+        for (c, p) in resp_c.iter().zip(&resp_p) {
+            assert_eq!(c.id, p.id);
+            assert_eq!(c.tokens, p.tokens, "req {}", c.id);
+        }
+        assert!(m.kv.unwrap().sealed_blocks > 0);
     }
 
     #[test]

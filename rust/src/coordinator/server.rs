@@ -63,6 +63,7 @@ impl ServerHandle {
                     let m = engine_loop(batch);
                     total.requests.extend(m.requests);
                     total.decode_steps += m.decode_steps;
+                    total.prompt_positions += m.prompt_positions;
                     total.wall_s += m.wall_s;
                     total.weight_bytes_per_step = m.weight_bytes_per_step;
                     total.kv_bytes_per_step = m.kv_bytes_per_step;

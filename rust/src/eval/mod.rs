@@ -9,7 +9,7 @@
 pub mod tasks;
 
 use crate::data::corpus::{Flavor, Split};
-use crate::model::forward::{self, Weights};
+use crate::model::forward::{Engine, Weights};
 use crate::model::{ModelConfig, QuantizedModel, WeightStore};
 use crate::runtime::{HostTensor, Runtime};
 
@@ -45,9 +45,16 @@ pub fn weight_tensors_fp32(
         .collect()
 }
 
-/// A perplexity engine: sums NLL over fixed-size batches.
+/// A perplexity engine: sums NLL over fixed-size batches. The native
+/// variant holds one `forward::Engine` across batches (weights resolved
+/// and packed once) and prefills each batch in `chunk`-position pieces —
+/// the same session API serving uses.
 pub enum PplEngine<'a> {
-    Native(Weights<'a>),
+    Native {
+        engine: Engine<'a>,
+        /// prefill chunk size per step (`usize::MAX` = whole sequence)
+        chunk: usize,
+    },
     Hlo {
         rt: &'a Runtime,
         graph: String,
@@ -56,6 +63,18 @@ pub enum PplEngine<'a> {
 }
 
 impl<'a> PplEngine<'a> {
+    /// Native engine, whole-sequence prefill.
+    pub fn native(w: Weights<'a>) -> PplEngine<'a> {
+        PplEngine::native_chunked(w, usize::MAX)
+    }
+
+    /// Native engine prefilling each sequence in `chunk`-position steps
+    /// (dense-cache math is identical at every chunk size; this exists
+    /// so `--prefill-chunk` bounds eval's per-step footprint too).
+    pub fn native_chunked(w: Weights<'a>, chunk: usize) -> PplEngine<'a> {
+        PplEngine::Native { engine: Engine::new(&w), chunk: chunk.max(1) }
+    }
+
     /// HLO engine for a model; graph name comes from the base config.
     pub fn hlo(
         rt: &'a Runtime,
@@ -77,9 +96,11 @@ impl<'a> PplEngine<'a> {
     }
 
     /// NLL sum over one batch of NLL_BATCH x NLL_SEQ tokens.
-    pub fn nll_batch(&self, tokens: &[Vec<i32>]) -> Result<f64, String> {
+    pub fn nll_batch(&mut self, tokens: &[Vec<i32>]) -> Result<f64, String> {
         match self {
-            PplEngine::Native(w) => Ok(forward::nll_sum(w, tokens)),
+            PplEngine::Native { engine, chunk } => {
+                Ok(engine.nll_sum_chunked(tokens, *chunk))
+            }
             PplEngine::Hlo { rt, graph, weights } => {
                 assert_eq!(tokens.len(), NLL_BATCH);
                 let flat: Vec<i32> =
@@ -96,7 +117,7 @@ impl<'a> PplEngine<'a> {
 
 /// Perplexity over `n_batches` batches of a corpus split.
 pub fn perplexity(
-    engine: &PplEngine,
+    engine: &mut PplEngine,
     flavor: Flavor,
     split: Split,
     n_batches: usize,
@@ -132,10 +153,31 @@ mod tests {
         // <= vocab size-ish
         let cfg = ModelConfig::builtin("opt-micro").unwrap();
         let store = WeightStore::random("r", cfg, 5);
-        let eng = PplEngine::Native(Weights::Fp(&store));
+        let mut eng = PplEngine::native(Weights::Fp(&store));
         let f = corpus::flavor("wiki2s").unwrap();
-        let ppl = perplexity(&eng, f, Split::Valid, 1).unwrap();
+        let ppl = perplexity(&mut eng, f, Split::Valid, 1).unwrap();
         assert!(ppl > 20.0 && ppl < 2000.0, "ppl {}", ppl);
+    }
+
+    #[test]
+    fn chunked_native_ppl_matches_whole_sequence() {
+        let cfg = ModelConfig::builtin("opt-micro").unwrap();
+        let store = WeightStore::random("r", cfg, 6);
+        let f = corpus::flavor("wiki2s").unwrap();
+        let mut full = PplEngine::native(Weights::Fp(&store));
+        let ppl_full = perplexity(&mut full, f, Split::Valid, 1).unwrap();
+        for chunk in [1usize, 17, 128] {
+            let mut eng =
+                PplEngine::native_chunked(Weights::Fp(&store), chunk);
+            let ppl = perplexity(&mut eng, f, Split::Valid, 1).unwrap();
+            assert!(
+                (ppl - ppl_full).abs() < 1e-9 * ppl_full.max(1.0),
+                "chunk {}: {} vs {}",
+                chunk,
+                ppl,
+                ppl_full
+            );
+        }
     }
 
     #[test]

@@ -2,29 +2,32 @@
 //! generation/exact-match tasks (Table 4: gsm-s, longbench-s).
 
 use crate::data::tasks::{GenCase, PairCase};
-use crate::model::forward::{self, Weights};
+use crate::model::forward::{Engine, Weights};
 
 /// Length-normalized NLL of one variable-length sequence (native path;
 /// the HLO nll graph has fixed geometry, tasks need arbitrary lengths).
-pub fn seq_nll_per_byte(w: &Weights, text: &[u8]) -> f64 {
+pub fn seq_nll_per_byte(engine: &mut Engine, text: &[u8]) -> f64 {
     let toks: Vec<i32> = text.iter().map(|&b| b as i32).collect();
     if toks.len() < 2 {
         return 0.0;
     }
-    forward::nll_sum(w, &[toks.clone()]) / (toks.len() - 1) as f64
+    let n = toks.len();
+    engine.nll_sum_chunked(&[toks], usize::MAX) / (n - 1) as f64
 }
 
 /// Accuracy of one pair task: fraction of cases where the model assigns a
 /// lower per-byte NLL to the real sentence (LM-Harness-style likelihood
-/// comparison; length-normalized because corruptions change length).
+/// comparison; length-normalized because corruptions change length). One
+/// engine (weights resolved/packed once) scores every case.
 pub fn pair_accuracy(w: &Weights, cases: &[PairCase]) -> f64 {
     if cases.is_empty() {
         return 0.0;
     }
+    let mut engine = Engine::new(w);
     let mut correct = 0usize;
     for c in cases {
-        let n_good = seq_nll_per_byte(w, &c.good);
-        let n_bad = seq_nll_per_byte(w, &c.bad);
+        let n_good = seq_nll_per_byte(&mut engine, &c.good);
+        let n_bad = seq_nll_per_byte(&mut engine, &c.bad);
         if n_good < n_bad {
             correct += 1;
         }
@@ -51,20 +54,22 @@ pub fn zero_shot_suite(
     (rows, mean)
 }
 
-/// Exact-match accuracy on generation cases (greedy decode, native path).
-/// The prompt is truncated from the left to fit the context window —
-/// mirrors how long-context evaluation clips inputs.
+/// Exact-match accuracy on generation cases (chunked-prefill greedy
+/// decode through one engine). The prompt is truncated from the left to
+/// fit the context window — mirrors how long-context evaluation clips
+/// inputs.
 pub fn exact_match(w: &Weights, cases: &[GenCase]) -> f64 {
     let cfg = w.store().cfg;
     if cases.is_empty() {
         return 0.0;
     }
+    let mut engine = Engine::new(w);
     let mut correct = 0usize;
     for c in cases {
         let start = c.prompt.len().saturating_sub(cfg.ctx - c.answer.len() - 1);
         let toks: Vec<i32> =
             c.prompt[start..].iter().map(|&b| b as i32).collect();
-        let out = forward::generate_greedy(w, &toks, c.answer.len());
+        let out = engine.generate_greedy(&toks, c.answer.len());
         let got: Vec<u8> = out.iter().map(|&t| t as u8).collect();
         if got == c.answer {
             correct += 1;

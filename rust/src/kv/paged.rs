@@ -9,15 +9,17 @@
 //!    reusable block (pool refcount++) and resume decoding after the
 //!    shared positions (capped at `prompt.len() - 1` so the final prompt
 //!    token still produces logits).
-//! 2. `prepare_step` — before every scheduler step, make each active slot
-//!    appendable: allocate a fresh tail block on a block boundary, or CoW
-//!    a partially-shared tail. When the pool is dry even after evicting
+//! 2. `prepare_step_n` — before every scheduler step, make each active
+//!    slot appendable for the positions it will write (one for a decode,
+//!    several for a prefill chunk): allocate fresh tail blocks, or CoW a
+//!    partially-shared tail. When the pool is dry even after evicting
 //!    cached prefixes, the youngest-admitted slots are preempted
 //!    (released and reported back for requeueing).
-//! 3. `push_token` + [`SlotView`] — the decode step reads/writes through
-//!    the block table ([`crate::model::forward::KvSeq`]).
-//! 4. On a block-boundary advance the filled block is sealed (quantized
-//!    stores compress here) and indexed for future prefix hits.
+//! 3. `push_tokens` + [`SlotView`] — the engine step reads/writes
+//!    through the block table ([`crate::model::forward::KvSeq`]).
+//! 4. When an advance crosses a block boundary the filled block is
+//!    sealed (quantized stores compress here) and indexed for future
+//!    prefix hits.
 //! 5. `release` — drop the slot's references; blocks also held by the
 //!    index stay cached until evicted.
 
@@ -165,25 +167,21 @@ impl PagedKv {
         self.pool.alloc()
     }
 
-    /// Make `slot` writable at its current position: fresh tail block on
-    /// a block boundary, copy-on-write for the first divergent append
-    /// into a partially-shared tail. False when the pool is exhausted.
-    fn ensure_appendable(&mut self, slot: usize) -> bool {
+    /// Make `slot` writable for `n` appended positions starting at its
+    /// current one: copy-on-write a partially-shared tail, then allocate
+    /// however many fresh tail blocks the run needs. False when the pool
+    /// is exhausted (partially-allocated tails are kept; a retry after
+    /// preemption continues from where it stopped).
+    fn ensure_appendable_n(&mut self, slot: usize, n: usize) -> bool {
         let bs = self.block_size();
         let (pos, nblocks, tail) = {
             let seq = self.slots[slot].as_ref().expect("active slot");
             (seq.pos, seq.blocks.len(), seq.blocks.last().copied())
         };
-        if pos == nblocks * bs {
-            match self.alloc_block() {
-                Some(b) => {
-                    self.slots[slot].as_mut().unwrap().blocks.push(b);
-                    true
-                }
-                None => false,
-            }
-        } else {
-            debug_assert!(pos < nblocks * bs, "block table ahead of pos");
+        debug_assert!(pos <= nblocks * bs, "block table behind pos");
+        if pos < nblocks * bs {
+            // mid-block tail: CoW the first divergent append into a
+            // shared block
             let tail = tail.expect("mid-block position implies a tail");
             if self.pool.refcount(tail) > 1 {
                 match self.alloc_block() {
@@ -197,31 +195,46 @@ impl PagedKv {
                             .last_mut()
                             .unwrap() = dst;
                         self.cow_copies += 1;
-                        true
                     }
-                    None => false,
+                    None => return false,
                 }
-            } else {
-                true
             }
         }
+        let target = (pos + n).div_ceil(bs);
+        while self.slots[slot].as_ref().unwrap().blocks.len() < target {
+            match self.alloc_block() {
+                Some(b) => self.slots[slot].as_mut().unwrap().blocks.push(b),
+                None => return false,
+            }
+        }
+        true
     }
 
-    /// Guarantee every active slot can append one position this step,
-    /// preempting the youngest-admitted slots when blocks run out.
-    /// Returns the preempted slots; their state is already released and
-    /// the caller requeues the requests (recompute-style preemption).
+    /// Guarantee every active slot can append one position this step.
+    /// Shorthand for [`PagedKv::prepare_step_n`] with `need = 1` per
+    /// active slot (the all-decode step).
     pub fn prepare_step(&mut self, active: &[bool]) -> Vec<usize> {
+        let need: Vec<usize> =
+            active.iter().map(|&a| usize::from(a)).collect();
+        self.prepare_step_n(&need)
+    }
+
+    /// Guarantee every slot can append `need[slot]` positions this step
+    /// (0 = idle; a prefill chunk needs several), preempting the
+    /// youngest-admitted slots when blocks run out. Returns the
+    /// preempted slots; their state is already released and the caller
+    /// requeues the requests (recompute-style preemption).
+    pub fn prepare_step_n(&mut self, need: &[usize]) -> Vec<usize> {
         let mut victims = Vec::new();
-        let mut alive: Vec<usize> = (0..active.len().min(self.slots.len()))
-            .filter(|&i| active[i] && self.slots[i].is_some())
+        let mut alive: Vec<usize> = (0..need.len().min(self.slots.len()))
+            .filter(|&i| need[i] > 0 && self.slots[i].is_some())
             .collect();
         // oldest admission first: under pressure the young yield to the old
         alive.sort_by_key(|&i| self.slots[i].as_ref().unwrap().admitted_at);
         let mut idx = 0;
         while idx < alive.len() {
             let slot = alive[idx];
-            if self.ensure_appendable(slot) {
+            if self.ensure_appendable_n(slot, need[slot]) {
                 idx += 1;
                 continue;
             }
@@ -239,18 +252,24 @@ impl PagedKv {
     /// Record the token about to be decoded at the slot's current
     /// position (sealing indexes the chunk under its token content).
     pub fn push_token(&mut self, slot: usize, tok: i32) {
-        let seq = self.slots[slot].as_mut().expect("active slot");
-        debug_assert_eq!(seq.tokens.len(), seq.pos, "one token per step");
-        seq.tokens.push(tok);
+        self.push_tokens(slot, &[tok]);
     }
 
-    /// KvSeq view of one slot for `forward::decode_step_kv`.
+    /// Record the run of tokens about to be appended this step (a
+    /// prefill chunk; sealing indexes blocks under their token content).
+    pub fn push_tokens(&mut self, slot: usize, toks: &[i32]) {
+        let seq = self.slots[slot].as_mut().expect("active slot");
+        debug_assert_eq!(seq.tokens.len(), seq.pos, "tokens behind pos");
+        seq.tokens.extend_from_slice(toks);
+    }
+
+    /// KvSeq view of one slot for single-sequence engine steps.
     pub fn slot_view(&mut self, slot: usize) -> SlotView<'_> {
         SlotView { kv: self, slot }
     }
 
     /// [`SeqAccess`] adapter over a set of active slots for
-    /// `forward::decode_step_batch`: sequences are visited one at a time
+    /// `forward::Engine::step`: sequences are visited one at a time
     /// because slot views alias the shared block pool.
     pub fn seqs(&mut self, slots: Vec<usize>) -> PagedSeqs<'_> {
         PagedSeqs { kv: self, slots }
@@ -309,32 +328,43 @@ impl PagedKv {
         }
     }
 
-    fn advance(&mut self, slot: usize) {
+    /// Commit `n` appended positions, sealing (and prefix-indexing)
+    /// every block the run fills. A chunked append seals exactly the
+    /// blocks a token-by-token walk would have sealed.
+    fn advance_n(&mut self, slot: usize, n: usize) {
         let bs = self.block_size();
-        let pos = {
-            let seq = self.slots[slot].as_mut().expect("active slot");
-            debug_assert_eq!(seq.tokens.len(), seq.pos + 1, "push_token first");
-            seq.pos += 1;
-            seq.pos
-        };
-        if pos % bs == 0 {
-            // The block holding positions [pos-bs, pos) just filled.
-            // insert_chain re-walks the chain from the root on every
-            // seal: ctx/bs is small (<= 16 for the builtin configs) and
-            // a cached node handle could go stale under LRU eviction of
-            // ancestors between seals.
-            let (blk, tokens, blocks) = {
-                let seq = self.slots[slot].as_ref().unwrap();
-                (
-                    seq.blocks[pos / bs - 1],
-                    seq.tokens[..pos].to_vec(),
-                    seq.blocks[..pos / bs].to_vec(),
-                )
+        {
+            let seq = self.slots[slot].as_ref().expect("active slot");
+            debug_assert!(
+                seq.tokens.len() >= seq.pos + n,
+                "push_tokens must cover the advance"
+            );
+        }
+        for _ in 0..n {
+            let pos = {
+                let seq = self.slots[slot].as_mut().unwrap();
+                seq.pos += 1;
+                seq.pos
             };
-            self.store.seal(blk);
-            self.sealed_blocks += 1;
-            for b in self.index.insert_chain(&tokens, bs, &blocks) {
-                self.pool.retain(b);
+            if pos % bs == 0 {
+                // The block holding positions [pos-bs, pos) just filled.
+                // insert_chain re-walks the chain from the root on every
+                // seal: ctx/bs is small (<= 16 for the builtin configs)
+                // and a cached node handle could go stale under LRU
+                // eviction of ancestors between seals.
+                let (blk, tokens, blocks) = {
+                    let seq = self.slots[slot].as_ref().unwrap();
+                    (
+                        seq.blocks[pos / bs - 1],
+                        seq.tokens[..pos].to_vec(),
+                        seq.blocks[..pos / bs].to_vec(),
+                    )
+                };
+                self.store.seal(blk);
+                self.sealed_blocks += 1;
+                for b in self.index.insert_chain(&tokens, bs, &blocks) {
+                    self.pool.retain(b);
+                }
             }
         }
     }
@@ -366,10 +396,43 @@ impl KvSeq for SlotView<'_> {
         self.kv.pos(self.slot)
     }
 
-    fn write(&mut self, li: usize, hi: usize, k: &[f32], v: &[f32]) {
-        let pos = self.kv.pos(self.slot);
-        let (blk, off) = self.kv.locate(self.slot, pos);
+    fn write(&mut self, li: usize, hi: usize, sj: usize, k: &[f32], v: &[f32]) {
+        let (blk, off) = self.kv.locate(self.slot, sj);
         self.kv.store.write(blk, li, hi, off, k, v);
+    }
+
+    fn write_rows(
+        &mut self,
+        li: usize,
+        hi: usize,
+        sj0: usize,
+        rows: usize,
+        k: &[f32],
+        v: &[f32],
+    ) {
+        // walk the block table in whole-block runs; each run is one
+        // contiguous store write (the append analogue of read_rows)
+        if rows == 0 {
+            return;
+        }
+        let bs = self.kv.block_size();
+        let hd = k.len() / rows;
+        let mut done = 0usize;
+        while done < rows {
+            let sj = sj0 + done;
+            let (blk, off) = self.kv.locate(self.slot, sj);
+            let run = (bs - off).min(rows - done);
+            self.kv.store.write_rows(
+                blk,
+                li,
+                hi,
+                off,
+                run,
+                &k[done * hd..(done + run) * hd],
+                &v[done * hd..(done + run) * hd],
+            );
+            done += run;
+        }
     }
 
     fn read_k(&self, li: usize, hi: usize, sj: usize, out: &mut [f32]) {
@@ -414,8 +477,8 @@ impl KvSeq for SlotView<'_> {
         self.kv.read_rows(self.slot, li, hi, sj0, rows, out, false);
     }
 
-    fn advance(&mut self) {
-        self.kv.advance(self.slot);
+    fn advance(&mut self, n: usize) {
+        self.kv.advance_n(self.slot, n);
     }
 }
 
@@ -465,9 +528,28 @@ mod tests {
             kv.push_token(slot, t);
             let mut view = kv.slot_view(slot);
             let row = [t as f32, -(t as f32)];
-            view.write(0, 0, &row, &row);
-            view.advance();
+            let pos = view.pos();
+            view.write(0, 0, pos, &row, &row);
+            view.advance(1);
         }
+    }
+
+    /// Same positions appended as one chunk: prepare for the whole run,
+    /// write all rows with `write_rows`, advance once.
+    fn run_chunk(kv: &mut PagedKv, slot: usize, toks: &[i32]) {
+        let mut need = vec![0usize; kv.num_slots()];
+        need[slot] = toks.len();
+        let victims = kv.prepare_step_n(&need);
+        assert!(victims.is_empty(), "unexpected preemption");
+        kv.push_tokens(slot, toks);
+        let mut view = kv.slot_view(slot);
+        let pos = view.pos();
+        let mut ks = Vec::new();
+        for &t in toks {
+            ks.extend_from_slice(&[t as f32, -(t as f32)]);
+        }
+        view.write_rows(0, 0, pos, toks.len(), &ks, &ks);
+        view.advance(toks.len());
     }
 
     #[test]
@@ -626,6 +708,49 @@ mod tests {
                 sj
             );
         }
+    }
+
+    #[test]
+    fn chunked_append_matches_per_token_and_seals_identically() {
+        // 10 positions (2.5 blocks of 4): a single chunked append must
+        // leave the same rows, seal the same blocks, and index the same
+        // prefixes as a token-by-token walk
+        let toks: Vec<i32> = (0..10).collect();
+        let mut kv_t = paged(8, 1);
+        kv_t.admit(0, &toks, 1).unwrap();
+        run_tokens(&mut kv_t, 0, &toks);
+        let mut kv_c = paged(8, 1);
+        kv_c.admit(0, &toks, 1).unwrap();
+        run_chunk(&mut kv_c, 0, &toks);
+
+        assert_eq!(kv_t.pos(0), kv_c.pos(0));
+        assert_eq!(kv_t.stats().sealed_blocks, kv_c.stats().sealed_blocks);
+        assert_eq!(kv_t.stats().cached_blocks, kv_c.stats().cached_blocks);
+        assert_eq!(kv_t.index.peek(&toks, 4), kv_c.index.peek(&toks, 4));
+        let mut a = [0.0f32; 2];
+        let mut b = [0.0f32; 2];
+        for sj in 0..10 {
+            let vt = kv_t.slot_view(0);
+            vt.read_k(0, 0, sj, &mut a);
+            let vc = kv_c.slot_view(0);
+            vc.read_k(0, 0, sj, &mut b);
+            assert_eq!(a, b, "pos {}", sj);
+        }
+    }
+
+    #[test]
+    fn prepare_step_n_allocates_multi_block_runs() {
+        // a 9-position chunk needs 3 fresh blocks at once
+        let mut kv = paged(4, 1);
+        kv.admit(0, &[1, 2], 1).unwrap();
+        let victims = kv.prepare_step_n(&[9]);
+        assert!(victims.is_empty());
+        assert_eq!(kv.slots[0].as_ref().unwrap().blocks.len(), 3);
+        // and an oversized run preempts (here: the slot itself, pool dry)
+        let mut kv2 = paged(2, 1);
+        kv2.admit(0, &[1], 1).unwrap();
+        let victims = kv2.prepare_step_n(&[12]);
+        assert_eq!(victims, vec![0]);
     }
 
     #[test]

@@ -75,6 +75,36 @@ pub trait KvBlockStore {
         v: &[f32],
     );
 
+    /// Store `rows` consecutive positions (offsets `off..off+rows`,
+    /// `rows * head_dim` floats per side) in one call — the batched
+    /// row-append used by chunked prefill. Default loops `write`;
+    /// dense representations override with a memcpy per (layer, head).
+    fn write_rows(
+        &mut self,
+        blk: usize,
+        li: usize,
+        hi: usize,
+        off: usize,
+        rows: usize,
+        k: &[f32],
+        v: &[f32],
+    ) {
+        if rows == 0 {
+            return;
+        }
+        let hd = k.len() / rows;
+        for r in 0..rows {
+            self.write(
+                blk,
+                li,
+                hi,
+                off + r,
+                &k[r * hd..(r + 1) * hd],
+                &v[r * hd..(r + 1) * hd],
+            );
+        }
+    }
+
     /// Copy the cached K row into `out` (dequantizing if sealed).
     fn read_k(&self, blk: usize, li: usize, hi: usize, off: usize, out: &mut [f32]);
     fn read_v(&self, blk: usize, li: usize, hi: usize, off: usize, out: &mut [f32]);
@@ -182,6 +212,22 @@ impl KvBlockStore for F32Blocks {
         let b = self.base(blk, li, hi, off);
         self.k[b..b + hd].copy_from_slice(k);
         self.v[b..b + hd].copy_from_slice(v);
+    }
+
+    fn write_rows(
+        &mut self,
+        blk: usize,
+        li: usize,
+        hi: usize,
+        off: usize,
+        rows: usize,
+        k: &[f32],
+        v: &[f32],
+    ) {
+        debug_assert!(off + rows <= self.layout.block_size);
+        let b = self.base(blk, li, hi, off);
+        self.k[b..b + k.len()].copy_from_slice(k);
+        self.v[b..b + v.len()].copy_from_slice(v);
     }
 
     fn read_k(&self, blk: usize, li: usize, hi: usize, off: usize, out: &mut [f32]) {
@@ -392,6 +438,29 @@ impl KvBlockStore for LutBlocks {
         let b = layout.off(li, hi, off);
         st.k[b..b + hd].copy_from_slice(k);
         st.v[b..b + hd].copy_from_slice(v);
+    }
+
+    fn write_rows(
+        &mut self,
+        blk: usize,
+        li: usize,
+        hi: usize,
+        off: usize,
+        rows: usize,
+        k: &[f32],
+        v: &[f32],
+    ) {
+        debug_assert!(off + rows <= self.layout.block_size);
+        debug_assert!(
+            self.sealed[blk].is_none(),
+            "write into sealed block {} (CoW missing)",
+            blk
+        );
+        let layout = self.layout;
+        let st = self.staged[blk].get_or_insert_with(|| Staged::zeros(layout));
+        let b = layout.off(li, hi, off);
+        st.k[b..b + k.len()].copy_from_slice(k);
+        st.v[b..b + v.len()].copy_from_slice(v);
     }
 
     fn read_k(&self, blk: usize, li: usize, hi: usize, off: usize, out: &mut [f32]) {

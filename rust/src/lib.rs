@@ -27,19 +27,28 @@
 //! (`coordinator::serve`) admits dynamically while free blocks remain and
 //! preempts-and-requeues the youngest requests on pool exhaustion.
 //!
-//! ## Serving compute: the batched decode engine
+//! ## Inference: one session-based engine
 //!
-//! `model::forward::DecodeEngine` + `decode_step_batch` advance every
-//! active sequence through each layer together, so a batch of N
-//! concurrent requests streams each layer's (packed) quantized weights
-//! once per token-step instead of N times — the memory-bound mpGEMM
-//! speedup the paper targets, realized natively. Weights are resolved,
-//! packed (`quant::kernels::PackedLut`), and interned at engine build;
-//! the per-step hot loop reuses a preallocated scratch arena and runs
-//! attention as one job per (sequence, head). Both native serve
-//! backends drive it, and
-//! results stay bit-identical to the sequential `decode_step_kv` path
-//! for dense KV stores.
+//! `model::forward::Engine` is the single native inference surface.
+//! It owns the resolved/packed/interned per-layer weight plans
+//! (`quant::kernels::PackedLut`) and a preallocated scratch arena, and
+//! `Engine::step` advances a `StepPlan` — a mixed batch of work items
+//! where each item is either a **prefill chunk** (several prompt
+//! positions of one sequence, causally masked in-step, KV rows appended
+//! as a range) or a **single decode position**. Weights stream once per
+//! step no matter how many positions ride along — the memory-bound
+//! mpGEMM speedup the paper targets, extended from decode to prefill so
+//! long prompts stop paying per-token weight streaming (time-to-first-
+//! token; see `benches/prefill_ttft.rs`).
+//!
+//! Everything runs through that one entry point: the serve scheduler
+//! (`coordinator::serve` plans chunks under a `--prefill-chunk` budget),
+//! evaluation (`forward_full` / `nll_sum` / `eval::PplEngine` are
+//! full-length prefill chunks with all-position logits), calibration
+//! (the same prefill with an `Observer` hook capturing per-linear
+//! inputs), and greedy generation. Per-sequence op order is identical at
+//! every chunk size, batch size, and thread count, so dense (f32) KV
+//! stores are bit-identical between chunked and per-token prefill.
 //!
 //! See DESIGN.md for the system inventory and experiment index.
 

@@ -1,9 +1,23 @@
 //! Native CPU forward path — numerically mirrors python/compile/model.py
-//! (layer_norm eps, tanh-GELU, attention scaling, tied head). Used for:
-//! calibration capture (per-linear input activations -> Gram matrices),
-//! evaluation fallback when HLO artifacts are absent, task scoring on
-//! variable-length sequences, and cross-validation of the HLO path
-//! (tests/golden.rs pins both against the python fixture).
+//! (layer_norm eps, tanh-GELU, attention scaling, tied head).
+//!
+//! Everything runs through one session-based engine: [`Engine`] owns the
+//! resolved/packed/interned per-layer weight plans and the scratch arena,
+//! and [`Engine::step`] advances a [`StepPlan`] — a mixed batch of work
+//! items where each item is either a **prefill chunk** (several prompt
+//! positions of one sequence, run through the same batched linears with
+//! an in-step causal attention mask) or a **single decode position**.
+//! Weights stream once per step regardless of how many positions ride
+//! along, which is what makes chunked prefill cut time-to-first-token on
+//! the memory-bound quantized hot path (GANQ §4 / LUT-GEMM batching).
+//!
+//! The historical entry points are thin wrappers over the same engine:
+//! [`forward_full`] and [`nll_sum`] are full-length prefill chunks with
+//! all-position logits (plus the calibration [`Observer`] hook), and
+//! [`generate_greedy`] is one prefill chunk followed by decode steps.
+//! Per-sequence op order is identical at every chunk size, batch size and
+//! thread count, so dense (f32) KV stores produce bit-identical logits
+//! whether a prompt is fed token-by-token or as one chunk.
 
 use crate::model::{
     LayerWeights, ModelConfig, QuantizedModel, Tensor, WeightStore,
@@ -26,23 +40,6 @@ impl<'a> Weights<'a> {
         match self {
             Weights::Fp(s) => s,
             Weights::Quant(q) => &q.base,
-        }
-    }
-
-    /// y = x @ W^T for the named quantizable linear (bias added by caller).
-    fn linear(&self, name: &str, x: &Mat) -> Mat {
-        match self {
-            Weights::Fp(s) => x.matmul_tb(&s.mat(name)),
-            Weights::Quant(q) => match q.linears.get(name) {
-                Some(LayerWeights::Dense(w)) => x.matmul_tb(w),
-                Some(LayerWeights::Lut(l)) => l.lut_matmul(x),
-                Some(LayerWeights::LutSparse(l, sp)) => {
-                    let mut y = l.lut_matmul(x);
-                    sp.spmm_add(x, &mut y);
-                    y
-                }
-                None => x.matmul_tb(&q.base.mat(name)),
-            },
         }
     }
 }
@@ -75,160 +72,64 @@ fn add_bias(x: &mut Mat, b: &[f32]) {
     }
 }
 
-/// Optional calibration observer: called with (linear_name, input [p, n]).
+/// Optional calibration observer: called with (linear_name, input [p, n])
+/// for every quantizable linear, in canonical order, before the matmul.
 pub type Observer<'o> = &'o mut dyn FnMut(&str, &Mat);
 
-/// Full causal forward over a batch of equal-length sequences.
-/// tokens: B x S. Returns logits [(B*S), vocab].
-pub fn forward_full(
-    w: &Weights,
-    tokens: &[Vec<i32>],
-    mut observer: Option<Observer>,
-) -> Mat {
-    let store = w.store();
-    let cfg = store.cfg;
-    let bsz = tokens.len();
-    let s_len = tokens[0].len();
-    assert!(tokens.iter().all(|t| t.len() == s_len));
-    assert!(s_len <= cfg.ctx);
-    let d = cfg.d;
-    let tok_emb = store.get("tok_emb");
-    let pos_emb = store.get("pos_emb");
-
-    let mut x = Mat::zeros(bsz * s_len, d);
-    for (b, seq) in tokens.iter().enumerate() {
-        for (s, &t) in seq.iter().enumerate() {
-            let row = x.row_mut(b * s_len + s);
-            let te = &tok_emb.data[(t as usize) * d..(t as usize + 1) * d];
-            let pe = &pos_emb.data[s * d..(s + 1) * d];
-            for (o, (&a, &b2)) in row.iter_mut().zip(te.iter().zip(pe)) {
-                *o = a + b2;
-            }
-        }
-    }
-
-    for li in 0..cfg.layers {
-        let p = format!("l{}.", li);
-        x = block_full(w, &p, x, cfg, bsz, s_len, &mut observer);
-    }
-    layer_norm_rows(&mut x, store.vec("ln_f_g"), store.vec("ln_f_b"));
-    // tied head: logits = x @ tok_emb^T
-    let emb = tok_emb.as_mat();
-    x.matmul_tb(&emb)
-}
-
-fn block_full(
-    w: &Weights,
-    p: &str,
-    mut x: Mat,
-    cfg: ModelConfig,
-    bsz: usize,
-    s_len: usize,
-    observer: &mut Option<Observer>,
-) -> Mat {
-    let store = w.store();
-    let d = cfg.d;
-    let h = cfg.heads;
-    let hd = cfg.head_dim();
-    let scale = 1.0 / (hd as f32).sqrt();
-
-    let mut a = x.clone();
-    layer_norm_rows(
-        &mut a,
-        store.vec(&format!("{}ln1_g", p)),
-        store.vec(&format!("{}ln1_b", p)),
-    );
-    let mut lin = |name: &str, inp: &Mat, bias: &str| -> Mat {
-        let full = format!("{}{}", p, name);
-        if let Some(obs) = observer.as_mut() {
-            obs(&full, inp);
-        }
-        let mut y = w.linear(&full, inp);
-        add_bias(&mut y, store.vec(&format!("{}{}", p, bias)));
-        y
-    };
-    let q = lin("wq", &a, "bq");
-    let k = lin("wk", &a, "bk");
-    let v = lin("wv", &a, "bv");
-
-    // attention per (batch, head)
-    let mut o = Mat::zeros(bsz * s_len, d);
-    let mut scores = vec![0.0f32; s_len];
-    for b in 0..bsz {
-        for hi in 0..h {
-            for si in 0..s_len {
-                let qrow = &q.row(b * s_len + si)[hi * hd..(hi + 1) * hd];
-                for (sj, sc) in scores.iter_mut().enumerate().take(si + 1) {
-                    let krow =
-                        &k.row(b * s_len + sj)[hi * hd..(hi + 1) * hd];
-                    *sc = tensor::dot(qrow, krow) * scale;
-                }
-                tensor::softmax(&mut scores[..si + 1]);
-                let orow =
-                    &mut o.row_mut(b * s_len + si)[hi * hd..(hi + 1) * hd];
-                for (sj, &w_att) in scores.iter().enumerate().take(si + 1) {
-                    let vrow =
-                        &v.row(b * s_len + sj)[hi * hd..(hi + 1) * hd];
-                    for (ov, &vv) in orow.iter_mut().zip(vrow) {
-                        *ov += w_att * vv;
-                    }
-                }
-            }
-        }
-    }
-    let attn_out = lin("wo", &o, "bo");
-    x.add_assign(&attn_out);
-
-    let mut m = x.clone();
-    layer_norm_rows(
-        &mut m,
-        store.vec(&format!("{}ln2_g", p)),
-        store.vec(&format!("{}ln2_b", p)),
-    );
-    let mut h1 = lin("w1", &m, "b1");
-    gelu_tanh(&mut h1.data);
-    let h2 = lin("w2", &h1, "b2");
-    x.add_assign(&h2);
-    x
-}
-
-/// Sum of next-token NLLs over a batch (matches python nll_sum).
-pub fn nll_sum(w: &Weights, tokens: &[Vec<i32>]) -> f64 {
-    let logits = forward_full(w, tokens, None);
-    let s_len = tokens[0].len();
-    let vocab = w.store().cfg.vocab;
-    let mut total = 0.0f64;
-    for (b, seq) in tokens.iter().enumerate() {
-        for s in 0..s_len - 1 {
-            let row = &logits.row(b * s_len + s)[..vocab];
-            total -=
-                tensor::log_softmax_at(row, seq[s + 1] as usize) as f64;
-        }
-    }
-    total
-}
-
 // ---------------------------------------------------------------------------
-// KV-cache decode (native serving fallback + generation-based evals)
+// KV storage contract
 // ---------------------------------------------------------------------------
 
-/// Abstract per-sequence KV storage driving one decode step. The
-/// contiguous [`KvCache`] and the paged cache (`kv::PagedKv` slot views)
-/// both implement it, so `decode_step_kv` is the single attention path
-/// and the dense variants stay bit-identical by construction.
+/// Abstract per-sequence KV storage driving the engine. The contiguous
+/// [`KvCache`] and the paged cache (`kv::PagedKv` slot views) both
+/// implement it, so [`Engine::step`] is the single attention path and
+/// the dense variants stay bit-identical by construction.
+///
+/// A step appends a run of `n >= 1` positions: the engine calls
+/// `write`/`write_rows` for absolute positions `pos()..pos() + n` on
+/// every (layer, head), then `advance(n)` exactly once at the end of the
+/// step. Callers must make those positions writable beforehand (the
+/// paged cache allocates/CoWs tail blocks in `prepare_step_n`).
 pub trait KvSeq {
-    /// Positions cached so far (the next write lands here).
+    /// Positions cached so far (this step's writes land at `pos()..`).
     fn pos(&self) -> usize;
     /// Store the K/V rows (`head_dim` floats each) for (layer, head) at
-    /// position `pos()`.
-    fn write(&mut self, li: usize, hi: usize, k: &[f32], v: &[f32]);
+    /// absolute position `sj` (inside the current append window).
+    fn write(&mut self, li: usize, hi: usize, sj: usize, k: &[f32], v: &[f32]);
+    /// Append `rows` consecutive positions starting at `sj0` in one call
+    /// (`rows * head_dim` floats per side). Default loops `write`;
+    /// stores with contiguous rows override for a memcpy per (layer,
+    /// head) instead of a dispatch per position — the batched-row-append
+    /// analogue of `read_k_rows`.
+    fn write_rows(
+        &mut self,
+        li: usize,
+        hi: usize,
+        sj0: usize,
+        rows: usize,
+        k: &[f32],
+        v: &[f32],
+    ) {
+        if rows == 0 {
+            return;
+        }
+        let hd = k.len() / rows;
+        for r in 0..rows {
+            self.write(
+                li,
+                hi,
+                sj0 + r,
+                &k[r * hd..(r + 1) * hd],
+                &v[r * hd..(r + 1) * hd],
+            );
+        }
+    }
     /// Copy the cached K row at (layer, head, position `sj`) into `out`.
     fn read_k(&self, li: usize, hi: usize, sj: usize, out: &mut [f32]);
     fn read_v(&self, li: usize, hi: usize, sj: usize, out: &mut [f32]);
     /// Borrow the K row in place when the store holds it as contiguous
     /// f32 (dense caches, unsealed paged tails). `None` routes the
     /// caller to `read_k` + a scratch buffer (e.g. sealed LUT blocks).
-    /// Keeps the dense hot path copy-free.
     fn k_slice(&self, li: usize, hi: usize, sj: usize) -> Option<&[f32]> {
         let _ = (li, hi, sj);
         None
@@ -239,9 +140,9 @@ pub trait KvSeq {
     }
     /// Copy `rows` consecutive K rows (positions `sj0..sj0+rows`) into
     /// `out` (`rows * head_dim` floats). Default loops `read_k`; stores
-    /// whose rows are physically contiguous override this so the batched
-    /// decode gather pays one call (and ideally one memcpy) per
-    /// (layer, head) instead of two virtual dispatches per position.
+    /// whose rows are physically contiguous override this so the engine
+    /// gather pays one call (and ideally one memcpy) per (layer, head)
+    /// instead of two virtual dispatches per position.
     fn read_k_rows(
         &self,
         li: usize,
@@ -274,8 +175,8 @@ pub trait KvSeq {
             self.read_v(li, hi, sj0 + r, orow);
         }
     }
-    /// Commit the step: `pos += 1`.
-    fn advance(&mut self);
+    /// Commit the step: `pos += n` appended positions.
+    fn advance(&mut self, n: usize);
 }
 
 /// Per-sequence contiguous KV cache for the native path.
@@ -290,6 +191,15 @@ pub struct KvCache {
 
 impl KvCache {
     pub fn new(cfg: ModelConfig) -> KvCache {
+        KvCache::with_capacity(cfg, cfg.ctx)
+    }
+
+    /// Cache sized for at most `cap` positions (stride and backing
+    /// buffers shrink accordingly) — the one-shot eval/calibration
+    /// prefills size to the sequence instead of zero-filling full-ctx
+    /// buffers per call.
+    pub fn with_capacity(mut cfg: ModelConfig, cap: usize) -> KvCache {
+        cfg.ctx = cap.min(cfg.ctx).max(1);
         let sz = cfg.layers * cfg.heads * cfg.ctx * cfg.head_dim();
         KvCache { cfg, k: vec![0.0; sz], v: vec![0.0; sz], len: 0 }
     }
@@ -305,11 +215,26 @@ impl KvSeq for KvCache {
         self.len
     }
 
-    fn write(&mut self, li: usize, hi: usize, k: &[f32], v: &[f32]) {
+    fn write(&mut self, li: usize, hi: usize, sj: usize, k: &[f32], v: &[f32]) {
         let hd = self.cfg.head_dim();
-        let base = self.idx(li, hi, self.len);
+        let base = self.idx(li, hi, sj);
         self.k[base..base + hd].copy_from_slice(k);
         self.v[base..base + hd].copy_from_slice(v);
+    }
+
+    fn write_rows(
+        &mut self,
+        li: usize,
+        hi: usize,
+        sj0: usize,
+        rows: usize,
+        k: &[f32],
+        v: &[f32],
+    ) {
+        // positions are contiguous within a (layer, head): one memcpy
+        let base = self.idx(li, hi, sj0);
+        self.k[base..base + rows * self.cfg.head_dim()].copy_from_slice(k);
+        self.v[base..base + rows * self.cfg.head_dim()].copy_from_slice(v);
     }
 
     fn read_k(&self, li: usize, hi: usize, sj: usize, out: &mut [f32]) {
@@ -344,7 +269,6 @@ impl KvSeq for KvCache {
         rows: usize,
         out: &mut [f32],
     ) {
-        // positions are contiguous within a (layer, head): one memcpy
         let base = self.idx(li, hi, sj0);
         out.copy_from_slice(&self.k[base..base + rows * self.cfg.head_dim()]);
     }
@@ -361,13 +285,14 @@ impl KvSeq for KvCache {
         out.copy_from_slice(&self.v[base..base + rows * self.cfg.head_dim()]);
     }
 
-    fn advance(&mut self) {
-        self.len += 1;
+    fn advance(&mut self, n: usize) {
+        self.len += n;
     }
 }
 
 /// Interned parameter names for one transformer layer — built once per
-/// decoder/engine so per-token hot loops never run `format!`.
+/// engine so hot loops never run `format!` (and the calibration observer
+/// can name the linear it is watching).
 pub struct LayerKeys {
     pub ln1_g: String,
     pub ln1_b: String,
@@ -404,170 +329,6 @@ impl LayerKeys {
     }
 }
 
-/// One decode step for a single sequence; appends to the cache.
-/// Returns the logits row [vocab].
-pub fn decode_step(w: &Weights, tok: i32, cache: &mut KvCache) -> Vec<f32> {
-    decode_step_kv(w, tok, cache)
-}
-
-/// One decode step through any [`KvSeq`] (contiguous or paged). The
-/// attention loop iterates positions in ascending order with identical
-/// f32 accumulation to the historical contiguous path, so two stores
-/// holding the same values produce bit-identical logits.
-///
-/// Token-loop callers should hold a [`SeqDecoder`] instead: this
-/// convenience wrapper rebuilds the key table and scratch every call.
-pub fn decode_step_kv(
-    w: &Weights,
-    tok: i32,
-    cache: &mut dyn KvSeq,
-) -> Vec<f32> {
-    SeqDecoder::new(*w).step(tok, cache)
-}
-
-/// Sequential (one-sequence-at-a-time) decoder with the per-token
-/// constants hoisted out of the token loop: interned layer keys (no
-/// `format!` per layer per token) and `scores`/`krow`/`vrow` attention
-/// scratch reused across layers and steps.
-pub struct SeqDecoder<'w> {
-    w: Weights<'w>,
-    keys: Vec<LayerKeys>,
-    scores: Vec<f32>,
-    krow: Vec<f32>,
-    vrow: Vec<f32>,
-}
-
-impl<'w> SeqDecoder<'w> {
-    pub fn new(w: Weights<'w>) -> SeqDecoder<'w> {
-        let cfg = w.store().cfg;
-        SeqDecoder {
-            w,
-            keys: LayerKeys::build(cfg.layers),
-            scores: Vec::with_capacity(cfg.ctx),
-            krow: vec![0.0; cfg.head_dim()],
-            vrow: vec![0.0; cfg.head_dim()],
-        }
-    }
-
-    /// One decode step; math identical to the historical
-    /// `decode_step_kv` (same op order per element).
-    pub fn step(&mut self, tok: i32, cache: &mut dyn KvSeq) -> Vec<f32> {
-        let SeqDecoder { w, keys, scores, krow, vrow } = self;
-        let w = *w;
-        let store = w.store();
-        let cfg = store.cfg;
-        let d = cfg.d;
-        let h = cfg.heads;
-        let hd = cfg.head_dim();
-        let pos = cache.pos();
-        assert!(pos < cfg.ctx, "context overflow");
-        let scale = 1.0 / (hd as f32).sqrt();
-
-        let mut x = Mat::zeros(1, d);
-        {
-            let te = &store.get("tok_emb").data
-                [(tok as usize) * d..(tok as usize + 1) * d];
-            let pe = &store.get("pos_emb").data[pos * d..(pos + 1) * d];
-            for (o, (&a, &b)) in
-                x.row_mut(0).iter_mut().zip(te.iter().zip(pe))
-            {
-                *o = a + b;
-            }
-        }
-
-        scores.resize(pos + 1, 0.0);
-        for (li, key) in keys.iter().enumerate() {
-            let mut a = x.clone();
-            layer_norm_rows(&mut a, store.vec(&key.ln1_g), store.vec(&key.ln1_b));
-            let lin = |slot: usize, inp: &Mat| -> Mat {
-                let (wname, bname) = &key.lin[slot];
-                let mut y = w.linear(wname, inp);
-                add_bias(&mut y, store.vec(bname));
-                y
-            };
-            let q = lin(0, &a);
-            let k = lin(1, &a);
-            let v = lin(2, &a);
-            // write cache at pos
-            for hi in 0..h {
-                cache.write(
-                    li,
-                    hi,
-                    &k.row(0)[hi * hd..(hi + 1) * hd],
-                    &v.row(0)[hi * hd..(hi + 1) * hd],
-                );
-            }
-            // attend over 0..=pos
-            let mut o = Mat::zeros(1, d);
-            for hi in 0..h {
-                let qrow = &q.row(0)[hi * hd..(hi + 1) * hd];
-                for (sj, sc) in scores.iter_mut().enumerate() {
-                    let kr = match cache.k_slice(li, hi, sj) {
-                        Some(s) => s,
-                        None => {
-                            cache.read_k(li, hi, sj, krow);
-                            &krow[..]
-                        }
-                    };
-                    *sc = tensor::dot(qrow, kr) * scale;
-                }
-                tensor::softmax(scores);
-                let orow = &mut o.row_mut(0)[hi * hd..(hi + 1) * hd];
-                for (sj, &w_att) in scores.iter().enumerate() {
-                    let vr = match cache.v_slice(li, hi, sj) {
-                        Some(s) => s,
-                        None => {
-                            cache.read_v(li, hi, sj, vrow);
-                            &vrow[..]
-                        }
-                    };
-                    for (ov, &vv) in orow.iter_mut().zip(vr) {
-                        *ov += w_att * vv;
-                    }
-                }
-            }
-            let attn_out = lin(3, &o);
-            x.add_assign(&attn_out);
-            let mut m = x.clone();
-            layer_norm_rows(&mut m, store.vec(&key.ln2_g), store.vec(&key.ln2_b));
-            let mut h1 = lin(4, &m);
-            gelu_tanh(&mut h1.data);
-            let h2 = lin(5, &h1);
-            x.add_assign(&h2);
-        }
-        cache.advance();
-        layer_norm_rows(&mut x, store.vec("ln_f_g"), store.vec("ln_f_b"));
-        let emb = store.get("tok_emb").as_mat();
-        let logits = x.matmul_tb(&emb);
-        logits.data
-    }
-}
-
-/// Greedy generation with the native path.
-pub fn generate_greedy(
-    w: &Weights,
-    prompt: &[i32],
-    max_new: usize,
-) -> Vec<i32> {
-    let cfg = w.store().cfg;
-    let mut cache = KvCache::new(cfg);
-    let mut dec = SeqDecoder::new(*w);
-    let mut logits = Vec::new();
-    for &t in prompt {
-        logits = dec.step(t, &mut cache);
-    }
-    let mut out = Vec::with_capacity(max_new);
-    for _ in 0..max_new {
-        if cache.len >= cfg.ctx {
-            break;
-        }
-        let next = argmax(&logits) as i32;
-        out.push(next);
-        logits = dec.step(next, &mut cache);
-    }
-    out
-}
-
 pub fn argmax(xs: &[f32]) -> usize {
     let mut best = 0;
     let mut bv = f32::NEG_INFINITY;
@@ -581,13 +342,72 @@ pub fn argmax(xs: &[f32]) -> usize {
 }
 
 // ---------------------------------------------------------------------------
-// batched decode engine (the serving hot path)
+// step plans
+// ---------------------------------------------------------------------------
+
+/// Which logits a work item wants back from the step. Mid-prompt prefill
+/// chunks take `None` (no tied-head matmul at all for their rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LogitsMode {
+    None,
+    Last,
+    All,
+}
+
+/// One unit of work in a step: a run of `tokens` for the sequence at
+/// SeqAccess index `seq`. One token is a decode position; several are a
+/// prefill chunk (consecutive prompt positions, causally masked in-step).
+pub struct StepItem {
+    pub seq: usize,
+    pub tokens: Vec<i32>,
+    pub logits: LogitsMode,
+}
+
+impl StepItem {
+    pub fn decode(seq: usize, tok: i32) -> StepItem {
+        StepItem { seq, tokens: vec![tok], logits: LogitsMode::Last }
+    }
+
+    pub fn prefill(seq: usize, tokens: Vec<i32>, logits: LogitsMode) -> StepItem {
+        assert!(!tokens.is_empty(), "empty prefill chunk");
+        StepItem { seq, tokens, logits }
+    }
+}
+
+/// A mixed batch of work items advanced together by one [`Engine::step`]:
+/// every linear runs as a single [rows, n] matmul over all items' rows,
+/// so weights stream once per step regardless of how many prompt
+/// positions ride along with the decodes.
+pub struct StepPlan {
+    pub items: Vec<StepItem>,
+}
+
+impl StepPlan {
+    /// All-decode plan: item `i` feeds `toks[i]` to sequence `i`.
+    pub fn decode(toks: &[i32]) -> StepPlan {
+        StepPlan {
+            items: toks
+                .iter()
+                .enumerate()
+                .map(|(i, &t)| StepItem::decode(i, t))
+                .collect(),
+        }
+    }
+
+    /// Total positions (activation rows) this plan advances.
+    pub fn rows(&self) -> usize {
+        self.items.iter().map(|it| it.tokens.len()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// batched multi-sequence access
 // ---------------------------------------------------------------------------
 
 /// Per-step access to a batch of per-sequence KV stores. The paged cache
 /// can hand out only one mutable slot view at a time (views alias the
-/// shared block pool), so the batched decode engine visits sequences
-/// through a closure instead of holding simultaneous `&mut` views.
+/// shared block pool), so the engine visits sequences through a closure
+/// instead of holding simultaneous `&mut` views.
 pub trait SeqAccess {
     fn count(&self) -> usize;
     fn with_seq(&mut self, i: usize, f: &mut dyn FnMut(&mut dyn KvSeq));
@@ -607,6 +427,10 @@ impl SeqAccess for SeqRefs<'_, '_> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// resolved weight plans
+// ---------------------------------------------------------------------------
+
 /// How the engine serves one linear. Built once at engine construction;
 /// the hot loop dispatches on this enum instead of string-keyed maps.
 /// Every variant borrows or repacks — the engine never clones dense
@@ -623,7 +447,7 @@ enum LinearPlan<'w> {
     PackedSparse(PackedLut, &'w Csr),
     /// unpacked-code LUT (>4-bit widths have no packed form): the same
     /// bucket kernel as `LutLayer::lut_matmul`, so bit-identity with
-    /// the sequential path holds at every code width
+    /// single-row steps holds at every code width
     Codes(&'w LutLayer),
     CodesSparse(&'w LutLayer, &'w Csr),
 }
@@ -680,7 +504,7 @@ impl LinearPlan<'_> {
     }
 }
 
-/// Resolved per-layer decode plan: layernorm/bias slices and linear
+/// Resolved per-layer plan: layernorm/bias slices and linear
 /// implementations, indexed — no name lookups or `format!` per step.
 struct LayerPlan<'w> {
     ln1_g: &'w [f32],
@@ -692,11 +516,16 @@ struct LayerPlan<'w> {
     biases: Vec<&'w [f32]>,
 }
 
+/// Query rows one attention job covers. Long prefill chunks split into
+/// tiles so a single (sequence, head) pair still parallelizes across
+/// query positions.
+const Q_TILE: usize = 8;
+
 /// Preallocated per-step scratch: activation/projection matrices, the
 /// K/V gather buffers, attention job rows, and the LUT kernel scratch.
-/// Reused across layers and steps — the batched hot loop performs no
-/// per-step heap allocation beyond the returned logits rows and the
-/// kernels' small per-thread bucket blocks.
+/// Reused across steps — the hot loop performs no per-step heap
+/// allocation beyond the returned logits and the kernels' small
+/// per-thread bucket blocks.
 struct BatchScratch {
     x: Mat,
     a: Mat,
@@ -707,15 +536,24 @@ struct BatchScratch {
     o: Mat,
     h1: Mat,
     h2: Mat,
+    /// selected post-LN rows feeding the tied head
+    xl: Mat,
     logits: Mat,
-    /// gathered K/V history, (seq, head)-major, strided by the batch's
-    /// longest sequence
+    /// gathered K/V history, (item, head)-major, strided by the step's
+    /// longest (pos + chunk) extent
     kg: Vec<f32>,
     vg: Vec<f32>,
-    /// attention job rows: `[b*h, hd + max_rows]` = output accumulator
-    /// + scores
+    /// per-(item, head) chunk rows staged contiguously for `write_rows`
+    kbuf: Vec<f32>,
+    vbuf: Vec<f32>,
+    /// attention job rows: `[Q_TILE * hd + max_rows]` = output
+    /// accumulator + scores
     jb: Vec<f32>,
+    /// attention jobs: (item, head, first query row, last query row)
+    jobs: Vec<(usize, usize, usize, usize)>,
+    /// per-item start position / first activation row
     pos: Vec<usize>,
+    row0: Vec<usize>,
     lut: LutScratch,
 }
 
@@ -732,21 +570,33 @@ impl BatchScratch {
             o: z(),
             h1: z(),
             h2: z(),
+            xl: z(),
             logits: z(),
             kg: Vec::new(),
             vg: Vec::new(),
+            kbuf: Vec::new(),
+            vbuf: Vec::new(),
             jb: Vec::new(),
+            jobs: Vec::new(),
             pos: Vec::new(),
+            row0: Vec::new(),
             lut: LutScratch::new(),
         }
     }
 }
 
-/// Batched decode engine: weights resolved, packed, and interned once,
-/// then every [`decode_step_batch`] advances all sequences through each
-/// layer together so the quantized weights stream once per token-step
-/// instead of once per sequence.
-pub struct DecodeEngine<'w> {
+// ---------------------------------------------------------------------------
+// the engine
+// ---------------------------------------------------------------------------
+
+/// Session-based inference engine: weights resolved, packed, and
+/// interned once, then every [`Engine::step`] advances a [`StepPlan`] —
+/// decode positions and prefill chunks together — through each layer so
+/// the quantized weights stream once per step instead of once per
+/// sequence or position. Serving, evaluation ([`nll_sum`] /
+/// [`forward_full`]), calibration (the [`Observer`] hook), and greedy
+/// generation all run through this one entry point.
+pub struct Engine<'w> {
     cfg: ModelConfig,
     /// token embedding, borrowed — doubles as the tied head weight
     /// (`Tensor::as_mat` clones per call; the engine never does)
@@ -755,14 +605,17 @@ pub struct DecodeEngine<'w> {
     ln_f_g: &'w [f32],
     ln_f_b: &'w [f32],
     layers: Vec<LayerPlan<'w>>,
+    /// interned parameter names (observer labels)
+    keys: Vec<LayerKeys>,
     scratch: BatchScratch,
 }
 
-impl<'w> DecodeEngine<'w> {
-    pub fn new(w: &Weights<'w>) -> DecodeEngine<'w> {
+impl<'w> Engine<'w> {
+    pub fn new(w: &Weights<'w>) -> Engine<'w> {
         let store = w.store();
         let cfg = store.cfg;
-        let layers = LayerKeys::build(cfg.layers)
+        let keys = LayerKeys::build(cfg.layers);
+        let layers = keys
             .iter()
             .map(|key| LayerPlan {
                 ln1_g: store.vec(&key.ln1_g),
@@ -777,13 +630,14 @@ impl<'w> DecodeEngine<'w> {
                 biases: key.lin.iter().map(|(_, bn)| store.vec(bn)).collect(),
             })
             .collect();
-        DecodeEngine {
+        Engine {
             cfg,
             tok_emb: store.get("tok_emb"),
             pos_emb: &store.get("pos_emb").data,
             ln_f_g: store.vec("ln_f_g"),
             ln_f_b: store.vec("ln_f_b"),
             layers,
+            keys,
             scratch: BatchScratch::new(),
         }
     }
@@ -792,8 +646,9 @@ impl<'w> DecodeEngine<'w> {
         self.cfg
     }
 
-    /// Weight bytes streamed per batched step (each linear exactly once,
-    /// regardless of batch size — the memory-bound quantity).
+    /// Weight bytes streamed per step (each linear exactly once,
+    /// regardless of how many positions the plan advances — the
+    /// memory-bound quantity).
     pub fn weight_bytes_per_step(&self) -> usize {
         self.layers
             .iter()
@@ -801,6 +656,493 @@ impl<'w> DecodeEngine<'w> {
             .map(|p| p.bytes_per_step())
             .sum()
     }
+
+    /// Advance a plan; returns one logits matrix per item ([0|1|c,
+    /// vocab] per its [`LogitsMode`]).
+    pub fn step(
+        &mut self,
+        plan: &StepPlan,
+        seqs: &mut dyn SeqAccess,
+    ) -> Vec<Mat> {
+        self.step_with(plan, seqs, None)
+    }
+
+    /// [`Engine::step`] with a calibration observer: called with every
+    /// linear's name and input rows (all items' rows concatenated),
+    /// before the matmul, in canonical order.
+    pub fn step_with(
+        &mut self,
+        plan: &StepPlan,
+        seqs: &mut dyn SeqAccess,
+        mut observer: Option<Observer>,
+    ) -> Vec<Mat> {
+        let items = &plan.items;
+        if items.is_empty() {
+            return Vec::new();
+        }
+        let cfg = self.cfg;
+        let (d, h, hd) = (cfg.d, cfg.heads, cfg.head_dim());
+        let scale = 1.0 / (hd as f32).sqrt();
+        let Engine {
+            tok_emb,
+            pos_emb,
+            ln_f_g,
+            ln_f_b,
+            layers,
+            keys,
+            scratch,
+            ..
+        } = self;
+        let BatchScratch {
+            x,
+            a,
+            q,
+            k,
+            v,
+            att,
+            o,
+            h1,
+            h2,
+            xl,
+            logits,
+            kg,
+            vg,
+            kbuf,
+            vbuf,
+            jb,
+            jobs,
+            pos,
+            row0,
+            lut,
+        } = scratch;
+
+        // per-item start positions and activation row offsets
+        pos.clear();
+        row0.clear();
+        let mut rows_total = 0usize;
+        for it in items.iter() {
+            assert!(it.seq < seqs.count(), "item seq out of range");
+            assert!(!it.tokens.is_empty(), "empty work item");
+            let mut p = 0usize;
+            seqs.with_seq(it.seq, &mut |s| p = s.pos());
+            assert!(p + it.tokens.len() <= cfg.ctx, "context overflow");
+            pos.push(p);
+            row0.push(rows_total);
+            rows_total += it.tokens.len();
+        }
+
+        // token + position embeddings (row r of item j is prompt/decode
+        // position pos[j] + r)
+        x.reset(rows_total, d);
+        for (j, it) in items.iter().enumerate() {
+            for (t, &tok) in it.tokens.iter().enumerate() {
+                let row = x.row_mut(row0[j] + t);
+                let te =
+                    &tok_emb.data[(tok as usize) * d..(tok as usize + 1) * d];
+                let pe = &pos_emb[(pos[j] + t) * d..(pos[j] + t + 1) * d];
+                for (xo, (&e1, &e2)) in row.iter_mut().zip(te.iter().zip(pe)) {
+                    *xo = e1 + e2;
+                }
+            }
+        }
+
+        // gather/job strides sized to this step's longest extent (not
+        // ctx); Vec::resize retains the high-water allocation across
+        // steps
+        let max_rows = items
+            .iter()
+            .enumerate()
+            .map(|(j, it)| pos[j] + it.tokens.len())
+            .max()
+            .expect("items nonempty");
+        let max_c =
+            items.iter().map(|it| it.tokens.len()).max().expect("nonempty");
+        let gstride = max_rows * hd;
+        let jstride = Q_TILE * hd + max_rows;
+        kg.resize(items.len() * h * gstride, 0.0);
+        vg.resize(items.len() * h * gstride, 0.0);
+        kbuf.resize(max_c * hd, 0.0);
+        vbuf.resize(max_c * hd, 0.0);
+
+        // attention jobs: (item, head) pairs tiled over query rows so a
+        // single long prefill chunk still spreads across threads; each
+        // job owns a disjoint row of jb = [out accumulator | scores]
+        jobs.clear();
+        for (j, it) in items.iter().enumerate() {
+            let c = it.tokens.len();
+            for hi in 0..h {
+                let mut t0 = 0usize;
+                while t0 < c {
+                    let t1 = (t0 + Q_TILE).min(c);
+                    jobs.push((j, hi, t0, t1));
+                    t0 = t1;
+                }
+            }
+        }
+        jb.resize(jobs.len() * jstride, 0.0);
+
+        for (li, lp) in layers.iter().enumerate() {
+            a.copy_from(x);
+            layer_norm_rows(a, lp.ln1_g, lp.ln1_b);
+            let key = &keys[li];
+            apply_linear(lp, key, 0, a, q, rows_total, d, lut, &mut observer);
+            apply_linear(lp, key, 1, a, k, rows_total, d, lut, &mut observer);
+            apply_linear(lp, key, 2, a, v, rows_total, d, lut, &mut observer);
+
+            // append this step's K/V rows (chunk rows staged into one
+            // contiguous buffer per (item, head) -> one write_rows
+            // call), then gather each sequence's history including the
+            // just-written positions so the attention math below can run
+            // thread-parallel over plain buffers
+            for (j, it) in items.iter().enumerate() {
+                let c = it.tokens.len();
+                let hist = pos[j] + c;
+                let (kr, vr) = (&*k, &*v);
+                let r0 = row0[j];
+                seqs.with_seq(it.seq, &mut |s| {
+                    for hi in 0..h {
+                        if c == 1 {
+                            // decode hot path: the single row is already
+                            // contiguous in the projection — no staging
+                            s.write(
+                                li,
+                                hi,
+                                pos[j],
+                                &kr.row(r0)[hi * hd..(hi + 1) * hd],
+                                &vr.row(r0)[hi * hd..(hi + 1) * hd],
+                            );
+                        } else {
+                            for t in 0..c {
+                                kbuf[t * hd..(t + 1) * hd].copy_from_slice(
+                                    &kr.row(r0 + t)[hi * hd..(hi + 1) * hd],
+                                );
+                                vbuf[t * hd..(t + 1) * hd].copy_from_slice(
+                                    &vr.row(r0 + t)[hi * hd..(hi + 1) * hd],
+                                );
+                            }
+                            s.write_rows(
+                                li,
+                                hi,
+                                pos[j],
+                                c,
+                                &kbuf[..c * hd],
+                                &vbuf[..c * hd],
+                            );
+                        }
+                        let g = (j * h + hi) * gstride;
+                        s.read_k_rows(li, hi, 0, hist, &mut kg[g..g + hist * hd]);
+                        s.read_v_rows(li, hi, 0, hist, &mut vg[g..g + hist * hd]);
+                    }
+                });
+            }
+
+            // causal in-step attention: query row t of item j attends
+            // over positions 0..=pos[j]+t — identical per-row op order
+            // to a single-position decode at that position
+            let att_ops: usize = items
+                .iter()
+                .enumerate()
+                .map(|(j, it)| {
+                    let c = it.tokens.len();
+                    (0..c).map(|t| pos[j] + t + 1).sum::<usize>()
+                })
+                .sum::<usize>()
+                * hd
+                * 2
+                * h;
+            let threads = pool::threads_for(att_ops);
+            let qref: &Mat = q;
+            let kgr: &[f32] = kg;
+            let vgr: &[f32] = vg;
+            let posr: &[usize] = pos;
+            let row0r: &[usize] = row0;
+            let jobsr: &[(usize, usize, usize, usize)] = jobs;
+            pool::par_rows_mut(
+                &mut jb[..jobsr.len() * jstride],
+                jstride,
+                threads,
+                |job0, chunk| {
+                    for (r, jrow) in chunk.chunks_mut(jstride).enumerate() {
+                        let (j, hi, t0, t1) = jobsr[job0 + r];
+                        let gi = (j * h + hi) * gstride;
+                        let (obuf, rest) = jrow.split_at_mut(Q_TILE * hd);
+                        for t in t0..t1 {
+                            let rows_t = posr[j] + t + 1;
+                            let scores = &mut rest[..rows_t];
+                            let qrow = &qref.row(row0r[j] + t)
+                                [hi * hd..(hi + 1) * hd];
+                            let kbase = &kgr[gi..gi + rows_t * hd];
+                            for (sj, sc) in scores.iter_mut().enumerate() {
+                                *sc = tensor::dot(
+                                    qrow,
+                                    &kbase[sj * hd..(sj + 1) * hd],
+                                ) * scale;
+                            }
+                            tensor::softmax(scores);
+                            let orow =
+                                &mut obuf[(t - t0) * hd..(t - t0 + 1) * hd];
+                            orow.fill(0.0);
+                            let vbase = &vgr[gi..gi + rows_t * hd];
+                            for (sj, &w_att) in scores.iter().enumerate() {
+                                let vrow = &vbase[sj * hd..(sj + 1) * hd];
+                                for (ov, &vv) in orow.iter_mut().zip(vrow) {
+                                    *ov += w_att * vv;
+                                }
+                            }
+                        }
+                    }
+                },
+            );
+            att.reset(rows_total, d);
+            for (ji, &(j, hi, t0, t1)) in jobs.iter().enumerate() {
+                let jrow = &jb[ji * jstride..];
+                for t in t0..t1 {
+                    att.row_mut(row0[j] + t)[hi * hd..(hi + 1) * hd]
+                        .copy_from_slice(
+                            &jrow[(t - t0) * hd..(t - t0 + 1) * hd],
+                        );
+                }
+            }
+
+            apply_linear(lp, key, 3, att, o, rows_total, d, lut, &mut observer);
+            x.add_assign(o);
+            a.copy_from(x);
+            layer_norm_rows(a, lp.ln2_g, lp.ln2_b);
+            apply_linear(
+                lp,
+                key,
+                4,
+                a,
+                h1,
+                rows_total,
+                cfg.ff,
+                lut,
+                &mut observer,
+            );
+            gelu_tanh(&mut h1.data);
+            apply_linear(lp, key, 5, h1, h2, rows_total, d, lut, &mut observer);
+            x.add_assign(h2);
+        }
+
+        // commit every item's appended positions
+        for it in items.iter() {
+            let c = it.tokens.len();
+            seqs.with_seq(it.seq, &mut |s| s.advance(c));
+        }
+
+        layer_norm_rows(x, ln_f_g, ln_f_b);
+        // tied head straight off the borrowed embedding tensor, only for
+        // the rows the plan asked logits for
+        let vocab = tok_emb.shape[0];
+        let mut sel: Vec<(usize, usize)> = Vec::new(); // (item, x row)
+        for (j, it) in items.iter().enumerate() {
+            let c = it.tokens.len();
+            match it.logits {
+                LogitsMode::None => {}
+                LogitsMode::Last => sel.push((j, row0[j] + c - 1)),
+                LogitsMode::All => {
+                    sel.extend((0..c).map(|t| (j, row0[j] + t)))
+                }
+            }
+        }
+        xl.reset(sel.len(), d);
+        for (r, &(_, xr)) in sel.iter().enumerate() {
+            xl.row_mut(r).copy_from_slice(x.row(xr));
+        }
+        logits.reset(sel.len(), vocab);
+        tensor::matmul_tb_slice_into(xl, &tok_emb.data, vocab, logits);
+        let mut out: Vec<Mat> = items
+            .iter()
+            .map(|it| {
+                let r = match it.logits {
+                    LogitsMode::None => 0,
+                    LogitsMode::Last => 1,
+                    LogitsMode::All => it.tokens.len(),
+                };
+                Mat::zeros(r, vocab)
+            })
+            .collect();
+        let mut cursor = vec![0usize; items.len()];
+        for (r, &(j, _)) in sel.iter().enumerate() {
+            out[j]
+                .row_mut(cursor[j])
+                .copy_from_slice(logits.row(r));
+            cursor[j] += 1;
+        }
+        out
+    }
+
+    /// All-decode convenience: one token per sequence, last-row logits.
+    pub fn decode_batch(
+        &mut self,
+        toks: &[i32],
+        seqs: &mut dyn SeqAccess,
+    ) -> Vec<Vec<f32>> {
+        assert_eq!(seqs.count(), toks.len(), "one token per sequence");
+        self.step(&StepPlan::decode(toks), seqs)
+            .into_iter()
+            .map(|m| m.data)
+            .collect()
+    }
+
+    /// Full causal forward over a batch of equal-length sequences as
+    /// full-length prefill chunks (fresh dense caches). Returns logits
+    /// [(B*S), vocab].
+    pub fn prefill_full(
+        &mut self,
+        tokens: &[Vec<i32>],
+        observer: Option<Observer>,
+    ) -> Mat {
+        let cfg = self.cfg;
+        let bsz = tokens.len();
+        let s_len = tokens[0].len();
+        assert!(tokens.iter().all(|t| t.len() == s_len));
+        assert!(s_len <= cfg.ctx);
+        let mut caches: Vec<KvCache> = (0..bsz)
+            .map(|_| KvCache::with_capacity(cfg, s_len))
+            .collect();
+        let plan = StepPlan {
+            items: tokens
+                .iter()
+                .enumerate()
+                .map(|(i, t)| {
+                    StepItem::prefill(i, t.clone(), LogitsMode::All)
+                })
+                .collect(),
+        };
+        let mut refs: Vec<&mut dyn KvSeq> = caches
+            .iter_mut()
+            .map(|c| c as &mut dyn KvSeq)
+            .collect();
+        let outs = self.step_with(&plan, &mut SeqRefs(&mut refs), observer);
+        let vocab = outs[0].cols;
+        let mut out = Mat::zeros(bsz * s_len, vocab);
+        for (b, m) in outs.iter().enumerate() {
+            out.data[b * s_len * vocab..(b + 1) * s_len * vocab]
+                .copy_from_slice(&m.data);
+        }
+        out
+    }
+
+    /// Sum of next-token NLLs over a batch of equal-length sequences,
+    /// prefilled in `chunk`-position pieces (`usize::MAX` = one chunk).
+    /// Dense-cache math is identical at every chunk size.
+    pub fn nll_sum_chunked(
+        &mut self,
+        tokens: &[Vec<i32>],
+        chunk: usize,
+    ) -> f64 {
+        let cfg = self.cfg;
+        let bsz = tokens.len();
+        let s_len = tokens[0].len();
+        assert!(tokens.iter().all(|t| t.len() == s_len));
+        assert!(s_len <= cfg.ctx);
+        let chunk = chunk.max(1);
+        let vocab = cfg.vocab;
+        let mut caches: Vec<KvCache> = (0..bsz)
+            .map(|_| KvCache::with_capacity(cfg, s_len))
+            .collect();
+        let mut total = 0.0f64;
+        let mut start = 0usize;
+        while start < s_len {
+            let end = (start + chunk).min(s_len);
+            let plan = StepPlan {
+                items: tokens
+                    .iter()
+                    .enumerate()
+                    .map(|(i, t)| {
+                        StepItem::prefill(
+                            i,
+                            t[start..end].to_vec(),
+                            LogitsMode::All,
+                        )
+                    })
+                    .collect(),
+            };
+            let mut refs: Vec<&mut dyn KvSeq> = caches
+                .iter_mut()
+                .map(|c| c as &mut dyn KvSeq)
+                .collect();
+            let outs = self.step(&plan, &mut SeqRefs(&mut refs));
+            for (b, m) in outs.iter().enumerate() {
+                for p in start..end {
+                    if p + 1 >= s_len {
+                        continue; // last position predicts nothing
+                    }
+                    let row = &m.row(p - start)[..vocab];
+                    total -= tensor::log_softmax_at(
+                        row,
+                        tokens[b][p + 1] as usize,
+                    ) as f64;
+                }
+            }
+            start = end;
+        }
+        total
+    }
+
+    /// Greedy generation: the prompt as one prefill chunk, then decode
+    /// steps (bit-identical to feeding the prompt token-by-token).
+    pub fn generate_greedy(
+        &mut self,
+        prompt: &[i32],
+        max_new: usize,
+    ) -> Vec<i32> {
+        let cfg = self.cfg;
+        let mut out = Vec::with_capacity(max_new);
+        if prompt.is_empty() {
+            return out;
+        }
+        let mut cache = KvCache::new(cfg);
+        let plan = StepPlan {
+            items: vec![StepItem::prefill(
+                0,
+                prompt.to_vec(),
+                LogitsMode::Last,
+            )],
+        };
+        let mut logits = {
+            let mut refs: Vec<&mut dyn KvSeq> = vec![&mut cache];
+            let outs = self.step(&plan, &mut SeqRefs(&mut refs));
+            outs.into_iter().next().expect("one item").data
+        };
+        for _ in 0..max_new {
+            if cache.len >= cfg.ctx {
+                break;
+            }
+            let next = argmax(&logits) as i32;
+            out.push(next);
+            let mut refs: Vec<&mut dyn KvSeq> = vec![&mut cache];
+            logits = self
+                .decode_batch(&[next], &mut SeqRefs(&mut refs))
+                .into_iter()
+                .next()
+                .expect("one row");
+        }
+        out
+    }
+}
+
+/// One linear of a step: observer hook, shape the output, dispatch the
+/// resolved plan, add bias.
+#[allow(clippy::too_many_arguments)]
+fn apply_linear(
+    lp: &LayerPlan,
+    key: &LayerKeys,
+    slot: usize,
+    inp: &Mat,
+    out: &mut Mat,
+    rows: usize,
+    cols: usize,
+    lut: &mut LutScratch,
+    observer: &mut Option<Observer>,
+) {
+    if let Some(obs) = observer.as_mut() {
+        obs(&key.lin[slot].0, inp);
+    }
+    out.reset(rows, cols);
+    lp.linears[slot].apply(inp, lut, out);
+    add_bias(out, lp.biases[slot]);
 }
 
 fn plan_linear<'w>(w: &Weights<'w>, name: &str) -> LinearPlan<'w> {
@@ -823,194 +1165,33 @@ fn plan_linear<'w>(w: &Weights<'w>, name: &str) -> LinearPlan<'w> {
     }
 }
 
-/// One decode step advancing a whole batch of sequences through each
-/// layer together. Every linear runs as a single `[b, n]` matmul (or
-/// packed LUT-mpGEMM), attention runs one job per (sequence, head)
-/// against that sequence's own cache history, and the per-sequence op
-/// order is identical to [`decode_step_kv`] — so for dense (f32) KV
-/// stores the logits are bit-identical to the sequential path at any
-/// batch size or thread count.
-pub fn decode_step_batch(
-    engine: &mut DecodeEngine,
-    toks: &[i32],
-    seqs: &mut dyn SeqAccess,
-) -> Vec<Vec<f32>> {
-    let b = toks.len();
-    assert_eq!(seqs.count(), b, "one token per sequence");
-    if b == 0 {
-        return Vec::new();
-    }
-    let cfg = engine.cfg;
-    let (d, h, hd) = (cfg.d, cfg.heads, cfg.head_dim());
-    let scale = 1.0 / (hd as f32).sqrt();
-    let DecodeEngine {
-        tok_emb,
-        pos_emb,
-        ln_f_g,
-        ln_f_b,
-        layers,
-        scratch,
-        ..
-    } = engine;
-    let BatchScratch {
-        x,
-        a,
-        q,
-        k,
-        v,
-        att,
-        o,
-        h1,
-        h2,
-        logits,
-        kg,
-        vg,
-        jb,
-        pos,
-        lut,
-    } = scratch;
+// ---------------------------------------------------------------------------
+// engine-backed convenience entry points (eval / calibration / tasks)
+// ---------------------------------------------------------------------------
 
-    pos.clear();
-    for i in 0..b {
-        let mut p = 0usize;
-        seqs.with_seq(i, &mut |s| p = s.pos());
-        assert!(p < cfg.ctx, "context overflow");
-        pos.push(p);
-    }
+/// Full causal forward over a batch of equal-length sequences.
+/// tokens: B x S. Returns logits [(B*S), vocab]. One-shot wrapper over
+/// [`Engine::prefill_full`]; loops should hold an [`Engine`] instead.
+pub fn forward_full(
+    w: &Weights,
+    tokens: &[Vec<i32>],
+    observer: Option<Observer>,
+) -> Mat {
+    Engine::new(w).prefill_full(tokens, observer)
+}
 
-    // token + position embeddings
-    x.reset(b, d);
-    for (i, (&t, row)) in
-        toks.iter().zip(x.data.chunks_mut(d)).enumerate()
-    {
-        let te = &tok_emb.data[(t as usize) * d..(t as usize + 1) * d];
-        let pe = &pos_emb[pos[i] * d..(pos[i] + 1) * d];
-        for (xo, (&e1, &e2)) in row.iter_mut().zip(te.iter().zip(pe)) {
-            *xo = e1 + e2;
-        }
-    }
+/// Sum of next-token NLLs over a batch (matches python nll_sum).
+pub fn nll_sum(w: &Weights, tokens: &[Vec<i32>]) -> f64 {
+    Engine::new(w).nll_sum_chunked(tokens, usize::MAX)
+}
 
-    // gather/job strides sized to the longest sequence in *this* batch
-    // (not ctx), so short batches keep the scratch arena small and the
-    // copies cache-resident; Vec::resize retains the high-water
-    // allocation across steps
-    let max_rows = pos.iter().map(|&p| p + 1).max().expect("b > 0");
-    let gstride = max_rows * hd; // per-(seq, head) gather region
-    let jstride = hd + max_rows; // job row: out accumulator + scores
-    kg.resize(b * h * gstride, 0.0);
-    vg.resize(b * h * gstride, 0.0);
-    jb.resize(b * h * jstride, 0.0);
-
-    for (li, lp) in layers.iter().enumerate() {
-        a.copy_from(x);
-        layer_norm_rows(a, lp.ln1_g, lp.ln1_b);
-        q.reset(b, d);
-        lp.linears[0].apply(a, lut, q);
-        add_bias(q, lp.biases[0]);
-        k.reset(b, d);
-        lp.linears[1].apply(a, lut, k);
-        add_bias(k, lp.biases[1]);
-        v.reset(b, d);
-        lp.linears[2].apply(a, lut, v);
-        add_bias(v, lp.biases[2]);
-
-        // append this step's K/V rows, then gather each sequence's
-        // history (including the just-written position) so the math
-        // below can run thread-parallel over plain buffers
-        for i in 0..b {
-            let rows = pos[i] + 1;
-            let (kx, vx) = (k.row(i), v.row(i));
-            seqs.with_seq(i, &mut |s| {
-                for hi in 0..h {
-                    s.write(
-                        li,
-                        hi,
-                        &kx[hi * hd..(hi + 1) * hd],
-                        &vx[hi * hd..(hi + 1) * hd],
-                    );
-                }
-                for hi in 0..h {
-                    let g = (i * h + hi) * gstride;
-                    s.read_k_rows(li, hi, 0, rows, &mut kg[g..g + rows * hd]);
-                    s.read_v_rows(li, hi, 0, rows, &mut vg[g..g + rows * hd]);
-                }
-            });
-        }
-
-        // attention: one job per (sequence, head); each job owns a
-        // disjoint row of jb = [out accumulator | scores]
-        let att_ops =
-            pos.iter().map(|&p| (p + 1) * hd * 2).sum::<usize>() * h;
-        let threads = pool::threads_for(att_ops);
-        let qref: &Mat = q;
-        let kgr: &[f32] = kg;
-        let vgr: &[f32] = vg;
-        let posr: &[usize] = pos;
-        pool::par_rows_mut(
-            &mut jb[..b * h * jstride],
-            jstride,
-            threads,
-            |row0, chunk| {
-                for (r, jrow) in chunk.chunks_mut(jstride).enumerate() {
-                    let ji = row0 + r;
-                    let (i, hi) = (ji / h, ji % h);
-                    let rows = posr[i] + 1;
-                    let (orow, rest) = jrow.split_at_mut(hd);
-                    let scores = &mut rest[..rows];
-                    let qrow = &qref.row(i)[hi * hd..(hi + 1) * hd];
-                    let kbase = &kgr[ji * gstride..ji * gstride + rows * hd];
-                    for (sj, sc) in scores.iter_mut().enumerate() {
-                        *sc = tensor::dot(qrow, &kbase[sj * hd..(sj + 1) * hd])
-                            * scale;
-                    }
-                    tensor::softmax(scores);
-                    orow.fill(0.0);
-                    let vbase = &vgr[ji * gstride..ji * gstride + rows * hd];
-                    for (sj, &w_att) in scores.iter().enumerate() {
-                        let vr = &vbase[sj * hd..(sj + 1) * hd];
-                        for (ov, &vv) in orow.iter_mut().zip(vr) {
-                            *ov += w_att * vv;
-                        }
-                    }
-                }
-            },
-        );
-        att.reset(b, d);
-        for ji in 0..b * h {
-            let (i, hi) = (ji / h, ji % h);
-            att.row_mut(i)[hi * hd..(hi + 1) * hd]
-                .copy_from_slice(&jb[ji * jstride..ji * jstride + hd]);
-        }
-
-        o.reset(b, d);
-        lp.linears[3].apply(att, lut, o);
-        add_bias(o, lp.biases[3]);
-        x.add_assign(o);
-        a.copy_from(x);
-        layer_norm_rows(a, lp.ln2_g, lp.ln2_b);
-        h1.reset(b, cfg.ff);
-        lp.linears[4].apply(a, lut, h1);
-        add_bias(h1, lp.biases[4]);
-        gelu_tanh(&mut h1.data);
-        h2.reset(b, d);
-        lp.linears[5].apply(h1, lut, h2);
-        add_bias(h2, lp.biases[5]);
-        x.add_assign(h2);
-    }
-
-    for i in 0..b {
-        seqs.with_seq(i, &mut |s| s.advance());
-    }
-
-    layer_norm_rows(x, ln_f_g, ln_f_b);
-    // tied head straight off the borrowed embedding tensor
-    logits.reset(b, tok_emb.shape[0]);
-    tensor::matmul_tb_slice_into(x, &tok_emb.data, tok_emb.shape[0], logits);
-    logits
-        .data
-        .chunks_exact(logits.cols)
-        .map(|r| r.to_vec())
-        .collect()
+/// Greedy generation with the native path (one-shot wrapper).
+pub fn generate_greedy(
+    w: &Weights,
+    prompt: &[i32],
+    max_new: usize,
+) -> Vec<i32> {
+    Engine::new(w).generate_greedy(prompt, max_new)
 }
 
 #[cfg(test)]
@@ -1022,6 +1203,21 @@ mod tests {
     fn micro() -> WeightStore {
         let cfg = ModelConfig::builtin("opt-micro").unwrap();
         WeightStore::random("t", cfg, 11)
+    }
+
+    /// One single-position step through a fresh plan (the per-token
+    /// reference path used by the bit-identity tests).
+    fn decode_one(
+        engine: &mut Engine,
+        tok: i32,
+        cache: &mut dyn KvSeq,
+    ) -> Vec<f32> {
+        let mut refs: Vec<&mut dyn KvSeq> = vec![cache];
+        engine
+            .decode_batch(&[tok], &mut SeqRefs(&mut refs))
+            .into_iter()
+            .next()
+            .unwrap()
     }
 
     #[test]
@@ -1041,9 +1237,10 @@ mod tests {
         let seq: Vec<i32> = vec![10, 65, 97, 32, 101, 120, 5];
         let logits_full = forward_full(&w, &[seq.clone()], None);
         let mut cache = KvCache::new(s.cfg);
+        let mut engine = Engine::new(&w);
         let mut last = Vec::new();
         for &t in &seq {
-            last = decode_step(&w, t, &mut cache);
+            last = decode_one(&mut engine, t, &mut cache);
         }
         let expect = logits_full.row(seq.len() - 1);
         assert!(
@@ -1051,6 +1248,116 @@ mod tests {
             "maxdiff {}",
             prop::max_abs_diff(&last, expect)
         );
+    }
+
+    #[test]
+    fn chunked_prefill_bitwise_matches_per_token() {
+        let s = micro();
+        let w = Weights::Fp(&s);
+        let prompt: Vec<i32> = (0..23).map(|i| (i * 31 + 7) % 256).collect();
+
+        // per-token reference
+        let mut eng_ref = Engine::new(&w);
+        let mut c_ref = KvCache::new(s.cfg);
+        let mut last_ref = Vec::new();
+        for &t in &prompt {
+            last_ref = decode_one(&mut eng_ref, t, &mut c_ref);
+        }
+
+        for chunk in [1usize, 7, 64, 999] {
+            let mut engine = Engine::new(&w);
+            let mut cache = KvCache::new(s.cfg);
+            let mut last = Vec::new();
+            let mut fed = 0usize;
+            while fed < prompt.len() {
+                let take = chunk.min(prompt.len() - fed);
+                let plan = StepPlan {
+                    items: vec![StepItem::prefill(
+                        0,
+                        prompt[fed..fed + take].to_vec(),
+                        LogitsMode::Last,
+                    )],
+                };
+                let mut refs: Vec<&mut dyn KvSeq> = vec![&mut cache];
+                last = engine
+                    .step(&plan, &mut SeqRefs(&mut refs))
+                    .into_iter()
+                    .next()
+                    .unwrap()
+                    .data;
+                fed += take;
+            }
+            assert_eq!(last, last_ref, "chunk {}", chunk);
+            // cache state must match too: one more decode agrees
+            let mut c2 = c_ref.clone();
+            let a = decode_one(&mut engine, 42, &mut cache);
+            let b = decode_one(&mut eng_ref, 42, &mut c2);
+            assert_eq!(a, b, "cache divergence after chunk {}", chunk);
+        }
+    }
+
+    #[test]
+    fn mixed_prefill_and_decode_step_matches_separate() {
+        // one step advancing a prefill chunk and a decode position
+        // together must equal running them in separate steps
+        let s = micro();
+        let w = Weights::Fp(&s);
+        let prompt: Vec<i32> = vec![3, 1, 4, 1, 5, 9, 2, 6];
+
+        // warm a decode sequence
+        let mut eng_a = Engine::new(&w);
+        let mut dec_cache = KvCache::new(s.cfg);
+        for &t in &[10i32, 20, 30] {
+            decode_one(&mut eng_a, t, &mut dec_cache);
+        }
+        let mut dec_cache_b = dec_cache.clone();
+
+        // separate: prefill alone, decode alone
+        let mut pre_cache = KvCache::new(s.cfg);
+        let pre_logits = {
+            let plan = StepPlan {
+                items: vec![StepItem::prefill(
+                    0,
+                    prompt.clone(),
+                    LogitsMode::Last,
+                )],
+            };
+            let mut refs: Vec<&mut dyn KvSeq> = vec![&mut pre_cache];
+            eng_a.step(&plan, &mut SeqRefs(&mut refs))[0].data.clone()
+        };
+        let dec_logits = decode_one(&mut eng_a, 40, &mut dec_cache);
+
+        // mixed plan in one step
+        let mut eng_b = Engine::new(&w);
+        let mut pre_cache_b = KvCache::new(s.cfg);
+        let plan = StepPlan {
+            items: vec![
+                StepItem::prefill(0, prompt.clone(), LogitsMode::Last),
+                StepItem::decode(1, 40),
+            ],
+        };
+        let mut refs: Vec<&mut dyn KvSeq> =
+            vec![&mut pre_cache_b, &mut dec_cache_b];
+        let outs = eng_b.step(&plan, &mut SeqRefs(&mut refs));
+        assert_eq!(outs[0].data, pre_logits, "prefill item");
+        assert_eq!(outs[1].data, dec_logits, "decode item");
+    }
+
+    #[test]
+    fn all_logits_mode_matches_forward_full_rows() {
+        let s = micro();
+        let w = Weights::Fp(&s);
+        let seq: Vec<i32> = vec![7, 11, 13, 17, 19];
+        let full = forward_full(&w, &[seq.clone()], None);
+        let mut engine = Engine::new(&w);
+        let mut cache = KvCache::new(s.cfg);
+        let plan = StepPlan {
+            items: vec![StepItem::prefill(0, seq.clone(), LogitsMode::All)],
+        };
+        let mut refs: Vec<&mut dyn KvSeq> = vec![&mut cache];
+        let outs = engine.step(&plan, &mut SeqRefs(&mut refs));
+        assert_eq!(outs[0].rows, seq.len());
+        assert_eq!(outs[0].data, full.data);
     }
 
     #[test]
@@ -1070,6 +1377,28 @@ mod tests {
             n_ab,
             n_a + n_b
         );
+    }
+
+    #[test]
+    fn nll_chunked_matches_one_shot() {
+        let s = micro();
+        let w = Weights::Fp(&s);
+        let toks = vec![
+            (0..32).map(|i| (i * 5 + 1) % 256).collect::<Vec<i32>>(),
+            (0..32).map(|i| (i * 3 + 9) % 256).collect::<Vec<i32>>(),
+        ];
+        let mut engine = Engine::new(&w);
+        let full = engine.nll_sum_chunked(&toks, usize::MAX);
+        for chunk in [1usize, 7, 16, 64] {
+            let got = engine.nll_sum_chunked(&toks, chunk);
+            assert!(
+                prop::close(got, full, 1e-9, 1e-9),
+                "chunk {}: {} vs {}",
+                chunk,
+                got,
+                full
+            );
+        }
     }
 
     #[test]
@@ -1095,16 +1424,39 @@ mod tests {
     }
 
     #[test]
+    fn generate_matches_per_token_prompt_feed() {
+        let s = micro();
+        let w = Weights::Fp(&s);
+        let prompt: Vec<i32> = vec![5, 80, 200, 3, 17];
+        let chunked = generate_greedy(&w, &prompt, 6);
+        // per-token prompt feed reference
+        let mut engine = Engine::new(&w);
+        let mut cache = KvCache::new(s.cfg);
+        let mut logits = Vec::new();
+        for &t in &prompt {
+            logits = decode_one(&mut engine, t, &mut cache);
+        }
+        let mut expect = Vec::new();
+        for _ in 0..6 {
+            let next = argmax(&logits) as i32;
+            expect.push(next);
+            logits = decode_one(&mut engine, next, &mut cache);
+        }
+        assert_eq!(chunked, expect);
+    }
+
+    #[test]
     fn batched_decode_matches_sequential_bitwise() {
         let s = micro();
         let w = Weights::Fp(&s);
-        // ragged warmup through the sequential path
+        // ragged warmup through single-item steps
         let prompts: [&[i32]; 3] = [&[1, 2, 3], &[9], &[5, 6, 7, 8, 20]];
+        let mut eng_ref = Engine::new(&w);
         let mut caches: Vec<KvCache> =
             prompts.iter().map(|_| KvCache::new(s.cfg)).collect();
         for (p, c) in prompts.iter().zip(&mut caches) {
             for &t in *p {
-                decode_step_kv(&w, t, c);
+                decode_one(&mut eng_ref, t, c);
             }
         }
         let toks = [11i32, 22, 33];
@@ -1112,48 +1464,31 @@ mod tests {
         let seq_logits: Vec<Vec<f32>> = toks
             .iter()
             .zip(&mut seq_caches)
-            .map(|(&t, c)| decode_step_kv(&w, t, c))
+            .map(|(&t, c)| decode_one(&mut eng_ref, t, c))
             .collect();
 
-        let mut engine = DecodeEngine::new(&w);
+        let mut engine = Engine::new(&w);
         let mut refs: Vec<&mut dyn KvSeq> = caches
             .iter_mut()
             .map(|c| c as &mut dyn KvSeq)
             .collect();
-        let got =
-            decode_step_batch(&mut engine, &toks, &mut SeqRefs(&mut refs));
+        let got = engine.decode_batch(&toks, &mut SeqRefs(&mut refs));
         assert_eq!(got, seq_logits, "batched logits must be bit-identical");
 
         // the cache state written by the batched step must match too:
-        // one more sequential step on both sides agrees
+        // one more step on both sides agrees
         for (c_b, c_s) in caches.iter_mut().zip(&mut seq_caches) {
-            let a = decode_step_kv(&w, 40, c_b);
-            let b = decode_step_kv(&w, 40, c_s);
+            let a = decode_one(&mut engine, 40, c_b);
+            let b = decode_one(&mut eng_ref, 40, c_s);
             assert_eq!(a, b, "cache divergence after batched step");
         }
     }
 
     #[test]
-    fn batched_decode_batch_of_one_matches() {
+    fn engine_weight_bytes_accounting() {
         let s = micro();
         let w = Weights::Fp(&s);
-        let mut engine = DecodeEngine::new(&w);
-        let mut c_batch = KvCache::new(s.cfg);
-        let mut c_seq = KvCache::new(s.cfg);
-        for &t in &[7i32, 3, 250, 0] {
-            let seq = decode_step_kv(&w, t, &mut c_seq);
-            let mut refs: Vec<&mut dyn KvSeq> = vec![&mut c_batch];
-            let got =
-                decode_step_batch(&mut engine, &[t], &mut SeqRefs(&mut refs));
-            assert_eq!(got[0], seq);
-        }
-    }
-
-    #[test]
-    fn decode_engine_weight_bytes_accounting() {
-        let s = micro();
-        let w = Weights::Fp(&s);
-        let engine = DecodeEngine::new(&w);
+        let engine = Engine::new(&w);
         let expect: usize = s
             .cfg
             .linear_shapes()
@@ -1161,20 +1496,6 @@ mod tests {
             .map(|(_, m, n)| m * n * 4)
             .sum();
         assert_eq!(engine.weight_bytes_per_step(), expect);
-    }
-
-    #[test]
-    fn seq_decoder_matches_one_shot_steps() {
-        let s = micro();
-        let w = Weights::Fp(&s);
-        let mut dec = SeqDecoder::new(w);
-        let mut c1 = KvCache::new(s.cfg);
-        let mut c2 = KvCache::new(s.cfg);
-        for &t in &[4i32, 99, 1, 255] {
-            let a = dec.step(t, &mut c1);
-            let b = decode_step_kv(&w, t, &mut c2);
-            assert_eq!(a, b, "hoisted-scratch decoder must be bitwise");
-        }
     }
 
     #[test]

@@ -55,6 +55,12 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// `get_usize` with a floor — for knobs where 0 is meaningless
+    /// (e.g. `--prefill-chunk` must feed at least one position).
+    pub fn get_usize_min(&self, key: &str, default: usize, min: usize) -> usize {
+        self.get_usize(key, default).max(min)
+    }
+
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key)
             .and_then(|v| v.parse().ok())
@@ -93,6 +99,13 @@ mod tests {
         assert_eq!(a.get_usize("n", 7), 7);
         assert_eq!(a.get_f64("r", 0.5), 0.5);
         assert!(!a.has_flag("q"));
+    }
+
+    #[test]
+    fn usize_min_clamps() {
+        let a = parse(&["--prefill-chunk", "0"]);
+        assert_eq!(a.get_usize_min("prefill-chunk", 128, 1), 1);
+        assert_eq!(a.get_usize_min("absent", 128, 1), 128);
     }
 
     #[test]

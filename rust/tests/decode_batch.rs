@@ -1,5 +1,5 @@
-//! Batched decode engine integration tests: `decode_step_batch` pinned
-//! against per-sequence `decode_step_kv` across mixed batch sizes,
+//! Engine step integration tests: multi-item `Engine::step` pinned
+//! against per-sequence single-item steps across mixed batch sizes,
 //! ragged positions, dense/LUT/LutSparse linears, and contiguous/paged
 //! (F32 + LUT) KV stores. Dense stores must agree **bitwise**; LUT block
 //! stores within 1e-3.
@@ -7,10 +7,7 @@
 use std::collections::BTreeMap;
 
 use ganq::kv::{F32Blocks, KvLayout, LutBlocks, PagedKv};
-use ganq::model::forward::{
-    decode_step_batch, decode_step_kv, DecodeEngine, KvCache, KvSeq,
-    SeqRefs, Weights,
-};
+use ganq::model::forward::{Engine, KvCache, KvSeq, SeqRefs, Weights};
 use ganq::model::{LayerWeights, ModelConfig, QuantizedModel, WeightStore};
 use ganq::quant::ganq::fit_codebook_identity;
 use ganq::quant::lut::{lut_from_parts, LutLayer};
@@ -22,6 +19,16 @@ use ganq::util::rng::Rng;
 fn micro_store(seed: u64) -> WeightStore {
     let cfg = ModelConfig::builtin("opt-micro").unwrap();
     WeightStore::random("t", cfg, seed)
+}
+
+/// One single-position step for one sequence (the per-token reference).
+fn decode_one(engine: &mut Engine, tok: i32, cache: &mut dyn KvSeq) -> Vec<f32> {
+    let mut refs: Vec<&mut dyn KvSeq> = vec![cache];
+    engine
+        .decode_batch(&[tok], &mut SeqRefs(&mut refs))
+        .into_iter()
+        .next()
+        .unwrap()
 }
 
 /// Per-row non-uniform LUT fit of a dense weight (identity Hessian).
@@ -76,10 +83,11 @@ fn mixed_quant(store: &WeightStore, seed: u64) -> QuantizedModel {
     }
 }
 
-/// Drive `steps` batched decode steps over contiguous caches and check
-/// each against per-sequence sequential decode on cloned caches.
+/// Drive 3 batched decode steps over contiguous caches and check
+/// each against per-sequence single-item steps on cloned caches.
 fn check_contiguous(w: &Weights, caches: &mut [KvCache], rng: &mut Rng) {
-    let mut engine = DecodeEngine::new(w);
+    let mut engine = Engine::new(w);
+    let mut eng_ref = Engine::new(w);
     for _ in 0..3 {
         let toks: Vec<i32> =
             caches.iter().map(|_| rng.below(256) as i32).collect();
@@ -87,17 +95,16 @@ fn check_contiguous(w: &Weights, caches: &mut [KvCache], rng: &mut Rng) {
         let expect: Vec<Vec<f32>> = toks
             .iter()
             .zip(&mut seq_caches)
-            .map(|(&t, c)| decode_step_kv(w, t, c))
+            .map(|(&t, c)| decode_one(&mut eng_ref, t, c))
             .collect();
         let mut refs: Vec<&mut dyn KvSeq> = caches
             .iter_mut()
             .map(|c| c as &mut dyn KvSeq)
             .collect();
-        let got =
-            decode_step_batch(&mut engine, &toks, &mut SeqRefs(&mut refs));
-        assert_eq!(got, expect, "batched != sequential (dense store)");
+        let got = engine.decode_batch(&toks, &mut SeqRefs(&mut refs));
+        assert_eq!(got, expect, "batched != per-sequence (dense store)");
         for (c, s) in caches.iter_mut().zip(seq_caches) {
-            *c = s; // keep both paths on the sequential-written state
+            *c = s; // keep both paths on the sequentially-written state
         }
     }
 }
@@ -107,12 +114,13 @@ fn batched_matches_sequential_fp_ragged_batches() {
     let store = micro_store(81);
     let w = Weights::Fp(&store);
     let mut rng = Rng::new(811);
+    let mut warm = Engine::new(&w);
     for b in [1usize, 2, 4, 5] {
         let mut caches = vec![KvCache::new(store.cfg); b];
         // ragged warmup: every sequence at a different position
         for (i, c) in caches.iter_mut().enumerate() {
             for _ in 0..=(3 * i) % 7 {
-                decode_step_kv(&w, rng.below(256) as i32, c);
+                decode_one(&mut warm, rng.below(256) as i32, c);
             }
         }
         check_contiguous(&w, &mut caches, &mut rng);
@@ -122,21 +130,50 @@ fn batched_matches_sequential_fp_ragged_batches() {
 #[test]
 fn batched_matches_sequential_mixed_quant_bitwise() {
     // dense KV store + quantized weights (packed LUT kernels, sparse
-    // branch, dense fallback): still bit-identical to the sequential
+    // branch, dense fallback): still bit-identical to the per-sequence
     // path — the packed and unpacked kernels share accumulation order
     let store = micro_store(82);
     let qm = mixed_quant(&store, 821);
     let w = Weights::Quant(&qm);
     let mut rng = Rng::new(822);
+    let mut warm = Engine::new(&w);
     for b in [1usize, 3, 4] {
         let mut caches = vec![KvCache::new(store.cfg); b];
         for (i, c) in caches.iter_mut().enumerate() {
             for _ in 0..(5 * i + 1) % 6 {
-                decode_step_kv(&w, rng.below(256) as i32, c);
+                decode_one(&mut warm, rng.below(256) as i32, c);
             }
         }
         check_contiguous(&w, &mut caches, &mut rng);
     }
+}
+
+#[test]
+fn chunked_prefill_mixed_quant_bitwise() {
+    // quantized weights, dense KV: one prefill chunk must be bitwise
+    // identical to per-token feeding (the multi-row LUT kernels share
+    // accumulation order with the single-row path)
+    let store = micro_store(86);
+    let qm = mixed_quant(&store, 861);
+    let w = Weights::Quant(&qm);
+    let prompt: Vec<i32> = (0..19).map(|i| (i * 17 + 3) % 256).collect();
+
+    let mut eng_ref = Engine::new(&w);
+    let mut c_ref = KvCache::new(store.cfg);
+    let mut last_ref = Vec::new();
+    for &t in &prompt {
+        last_ref = decode_one(&mut eng_ref, t, &mut c_ref);
+    }
+
+    let mut engine = Engine::new(&w);
+    let mut cache = KvCache::new(store.cfg);
+    use ganq::model::forward::{LogitsMode, StepItem, StepPlan};
+    let plan = StepPlan {
+        items: vec![StepItem::prefill(0, prompt.clone(), LogitsMode::Last)],
+    };
+    let mut refs: Vec<&mut dyn KvSeq> = vec![&mut cache];
+    let outs = engine.step(&plan, &mut SeqRefs(&mut refs));
+    assert_eq!(outs[0].data, last_ref, "chunked prefill diverged");
 }
 
 #[test]
@@ -147,7 +184,8 @@ fn batched_membership_changes_match_sequential() {
     let store = micro_store(83);
     let qm = mixed_quant(&store, 831);
     let w = Weights::Quant(&qm);
-    let mut engine = DecodeEngine::new(&w);
+    let mut engine = Engine::new(&w);
+    let mut eng_ref = Engine::new(&w);
     let mut rng = Rng::new(832);
     let mut batched: Vec<KvCache> = vec![KvCache::new(store.cfg); 4];
     let mut sequential = batched.clone();
@@ -158,7 +196,7 @@ fn batched_membership_changes_match_sequential() {
         let expect: Vec<Vec<f32>> = subset
             .iter()
             .zip(&toks)
-            .map(|(&i, &t)| decode_step_kv(&w, t, &mut sequential[i]))
+            .map(|(&i, &t)| decode_one(&mut eng_ref, t, &mut sequential[i]))
             .collect();
         let mut refs: Vec<&mut dyn KvSeq> = Vec::new();
         let mut rest: &mut [KvCache] = &mut batched;
@@ -170,8 +208,7 @@ fn batched_membership_changes_match_sequential() {
             rest = tail;
             base = i + 1;
         }
-        let got =
-            decode_step_batch(&mut engine, &toks, &mut SeqRefs(&mut refs));
+        let got = engine.decode_batch(&toks, &mut SeqRefs(&mut refs));
         assert_eq!(got, expect, "subset {:?}", subset);
     }
 }
@@ -184,16 +221,17 @@ fn batched_paged_f32_matches_sequential_contiguous_bitwise() {
     let prompts: [&[i32]; 3] = [&[1, 2, 3, 4, 5], &[9, 8], &[50]];
     let new_tokens = 6usize;
 
-    // sequential contiguous reference
+    // per-sequence contiguous reference
+    let mut eng_ref = Engine::new(&w);
     let mut reference: Vec<Vec<Vec<f32>>> = Vec::new();
     for p in &prompts {
         let mut c = KvCache::new(cfg);
         let mut logits = Vec::new();
         for &t in *p {
-            logits.push(decode_step_kv(&w, t, &mut c));
+            logits.push(decode_one(&mut eng_ref, t, &mut c));
         }
         for s in 0..new_tokens {
-            logits.push(decode_step_kv(&w, (60 + s) as i32, &mut c));
+            logits.push(decode_one(&mut eng_ref, (60 + s) as i32, &mut c));
         }
         reference.push(logits);
     }
@@ -206,7 +244,7 @@ fn batched_paged_f32_matches_sequential_contiguous_bitwise() {
     for (slot, p) in prompts.iter().enumerate() {
         assert_eq!(kv.admit(slot, p, new_tokens), Some(0));
     }
-    let mut engine = DecodeEngine::new(&w);
+    let mut engine = Engine::new(&w);
     let mut fed = [0usize; 3]; // tokens fed so far per slot
     let total: Vec<usize> =
         prompts.iter().map(|p| p.len() + new_tokens).collect();
@@ -229,7 +267,7 @@ fn batched_paged_f32_matches_sequential_contiguous_bitwise() {
             })
             .collect();
         let mut seqs = kv.seqs(slots.clone());
-        let got = decode_step_batch(&mut engine, &toks, &mut seqs);
+        let got = engine.decode_batch(&toks, &mut seqs);
         for (row, &slot) in got.iter().zip(&slots) {
             assert_eq!(
                 row, &reference[slot][fed[slot]],
@@ -254,24 +292,25 @@ fn batched_paged_lut_matches_sequential_paged_lut() {
     let mut kv_s =
         PagedKv::new(Box::new(LutBlocks::new(layout, 32)), 32, 1);
     kv_s.admit(0, &seq, 1).unwrap();
+    let mut eng_ref = Engine::new(&w);
     let mut sequential = Vec::new();
     for &t in &seq {
         assert!(kv_s.prepare_step(&[true]).is_empty());
         kv_s.push_token(0, t);
         let mut view = kv_s.slot_view(0);
-        sequential.push(decode_step_kv(&w, t, &mut view));
+        sequential.push(decode_one(&mut eng_ref, t, &mut view));
     }
     assert!(kv_s.stats().sealed_blocks > 0, "blocks must have sealed");
 
     let mut kv_b =
         PagedKv::new(Box::new(LutBlocks::new(layout, 32)), 32, 1);
     kv_b.admit(0, &seq, 1).unwrap();
-    let mut engine = DecodeEngine::new(&w);
+    let mut engine = Engine::new(&w);
     for (si, &t) in seq.iter().enumerate() {
         assert!(kv_b.prepare_step(&[true]).is_empty());
         kv_b.push_token(0, t);
         let mut seqs = kv_b.seqs(vec![0]);
-        let got = decode_step_batch(&mut engine, &[t], &mut seqs);
+        let got = engine.decode_batch(&[t], &mut seqs);
         assert!(
             prop::all_close(&got[0], &sequential[si], 1e-3, 1e-3),
             "step {}: maxdiff {}",

@@ -233,11 +233,18 @@ fn paged_f32_decode_bit_identical_on_golden_fixture() {
         .map(|&v| v as i32)
         .collect();
 
+    use ganq::model::forward::{Engine, KvSeq, SeqRefs};
     let w = ganq::model::forward::Weights::Fp(&store);
+    let mut engine = Engine::new(&w);
     let mut cache = ganq::model::forward::KvCache::new(cfg);
     let mut native_last = Vec::new();
     for &t in &tokens {
-        native_last = ganq::model::forward::decode_step(&w, t, &mut cache);
+        let mut refs: Vec<&mut dyn KvSeq> = vec![&mut cache];
+        native_last = engine
+            .decode_batch(&[t], &mut SeqRefs(&mut refs))
+            .into_iter()
+            .next()
+            .unwrap();
     }
 
     let layout = ganq::kv::KvLayout::new(&cfg, 8);
@@ -252,9 +259,12 @@ fn paged_f32_decode_bit_identical_on_golden_fixture() {
     for &t in &tokens {
         assert!(kv.prepare_step(&[true]).is_empty());
         kv.push_token(0, t);
-        let mut view = kv.slot_view(0);
-        paged_last =
-            ganq::model::forward::decode_step_kv(&w, t, &mut view);
+        let mut seqs = kv.seqs(vec![0]);
+        paged_last = engine
+            .decode_batch(&[t], &mut seqs)
+            .into_iter()
+            .next()
+            .unwrap();
     }
     assert_eq!(
         native_last, paged_last,

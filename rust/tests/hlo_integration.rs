@@ -151,10 +151,10 @@ fn nll_graph_matches_native_forward() {
         return;
     }
     let f = corpus::flavor("wiki2s").unwrap();
-    let eng_h = PplEngine::hlo(&rt, "opt-micro", &store, None).unwrap();
-    let eng_n = PplEngine::Native(Weights::Fp(&store));
-    let ppl_h = eval::perplexity(&eng_h, f, Split::Valid, 1).unwrap();
-    let ppl_n = eval::perplexity(&eng_n, f, Split::Valid, 1).unwrap();
+    let mut eng_h = PplEngine::hlo(&rt, "opt-micro", &store, None).unwrap();
+    let mut eng_n = PplEngine::native(Weights::Fp(&store));
+    let ppl_h = eval::perplexity(&mut eng_h, f, Split::Valid, 1).unwrap();
+    let ppl_n = eval::perplexity(&mut eng_n, f, Split::Valid, 1).unwrap();
     assert!(
         (ppl_h - ppl_n).abs() < 0.02 * ppl_n,
         "hlo ppl {} vs native {}",
@@ -344,9 +344,9 @@ fn ppl_ordering_full_vs_quant_on_trained_model() {
                 .unwrap(),
             )
         };
-        let eng =
+        let mut eng =
             PplEngine::hlo(&rt, "opt-micro", &store, qm.as_ref()).unwrap();
-        ppls.push(eval::perplexity(&eng, f, Split::Valid, 2).unwrap());
+        ppls.push(eval::perplexity(&mut eng, f, Split::Valid, 2).unwrap());
     }
     assert!(
         ppls[0] <= ppls[1] * 1.02 && ppls[1] <= ppls[2] * 1.02,

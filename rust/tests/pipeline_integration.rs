@@ -36,8 +36,8 @@ fn all_methods_quantize_trained_micro_and_order_sanely() {
     let calib = coordinator::calibrate(&store, 16, 128);
     let f = corpus::flavor("wiki2s").unwrap();
     let fp_ppl = {
-        let eng = PplEngine::Native(Weights::Fp(&store));
-        perplexity(&eng, f, Split::Valid, 1).unwrap()
+        let mut eng = PplEngine::native(Weights::Fp(&store));
+        perplexity(&mut eng, f, Split::Valid, 1).unwrap()
     };
     let mut ppls = std::collections::BTreeMap::new();
     for method in ["rtn", "gptq", "omniq", "ganq"] {
@@ -50,8 +50,8 @@ fn all_methods_quantize_trained_micro_and_order_sanely() {
             false,
         )
         .unwrap();
-        let eng = PplEngine::Native(Weights::Quant(&qm));
-        let ppl = perplexity(&eng, f, Split::Valid, 1).unwrap();
+        let mut eng = PplEngine::native(Weights::Quant(&qm));
+        let ppl = perplexity(&mut eng, f, Split::Valid, 1).unwrap();
         ppls.insert(method.to_string(), ppl);
     }
     // the paper's headline ordering at 3-bit: GANQ closest to FP16,
