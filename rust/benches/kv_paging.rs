@@ -6,7 +6,7 @@
 //! admits >= 1.5x more concurrent requests than the contiguous baseline.
 
 use ganq::coordinator::{
-    self, KvStoreKind, NativeBackend, PagedNativeBackend, Request,
+    self, GenRequest, KvStoreKind, NativeBackend, PagedNativeBackend,
 };
 use ganq::model::forward::Weights;
 use ganq::model::{ModelConfig, WeightStore};
@@ -19,7 +19,7 @@ const BLOCK_SIZE: usize = 8;
 const CONTIG_SLOTS: usize = 4;
 
 /// `shared` of the PROMPT_LEN prompt tokens are common to all requests.
-fn workload(shared: usize) -> Vec<Request> {
+fn workload(shared: usize) -> Vec<GenRequest> {
     (0..N_REQS)
         .map(|i| {
             let mut prompt: Vec<i32> =
@@ -28,7 +28,7 @@ fn workload(shared: usize) -> Vec<Request> {
                 (shared..PROMPT_LEN)
                     .map(|j| ((i * PROMPT_LEN + j) % 199) as i32),
             );
-            Request { id: i as u64, prompt, max_new: MAX_NEW }
+            GenRequest::greedy(i as u64, prompt, MAX_NEW)
         })
         .collect()
 }

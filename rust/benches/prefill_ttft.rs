@@ -17,7 +17,7 @@
 use std::time::Instant;
 
 use ganq::coordinator::{
-    serve_with, NativeBackend, Request, ServeOptions,
+    serve_with, GenRequest, NativeBackend, ServeOptions,
 };
 use ganq::model::forward::Weights;
 use ganq::model::{LayerWeights, ModelConfig, QuantizedModel, WeightStore};
@@ -45,6 +45,7 @@ fn long_ctx_cfg() -> ModelConfig {
         ff: 256,
         ctx: 2176,
         vocab: 256,
+        eos: None,
     }
 }
 
@@ -83,12 +84,12 @@ fn lut_model(store: &WeightStore, bits: u8) -> QuantizedModel {
 fn run_once(w: &Weights, prompt_len: usize, chunk: usize) -> (f64, f64) {
     let prompt: Vec<i32> =
         (0..prompt_len as i32).map(|i| (i * 31 + 7) % 256).collect();
-    let reqs = vec![Request { id: 1, prompt, max_new: MAX_NEW }];
+    let reqs = vec![GenRequest::greedy(1, prompt, MAX_NEW)];
     let mut be = NativeBackend::new(*w, 1);
     let (_resp, m) = serve_with(
         &mut be,
         reqs,
-        ServeOptions { prefill_chunk: chunk },
+        ServeOptions { prefill_chunk: chunk, ..Default::default() },
     )
     .expect("serve");
     let ttft = m.requests[0].ttft().expect("first token").as_secs_f64() * 1e3;

@@ -1,0 +1,155 @@
+//! Sampling-overhead bench: the same batch-16 serving workload decoded
+//! greedy (temperature 0, pure argmax) vs sampled (temperature 0.9,
+//! top-k 64, top-p 0.95, per-request seeds) through the real scheduler +
+//! `NativeBackend` on the 4-bit LUT model. Token counts are identical by
+//! construction (budget-only stop criteria), so the wall-clock delta is
+//! exactly the Sampler stage: the per-row sort + softmax + one RNG draw.
+//! Emits `BENCH_sampling.json`.
+//!
+//! Asserts the acceptance criterion: sampling adds < 5% per-step
+//! overhead vs greedy at batch 16. `GANQ_SMOKE=1` shrinks the run for CI
+//! and relaxes the bar to < 50% (shared runners are noisy).
+
+use std::time::Instant;
+
+use ganq::coordinator::{
+    serve, GenRequest, NativeBackend, SamplingParams, StopCriteria,
+};
+use ganq::model::forward::Weights;
+use ganq::model::{LayerWeights, ModelConfig, QuantizedModel, WeightStore};
+use ganq::quant::ganq::fit_codebook_identity;
+use ganq::quant::lut::lut_from_parts;
+use ganq::tensor::Mat;
+use ganq::util::json::{self, Json};
+
+const BATCH: usize = 16;
+const PROMPT_LEN: usize = 8;
+
+fn smoke() -> bool {
+    std::env::var("GANQ_SMOKE").is_ok()
+}
+
+/// Quantize every linear to a per-row non-uniform LUT (identity
+/// Hessian) — the servable form the engine packs.
+fn lut_model(store: &WeightStore, bits: u8) -> QuantizedModel {
+    let k = 1usize << bits;
+    let mut linears = std::collections::BTreeMap::new();
+    for (name, _m, _n) in store.cfg.linear_shapes() {
+        let w = store.mat(&name);
+        let mut codes = vec![0u8; w.rows * w.cols];
+        let mut cb = Mat::zeros(w.rows, k);
+        for i in 0..w.rows {
+            let (c, t) = fit_codebook_identity(w.row(i), bits, 2);
+            codes[i * w.cols..(i + 1) * w.cols].copy_from_slice(&c);
+            cb.row_mut(i).copy_from_slice(&t);
+        }
+        linears.insert(
+            name,
+            LayerWeights::Lut(lut_from_parts(w.rows, w.cols, bits, codes, cb)),
+        );
+    }
+    QuantizedModel {
+        base: store.clone(),
+        method: format!("lut{}-identity", bits),
+        bits,
+        linears,
+        weight_bits: 0,
+    }
+}
+
+fn requests(max_new: usize, sampled: bool) -> Vec<GenRequest> {
+    (0..BATCH as u64)
+        .map(|i| {
+            let prompt: Vec<i32> = (0..PROMPT_LEN as i32)
+                .map(|j| (j * 29 + i as i32 * 13) % 256)
+                .collect();
+            let sampling = if sampled {
+                SamplingParams::sample(0.9, 7000 + i)
+                    .with_top_k(64)
+                    .with_top_p(0.95)
+            } else {
+                SamplingParams::greedy()
+            };
+            GenRequest::new(
+                i,
+                prompt,
+                sampling,
+                StopCriteria::max_tokens(max_new),
+            )
+        })
+        .collect()
+}
+
+/// Best-of-`reps` wall seconds serving the batch to completion.
+fn measure(w: &Weights, max_new: usize, sampled: bool, reps: usize) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let mut be = NativeBackend::new(*w, BATCH);
+        let t0 = Instant::now();
+        let (resp, m) = serve(&mut be, requests(max_new, sampled)).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(resp.len(), BATCH);
+        assert_eq!(m.total_generated(), BATCH * max_new);
+        best = best.min(wall);
+    }
+    best
+}
+
+fn main() {
+    let cfg = ModelConfig::builtin("opt-micro").unwrap();
+    let store = WeightStore::random("bench", cfg, 813);
+    eprintln!("fitting 4-bit LUT model...");
+    let qm4 = lut_model(&store, 4);
+    let w = Weights::Quant(&qm4);
+    let (max_new, reps) = if smoke() { (12, 2) } else { (32, 5) };
+    println!(
+        "sampling overhead, opt-micro lut4, batch {} x {} tokens, best of \
+         {} rep(s){}",
+        BATCH,
+        max_new,
+        reps,
+        if smoke() { " [smoke]" } else { "" }
+    );
+
+    // warmup (packs weights, faults pages) outside the timing
+    measure(&w, 2, true, 1);
+    let greedy_s = measure(&w, max_new, false, reps);
+    let sampled_s = measure(&w, max_new, true, reps);
+    let tokens = (BATCH * max_new) as f64;
+    let overhead = sampled_s / greedy_s - 1.0;
+    println!(
+        "greedy {:.0} tok/s, sampled {:.0} tok/s, overhead {:+.2}%",
+        tokens / greedy_s,
+        tokens / sampled_s,
+        100.0 * overhead
+    );
+
+    let out = json::obj(vec![
+        ("model", json::s("opt-micro")),
+        ("fmt", json::s("lut4")),
+        ("batch", json::num(BATCH as f64)),
+        ("max_new", json::num(max_new as f64)),
+        ("smoke", Json::Bool(smoke())),
+        ("greedy_tok_s", json::num(tokens / greedy_s)),
+        ("sampled_tok_s", json::num(tokens / sampled_s)),
+        ("overhead_frac", json::num(overhead)),
+    ]);
+    std::fs::write("BENCH_sampling.json", out.to_string_pretty())
+        .expect("write BENCH_sampling.json");
+    println!("wrote BENCH_sampling.json");
+
+    let bar = if smoke() { 0.50 } else { 0.05 };
+    assert!(
+        overhead < bar,
+        "acceptance FAILED: sampling adds {:.1}% per-step overhead at \
+         batch {} (need < {:.0}%)",
+        100.0 * overhead,
+        BATCH,
+        100.0 * bar
+    );
+    println!(
+        "acceptance OK: sampling adds {:.2}% overhead vs greedy at batch {}",
+        100.0 * overhead,
+        BATCH
+    );
+}

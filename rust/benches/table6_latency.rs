@@ -9,7 +9,7 @@
 //! wall-clock gains are modest — see EXPERIMENTS.md discussion).
 
 use ganq::bench::BenchCtx;
-use ganq::coordinator::{self, Request, WeightFmt};
+use ganq::coordinator::{self, GenRequest, WeightFmt};
 use ganq::model::forward::Weights;
 use ganq::util::cli::Args;
 use ganq::util::timer::Table;
@@ -49,11 +49,11 @@ fn main() {
             ],
         );
         let req = || {
-            vec![Request {
-                id: 1,
-                prompt: b"once upon a time ".iter().map(|&b| b as i32).collect(),
+            vec![GenRequest::greedy(
+                1,
+                b"once upon a time ".iter().map(|&b| b as i32).collect(),
                 max_new,
-            }]
+            )]
         };
         let mut base_time = None;
         let mut base_bytes = None;
@@ -61,11 +61,7 @@ fn main() {
                        bits: &str,
                        be: &mut dyn coordinator::DecodeBackend| {
             // warmup: compile + first-dispatch outside the timed region
-            let warm = vec![Request {
-                id: 0,
-                prompt: vec![32],
-                max_new: 2,
-            }];
+            let warm = vec![GenRequest::greedy(0, vec![32], 2)];
             let _ = coordinator::serve(be, warm).expect("warmup");
             let (_r, m) = coordinator::serve(be, req()).expect("serve");
             let time = m.wall_s;

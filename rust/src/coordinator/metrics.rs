@@ -1,11 +1,51 @@
 //! Serving metrics: per-request latency breakdown and aggregate
-//! throughput / weight-traffic numbers (Table 6 columns), plus paged-KV
+//! throughput / weight-traffic numbers (Table 6 columns), per-finish-
+//! reason request counts (plus cancelled-token waste), and paged-KV
 //! counters (block-pool occupancy, prefix-hit rate, preemptions) when
 //! the backend pages its cache.
 
 use std::time::{Duration, Instant};
 
+use super::serve::FinishReason;
 use crate::kv::KvPoolStats;
+
+/// How many requests ended for each [`FinishReason`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FinishCounts {
+    pub max_tokens: usize,
+    pub stop_token: usize,
+    pub stop_seq: usize,
+    pub cancelled: usize,
+    pub rejected: usize,
+}
+
+impl FinishCounts {
+    pub fn bump(&mut self, why: FinishReason) {
+        match why {
+            FinishReason::MaxTokens => self.max_tokens += 1,
+            FinishReason::StopToken => self.stop_token += 1,
+            FinishReason::StopSeq => self.stop_seq += 1,
+            FinishReason::Cancelled => self.cancelled += 1,
+            FinishReason::Rejected => self.rejected += 1,
+        }
+    }
+
+    pub fn merge(&mut self, other: &FinishCounts) {
+        self.max_tokens += other.max_tokens;
+        self.stop_token += other.stop_token;
+        self.stop_seq += other.stop_seq;
+        self.cancelled += other.cancelled;
+        self.rejected += other.rejected;
+    }
+
+    pub fn total(&self) -> usize {
+        self.max_tokens
+            + self.stop_token
+            + self.stop_seq
+            + self.cancelled
+            + self.rejected
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct RequestMetrics {
@@ -56,9 +96,12 @@ pub struct ServeMetrics {
     pub kv_bytes_per_step: usize,
     /// requests preempted and requeued by the scheduler (paged backends)
     pub preemptions: usize,
-    /// requests that could never fit in the KV pool; their responses
-    /// carry whatever was generated before rejection (usually nothing)
-    pub rejected: usize,
+    /// how each request's lifecycle ended (stop conditions, budget,
+    /// cancellation, rejection)
+    pub finish: FinishCounts,
+    /// tokens generated for requests that were then cancelled — the
+    /// decode work wasted on outputs nobody consumed
+    pub cancelled_tokens: usize,
     /// maximum simultaneously-decoding requests observed
     pub peak_concurrency: usize,
     /// block-pool counters (None for contiguous-cache backends)
@@ -155,8 +198,22 @@ impl ServeMetrics {
                 kv.evictions,
             ));
         }
-        if self.rejected > 0 {
-            s.push_str(&format!(", {} rejected", self.rejected));
+        let f = &self.finish;
+        for (n, tag) in [
+            (f.stop_token, "stop-token"),
+            (f.stop_seq, "stop-seq"),
+            (f.cancelled, "cancelled"),
+            (f.rejected, "rejected"),
+        ] {
+            if n > 0 {
+                s.push_str(&format!(", {} {}", n, tag));
+            }
+        }
+        if self.cancelled_tokens > 0 {
+            s.push_str(&format!(
+                " ({} tokens wasted)",
+                self.cancelled_tokens
+            ));
         }
         s
     }
@@ -225,6 +282,32 @@ mod tests {
         assert!(m.p95_latency_ms().is_nan());
         assert!(m.kv.is_none());
         assert!(!m.summary().contains("kv pool"));
+    }
+
+    #[test]
+    fn finish_counts_aggregate_and_surface() {
+        let mut f = FinishCounts::default();
+        f.bump(FinishReason::MaxTokens);
+        f.bump(FinishReason::StopSeq);
+        f.bump(FinishReason::Cancelled);
+        f.bump(FinishReason::Cancelled);
+        let mut g = FinishCounts::default();
+        g.bump(FinishReason::Rejected);
+        f.merge(&g);
+        assert_eq!(f.total(), 5);
+        assert_eq!(f.cancelled, 2);
+        let m = ServeMetrics {
+            finish: f,
+            cancelled_tokens: 17,
+            ..Default::default()
+        };
+        let s = m.summary();
+        assert!(s.contains("2 cancelled"), "{}", s);
+        assert!(s.contains("1 rejected"), "{}", s);
+        assert!(s.contains("1 stop-seq"), "{}", s);
+        assert!(s.contains("17 tokens wasted"), "{}", s);
+        // max_tokens is the normal case and stays out of the summary
+        assert!(!s.contains("max"), "{}", s);
     }
 
     #[test]

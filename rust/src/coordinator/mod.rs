@@ -3,28 +3,43 @@
 //! * `pipeline` — the offline layer-wise PTQ path: calibration capture,
 //!   per-layer GANQ/baseline quantization (native or through the AOT HLO
 //!   solver graph), servable model assembly.
-//! * `serve` — the online path: continuous batching over the AOT decode
-//!   graphs (PJRT), the native engine with contiguous KV caches, or the
-//!   paged-KV native backend (block tables + prefix sharing +
-//!   preemption; see `kv`). The scheduler plans mixed steps of prefill
-//!   chunks and decode positions under a per-step prefill budget
-//!   (`ServeOptions::prefill_chunk`); backends map them onto
-//!   `forward::Engine::step`.
+//! * `serve` — the online path, organized around a request lifecycle:
+//!   a [`GenRequest`] carries per-request [`SamplingParams`]
+//!   (temperature / top-k / top-p / seed; temperature 0 is the exact
+//!   greedy path) and [`StopCriteria`] (token budget, stop tokens, stop
+//!   sequences, optional model EOS) plus a [`CancelHandle`] for
+//!   mid-flight cancellation. The scheduler continuously batches
+//!   requests over a [`DecodeBackend`] (AOT decode graphs via PJRT, the
+//!   native engine with contiguous KV caches, or the paged-KV backend
+//!   with prefix sharing and preemption), planning mixed steps of
+//!   prefill chunks and decode positions under a per-step prefill budget
+//!   (`ServeOptions::prefill_chunk`). A `Sampler` stage turns each
+//!   slot's logits row into the next token — deterministic in
+//!   `(seed, draw index)` regardless of batch composition, preemption,
+//!   or prefill chunking. [`serve_events`] streams [`TokenEvent`]s
+//!   incrementally; every request ends in a [`GenOutcome`] with a
+//!   [`FinishReason`].
 //! * `metrics` — request latency + throughput + weight-traffic accounting
-//!   (Table 6's CUDA-time/speedup/peak-memory analogues), plus block-pool
-//!   occupancy / prefix-hit / preemption counters for paged serving.
-//! * `server` — a threaded front: submit requests from any thread; a
-//!   dedicated engine thread owns the (non-Send) runtime.
+//!   (Table 6's CUDA-time/speedup/peak-memory analogues), per-finish-
+//!   reason counts and cancelled-token waste, plus block-pool occupancy /
+//!   prefix-hit / preemption counters for paged serving.
+//! * `server` — a threaded front: submit requests from any thread,
+//!   consume a per-request `TokenEvent` stream, cancel via the returned
+//!   handle; a dedicated engine thread owns the (non-Send) runtime and
+//!   drains up to `ServeOptions::serve_window` requests per round.
 
 pub mod metrics;
 pub mod pipeline;
 pub mod serve;
 pub mod server;
 
-pub use metrics::ServeMetrics;
+pub use metrics::{FinishCounts, ServeMetrics};
 pub use pipeline::{calibrate, quantize_model, Calibration, QuantEngine};
 pub use serve::{
-    serve, serve_with, DecodeBackend, HloBackend, KvStoreKind,
-    NativeBackend, PagedNativeBackend, Request, Response, ServeOptions,
-    SlotWork, WeightFmt, DEFAULT_PREFILL_CHUNK,
+    serve, serve_events, serve_with, CancelHandle, DecodeBackend,
+    FinishReason, GenOutcome, GenRequest, HloBackend, KvStoreKind,
+    NativeBackend, PagedNativeBackend, Sampler, SamplerStep,
+    SamplingParams, ServeOptions, SlotWork, StopCriteria, TokenEvent,
+    WeightFmt, DEFAULT_PREFILL_CHUNK, DEFAULT_SERVE_WINDOW,
 };
+pub use server::{recv_outcome, serve_batch, ServerHandle};

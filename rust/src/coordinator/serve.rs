@@ -1,11 +1,23 @@
 //! Serving: token-level continuous batching (Orca-style) over a decode
-//! backend. The scheduler is a thin admission/planning policy: every
-//! step it hands the backend a list of [`SlotWork`] items — one per
-//! active slot, each either a **prefill chunk** (a run of prompt
-//! positions, bounded by the per-step prefill budget so decode latency
-//! stays bounded while prompts drain) or a **single decode position**.
-//! Backends map that plan onto `forward::Engine::step` (native paths)
-//! or the AOT decode graphs.
+//! backend, organized around a request lifecycle. A [`GenRequest`]
+//! carries per-request [`SamplingParams`] (temperature / top-k / top-p /
+//! seed; temperature 0 is the exact greedy path) and [`StopCriteria`]
+//! (token budget, stop tokens, stop sequences, optional model EOS) plus
+//! a [`CancelHandle`]; every request ends in a [`GenOutcome`] with a
+//! [`FinishReason`]. [`serve_events`] streams [`TokenEvent`]s as steps
+//! produce them, so callers see tokens before requests complete.
+//!
+//! The scheduler is a thin admission/planning policy: every step it
+//! hands the backend a list of [`SlotWork`] items — one per active
+//! slot, each either a **prefill chunk** (a run of prompt positions,
+//! bounded by the per-step prefill budget so decode latency stays
+//! bounded while prompts drain) or a **single decode position** — then
+//! runs the [`Sampler`] stage over the returned logits rows. The
+//! sampler's RNG draw for a request's `i`-th token is a pure function of
+//! `(seed, i)`, so sampled outputs are identical at every batch size,
+//! prefill chunking, and across preempt-and-resume. Backends map the
+//! step plan onto `forward::Engine::step` (native paths) or the AOT
+//! decode graphs.
 //!
 //! Three backends implement the same contract:
 //!
@@ -35,15 +47,18 @@
 //! plans to feed; a backend that ran out of blocks preempts its
 //! youngest-admitted slots there, and the scheduler requeues the victims
 //! at the front of the queue with their generated tokens folded into the
-//! replay prompt (recompute-style preemption — with greedy decoding the
-//! final output is unchanged). Finished slots are returned with
+//! replay prompt (recompute-style preemption — the position-keyed
+//! sampler draws make the final output identical even for sampled
+//! requests). Finished and cancelled slots are returned with
 //! [`DecodeBackend::release_slot`]; their shared blocks stay cached for
 //! future prefix hits. A request that can never fit in the pool
 //! (admission keeps refusing with an idle backend, or every admit is
 //! immediately preempted) is rejected rather than wedging the batch: it
-//! completes with whatever it generated so far (usually nothing) and is
-//! counted in `ServeMetrics::rejected`.
+//! completes with [`FinishReason::Rejected`] carrying whatever it
+//! generated so far (usually nothing).
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::kv::{
@@ -56,19 +71,237 @@ use crate::model::forward::{
 use crate::model::{LayerWeights, ModelConfig, QuantizedModel, WeightStore};
 use crate::runtime::{HostTensor, Runtime};
 
-use super::metrics::{RequestMetrics, ServeMetrics};
+use super::metrics::{FinishCounts, RequestMetrics, ServeMetrics};
 
-#[derive(Debug, Clone)]
-pub struct Request {
-    pub id: u64,
-    pub prompt: Vec<i32>,
+pub use crate::model::forward::SamplingParams;
+
+// ---------------------------------------------------------------------------
+// request lifecycle types
+// ---------------------------------------------------------------------------
+
+/// When a request stops generating. The criteria compose: whichever
+/// fires first wins and is recorded as the request's [`FinishReason`].
+/// Stop tokens/sequences apply to the *generated* stream only — a stop
+/// sequence straddling the prompt boundary does not fire.
+#[derive(Debug, Clone, Default)]
+pub struct StopCriteria {
+    /// hard budget on generated tokens (the scheduler additionally
+    /// finishes a request when the context window fills)
     pub max_new: usize,
+    /// token ids that end generation; the stop token itself is not
+    /// included in the output
+    pub stop_tokens: Vec<i32>,
+    /// token sequences that end generation once one appears at the tail
+    /// of the generated stream; the matched sequence is trimmed from
+    /// `GenOutcome::tokens`. Streamed `TokenEvent::Token`s are eager, so
+    /// they may include tokens the final outcome trims — the outcome is
+    /// authoritative.
+    pub stop_seqs: Vec<Vec<i32>>,
+    /// optional end-of-sequence id ([`ModelConfig::eos`]), treated as an
+    /// extra stop token
+    pub eos: Option<i32>,
 }
 
+impl StopCriteria {
+    /// Budget-only criteria — the historical `max_new` behavior.
+    pub fn max_tokens(max_new: usize) -> StopCriteria {
+        StopCriteria { max_new, ..StopCriteria::default() }
+    }
+
+    /// Budget plus the model's EOS token, when the config declares one.
+    pub fn for_model(cfg: &ModelConfig, max_new: usize) -> StopCriteria {
+        StopCriteria { max_new, eos: cfg.eos, ..StopCriteria::default() }
+    }
+
+    pub fn with_stop_tokens(mut self, toks: Vec<i32>) -> StopCriteria {
+        self.stop_tokens = toks;
+        self
+    }
+
+    pub fn with_stop_seq(mut self, seq: Vec<i32>) -> StopCriteria {
+        self.stop_seqs.push(seq);
+        self
+    }
+
+    fn is_stop_token(&self, t: i32) -> bool {
+        self.eos == Some(t) || self.stop_tokens.contains(&t)
+    }
+
+    /// Longest stop sequence sitting at the tail of `stream ++ [tok]`;
+    /// returns its length.
+    fn stop_seq_hit(&self, stream: &[i32], tok: i32) -> Option<usize> {
+        self.stop_seqs
+            .iter()
+            .filter(|s| !s.is_empty() && s.len() <= stream.len() + 1)
+            .filter(|s| {
+                *s.last().expect("nonempty") == tok
+                    && stream[stream.len() - (s.len() - 1)..]
+                        == s[..s.len() - 1]
+            })
+            .map(|s| s.len())
+            .max()
+    }
+}
+
+/// Why a request stopped generating.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// `max_new` reached, or the context window filled
+    MaxTokens,
+    /// a stop token (or the model's EOS) was sampled
+    StopToken,
+    /// a stop sequence appeared at the tail of the generated stream
+    StopSeq,
+    /// the submitter cancelled mid-flight (partial tokens are returned)
+    Cancelled,
+    /// the request can never fit the backend's KV pool
+    Rejected,
+}
+
+impl FinishReason {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            FinishReason::MaxTokens => "max_tokens",
+            FinishReason::StopToken => "stop_token",
+            FinishReason::StopSeq => "stop_seq",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::Rejected => "rejected",
+        }
+    }
+}
+
+/// Shared cancellation flag. Clone it out of a [`GenRequest`] (or take
+/// the one `server::ServerHandle::submit` returns) and call
+/// [`CancelHandle::cancel`] from any thread; the scheduler observes the
+/// flag at the next step boundary, finishes the request with
+/// [`FinishReason::Cancelled`] (tokens generated so far are delivered),
+/// and releases its KV slot.
+#[derive(Debug, Clone, Default)]
+pub struct CancelHandle(Arc<AtomicBool>);
+
+impl CancelHandle {
+    pub fn new() -> CancelHandle {
+        CancelHandle(Arc::new(AtomicBool::new(false)))
+    }
+
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A generation request: prompt plus per-request sampling and stop
+/// configs and a cooperative cancellation flag (clones share it).
 #[derive(Debug, Clone)]
-pub struct Response {
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub sampling: SamplingParams,
+    pub stop: StopCriteria,
+    pub cancel: CancelHandle,
+}
+
+impl GenRequest {
+    pub fn new(
+        id: u64,
+        prompt: Vec<i32>,
+        sampling: SamplingParams,
+        stop: StopCriteria,
+    ) -> GenRequest {
+        GenRequest { id, prompt, sampling, stop, cancel: CancelHandle::new() }
+    }
+
+    /// The historical `{id, prompt, max_new}` greedy request — argmax
+    /// decoding to the token budget, no stop conditions.
+    pub fn greedy(id: u64, prompt: Vec<i32>, max_new: usize) -> GenRequest {
+        GenRequest::new(
+            id,
+            prompt,
+            SamplingParams::greedy(),
+            StopCriteria::max_tokens(max_new),
+        )
+    }
+
+    pub fn cancel_handle(&self) -> CancelHandle {
+        self.cancel.clone()
+    }
+}
+
+/// A finished request: everything it generated (stop token excluded,
+/// matched stop sequence trimmed) and why it stopped.
+#[derive(Debug, Clone)]
+pub struct GenOutcome {
     pub id: u64,
     pub tokens: Vec<i32>,
+    pub finish: FinishReason,
+}
+
+/// Incremental serving output. `Token` events stream out of the
+/// scheduler as soon as a step produces them — before the request
+/// completes — and `Done` is always a request's last event.
+#[derive(Debug, Clone)]
+pub enum TokenEvent {
+    Token { id: u64, tok: i32 },
+    Done(GenOutcome),
+}
+
+// ---------------------------------------------------------------------------
+// sampler stage
+// ---------------------------------------------------------------------------
+
+/// What the [`Sampler`] decided for one slot's logits row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SamplerStep {
+    /// append `tok` and keep decoding
+    Token { tok: i32 },
+    /// the request is finished: append `tok` first when set, then trim
+    /// `trim` tokens from the tail of the output (matched stop sequence)
+    Finish { tok: Option<i32>, why: FinishReason, trim: usize },
+}
+
+/// The per-step sampling + stop stage, between the backend's logits rows
+/// and the scheduler's slot bookkeeping. Pure: the decision depends only
+/// on the request's params, its generated stream so far (whose length is
+/// the RNG draw index), and the logits row — never on batch composition —
+/// so sampled serving is deterministic under rebatching, preemption, and
+/// prefill chunking, and temperature 0 is bitwise the old greedy path.
+pub struct Sampler;
+
+impl Sampler {
+    pub fn next(
+        sampling: &SamplingParams,
+        stop: &StopCriteria,
+        stream: &[i32],
+        logits: &[f32],
+    ) -> SamplerStep {
+        let tok =
+            forward::sample_logits(logits, sampling, stream.len() as u64);
+        if stop.is_stop_token(tok) {
+            return SamplerStep::Finish {
+                tok: None,
+                why: FinishReason::StopToken,
+                trim: 0,
+            };
+        }
+        if let Some(len) = stop.stop_seq_hit(stream, tok) {
+            return SamplerStep::Finish {
+                tok: Some(tok),
+                why: FinishReason::StopSeq,
+                trim: len,
+            };
+        }
+        if stream.len() + 1 >= stop.max_new {
+            return SamplerStep::Finish {
+                tok: Some(tok),
+                why: FinishReason::MaxTokens,
+                trim: 0,
+            };
+        }
+        SamplerStep::Token { tok }
+    }
 }
 
 /// One slot's work for a step: a run of tokens to feed, in ascending
@@ -144,75 +377,106 @@ pub trait DecodeBackend {
 /// Default per-step prefill budget (prompt positions across all slots).
 pub const DEFAULT_PREFILL_CHUNK: usize = 128;
 
-/// Scheduling knobs (`--prefill-chunk` on the CLI).
+/// Default threaded-server micro-batch drain window (`server`).
+pub const DEFAULT_SERVE_WINDOW: usize = 16;
+
+/// Scheduling knobs (`--prefill-chunk` / `--serve-window` on the CLI).
 #[derive(Debug, Clone, Copy)]
 pub struct ServeOptions {
     /// Prompt positions the scheduler may feed per step, across slots.
     /// Every prompting slot still gets at least one position so it
     /// cannot starve; `1` reproduces the historical per-token prefill.
     pub prefill_chunk: usize,
+    /// Most requests the threaded server (`coordinator::server`) drains
+    /// into one continuous-batching round.
+    pub serve_window: usize,
 }
 
 impl Default for ServeOptions {
     fn default() -> ServeOptions {
-        ServeOptions { prefill_chunk: DEFAULT_PREFILL_CHUNK }
+        ServeOptions {
+            prefill_chunk: DEFAULT_PREFILL_CHUNK,
+            serve_window: DEFAULT_SERVE_WINDOW,
+        }
     }
 }
 
 struct SlotState {
-    req: Request,
-    /// tokens generated before a preemption (already part of `prompt`)
-    gen_prefix: Vec<i32>,
-    /// effective prompt for this residency: original prompt + gen_prefix
+    req: GenRequest,
+    /// effective prompt for this residency: original prompt plus any
+    /// generated tokens replayed after a preemption
     prompt: Vec<i32>,
     prompt_idx: usize,
+    /// the full generated stream across residencies — its length is the
+    /// sampler's RNG draw index, so preemption cannot shift draws
     generated: Vec<i32>,
     metrics: RequestMetrics,
 }
 
-/// A queued request, possibly carrying state from a preemption.
+/// A queued request, possibly carrying generated state from a
+/// preemption (replayed as prompt on re-admission).
 struct Queued {
-    req: Request,
-    gen_prefix: Vec<i32>,
+    req: GenRequest,
+    generated: Vec<i32>,
     metrics: Option<RequestMetrics>,
 }
 
-/// Finish a request that cannot fit in the backend's KV pool: it gets a
-/// response with whatever was generated before (usually empty) instead
-/// of poisoning the whole serve call.
-fn reject(
+/// Finish a queued (never-admitted or requeued) request without serving
+/// it further: deliver whatever it generated with the given reason
+/// instead of poisoning the whole serve call.
+fn finish_queued(
     q: Queued,
-    responses: &mut Vec<Response>,
+    why: FinishReason,
+    outcomes: &mut Vec<GenOutcome>,
     all_metrics: &mut Vec<RequestMetrics>,
+    finish: &mut FinishCounts,
+    sink: &mut dyn FnMut(TokenEvent),
 ) {
     let mut m = q.metrics.unwrap_or(RequestMetrics {
         id: q.req.id,
         prompt_tokens: q.req.prompt.len(),
-        generated_tokens: q.gen_prefix.len(),
+        generated_tokens: q.generated.len(),
         enqueued: Instant::now(),
         first_token: None,
         finished: None,
     });
     m.finished = Some(Instant::now());
-    responses.push(Response { id: q.req.id, tokens: q.gen_prefix });
+    finish.bump(why);
+    let out = GenOutcome { id: q.req.id, tokens: q.generated, finish: why };
+    sink(TokenEvent::Done(out.clone()));
+    outcomes.push(out);
     all_metrics.push(m);
 }
 
 /// Serve a batch of requests to completion with continuous batching and
-/// the default prefill budget.
+/// the default options.
 pub fn serve(
     backend: &mut dyn DecodeBackend,
-    requests: Vec<Request>,
-) -> Result<(Vec<Response>, ServeMetrics), String> {
+    requests: Vec<GenRequest>,
+) -> Result<(Vec<GenOutcome>, ServeMetrics), String> {
     serve_with(backend, requests, ServeOptions::default())
 }
 
 /// Serve a batch of requests to completion with continuous batching.
 pub fn serve_with(
     backend: &mut dyn DecodeBackend,
-    requests: Vec<Request>,
+    requests: Vec<GenRequest>,
     opts: ServeOptions,
-) -> Result<(Vec<Response>, ServeMetrics), String> {
+) -> Result<(Vec<GenOutcome>, ServeMetrics), String> {
+    serve_events(backend, requests, opts, &mut |_| {})
+}
+
+/// [`serve_with`] with incremental delivery: `sink` observes every
+/// [`TokenEvent`] as the scheduler produces it — `Token`s as soon as
+/// their step completes (i.e. while the request is still decoding) and
+/// one final `Done` per request. The returned outcomes duplicate the
+/// `Done` payloads, sorted by request id.
+pub fn serve_events(
+    backend: &mut dyn DecodeBackend,
+    requests: Vec<GenRequest>,
+    opts: ServeOptions,
+    sink: &mut dyn FnMut(TokenEvent),
+) -> Result<(Vec<GenOutcome>, ServeMetrics), String> {
     let nslots = backend.slots();
     let ctx = backend.cfg().ctx;
     let max_chunk = backend.max_chunk().max(1);
@@ -222,25 +486,80 @@ pub fn serve_with(
         .into_iter()
         .map(|mut r| {
             // left-truncate prompts that cannot fit with generation room
-            let budget = ctx.saturating_sub(r.max_new + 1).max(1);
+            let budget = ctx
+                .saturating_sub(r.stop.max_new.saturating_add(1))
+                .max(1);
             if r.prompt.len() > budget {
                 r.prompt = r.prompt[r.prompt.len() - budget..].to_vec();
             }
-            Queued { req: r, gen_prefix: Vec::new(), metrics: None }
+            Queued { req: r, generated: Vec::new(), metrics: None }
         })
         .collect();
     let mut slots: Vec<Option<SlotState>> =
         (0..nslots).map(|_| None).collect();
-    let mut responses = Vec::new();
+    let mut outcomes = Vec::new();
     let mut all_metrics = Vec::new();
+    let mut finish = FinishCounts::default();
+    let mut cancelled_tokens = 0usize;
     let mut steps = 0usize;
     let mut prompt_positions = 0usize;
     let mut preemptions = 0usize;
-    let mut rejected = 0usize;
     let mut peak_concurrency = 0usize;
     let mut stalls = 0usize;
 
+    // finish an active slot: release its KV, trim the output, emit Done
+    macro_rules! finish_slot {
+        ($si:expr, $why:expr, $trim:expr) => {{
+            let st = slots[$si].take().expect("finished slot occupied");
+            backend.release_slot($si);
+            let why: FinishReason = $why;
+            let mut m = st.metrics;
+            m.generated_tokens = st.generated.len();
+            m.finished = Some(Instant::now());
+            finish.bump(why);
+            if why == FinishReason::Cancelled {
+                cancelled_tokens += st.generated.len();
+            }
+            let mut tokens = st.generated;
+            let keep = tokens.len().saturating_sub($trim);
+            tokens.truncate(keep);
+            let out = GenOutcome { id: st.req.id, tokens, finish: why };
+            sink(TokenEvent::Done(out.clone()));
+            outcomes.push(out);
+            all_metrics.push(m);
+        }};
+    }
+
     loop {
+        // step boundary: observe cancellations first. Active slots hand
+        // their KV back right here; queued requests finish without ever
+        // being admitted.
+        for si in 0..nslots {
+            let cancelled = slots[si]
+                .as_ref()
+                .map(|st| st.req.cancel.is_cancelled())
+                .unwrap_or(false);
+            if cancelled {
+                finish_slot!(si, FinishReason::Cancelled, 0);
+            }
+        }
+        for _ in 0..queue.len() {
+            let q = queue.pop_front().expect("iterating queue length");
+            if q.req.cancel.is_cancelled() {
+                cancelled_tokens += q.generated.len();
+                finish_queued(
+                    q,
+                    FinishReason::Cancelled,
+                    &mut outcomes,
+                    &mut all_metrics,
+                    &mut finish,
+                    sink,
+                );
+            } else {
+                queue.push_back(q);
+            }
+        }
+
         // admit in FIFO order; a paged backend may refuse (pool full)
         for si in 0..nslots {
             if slots[si].is_some() {
@@ -251,10 +570,11 @@ pub fn serve_with(
                 .req
                 .prompt
                 .iter()
-                .chain(q.gen_prefix.iter())
+                .chain(q.generated.iter())
                 .copied()
                 .collect();
-            let max_new = q.req.max_new - q.gen_prefix.len();
+            let max_new =
+                q.req.stop.max_new.saturating_sub(q.generated.len());
             match backend.admit(si, &prompt, max_new) {
                 Some(cached) => {
                     debug_assert!(
@@ -266,17 +586,16 @@ pub fn serve_with(
                         q.metrics.clone().unwrap_or(RequestMetrics {
                             id: q.req.id,
                             prompt_tokens: q.req.prompt.len(),
-                            generated_tokens: 0,
+                            generated_tokens: q.generated.len(),
                             enqueued: Instant::now(),
                             first_token: None,
                             finished: None,
                         });
                     slots[si] = Some(SlotState {
                         req: q.req,
-                        gen_prefix: q.gen_prefix,
                         prompt,
                         prompt_idx: cached,
-                        generated: Vec::new(),
+                        generated: q.generated,
                         metrics,
                     });
                 }
@@ -293,8 +612,14 @@ pub fn serve_with(
             stalls += 1;
             if stalls > queue.len() + 1 {
                 let q = queue.pop_front().expect("queue nonempty");
-                reject(q, &mut responses, &mut all_metrics);
-                rejected += 1;
+                finish_queued(
+                    q,
+                    FinishReason::Rejected,
+                    &mut outcomes,
+                    &mut all_metrics,
+                    &mut finish,
+                    sink,
+                );
                 stalls = 0;
             } else {
                 queue.rotate_left(1);
@@ -326,13 +651,11 @@ pub fn serve_with(
             let st = slots[vi].take().expect("victim slot was active");
             need[vi] = 0;
             preemptions += 1;
-            let mut gen_prefix = st.gen_prefix;
-            gen_prefix.extend_from_slice(&st.generated);
             let mut m = st.metrics;
-            m.generated_tokens = gen_prefix.len();
+            m.generated_tokens = st.generated.len();
             queue.push_front(Queued {
                 req: st.req,
-                gen_prefix,
+                generated: st.generated,
                 metrics: Some(m),
             });
         }
@@ -343,8 +666,14 @@ pub fn serve_with(
             stalls += 1;
             if stalls > total_reqs + 2 {
                 if let Some(q) = queue.pop_front() {
-                    reject(q, &mut responses, &mut all_metrics);
-                    rejected += 1;
+                    finish_queued(
+                        q,
+                        FinishReason::Rejected,
+                        &mut outcomes,
+                        &mut all_metrics,
+                        &mut finish,
+                        sink,
+                    );
                 }
                 stalls = 0;
             }
@@ -381,36 +710,61 @@ pub fn serve_with(
         steps += 1;
         peak_concurrency = peak_concurrency.max(work.len());
 
-        // consume outputs
+        // consume outputs: the sampler stage turns each logits row into
+        // the next token (or a finish decision) per the slot's params
         for (wi, wk) in work.iter().enumerate() {
             let si = wk.slot;
-            let finished = {
+            let mut done: Option<(FinishReason, usize)> = None;
+            {
                 let st = slots[si].as_mut().expect("worked slot occupied");
                 if st.prompt_idx < st.prompt.len() {
                     st.prompt_idx += wk.tokens.len();
                 }
-                if wk.want_logits {
-                    // this step's logits yield the next generated token
-                    let next = forward::argmax(&logits[wi]) as i32;
-                    st.generated.push(next);
-                    st.metrics.generated_tokens =
-                        st.gen_prefix.len() + st.generated.len();
-                    if st.metrics.first_token.is_none() {
-                        st.metrics.first_token = Some(Instant::now());
+                if wk.want_logits
+                    && st.generated.len() >= st.req.stop.max_new
+                {
+                    // an exhausted budget (max_new == 0) never samples —
+                    // the same outcome the mid-prompt branch below
+                    // produces, so output cannot depend on chunking
+                    done = Some((FinishReason::MaxTokens, 0));
+                } else if wk.want_logits {
+                    let mut push = |st: &mut SlotState, tok: i32| {
+                        st.generated.push(tok);
+                        st.metrics.generated_tokens = st.generated.len();
+                        if st.metrics.first_token.is_none() {
+                            st.metrics.first_token = Some(Instant::now());
+                        }
+                        sink(TokenEvent::Token { id: st.req.id, tok });
+                    };
+                    match Sampler::next(
+                        &st.req.sampling,
+                        &st.req.stop,
+                        &st.generated,
+                        &logits[wi],
+                    ) {
+                        SamplerStep::Token { tok } => {
+                            push(st, tok);
+                            if backend.slot_pos(si) + 1 >= ctx {
+                                done = Some((FinishReason::MaxTokens, 0));
+                            }
+                        }
+                        SamplerStep::Finish { tok, why, trim } => {
+                            if let Some(t) = tok {
+                                push(st, t);
+                            }
+                            done = Some((why, trim));
+                        }
                     }
-                }
-                st.gen_prefix.len() + st.generated.len() >= st.req.max_new
+                } else if st.generated.len() >= st.req.stop.max_new
                     || backend.slot_pos(si) + 1 >= ctx
-            };
-            if finished {
-                let st = slots[si].take().expect("finished slot");
-                backend.release_slot(si);
-                let mut m = st.metrics;
-                m.finished = Some(Instant::now());
-                let mut tokens = st.gen_prefix;
-                tokens.extend_from_slice(&st.generated);
-                responses.push(Response { id: st.req.id, tokens });
-                all_metrics.push(m);
+                {
+                    // degenerate budgets (max_new == 0) or a context
+                    // window exhausted mid-prompt
+                    done = Some((FinishReason::MaxTokens, 0));
+                }
+            }
+            if let Some((why, trim)) = done {
+                finish_slot!(si, why, trim);
             }
         }
     }
@@ -423,12 +777,13 @@ pub fn serve_with(
         weight_bytes_per_step: backend.weight_bytes_per_step(),
         kv_bytes_per_step: backend.kv_bytes_per_step(),
         preemptions,
-        rejected,
+        finish,
+        cancelled_tokens,
         peak_concurrency,
         kv: backend.pool_stats(),
     };
-    responses.sort_by_key(|r| r.id);
-    Ok((responses, metrics))
+    outcomes.sort_by_key(|r| r.id);
+    Ok((outcomes, metrics))
 }
 
 /// Map a slot-ordered work list onto engine step items (`seq` = index
@@ -957,13 +1312,13 @@ mod tests {
     use super::*;
     use crate::model::WeightStore;
 
-    fn backend() -> (WeightStore, Vec<Request>) {
+    fn backend() -> (WeightStore, Vec<GenRequest>) {
         let cfg = ModelConfig::builtin("opt-micro").unwrap();
         let store = WeightStore::random("t", cfg, 31);
         let reqs = vec![
-            Request { id: 1, prompt: vec![104, 105], max_new: 4 },
-            Request { id: 2, prompt: vec![97, 98, 99], max_new: 6 },
-            Request { id: 3, prompt: vec![120], max_new: 3 },
+            GenRequest::greedy(1, vec![104, 105], 4),
+            GenRequest::greedy(2, vec![97, 98, 99], 6),
+            GenRequest::greedy(3, vec![120], 3),
         ];
         (store, reqs)
     }
@@ -978,7 +1333,9 @@ mod tests {
         assert_eq!(resp[0].tokens.len(), 4);
         assert_eq!(resp[1].tokens.len(), 6);
         assert_eq!(resp[2].tokens.len(), 3);
+        assert!(resp.iter().all(|r| r.finish == FinishReason::MaxTokens));
         assert_eq!(metrics.total_generated(), 13);
+        assert_eq!(metrics.finish.max_tokens, 3);
         assert!(metrics.decode_steps > 0);
         assert!(metrics.weight_bytes_per_step > 0);
         assert!(metrics.prompt_positions >= 6, "prompts fed through steps");
@@ -992,8 +1349,11 @@ mod tests {
         let (resp, _) = serve(&mut be, reqs.clone()).unwrap();
         for r in &reqs {
             let w2 = Weights::Fp(&store);
-            let expect =
-                forward::generate_greedy(&w2, &r.prompt, r.max_new);
+            let expect = Engine::new(&w2).generate(
+                &r.prompt,
+                r.stop.max_new,
+                &SamplingParams::greedy(),
+            );
             let got = &resp
                 .iter()
                 .find(|x| x.id == r.id)
@@ -1011,13 +1371,15 @@ mod tests {
         // math
         let cfg = ModelConfig::builtin("opt-micro").unwrap();
         let store = WeightStore::random("t", cfg, 37);
-        let reqs: Vec<Request> = (0..4)
-            .map(|i| Request {
-                id: i,
-                prompt: (0..40 + i as i32 * 7)
-                    .map(|j| (j * 13 + i as i32) % 256)
-                    .collect(),
-                max_new: 5,
+        let reqs: Vec<GenRequest> = (0..4)
+            .map(|i| {
+                GenRequest::greedy(
+                    i,
+                    (0..40 + i as i32 * 7)
+                        .map(|j| (j * 13 + i as i32) % 256)
+                        .collect(),
+                    5,
+                )
             })
             .collect();
         let serve_chunk = |chunk: usize| {
@@ -1026,7 +1388,10 @@ mod tests {
             serve_with(
                 &mut be,
                 reqs.clone(),
-                ServeOptions { prefill_chunk: chunk },
+                ServeOptions {
+                    prefill_chunk: chunk,
+                    ..ServeOptions::default()
+                },
             )
             .unwrap()
         };
@@ -1050,11 +1415,13 @@ mod tests {
     fn chunked_prefill_paged_matches_contiguous() {
         let cfg = ModelConfig::builtin("opt-micro").unwrap();
         let store = WeightStore::random("t", cfg, 38);
-        let reqs: Vec<Request> = (0..3)
-            .map(|i| Request {
-                id: i,
-                prompt: (0..30).map(|j| (j * 7 + i as i32) % 256).collect(),
-                max_new: 4,
+        let reqs: Vec<GenRequest> = (0..3)
+            .map(|i| {
+                GenRequest::greedy(
+                    i,
+                    (0..30).map(|j| (j * 7 + i as i32) % 256).collect(),
+                    4,
+                )
             })
             .collect();
         let w = Weights::Fp(&store);
@@ -1066,7 +1433,7 @@ mod tests {
         let (resp_p, m) = serve_with(
             &mut bp,
             reqs,
-            ServeOptions { prefill_chunk: 16 },
+            ServeOptions { prefill_chunk: 16, ..ServeOptions::default() },
         )
         .unwrap();
         for (c, p) in resp_c.iter().zip(&resp_p) {
@@ -1101,12 +1468,8 @@ mod tests {
     fn paged_preemption_preserves_greedy_output() {
         let cfg = ModelConfig::builtin("opt-micro").unwrap();
         let store = WeightStore::random("t", cfg, 33);
-        let reqs: Vec<Request> = (0..4)
-            .map(|i| Request {
-                id: i,
-                prompt: vec![10 + i as i32, 20, 30],
-                max_new: 12,
-            })
+        let reqs: Vec<GenRequest> = (0..4)
+            .map(|i| GenRequest::greedy(i, vec![10 + i as i32, 20, 30], 12))
             .collect();
         let w = Weights::Fp(&store);
         let mut be = NativeBackend::new(w, 4);
@@ -1133,8 +1496,8 @@ mod tests {
         // 2-block pool (bs 4): a 12-token prompt can never fit, the
         // 2-token one can
         let reqs = vec![
-            Request { id: 1, prompt: (0..12).collect(), max_new: 4 },
-            Request { id: 2, prompt: vec![7, 8], max_new: 3 },
+            GenRequest::greedy(1, (0..12).collect(), 4),
+            GenRequest::greedy(2, vec![7, 8], 3),
         ];
         let w = Weights::Fp(&store);
         let mut bp =
@@ -1142,8 +1505,9 @@ mod tests {
         let (resp, m) = serve(&mut bp, reqs).unwrap();
         assert_eq!(resp.len(), 2);
         assert!(resp[0].tokens.is_empty(), "oversized req rejected");
+        assert_eq!(resp[0].finish, FinishReason::Rejected);
         assert_eq!(resp[1].tokens.len(), 3, "small req still served");
-        assert_eq!(m.rejected, 1);
+        assert_eq!(m.finish.rejected, 1);
     }
 
     #[test]
@@ -1151,12 +1515,8 @@ mod tests {
         let cfg = ModelConfig::builtin("opt-micro").unwrap();
         let store = WeightStore::random("t", cfg, 34);
         let shared: Vec<i32> = (0..8).collect();
-        let reqs: Vec<Request> = (0..3)
-            .map(|i| Request {
-                id: i,
-                prompt: shared.clone(),
-                max_new: 4,
-            })
+        let reqs: Vec<GenRequest> = (0..3)
+            .map(|i| GenRequest::greedy(i, shared.clone(), 4))
             .collect();
         let w = Weights::Fp(&store);
         let mut bp =
@@ -1182,12 +1542,196 @@ mod tests {
         let store = WeightStore::random("t", cfg, 32);
         let w = Weights::Fp(&store);
         let mut be = NativeBackend::new(w, 1);
-        let reqs = vec![Request {
-            id: 1,
-            prompt: (0..300).map(|i| i % 256).collect(),
-            max_new: 5,
-        }];
+        let reqs = vec![GenRequest::greedy(
+            1,
+            (0..300).map(|i| i % 256).collect(),
+            5,
+        )];
         let (resp, _) = serve(&mut be, reqs).unwrap();
         assert_eq!(resp[0].tokens.len(), 5);
+    }
+
+    #[test]
+    fn stop_criteria_matching() {
+        let sc = StopCriteria::max_tokens(100)
+            .with_stop_tokens(vec![7])
+            .with_stop_seq(vec![1, 2, 3])
+            .with_stop_seq(vec![2, 3]);
+        assert!(sc.is_stop_token(7));
+        assert!(!sc.is_stop_token(8));
+        // longest matching stop sequence wins
+        assert_eq!(sc.stop_seq_hit(&[9, 1, 2], 3), Some(3));
+        assert_eq!(sc.stop_seq_hit(&[9, 9, 2], 3), Some(2));
+        assert_eq!(sc.stop_seq_hit(&[9, 1, 2], 4), None);
+        // sequences longer than the stream cannot match
+        assert_eq!(sc.stop_seq_hit(&[2], 3), Some(2));
+        assert_eq!(sc.stop_seq_hit(&[], 3), None);
+        let eos = StopCriteria {
+            eos: Some(0),
+            ..StopCriteria::max_tokens(10)
+        };
+        assert!(eos.is_stop_token(0));
+    }
+
+    #[test]
+    fn sampler_stop_token_takes_precedence() {
+        // logits peak at token 5; configured as a stop token it must end
+        // the request without emitting
+        let mut logits = vec![0.0f32; 16];
+        logits[5] = 10.0;
+        let stop = StopCriteria::max_tokens(100).with_stop_tokens(vec![5]);
+        let step = Sampler::next(
+            &SamplingParams::greedy(),
+            &stop,
+            &[1, 2],
+            &logits,
+        );
+        assert_eq!(
+            step,
+            SamplerStep::Finish {
+                tok: None,
+                why: FinishReason::StopToken,
+                trim: 0
+            }
+        );
+    }
+
+    #[test]
+    fn serve_stop_token_and_stop_seq() {
+        let (store, _) = backend();
+        let w = Weights::Fp(&store);
+        // reference greedy tokens for this prompt
+        let prompt = vec![104i32, 105, 106];
+        let full = Engine::new(&w).generate(
+            &prompt,
+            8,
+            &SamplingParams::greedy(),
+        );
+        assert!(full.len() == 8);
+        // greedy outputs on random models repeat; anchor the stop on the
+        // last token value whose FIRST occurrence is at index k so the
+        // criterion cannot fire earlier than intended
+        let k = (0..full.len())
+            .rev()
+            .find(|&k| !full[..k].contains(&full[k]))
+            .expect("index 0 is always a first occurrence");
+
+        // stop token: generation ends right before full[k]
+        let req = GenRequest::new(
+            1,
+            prompt.clone(),
+            SamplingParams::greedy(),
+            StopCriteria::max_tokens(8).with_stop_tokens(vec![full[k]]),
+        );
+        let mut be = NativeBackend::new(w, 1);
+        let (resp, m) = serve(&mut be, vec![req]).unwrap();
+        assert_eq!(resp[0].finish, FinishReason::StopToken);
+        assert_eq!(resp[0].tokens, full[..k].to_vec());
+        assert_eq!(m.finish.stop_token, 1);
+
+        // stop sequence ending at full[k]: matched tokens are trimmed
+        let (seq, expect) = if k >= 1 {
+            (full[k - 1..=k].to_vec(), full[..k - 1].to_vec())
+        } else {
+            (vec![full[0]], Vec::new())
+        };
+        let w2 = Weights::Fp(&store);
+        let req = GenRequest::new(
+            2,
+            prompt.clone(),
+            SamplingParams::greedy(),
+            StopCriteria::max_tokens(8).with_stop_seq(seq),
+        );
+        let mut be = NativeBackend::new(w2, 1);
+        let (resp, m) = serve(&mut be, vec![req]).unwrap();
+        assert_eq!(resp[0].finish, FinishReason::StopSeq);
+        assert_eq!(resp[0].tokens, expect);
+        assert_eq!(m.finish.stop_seq, 1);
+    }
+
+    #[test]
+    fn serve_cancellation_releases_slot_and_reports_waste() {
+        let (store, _) = backend();
+        let w = Weights::Fp(&store);
+        let reqs = vec![
+            GenRequest::greedy(1, vec![104, 105], 12),
+            GenRequest::greedy(2, vec![97, 98], 12),
+        ];
+        let cancel = reqs[0].cancel_handle();
+        let mut be = NativeBackend::new(w, 2);
+        let mut events = Vec::new();
+        let (resp, m) = serve_events(
+            &mut be,
+            reqs,
+            ServeOptions::default(),
+            &mut |ev| {
+                // cancel request 1 after its third streamed token; the
+                // sink runs inside the scheduler, so this exercises the
+                // next-step-boundary release path deterministically
+                if let TokenEvent::Token { id: 1, .. } = ev {
+                    events.push(());
+                    if events.len() == 3 {
+                        cancel.cancel();
+                    }
+                }
+            },
+        )
+        .unwrap();
+        let r1 = resp.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(r1.finish, FinishReason::Cancelled);
+        assert_eq!(r1.tokens.len(), 3, "cancelled after 3 tokens");
+        let r2 = resp.iter().find(|r| r.id == 2).unwrap();
+        assert_eq!(r2.finish, FinishReason::MaxTokens);
+        assert_eq!(r2.tokens.len(), 12, "other request unaffected");
+        assert_eq!(m.finish.cancelled, 1);
+        assert_eq!(m.cancelled_tokens, 3);
+    }
+
+    #[test]
+    fn serve_cancelled_before_admission_never_runs() {
+        let (store, _) = backend();
+        let w = Weights::Fp(&store);
+        let reqs = vec![GenRequest::greedy(9, vec![1, 2, 3], 4)];
+        reqs[0].cancel_handle().cancel();
+        let mut be = NativeBackend::new(w, 1);
+        let (resp, m) = serve(&mut be, reqs).unwrap();
+        assert_eq!(resp[0].finish, FinishReason::Cancelled);
+        assert!(resp[0].tokens.is_empty());
+        assert_eq!(m.decode_steps, 0, "no step ran for a dead request");
+    }
+
+    #[test]
+    fn token_events_stream_before_done() {
+        let (store, reqs) = backend();
+        let w = Weights::Fp(&store);
+        let mut be = NativeBackend::new(w, 2);
+        let mut log: Vec<(u64, bool)> = Vec::new(); // (id, is_done)
+        let (resp, _) = serve_events(
+            &mut be,
+            reqs,
+            ServeOptions::default(),
+            &mut |ev| match ev {
+                TokenEvent::Token { id, .. } => log.push((id, false)),
+                TokenEvent::Done(o) => log.push((o.id, true)),
+            },
+        )
+        .unwrap();
+        for r in &resp {
+            let toks: Vec<_> =
+                log.iter().filter(|(id, d)| *id == r.id && !d).collect();
+            assert_eq!(toks.len(), r.tokens.len(), "one event per token");
+            let done_pos = log
+                .iter()
+                .position(|(id, d)| *id == r.id && *d)
+                .expect("done event");
+            let first_tok = log
+                .iter()
+                .position(|(id, d)| *id == r.id && !d)
+                .expect("token event");
+            assert!(
+                first_tok < done_pos,
+                "tokens must stream before completion"
+            );
+        }
     }
 }

@@ -1,18 +1,77 @@
 //! Threaded serving front-end. PJRT handles are not Send, so a dedicated
-//! engine thread owns the backend; callers submit requests through a
-//! channel and receive responses on per-request channels. Requests are
-//! micro-batched: the engine drains whatever is queued (up to a window)
-//! and runs one continuous-batching round.
+//! engine thread owns the backend; callers submit [`GenRequest`]s through
+//! a channel and consume a per-request [`TokenEvent`] stream: `Token`
+//! events arrive as the scheduler produces them (before the request
+//! completes) and a final `Done` carries the [`GenOutcome`]. `submit`
+//! also hands back a [`CancelHandle`] so callers can abandon a request
+//! mid-flight; the scheduler releases its KV slot at the next step
+//! boundary. Requests are micro-batched: the engine drains whatever is
+//! queued (up to `ServeOptions::serve_window`) and runs one
+//! continuous-batching round.
 
-use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::mpsc::{self, Receiver, RecvError, Sender};
 use std::thread::JoinHandle;
 
 use super::metrics::ServeMetrics;
-use super::serve::{Request, Response};
+use super::serve::{
+    serve_events, CancelHandle, DecodeBackend, GenOutcome, GenRequest,
+    SamplingParams, ServeOptions, StopCriteria, TokenEvent,
+};
 
 pub enum Job {
-    Run(Request, Sender<Response>),
+    Run(GenRequest, Sender<TokenEvent>),
     Shutdown(Sender<ServeMetrics>),
+}
+
+/// Run one continuous-batching round over a drained micro-batch,
+/// streaming each request's events to its submitter — the glue between
+/// [`serve_events`]'s single sink and the per-request channels. Backends
+/// that cannot serve (construction failed upstream) simply drop their
+/// senders; receivers observe the disconnect.
+pub fn serve_batch(
+    backend: &mut dyn DecodeBackend,
+    batch: Vec<(GenRequest, Sender<TokenEvent>)>,
+    opts: ServeOptions,
+) -> ServeMetrics {
+    // events route by request id, so ids must be unique within a batch
+    // (ServerHandle::submit guarantees this; hand-built batches must too)
+    let mut senders: std::collections::HashMap<u64, Sender<TokenEvent>> =
+        batch.iter().map(|(r, s)| (r.id, s.clone())).collect();
+    debug_assert_eq!(
+        senders.len(),
+        batch.len(),
+        "duplicate request ids in a serve_batch round"
+    );
+    let reqs: Vec<GenRequest> = batch.into_iter().map(|(r, _)| r).collect();
+    let result = serve_events(backend, reqs, opts, &mut |ev| {
+        let (id, done) = match &ev {
+            TokenEvent::Token { id, .. } => (*id, false),
+            TokenEvent::Done(o) => (o.id, true),
+        };
+        if let Some(s) = senders.get(&id) {
+            let _ = s.send(ev);
+        }
+        if done {
+            senders.remove(&id);
+        }
+    });
+    match result {
+        Ok((_, m)) => m,
+        Err(e) => {
+            eprintln!("serve round failed: {}", e);
+            ServeMetrics::default()
+        }
+    }
+}
+
+/// Drain a request's event stream to completion; `Err` means the engine
+/// thread dropped the stream before a `Done` arrived.
+pub fn recv_outcome(rx: &Receiver<TokenEvent>) -> Result<GenOutcome, RecvError> {
+    loop {
+        if let TokenEvent::Done(o) = rx.recv()? {
+            return Ok(o);
+        }
+    }
 }
 
 pub struct ServerHandle {
@@ -22,15 +81,18 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
-    /// Spawn the engine thread. `make_backend_and_serve` is called on the
-    /// engine thread with each drained batch (it owns any non-Send state
-    /// via the closure's captured constructor).
-    pub fn spawn<F>(mut engine_loop: F) -> ServerHandle
+    /// Spawn the engine thread. `engine_loop` is called on the engine
+    /// thread with each drained micro-batch (it owns any non-Send state
+    /// via the closure's captured constructor; most impls call
+    /// [`serve_batch`]). `opts.serve_window` bounds how many queued
+    /// requests join one continuous-batching round.
+    pub fn spawn<F>(opts: ServeOptions, mut engine_loop: F) -> ServerHandle
     where
-        F: FnMut(Vec<(Request, Sender<Response>)>) -> ServeMetrics
+        F: FnMut(Vec<(GenRequest, Sender<TokenEvent>)>) -> ServeMetrics
             + Send
             + 'static,
     {
+        let window = opts.serve_window.max(1);
         let (tx, rx): (Sender<Job>, Receiver<Job>) = mpsc::channel();
         let join = std::thread::spawn(move || {
             let mut total = ServeMetrics::default();
@@ -48,7 +110,7 @@ impl ServerHandle {
                 }
                 if shutdown.is_none() {
                     // micro-batch window: drain whatever is already queued
-                    while batch.len() < 16 {
+                    while batch.len() < window {
                         match rx.try_recv() {
                             Ok(Job::Run(r, s)) => batch.push((r, s)),
                             Ok(Job::Shutdown(s)) => {
@@ -67,6 +129,11 @@ impl ServerHandle {
                     total.wall_s += m.wall_s;
                     total.weight_bytes_per_step = m.weight_bytes_per_step;
                     total.kv_bytes_per_step = m.kv_bytes_per_step;
+                    total.preemptions += m.preemptions;
+                    total.finish.merge(&m.finish);
+                    total.cancelled_tokens += m.cancelled_tokens;
+                    total.peak_concurrency =
+                        total.peak_concurrency.max(m.peak_concurrency);
                 }
                 if let Some(s) = shutdown {
                     let _ = s.send(total.clone());
@@ -81,21 +148,36 @@ impl ServerHandle {
         }
     }
 
-    /// Submit a request; returns the receiver for its response.
+    /// Submit a request with explicit sampling and stop configs; returns
+    /// the request's event stream and its cancellation handle.
     pub fn submit(
         &self,
         prompt: Vec<i32>,
-        max_new: usize,
-    ) -> Receiver<Response> {
+        sampling: SamplingParams,
+        stop: StopCriteria,
+    ) -> (Receiver<TokenEvent>, CancelHandle) {
         let id = self
             .next_id
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let req = GenRequest::new(id, prompt, sampling, stop);
+        let cancel = req.cancel_handle();
         let (tx, rx) = mpsc::channel();
-        let _ = self.tx.send(Job::Run(
-            Request { id, prompt, max_new },
-            tx,
-        ));
-        rx
+        let _ = self.tx.send(Job::Run(req, tx));
+        (rx, cancel)
+    }
+
+    /// Submit with the historical greedy-to-budget behavior.
+    pub fn submit_greedy(
+        &self,
+        prompt: Vec<i32>,
+        max_new: usize,
+    ) -> Receiver<TokenEvent> {
+        self.submit(
+            prompt,
+            SamplingParams::greedy(),
+            StopCriteria::max_tokens(max_new),
+        )
+        .0
     }
 
     /// Drain, stop the engine thread, and return aggregate metrics.
@@ -113,40 +195,118 @@ impl ServerHandle {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::serve::{serve, NativeBackend};
+    use crate::coordinator::serve::{FinishReason, NativeBackend};
     use crate::model::forward::Weights;
     use crate::model::{ModelConfig, WeightStore};
 
-    #[test]
-    fn threaded_server_round_trip() {
-        let handle = ServerHandle::spawn(move |batch| {
+    fn spawn_native(window: usize) -> ServerHandle {
+        let opts = ServeOptions { serve_window: window, ..Default::default() };
+        ServerHandle::spawn(opts, move |batch| {
             // engine thread: build a fresh native backend per micro-batch
             let cfg = ModelConfig::builtin("opt-micro").unwrap();
             let store = WeightStore::random("t", cfg, 41);
             let w = Weights::Fp(&store);
             let mut be = NativeBackend::new(w, 2);
-            let (reqs, senders): (Vec<_>, Vec<_>) = batch
-                .into_iter()
-                .map(|(r, s)| (r, s))
-                .unzip();
-            let ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
-            let (resps, m) = serve(&mut be, reqs).unwrap();
-            for (resp, (id, s)) in resps
-                .into_iter()
-                .zip(ids.into_iter().zip(senders))
-            {
-                assert_eq!(resp.id, id);
-                let _ = s.send(resp);
+            serve_batch(&mut be, batch, opts)
+        })
+    }
+
+    #[test]
+    fn threaded_server_streams_tokens_then_done() {
+        let handle = spawn_native(16);
+        let rx1 = handle.submit_greedy(vec![104, 105], 3);
+        let rx2 = handle.submit_greedy(vec![97], 5);
+        // collect request 1's full stream: tokens first, Done last
+        let mut toks = Vec::new();
+        let o1 = loop {
+            match rx1.recv().unwrap() {
+                TokenEvent::Token { tok, .. } => toks.push(tok),
+                TokenEvent::Done(o) => break o,
             }
-            m
-        });
-        let rx1 = handle.submit(vec![104, 105], 3);
-        let rx2 = handle.submit(vec![97], 5);
-        let r1 = rx1.recv().unwrap();
-        let r2 = rx2.recv().unwrap();
-        assert_eq!(r1.tokens.len(), 3);
-        assert_eq!(r2.tokens.len(), 5);
+        };
+        assert_eq!(o1.tokens, toks, "stream matches outcome (no trimming)");
+        assert_eq!(o1.tokens.len(), 3);
+        assert_eq!(o1.finish, FinishReason::MaxTokens);
+        let o2 = recv_outcome(&rx2).unwrap();
+        assert_eq!(o2.tokens.len(), 5);
         let m = handle.shutdown();
         assert_eq!(m.total_generated(), 8);
+        assert_eq!(m.finish.max_tokens, 2);
+    }
+
+    /// Paces the inner backend so a cancel issued from another thread
+    /// reliably lands mid-generation (decode on the micro model is
+    /// otherwise faster than cross-thread wakeups).
+    struct Throttled<B>(B);
+
+    impl<B: DecodeBackend> DecodeBackend for Throttled<B> {
+        fn slots(&self) -> usize {
+            self.0.slots()
+        }
+        fn cfg(&self) -> ModelConfig {
+            self.0.cfg()
+        }
+        fn max_chunk(&self) -> usize {
+            self.0.max_chunk()
+        }
+        fn step(
+            &mut self,
+            work: &[crate::coordinator::SlotWork],
+        ) -> Result<Vec<Vec<f32>>, String> {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            self.0.step(work)
+        }
+        fn reset_slot(&mut self, slot: usize) {
+            self.0.reset_slot(slot)
+        }
+        fn slot_pos(&self, slot: usize) -> usize {
+            self.0.slot_pos(slot)
+        }
+        fn weight_bytes_per_step(&self) -> usize {
+            self.0.weight_bytes_per_step()
+        }
+        fn kv_bytes_per_step(&self) -> usize {
+            self.0.kv_bytes_per_step()
+        }
+    }
+
+    #[test]
+    fn threaded_server_cancellation() {
+        let opts = ServeOptions::default();
+        let handle = ServerHandle::spawn(opts, move |batch| {
+            let cfg = ModelConfig::builtin("opt-micro").unwrap();
+            let store = WeightStore::random("t", cfg, 41);
+            let w = Weights::Fp(&store);
+            let mut be = Throttled(NativeBackend::new(w, 2));
+            serve_batch(&mut be, batch, opts)
+        });
+        let (rx, cancel) = handle.submit(
+            vec![104, 105],
+            SamplingParams::greedy(),
+            StopCriteria::max_tokens(64),
+        );
+        // cancel as soon as the first token streams out
+        let first = rx.recv().unwrap();
+        assert!(matches!(first, TokenEvent::Token { .. }));
+        cancel.cancel();
+        let o = recv_outcome(&rx).unwrap();
+        assert_eq!(o.finish, FinishReason::Cancelled);
+        assert!(o.tokens.len() < 64, "cancelled well before the budget");
+        let m = handle.shutdown();
+        assert_eq!(m.finish.cancelled, 1);
+        assert!(m.cancelled_tokens > 0);
+    }
+
+    #[test]
+    fn serve_window_bounds_micro_batch() {
+        // window 1: each request runs in its own round; metrics still
+        // aggregate across rounds
+        let handle = spawn_native(1);
+        let rx1 = handle.submit_greedy(vec![104, 105], 2);
+        let rx2 = handle.submit_greedy(vec![97], 2);
+        assert_eq!(recv_outcome(&rx1).unwrap().tokens.len(), 2);
+        assert_eq!(recv_outcome(&rx2).unwrap().tokens.len(), 2);
+        let m = handle.shutdown();
+        assert_eq!(m.total_generated(), 4);
     }
 }

@@ -2,7 +2,7 @@
 //! generation/exact-match tasks (Table 4: gsm-s, longbench-s).
 
 use crate::data::tasks::{GenCase, PairCase};
-use crate::model::forward::{Engine, Weights};
+use crate::model::forward::{Engine, SamplingParams, Weights};
 
 /// Length-normalized NLL of one variable-length sequence (native path;
 /// the HLO nll graph has fixed geometry, tasks need arbitrary lengths).
@@ -69,7 +69,11 @@ pub fn exact_match(w: &Weights, cases: &[GenCase]) -> f64 {
         let start = c.prompt.len().saturating_sub(cfg.ctx - c.answer.len() - 1);
         let toks: Vec<i32> =
             c.prompt[start..].iter().map(|&b| b as i32).collect();
-        let out = engine.generate_greedy(&toks, c.answer.len());
+        let out = engine.generate(
+            &toks,
+            c.answer.len(),
+            &SamplingParams::greedy(),
+        );
         let got: Vec<u8> = out.iter().map(|&t| t as u8).collect();
         if got == c.answer {
             correct += 1;

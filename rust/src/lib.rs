@@ -46,9 +46,26 @@
 //! evaluation (`forward_full` / `nll_sum` / `eval::PplEngine` are
 //! full-length prefill chunks with all-position logits), calibration
 //! (the same prefill with an `Observer` hook capturing per-linear
-//! inputs), and greedy generation. Per-sequence op order is identical at
-//! every chunk size, batch size, and thread count, so dense (f32) KV
-//! stores are bit-identical between chunked and per-token prefill.
+//! inputs), and generation (`Engine::generate`). Per-sequence op order
+//! is identical at every chunk size, batch size, and thread count, so
+//! dense (f32) KV stores are bit-identical between chunked and
+//! per-token prefill.
+//!
+//! ## Serving: the request lifecycle
+//!
+//! The serving front (`coordinator::serve` / `coordinator::server`) is
+//! organized around per-request lifecycles rather than fixed greedy
+//! runs. A `GenRequest` carries `SamplingParams` (temperature / top-k /
+//! top-p / per-request seed; temperature 0 is bitwise the greedy path)
+//! and `StopCriteria` (token budget, stop tokens, stop sequences,
+//! optional model EOS) plus a `CancelHandle` for mid-flight
+//! cancellation. The scheduler's `Sampler` stage draws each token as a
+//! pure function of `(seed, token index)` — `model::forward::
+//! sample_logits` — so sampled outputs are reproducible across batch
+//! sizes, prefill chunking, and preempt-and-resume. `serve_events`
+//! streams `TokenEvent`s incrementally; every request finishes with a
+//! `GenOutcome` and a `FinishReason`, tallied per reason (plus
+//! cancelled-token waste) in `ServeMetrics`.
 //!
 //! See DESIGN.md for the system inventory and experiment index.
 

@@ -14,7 +14,9 @@
 //! The historical entry points are thin wrappers over the same engine:
 //! [`forward_full`] and [`nll_sum`] are full-length prefill chunks with
 //! all-position logits (plus the calibration [`Observer`] hook), and
-//! [`generate_greedy`] is one prefill chunk followed by decode steps.
+//! [`Engine::generate`] is one prefill chunk followed by decode steps,
+//! drawing each token through [`sample_logits`] ([`SamplingParams`]:
+//! temperature / top-k / top-p / seed; temperature 0 is exact argmax).
 //! Per-sequence op order is identical at every chunk size, batch size and
 //! thread count, so dense (f32) KV stores produce bit-identical logits
 //! whether a prompt is fed token-by-token or as one chunk.
@@ -342,6 +344,145 @@ pub fn argmax(xs: &[f32]) -> usize {
 }
 
 // ---------------------------------------------------------------------------
+// sampling
+// ---------------------------------------------------------------------------
+
+/// Per-request generation config. `temperature == 0` is the exact greedy
+/// path ([`argmax`], no RNG draw at all); positive temperatures sample
+/// from the (optionally top-k / top-p truncated) softmax with a draw
+/// that is a pure function of `(seed, draw index)` — see
+/// [`sample_logits`] — so sampled outputs are reproducible regardless of
+/// batch composition, preemption, or prefill chunking.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingParams {
+    /// 0 (or negative) = greedy argmax; larger flattens the distribution
+    pub temperature: f32,
+    /// keep only the k highest-logit tokens (0 = no limit)
+    pub top_k: usize,
+    /// nucleus cut: smallest prefix of the sorted distribution with
+    /// probability mass >= top_p (>= 1.0 = no cut)
+    pub top_p: f32,
+    /// per-request RNG seed (splitmix64 stream, `util::rng`)
+    pub seed: u64,
+}
+
+impl SamplingParams {
+    /// The historical deterministic path: argmax at every position.
+    pub fn greedy() -> SamplingParams {
+        SamplingParams { temperature: 0.0, top_k: 0, top_p: 1.0, seed: 0 }
+    }
+
+    /// Plain temperature sampling (no top-k/top-p truncation).
+    pub fn sample(temperature: f32, seed: u64) -> SamplingParams {
+        SamplingParams { temperature, top_k: 0, top_p: 1.0, seed }
+    }
+
+    pub fn with_top_k(mut self, k: usize) -> SamplingParams {
+        self.top_k = k;
+        self
+    }
+
+    pub fn with_top_p(mut self, p: f32) -> SamplingParams {
+        self.top_p = p;
+        self
+    }
+
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+}
+
+/// splitmix64 increment (`util::rng`): seeding at `seed + draw * GOLDEN`
+/// makes draw `i` exactly the `(i+1)`-th output of the seed's stream.
+const SPLITMIX_GOLDEN: u64 = 0x9E3779B97F4A7C15;
+
+/// Sample the next token from a logits row. `draw` is the request's
+/// generated-token index (0 for the first sampled token): the single
+/// uniform consumed is the `(draw+1)`-th output of the `seed` splitmix64
+/// stream, so the result depends only on `(logits, params, draw)` — not
+/// on how many other sequences share the step, how the prompt was
+/// chunked, or whether the request was preempted and replayed.
+/// Temperature <= 0 short-circuits to [`argmax`] (bitwise the historical
+/// greedy path). Ties in the logit sort break toward the lower index.
+pub fn sample_logits(
+    logits: &[f32],
+    params: &SamplingParams,
+    draw: u64,
+) -> i32 {
+    if params.is_greedy() || logits.len() <= 1 {
+        return argmax(logits) as i32;
+    }
+    let mut rng = crate::util::rng::Rng::new(
+        params.seed.wrapping_add(draw.wrapping_mul(SPLITMIX_GOLDEN)),
+    );
+    // temperature softmax is max-shifted: the leading exp is 1, so tiny
+    // temperatures degrade to greedy instead of NaN
+    let inv_t = 1.0 / params.temperature;
+    let limit_k = params.top_k > 0 && params.top_k < logits.len();
+    if !limit_k && params.top_p >= 1.0 {
+        // plain temperature sampling: no candidate ordering needed —
+        // one O(vocab) pass, cumulative walk in index order
+        let m = logits[argmax(logits)];
+        let probs: Vec<f32> =
+            logits.iter().map(|&l| ((l - m) * inv_t).exp()).collect();
+        let total: f32 = probs.iter().sum();
+        let mut r = rng.uniform() as f32 * total;
+        for (i, &p) in probs.iter().enumerate() {
+            r -= p;
+            if r <= 0.0 {
+                return i as i32;
+            }
+        }
+        return (probs.len() - 1) as i32;
+    }
+    // candidates ordered by (logit desc, index asc) — deterministic,
+    // total (ties break on index). top-k partitions first so only the
+    // kept candidates pay the sort; top-p needs the full order.
+    let by_logit_desc = |&a: &u32, &b: &u32| {
+        logits[b as usize]
+            .partial_cmp(&logits[a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    };
+    let mut idx: Vec<u32> = (0..logits.len() as u32).collect();
+    if limit_k {
+        idx.select_nth_unstable_by(params.top_k - 1, by_logit_desc);
+        idx.truncate(params.top_k);
+    }
+    idx.sort_by(by_logit_desc);
+    let m = logits[idx[0] as usize];
+    let mut probs: Vec<f32> = idx
+        .iter()
+        .map(|&i| ((logits[i as usize] - m) * inv_t).exp())
+        .collect();
+    if params.top_p < 1.0 {
+        // nucleus cut: smallest prefix with mass >= top_p
+        let total: f32 = probs.iter().sum();
+        let target = params.top_p.max(0.0) * total;
+        let mut acc = 0.0f32;
+        let mut cut = probs.len();
+        for (i, &p) in probs.iter().enumerate() {
+            acc += p;
+            if acc >= target {
+                cut = i + 1;
+                break;
+            }
+        }
+        idx.truncate(cut);
+        probs.truncate(cut);
+    }
+    let total: f32 = probs.iter().sum();
+    let mut r = rng.uniform() as f32 * total;
+    for (i, &p) in probs.iter().enumerate() {
+        r -= p;
+        if r <= 0.0 {
+            return idx[i] as i32;
+        }
+    }
+    idx[idx.len() - 1] as i32
+}
+
+// ---------------------------------------------------------------------------
 // step plans
 // ---------------------------------------------------------------------------
 
@@ -594,8 +735,9 @@ impl BatchScratch {
 /// decode positions and prefill chunks together — through each layer so
 /// the quantized weights stream once per step instead of once per
 /// sequence or position. Serving, evaluation ([`nll_sum`] /
-/// [`forward_full`]), calibration (the [`Observer`] hook), and greedy
-/// generation all run through this one entry point.
+/// [`forward_full`]), calibration (the [`Observer`] hook), and
+/// generation ([`Engine::generate`]) all run through this one entry
+/// point.
 pub struct Engine<'w> {
     cfg: ModelConfig,
     /// token embedding, borrowed — doubles as the tied head weight
@@ -1081,12 +1223,16 @@ impl<'w> Engine<'w> {
         total
     }
 
-    /// Greedy generation: the prompt as one prefill chunk, then decode
-    /// steps (bit-identical to feeding the prompt token-by-token).
-    pub fn generate_greedy(
+    /// Generation: the prompt as one prefill chunk, then decode steps
+    /// (bit-identical to feeding the prompt token-by-token). Token `i`
+    /// is drawn with draw index `i` via [`sample_logits`], so
+    /// `SamplingParams::greedy()` reproduces the historical greedy path
+    /// exactly and sampled runs are reproducible from `params.seed`.
+    pub fn generate(
         &mut self,
         prompt: &[i32],
         max_new: usize,
+        params: &SamplingParams,
     ) -> Vec<i32> {
         let cfg = self.cfg;
         let mut out = Vec::with_capacity(max_new);
@@ -1110,7 +1256,7 @@ impl<'w> Engine<'w> {
             if cache.len >= cfg.ctx {
                 break;
             }
-            let next = argmax(&logits) as i32;
+            let next = sample_logits(&logits, params, out.len() as u64);
             out.push(next);
             let mut refs: Vec<&mut dyn KvSeq> = vec![&mut cache];
             logits = self
@@ -1183,15 +1329,6 @@ pub fn forward_full(
 /// Sum of next-token NLLs over a batch (matches python nll_sum).
 pub fn nll_sum(w: &Weights, tokens: &[Vec<i32>]) -> f64 {
     Engine::new(w).nll_sum_chunked(tokens, usize::MAX)
-}
-
-/// Greedy generation with the native path (one-shot wrapper).
-pub fn generate_greedy(
-    w: &Weights,
-    prompt: &[i32],
-    max_new: usize,
-) -> Vec<i32> {
-    Engine::new(w).generate_greedy(prompt, max_new)
 }
 
 #[cfg(test)]
@@ -1419,7 +1556,11 @@ mod tests {
         let s = micro();
         let w = Weights::Fp(&s);
         let prompt: Vec<i32> = (0..120).map(|i| i % 256).collect();
-        let out = generate_greedy(&w, &prompt, 50);
+        let out = Engine::new(&w).generate(
+            &prompt,
+            50,
+            &SamplingParams::greedy(),
+        );
         assert!(out.len() <= s.cfg.ctx - prompt.len());
     }
 
@@ -1428,7 +1569,8 @@ mod tests {
         let s = micro();
         let w = Weights::Fp(&s);
         let prompt: Vec<i32> = vec![5, 80, 200, 3, 17];
-        let chunked = generate_greedy(&w, &prompt, 6);
+        let chunked =
+            Engine::new(&w).generate(&prompt, 6, &SamplingParams::greedy());
         // per-token prompt feed reference
         let mut engine = Engine::new(&w);
         let mut cache = KvCache::new(s.cfg);
@@ -1482,6 +1624,86 @@ mod tests {
             let b = decode_one(&mut eng_ref, 40, c_s);
             assert_eq!(a, b, "cache divergence after batched step");
         }
+    }
+
+    #[test]
+    fn sampler_temperature_zero_is_argmax_bitwise() {
+        // the greedy path must not even be perturbed by top-k/top-p
+        let mut rng = crate::util::rng::Rng::new(77);
+        for draw in 0..50u64 {
+            let logits = rng.normal_vec_f32(97);
+            let greedy = argmax(&logits) as i32;
+            for p in [
+                SamplingParams::greedy(),
+                SamplingParams::greedy().with_top_k(3).with_top_p(0.5),
+                SamplingParams { temperature: -1.0, ..SamplingParams::greedy() },
+            ] {
+                assert_eq!(sample_logits(&logits, &p, draw), greedy);
+            }
+        }
+    }
+
+    #[test]
+    fn sampler_top_k_one_is_argmax_at_any_temperature() {
+        let mut rng = crate::util::rng::Rng::new(78);
+        for draw in 0..20u64 {
+            let logits = rng.normal_vec_f32(64);
+            let p = SamplingParams::sample(1.3, 9).with_top_k(1);
+            assert_eq!(sample_logits(&logits, &p, draw), argmax(&logits) as i32);
+            // a vanishing nucleus keeps only the head of the distribution
+            let p = SamplingParams::sample(1.3, 9).with_top_p(1e-6);
+            assert_eq!(sample_logits(&logits, &p, draw), argmax(&logits) as i32);
+        }
+    }
+
+    #[test]
+    fn sampler_deterministic_in_seed_and_draw() {
+        let mut rng = crate::util::rng::Rng::new(79);
+        let logits = rng.normal_vec_f32(256);
+        let p = SamplingParams::sample(1.0, 1234).with_top_k(40);
+        for draw in 0..32u64 {
+            let a = sample_logits(&logits, &p, draw);
+            let b = sample_logits(&logits, &p, draw);
+            assert_eq!(a, b);
+        }
+        // different draws must not all collapse to one token on a flat-ish
+        // distribution (the stream actually advances per draw)
+        let seen: std::collections::BTreeSet<i32> =
+            (0..64u64).map(|d| sample_logits(&logits, &p, d)).collect();
+        assert!(seen.len() > 4, "only {} distinct samples", seen.len());
+    }
+
+    #[test]
+    fn sampler_respects_distribution_head() {
+        // one dominant logit: nearly every draw picks it at T=1
+        let mut logits = vec![0.0f32; 32];
+        logits[7] = 8.0;
+        let p = SamplingParams::sample(1.0, 5);
+        let hits = (0..200u64)
+            .filter(|&d| sample_logits(&logits, &p, d) == 7)
+            .count();
+        assert!(hits > 190, "dominant token sampled only {}/200", hits);
+    }
+
+    #[test]
+    fn generate_sampled_reproducible_and_diverse() {
+        let s = micro();
+        let w = Weights::Fp(&s);
+        let prompt: Vec<i32> = vec![10, 20, 30, 40];
+        let p = SamplingParams::sample(1.0, 42);
+        let a = Engine::new(&w).generate(&prompt, 8, &p);
+        let b = Engine::new(&w).generate(&prompt, 8, &p);
+        assert_eq!(a, b, "same seed must reproduce");
+        // different seeds must diverge on at least one of several tries —
+        // a random micro model's logits are nearly flat over 256 tokens
+        let diverged = (43u64..47).any(|seed| {
+            Engine::new(&w).generate(
+                &prompt,
+                8,
+                &SamplingParams::sample(1.0, seed),
+            ) != a
+        });
+        assert!(diverged, "different seeds should diverge");
     }
 
     #[test]

@@ -21,6 +21,10 @@ pub struct ModelConfig {
     pub ff: usize,
     pub ctx: usize,
     pub vocab: usize,
+    /// Optional end-of-sequence token id. The byte-level builtin configs
+    /// have none; manifest configs may declare one (`"eos"`), and the
+    /// serving stop criteria pick it up as an implicit stop token.
+    pub eos: Option<i32>,
 }
 
 impl ModelConfig {
@@ -36,6 +40,7 @@ impl ModelConfig {
             ff: j.get("ff")?.as_usize()?,
             ctx: j.get("ctx")?.as_usize()?,
             vocab: j.get("vocab")?.as_usize()?,
+            eos: j.get("eos").and_then(|e| e.as_usize()).map(|e| e as i32),
         })
     }
 
@@ -49,7 +54,15 @@ impl ModelConfig {
             "opt-med" => (192, 6, 6, 768),
             _ => return None,
         };
-        Some(ModelConfig { d, layers, heads, ff, ctx: 128, vocab: 256 })
+        Some(ModelConfig {
+            d,
+            layers,
+            heads,
+            ff,
+            ctx: 128,
+            vocab: 256,
+            eos: None,
+        })
     }
 
     /// The six quantizable linears per layer, canonical order — mirrors

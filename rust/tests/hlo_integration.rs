@@ -3,7 +3,7 @@
 //! These are the tests proving the three layers compose. Skipped when
 //! artifacts are absent.
 
-use ganq::coordinator::{self, QuantEngine, Request, WeightFmt};
+use ganq::coordinator::{self, GenRequest, QuantEngine, WeightFmt};
 use ganq::data::corpus::{self, Split};
 use ganq::eval::{self, PplEngine};
 use ganq::model::forward::Weights;
@@ -174,7 +174,7 @@ fn decode_graph_matches_native_decode() {
     // native
     let w = Weights::Fp(&store);
     let mut be_n = coordinator::NativeBackend::new(w, 1);
-    let reqs = vec![Request { id: 1, prompt: prompt.clone(), max_new: 8 }];
+    let reqs = vec![GenRequest::greedy(1, prompt.clone(), 8)];
     let (resp_n, _) = coordinator::serve(&mut be_n, reqs.clone()).unwrap();
     // hlo
     let mut be_h = coordinator::HloBackend::new(
@@ -215,7 +215,7 @@ fn pallas_decode_graph_matches_lut_decode_graph() {
     )
     .unwrap();
     let prompt: Vec<i32> = b"lorem ipsum".iter().map(|&b| b as i32).collect();
-    let reqs = vec![Request { id: 1, prompt, max_new: 6 }];
+    let reqs = vec![GenRequest::greedy(1, prompt, 6)];
     let mut outs = Vec::new();
     for graph_fmt in ["lut4", "pallas4"] {
         // HloBackend derives the graph name from WeightFmt; the pallas
@@ -268,7 +268,7 @@ fn lut_serving_matches_dequantized_eval() {
     )
     .unwrap();
     let prompt: Vec<i32> = b"counting one two".iter().map(|&b| b as i32).collect();
-    let reqs = vec![Request { id: 1, prompt, max_new: 10 }];
+    let reqs = vec![GenRequest::greedy(1, prompt, 10)];
     let mut be_h = coordinator::HloBackend::new(
         &rt,
         "opt-small",
@@ -293,10 +293,8 @@ fn batched_decode_graph_consistent_with_b1() {
     if !rt.has_graph("decode_fp32_opt-small_b4") {
         return;
     }
-    let mk = |id: u64, text: &str| Request {
-        id,
-        prompt: text.bytes().map(|b| b as i32).collect(),
-        max_new: 5,
+    let mk = |id: u64, text: &str| {
+        GenRequest::greedy(id, text.bytes().map(|b| b as i32).collect(), 5)
     };
     let reqs =
         vec![mk(1, "alpha beta"), mk(2, "gamma"), mk(3, "delta epsilon z")];

@@ -7,7 +7,7 @@
 //! prompts, and prefix-skip resumes.
 
 use ganq::coordinator::{
-    serve, KvStoreKind, NativeBackend, PagedNativeBackend, Request,
+    serve, GenRequest, KvStoreKind, NativeBackend, PagedNativeBackend,
 };
 use ganq::kv::{F32Blocks, KvLayout, LutBlocks, PagedKv};
 use ganq::model::forward::{
@@ -312,11 +312,11 @@ fn paged_admits_1_5x_more_concurrent_requests_at_same_memory() {
     let cfg = store.cfg;
     // 50%-shared-prefix workload: 32-token prompts, first 16 shared
     let shared: Vec<i32> = (0..16).map(|i| 200 + i).collect();
-    let reqs: Vec<Request> = (0..12)
+    let reqs: Vec<GenRequest> = (0..12)
         .map(|i| {
             let mut prompt = shared.clone();
             prompt.extend((0..16).map(|j| (i * 16 + j) as i32 % 199));
-            Request { id: i as u64, prompt, max_new: 16 }
+            GenRequest::greedy(i as u64, prompt, 16)
         })
         .collect();
 

@@ -1,0 +1,283 @@
+//! Request-lifecycle property tests: sampler determinism across batch
+//! sizes, prefill chunking, and preempt-and-resume; temperature-0
+//! bitwise equality with the pre-lifecycle greedy path; and the
+//! mixed-parameter acceptance batch (greedy + sampled + stop-seq +
+//! cancelled in one `serve_events` call, with streaming).
+
+use ganq::coordinator::{
+    serve, serve_events, serve_with, FinishReason, GenRequest,
+    KvStoreKind, NativeBackend, PagedNativeBackend, SamplingParams,
+    ServeOptions, StopCriteria, TokenEvent,
+};
+use ganq::model::forward::{
+    self, Engine, KvCache, KvSeq, SeqRefs, Weights,
+};
+use ganq::model::{ModelConfig, WeightStore};
+
+fn store() -> WeightStore {
+    let cfg = ModelConfig::builtin("opt-micro").unwrap();
+    WeightStore::random("sampling", cfg, 4242)
+}
+
+/// A mixed workload of greedy and sampled requests with ragged prompts.
+fn workload(n: usize, max_new: usize) -> Vec<GenRequest> {
+    (0..n as u64)
+        .map(|i| {
+            let prompt: Vec<i32> = (0..5 + (i as i32 % 7) * 3)
+                .map(|j| (j * 17 + i as i32 * 11) % 256)
+                .collect();
+            let sampling = if i % 2 == 0 {
+                SamplingParams::greedy()
+            } else {
+                SamplingParams::sample(0.9, 1000 + i)
+                    .with_top_k(64)
+                    .with_top_p(0.97)
+            };
+            GenRequest::new(
+                i,
+                prompt,
+                sampling,
+                StopCriteria::max_tokens(max_new),
+            )
+        })
+        .collect()
+}
+
+fn tokens_by_id(resp: &[ganq::coordinator::GenOutcome]) -> Vec<Vec<i32>> {
+    let mut v: Vec<_> = resp.to_vec();
+    v.sort_by_key(|r| r.id);
+    v.into_iter().map(|r| r.tokens).collect()
+}
+
+#[test]
+fn sampled_outputs_identical_across_batch_sizes() {
+    let s = store();
+    let reqs = workload(8, 10);
+    let mut outs = Vec::new();
+    for slots in [1usize, 4, 16] {
+        let w = Weights::Fp(&s);
+        let mut be = NativeBackend::new(w, slots);
+        let (resp, _) = serve(&mut be, reqs.clone()).unwrap();
+        outs.push(tokens_by_id(&resp));
+    }
+    assert_eq!(outs[0], outs[1], "batch 1 vs 4 diverged");
+    assert_eq!(outs[0], outs[2], "batch 1 vs 16 diverged");
+}
+
+#[test]
+fn sampled_outputs_identical_across_prefill_chunks() {
+    let s = store();
+    let reqs = workload(6, 8);
+    let mut outs = Vec::new();
+    for chunk in [1usize, 128] {
+        let w = Weights::Fp(&s);
+        let mut be = NativeBackend::new(w, 3);
+        let (resp, _) = serve_with(
+            &mut be,
+            reqs.clone(),
+            ServeOptions { prefill_chunk: chunk, ..Default::default() },
+        )
+        .unwrap();
+        outs.push(tokens_by_id(&resp));
+    }
+    assert_eq!(outs[0], outs[1], "chunk 1 vs 128 diverged");
+}
+
+#[test]
+fn sampled_outputs_survive_preempt_and_resume() {
+    let s = store();
+    // sampled requests long enough that a tiny paged pool must preempt
+    let reqs: Vec<GenRequest> = (0..4u64)
+        .map(|i| {
+            GenRequest::new(
+                i,
+                vec![10 + i as i32, 20, 30],
+                SamplingParams::sample(1.0, 500 + i).with_top_k(32),
+                StopCriteria::max_tokens(12),
+            )
+        })
+        .collect();
+    let w = Weights::Fp(&s);
+    let mut be = NativeBackend::new(w, 4);
+    let (expect, _) = serve(&mut be, reqs.clone()).unwrap();
+
+    let w2 = Weights::Fp(&s);
+    let mut bp = PagedNativeBackend::new(w2, 4, 4, 8, KvStoreKind::F32);
+    let (got, m) = serve(&mut bp, reqs).unwrap();
+    assert_eq!(expect.len(), got.len());
+    for (e, g) in expect.iter().zip(&got) {
+        assert_eq!(e.id, g.id);
+        assert_eq!(e.tokens, g.tokens, "req {} diverged", e.id);
+    }
+    // the pool is too small for 4 concurrent requests: the equality
+    // above must have held across preemption or serialization
+    assert!(m.preemptions > 0 || m.peak_concurrency < 4);
+}
+
+#[test]
+fn temperature_zero_bitwise_matches_greedy_reference() {
+    // the pre-lifecycle greedy path: per-token argmax decode through the
+    // raw engine, no sampler anywhere
+    let s = store();
+    let w = Weights::Fp(&s);
+    let prompt: Vec<i32> = vec![104, 101, 108, 108, 111];
+    let max_new = 10;
+    let mut engine = Engine::new(&w);
+    let mut cache = KvCache::new(s.cfg);
+    let mut logits = Vec::new();
+    for &t in &prompt {
+        let mut refs: Vec<&mut dyn KvSeq> = vec![&mut cache];
+        logits = engine
+            .decode_batch(&[t], &mut SeqRefs(&mut refs))
+            .into_iter()
+            .next()
+            .unwrap();
+    }
+    let mut reference = Vec::new();
+    for _ in 0..max_new {
+        let next = forward::argmax(&logits) as i32;
+        reference.push(next);
+        let mut refs: Vec<&mut dyn KvSeq> = vec![&mut cache];
+        logits = engine
+            .decode_batch(&[next], &mut SeqRefs(&mut refs))
+            .into_iter()
+            .next()
+            .unwrap();
+    }
+
+    // Engine::generate with greedy params
+    let gen = Engine::new(&w).generate(
+        &prompt,
+        max_new,
+        &SamplingParams::greedy(),
+    );
+    assert_eq!(gen, reference, "Engine::generate diverged from argmax");
+
+    // temperature-0 through the full serve scheduler — even with a seed
+    // and truncation settings present, temperature 0 must ignore them
+    let sampling = SamplingParams {
+        temperature: 0.0,
+        top_k: 3,
+        top_p: 0.5,
+        seed: 999,
+    };
+    let req = GenRequest::new(
+        1,
+        prompt.clone(),
+        sampling,
+        StopCriteria::max_tokens(max_new),
+    );
+    let mut be = NativeBackend::new(w, 2);
+    let (resp, _) = serve(&mut be, vec![req]).unwrap();
+    assert_eq!(resp[0].tokens, reference, "served greedy diverged");
+    assert_eq!(resp[0].finish, FinishReason::MaxTokens);
+}
+
+#[test]
+fn mixed_parameter_batch_with_streaming_and_cancellation() {
+    // the acceptance batch: greedy + sampled + stop-sequence + cancelled
+    // requests served together, with token events streaming before
+    // completion and per-request finish reasons
+    let s = store();
+    let w = Weights::Fp(&s);
+    let prompt: Vec<i32> = vec![104, 105, 106];
+    let max_new = 10;
+    let greedy_full = Engine::new(&w).generate(
+        &prompt,
+        max_new,
+        &SamplingParams::greedy(),
+    );
+    // a stop anchor that cannot fire earlier (first occurrence)
+    let k = (0..greedy_full.len())
+        .rev()
+        .find(|&k| !greedy_full[..k].contains(&greedy_full[k]))
+        .unwrap();
+    let (stop_seq, stop_expect) = if k >= 1 {
+        (
+            greedy_full[k - 1..=k].to_vec(),
+            greedy_full[..k - 1].to_vec(),
+        )
+    } else {
+        (vec![greedy_full[0]], Vec::new())
+    };
+
+    let reqs = vec![
+        GenRequest::greedy(1, prompt.clone(), max_new),
+        GenRequest::new(
+            2,
+            prompt.clone(),
+            SamplingParams::sample(0.8, 77).with_top_k(40).with_top_p(0.95),
+            StopCriteria::max_tokens(max_new),
+        ),
+        GenRequest::new(
+            3,
+            prompt.clone(),
+            SamplingParams::greedy(),
+            StopCriteria::max_tokens(max_new).with_stop_seq(stop_seq),
+        ),
+        GenRequest::greedy(4, prompt.clone(), max_new),
+    ];
+    let cancel = reqs[3].cancel_handle();
+
+    let mut be = NativeBackend::new(w, 4);
+    let mut events: Vec<(u64, bool)> = Vec::new();
+    let mut req4_tokens = 0usize;
+    let (resp, m) = serve_events(
+        &mut be,
+        reqs,
+        ServeOptions::default(),
+        &mut |ev| {
+            match &ev {
+                TokenEvent::Token { id, .. } => {
+                    events.push((*id, false));
+                    if *id == 4 {
+                        req4_tokens += 1;
+                        if req4_tokens == 2 {
+                            cancel.cancel();
+                        }
+                    }
+                }
+                TokenEvent::Done(o) => events.push((o.id, true)),
+            };
+        },
+    )
+    .unwrap();
+
+    let by_id = |id: u64| resp.iter().find(|r| r.id == id).unwrap();
+    // greedy rides the same batch as everything else and stays exact
+    assert_eq!(by_id(1).tokens, greedy_full);
+    assert_eq!(by_id(1).finish, FinishReason::MaxTokens);
+    // sampled request: reproducible against a solo rerun of the same seed
+    let w2 = Weights::Fp(&s);
+    let solo = Engine::new(&w2).generate(
+        &prompt,
+        max_new,
+        &SamplingParams::sample(0.8, 77).with_top_k(40).with_top_p(0.95),
+    );
+    assert_eq!(by_id(2).tokens, solo, "sampled req not batch-invariant");
+    assert_eq!(by_id(2).finish, FinishReason::MaxTokens);
+    // stop-sequence request trims the matched tail
+    assert_eq!(by_id(3).finish, FinishReason::StopSeq);
+    assert_eq!(by_id(3).tokens, stop_expect);
+    // cancelled request stopped at the next step boundary
+    assert_eq!(by_id(4).finish, FinishReason::Cancelled);
+    assert_eq!(by_id(4).tokens.len(), 2);
+    assert_eq!(m.finish.cancelled, 1);
+    assert_eq!(m.finish.stop_seq, 1);
+    assert_eq!(m.cancelled_tokens, 2);
+
+    // streaming: every request's first Token event precedes its own
+    // Done, and the batch genuinely interleaves — the long greedy
+    // request keeps streaming after the cancelled request completed
+    for id in 1..=4u64 {
+        let first_tok =
+            events.iter().position(|(i, d)| *i == id && !*d).unwrap();
+        let done = events.iter().position(|(i, d)| *i == id && *d).unwrap();
+        assert!(first_tok < done, "req {} did not stream", id);
+    }
+    let done4 = events.iter().position(|(i, d)| *i == 4 && *d).unwrap();
+    assert!(
+        events[done4..].iter().any(|(i, d)| *i == 1 && !*d),
+        "no token streamed after an earlier request completed"
+    );
+}
