@@ -29,7 +29,13 @@ from .kernels import ref
 from .kernels.lut_gemm import lut_gemm
 
 GANQ_ITERS = 10
-SERVING_MODELS = ["opt-mini", "opt-small", "opt-med"]
+SERVING_MODELS = ["opt-mini", "opt-small", "opt-med", "opt-longctx"]
+# serving batch sizes and chunked-prefill graph sizes. The Rust HloBackend
+# buckets each slot's prompt run down to the largest compiled chunk that
+# fits and end-pads ragged tails with pos-masked scratch tokens, so this
+# small family covers every prompt length.
+SERVING_BATCHES = (1, 4)
+PREFILL_CHUNKS = (8, 16, 32)
 DTYPE_NAME = {np.float32: "f32", np.int32: "i32", np.uint8: "u8"}
 
 
@@ -118,8 +124,9 @@ def build_graphs(b: Builder):
             ("lut3", "lut", 3),
         ]:
             fn_d, spec = model.build_decode_fn(cfg, mode, bits)
+            fn_p, _ = model.build_prefill_fn(cfg, mode, bits)
             wspecs = weight_arg_specs(spec)
-            for bsz in (1, 4):
+            for bsz in SERVING_BATCHES:
                 cache = sds((L, bsz, h, ctx, hd))
                 args = [
                     ("tok", sds((bsz,), jnp.int32)),
@@ -134,17 +141,25 @@ def build_graphs(b: Builder):
                     [n for n, _ in args],
                     ["logits", "kcache", "vcache"],
                 )
-            fn_p, spec = model.build_prefill_fn(cfg, mode, bits)
-            wspecs = weight_arg_specs(spec)
-            for s_len in (16, 32):
-                args = [("tokens", sds((1, s_len), jnp.int32))] + wspecs
-                b.lower(
-                    f"prefill_{fmt}_{mname}_b1_s{s_len}",
-                    fn_p,
-                    [s for _, s in args],
-                    [n for n, _ in args],
-                    ["logits", "kcache", "vcache"],
-                )
+                # positioned chunked-prefill family: advances every slot
+                # by a C-token chunk at per-slot positions; `last` picks
+                # the in-chunk row whose logits come back (the final real
+                # token of a padded tail)
+                for c_len in PREFILL_CHUNKS:
+                    args = [
+                        ("tokens", sds((bsz, c_len), jnp.int32)),
+                        ("pos", sds((bsz,), jnp.int32)),
+                        ("last", sds((bsz,), jnp.int32)),
+                        ("kcache", cache),
+                        ("vcache", cache),
+                    ] + wspecs
+                    b.lower(
+                        f"prefill_{fmt}_{mname}_b{bsz}_c{c_len}",
+                        fn_p,
+                        [s for _, s in args],
+                        [n for n, _ in args],
+                        ["logits", "kcache", "vcache"],
+                    )
 
     # --- pallas-kernel serving variant (proves the L1 kernel composes into
     # a full serving graph end-to-end through the Rust runtime)

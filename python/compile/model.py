@@ -28,6 +28,12 @@ CONFIGS = {
     "opt-mini": dict(d=96, layers=3, heads=4, ff=384, ctx=128, vocab=256),
     "opt-small": dict(d=128, layers=4, heads=4, ff=512, ctx=128, vocab=256),
     "opt-med": dict(d=192, layers=6, heads=6, ff=768, ctx=128, vocab=256),
+    # long-context serving stand-in: shares opt-mini's linear shapes (no
+    # extra GANQ solver graphs) but a ctx that makes 2048-token prompts —
+    # and therefore the chunked-prefill TTFT acceptance — real on the AOT
+    # path (benches/prefill_ttft.rs HLO series)
+    "opt-longctx": dict(d=96, layers=2, heads=4, ff=384, ctx=2176,
+                        vocab=256),
 }
 # instruct variants share the base architecture (fine-tuned on task text)
 INSTRUCT_VARIANTS = {
@@ -171,8 +177,12 @@ def block_fwd(params, li, x, cfg, mode, mask, kv=None):
 
     If kv is given as (kc, vc, pos) (caches [B, h, ctx, hd], pos [B]) this is
     a decode step (S == 1): new K/V are scattered at per-slot positions via a
-    one-hot blend and attention runs over the cache. Otherwise: causal
-    self-attention over x; returns (x, k, v) so prefill can seed the cache.
+    one-hot blend and attention runs over the cache. If pos is [B, S] this is
+    a positioned prefill chunk: token s of slot b lands at cache position
+    pos[b, s] (positions outside [0, ctx) are dropped by the one-hot — the
+    "pos-masked scratch" convention padding uses), and query s attends to
+    cache positions <= pos[b, s]. Otherwise: causal self-attention over x;
+    returns (x, k, v) so prefill can seed the cache.
     """
     d, h = cfg["d"], cfg["heads"]
     hd = d // h
@@ -195,6 +205,24 @@ def block_fwd(params, li, x, cfg, mode, mask, kv=None):
         att = jax.nn.softmax(scores, axis=-1)
         o = jnp.einsum("bhqk,bhkd->bhqd", att, v)
         kc_out, vc_out = k, v
+    elif kv[2].ndim == 2:
+        kc, vc, posm = kv  # posm [B, S]: absolute position per chunk token
+        ctx = kc.shape[2]
+        oh = jax.nn.one_hot(posm, ctx, dtype=x.dtype)  # [B, S, ctx]
+        wm = oh.sum(axis=1)  # [B, ctx] write mask (chunk positions distinct)
+        kc_out = kc * (1.0 - wm[:, None, :, None]) + jnp.einsum(
+            "bst,bhsd->bhtd", oh, k
+        )
+        vc_out = vc * (1.0 - wm[:, None, :, None]) + jnp.einsum(
+            "bst,bhsd->bhtd", oh, v
+        )
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, kc_out) / np.sqrt(hd)
+        valid = (
+            jnp.arange(ctx)[None, None, None, :] <= posm[:, None, :, None]
+        )
+        scores = jnp.where(valid, scores, -1e9)
+        att = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", att, vc_out)
     else:
         kc, vc, posv = kv
         ctx = kc.shape[2]
@@ -280,6 +308,50 @@ def decode_step(params, tok, pos, kcache, vcache, cfg, mode="fp32"):
     return logits, kc_new, vc_new
 
 
+def prefill_chunk(params, tokens, pos, last, kcache, vcache, cfg,
+                  mode="fp32"):
+    """One positioned chunked-prefill step (continuous batching).
+
+    tokens [B, C] i32, pos [B] i32 (absolute position of tokens[:, 0]),
+    last [B] i32 (in-chunk index of the row whose logits to return),
+    caches [L, B, h, ctx, hd] -> (logits [B, V], kcache', vcache').
+
+    Token s of slot b lands at cache position pos[b] + s; the causal
+    in-chunk mask is the per-token offset (query s sees cache positions
+    <= pos[b] + s), so the chunk is exactly S sequential decode steps in
+    one dispatch. Ragged tails are served by *end-padding* with scratch
+    tokens: a padded position's key/value rows are either overwritten
+    before any masked read can see them (they sit strictly after every
+    real query's window and after the slot's live position) or dropped
+    entirely when pos[b] + s falls outside [0, ctx) — the one-hot write
+    mask is zero there. `last` points the logits gather at the final
+    *real* token, so padding never pollutes the returned row."""
+    kcache = jnp.asarray(kcache)
+    vcache = jnp.asarray(vcache)
+    B, C = tokens.shape
+    ctx = cfg["ctx"]
+    posm = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    x = (
+        params["tok_emb"][tokens]
+        + params["pos_emb"][jnp.clip(posm, 0, ctx - 1)]
+    )
+    kc_new = kcache
+    vc_new = vcache
+    for li in range(cfg["layers"]):
+        x, kc, vc = block_fwd(
+            params, li, x, cfg, mode, None,
+            kv=(kcache[li], vcache[li], posm),
+        )
+        kc_new = kc_new.at[li].set(kc)
+        vc_new = vc_new.at[li].set(vc)
+    x = layer_norm(x, params["ln_f_g"], params["ln_f_b"])
+    rows = jnp.take_along_axis(
+        x, jnp.clip(last, 0, C - 1)[:, None, None], axis=1
+    )[:, 0]
+    logits = rows @ params["tok_emb"].T
+    return logits, kc_new, vc_new
+
+
 # ---------------------------------------------------------------------------
 # graph builders (arg-list entry points for AOT lowering)
 # ---------------------------------------------------------------------------
@@ -300,11 +372,16 @@ def build_nll_fn(cfg, mode="fp32", bits=4):
 
 
 def build_prefill_fn(cfg, mode="fp32", bits=4):
+    """Positioned chunked-prefill graph (`prefill_{fmt}_{model}_b{B}_c{C}`):
+    advances every slot by a fixed C-token chunk at per-slot positions —
+    the serving analogue of `decode_step` for prompt runs."""
     spec = spec_for(cfg, mode, bits)
 
-    def f(tokens, *weights):
+    def f(tokens, pos, last, kcache, vcache, *weights):
         params = list_to_params(weights, spec)
-        return prefill(params, tokens, cfg, mode)
+        return prefill_chunk(
+            params, tokens, pos, last, kcache, vcache, cfg, mode
+        )
 
     return f, spec
 

@@ -114,6 +114,146 @@ def test_pallas_mode_equals_lut_mode(micro):
     np.testing.assert_allclose(np.array(lg1), np.array(lg2), atol=1e-4)
 
 
+def test_prefill_chunk_matches_whole_prefill(micro):
+    """Feeding a prompt as positioned chunks must reproduce the
+    whole-sequence prefill: same last-position logits, same cache rows."""
+    cfg, params = micro
+    rng = np.random.RandomState(4)
+    toks = rng.randint(0, 256, (2, 12)).astype(np.int32)
+    lg_full, kc_full, vc_full = model.prefill(params, toks, cfg)
+    L, h = cfg["layers"], cfg["heads"]
+    hd = cfg["d"] // h
+    kc = np.zeros((L, 2, h, cfg["ctx"], hd), np.float32)
+    vc = np.zeros_like(kc)
+    lg = None
+    for start in (0, 5):  # ragged chunk split: 5 + 7
+        c = (5 if start == 0 else 7)
+        chunk = toks[:, start : start + c]
+        pos = np.full(2, start, np.int32)
+        last = np.full(2, c - 1, np.int32)
+        lg, kc, vc = model.prefill_chunk(
+            params, chunk, pos, last, kc, vc, cfg
+        )
+    np.testing.assert_allclose(np.array(lg), np.array(lg_full), atol=1e-5)
+    np.testing.assert_allclose(
+        np.array(kc)[:, :, :, :12], np.array(kc_full)[:, :, :, :12],
+        atol=1e-5,
+    )
+    np.testing.assert_allclose(
+        np.array(vc)[:, :, :, :12], np.array(vc_full)[:, :, :, :12],
+        atol=1e-5,
+    )
+
+
+def test_prefill_chunk_padded_tail(micro):
+    """End-padding a short run with scratch tokens must not change the
+    last real token's logits or the real cache rows, even when the pad
+    spills past the context window (pos-masked drop)."""
+    cfg, params = micro
+    rng = np.random.RandomState(5)
+    L, h = cfg["layers"], cfg["heads"]
+    hd = cfg["d"] // h
+    for start, r, c in [(0, 3, 8), (cfg["ctx"] - 4, 3, 8)]:
+        toks_r = rng.randint(0, 256, (1, r)).astype(np.int32)
+        zeros = lambda: (
+            np.zeros((L, 1, h, cfg["ctx"], hd), np.float32),
+            np.zeros((L, 1, h, cfg["ctx"], hd), np.float32),
+        )
+        pos = np.array([start], np.int32)
+        kc0, vc0 = zeros()
+        lg_exact, kc_e, _ = model.prefill_chunk(
+            params, toks_r, pos, np.array([r - 1], np.int32), kc0, vc0, cfg
+        )
+        padded = np.zeros((1, c), np.int32)
+        padded[0, :r] = toks_r
+        kc0, vc0 = zeros()
+        lg_pad, kc_p, _ = model.prefill_chunk(
+            params, padded, pos, np.array([r - 1], np.int32), kc0, vc0, cfg
+        )
+        np.testing.assert_array_equal(np.array(lg_exact), np.array(lg_pad))
+        np.testing.assert_array_equal(
+            np.array(kc_e)[:, :, :, start : start + r],
+            np.array(kc_p)[:, :, :, start : start + r],
+        )
+
+
+def test_prefill_chunk_equals_decode_steps(micro):
+    """A C-token chunk is exactly C sequential decode steps (same cache
+    writes, ~identical logits)."""
+    cfg, params = micro
+    rng = np.random.RandomState(6)
+    toks = rng.randint(0, 256, (1, 6)).astype(np.int32)
+    L, h = cfg["layers"], cfg["heads"]
+    hd = cfg["d"] // h
+    kc = np.zeros((L, 1, h, cfg["ctx"], hd), np.float32)
+    vc = np.zeros_like(kc)
+    lg_d = None
+    for i in range(6):
+        lg_d, kc, vc = model.decode_step(
+            params, toks[:, i], np.array([i], np.int32), kc, vc, cfg
+        )
+    kc2 = np.zeros_like(kc)
+    vc2 = np.zeros_like(vc)
+    lg_c, kc2, vc2 = model.prefill_chunk(
+        params, toks, np.array([0], np.int32), np.array([5], np.int32),
+        kc2, vc2, cfg,
+    )
+    np.testing.assert_allclose(np.array(lg_d), np.array(lg_c), atol=1e-4)
+    np.testing.assert_allclose(
+        np.array(kc)[:, :, :, :6], np.array(kc2)[:, :, :, :6], atol=1e-5
+    )
+
+
+def test_prefill_chunk_lut_mode(micro):
+    cfg, params = micro
+    qparams = quantize_params(params, cfg, 4)
+    rng = np.random.RandomState(8)
+    toks = rng.randint(0, 256, (1, 8)).astype(np.int32)
+    L, h = cfg["layers"], cfg["heads"]
+    hd = cfg["d"] // h
+    kc = np.zeros((L, 1, h, cfg["ctx"], hd), np.float32)
+    vc = np.zeros_like(kc)
+    lg, _, _ = model.prefill_chunk(
+        params, toks, np.array([0], np.int32), np.array([7], np.int32),
+        kc, vc, cfg,
+    )
+    deq = dict(params)
+    for name, m, n in model.linear_shapes(cfg):
+        idx = ref.unpack_nibbles_np(qparams[name + ".qp"], n)
+        deq[name] = np.take_along_axis(qparams[name + ".t"], idx, axis=1)
+    lg_lut, _, _ = model.prefill_chunk(
+        qparams, toks, np.array([0], np.int32), np.array([7], np.int32),
+        kc, vc, cfg, mode="lut",
+    )
+    lg_deq, _, _ = model.prefill_chunk(
+        deq, toks, np.array([0], np.int32), np.array([7], np.int32),
+        kc, vc, cfg,
+    )
+    np.testing.assert_allclose(
+        np.array(lg_lut), np.array(lg_deq), rtol=1e-4, atol=1e-4
+    )
+    assert np.isfinite(np.array(lg)).all()
+
+
+def test_build_prefill_fn_chunked_signature(micro):
+    cfg, params = micro
+    fn, spec = model.build_prefill_fn(cfg, "fp32")
+    L, h = cfg["layers"], cfg["heads"]
+    hd = cfg["d"] // h
+    kc = np.zeros((L, 1, h, cfg["ctx"], hd), np.float32)
+    toks = np.zeros((1, 8), np.int32)
+    lg, kc_out, vc_out = fn(
+        toks,
+        np.zeros(1, np.int32),
+        np.full(1, 7, np.int32),
+        kc,
+        np.zeros_like(kc),
+        *model.params_to_list(params, spec),
+    )
+    assert lg.shape == (1, cfg["vocab"])
+    assert kc_out.shape == kc.shape and vc_out.shape == kc.shape
+
+
 def test_nll_matches_manual(micro):
     cfg, params = micro
     toks = np.random.RandomState(3).randint(0, 256, (2, 7)).astype(np.int32)

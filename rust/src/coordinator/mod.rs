@@ -9,11 +9,13 @@
 //!   greedy path) and [`StopCriteria`] (token budget, stop tokens, stop
 //!   sequences, optional model EOS) plus a [`CancelHandle`] for
 //!   mid-flight cancellation. The scheduler continuously batches
-//!   requests over a [`DecodeBackend`] (AOT decode graphs via PJRT, the
-//!   native engine with contiguous KV caches, or the paged-KV backend
-//!   with prefix sharing and preemption), planning mixed steps of
-//!   prefill chunks and decode positions under a per-step prefill budget
-//!   (`ServeOptions::prefill_chunk`). A `Sampler` stage turns each
+//!   requests over a [`DecodeBackend`] (AOT decode + chunked-prefill
+//!   graphs via PJRT, the native engine with contiguous KV caches, or
+//!   the paged-KV backend with prefix sharing and preemption), planning
+//!   mixed steps of prefill chunks and decode positions under a
+//!   per-step prefill budget (`ServeOptions::prefill_chunk`, bucketed
+//!   onto compiled chunk sizes by [`DecodeBackend::plan_chunk`]).
+//!   A `Sampler` stage turns each
 //!   slot's logits row into the next token — deterministic in
 //!   `(seed, draw index)` regardless of batch composition, preemption,
 //!   or prefill chunking. [`serve_events`] streams [`TokenEvent`]s

@@ -21,11 +21,31 @@
 //!
 //! Three backends implement the same contract:
 //!
-//! * [`HloBackend`] — the AOT decode graph via PJRT (`decode_{fmt}_{model}
-//!   _b{B}`), per-slot positions as a vector input, KV caches threaded
-//!   through the graph outputs; weights optionally staged as device-
-//!   resident buffers (the §Perf optimization). The graphs advance one
-//!   position per slot, so `max_chunk() == 1` (prompts feed per-token).
+//! * [`HloBackend`] — the AOT serving graphs via PJRT. Two graph
+//!   families share one weight argument list and thread the KV caches
+//!   through their outputs:
+//!
+//!   - `decode_{fmt}_{model}_b{B}` advances every slot by one position
+//!     (`tok[b]`, `pos[b]`); inactive slots park at the scratch
+//!     position `ctx-1`, which is overwritten before any masked read
+//!     can see it.
+//!   - `prefill_{fmt}_{model}_b{B}_c{C}` advances every slot by a
+//!     C-token chunk at per-slot positions (`tokens[b,c]`, `pos[b]`,
+//!     `last[b]`): token `c` of slot `b` lands at cache position
+//!     `pos[b]+c`, the causal mask is offset per token, and the logits
+//!     row comes from in-chunk index `last[b]` — the final *real* token
+//!     when a ragged tail was end-padded with pos-masked scratch tokens
+//!     (padded rows are overwritten before any masked read, or dropped
+//!     at the `ctx` edge).
+//!
+//!   `max_chunk()` reports the largest compiled chunk and
+//!   [`DecodeBackend::plan_chunk`] buckets each prompt run down to a
+//!   compiled size, so prompts drain through the chunk family (several
+//!   dispatches per step for runs past the largest chunk) and fall back
+//!   to per-token decode dispatch when no prefill artifact exists.
+//!   Weights are optionally staged as device-resident buffers; the
+//!   non-resident path hands them to the runtime by reference, so
+//!   neither path copies weights per step.
 //! * [`NativeBackend`] — the pure-Rust engine with one contiguous
 //!   [`KvCache`] per slot: every step advances the whole active set
 //!   through each layer together, so quantized weights stream once per
@@ -69,7 +89,7 @@ use crate::model::forward::{
     Weights,
 };
 use crate::model::{LayerWeights, ModelConfig, QuantizedModel, WeightStore};
-use crate::runtime::{HostTensor, Runtime};
+use crate::runtime::{HostTensor, Manifest, Runtime};
 
 use super::metrics::{FinishCounts, RequestMetrics, ServeMetrics};
 
@@ -319,10 +339,21 @@ pub trait DecodeBackend {
     fn slots(&self) -> usize;
     fn cfg(&self) -> ModelConfig;
     /// Most prompt positions one slot can feed in a single step. The
-    /// engine-backed natives take whole chunks; the fixed decode graphs
-    /// advance one position per slot.
+    /// engine-backed natives take whole chunks; the HLO backend reports
+    /// its largest compiled prefill chunk (1 when only decode graphs
+    /// exist, so prompts feed per-token).
     fn max_chunk(&self) -> usize {
         1
+    }
+
+    /// Positions the scheduler should actually take for a prompting slot
+    /// that could feed up to `cap` this step (`cap` already folds in the
+    /// remaining prompt, `max_chunk`, and the shared prefill budget).
+    /// Backends with fixed compiled chunk sizes bucket down to the
+    /// largest compiled size so most dispatches run unpadded; the
+    /// default takes everything.
+    fn plan_chunk(&self, cap: usize) -> usize {
+        cap
     }
     /// Advance the slots in `work` (one entry per active slot, ascending
     /// slot order); returns one logits row per work item (empty when
@@ -637,7 +668,8 @@ pub fn serve_events(
             let Some(st) = slot else { continue };
             if st.prompt_idx < st.prompt.len() {
                 let remaining = st.prompt.len() - st.prompt_idx;
-                let take = remaining.min(max_chunk).min(budget.max(1));
+                let cap = remaining.min(max_chunk).min(budget.max(1));
+                let take = backend.plan_chunk(cap).clamp(1, cap);
                 budget = budget.saturating_sub(take);
                 need[si] = take;
             } else {
@@ -846,12 +878,15 @@ impl<'a> DecodeBackend for NativeBackend<'a> {
         // one engine step over the whole active set: each linear's
         // weights stream once regardless of slots or chunk lengths
         let plan = plan_from_work(work);
-        let wanted: Vec<usize> = work.iter().map(|wk| wk.slot).collect();
+        let mut active = vec![false; self.caches.len()];
+        for wk in work {
+            active[wk.slot] = true;
+        }
         let mut refs: Vec<&mut dyn KvSeq> = self
             .caches
             .iter_mut()
             .enumerate()
-            .filter(|(si, _)| wanted.contains(si))
+            .filter(|(si, _)| active[*si])
             .map(|(_, c)| c as &mut dyn KvSeq)
             .collect();
         let outs = self.engine.step(&plan, &mut SeqRefs(&mut refs));
@@ -1100,6 +1135,9 @@ pub fn weight_tensors_lut(
 pub struct HloBackend<'a> {
     rt: &'a Runtime,
     graph: String,
+    /// compiled positioned-prefill graphs, ascending `(chunk, name)`;
+    /// empty means prompts feed per-token through the decode graph
+    prefill: Vec<(usize, String)>,
     cfg: ModelConfig,
     b: usize,
     kcache: HostTensor,
@@ -1111,8 +1149,10 @@ pub struct HloBackend<'a> {
 }
 
 impl<'a> HloBackend<'a> {
-    /// Build for `decode_{fmt}_{model}_b{B}`. `resident` stages weights as
-    /// device buffers once (the optimized path).
+    /// Build for `decode_{fmt}_{model}_b{B}`, discovering every compiled
+    /// `prefill_{fmt}_{model}_b{B}_c{C}` chunk alongside it (prompts feed
+    /// per-token when none exist). `resident` stages weights as device
+    /// buffers once (the optimized path).
     pub fn new(
         rt: &'a Runtime,
         model: &str,
@@ -1133,6 +1173,22 @@ impl<'a> HloBackend<'a> {
         if !rt.has_graph(&graph) {
             return Err(format!("graph {} not in artifacts", graph));
         }
+        let prefill: Vec<(usize, String)> = rt
+            .manifest
+            .prefill_chunks(fmt.tag(), &entry.base_config, b)
+            .into_iter()
+            .map(|c| {
+                (
+                    c,
+                    Manifest::prefill_graph(
+                        fmt.tag(),
+                        &entry.base_config,
+                        b,
+                        c,
+                    ),
+                )
+            })
+            .collect();
         let weights = match fmt {
             WeightFmt::Fp32 => {
                 crate::eval::weight_tensors_fp32(&cfg, store, qm)
@@ -1178,6 +1234,7 @@ impl<'a> HloBackend<'a> {
         Ok(HloBackend {
             rt,
             graph,
+            prefill,
             cfg,
             b,
             kcache: HostTensor::F32(cache_dims.clone(), vec![0.0; cache_len]),
@@ -1209,28 +1266,44 @@ impl<'a> HloBackend<'a> {
         be.graph = graph.to_string();
         Ok(be)
     }
-}
 
-impl<'a> DecodeBackend for HloBackend<'a> {
-    fn slots(&self) -> usize {
-        self.b
+    /// Run one serving graph. `head` is the per-step input prefix (the
+    /// K/V caches inside it were moved out of `self`; the caller moves
+    /// the output caches back in). The weight tail rides as resident
+    /// device buffers or borrowed host tensors — never cloned per step.
+    fn dispatch(
+        &self,
+        graph: &str,
+        head: &[HostTensor],
+    ) -> Result<Vec<HostTensor>, String> {
+        let out = match &self.resident {
+            Some(bufs) => self.rt.run_with_resident(graph, head, bufs)?,
+            None => {
+                let mut inputs: Vec<&HostTensor> = head.iter().collect();
+                inputs.extend(self.weights.iter());
+                self.rt.run_refs(graph, &inputs)?
+            }
+        };
+        if out.len() != 3 {
+            return Err(format!(
+                "{}: expected 3 outputs, got {}",
+                graph,
+                out.len()
+            ));
+        }
+        Ok(out)
     }
 
-    fn cfg(&self) -> ModelConfig {
-        self.cfg
-    }
-
-    fn step(&mut self, work: &[SlotWork]) -> Result<Vec<Vec<f32>>, String> {
+    /// One decode-graph dispatch: every work item is a single position.
+    fn decode_step(
+        &mut self,
+        work: &[SlotWork],
+    ) -> Result<Vec<Vec<f32>>, String> {
         // inactive slots write to the scratch position ctx-1 (overwritten
         // before any real read — see module docs)
         let mut tok = vec![0i32; self.b];
         let mut active = vec![false; self.b];
         for wk in work {
-            if wk.tokens.len() != 1 {
-                return Err(
-                    "decode graphs advance one position per slot".into()
-                );
-            }
             tok[wk.slot] = wk.tokens[0];
             active[wk.slot] = true;
         }
@@ -1246,26 +1319,24 @@ impl<'a> DecodeBackend for HloBackend<'a> {
         let head = [
             HostTensor::I32(vec![self.b], tok),
             HostTensor::I32(vec![self.b], pos),
-            self.kcache.clone(),
-            self.vcache.clone(),
+            std::mem::take(&mut self.kcache),
+            std::mem::take(&mut self.vcache),
         ];
-        let out = match &self.resident {
-            Some(bufs) => {
-                self.rt.run_with_resident(&self.graph, &head, bufs)?
-            }
-            None => {
-                let mut inputs = head.to_vec();
-                inputs.extend(self.weights.iter().cloned());
-                self.rt.run(&self.graph, &inputs)?
+        let mut out = match self.dispatch(&self.graph, &head) {
+            Ok(o) => o,
+            Err(e) => {
+                // put the taken caches back so a failed dispatch does
+                // not destroy the backend's KV state
+                let [_, _, kc, vc] = head;
+                self.kcache = kc;
+                self.vcache = vc;
+                return Err(e);
             }
         };
-        if out.len() != 3 {
-            return Err(format!("decode returned {} outputs", out.len()));
-        }
+        self.vcache = out.pop().expect("vcache output");
+        self.kcache = out.pop().expect("kcache output");
         let logits_flat = out[0].as_f32()?;
         let vocab = self.cfg.vocab;
-        self.kcache = out[1].clone();
-        self.vcache = out[2].clone();
         for i in 0..self.b {
             if active[i] {
                 self.pos[i] += 1;
@@ -1282,6 +1353,133 @@ impl<'a> DecodeBackend for HloBackend<'a> {
                 }
             })
             .collect())
+    }
+
+    /// Drain a step that contains at least one prompt chunk through the
+    /// positioned-prefill family: each dispatch picks the smallest
+    /// compiled chunk covering the longest remaining run (runs past the
+    /// largest compiled chunk take several dispatches), buckets every
+    /// slot into it, and end-pads ragged tails with scratch tokens whose
+    /// cache rows are pos-masked away. Slots with nothing left to feed
+    /// park at the scratch position ctx-1, exactly like inactive decode
+    /// slots. A `want_logits` item's row is captured from the dispatch
+    /// that consumes its final token (`last[b]` points the in-graph
+    /// gather at it).
+    fn prefill_step(
+        &mut self,
+        work: &[SlotWork],
+    ) -> Result<Vec<Vec<f32>>, String> {
+        let vocab = self.cfg.vocab;
+        let scratch_pos = (self.cfg.ctx - 1) as i32;
+        let mut consumed = vec![0usize; work.len()];
+        let mut logits_out: Vec<Vec<f32>> = vec![Vec::new(); work.len()];
+        loop {
+            let longest = work
+                .iter()
+                .zip(&consumed)
+                .map(|(wk, &c)| wk.tokens.len() - c)
+                .max()
+                .unwrap_or(0);
+            if longest == 0 {
+                return Ok(logits_out);
+            }
+            let (chunk, graph) = self
+                .prefill
+                .iter()
+                .find(|(c, _)| *c >= longest)
+                .or_else(|| self.prefill.last())
+                .cloned()
+                .expect("prefill family checked nonempty");
+            let mut tokens = vec![0i32; self.b * chunk];
+            let mut pos = vec![scratch_pos; self.b];
+            let mut last = vec![0i32; self.b];
+            let mut took = vec![0usize; work.len()];
+            for (wi, wk) in work.iter().enumerate() {
+                let rem = wk.tokens.len() - consumed[wi];
+                if rem == 0 {
+                    continue;
+                }
+                let tk = rem.min(chunk);
+                let base = consumed[wi];
+                tokens[wk.slot * chunk..wk.slot * chunk + tk]
+                    .copy_from_slice(&wk.tokens[base..base + tk]);
+                pos[wk.slot] = self.pos[wk.slot] as i32;
+                last[wk.slot] = (tk - 1) as i32;
+                took[wi] = tk;
+            }
+            let head = [
+                HostTensor::I32(vec![self.b, chunk], tokens),
+                HostTensor::I32(vec![self.b], pos),
+                HostTensor::I32(vec![self.b], last),
+                std::mem::take(&mut self.kcache),
+                std::mem::take(&mut self.vcache),
+            ];
+            let mut out = match self.dispatch(&graph, &head) {
+                Ok(o) => o,
+                Err(e) => {
+                    // restore the taken caches (see decode_step)
+                    let [_, _, _, kc, vc] = head;
+                    self.kcache = kc;
+                    self.vcache = vc;
+                    return Err(e);
+                }
+            };
+            self.vcache = out.pop().expect("vcache output");
+            self.kcache = out.pop().expect("kcache output");
+            let logits_flat = out[0].as_f32()?;
+            for (wi, wk) in work.iter().enumerate() {
+                if took[wi] == 0 {
+                    continue;
+                }
+                consumed[wi] += took[wi];
+                self.pos[wk.slot] += took[wi];
+                if wk.want_logits && consumed[wi] == wk.tokens.len() {
+                    logits_out[wi] = logits_flat
+                        [wk.slot * vocab..(wk.slot + 1) * vocab]
+                        .to_vec();
+                }
+            }
+        }
+    }
+}
+
+impl<'a> DecodeBackend for HloBackend<'a> {
+    fn slots(&self) -> usize {
+        self.b
+    }
+
+    fn cfg(&self) -> ModelConfig {
+        self.cfg
+    }
+
+    fn max_chunk(&self) -> usize {
+        self.prefill.last().map(|(c, _)| *c).unwrap_or(1)
+    }
+
+    fn plan_chunk(&self, cap: usize) -> usize {
+        // largest compiled chunk that fits — so most dispatches run
+        // unpadded; a run shorter than every compiled chunk is taken
+        // whole and end-padded inside `prefill_step`
+        self.prefill
+            .iter()
+            .rev()
+            .map(|(c, _)| *c)
+            .find(|&c| c <= cap)
+            .unwrap_or(cap)
+    }
+
+    fn step(&mut self, work: &[SlotWork]) -> Result<Vec<Vec<f32>>, String> {
+        if work.iter().all(|wk| wk.tokens.len() == 1) {
+            return self.decode_step(work);
+        }
+        if self.prefill.is_empty() {
+            return Err(
+                "prompt chunk fed to an HLO backend without prefill \
+                 graphs (decode graphs advance one position per slot)"
+                    .into(),
+            );
+        }
+        self.prefill_step(work)
     }
 
     fn reset_slot(&mut self, slot: usize) {

@@ -249,6 +249,9 @@ mod tests {
         fn max_chunk(&self) -> usize {
             self.0.max_chunk()
         }
+        fn plan_chunk(&self, cap: usize) -> usize {
+            self.0.plan_chunk(cap)
+        }
         fn step(
             &mut self,
             work: &[crate::coordinator::SlotWork],

@@ -51,6 +51,15 @@
 //! dense (f32) KV stores are bit-identical between chunked and
 //! per-token prefill.
 //!
+//! The AOT path mirrors the same contract with compiled graphs: the
+//! `prefill_{fmt}_{model}_b{B}_c{C}` family advances whole prompt
+//! chunks at per-slot positions through PJRT, `HloBackend` buckets each
+//! run down to a compiled chunk (ragged tails end-padded with
+//! pos-masked scratch tokens), and serving falls back to per-token
+//! decode dispatch when no prefill artifact exists — chunked prefill,
+//! and with it the TTFT win, is uniform across all three serving
+//! backends.
+//!
 //! ## Serving: the request lifecycle
 //!
 //! The serving front (`coordinator::serve` / `coordinator::server`) is

@@ -47,11 +47,14 @@ impl ModelConfig {
     /// Built-in fallback configs (match python CONFIGS) so unit tests run
     /// without artifacts.
     pub fn builtin(name: &str) -> Option<ModelConfig> {
-        let (d, layers, heads, ff) = match name {
-            "opt-micro" => (64, 2, 2, 256),
-            "opt-mini" | "opt-mini-instruct" => (96, 3, 4, 384),
-            "opt-small" | "opt-small-instruct" => (128, 4, 4, 512),
-            "opt-med" => (192, 6, 6, 768),
+        let (d, layers, heads, ff, ctx) = match name {
+            "opt-micro" => (64, 2, 2, 256, 128),
+            "opt-mini" | "opt-mini-instruct" => (96, 3, 4, 384, 128),
+            "opt-small" | "opt-small-instruct" => (128, 4, 4, 512, 128),
+            "opt-med" => (192, 6, 6, 768, 128),
+            // long-context serving stand-in (TTFT benches at 2048-token
+            // prompts on the AOT path); shares opt-mini's linear shapes
+            "opt-longctx" => (96, 2, 4, 384, 2176),
             _ => return None,
         };
         Some(ModelConfig {
@@ -59,7 +62,7 @@ impl ModelConfig {
             layers,
             heads,
             ff,
-            ctx: 128,
+            ctx,
             vocab: 256,
             eos: None,
         })

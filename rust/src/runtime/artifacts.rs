@@ -139,6 +139,38 @@ impl Manifest {
         }
         Ok(Manifest { ganq_iters, models, graphs })
     }
+
+    /// Chunk sizes with a compiled positioned-prefill graph for this
+    /// (format, base config, batch) — ascending. Serving uses this to
+    /// size `HloBackend::max_chunk` and to bucket prompt runs onto the
+    /// `prefill_{fmt}_{model}_b{B}_c{C}` family; empty means the backend
+    /// falls back to per-token prefill through the decode graph.
+    pub fn prefill_chunks(
+        &self,
+        fmt: &str,
+        base_config: &str,
+        b: usize,
+    ) -> Vec<usize> {
+        let prefix = format!("prefill_{}_{}_b{}_c", fmt, base_config, b);
+        let mut out: Vec<usize> = self
+            .graphs
+            .keys()
+            .filter_map(|name| name.strip_prefix(&prefix))
+            .filter_map(|c| c.parse().ok())
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// The graph name `prefill_chunks` enumerated — one compiled chunk.
+    pub fn prefill_graph(
+        fmt: &str,
+        base_config: &str,
+        b: usize,
+        chunk: usize,
+    ) -> String {
+        format!("prefill_{}_{}_b{}_c{}", fmt, base_config, b, chunk)
+    }
 }
 
 #[cfg(test)]
@@ -166,6 +198,30 @@ mod tests {
         assert!(g.path.ends_with("hlo/g1.hlo.txt"));
         let cfg = m.models["opt-micro"].config;
         assert_eq!(cfg.d, 64);
+    }
+
+    #[test]
+    fn enumerates_prefill_chunks() {
+        let extra = r#"
+          "prefill_lut4_opt-mini_b4_c32":
+            {"path": "hlo/p32.hlo.txt", "inputs": [], "outputs": ["l"]},
+          "prefill_lut4_opt-mini_b4_c8":
+            {"path": "hlo/p8.hlo.txt", "inputs": [], "outputs": ["l"]},
+          "prefill_lut4_opt-mini_b1_c16":
+            {"path": "hlo/p16.hlo.txt", "inputs": [], "outputs": ["l"]},
+          "prefill_lut4_opt-mini_b4_cbad":
+            {"path": "hlo/px.hlo.txt", "inputs": [], "outputs": []},
+          "g1""#;
+        let txt = SAMPLE.replace("\"g1\"", extra);
+        let m = Manifest::parse(&txt, Path::new("/art")).unwrap();
+        assert_eq!(m.prefill_chunks("lut4", "opt-mini", 4), vec![8, 32]);
+        assert_eq!(m.prefill_chunks("lut4", "opt-mini", 1), vec![16]);
+        assert!(m.prefill_chunks("fp32", "opt-mini", 4).is_empty());
+        assert!(m.prefill_chunks("lut4", "opt-small", 4).is_empty());
+        assert_eq!(
+            Manifest::prefill_graph("lut4", "opt-mini", 4, 8),
+            "prefill_lut4_opt-mini_b4_c8"
+        );
     }
 
     #[test]

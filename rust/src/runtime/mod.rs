@@ -22,6 +22,15 @@ pub enum HostTensor {
     U8(Vec<usize>, Vec<u8>),
 }
 
+/// The empty tensor — exists so hot paths can `mem::take` a cache out of
+/// a struct field, hand it to the runtime by reference, and move the
+/// graph output back in without ever cloning the buffer.
+impl Default for HostTensor {
+    fn default() -> HostTensor {
+        HostTensor::F32(Vec::new(), Vec::new())
+    }
+}
+
 /// A dtype accessor was called on a tensor of a different dtype —
 /// carries both sides so graph-output mismatches are diagnosable.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -217,7 +226,7 @@ impl Runtime {
     /// Validate inputs against the manifest spec (shape + dtype).
     fn check_inputs(
         spec: &GraphSpec,
-        inputs: &[HostTensor],
+        inputs: &[&HostTensor],
     ) -> Result<(), String> {
         if spec.inputs.len() != inputs.len() {
             return Err(format!(
@@ -249,6 +258,18 @@ impl Runtime {
         &self,
         name: &str,
         inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>, String> {
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        self.run_refs(name, &refs)
+    }
+
+    /// [`Runtime::run`] over borrowed inputs — the serving hot path hands
+    /// per-step tensors and the long weight tail as references, so no
+    /// host-side weight copy happens per step.
+    pub fn run_refs(
+        &self,
+        name: &str,
+        inputs: &[&HostTensor],
     ) -> Result<Vec<HostTensor>, String> {
         let spec = self.graph(name)?.clone();
         Self::check_inputs(&spec, inputs)?;
@@ -389,12 +410,11 @@ mod tests {
             }],
             outputs: vec!["y".into()],
         };
-        let bad = [HostTensor::F32(vec![3], vec![0.0; 3])];
-        let err = Runtime::check_inputs(&spec, &bad).unwrap_err();
+        let bad = HostTensor::F32(vec![3], vec![0.0; 3]);
+        let err = Runtime::check_inputs(&spec, &[&bad]).unwrap_err();
         assert!(err.contains("input 'a'"), "{}", err);
-        let wrong_count: [HostTensor; 0] = [];
-        assert!(Runtime::check_inputs(&spec, &wrong_count).is_err());
-        let ok = [HostTensor::F32(vec![2], vec![0.0; 2])];
-        assert!(Runtime::check_inputs(&spec, &ok).is_ok());
+        assert!(Runtime::check_inputs(&spec, &[]).is_err());
+        let ok = HostTensor::F32(vec![2], vec![0.0; 2]);
+        assert!(Runtime::check_inputs(&spec, &[&ok]).is_ok());
     }
 }

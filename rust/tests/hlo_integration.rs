@@ -3,7 +3,10 @@
 //! These are the tests proving the three layers compose. Skipped when
 //! artifacts are absent.
 
-use ganq::coordinator::{self, GenRequest, QuantEngine, WeightFmt};
+use ganq::coordinator::{
+    self, DecodeBackend, GenRequest, QuantEngine, SamplingParams,
+    ServeOptions, SlotWork, StopCriteria, WeightFmt,
+};
 use ganq::data::corpus::{self, Split};
 use ganq::eval::{self, PplEngine};
 use ganq::model::forward::Weights;
@@ -193,6 +196,243 @@ fn decode_graph_matches_native_decode() {
         "HLO and native generation diverged"
     );
     assert!(metrics.decode_steps >= 8);
+}
+
+/// Drive one slot's prompt through `be.step` in runs of `chunk` tokens
+/// (`usize::MAX` = the whole prompt in one step — the backend's internal
+/// multi-dispatch path; `1` = the per-token decode-graph fallback) and
+/// return the final prompt position's logits row.
+fn prefill_logits(
+    be: &mut dyn DecodeBackend,
+    prompt: &[i32],
+    chunk: usize,
+) -> Vec<f32> {
+    be.reset_slot(0);
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < prompt.len() {
+        let take = chunk.min(prompt.len() - i);
+        let want = i + take == prompt.len();
+        let logits = be
+            .step(&[SlotWork {
+                slot: 0,
+                tokens: prompt[i..i + take].to_vec(),
+                want_logits: want,
+            }])
+            .unwrap();
+        if want {
+            out = logits.into_iter().next().unwrap();
+        }
+        i += take;
+    }
+    out
+}
+
+#[test]
+fn hlo_chunked_prefill_matches_per_token_fp32() {
+    // The acceptance parity bar across ragged prompt lengths (padded
+    // tails included), in decreasing strictness:
+    //  * re-running the same chunking is BITWISE identical (one
+    //    compiled executable is deterministic run to run);
+    //  * different chunk sizes — and the backend's multi-dispatch
+    //    bucketing — agree within 1e-5 (in practice they are bitwise
+    //    on XLA CPU, measured via jit in python; the assert leaves
+    //    reassociation headroom because differently shaped compiled
+    //    graphs carry no bitwise guarantee);
+    //  * the per-token decode-graph path agrees within 1e-3 with the
+    //    same argmax.
+    let rt = require!(runtime());
+    let store = require!(store_for(&rt, "opt-mini"));
+    if rt.manifest.prefill_chunks("fp32", "opt-mini", 1).is_empty() {
+        eprintln!("skipping: no fp32 opt-mini prefill graphs");
+        return;
+    }
+    let mut be = coordinator::HloBackend::new(
+        &rt, "opt-mini", WeightFmt::Fp32, 1, &store, None, false,
+    )
+    .unwrap();
+    assert!(be.max_chunk() >= 8, "compiled chunks drive max_chunk");
+    let spread = |a: &[f32], b: &[f32]| -> f32 {
+        a.iter()
+            .zip(b)
+            .map(|(&x, &y)| (x - y).abs())
+            .fold(0.0, f32::max)
+    };
+    for plen in [5usize, 13, 31, 32, 37, 64] {
+        let prompt: Vec<i32> =
+            (0..plen as i32).map(|i| (i * 31 + 7) % 256).collect();
+        let per_token = prefill_logits(&mut be, &prompt, 1);
+        let again = prefill_logits(&mut be, &prompt, 8);
+        let chunked: Vec<Vec<f32>> = [8, 16, 32, usize::MAX]
+            .iter()
+            .map(|&c| prefill_logits(&mut be, &prompt, c))
+            .collect();
+        assert_eq!(
+            again, chunked[0],
+            "plen {}: same chunking must be bitwise deterministic",
+            plen
+        );
+        for (ci, lg) in chunked.iter().enumerate() {
+            assert!(
+                spread(lg, &chunked[0]) < 1e-5,
+                "plen {}: chunk variant {} diverged",
+                plen,
+                ci
+            );
+        }
+        assert!(
+            spread(&per_token, &chunked[0]) < 1e-3,
+            "plen {}: chunked vs per-token maxdiff {}",
+            plen,
+            spread(&per_token, &chunked[0])
+        );
+        let am = |v: &[f32]| {
+            v.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .unwrap()
+                .0
+        };
+        assert_eq!(am(&per_token), am(&chunked[0]), "plen {}", plen);
+    }
+}
+
+#[test]
+fn hlo_chunked_prefill_lut_within_tolerance() {
+    let rt = require!(runtime());
+    let store = require!(store_for(&rt, "opt-mini"));
+    if rt.manifest.prefill_chunks("lut4", "opt-mini", 1).is_empty() {
+        eprintln!("skipping: no lut4 opt-mini prefill graphs");
+        return;
+    }
+    let calib = coordinator::calibrate(&store, 4, 64);
+    let qm = coordinator::quantize_model(
+        &store,
+        "ganq",
+        4,
+        &calib,
+        &QuantEngine::Native,
+        false,
+    )
+    .unwrap();
+    let mut be = coordinator::HloBackend::new(
+        &rt,
+        "opt-mini",
+        WeightFmt::Lut4,
+        1,
+        &store,
+        Some(&qm),
+        false,
+    )
+    .unwrap();
+    for plen in [9usize, 24, 40] {
+        let prompt: Vec<i32> =
+            (0..plen as i32).map(|i| (i * 17 + 3) % 256).collect();
+        let per_token = prefill_logits(&mut be, &prompt, 1);
+        let chunked = prefill_logits(&mut be, &prompt, usize::MAX);
+        let maxdiff: f32 = per_token
+            .iter()
+            .zip(&chunked)
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(maxdiff < 1e-3, "plen {}: maxdiff {}", plen, maxdiff);
+    }
+}
+
+#[test]
+fn hlo_chunked_prefill_serving_matches_per_token_serving() {
+    // mixed prefill + decode batches through the real scheduler: ragged
+    // prompts at b=4 admit staggered, so prefill chunks and decode
+    // positions share steps; greedy outputs must be identical to the
+    // per-token (prefill_chunk = 1, decode-graph-only) run — and TTFT
+    // work should shrink to fewer scheduler steps
+    let rt = require!(runtime());
+    let store = require!(store_for(&rt, "opt-small"));
+    if rt.manifest.prefill_chunks("fp32", "opt-small", 4).is_empty() {
+        eprintln!("skipping: no fp32 opt-small b4 prefill graphs");
+        return;
+    }
+    let reqs: Vec<GenRequest> = (0..5)
+        .map(|i| {
+            GenRequest::greedy(
+                i,
+                (0..21 + 9 * i as i32)
+                    .map(|j| (j * 13 + i as i32) % 256)
+                    .collect(),
+                6,
+            )
+        })
+        .collect();
+    let serve_chunk = |chunk: usize| {
+        let mut be = coordinator::HloBackend::new(
+            &rt, "opt-small", WeightFmt::Fp32, 4, &store, None, false,
+        )
+        .unwrap();
+        coordinator::serve_with(
+            &mut be,
+            reqs.clone(),
+            ServeOptions { prefill_chunk: chunk, ..ServeOptions::default() },
+        )
+        .unwrap()
+    };
+    let (resp_1, m_1) = serve_chunk(1);
+    let (resp_c, m_c) = serve_chunk(128);
+    for (a, b) in resp_1.iter().zip(&resp_c) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "req {} diverged", a.id);
+    }
+    assert!(
+        m_c.decode_steps < m_1.decode_steps,
+        "chunked prefill must take fewer steps ({} vs {})",
+        m_c.decode_steps,
+        m_1.decode_steps
+    );
+    assert_eq!(m_c.prompt_positions, m_1.prompt_positions);
+}
+
+#[test]
+fn hlo_sampling_deterministic_across_chunk_sizes() {
+    // sampled serving is a pure function of (seed, draw index), so HLO
+    // chunk size — like every other batching knob — must not change
+    // sampled outputs
+    let rt = require!(runtime());
+    let store = require!(store_for(&rt, "opt-mini"));
+    if rt.manifest.prefill_chunks("fp32", "opt-mini", 1).is_empty() {
+        eprintln!("skipping: no fp32 opt-mini prefill graphs");
+        return;
+    }
+    let mk_reqs = || -> Vec<GenRequest> {
+        (0..2)
+            .map(|i| {
+                GenRequest::new(
+                    i,
+                    (0..26 + 7 * i as i32).map(|j| (j * 11) % 256).collect(),
+                    SamplingParams::sample(0.8, 42 + i).with_top_k(40),
+                    StopCriteria::max_tokens(8),
+                )
+            })
+            .collect()
+    };
+    let mut outs = Vec::new();
+    for chunk in [1usize, 8, 32] {
+        let mut be = coordinator::HloBackend::new(
+            &rt, "opt-mini", WeightFmt::Fp32, 1, &store, None, false,
+        )
+        .unwrap();
+        let (resp, _) = coordinator::serve_with(
+            &mut be,
+            mk_reqs(),
+            ServeOptions { prefill_chunk: chunk, ..ServeOptions::default() },
+        )
+        .unwrap();
+        outs.push(resp);
+    }
+    for resp in &outs[1..] {
+        for (a, b) in outs[0].iter().zip(resp) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "req {} diverged", a.id);
+        }
+    }
 }
 
 #[test]
