@@ -14,6 +14,7 @@ use std::time::Instant;
 
 use ganq::model::forward::{Engine, KvCache, KvSeq, SeqRefs, Weights};
 use ganq::model::{LayerWeights, ModelConfig, QuantizedModel, WeightStore};
+use ganq::obs::hist::Samples;
 use ganq::quant::ganq::fit_codebook_identity;
 use ganq::quant::lut::lut_from_parts;
 use ganq::quant::PackedLut;
@@ -111,13 +112,13 @@ fn run_sequential(w: &Weights, b: usize, steps: usize) -> f64 {
 /// Best-of-`reps` tokens/sec for both paths.
 fn measure(w: &Weights, b: usize, steps: usize, reps: usize) -> (f64, f64) {
     let tokens = (b * steps) as f64;
-    let mut best_b = f64::INFINITY;
-    let mut best_s = f64::INFINITY;
+    let mut batched = Samples::new();
+    let mut sequential = Samples::new();
     for _ in 0..reps {
-        best_b = best_b.min(run_batched(w, b, steps));
-        best_s = best_s.min(run_sequential(w, b, steps));
+        batched.push(run_batched(w, b, steps));
+        sequential.push(run_sequential(w, b, steps));
     }
-    (tokens / best_b, tokens / best_s)
+    (tokens / batched.min(), tokens / sequential.min())
 }
 
 fn main() {

@@ -56,6 +56,7 @@ fn main() {
             "shared%",
             "peak conc",
             "tok/s",
+            "ttft p50 ms",
             "preempt",
             "hit%",
             "wall ms",
@@ -81,6 +82,7 @@ fn main() {
             format!("{}", pct),
             format!("{}", m_c.peak_concurrency),
             format!("{:.0}", m_c.tokens_per_s()),
+            format!("{:.1}", m_c.ttft_p50_ms()),
             "0".into(),
             "-".into(),
             format!("{:.1}", m_c.wall_s * 1e3),
@@ -115,6 +117,7 @@ fn main() {
                 format!("{}", pct),
                 format!("{}", m_p.peak_concurrency),
                 format!("{:.0}", m_p.tokens_per_s()),
+                format!("{:.1}", m_p.ttft_p50_ms()),
                 format!("{}", m_p.preemptions),
                 format!("{:.0}", 100.0 * kv.prefix_hit_rate()),
                 format!("{:.1}", m_p.wall_s * 1e3),

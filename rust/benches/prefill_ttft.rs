@@ -27,6 +27,7 @@ use ganq::coordinator::{
 };
 use ganq::model::forward::Weights;
 use ganq::model::{LayerWeights, ModelConfig, QuantizedModel, WeightStore};
+use ganq::obs::hist::Samples;
 use ganq::quant::ganq::fit_codebook_identity;
 use ganq::quant::lut::lut_from_parts;
 use ganq::runtime::Runtime;
@@ -99,22 +100,22 @@ fn run_once(w: &Weights, prompt_len: usize, chunk: usize) -> (f64, f64) {
         ServeOptions { prefill_chunk: chunk, ..Default::default() },
     )
     .expect("serve");
-    let ttft = m.requests[0].ttft().expect("first token").as_secs_f64() * 1e3;
+    let ttft = m.requests[0].ttft_ms().expect("first token");
     (ttft, m.prompt_positions_per_step())
 }
 
 /// Best-of-`reps` TTFT for one (weights, prompt, chunk) cell.
 fn measure(w: &Weights, prompt_len: usize, chunk: usize, reps: usize) -> (f64, f64) {
-    let mut best = f64::INFINITY;
+    let mut ts = Samples::new();
     let mut pps = 0.0;
     for _ in 0..reps {
         let (t, p) = run_once(w, prompt_len, chunk);
-        if t < best {
-            best = t;
+        if t < ts.min() {
             pps = p;
         }
+        ts.push(t);
     }
-    (best, pps)
+    (ts.min(), pps)
 }
 
 /// TTFT (ms) through the HLO backend for one prompt length and prefill
@@ -127,7 +128,7 @@ fn measure_hlo(
 ) -> f64 {
     let prompt: Vec<i32> =
         (0..prompt_len as i32).map(|i| (i * 31 + 7) % 256).collect();
-    let mut best = f64::INFINITY;
+    let mut ts = Samples::new();
     for _ in 0..reps {
         let reqs = vec![GenRequest::greedy(1, prompt.clone(), MAX_NEW)];
         let (_resp, m) = serve_with(
@@ -136,11 +137,9 @@ fn measure_hlo(
             ServeOptions { prefill_chunk: chunk, ..Default::default() },
         )
         .expect("hlo serve");
-        let ttft =
-            m.requests[0].ttft().expect("first token").as_secs_f64() * 1e3;
-        best = best.min(ttft);
+        ts.push(m.requests[0].ttft_ms().expect("first token"));
     }
-    best
+    ts.min()
 }
 
 /// The HLO-backend series: chunked (compiled prefill graphs) vs

@@ -17,6 +17,7 @@ use ganq::coordinator::{
 };
 use ganq::model::forward::Weights;
 use ganq::model::{LayerWeights, ModelConfig, QuantizedModel, WeightStore};
+use ganq::obs::hist::Samples;
 use ganq::quant::ganq::fit_codebook_identity;
 use ganq::quant::lut::lut_from_parts;
 use ganq::tensor::Mat;
@@ -82,17 +83,16 @@ fn requests(max_new: usize, sampled: bool) -> Vec<GenRequest> {
 
 /// Best-of-`reps` wall seconds serving the batch to completion.
 fn measure(w: &Weights, max_new: usize, sampled: bool, reps: usize) -> f64 {
-    let mut best = f64::INFINITY;
+    let mut walls = Samples::new();
     for _ in 0..reps {
         let mut be = NativeBackend::new(*w, BATCH);
         let t0 = Instant::now();
         let (resp, m) = serve(&mut be, requests(max_new, sampled)).unwrap();
-        let wall = t0.elapsed().as_secs_f64();
+        walls.push(t0.elapsed().as_secs_f64());
         assert_eq!(resp.len(), BATCH);
         assert_eq!(m.total_generated(), BATCH * max_new);
-        best = best.min(wall);
     }
-    best
+    walls.min()
 }
 
 fn main() {

@@ -1,0 +1,325 @@
+//! Open-loop serving bench: a mixed traffic pool (short chat turns,
+//! 2048-token RAG prompts, long generations, mid-flight cancellers,
+//! stop-seq-heavy agents) replayed against the threaded server under
+//! Poisson and bursty arrivals, with per-class latency SLOs. The backend
+//! is `PagedNativeBackend` on the long-context micro config with a block
+//! pool deliberately tight enough that bursts force preemptions. Emits
+//! `BENCH_serve.json`: goodput (SLO-attaining tokens/s), TTFT/TPOT
+//! p50/p99, queue-delay tails, and preemption/rejection/cancellation
+//! rates per class and per arrival pattern.
+//!
+//! Also pins the tracing tax: a closed-loop batch-16 lut4 decode run on
+//! `opt-micro` measured with the ring recorder enabled vs the no-op
+//! sink. Asserts enabled tracing costs < 5% throughput (< 50% under
+//! `GANQ_SMOKE=1` — shared runners are noisy); the overhead fraction is
+//! part of the JSON so CI can watch it drift.
+
+use std::time::Instant;
+
+use ganq::bench::traffic::{
+    run_open_loop, standard_classes, Arrivals, TrafficReport, TrafficSpec,
+};
+use ganq::coordinator::{
+    serve, serve_batch, GenRequest, KvStoreKind, NativeBackend,
+    PagedNativeBackend, SamplingParams, ServeOptions, StopCriteria,
+};
+use ganq::model::forward::Weights;
+use ganq::model::{LayerWeights, ModelConfig, QuantizedModel, WeightStore};
+use ganq::obs::hist::fnum;
+use ganq::obs::trace;
+use ganq::quant::ganq::fit_codebook_identity;
+use ganq::quant::lut::lut_from_parts;
+use ganq::tensor::Mat;
+use ganq::util::json::{self, Json};
+use ganq::util::timer::Table;
+
+fn smoke() -> bool {
+    std::env::var("GANQ_SMOKE").is_ok()
+}
+
+/// Long-context micro config (same shape as the prefill bench): ctx
+/// large enough for the full-size 2048-token RAG prompts.
+fn long_ctx_cfg() -> ModelConfig {
+    ModelConfig {
+        d: 128,
+        layers: 2,
+        heads: 2,
+        ff: 256,
+        ctx: 2176,
+        vocab: 256,
+        eos: None,
+    }
+}
+
+/// Quantize every linear to a per-row non-uniform LUT (identity
+/// Hessian) — the servable form the engine packs.
+fn lut_model(store: &WeightStore, bits: u8) -> QuantizedModel {
+    let k = 1usize << bits;
+    let mut linears = std::collections::BTreeMap::new();
+    for (name, _m, _n) in store.cfg.linear_shapes() {
+        let w = store.mat(&name);
+        let mut codes = vec![0u8; w.rows * w.cols];
+        let mut cb = Mat::zeros(w.rows, k);
+        for i in 0..w.rows {
+            let (c, t) = fit_codebook_identity(w.row(i), bits, 2);
+            codes[i * w.cols..(i + 1) * w.cols].copy_from_slice(&c);
+            cb.row_mut(i).copy_from_slice(&t);
+        }
+        linears.insert(
+            name,
+            LayerWeights::Lut(lut_from_parts(w.rows, w.cols, bits, codes, cb)),
+        );
+    }
+    QuantizedModel {
+        base: store.clone(),
+        method: format!("lut{}-identity", bits),
+        bits,
+        linears,
+        weight_bits: 0,
+    }
+}
+
+/// One open-loop round against a paged-native backend built fresh on the
+/// engine thread per micro-batch (requests arriving mid-round queue for
+/// the next one — that wait is exactly what the queue-delay tail
+/// measures).
+fn traffic_round(pattern: Arrivals, seed: u64) -> TrafficReport {
+    let (scale, n_requests, mean_gap_ms, slots, blocks) = if smoke() {
+        (8usize, 18usize, 5.0f64, 6usize, 48usize)
+    } else {
+        (1, 96, 20.0, 8, 256)
+    };
+    let cfg = long_ctx_cfg();
+    let spec = TrafficSpec {
+        classes: standard_classes(scale),
+        n_requests,
+        mean_gap_ms,
+        pattern,
+        seed,
+        vocab: cfg.vocab,
+    };
+    let opts = ServeOptions::default();
+    // the engine thread owns the weights; the backend (and with it the
+    // block pool) is rebuilt per micro-batch round, so queue delay for
+    // requests arriving mid-round is real scheduler wait
+    let store = WeightStore::random("traffic", cfg, 611);
+    let report = run_open_loop(&spec, opts, move |batch| {
+        let w = Weights::Fp(&store);
+        let mut be = PagedNativeBackend::new(
+            w,
+            slots,
+            16,
+            blocks,
+            KvStoreKind::F32,
+        );
+        serve_batch(&mut be, batch, opts)
+    });
+    assert_eq!(report.lost, 0, "every stream must end in a Done");
+    assert!(
+        report.classes_sent() >= 4,
+        "{} run covered only {} traffic classes",
+        pattern.tag(),
+        report.classes_sent()
+    );
+    report
+}
+
+fn overhead_requests(max_new: usize) -> Vec<GenRequest> {
+    (0..16u64)
+        .map(|i| {
+            let prompt: Vec<i32> =
+                (0..8).map(|j: i32| (j * 29 + i as i32 * 13) % 256).collect();
+            GenRequest::new(
+                i,
+                prompt,
+                SamplingParams::greedy(),
+                StopCriteria::max_tokens(max_new),
+            )
+        })
+        .collect()
+}
+
+/// Best-of-`reps` wall seconds for the closed-loop batch-16 decode run.
+/// With `traced` the ring recorder is installed and drained per rep —
+/// the steady-state cost of every span/instant on the serve hot path.
+fn measure_overhead(
+    w: &Weights,
+    max_new: usize,
+    traced: bool,
+    reps: usize,
+) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        if traced {
+            trace::enable(trace::DEFAULT_CAPACITY);
+        } else {
+            trace::disable();
+        }
+        let mut be = NativeBackend::new(*w, 16);
+        let t0 = Instant::now();
+        let (resp, m) = serve(&mut be, overhead_requests(max_new)).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(resp.len(), 16);
+        assert_eq!(m.total_generated(), 16 * max_new);
+        if traced {
+            let (events, _) = trace::take();
+            assert!(
+                !events.is_empty(),
+                "tracing enabled but no events recorded"
+            );
+        }
+        best = best.min(wall);
+    }
+    trace::disable();
+    best
+}
+
+/// Tracing tax on decode throughput: (overhead fraction, tok/s off,
+/// tok/s on).
+fn tracing_overhead() -> (f64, f64, f64) {
+    let cfg = ModelConfig::builtin("opt-micro").unwrap();
+    let store = WeightStore::random("bench", cfg, 813);
+    eprintln!("fitting 4-bit LUT model for the overhead pin...");
+    let qm4 = lut_model(&store, 4);
+    let w = Weights::Quant(&qm4);
+    let (max_new, reps) = if smoke() { (12, 2) } else { (32, 5) };
+    // warmup packs weights + faults pages outside the timing
+    measure_overhead(&w, 2, false, 1);
+    let off_s = measure_overhead(&w, max_new, false, reps);
+    let on_s = measure_overhead(&w, max_new, true, reps);
+    let tokens = (16 * max_new) as f64;
+    (on_s / off_s - 1.0, tokens / off_s, tokens / on_s)
+}
+
+fn main() {
+    let t_all = Instant::now();
+    println!(
+        "open-loop serve traffic, paged-native on longctx-micro{}",
+        if smoke() { " [smoke]" } else { "" }
+    );
+
+    let runs = vec![
+        traffic_round(Arrivals::Poisson, 99),
+        traffic_round(Arrivals::Bursty, 100),
+    ];
+
+    let mut t = Table::new(
+        "open-loop traffic by arrival pattern",
+        &[
+            "pattern",
+            "reqs",
+            "goodput tok/s",
+            "ttft p50/p99 ms",
+            "tpot p50/p99 ms",
+            "preempt",
+            "rejected",
+            "cancelled",
+        ],
+    );
+    for r in &runs {
+        let m = &r.metrics;
+        t.row(vec![
+            r.pattern.tag().into(),
+            format!("{}", r.n_requests),
+            format!("{:.1}", r.goodput_tok_s),
+            format!("{:.0}/{:.0}", m.ttft_p50_ms(), m.ttft_p99_ms()),
+            format!("{:.1}/{:.1}", m.tpot_p50_ms(), m.tpot_p99_ms()),
+            format!("{}", m.preemptions),
+            format!("{}", r.rejected()),
+            format!("{}", r.cancelled()),
+        ]);
+    }
+    t.print();
+    let mut tc = Table::new(
+        "per-class (poisson run)",
+        &["class", "sent", "done", "slo ok", "ttft p99", "tpot p99"],
+    );
+    for c in &runs[0].per_class {
+        tc.row(vec![
+            c.name.into(),
+            format!("{}", c.sent),
+            format!("{}", c.completed),
+            format!("{}", c.slo_attained),
+            format!("{:.0}", c.ttft_ms.percentile(0.99)),
+            format!("{:.1}", c.tpot_ms.percentile(0.99)),
+        ]);
+    }
+    tc.print();
+
+    let (overhead, off_tok_s, on_tok_s) = tracing_overhead();
+    println!(
+        "tracing: {:.0} tok/s off, {:.0} tok/s on, overhead {:+.2}%",
+        off_tok_s,
+        on_tok_s,
+        100.0 * overhead
+    );
+
+    // headline aggregates: token-weighted goodput across both runs,
+    // conservative (max) latency tails, summed event counts
+    let wall_total: f64 = runs.iter().map(|r| r.wall_s).sum();
+    let attained_tokens: f64 =
+        runs.iter().map(|r| r.goodput_tok_s * r.wall_s).sum();
+    let total_requests: usize = runs.iter().map(|r| r.n_requests).sum();
+    let rejected: usize = runs.iter().map(|r| r.rejected()).sum();
+    let cancelled: usize = runs.iter().map(|r| r.cancelled()).sum();
+    let preemptions: usize =
+        runs.iter().map(|r| r.metrics.preemptions).sum();
+    let goodput =
+        if wall_total > 0.0 { attained_tokens / wall_total } else { 0.0 };
+    let maxf = |f: &dyn Fn(&TrafficReport) -> f64| {
+        runs.iter().map(f).fold(f64::NAN, f64::max)
+    };
+    let out = json::obj(vec![
+        ("model", json::s("longctx-micro")),
+        ("backend", json::s("paged-native")),
+        ("smoke", Json::Bool(smoke())),
+        ("classes", json::num(runs[0].per_class.len() as f64)),
+        ("requests", json::num(total_requests as f64)),
+        ("goodput", json::num(goodput)),
+        (
+            "goodput_req_s",
+            json::num(runs.iter().map(|r| r.goodput_req_s).sum::<f64>() / 2.0),
+        ),
+        ("ttft_p50", fnum(maxf(&|r| r.metrics.ttft_p50_ms()))),
+        ("ttft_p99", fnum(maxf(&|r| r.metrics.ttft_p99_ms()))),
+        ("tpot_p50", fnum(maxf(&|r| r.metrics.tpot_p50_ms()))),
+        ("tpot_p99", fnum(maxf(&|r| r.metrics.tpot_p99_ms()))),
+        ("preemptions", json::num(preemptions as f64)),
+        ("rejected", json::num(rejected as f64)),
+        (
+            "rejection_rate",
+            json::num(rejected as f64 / total_requests as f64),
+        ),
+        ("cancelled", json::num(cancelled as f64)),
+        ("trace_overhead_frac", json::num(overhead)),
+        ("trace_off_tok_s", json::num(off_tok_s)),
+        ("trace_on_tok_s", json::num(on_tok_s)),
+        ("wall_s", json::num(t_all.elapsed().as_secs_f64())),
+        ("runs", Json::Arr(runs.iter().map(|r| r.to_json()).collect())),
+    ]);
+    std::fs::write("BENCH_serve.json", out.to_string_pretty())
+        .expect("write BENCH_serve.json");
+    println!("\nwrote BENCH_serve.json");
+
+    assert!(
+        goodput.is_finite() && goodput >= 0.0,
+        "goodput must be a finite number, got {}",
+        goodput
+    );
+    let bar = if smoke() { 0.50 } else { 0.05 };
+    assert!(
+        overhead < bar,
+        "acceptance FAILED: enabled tracing costs {:.1}% of batch-16 lut4 \
+         decode throughput (need < {:.0}%)",
+        100.0 * overhead,
+        100.0 * bar
+    );
+    println!(
+        "acceptance OK: tracing overhead {:.2}% < {:.0}% on batch-16 lut4 \
+         decode; goodput {:.1} tok/s over {} requests x 2 arrival patterns",
+        100.0 * overhead,
+        100.0 * bar,
+        goodput,
+        total_requests
+    );
+}

@@ -1,6 +1,10 @@
 //! Shared scaffolding for the bench binaries (benches/table*.rs): loading
 //! trained models + runtime, one-shot calibration reuse, and the
-//! quantize->perplexity grid used by Tables 2/5/8/9/10.
+//! quantize->perplexity grid used by Tables 2/5/8/9/10. The `traffic`
+//! submodule is the open-loop serving workload generator behind
+//! `benches/serve_traffic.rs` and the `traffic` CLI subcommand.
+
+pub mod traffic;
 
 use crate::coordinator::{self, Calibration, QuantEngine};
 use crate::data::corpus::{self, Flavor, Split};

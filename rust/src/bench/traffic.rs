@@ -1,0 +1,641 @@
+//! Open-loop traffic generation for the serving stack: arrival
+//! processes, a mixed scenario pool with per-class latency SLOs, and the
+//! goodput accounting behind `BENCH_serve.json`.
+//!
+//! *Open-loop* means arrival times come from a process that does not
+//! wait for the system — requests land at their scheduled instants
+//! whether or not earlier ones finished, so queueing delay and
+//! preemption pressure show up in the tails instead of being absorbed
+//! by the load generator (the closed-loop failure mode). Each request
+//! is submitted to a [`ServerHandle`] at its arrival offset and drained
+//! by its own consumer thread (which also plays the mid-flight
+//! canceller role); [`run_open_loop`] then distills the server's
+//! [`ServeMetrics`] into a per-class [`TrafficReport`].
+//!
+//! **Goodput** is throughput that met its class SLO: a request counts
+//! only if it completed normally (budget, stop token, or stop sequence
+//! — not cancelled, not rejected) *and* its TTFT (and steady-state
+//! TPOT, where measured) came in under the class bound. Generated
+//! tokens of SLO-attaining requests divided by wall time is
+//! `goodput_tok_s`.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Instant;
+
+use crate::coordinator::{
+    FinishReason, GenRequest, RequestMetrics, SamplingParams, ServeMetrics,
+    ServeOptions, ServerHandle, StopCriteria, TokenEvent,
+};
+use crate::obs::hist::{fnum, Samples};
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// Per-class latency service-level objective. `tpot_ms` is `None` for
+/// classes whose outputs are too short for a steady-state cadence.
+#[derive(Debug, Clone, Copy)]
+pub struct Slo {
+    pub ttft_ms: f64,
+    pub tpot_ms: Option<f64>,
+}
+
+impl Slo {
+    /// Did a normally-completed request meet this SLO? `tpot` is the
+    /// request's measured cadence when it has one; an unmeasurable TPOT
+    /// (single-token output) never fails the bound.
+    pub fn attained(&self, ttft_ms: f64, tpot_ms: Option<f64>) -> bool {
+        if ttft_ms > self.ttft_ms {
+            return false;
+        }
+        match (self.tpot_ms, tpot_ms) {
+            (Some(bound), Some(t)) => t <= bound,
+            _ => true,
+        }
+    }
+}
+
+/// One scenario in the mixed pool.
+#[derive(Debug, Clone)]
+pub struct TrafficClass {
+    pub name: &'static str,
+    pub prompt_len: usize,
+    pub max_new: usize,
+    /// 0.0 = greedy; sampled classes exercise the sampling stage
+    pub temperature: f32,
+    /// random 2-token stop sequences attached to the request
+    pub stop_seqs: usize,
+    /// cancel from the consumer thread after this many streamed tokens
+    pub cancel_after: Option<usize>,
+    /// relative sampling weight in the mix
+    pub weight: u64,
+    pub slo: Slo,
+}
+
+/// The standard ≥5-class pool the serve bench and CLI share. `scale`
+/// shrinks prompt/generation lengths for smoke runs (1 = full size);
+/// SLO bounds are deliberately loose — CI machines vary widely and the
+/// bench gates on *reporting* goodput, not on absolute speed.
+pub fn standard_classes(scale: usize) -> Vec<TrafficClass> {
+    let s = scale.max(1);
+    let d = |v: usize| (v / s).max(4);
+    vec![
+        TrafficClass {
+            name: "chat-short",
+            prompt_len: d(64),
+            max_new: d(32),
+            temperature: 0.0,
+            stop_seqs: 0,
+            cancel_after: None,
+            weight: 4,
+            slo: Slo { ttft_ms: 2_500.0, tpot_ms: Some(250.0) },
+        },
+        TrafficClass {
+            name: "rag-long-prompt",
+            prompt_len: 2048 / s.min(8),
+            max_new: d(24),
+            temperature: 0.0,
+            stop_seqs: 0,
+            cancel_after: None,
+            weight: 2,
+            slo: Slo { ttft_ms: 8_000.0, tpot_ms: Some(250.0) },
+        },
+        TrafficClass {
+            name: "long-gen",
+            prompt_len: d(32),
+            max_new: d(128),
+            temperature: 0.7,
+            stop_seqs: 0,
+            cancel_after: None,
+            weight: 2,
+            slo: Slo { ttft_ms: 4_000.0, tpot_ms: Some(250.0) },
+        },
+        TrafficClass {
+            name: "canceller",
+            prompt_len: d(48),
+            max_new: d(64),
+            temperature: 0.0,
+            stop_seqs: 0,
+            // fire well inside the budget so the cancel usually lands
+            // mid-flight (cross-thread cancels are racy by nature —
+            // the report counts whichever way each one resolved)
+            cancel_after: Some((d(64) / 4).max(1)),
+            weight: 1,
+            slo: Slo { ttft_ms: 2_500.0, tpot_ms: None },
+        },
+        TrafficClass {
+            name: "agent-stop-seq",
+            prompt_len: d(64),
+            max_new: d(48),
+            temperature: 0.7,
+            stop_seqs: 4,
+            cancel_after: None,
+            weight: 2,
+            slo: Slo { ttft_ms: 2_500.0, tpot_ms: Some(250.0) },
+        },
+    ]
+}
+
+/// Arrival process shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arrivals {
+    /// exponential inter-arrival gaps with the given mean — memoryless
+    /// load, the classic open-loop baseline
+    Poisson,
+    /// groups of 8 simultaneous arrivals separated by 8x the mean gap —
+    /// same average rate, maximally lumpy; stresses admission and
+    /// preemption
+    Bursty,
+}
+
+impl Arrivals {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Arrivals::Poisson => "poisson",
+            Arrivals::Bursty => "bursty",
+        }
+    }
+}
+
+/// Arrival offsets (ms since harness start), nondecreasing, one per
+/// request. Both shapes have the same mean rate `1/mean_gap_ms`.
+pub fn arrival_times_ms(
+    pattern: Arrivals,
+    n: usize,
+    mean_gap_ms: f64,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    match pattern {
+        Arrivals::Poisson => {
+            for _ in 0..n {
+                // exponential gap via inverse CDF; uniform() is in [0,1)
+                // so 1-u is in (0,1] and ln stays finite
+                t += -mean_gap_ms * (1.0 - rng.uniform()).ln();
+                out.push(t);
+            }
+        }
+        Arrivals::Bursty => {
+            const BURST: usize = 8;
+            for i in 0..n {
+                if i > 0 && i % BURST == 0 {
+                    t += mean_gap_ms * BURST as f64;
+                }
+                out.push(t);
+            }
+        }
+    }
+    out
+}
+
+/// A full workload specification: the class mix, how many requests, and
+/// the arrival process.
+#[derive(Debug, Clone)]
+pub struct TrafficSpec {
+    pub classes: Vec<TrafficClass>,
+    pub n_requests: usize,
+    pub mean_gap_ms: f64,
+    pub pattern: Arrivals,
+    pub seed: u64,
+    /// vocab to draw prompt tokens from (match the serving model)
+    pub vocab: usize,
+}
+
+/// Class index per request. The first `classes.len()` requests get one
+/// of each class in order (coverage guarantee — every class appears in
+/// every run, which CI asserts on); the rest draw weighted.
+fn assign_classes(spec: &TrafficSpec, rng: &mut Rng) -> Vec<usize> {
+    // sample_cum wants cumulative integer weights
+    let mut cum = Vec::with_capacity(spec.classes.len());
+    let mut total = 0u64;
+    for c in &spec.classes {
+        total += c.weight.max(1);
+        cum.push(total);
+    }
+    (0..spec.n_requests)
+        .map(|i| {
+            if i < spec.classes.len() {
+                i
+            } else {
+                rng.sample_cum(&cum, total)
+            }
+        })
+        .collect()
+}
+
+/// Build the request for one (index, class) pair. Ids are `i + 1`
+/// (never 0, and disjoint per request) so the report can key per-class
+/// stats off `RequestMetrics::id`.
+fn build_request(
+    i: usize,
+    class: &TrafficClass,
+    vocab: usize,
+    rng: &mut Rng,
+) -> GenRequest {
+    let prompt: Vec<i32> = (0..class.prompt_len.max(1))
+        .map(|_| rng.below(vocab as u64) as i32)
+        .collect();
+    let sampling = if class.temperature > 0.0 {
+        SamplingParams::sample(class.temperature, 1000 + i as u64)
+    } else {
+        SamplingParams::greedy()
+    };
+    let mut stop = StopCriteria::max_tokens(class.max_new.max(1));
+    for _ in 0..class.stop_seqs {
+        stop = stop.with_stop_seq(vec![
+            rng.below(vocab as u64) as i32,
+            rng.below(vocab as u64) as i32,
+        ]);
+    }
+    GenRequest::new(i as u64 + 1, prompt, sampling, stop)
+}
+
+/// What one consumer thread observed for its request.
+struct Drained {
+    finish: Option<FinishReason>,
+    streamed: usize,
+}
+
+fn drain_stream(
+    rx: Receiver<TokenEvent>,
+    cancel: crate::coordinator::CancelHandle,
+    cancel_after: Option<usize>,
+) -> Drained {
+    let mut streamed = 0usize;
+    loop {
+        match rx.recv() {
+            Ok(TokenEvent::Token { .. }) => {
+                streamed += 1;
+                if cancel_after == Some(streamed) {
+                    cancel.cancel();
+                }
+            }
+            Ok(TokenEvent::Done(o)) => {
+                return Drained { finish: Some(o.finish), streamed };
+            }
+            // engine dropped the stream (serve error): count as lost
+            Err(_) => return Drained { finish: None, streamed },
+        }
+    }
+}
+
+/// Per-class rollup in a [`TrafficReport`].
+pub struct ClassStats {
+    pub name: &'static str,
+    pub sent: usize,
+    /// finished normally (budget / stop token / stop sequence)
+    pub completed: usize,
+    pub cancelled: usize,
+    pub rejected: usize,
+    pub slo_attained: usize,
+    pub generated_tokens: usize,
+    pub attained_tokens: usize,
+    pub ttft_ms: Samples,
+    pub tpot_ms: Samples,
+    pub slo: Slo,
+}
+
+impl ClassStats {
+    fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("name", json::s(self.name)),
+            ("sent", json::num(self.sent as f64)),
+            ("completed", json::num(self.completed as f64)),
+            ("cancelled", json::num(self.cancelled as f64)),
+            ("rejected", json::num(self.rejected as f64)),
+            ("slo_attained", json::num(self.slo_attained as f64)),
+            (
+                "generated_tokens",
+                json::num(self.generated_tokens as f64),
+            ),
+            ("slo_ttft_ms", fnum(self.slo.ttft_ms)),
+            (
+                "slo_tpot_ms",
+                match self.slo.tpot_ms {
+                    Some(t) => fnum(t),
+                    None => Json::Null,
+                },
+            ),
+            ("ttft_p50_ms", fnum(self.ttft_ms.percentile(0.50))),
+            ("ttft_p99_ms", fnum(self.ttft_ms.percentile(0.99))),
+            ("tpot_p50_ms", fnum(self.tpot_ms.percentile(0.50))),
+            ("tpot_p99_ms", fnum(self.tpot_ms.percentile(0.99))),
+        ])
+    }
+}
+
+/// The distilled result of one open-loop run.
+pub struct TrafficReport {
+    pub pattern: Arrivals,
+    pub n_requests: usize,
+    pub wall_s: f64,
+    /// generated tokens of SLO-attaining requests per wall second
+    pub goodput_tok_s: f64,
+    /// SLO-attaining requests per wall second
+    pub goodput_req_s: f64,
+    pub per_class: Vec<ClassStats>,
+    pub metrics: ServeMetrics,
+    /// streams that ended without a Done (engine error) — should be 0
+    pub lost: usize,
+}
+
+impl TrafficReport {
+    pub fn completed(&self) -> usize {
+        self.per_class.iter().map(|c| c.completed).sum()
+    }
+
+    pub fn attained(&self) -> usize {
+        self.per_class.iter().map(|c| c.slo_attained).sum()
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.per_class.iter().map(|c| c.rejected).sum()
+    }
+
+    pub fn cancelled(&self) -> usize {
+        self.per_class.iter().map(|c| c.cancelled).sum()
+    }
+
+    /// Classes that actually sent at least one request.
+    pub fn classes_sent(&self) -> usize {
+        self.per_class.iter().filter(|c| c.sent > 0).count()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let m = &self.metrics;
+        json::obj(vec![
+            ("pattern", json::s(self.pattern.tag())),
+            ("requests", json::num(self.n_requests as f64)),
+            ("wall_s", fnum(self.wall_s)),
+            ("goodput_tok_s", fnum(self.goodput_tok_s)),
+            ("goodput_req_s", fnum(self.goodput_req_s)),
+            ("completed", json::num(self.completed() as f64)),
+            ("slo_attained", json::num(self.attained() as f64)),
+            ("rejected", json::num(self.rejected() as f64)),
+            ("cancelled", json::num(self.cancelled() as f64)),
+            ("lost", json::num(self.lost as f64)),
+            ("ttft_p50_ms", fnum(m.ttft_p50_ms())),
+            ("ttft_p99_ms", fnum(m.ttft_p99_ms())),
+            ("tpot_p50_ms", fnum(m.tpot_p50_ms())),
+            ("tpot_p99_ms", fnum(m.tpot_p99_ms())),
+            ("queue_delay_p50_ms", fnum(m.queue_delay_p50_ms())),
+            ("queue_delay_p99_ms", fnum(m.queue_delay_p99_ms())),
+            ("preemptions", json::num(m.preemptions as f64)),
+            (
+                "per_class",
+                Json::Arr(
+                    self.per_class.iter().map(|c| c.to_json()).collect(),
+                ),
+            ),
+            ("metrics", m.snapshot()),
+        ])
+    }
+}
+
+/// Run one open-loop round: spawn the engine thread, submit each
+/// request at its scheduled arrival offset, drain every stream on its
+/// own consumer thread (cancellers fire from there), shut down, and
+/// roll the server's metrics up per class.
+///
+/// `engine_loop` is handed to [`ServerHandle::spawn`] unchanged — it
+/// owns the backend (see `benches/serve_traffic.rs` for a paged-native
+/// example).
+pub fn run_open_loop<F>(
+    spec: &TrafficSpec,
+    opts: ServeOptions,
+    engine_loop: F,
+) -> TrafficReport
+where
+    F: FnMut(Vec<(GenRequest, Sender<TokenEvent>)>) -> ServeMetrics
+        + Send
+        + 'static,
+{
+    assert!(!spec.classes.is_empty(), "traffic needs at least one class");
+    assert!(spec.n_requests > 0, "traffic needs at least one request");
+    let mut rng = Rng::new(spec.seed);
+    let assignment = assign_classes(spec, &mut rng);
+    let arrivals = arrival_times_ms(
+        spec.pattern,
+        spec.n_requests,
+        spec.mean_gap_ms,
+        &mut rng,
+    );
+    let requests: Vec<GenRequest> = assignment
+        .iter()
+        .enumerate()
+        .map(|(i, &ci)| {
+            build_request(i, &spec.classes[ci], spec.vocab.max(2), &mut rng)
+        })
+        .collect();
+
+    let handle = ServerHandle::spawn(opts, engine_loop);
+    let t0 = Instant::now();
+    let mut consumers = Vec::with_capacity(spec.n_requests);
+    for (i, req) in requests.into_iter().enumerate() {
+        let target_s = arrivals[i] / 1e3;
+        let now_s = t0.elapsed().as_secs_f64();
+        if target_s > now_s {
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                target_s - now_s,
+            ));
+        }
+        let cancel_after = spec.classes[assignment[i]].cancel_after;
+        let (rx, cancel) = handle.submit_request(req);
+        consumers.push(std::thread::spawn(move || {
+            drain_stream(rx, cancel, cancel_after)
+        }));
+    }
+    let drained: Vec<Drained> = consumers
+        .into_iter()
+        .map(|j| j.join().expect("consumer thread"))
+        .collect();
+    let wall_s = t0.elapsed().as_secs_f64();
+    let metrics = handle.shutdown();
+
+    // roll up per class, joining the server's request timelines (by id)
+    // with each consumer's observed finish
+    let by_id: std::collections::HashMap<u64, &RequestMetrics> =
+        metrics.requests.iter().map(|r| (r.id, r)).collect();
+    let mut per_class: Vec<ClassStats> = spec
+        .classes
+        .iter()
+        .map(|c| ClassStats {
+            name: c.name,
+            sent: 0,
+            completed: 0,
+            cancelled: 0,
+            rejected: 0,
+            slo_attained: 0,
+            generated_tokens: 0,
+            attained_tokens: 0,
+            ttft_ms: Samples::new(),
+            tpot_ms: Samples::new(),
+            slo: c.slo,
+        })
+        .collect();
+    let mut lost = 0usize;
+    for (i, d) in drained.iter().enumerate() {
+        let cs = &mut per_class[assignment[i]];
+        cs.sent += 1;
+        let rm = by_id.get(&(i as u64 + 1));
+        let (ttft, tpot, generated) = match rm {
+            Some(r) => {
+                (r.ttft_ms(), r.tpot_ms(), r.generated_tokens)
+            }
+            None => (None, None, d.streamed),
+        };
+        cs.generated_tokens += generated;
+        if let Some(t) = ttft {
+            cs.ttft_ms.push(t);
+        }
+        if let Some(t) = tpot {
+            cs.tpot_ms.push(t);
+        }
+        match d.finish {
+            Some(FinishReason::Cancelled) => cs.cancelled += 1,
+            Some(FinishReason::Rejected) => cs.rejected += 1,
+            Some(_) => {
+                cs.completed += 1;
+                if cs.slo.attained(ttft.unwrap_or(f64::INFINITY), tpot) {
+                    cs.slo_attained += 1;
+                    cs.attained_tokens += generated;
+                }
+            }
+            None => lost += 1,
+        }
+    }
+    let attained_tokens: usize =
+        per_class.iter().map(|c| c.attained_tokens).sum();
+    let attained: usize = per_class.iter().map(|c| c.slo_attained).sum();
+    TrafficReport {
+        pattern: spec.pattern,
+        n_requests: spec.n_requests,
+        wall_s,
+        goodput_tok_s: if wall_s > 0.0 {
+            attained_tokens as f64 / wall_s
+        } else {
+            0.0
+        },
+        goodput_req_s: if wall_s > 0.0 {
+            attained as f64 / wall_s
+        } else {
+            0.0
+        },
+        per_class,
+        metrics,
+        lost,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{serve_batch, NativeBackend};
+    use crate::model::forward::Weights;
+    use crate::model::{ModelConfig, WeightStore};
+
+    #[test]
+    fn arrival_processes_have_matching_rates() {
+        let mut rng = Rng::new(7);
+        let n = 400;
+        let gap = 10.0;
+        let p = arrival_times_ms(Arrivals::Poisson, n, gap, &mut rng);
+        let b = arrival_times_ms(Arrivals::Bursty, n, gap, &mut rng);
+        assert_eq!(p.len(), n);
+        assert!(p.windows(2).all(|w| w[1] >= w[0]), "nondecreasing");
+        assert!(b.windows(2).all(|w| w[1] >= w[0]), "nondecreasing");
+        // mean inter-arrival of the Poisson stream ~ gap (law of large n)
+        let mean = p.last().unwrap() / n as f64;
+        assert!(
+            (mean - gap).abs() < gap * 0.3,
+            "poisson mean gap {} vs {}",
+            mean,
+            gap
+        );
+        // bursty: first burst arrives simultaneously
+        assert_eq!(b[0], b[7]);
+        assert!(b[8] > b[7]);
+    }
+
+    #[test]
+    fn class_assignment_covers_every_class() {
+        let spec = TrafficSpec {
+            classes: standard_classes(8),
+            n_requests: 12,
+            mean_gap_ms: 1.0,
+            pattern: Arrivals::Poisson,
+            seed: 3,
+            vocab: 256,
+        };
+        let mut rng = Rng::new(spec.seed);
+        let assign = assign_classes(&spec, &mut rng);
+        assert_eq!(assign.len(), 12);
+        for ci in 0..spec.classes.len() {
+            assert!(
+                assign.contains(&ci),
+                "class {} must appear",
+                spec.classes[ci].name
+            );
+        }
+    }
+
+    #[test]
+    fn slo_attainment_logic() {
+        let slo = Slo { ttft_ms: 100.0, tpot_ms: Some(10.0) };
+        assert!(slo.attained(50.0, Some(5.0)));
+        assert!(!slo.attained(150.0, Some(5.0)));
+        assert!(!slo.attained(50.0, Some(50.0)));
+        // unmeasurable TPOT never fails the bound
+        assert!(slo.attained(50.0, None));
+        let no_tpot = Slo { ttft_ms: 100.0, tpot_ms: None };
+        assert!(no_tpot.attained(50.0, Some(1e9)));
+    }
+
+    #[test]
+    fn open_loop_round_reports_all_classes() {
+        // tiny end-to-end smoke on the native backend: every stream
+        // drains, per-class accounting adds up, JSON parses
+        let spec = TrafficSpec {
+            classes: standard_classes(16),
+            n_requests: 6,
+            mean_gap_ms: 1.0,
+            pattern: Arrivals::Poisson,
+            seed: 11,
+            vocab: 64,
+        };
+        let opts = ServeOptions::default();
+        let report = run_open_loop(&spec, opts, move |batch| {
+            let cfg = ModelConfig::builtin("opt-micro").unwrap();
+            let store = WeightStore::random("t", cfg, 41);
+            let w = Weights::Fp(&store);
+            let mut be = NativeBackend::new(w, 4);
+            serve_batch(&mut be, batch, opts)
+        });
+        assert_eq!(report.n_requests, 6);
+        assert_eq!(report.lost, 0);
+        let sent: usize = report.per_class.iter().map(|c| c.sent).sum();
+        assert_eq!(sent, 6);
+        // first 5 requests covered all 5 classes
+        assert_eq!(report.classes_sent(), 5);
+        assert_eq!(
+            report.completed() + report.cancelled() + report.rejected(),
+            6
+        );
+        // the canceller's request resolved one way or the other (the
+        // cancel races the tiny budget — either outcome is legal here;
+        // tests/observability.rs pins a deterministic mid-serve cancel)
+        let canceller = report
+            .per_class
+            .iter()
+            .find(|c| c.name == "canceller")
+            .unwrap();
+        assert_eq!(canceller.cancelled + canceller.completed, canceller.sent);
+        let parsed = Json::parse(&report.to_json().to_string_pretty())
+            .expect("report JSON parses");
+        assert!(parsed.get("goodput_tok_s").is_some());
+        assert!(parsed.at(&["metrics", "ttft_p99_ms"]).is_some());
+        assert_eq!(
+            parsed.get("per_class").and_then(|p| p.as_arr()).unwrap().len(),
+            5
+        );
+    }
+}

@@ -1,13 +1,33 @@
 //! Serving metrics: per-request latency breakdown and aggregate
 //! throughput / weight-traffic numbers (Table 6 columns), per-finish-
-//! reason request counts (plus cancelled-token waste), and paged-KV
-//! counters (block-pool occupancy, prefix-hit rate, preemptions) when
-//! the backend pages its cache.
+//! reason request counts (plus cancelled-token waste), paged-KV
+//! counters (block-pool occupancy, prefix-hit rate, preemptions), and
+//! per-step latency / KV-occupancy histograms on the shared
+//! [`crate::obs::hist`] core.
+//!
+//! Request timestamps are stored as **milliseconds relative to the
+//! serve epoch** (the instant the serve round started), not as
+//! [`std::time::Instant`]s — offsets serialize cleanly into the
+//! machine-readable [`ServeMetrics::snapshot`]. A request submitted to
+//! a [`super::server::ServerHandle`] before the round starts gets a
+//! negative `enqueued_ms`; all derived durations (TTFT, queue delay,
+//! end-to-end) remain correct differences.
 
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use super::serve::FinishReason;
 use crate::kv::KvPoolStats;
+use crate::obs::hist::{fnum, percentile_exact, Histogram};
+use crate::util::json::{self, Json};
+
+/// Signed milliseconds from `epoch` to `t` (negative when `t` precedes
+/// the epoch — e.g. a request enqueued before the serve round began).
+pub fn rel_ms(epoch: Instant, t: Instant) -> f64 {
+    match t.checked_duration_since(epoch) {
+        Some(d) => d.as_secs_f64() * 1e3,
+        None => -(epoch.duration_since(t).as_secs_f64() * 1e3),
+    }
+}
 
 /// How many requests ended for each [`FinishReason`].
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -45,38 +65,90 @@ impl FinishCounts {
             + self.cancelled
             + self.rejected
     }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("max_tokens", json::num(self.max_tokens as f64)),
+            ("stop_token", json::num(self.stop_token as f64)),
+            ("stop_seq", json::num(self.stop_seq as f64)),
+            ("cancelled", json::num(self.cancelled as f64)),
+            ("rejected", json::num(self.rejected as f64)),
+        ])
+    }
 }
 
-#[derive(Debug, Clone)]
+/// One request's timeline, in milliseconds relative to the serve epoch:
+/// `enqueued → admitted (first scheduled) → first_token → finished`.
+#[derive(Debug, Clone, Default)]
 pub struct RequestMetrics {
     pub id: u64,
     pub prompt_tokens: usize,
     pub generated_tokens: usize,
-    pub enqueued: Instant,
-    pub first_token: Option<Instant>,
-    pub finished: Option<Instant>,
+    pub enqueued_ms: f64,
+    /// first scheduled onto a backend slot (None if rejected in queue)
+    pub admitted_ms: Option<f64>,
+    pub first_token_ms: Option<f64>,
+    pub finished_ms: Option<f64>,
 }
 
 impl RequestMetrics {
-    pub fn ttft(&self) -> Option<Duration> {
-        self.first_token.map(|t| t - self.enqueued)
+    /// Time-to-first-token: enqueue → first streamed token.
+    pub fn ttft_ms(&self) -> Option<f64> {
+        self.first_token_ms.map(|t| t - self.enqueued_ms)
     }
 
-    pub fn total(&self) -> Option<Duration> {
-        self.finished.map(|t| t - self.enqueued)
+    /// Time spent queued before first being scheduled.
+    pub fn queue_delay_ms(&self) -> Option<f64> {
+        self.admitted_ms.map(|t| t - self.enqueued_ms)
     }
-}
 
-/// `q`-th percentile (0..=1) by nearest-rank (`ceil(q*n)`-th order
-/// statistic) over an unsorted sample — never below the true quantile,
-/// so tail numbers are not flattered.
-fn percentile_ms(mut vals: Vec<f64>, q: f64) -> f64 {
-    if vals.is_empty() {
-        return f64::NAN;
+    /// Admission → first token: the prefill (+ any preemption) part of
+    /// TTFT, i.e. `ttft = queue_delay + prefill`.
+    pub fn prefill_ms(&self) -> Option<f64> {
+        match (self.admitted_ms, self.first_token_ms) {
+            (Some(a), Some(f)) => Some(f - a),
+            _ => None,
+        }
     }
-    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = (vals.len() as f64 * q).ceil() as usize;
-    vals[rank.clamp(1, vals.len()) - 1]
+
+    /// Time-per-output-token after the first: steady-state decode
+    /// cadence. None until a second token exists.
+    pub fn tpot_ms(&self) -> Option<f64> {
+        match (self.first_token_ms, self.finished_ms) {
+            (Some(f), Some(e)) if self.generated_tokens >= 2 => {
+                Some((e - f) / (self.generated_tokens - 1) as f64)
+            }
+            _ => None,
+        }
+    }
+
+    /// End-to-end: enqueue → finished.
+    pub fn e2e_ms(&self) -> Option<f64> {
+        self.finished_ms.map(|t| t - self.enqueued_ms)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| match v {
+            Some(x) => fnum(x),
+            None => Json::Null,
+        };
+        json::obj(vec![
+            ("id", json::num(self.id as f64)),
+            ("prompt_tokens", json::num(self.prompt_tokens as f64)),
+            (
+                "generated_tokens",
+                json::num(self.generated_tokens as f64),
+            ),
+            ("enqueued_ms", fnum(self.enqueued_ms)),
+            ("admitted_ms", opt(self.admitted_ms)),
+            ("first_token_ms", opt(self.first_token_ms)),
+            ("finished_ms", opt(self.finished_ms)),
+            ("ttft_ms", opt(self.ttft_ms())),
+            ("queue_delay_ms", opt(self.queue_delay_ms())),
+            ("tpot_ms", opt(self.tpot_ms())),
+            ("e2e_ms", opt(self.e2e_ms())),
+        ])
+    }
 }
 
 #[derive(Debug, Clone, Default)]
@@ -106,6 +178,11 @@ pub struct ServeMetrics {
     pub peak_concurrency: usize,
     /// block-pool counters (None for contiguous-cache backends)
     pub kv: Option<KvPoolStats>,
+    /// per-step `DecodeBackend::step` dispatch latency (ms)
+    pub step_ms: Histogram,
+    /// KV-pool occupancy (blocks_in_use / blocks_total, 0..=1) sampled
+    /// once per step — occupancy *over time*, not just the final state
+    pub kv_occupancy: Histogram,
 }
 
 impl ServeMetrics {
@@ -122,10 +199,17 @@ impl ServeMetrics {
     }
 
     fn ttfts_ms(&self) -> Vec<f64> {
+        self.requests.iter().filter_map(|r| r.ttft_ms()).collect()
+    }
+
+    fn tpots_ms(&self) -> Vec<f64> {
+        self.requests.iter().filter_map(|r| r.tpot_ms()).collect()
+    }
+
+    fn queue_delays_ms(&self) -> Vec<f64> {
         self.requests
             .iter()
-            .filter_map(|r| r.ttft())
-            .map(|d| d.as_secs_f64() * 1e3)
+            .filter_map(|r| r.queue_delay_ms())
             .collect()
     }
 
@@ -140,23 +224,40 @@ impl ServeMetrics {
 
     /// Median time-to-first-token across requests.
     pub fn ttft_p50_ms(&self) -> f64 {
-        percentile_ms(self.ttfts_ms(), 0.50)
+        percentile_exact(&self.ttfts_ms(), 0.50)
     }
 
     /// Tail time-to-first-token across requests.
     pub fn ttft_p95_ms(&self) -> f64 {
-        percentile_ms(self.ttfts_ms(), 0.95)
+        percentile_exact(&self.ttfts_ms(), 0.95)
+    }
+
+    pub fn ttft_p99_ms(&self) -> f64 {
+        percentile_exact(&self.ttfts_ms(), 0.99)
+    }
+
+    /// Median steady-state time-per-output-token.
+    pub fn tpot_p50_ms(&self) -> f64 {
+        percentile_exact(&self.tpots_ms(), 0.50)
+    }
+
+    pub fn tpot_p99_ms(&self) -> f64 {
+        percentile_exact(&self.tpots_ms(), 0.99)
+    }
+
+    /// Median time spent queued before first being scheduled.
+    pub fn queue_delay_p50_ms(&self) -> f64 {
+        percentile_exact(&self.queue_delays_ms(), 0.50)
+    }
+
+    pub fn queue_delay_p99_ms(&self) -> f64 {
+        percentile_exact(&self.queue_delays_ms(), 0.99)
     }
 
     pub fn p95_latency_ms(&self) -> f64 {
-        percentile_ms(
-            self.requests
-                .iter()
-                .filter_map(|r| r.total())
-                .map(|d| d.as_secs_f64() * 1e3)
-                .collect(),
-            0.95,
-        )
+        let e2e: Vec<f64> =
+            self.requests.iter().filter_map(|r| r.e2e_ms()).collect();
+        percentile_exact(&e2e, 0.95)
     }
 
     /// Average prompt positions advanced per step (1.0 with per-token
@@ -174,6 +275,100 @@ impl ServeMetrics {
         self.weight_bytes_per_step * self.decode_steps
     }
 
+    /// Fold one serve round into a running total (the
+    /// [`super::server::ServerHandle`] engine thread aggregates windows
+    /// this way). Counters add, histograms merge bucket-wise, rates
+    /// (`*_per_step`) and pool stats take the latest round's value.
+    pub fn merge_round(&mut self, m: ServeMetrics) {
+        self.requests.extend(m.requests);
+        self.decode_steps += m.decode_steps;
+        self.prompt_positions += m.prompt_positions;
+        self.wall_s += m.wall_s;
+        self.weight_bytes_per_step = m.weight_bytes_per_step;
+        self.kv_bytes_per_step = m.kv_bytes_per_step;
+        self.preemptions += m.preemptions;
+        self.finish.merge(&m.finish);
+        self.cancelled_tokens += m.cancelled_tokens;
+        self.peak_concurrency = self.peak_concurrency.max(m.peak_concurrency);
+        if m.kv.is_some() {
+            self.kv = m.kv;
+        }
+        self.step_ms.merge(&m.step_ms);
+        self.kv_occupancy.merge(&m.kv_occupancy);
+    }
+
+    /// Machine-readable snapshot: aggregates, tail latencies, finish
+    /// tallies, KV-pool counters, per-step histograms, and every
+    /// request's timeline. Written by `serve --metrics-out` and
+    /// consumed by the traffic harness.
+    pub fn snapshot(&self) -> Json {
+        let requests: Vec<Json> =
+            self.requests.iter().map(|r| r.to_json()).collect();
+        let kv = match &self.kv {
+            Some(kv) => json::obj(vec![
+                ("blocks_total", json::num(kv.blocks_total as f64)),
+                ("blocks_in_use", json::num(kv.blocks_in_use as f64)),
+                (
+                    "peak_blocks_in_use",
+                    json::num(kv.peak_blocks_in_use as f64),
+                ),
+                ("cached_blocks", json::num(kv.cached_blocks as f64)),
+                ("peak_occupancy", fnum(kv.peak_occupancy())),
+                ("prefix_hit_rate", fnum(kv.prefix_hit_rate())),
+                ("preemptions", json::num(kv.preemptions as f64)),
+                ("cow_copies", json::num(kv.cow_copies as f64)),
+                ("evictions", json::num(kv.evictions as f64)),
+            ]),
+            None => Json::Null,
+        };
+        json::obj(vec![
+            ("requests_total", json::num(self.requests.len() as f64)),
+            ("generated_tokens", json::num(self.total_generated() as f64)),
+            ("decode_steps", json::num(self.decode_steps as f64)),
+            (
+                "prompt_positions",
+                json::num(self.prompt_positions as f64),
+            ),
+            ("wall_s", fnum(self.wall_s)),
+            ("tokens_per_s", fnum(self.tokens_per_s())),
+            ("mean_ttft_ms", fnum(self.mean_ttft_ms())),
+            ("ttft_p50_ms", fnum(self.ttft_p50_ms())),
+            ("ttft_p95_ms", fnum(self.ttft_p95_ms())),
+            ("ttft_p99_ms", fnum(self.ttft_p99_ms())),
+            ("tpot_p50_ms", fnum(self.tpot_p50_ms())),
+            ("tpot_p99_ms", fnum(self.tpot_p99_ms())),
+            ("queue_delay_p50_ms", fnum(self.queue_delay_p50_ms())),
+            ("queue_delay_p99_ms", fnum(self.queue_delay_p99_ms())),
+            ("e2e_p95_ms", fnum(self.p95_latency_ms())),
+            (
+                "prompt_positions_per_step",
+                fnum(self.prompt_positions_per_step()),
+            ),
+            (
+                "weight_bytes_per_step",
+                json::num(self.weight_bytes_per_step as f64),
+            ),
+            (
+                "kv_bytes_per_step",
+                json::num(self.kv_bytes_per_step as f64),
+            ),
+            ("preemptions", json::num(self.preemptions as f64)),
+            (
+                "cancelled_tokens",
+                json::num(self.cancelled_tokens as f64),
+            ),
+            (
+                "peak_concurrency",
+                json::num(self.peak_concurrency as f64),
+            ),
+            ("finish", self.finish.to_json()),
+            ("kv_pool", kv),
+            ("step_ms", self.step_ms.to_json()),
+            ("kv_occupancy", self.kv_occupancy.to_json()),
+            ("requests", Json::Arr(requests)),
+        ])
+    }
+
     pub fn summary(&self) -> String {
         let mut s = format!(
             "{} reqs, {} tokens in {:.2}s ({:.1} tok/s), ttft p50 {:.1}ms p95 {:.1}ms, e2e p95 {:.1}ms, {:.1} prompt-pos/step, {:.1} MiB weights/step",
@@ -187,6 +382,29 @@ impl ServeMetrics {
             self.prompt_positions_per_step(),
             self.weight_bytes_per_step as f64 / (1 << 20) as f64,
         );
+        let tpot = self.tpot_p50_ms();
+        if tpot.is_finite() {
+            s.push_str(&format!(
+                ", tpot p50 {:.1}ms p99 {:.1}ms",
+                tpot,
+                self.tpot_p99_ms()
+            ));
+        }
+        let qd = self.queue_delay_p50_ms();
+        if qd.is_finite() {
+            s.push_str(&format!(
+                ", queue p50 {:.1}ms p99 {:.1}ms",
+                qd,
+                self.queue_delay_p99_ms()
+            ));
+        }
+        if !self.step_ms.is_empty() {
+            s.push_str(&format!(
+                ", step p50 {:.1}ms p99 {:.1}ms",
+                self.step_ms.quantile(0.50),
+                self.step_ms.quantile(0.99)
+            ));
+        }
         if let Some(kv) = &self.kv {
             s.push_str(&format!(
                 ", kv pool {}/{} blocks (peak {:.0}%), prefix hit {:.0}%, {} preempt, {} evict",
@@ -223,27 +441,31 @@ impl ServeMetrics {
 mod tests {
     use super::*;
 
+    fn req(
+        id: u64,
+        gen: usize,
+        enq: f64,
+        adm: f64,
+        first: f64,
+        fin: f64,
+    ) -> RequestMetrics {
+        RequestMetrics {
+            id,
+            prompt_tokens: 4,
+            generated_tokens: gen,
+            enqueued_ms: enq,
+            admitted_ms: Some(adm),
+            first_token_ms: Some(first),
+            finished_ms: Some(fin),
+        }
+    }
+
     #[test]
     fn metrics_aggregate() {
-        let t0 = Instant::now();
         let m = ServeMetrics {
             requests: vec![
-                RequestMetrics {
-                    id: 1,
-                    prompt_tokens: 4,
-                    generated_tokens: 10,
-                    enqueued: t0,
-                    first_token: Some(t0 + Duration::from_millis(5)),
-                    finished: Some(t0 + Duration::from_millis(50)),
-                },
-                RequestMetrics {
-                    id: 2,
-                    prompt_tokens: 4,
-                    generated_tokens: 20,
-                    enqueued: t0,
-                    first_token: Some(t0 + Duration::from_millis(9)),
-                    finished: Some(t0 + Duration::from_millis(80)),
-                },
+                req(1, 10, 0.0, 2.0, 5.0, 50.0),
+                req(2, 20, 0.0, 3.0, 9.0, 80.0),
             ],
             decode_steps: 30,
             wall_s: 0.1,
@@ -258,9 +480,48 @@ mod tests {
         // p95 = ceil(1.9)th = 9 (the tail is never flattered)
         assert!((m.ttft_p50_ms() - 5.0).abs() < 1e-9);
         assert!((m.ttft_p95_ms() - 9.0).abs() < 1e-9);
+        assert!((m.ttft_p99_ms() - 9.0).abs() < 1e-9);
         assert_eq!(m.total_weight_bytes(), 30_000);
         assert!(m.summary().contains("2 reqs"));
         assert!(m.summary().contains("ttft p50"), "{}", m.summary());
+    }
+
+    #[test]
+    fn request_timeline_decomposes() {
+        let r = req(1, 11, 10.0, 14.0, 30.0, 130.0);
+        assert_eq!(r.ttft_ms(), Some(20.0));
+        assert_eq!(r.queue_delay_ms(), Some(4.0));
+        assert_eq!(r.prefill_ms(), Some(16.0));
+        // ttft = queue_delay + prefill
+        assert_eq!(
+            r.ttft_ms().unwrap(),
+            r.queue_delay_ms().unwrap() + r.prefill_ms().unwrap()
+        );
+        assert_eq!(r.e2e_ms(), Some(120.0));
+        // 10 inter-token gaps over 100ms
+        assert!((r.tpot_ms().unwrap() - 10.0).abs() < 1e-9);
+        // single-token request has no steady-state cadence
+        let single = req(2, 1, 0.0, 1.0, 2.0, 2.0);
+        assert!(single.tpot_ms().is_none());
+    }
+
+    #[test]
+    fn negative_enqueue_offset_keeps_durations() {
+        // submitted before the serve epoch: offset is negative, but the
+        // duration views stay correct
+        let r = req(1, 5, -8.0, 1.0, 2.0, 42.0);
+        assert_eq!(r.ttft_ms(), Some(10.0));
+        assert_eq!(r.queue_delay_ms(), Some(9.0));
+        assert_eq!(r.e2e_ms(), Some(50.0));
+    }
+
+    #[test]
+    fn rel_ms_is_signed() {
+        let t0 = Instant::now();
+        let t1 = t0 + std::time::Duration::from_millis(25);
+        assert!((rel_ms(t0, t1) - 25.0).abs() < 1.0);
+        assert!((rel_ms(t1, t0) + 25.0).abs() < 1.0);
+        assert_eq!(rel_ms(t0, t0), 0.0);
     }
 
     #[test]
@@ -280,8 +541,19 @@ mod tests {
         assert_eq!(m.tokens_per_s(), 0.0);
         assert!(m.mean_ttft_ms().is_nan());
         assert!(m.p95_latency_ms().is_nan());
+        assert!(m.tpot_p50_ms().is_nan());
+        assert!(m.queue_delay_p99_ms().is_nan());
         assert!(m.kv.is_none());
         assert!(!m.summary().contains("kv pool"));
+        assert!(!m.summary().contains("tpot"));
+        // an empty snapshot still parses, with nulls where no sample
+        let js = m.snapshot();
+        let parsed = Json::parse(&js.to_string_pretty()).expect("parses");
+        assert_eq!(parsed.get("ttft_p50_ms"), Some(&Json::Null));
+        assert_eq!(
+            parsed.get("requests_total").and_then(|v| v.as_f64()),
+            Some(0.0)
+        );
     }
 
     #[test]
@@ -308,6 +580,118 @@ mod tests {
         assert!(s.contains("17 tokens wasted"), "{}", s);
         // max_tokens is the normal case and stays out of the summary
         assert!(!s.contains("max"), "{}", s);
+    }
+
+    #[test]
+    fn merge_round_rolls_up_windows() {
+        let mut round1 = ServeMetrics {
+            requests: vec![req(1, 10, 0.0, 1.0, 5.0, 50.0)],
+            decode_steps: 10,
+            prompt_positions: 40,
+            wall_s: 0.5,
+            weight_bytes_per_step: 500,
+            preemptions: 1,
+            cancelled_tokens: 3,
+            peak_concurrency: 2,
+            ..Default::default()
+        };
+        round1.finish.bump(FinishReason::MaxTokens);
+        round1.step_ms.record(2.0);
+        round1.kv_occupancy.record(0.25);
+
+        let mut round2 = ServeMetrics {
+            requests: vec![req(2, 20, 0.0, 2.0, 9.0, 80.0)],
+            decode_steps: 20,
+            prompt_positions: 20,
+            wall_s: 0.5,
+            weight_bytes_per_step: 1000,
+            preemptions: 2,
+            cancelled_tokens: 0,
+            peak_concurrency: 4,
+            kv: Some(KvPoolStats {
+                blocks_total: 16,
+                blocks_in_use: 8,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        round2.finish.bump(FinishReason::Cancelled);
+        round2.step_ms.record(4.0);
+        round2.step_ms.record(6.0);
+        round2.kv_occupancy.record(0.5);
+
+        let mut total = ServeMetrics::default();
+        total.merge_round(round1);
+        total.merge_round(round2);
+        assert_eq!(total.requests.len(), 2);
+        assert_eq!(total.decode_steps, 30);
+        assert_eq!(total.prompt_positions, 60);
+        assert!((total.wall_s - 1.0).abs() < 1e-12);
+        assert_eq!(total.weight_bytes_per_step, 1000); // latest round
+        assert_eq!(total.preemptions, 3);
+        assert_eq!(total.cancelled_tokens, 3);
+        assert_eq!(total.peak_concurrency, 4);
+        assert_eq!(total.finish.total(), 2);
+        assert_eq!(total.finish.cancelled, 1);
+        assert_eq!(total.kv.as_ref().unwrap().blocks_total, 16);
+        assert_eq!(total.step_ms.count(), 3);
+        assert_eq!(total.kv_occupancy.count(), 2);
+        assert_eq!(total.total_generated(), 30);
+    }
+
+    #[test]
+    fn snapshot_parses_with_all_sections() {
+        let mut m = ServeMetrics {
+            requests: vec![
+                req(1, 10, 0.0, 1.0, 5.0, 50.0),
+                req(2, 20, 0.0, 2.0, 9.0, 80.0),
+            ],
+            decode_steps: 30,
+            wall_s: 0.1,
+            preemptions: 2,
+            kv: Some(KvPoolStats {
+                blocks_total: 16,
+                blocks_in_use: 4,
+                peak_blocks_in_use: 12,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        m.finish.bump(FinishReason::MaxTokens);
+        m.step_ms.record(3.0);
+        m.kv_occupancy.record(0.75);
+        let parsed = Json::parse(&m.snapshot().to_string_pretty())
+            .expect("snapshot is valid JSON");
+        for key in [
+            "tokens_per_s",
+            "ttft_p50_ms",
+            "ttft_p99_ms",
+            "tpot_p50_ms",
+            "tpot_p99_ms",
+            "queue_delay_p50_ms",
+            "queue_delay_p99_ms",
+            "preemptions",
+            "finish",
+            "kv_pool",
+            "step_ms",
+            "kv_occupancy",
+        ] {
+            assert!(parsed.get(key).is_some(), "missing {}", key);
+        }
+        assert_eq!(
+            parsed.at(&["kv_pool", "blocks_total"]).and_then(|v| v.as_f64()),
+            Some(16.0)
+        );
+        assert_eq!(
+            parsed.at(&["step_ms", "count"]).and_then(|v| v.as_f64()),
+            Some(1.0)
+        );
+        let reqs = parsed.get("requests").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(
+            reqs[0].get("ttft_ms").and_then(|v| v.as_f64()),
+            Some(5.0)
+        );
     }
 
     #[test]

@@ -24,18 +24,38 @@
 //! * `metrics` — request latency + throughput + weight-traffic accounting
 //!   (Table 6's CUDA-time/speedup/peak-memory analogues), per-finish-
 //!   reason counts and cancelled-token waste, plus block-pool occupancy /
-//!   prefix-hit / preemption counters for paged serving.
+//!   prefix-hit / preemption counters for paged serving. Request
+//!   timelines are epoch-relative milliseconds (enqueued → admitted →
+//!   first token → finished), so TTFT decomposes into queue delay +
+//!   prefill, TPOT measures steady-state decode cadence, and everything
+//!   serializes via [`ServeMetrics::snapshot`].
 //! * `server` — a threaded front: submit requests from any thread,
 //!   consume a per-request `TokenEvent` stream, cancel via the returned
 //!   handle; a dedicated engine thread owns the (non-Send) runtime and
 //!   drains up to `ServeOptions::serve_window` requests per round.
+//!
+//! ## Observability flow
+//!
+//! The serve path is instrumented end to end on `crate::obs`: the
+//! scheduler emits spans/instants per step (`sched.plan`,
+//! `backend.step`, `sched.sample`, admit/preempt/reject markers), the
+//! engine its per-layer phases, the paged pool its CoW/eviction/
+//! preemption events, and the PJRT runtime its dispatches — all into a
+//! thread-local ring recorder exportable as Chrome `trace_event` JSON
+//! (`serve --trace-out`). In parallel, every round records step
+//! latencies and KV occupancy into `obs::hist` histograms carried on
+//! [`ServeMetrics`]; rounds roll up with `ServeMetrics::merge_round`
+//! (histograms merge exactly) and export with `snapshot()`
+//! (`--metrics-out`). The open-loop traffic harness (`bench::traffic`,
+//! `benches/serve_traffic.rs`) drives this whole pipeline and distills
+//! it to `BENCH_serve.json`: engine → sink → snapshot → BENCH_serve.
 
 pub mod metrics;
 pub mod pipeline;
 pub mod serve;
 pub mod server;
 
-pub use metrics::{FinishCounts, ServeMetrics};
+pub use metrics::{FinishCounts, RequestMetrics, ServeMetrics};
 pub use pipeline::{calibrate, quantize_model, Calibration, QuantEngine};
 pub use serve::{
     serve, serve_events, serve_with, CancelHandle, DecodeBackend,

@@ -91,7 +91,9 @@ use crate::model::forward::{
 use crate::model::{LayerWeights, ModelConfig, QuantizedModel, WeightStore};
 use crate::runtime::{HostTensor, Manifest, Runtime};
 
-use super::metrics::{FinishCounts, RequestMetrics, ServeMetrics};
+use super::metrics::{rel_ms, FinishCounts, RequestMetrics, ServeMetrics};
+use crate::obs::hist::Histogram;
+use crate::obs::trace;
 
 pub use crate::model::forward::SamplingParams;
 
@@ -222,6 +224,11 @@ pub struct GenRequest {
     pub sampling: SamplingParams,
     pub stop: StopCriteria,
     pub cancel: CancelHandle,
+    /// when the request entered the system (set by
+    /// [`GenRequest::mark_submitted`], e.g. at `ServerHandle::submit`).
+    /// Queue delay and TTFT measure from here; unset requests measure
+    /// from the serve round's start.
+    pub submitted: Option<Instant>,
 }
 
 impl GenRequest {
@@ -231,7 +238,14 @@ impl GenRequest {
         sampling: SamplingParams,
         stop: StopCriteria,
     ) -> GenRequest {
-        GenRequest { id, prompt, sampling, stop, cancel: CancelHandle::new() }
+        GenRequest {
+            id,
+            prompt,
+            sampling,
+            stop,
+            cancel: CancelHandle::new(),
+            submitted: None,
+        }
     }
 
     /// The historical `{id, prompt, max_new}` greedy request — argmax
@@ -247,6 +261,13 @@ impl GenRequest {
 
     pub fn cancel_handle(&self) -> CancelHandle {
         self.cancel.clone()
+    }
+
+    /// Stamp the enqueue time (idempotent — the first stamp wins).
+    pub fn mark_submitted(&mut self) {
+        if self.submitted.is_none() {
+            self.submitted = Some(Instant::now());
+        }
     }
 }
 
@@ -458,6 +479,7 @@ struct Queued {
 fn finish_queued(
     q: Queued,
     why: FinishReason,
+    epoch: Instant,
     outcomes: &mut Vec<GenOutcome>,
     all_metrics: &mut Vec<RequestMetrics>,
     finish: &mut FinishCounts,
@@ -467,11 +489,12 @@ fn finish_queued(
         id: q.req.id,
         prompt_tokens: q.req.prompt.len(),
         generated_tokens: q.generated.len(),
-        enqueued: Instant::now(),
-        first_token: None,
-        finished: None,
+        enqueued_ms: rel_ms(epoch, q.req.submitted.unwrap_or(epoch)),
+        admitted_ms: None,
+        first_token_ms: None,
+        finished_ms: None,
     });
-    m.finished = Some(Instant::now());
+    m.finished_ms = Some(rel_ms(epoch, Instant::now()));
     finish.bump(why);
     let out = GenOutcome { id: q.req.id, tokens: q.generated, finish: why };
     sink(TokenEvent::Done(out.clone()));
@@ -511,6 +534,7 @@ pub fn serve_events(
     let nslots = backend.slots();
     let ctx = backend.cfg().ctx;
     let max_chunk = backend.max_chunk().max(1);
+    // serve epoch: every RequestMetrics offset is relative to this
     let t_start = Instant::now();
     let total_reqs = requests.len();
     let mut queue: std::collections::VecDeque<Queued> = requests
@@ -537,6 +561,8 @@ pub fn serve_events(
     let mut preemptions = 0usize;
     let mut peak_concurrency = 0usize;
     let mut stalls = 0usize;
+    let mut step_ms = Histogram::new();
+    let mut kv_occupancy = Histogram::new();
 
     // finish an active slot: release its KV, trim the output, emit Done
     macro_rules! finish_slot {
@@ -546,7 +572,7 @@ pub fn serve_events(
             let why: FinishReason = $why;
             let mut m = st.metrics;
             m.generated_tokens = st.generated.len();
-            m.finished = Some(Instant::now());
+            m.finished_ms = Some(rel_ms(t_start, Instant::now()));
             finish.bump(why);
             if why == FinishReason::Cancelled {
                 cancelled_tokens += st.generated.len();
@@ -581,6 +607,7 @@ pub fn serve_events(
                 finish_queued(
                     q,
                     FinishReason::Cancelled,
+                    t_start,
                     &mut outcomes,
                     &mut all_metrics,
                     &mut finish,
@@ -592,6 +619,8 @@ pub fn serve_events(
         }
 
         // admit in FIFO order; a paged backend may refuse (pool full)
+        let mut admitted_n = 0usize;
+        let mut prefix_skipped = 0usize;
         for si in 0..nslots {
             if slots[si].is_some() {
                 continue;
@@ -613,15 +642,27 @@ pub fn serve_events(
                         "prefix hit must leave the last prompt token"
                     );
                     let q = queue.pop_front().expect("front checked");
-                    let metrics =
-                        q.metrics.clone().unwrap_or(RequestMetrics {
+                    let mut metrics =
+                        q.metrics.unwrap_or(RequestMetrics {
                             id: q.req.id,
                             prompt_tokens: q.req.prompt.len(),
                             generated_tokens: q.generated.len(),
-                            enqueued: Instant::now(),
-                            first_token: None,
-                            finished: None,
+                            enqueued_ms: rel_ms(
+                                t_start,
+                                q.req.submitted.unwrap_or(t_start),
+                            ),
+                            admitted_ms: None,
+                            first_token_ms: None,
+                            finished_ms: None,
                         });
+                    // first admission only — a preempted request keeps
+                    // its original queue-delay measurement
+                    if metrics.admitted_ms.is_none() {
+                        metrics.admitted_ms =
+                            Some(rel_ms(t_start, Instant::now()));
+                    }
+                    admitted_n += 1;
+                    prefix_skipped += cached;
                     slots[si] = Some(SlotState {
                         req: q.req,
                         prompt,
@@ -633,6 +674,15 @@ pub fn serve_events(
                 None => break,
             }
         }
+        if admitted_n > 0 {
+            trace::instant(
+                "sched.admit",
+                &[
+                    ("n", admitted_n as f64),
+                    ("prefix_skipped", prefix_skipped as f64),
+                ],
+            );
+        }
         if slots.iter().all(|s| s.is_none()) {
             if queue.is_empty() {
                 break;
@@ -643,9 +693,11 @@ pub fn serve_events(
             stalls += 1;
             if stalls > queue.len() + 1 {
                 let q = queue.pop_front().expect("queue nonempty");
+                trace::instant("sched.reject", &[("id", q.req.id as f64)]);
                 finish_queued(
                     q,
                     FinishReason::Rejected,
+                    t_start,
                     &mut outcomes,
                     &mut all_metrics,
                     &mut finish,
@@ -664,16 +716,23 @@ pub fn serve_events(
         // decoding slots always take their single position.
         let mut need = vec![0usize; nslots];
         let mut budget = opts.prefill_chunk;
-        for (si, slot) in slots.iter().enumerate() {
-            let Some(st) = slot else { continue };
-            if st.prompt_idx < st.prompt.len() {
-                let remaining = st.prompt.len() - st.prompt_idx;
-                let cap = remaining.min(max_chunk).min(budget.max(1));
-                let take = backend.plan_chunk(cap).clamp(1, cap);
-                budget = budget.saturating_sub(take);
-                need[si] = take;
-            } else {
-                need[si] = 1;
+        {
+            let _sp = trace::span("sched.plan");
+            for (si, slot) in slots.iter().enumerate() {
+                let Some(st) = slot else { continue };
+                if st.prompt_idx < st.prompt.len() {
+                    let remaining = st.prompt.len() - st.prompt_idx;
+                    let cap = remaining.min(max_chunk).min(budget.max(1));
+                    let take = backend.plan_chunk(cap).clamp(1, cap);
+                    budget = budget.saturating_sub(take);
+                    need[si] = take;
+                    trace::instant(
+                        "sched.chunk",
+                        &[("slot", si as f64), ("take", take as f64)],
+                    );
+                } else {
+                    need[si] = 1;
+                }
             }
         }
 
@@ -683,6 +742,10 @@ pub fn serve_events(
             let st = slots[vi].take().expect("victim slot was active");
             need[vi] = 0;
             preemptions += 1;
+            trace::instant(
+                "sched.preempt",
+                &[("slot", vi as f64), ("id", st.req.id as f64)],
+            );
             let mut m = st.metrics;
             m.generated_tokens = st.generated.len();
             queue.push_front(Queued {
@@ -698,9 +761,14 @@ pub fn serve_events(
             stalls += 1;
             if stalls > total_reqs + 2 {
                 if let Some(q) = queue.pop_front() {
+                    trace::instant(
+                        "sched.reject",
+                        &[("id", q.req.id as f64)],
+                    );
                     finish_queued(
                         q,
                         FinishReason::Rejected,
+                        t_start,
                         &mut outcomes,
                         &mut all_metrics,
                         &mut finish,
@@ -737,13 +805,30 @@ pub fn serve_events(
             }
         }
 
-        let logits = backend.step(&work)?;
+        let t_step = Instant::now();
+        let logits = {
+            let _sp = trace::span("backend.step");
+            backend.step(&work)?
+        };
+        step_ms.record(t_step.elapsed().as_secs_f64() * 1e3);
         debug_assert_eq!(logits.len(), work.len());
         steps += 1;
         peak_concurrency = peak_concurrency.max(work.len());
+        if trace::enabled() {
+            trace::counter("sched.active", work.len() as f64);
+            trace::counter("sched.queue", queue.len() as f64);
+        }
+        if let Some(st) = backend.pool_stats() {
+            if st.blocks_total > 0 {
+                let occ = st.blocks_in_use as f64 / st.blocks_total as f64;
+                kv_occupancy.record(occ);
+                trace::counter("kv.occupancy", occ);
+            }
+        }
 
         // consume outputs: the sampler stage turns each logits row into
         // the next token (or a finish decision) per the slot's params
+        let _sp_sample = trace::span("sched.sample");
         for (wi, wk) in work.iter().enumerate() {
             let si = wk.slot;
             let mut done: Option<(FinishReason, usize)> = None;
@@ -763,8 +848,9 @@ pub fn serve_events(
                     let mut push = |st: &mut SlotState, tok: i32| {
                         st.generated.push(tok);
                         st.metrics.generated_tokens = st.generated.len();
-                        if st.metrics.first_token.is_none() {
-                            st.metrics.first_token = Some(Instant::now());
+                        if st.metrics.first_token_ms.is_none() {
+                            st.metrics.first_token_ms =
+                                Some(rel_ms(t_start, Instant::now()));
                         }
                         sink(TokenEvent::Token { id: st.req.id, tok });
                     };
@@ -813,6 +899,8 @@ pub fn serve_events(
         cancelled_tokens,
         peak_concurrency,
         kv: backend.pool_stats(),
+        step_ms,
+        kv_occupancy,
     };
     outcomes.sort_by_key(|r| r.id);
     Ok((outcomes, metrics))
@@ -1276,12 +1364,17 @@ impl<'a> HloBackend<'a> {
         graph: &str,
         head: &[HostTensor],
     ) -> Result<Vec<HostTensor>, String> {
-        let out = match &self.resident {
-            Some(bufs) => self.rt.run_with_resident(graph, head, bufs)?,
-            None => {
-                let mut inputs: Vec<&HostTensor> = head.iter().collect();
-                inputs.extend(self.weights.iter());
-                self.rt.run_refs(graph, &inputs)?
+        let out = {
+            let _sp = trace::span("hlo.dispatch");
+            match &self.resident {
+                Some(bufs) => {
+                    self.rt.run_with_resident(graph, head, bufs)?
+                }
+                None => {
+                    let mut inputs: Vec<&HostTensor> = head.iter().collect();
+                    inputs.extend(self.weights.iter());
+                    self.rt.run_refs(graph, &inputs)?
+                }
             }
         };
         if out.len() != 3 {
@@ -1390,6 +1483,10 @@ impl<'a> HloBackend<'a> {
                 .or_else(|| self.prefill.last())
                 .cloned()
                 .expect("prefill family checked nonempty");
+            trace::instant(
+                "hlo.chunk",
+                &[("chunk", chunk as f64), ("longest", longest as f64)],
+            );
             let mut tokens = vec![0i32; self.b * chunk];
             let mut pos = vec![scratch_pos; self.b];
             let mut last = vec![0i32; self.b];

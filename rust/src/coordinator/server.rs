@@ -123,17 +123,7 @@ impl ServerHandle {
                 }
                 if !batch.is_empty() {
                     let m = engine_loop(batch);
-                    total.requests.extend(m.requests);
-                    total.decode_steps += m.decode_steps;
-                    total.prompt_positions += m.prompt_positions;
-                    total.wall_s += m.wall_s;
-                    total.weight_bytes_per_step = m.weight_bytes_per_step;
-                    total.kv_bytes_per_step = m.kv_bytes_per_step;
-                    total.preemptions += m.preemptions;
-                    total.finish.merge(&m.finish);
-                    total.cancelled_tokens += m.cancelled_tokens;
-                    total.peak_concurrency =
-                        total.peak_concurrency.max(m.peak_concurrency);
+                    total.merge_round(m);
                 }
                 if let Some(s) = shutdown {
                     let _ = s.send(total.clone());
@@ -160,6 +150,21 @@ impl ServerHandle {
             .next_id
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let req = GenRequest::new(id, prompt, sampling, stop);
+        self.submit_request(req)
+    }
+
+    /// Submit a pre-built [`GenRequest`] (caller-chosen id — the traffic
+    /// harness keys its per-class bookkeeping on ids). The enqueue time
+    /// is stamped here (first stamp wins), so queue delay covers the
+    /// whole wait including micro-batch windows the request missed.
+    pub fn submit_request(
+        &self,
+        mut req: GenRequest,
+    ) -> (Receiver<TokenEvent>, CancelHandle) {
+        req.mark_submitted();
+        // keep auto-assigned ids disjoint from caller-chosen ones
+        self.next_id
+            .fetch_max(req.id + 1, std::sync::atomic::Ordering::Relaxed);
         let cancel = req.cancel_handle();
         let (tx, rx) = mpsc::channel();
         let _ = self.tx.send(Job::Run(req, tx));

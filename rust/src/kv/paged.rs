@@ -24,6 +24,7 @@
 //!    index stay cached until evicted.
 
 use crate::model::forward::{KvSeq, SeqAccess};
+use crate::obs::trace;
 
 use super::pool::BlockPool;
 use super::prefix::PrefixIndex;
@@ -131,6 +132,9 @@ impl PagedKv {
         }
         self.prefix_lookup_tokens += prompt.len();
         self.prefix_hit_tokens += hit;
+        if hit > 0 {
+            trace::instant("kv.prefix_hit", &[("tokens", hit as f64)]);
+        }
         self.clock += 1;
         self.slots[slot] = Some(Seq {
             blocks,
@@ -161,6 +165,7 @@ impl PagedKv {
         let pool = &self.pool;
         let victim = self.index.evict_lru(|b| pool.refcount(b) == 1)?;
         self.evictions += 1;
+        trace::instant("kv.evict", &[("block", victim as f64)]);
         let freed = self.pool.release(victim);
         debug_assert!(freed, "evicted block must become free");
         self.store.clear(victim);
@@ -195,6 +200,10 @@ impl PagedKv {
                             .last_mut()
                             .unwrap() = dst;
                         self.cow_copies += 1;
+                        trace::instant(
+                            "kv.cow",
+                            &[("slot", slot as f64)],
+                        );
                     }
                     None => return false,
                 }
@@ -241,6 +250,7 @@ impl PagedKv {
             let victim = *alive.last().unwrap();
             self.release(victim);
             self.preemptions += 1;
+            trace::instant("kv.preempt", &[("slot", victim as f64)]);
             victims.push(victim);
             alive.pop();
             // if the victim was `slot` itself the loop index now points

@@ -76,6 +76,26 @@
 //! `GenOutcome` and a `FinishReason`, tallied per reason (plus
 //! cancelled-token waste) in `ServeMetrics`.
 //!
+//! ## Observability: tracing, histograms, and the traffic harness
+//!
+//! The `obs` module is the scoreboard layer. `obs::trace` records
+//! per-step spans (engine phases, backend dispatch, KV CoW/eviction/
+//! preemption, scheduler decisions) into a thread-local ring buffer and
+//! exports Chrome `trace_event` JSON (`serve --trace-out trace.json`);
+//! when disabled every site costs one thread-local bool check.
+//! `obs::hist` is the shared metrics core: a global-layout log-scale
+//! histogram (exact merges, quantiles within one bucket of exact), the
+//! nearest-rank `percentile_exact` all percentile math routes through,
+//! and a counter/gauge registry. `ServeMetrics` builds on it — TTFT /
+//! TPOT / queue-delay / step-latency p50/p99 and KV-occupancy-over-time
+//! — and snapshots to machine-readable JSON (`--metrics-out`). On top
+//! sits the open-loop traffic harness (`bench::traffic` +
+//! `benches/serve_traffic.rs` + the `traffic` subcommand): Poisson or
+//! bursty arrivals over a mixed scenario pool with per-class SLOs,
+//! emitting goodput and tail latencies to `BENCH_serve.json`. The flow:
+//! engine → trace sink + step histograms → `ServeMetrics::snapshot` →
+//! `BENCH_serve.json`.
+//!
 //! See DESIGN.md for the system inventory and experiment index.
 
 // House style tolerated under `cargo clippy --all-targets -- -D
@@ -101,6 +121,7 @@ pub mod data;
 pub mod eval;
 pub mod kv;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod sparse;

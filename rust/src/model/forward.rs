@@ -24,6 +24,7 @@
 use crate::model::{
     LayerWeights, ModelConfig, QuantizedModel, Tensor, WeightStore,
 };
+use crate::obs::trace;
 use crate::quant::kernels::{self, LutScratch, PackedLut};
 use crate::quant::LutLayer;
 use crate::sparse::Csr;
@@ -822,6 +823,7 @@ impl<'w> Engine<'w> {
         if items.is_empty() {
             return Vec::new();
         }
+        let _sp_step = trace::span("engine.step");
         let cfg = self.cfg;
         let (d, h, hd) = (cfg.d, cfg.heads, cfg.head_dim());
         let scale = 1.0 / (hd as f32).sqrt();
@@ -924,12 +926,22 @@ impl<'w> Engine<'w> {
         jb.resize(jobs.len() * jstride, 0.0);
 
         for (li, lp) in layers.iter().enumerate() {
-            a.copy_from(x);
-            layer_norm_rows(a, lp.ln1_g, lp.ln1_b);
             let key = &keys[li];
-            apply_linear(lp, key, 0, a, q, rows_total, d, lut, &mut observer);
-            apply_linear(lp, key, 1, a, k, rows_total, d, lut, &mut observer);
-            apply_linear(lp, key, 2, a, v, rows_total, d, lut, &mut observer);
+            {
+                let _sp = trace::span("engine.qkv");
+                a.copy_from(x);
+                layer_norm_rows(a, lp.ln1_g, lp.ln1_b);
+                apply_linear(
+                    lp, key, 0, a, q, rows_total, d, lut, &mut observer,
+                );
+                apply_linear(
+                    lp, key, 1, a, k, rows_total, d, lut, &mut observer,
+                );
+                apply_linear(
+                    lp, key, 2, a, v, rows_total, d, lut, &mut observer,
+                );
+            }
+            let sp_kv = trace::span("engine.kv");
 
             // append this step's K/V rows (chunk rows staged into one
             // contiguous buffer per (item, head) -> one write_rows
@@ -977,6 +989,9 @@ impl<'w> Engine<'w> {
                     }
                 });
             }
+
+            drop(sp_kv);
+            let sp_attn = trace::span("engine.attn");
 
             // causal in-step attention: query row t of item j attends
             // over positions 0..=pos[j]+t — identical per-row op order
@@ -1048,6 +1063,8 @@ impl<'w> Engine<'w> {
 
             apply_linear(lp, key, 3, att, o, rows_total, d, lut, &mut observer);
             x.add_assign(o);
+            drop(sp_attn);
+            let _sp_mlp = trace::span("engine.mlp");
             a.copy_from(x);
             layer_norm_rows(a, lp.ln2_g, lp.ln2_b);
             apply_linear(
@@ -1072,6 +1089,7 @@ impl<'w> Engine<'w> {
             seqs.with_seq(it.seq, &mut |s| s.advance(c));
         }
 
+        let _sp_logits = trace::span("engine.logits");
         layer_norm_rows(x, ln_f_g, ln_f_b);
         // tied head straight off the borrowed embedding tensor, only for
         // the rows the plan asked logits for

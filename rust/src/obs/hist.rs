@@ -1,0 +1,522 @@
+//! Shared latency statistics: one fixed-bucket log-scale [`Histogram`]
+//! layout for every streamed quantity (step latency, pool occupancy,
+//! harness TTFT/TPOT), the nearest-rank [`percentile_exact`] helper that
+//! every exact-sample percentile in the crate routes through (the
+//! ad-hoc copies that used to live in `coordinator/metrics.rs`,
+//! `util/timer.rs`, and the bench binaries are gone), a raw-sample
+//! [`Samples`] accumulator for best-of bench loops, and a small
+//! counter/gauge/histogram [`Registry`] for named metric sets.
+//!
+//! The bucket layout is global and never configured per histogram, so
+//! any two histograms merge exactly (bucket-wise addition — merge is
+//! associative and commutative by construction) and a quantile read is
+//! always within one bucket (< ~15% relative) of the exact sample
+//! quantile.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{self, Json};
+
+/// `q`-th percentile (0..=1) by nearest-rank (`ceil(q*n)`-th order
+/// statistic) over an unsorted sample — never below the true quantile,
+/// so tail numbers are not flattered. NaN on an empty sample.
+pub fn percentile_exact(vals: &[f64], q: f64) -> f64 {
+    if vals.is_empty() {
+        return f64::NAN;
+    }
+    let mut s = vals.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (s.len() as f64 * q).ceil() as usize;
+    s[rank.clamp(1, s.len()) - 1]
+}
+
+/// Finite numbers serialize as JSON numbers; NaN/inf (empty-sample
+/// percentiles) as `null` so every snapshot stays parseable.
+pub fn fnum(x: f64) -> Json {
+    if x.is_finite() {
+        json::num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// Buckets per decade: relative bucket width is `10^(1/16) ≈ 1.155`.
+const PER_DECADE: f64 = 16.0;
+/// Lower edge of bucket 1; everything at or below lands in bucket 0.
+const LO: f64 = 1e-3;
+/// 10 decades: `[1e-3, 1e7)` plus under/overflow end buckets — in
+/// milliseconds that spans 1 µs to ~3 h, in fractions it covers 0..1.
+pub const BUCKETS: usize = 161;
+
+fn bucket_of(v: f64) -> usize {
+    if !(v > LO) {
+        return 0; // underflow (and any non-finite negative garbage)
+    }
+    let b = ((v / LO).log10() * PER_DECADE).floor() as isize + 1;
+    (b.max(1) as usize).min(BUCKETS - 1)
+}
+
+/// Geometric midpoint of a bucket — what a quantile read reports.
+fn representative(bucket: usize) -> f64 {
+    if bucket == 0 {
+        return LO;
+    }
+    LO * 10f64.powf((bucket as f64 - 0.5) / PER_DECADE)
+}
+
+/// Fixed-bucket log-scale histogram. All histograms share one global
+/// bucket layout (see module docs), so `merge` is exact and
+/// associative. Counts are buckets; `min`/`max`/`sum` are tracked
+/// exactly so small samples still report sane edges.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Histogram {
+    counts: Vec<u64>, // allocated lazily on first record
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    pub fn from_values(vals: &[f64]) -> Histogram {
+        let mut h = Histogram::new();
+        for &v in vals {
+            h.record(v);
+        }
+        h
+    }
+
+    /// Record one value. Non-finite values are dropped.
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        if self.counts.is_empty() {
+            self.counts = vec![0; BUCKETS];
+        }
+        self.counts[bucket_of(v)] += 1;
+        if self.total == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.total += 1;
+        self.sum += v;
+    }
+
+    /// Bucket-wise addition — exact because the layout is global.
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.total == 0 {
+            return;
+        }
+        if self.counts.is_empty() {
+            self.counts = vec![0; BUCKETS];
+        }
+        for (c, &o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        if self.total == 0 {
+            self.min = other.min;
+            self.max = other.max;
+        } else {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Nearest-rank quantile over the buckets: the same rank rule as
+    /// [`percentile_exact`], so the reported bucket is exactly the one
+    /// the exact sample quantile falls into; the value is that bucket's
+    /// geometric midpoint, clamped to the observed `[min, max]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let rank = ((self.total as f64 * q).ceil() as u64)
+            .clamp(1, self.total);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return representative(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// `{count, mean, min, max, p50, p90, p99}` plus the nonzero
+    /// buckets as `[lower_edge, count]` pairs.
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| {
+                let lo = if i == 0 { 0.0 } else { representative(i) };
+                Json::Arr(vec![json::num(lo), json::num(c as f64)])
+            })
+            .collect();
+        json::obj(vec![
+            ("count", json::num(self.total as f64)),
+            ("mean", fnum(self.mean())),
+            ("min", fnum(self.min())),
+            ("max", fnum(self.max())),
+            ("p50", fnum(self.quantile(0.50))),
+            ("p90", fnum(self.quantile(0.90))),
+            ("p99", fnum(self.quantile(0.99))),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+}
+
+/// Raw-sample accumulator for the bench best-of loops: keeps every
+/// value, reports min/mean and exact nearest-rank percentiles.
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    vals: Vec<f64>,
+}
+
+impl Samples {
+    pub fn new() -> Samples {
+        Samples::default()
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.vals.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.vals
+    }
+
+    pub fn min(&self) -> f64 {
+        self.vals.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.vals.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.vals.is_empty() {
+            f64::NAN
+        } else {
+            self.vals.iter().sum::<f64>() / self.vals.len() as f64
+        }
+    }
+
+    pub fn percentile(&self, q: f64) -> f64 {
+        percentile_exact(&self.vals, q)
+    }
+}
+
+/// Named counters, gauges, and histograms — the aggregation surface the
+/// traffic harness rolls per-class stats into and the snapshot format
+/// metric sets export as.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Set a gauge to its latest value.
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Record into a named histogram (created on first use).
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.hists.entry(name.to_string()).or_default().record(v);
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&Histogram> {
+        self.hists.get(name)
+    }
+
+    /// Merge another registry in: counters add, gauges take the other's
+    /// value, histograms merge bucket-wise.
+    pub fn merge(&mut self, other: &Registry) {
+        for (k, &v) in &other.counters {
+            self.inc(k, v);
+        }
+        for (k, &v) in &other.gauges {
+            self.gauge(k, v);
+        }
+        for (k, h) in &other.hists {
+            self.hists.entry(k.clone()).or_default().merge(h);
+        }
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let m = |it: &BTreeMap<String, Json>| Json::Obj(it.clone());
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .iter()
+            .map(|(k, &v)| (k.clone(), json::num(v as f64)))
+            .collect();
+        let gauges: BTreeMap<String, Json> = self
+            .gauges
+            .iter()
+            .map(|(k, &v)| (k.clone(), fnum(v)))
+            .collect();
+        let hists: BTreeMap<String, Json> = self
+            .hists
+            .iter()
+            .map(|(k, h)| (k.clone(), h.to_json()))
+            .collect();
+        json::obj(vec![
+            ("counters", m(&counters)),
+            ("gauges", m(&gauges)),
+            ("hists", m(&hists)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    #[test]
+    fn nearest_rank_matches_old_semantics() {
+        // the exact values the old coordinator/metrics.rs helper pinned
+        assert!((percentile_exact(&[5.0, 9.0], 0.50) - 5.0).abs() < 1e-12);
+        assert!((percentile_exact(&[5.0, 9.0], 0.95) - 9.0).abs() < 1e-12);
+        assert!(percentile_exact(&[], 0.5).is_nan());
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile_exact(&v, 0.5), 2.0);
+        assert_eq!(percentile_exact(&v, 0.95), 4.0);
+        assert_eq!(percentile_exact(&v, 0.0), 1.0);
+        assert_eq!(percentile_exact(&v, 1.0), 4.0);
+    }
+
+    #[test]
+    fn histogram_basics() {
+        let mut h = Histogram::new();
+        assert!(h.is_empty());
+        assert!(h.quantile(0.5).is_nan());
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            h.record(v);
+        }
+        h.record(f64::NAN); // dropped
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 4.0);
+        assert!((h.mean() - 2.5).abs() < 1e-12);
+        // p50 lands in the bucket containing 2.0
+        assert_eq!(bucket_of(h.quantile(0.5)), bucket_of(2.0));
+    }
+
+    #[test]
+    fn edge_values_stay_in_range() {
+        let mut h = Histogram::new();
+        for v in [0.0, -5.0, 1e-9, 1e12, f64::INFINITY] {
+            h.record(v);
+        }
+        // inf dropped; the rest land in the end buckets
+        assert_eq!(h.count(), 4);
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(-5.0), 0);
+        assert_eq!(bucket_of(1e12), BUCKETS - 1);
+        assert!(h.quantile(0.99) <= h.max());
+    }
+
+    #[test]
+    fn bucket_layout_is_monotone() {
+        let mut prev = 0usize;
+        let mut v = 1e-4;
+        while v < 1e8 {
+            let b = bucket_of(v);
+            assert!(b >= prev, "bucket_of must be monotone at {}", v);
+            prev = b;
+            v *= 1.07;
+        }
+        // representatives sit inside their own bucket
+        for b in 1..BUCKETS - 1 {
+            assert_eq!(bucket_of(representative(b)), b, "bucket {}", b);
+        }
+    }
+
+    /// Property: merge is associative (and order-independent) because
+    /// the layout is global — (a+b)+c == a+(b+c) bucket for bucket.
+    #[test]
+    fn prop_merge_associative() {
+        prop::check("hist merge associative", 11, 50, |rng, _| {
+            let mk = |rng: &mut crate::util::rng::Rng| {
+                let n = rng.below(30) as usize;
+                let mut h = Histogram::new();
+                for _ in 0..n {
+                    h.record(rng.uniform() * 10f64.powi(rng.below(8) as i32 - 3));
+                }
+                h
+            };
+            let (a, b, c) = (mk(rng), mk(rng), mk(rng));
+            let mut left = a.clone();
+            left.merge(&b);
+            left.merge(&c);
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut right = a.clone();
+            right.merge(&bc);
+            prop_assert!(left == right, "merge not associative");
+            prop_assert!(
+                left.count() == a.count() + b.count() + c.count(),
+                "count not additive"
+            );
+            Ok(())
+        });
+    }
+
+    /// Property: p50/p99 reads land within one bucket of the exact
+    /// nearest-rank sample percentile.
+    #[test]
+    fn prop_quantile_within_one_bucket_of_exact() {
+        prop::check("hist quantile accuracy", 12, 50, |rng, _| {
+            let n = rng.below(200) as usize + 1;
+            let vals: Vec<f64> = (0..n)
+                .map(|_| {
+                    (rng.uniform() + 1e-6)
+                        * 10f64.powi(rng.below(7) as i32 - 2)
+                })
+                .collect();
+            let h = Histogram::from_values(&vals);
+            for q in [0.5, 0.99] {
+                let exact = percentile_exact(&vals, q);
+                let approx = h.quantile(q);
+                let (be, ba) =
+                    (bucket_of(exact) as isize, bucket_of(approx) as isize);
+                prop_assert!(
+                    (be - ba).abs() <= 1,
+                    "q{} exact {} (bucket {}) vs hist {} (bucket {})",
+                    q,
+                    exact,
+                    be,
+                    approx,
+                    ba
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn samples_accumulator() {
+        let mut s = Samples::new();
+        assert!(s.is_empty());
+        for v in [3.0, 1.0, 2.0] {
+            s.push(v);
+        }
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 3.0);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(s.percentile(0.5), 2.0);
+    }
+
+    #[test]
+    fn registry_roundtrip() {
+        let mut r = Registry::new();
+        r.inc("reqs", 2);
+        r.inc("reqs", 3);
+        r.gauge("occupancy", 0.5);
+        r.observe("ttft_ms", 10.0);
+        r.observe("ttft_ms", 20.0);
+        assert_eq!(r.counter("reqs"), 5);
+        assert_eq!(r.gauge_value("occupancy"), Some(0.5));
+        assert_eq!(r.hist("ttft_ms").unwrap().count(), 2);
+        let mut other = Registry::new();
+        other.inc("reqs", 1);
+        other.gauge("occupancy", 0.75);
+        other.observe("ttft_ms", 30.0);
+        r.merge(&other);
+        assert_eq!(r.counter("reqs"), 6);
+        assert_eq!(r.gauge_value("occupancy"), Some(0.75));
+        assert_eq!(r.hist("ttft_ms").unwrap().count(), 3);
+        // snapshot is valid JSON with the three sections
+        let js = r.snapshot();
+        let parsed =
+            Json::parse(&js.to_string_pretty()).expect("snapshot parses");
+        assert!(parsed.get("counters").is_some());
+        assert!(parsed.get("gauges").is_some());
+        assert!(parsed.at(&["hists", "ttft_ms", "count"]).is_some());
+    }
+
+    #[test]
+    fn fnum_guards_non_finite() {
+        assert_eq!(fnum(f64::NAN), Json::Null);
+        assert_eq!(fnum(f64::INFINITY), Json::Null);
+        assert!(matches!(fnum(1.5), Json::Num(_)));
+    }
+}

@@ -1,0 +1,29 @@
+//! Observability: the scoreboard layer for the serving stack.
+//!
+//! Two halves, one contract — *always compiled, near-zero cost when
+//! off*:
+//!
+//! - [`trace`] — structured step tracing. The scheduler
+//!   ([`crate::coordinator::serve`]), the dense engine
+//!   ([`crate::model::forward`]), the paged KV pool
+//!   ([`crate::kv::paged`]), and the PJRT dispatch path
+//!   ([`crate::runtime`]) emit spans/instants/counters through a
+//!   thread-local ring recorder; `serve --trace-out trace.json` exports
+//!   Chrome `trace_event` JSON viewable in Perfetto. Disabled, every
+//!   site is one thread-local bool check.
+//! - [`hist`] — the metrics core. One global log-scale histogram
+//!   layout (exact merges, quantiles within a bucket of exact), the
+//!   shared nearest-rank [`hist::percentile_exact`] every percentile in
+//!   the crate routes through, and a counter/gauge/histogram
+//!   [`hist::Registry`].
+//!
+//! Data flows: engine/backend/scheduler → trace sink + per-step
+//! histograms → [`crate::coordinator::ServeMetrics::snapshot`] →
+//! `BENCH_serve.json` (the open-loop traffic harness,
+//! `bench::traffic` + `benches/serve_traffic.rs`).
+
+pub mod hist;
+pub mod trace;
+
+pub use hist::{percentile_exact, Histogram, Registry, Samples};
+pub use trace::{span, SpanGuard, TraceEvent};

@@ -1,0 +1,395 @@
+//! Step-level tracing: a thread-local ring-buffer recorder with Chrome
+//! `trace_event` JSON export.
+//!
+//! Design constraints, in priority order:
+//!
+//! 1. **Near-zero cost when disabled.** Every emit site goes through a
+//!    single thread-local `Cell<bool>` check ([`enabled`]); a disabled
+//!    [`span`] returns an unarmed guard whose `Drop` is a branch on a
+//!    bool. No allocation, no clock read, no locking on the cold path.
+//! 2. **Balanced spans by construction.** [`span`] returns an RAII
+//!    [`SpanGuard`] — the `End` event is emitted on drop, so early
+//!    returns (`?` on a backend error, preemption mid-plan,
+//!    cancellation) still close every open span.
+//! 3. **Bounded memory.** Events land in a fixed-capacity ring
+//!    (drop-oldest); the count of dropped events is reported alongside
+//!    the export so a truncated trace is never mistaken for a quiet one.
+//!
+//! Tracing is **per-thread**: the recorder lives in a thread-local, so
+//! the thread running the serve loop is the one that must call
+//! [`enable`] and [`take`]. `enable` is idempotent (it keeps an already
+//! installed recorder), which lets an engine-thread closure call it
+//! every round and a coordinating thread collect batches via a shared
+//! buffer. Export with [`export_chrome`] / [`write_chrome`]; the output
+//! loads directly in `chrome://tracing` / Perfetto.
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+
+/// Default ring capacity: 64k events ≈ a few thousand decode steps of
+/// fully instrumented serving.
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+/// Chrome `trace_event` phase. `Begin`/`End` become duration spans,
+/// `Instant` a point marker, `Counter` a value track.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Begin,
+    End,
+    Instant,
+    Counter,
+}
+
+impl Phase {
+    pub fn ph(self) -> &'static str {
+        match self {
+            Phase::Begin => "B",
+            Phase::End => "E",
+            Phase::Instant => "i",
+            Phase::Counter => "C",
+        }
+    }
+}
+
+/// One recorded event. Names are `&'static str` so the hot path never
+/// allocates; numeric args keep payloads fixed-size.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    pub ph: Phase,
+    /// Microseconds since the recorder's epoch (install time).
+    pub ts_us: f64,
+    pub args: Vec<(&'static str, f64)>,
+}
+
+struct Recorder {
+    epoch: Instant,
+    buf: VecDeque<TraceEvent>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl Recorder {
+    fn push(&mut self, ev: TraceEvent) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(ev);
+    }
+}
+
+thread_local! {
+    static ENABLED: Cell<bool> = const { Cell::new(false) };
+    static RECORDER: RefCell<Option<Recorder>> = const { RefCell::new(None) };
+}
+
+/// Turn tracing on for the current thread. Idempotent: if a recorder is
+/// already installed its buffer (and epoch) are kept, so a serve-loop
+/// closure may call this every round without losing events.
+pub fn enable(capacity: usize) {
+    let cap = capacity.max(16);
+    RECORDER.with(|r| {
+        let mut r = r.borrow_mut();
+        if r.is_none() {
+            *r = Some(Recorder {
+                epoch: Instant::now(),
+                buf: VecDeque::with_capacity(cap.min(1 << 20)),
+                cap,
+                dropped: 0,
+            });
+        }
+    });
+    ENABLED.with(|e| e.set(true));
+}
+
+/// Turn tracing off and discard the recorder for the current thread.
+pub fn disable() {
+    ENABLED.with(|e| e.set(false));
+    RECORDER.with(|r| *r.borrow_mut() = None);
+}
+
+/// The one check every emit site makes first. `#[inline]` so a disabled
+/// instrumented build pays a thread-local bool read per site.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.with(|e| e.get())
+}
+
+fn emit(name: &'static str, ph: Phase, args: Vec<(&'static str, f64)>) {
+    RECORDER.with(|r| {
+        if let Some(rec) = r.borrow_mut().as_mut() {
+            let ts_us = rec.epoch.elapsed().as_secs_f64() * 1e6;
+            rec.push(TraceEvent {
+                name,
+                ph,
+                ts_us,
+                args,
+            });
+        }
+    });
+}
+
+/// RAII span: `Begin` is emitted on creation (when tracing is enabled),
+/// `End` on drop. An unarmed guard (tracing disabled) does nothing.
+#[must_use = "a span measures the scope it is bound to; binding to _ drops it immediately"]
+pub struct SpanGuard {
+    name: &'static str,
+    armed: bool,
+}
+
+/// Open a span covering the guard's scope.
+#[inline]
+pub fn span(name: &'static str) -> SpanGuard {
+    let armed = enabled();
+    if armed {
+        emit(name, Phase::Begin, Vec::new());
+    }
+    SpanGuard { name, armed }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        // Close even if tracing was disabled mid-span only when a
+        // recorder is still present; an armed Begin with the recorder
+        // gone has nothing to balance against, and export tolerates it.
+        if self.armed {
+            emit(self.name, Phase::End, Vec::new());
+        }
+    }
+}
+
+/// Point event with numeric args (e.g. `("tokens", 17.0)`).
+#[inline]
+pub fn instant(name: &'static str, args: &[(&'static str, f64)]) {
+    if enabled() {
+        emit(name, Phase::Instant, args.to_vec());
+    }
+}
+
+/// Counter track sample (e.g. queue depth, KV occupancy).
+#[inline]
+pub fn counter(name: &'static str, value: f64) {
+    if enabled() {
+        emit(name, Phase::Counter, vec![("value", value)]);
+    }
+}
+
+/// Drain the current thread's recorded events. Returns
+/// `(events, dropped_so_far)`; the recorder stays installed (with its
+/// epoch), so timestamps across successive takes share one timeline.
+pub fn take() -> (Vec<TraceEvent>, u64) {
+    RECORDER.with(|r| {
+        let mut r = r.borrow_mut();
+        match r.as_mut() {
+            Some(rec) => (rec.buf.drain(..).collect(), rec.dropped),
+            None => (Vec::new(), 0),
+        }
+    })
+}
+
+/// Render events as a Chrome `trace_event` JSON document
+/// (`{"traceEvents": [...], "displayTimeUnit": "ms", ...}`).
+pub fn export_chrome(events: &[TraceEvent], dropped: u64) -> Json {
+    let evs: Vec<Json> = events
+        .iter()
+        .map(|e| {
+            let mut fields = vec![
+                ("name", json::s(e.name)),
+                ("cat", json::s("ganq")),
+                ("ph", json::s(e.ph.ph())),
+                ("ts", json::num(e.ts_us)),
+                ("pid", json::num(0.0)),
+                ("tid", json::num(0.0)),
+            ];
+            if e.ph == Phase::Instant {
+                fields.push(("s", json::s("t"))); // thread-scoped marker
+            }
+            if !e.args.is_empty() {
+                let args: Vec<(&str, Json)> = e
+                    .args
+                    .iter()
+                    .map(|&(k, v)| (k, super::hist::fnum(v)))
+                    .collect();
+                fields.push(("args", json::obj(args)));
+            }
+            json::obj(fields)
+        })
+        .collect();
+    json::obj(vec![
+        ("traceEvents", Json::Arr(evs)),
+        ("displayTimeUnit", json::s("ms")),
+        (
+            "otherData",
+            json::obj(vec![("dropped", json::num(dropped as f64))]),
+        ),
+    ])
+}
+
+/// Drain the current thread's trace and write it to `path`.
+pub fn write_chrome(path: &std::path::Path) -> std::io::Result<(usize, u64)> {
+    let (events, dropped) = take();
+    let doc = export_chrome(&events, dropped);
+    std::fs::write(path, doc.to_string_pretty())?;
+    Ok((events.len(), dropped))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tracing state is thread-local; run each scenario on its own
+    // thread so tests can't interfere however the harness schedules
+    // them.
+    fn on_fresh_thread<F: FnOnce() + Send + 'static>(f: F) {
+        std::thread::spawn(f).join().unwrap();
+    }
+
+    #[test]
+    fn disabled_is_noop() {
+        on_fresh_thread(|| {
+            assert!(!enabled());
+            {
+                let _sp = span("never");
+                instant("nope", &[("x", 1.0)]);
+                counter("q", 3.0);
+            }
+            let (events, dropped) = take();
+            assert!(events.is_empty());
+            assert_eq!(dropped, 0);
+        });
+    }
+
+    #[test]
+    fn spans_balance_and_nest() {
+        on_fresh_thread(|| {
+            enable(DEFAULT_CAPACITY);
+            {
+                let _outer = span("outer");
+                instant("mark", &[("tokens", 5.0)]);
+                {
+                    let _inner = span("inner");
+                }
+                counter("depth", 1.0);
+            }
+            let (events, dropped) = take();
+            disable();
+            assert_eq!(dropped, 0);
+            let kinds: Vec<(&str, Phase)> =
+                events.iter().map(|e| (e.name, e.ph)).collect();
+            assert_eq!(
+                kinds,
+                vec![
+                    ("outer", Phase::Begin),
+                    ("mark", Phase::Instant),
+                    ("inner", Phase::Begin),
+                    ("inner", Phase::End),
+                    ("depth", Phase::Counter),
+                    ("outer", Phase::End),
+                ]
+            );
+            // timestamps are monotone non-decreasing
+            for w in events.windows(2) {
+                assert!(w[1].ts_us >= w[0].ts_us);
+            }
+        });
+    }
+
+    #[test]
+    fn early_return_still_closes_span() {
+        on_fresh_thread(|| {
+            enable(DEFAULT_CAPACITY);
+            fn fallible(fail: bool) -> Result<(), String> {
+                let _sp = span("fallible");
+                if fail {
+                    return Err("boom".into());
+                }
+                Ok(())
+            }
+            let _ = fallible(true);
+            let (events, _) = take();
+            disable();
+            assert_eq!(events.len(), 2);
+            assert_eq!(events[0].ph, Phase::Begin);
+            assert_eq!(events[1].ph, Phase::End);
+        });
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        on_fresh_thread(|| {
+            enable(16); // minimum capacity
+            for _ in 0..20 {
+                instant("tick", &[]);
+            }
+            let (events, dropped) = take();
+            disable();
+            assert_eq!(events.len(), 16);
+            assert_eq!(dropped, 4);
+        });
+    }
+
+    #[test]
+    fn enable_is_idempotent_across_rounds() {
+        on_fresh_thread(|| {
+            enable(DEFAULT_CAPACITY);
+            instant("round0", &[]);
+            enable(DEFAULT_CAPACITY); // must not clear the buffer
+            instant("round1", &[]);
+            let (events, _) = take();
+            // recorder survives take(); later events keep accumulating
+            instant("round2", &[]);
+            let (more, _) = take();
+            disable();
+            assert_eq!(events.len(), 2);
+            assert_eq!(more.len(), 1);
+            assert_eq!(more[0].name, "round2");
+        });
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        on_fresh_thread(|| {
+            enable(DEFAULT_CAPACITY);
+            {
+                let _sp = span("step");
+                instant("admit", &[("n", 2.0)]);
+            }
+            let (events, dropped) = take();
+            disable();
+            let doc = export_chrome(&events, dropped);
+            let parsed =
+                Json::parse(&doc.to_string_pretty()).expect("valid JSON");
+            let evs = parsed
+                .get("traceEvents")
+                .and_then(|e| e.as_arr())
+                .expect("traceEvents array");
+            assert_eq!(evs.len(), 3);
+            for ev in evs {
+                assert!(ev.get("name").and_then(|n| n.as_str()).is_some());
+                assert!(ev.get("ph").and_then(|p| p.as_str()).is_some());
+                assert!(ev.get("ts").and_then(|t| t.as_f64()).is_some());
+                assert!(ev.get("pid").is_some() && ev.get("tid").is_some());
+            }
+            // the instant carries scope + args
+            let inst = evs
+                .iter()
+                .find(|e| e.get("ph").and_then(|p| p.as_str()) == Some("i"))
+                .unwrap();
+            assert_eq!(inst.get("s").and_then(|s| s.as_str()), Some("t"));
+            assert_eq!(
+                inst.at(&["args", "n"]).and_then(|n| n.as_f64()),
+                Some(2.0)
+            );
+            assert_eq!(
+                parsed
+                    .at(&["otherData", "dropped"])
+                    .and_then(|d| d.as_f64()),
+                Some(0.0)
+            );
+        });
+    }
+}

@@ -12,6 +12,8 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::rc::Rc;
 
+use crate::obs::trace;
+
 pub use artifacts::{Dtype, GraphSpec, Manifest, TensorSpec};
 
 /// Host-side tensor value crossing the runtime boundary.
@@ -271,6 +273,7 @@ impl Runtime {
         name: &str,
         inputs: &[&HostTensor],
     ) -> Result<Vec<HostTensor>, String> {
+        let _sp = trace::span("pjrt.run");
         let spec = self.graph(name)?.clone();
         Self::check_inputs(&spec, inputs)?;
         let exe = self.executable(name)?;
@@ -299,6 +302,7 @@ impl Runtime {
         head: &[HostTensor],
         tail: &[xla::PjRtBuffer],
     ) -> Result<Vec<HostTensor>, String> {
+        let _sp = trace::span("pjrt.run");
         let exe = self.executable(name)?;
         let mut bufs: Vec<&xla::PjRtBuffer> = Vec::new();
         let head_bufs: Vec<xla::PjRtBuffer> = head

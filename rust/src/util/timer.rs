@@ -25,20 +25,6 @@ impl Stats {
     }
 }
 
-fn percentile(sorted: &[f64], q: f64) -> f64 {
-    if sorted.is_empty() {
-        return f64::NAN;
-    }
-    let pos = q * (sorted.len() - 1) as f64;
-    let lo = pos.floor() as usize;
-    let hi = pos.ceil() as usize;
-    if lo == hi {
-        sorted[lo]
-    } else {
-        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
-    }
-}
-
 /// Time `f` with `warmup` unrecorded runs then `iters` recorded runs.
 pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
     for _ in 0..warmup {
@@ -66,6 +52,9 @@ pub fn bench_for<F: FnMut()>(budget_s: f64, max_iters: usize, mut f: F) -> Stats
     summarize(&times)
 }
 
+/// Summary statistics over raw iteration times. Percentiles are
+/// nearest-rank via [`crate::obs::hist::percentile_exact`] — the one
+/// percentile definition shared by every bench and the serve metrics.
 pub fn summarize(times: &[f64]) -> Stats {
     let mut s: Vec<f64> = times.to_vec();
     s.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -77,8 +66,8 @@ pub fn summarize(times: &[f64]) -> Stats {
     Stats {
         iters: s.len(),
         mean_s: mean,
-        p50_s: percentile(&s, 0.5),
-        p95_s: percentile(&s, 0.95),
+        p50_s: crate::obs::hist::percentile_exact(&s, 0.5),
+        p95_s: crate::obs::hist::percentile_exact(&s, 0.95),
         min_s: s.first().copied().unwrap_or(f64::NAN),
         max_s: s.last().copied().unwrap_or(f64::NAN),
     }
@@ -153,7 +142,10 @@ mod tests {
         let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
         assert_eq!(s.iters, 4);
         assert!((s.mean_s - 2.5).abs() < 1e-12);
-        assert!((s.p50_s - 2.5).abs() < 1e-12);
+        // nearest-rank percentiles (shared with obs::hist): p50 of four
+        // samples is the 2nd order statistic, not an interpolated 2.5
+        assert!((s.p50_s - 2.0).abs() < 1e-12);
+        assert!((s.p95_s - 4.0).abs() < 1e-12);
         assert_eq!(s.min_s, 1.0);
         assert_eq!(s.max_s, 4.0);
     }

@@ -1,0 +1,228 @@
+//! Observability integration tests: the step-level trace stays
+//! well-formed (balanced, properly nested Begin/End spans; monotone
+//! timestamps; valid Chrome `trace_event` JSON) through the messy serve
+//! paths — preemption under KV pressure and mid-serve cancellation —
+//! and the metrics snapshot carries the full latency decomposition.
+//!
+//! Each `#[test]` runs on its own thread, so the thread-local ring
+//! recorder is naturally isolated between tests.
+
+use ganq::coordinator::{
+    serve, serve_events, FinishReason, GenRequest, KvStoreKind,
+    PagedNativeBackend, ServeOptions, TokenEvent,
+};
+use ganq::model::forward::Weights;
+use ganq::model::{ModelConfig, WeightStore};
+use ganq::obs::trace::{self, Phase};
+use ganq::util::json::Json;
+
+fn micro_store(seed: u64) -> WeightStore {
+    let cfg = ModelConfig::builtin("opt-micro").unwrap();
+    WeightStore::random("t", cfg, seed)
+}
+
+/// 4 greedy requests whose KV demand (15 positions = 4 blocks each at
+/// block size 4) cannot fit a 5-block pool concurrently, while any
+/// single request can — so the run must preempt yet still finishes.
+fn pressure_requests() -> Vec<GenRequest> {
+    (0..4)
+        .map(|i| GenRequest::greedy(i, vec![10 + i as i32, 20, 30], 12))
+        .collect()
+}
+
+#[test]
+fn trace_spans_balance_under_preemption_and_cancellation() {
+    trace::enable(1 << 20);
+    let store = micro_store(33);
+    let reqs = pressure_requests();
+    let cancel = reqs[3].cancel_handle();
+    let mut be = PagedNativeBackend::new(
+        Weights::Fp(&store),
+        4,
+        4,
+        5,
+        KvStoreKind::F32,
+    );
+    // cancel request 3 from inside the sink after its 2nd streamed token
+    // — same thread as the scheduler, so the cancel deterministically
+    // lands mid-serve and is honored at the next step boundary
+    let mut streamed3 = 0usize;
+    let (resp, m) = serve_events(
+        &mut be,
+        reqs,
+        ServeOptions::default(),
+        &mut |ev| {
+            if let TokenEvent::Token { id, .. } = &ev {
+                if *id == 3 {
+                    streamed3 += 1;
+                    if streamed3 == 2 {
+                        cancel.cancel();
+                    }
+                }
+            }
+        },
+    )
+    .unwrap();
+    let (events, dropped) = trace::take();
+    trace::disable();
+
+    // the run exercised both hard paths
+    assert!(m.preemptions > 0, "pool of 5 blocks must force preemption");
+    let r3 = resp.iter().find(|r| r.id == 3).unwrap();
+    assert_eq!(r3.finish, FinishReason::Cancelled);
+    assert!(m.finish.cancelled >= 1);
+
+    // ring never overflowed, timestamps are monotone, spans nest
+    assert_eq!(dropped, 0, "1M-event ring must not drop");
+    assert!(!events.is_empty());
+    let mut last_ts = f64::NEG_INFINITY;
+    let mut stack: Vec<&'static str> = Vec::new();
+    for ev in &events {
+        assert!(ev.ts_us >= last_ts, "timestamps monotone");
+        last_ts = ev.ts_us;
+        match ev.ph {
+            Phase::Begin => stack.push(ev.name),
+            Phase::End => {
+                let open = stack.pop().unwrap_or_else(|| {
+                    panic!("End({}) without a Begin", ev.name)
+                });
+                assert_eq!(open, ev.name, "spans close in LIFO order");
+            }
+            Phase::Instant | Phase::Counter => {}
+        }
+    }
+    assert!(stack.is_empty(), "unclosed spans: {:?}", stack);
+
+    // the expected phases appear: scheduler, backend, engine, kv events
+    let has = |name: &str, ph: Phase| {
+        events.iter().any(|e| e.name == name && e.ph == ph)
+    };
+    assert!(has("sched.plan", Phase::Begin));
+    assert!(has("backend.step", Phase::Begin));
+    assert!(has("sched.sample", Phase::Begin));
+    assert!(has("engine.step", Phase::Begin));
+    assert!(has("engine.attn", Phase::Begin));
+    assert!(has("sched.admit", Phase::Instant));
+    assert!(has("sched.preempt", Phase::Instant));
+    assert!(has("kv.preempt", Phase::Instant));
+    assert!(has("sched.active", Phase::Counter));
+    assert!(has("kv.occupancy", Phase::Counter));
+
+    // the Chrome export of the same events parses and is well-formed
+    let chrome = trace::export_chrome(&events, dropped);
+    let parsed =
+        Json::parse(&chrome.to_string_pretty()).expect("chrome JSON parses");
+    let evs = parsed
+        .get("traceEvents")
+        .and_then(|t| t.as_arr())
+        .expect("traceEvents array");
+    assert_eq!(evs.len(), events.len());
+    let mut jstack: Vec<String> = Vec::new();
+    for e in evs {
+        let name = e.get("name").and_then(|n| n.as_str()).expect("name");
+        let ph = e.get("ph").and_then(|p| p.as_str()).expect("ph");
+        assert!(e.get("ts").and_then(|t| t.as_f64()).is_some());
+        assert!(e.get("pid").is_some() && e.get("tid").is_some());
+        match ph {
+            "B" => jstack.push(name.to_string()),
+            "E" => assert_eq!(jstack.pop().as_deref(), Some(name)),
+            "i" => {
+                assert_eq!(
+                    e.get("s").and_then(|s| s.as_str()),
+                    Some("t"),
+                    "instants carry thread scope"
+                );
+            }
+            "C" => assert!(e.get("args").is_some()),
+            other => panic!("unexpected phase {:?}", other),
+        }
+    }
+    assert!(jstack.is_empty());
+    assert_eq!(
+        parsed.at(&["otherData", "dropped"]).and_then(|d| d.as_f64()),
+        Some(0.0)
+    );
+}
+
+#[test]
+fn disabled_tracing_records_nothing_across_serve() {
+    let store = micro_store(34);
+    let mut be = PagedNativeBackend::new(
+        Weights::Fp(&store),
+        4,
+        4,
+        5,
+        KvStoreKind::F32,
+    );
+    let (resp, _) = serve(&mut be, pressure_requests()).unwrap();
+    assert_eq!(resp.len(), 4);
+    let (events, dropped) = trace::take();
+    assert!(events.is_empty(), "no recorder installed, nothing recorded");
+    assert_eq!(dropped, 0);
+}
+
+#[test]
+fn metrics_snapshot_carries_step_and_occupancy_histograms() {
+    let store = micro_store(35);
+    let mut be = PagedNativeBackend::new(
+        Weights::Fp(&store),
+        4,
+        4,
+        5,
+        KvStoreKind::F32,
+    );
+    let (resp, m) = serve(&mut be, pressure_requests()).unwrap();
+    assert_eq!(resp.len(), 4);
+
+    // one step-latency sample per backend step, occupancy sampled each
+    // step the pool reported stats
+    assert_eq!(m.step_ms.count() as usize, m.decode_steps);
+    assert!(m.kv_occupancy.count() > 0);
+    assert!(m.kv_occupancy.max() <= 1.0 + 1e-9);
+
+    // every completed request decomposes: ttft = queue delay + prefill
+    for r in &m.requests {
+        let (Some(ttft), Some(queue), Some(prefill)) =
+            (r.ttft_ms(), r.queue_delay_ms(), r.prefill_ms())
+        else {
+            panic!("request {} missing timeline stamps", r.id);
+        };
+        assert!(
+            (ttft - (queue + prefill)).abs() < 1e-6,
+            "req {}: ttft {} != queue {} + prefill {}",
+            r.id,
+            ttft,
+            queue,
+            prefill
+        );
+        assert!(r.e2e_ms().unwrap() >= ttft);
+    }
+
+    // the snapshot is machine-readable and has the observability keys
+    let snap = Json::parse(&m.snapshot().to_string_pretty())
+        .expect("snapshot parses");
+    for key in [
+        "ttft_p50_ms",
+        "ttft_p99_ms",
+        "tpot_p50_ms",
+        "tpot_p99_ms",
+        "queue_delay_p50_ms",
+        "queue_delay_p99_ms",
+        "step_ms",
+        "kv_occupancy",
+        "kv_pool",
+        "preemptions",
+        "finish",
+        "requests",
+    ] {
+        assert!(snap.get(key).is_some(), "snapshot missing {}", key);
+    }
+    assert_eq!(
+        snap.get("requests").and_then(|r| r.as_arr()).unwrap().len(),
+        4
+    );
+    assert_eq!(
+        snap.at(&["step_ms", "count"]).and_then(|c| c.as_f64()),
+        Some(m.decode_steps as f64)
+    );
+}
