@@ -8,20 +8,34 @@
 //! p50/p99, queue-delay tails, and preemption/rejection/cancellation
 //! rates per class and per arrival pattern.
 //!
-//! Also pins the tracing tax: a closed-loop batch-16 lut4 decode run on
-//! `opt-micro` measured with the ring recorder enabled vs the no-op
-//! sink. Asserts enabled tracing costs < 5% throughput (< 50% under
-//! `GANQ_SMOKE=1` — shared runners are noisy); the overhead fraction is
-//! part of the JSON so CI can watch it drift.
+//! Also pins two robustness properties:
+//!
+//! * **Goodput retention under worker kill** — the same workload runs
+//!   twice through a multi-replica [`Cluster`] (default `--replicas 2`),
+//!   once clean and once with a fault plan (default `kill:1@6`: panic
+//!   replica 1 on its 6th scheduler step). Every request must still
+//!   reach a terminal outcome (`lost == 0`) and
+//!   `goodput_retention = faulted / unfaulted` must stay ≥ 0.70 —
+//!   the workload is arrival-bound, so the surviving replica absorbs
+//!   the requeued work.
+//! * **Tracing tax** — a closed-loop batch-16 lut4 decode run on
+//!   `opt-micro` measured with the ring recorder enabled vs the no-op
+//!   sink. Asserts enabled tracing costs < 5% throughput (< 50% under
+//!   `GANQ_SMOKE=1` — shared runners are noisy); the overhead fraction
+//!   is part of the JSON so CI can watch it drift.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use ganq::bench::traffic::{
-    run_open_loop, standard_classes, Arrivals, TrafficReport, TrafficSpec,
+    run_open_loop, run_open_loop_cluster, standard_classes, Arrivals,
+    TrafficReport, TrafficSpec,
 };
 use ganq::coordinator::{
-    serve, serve_batch, GenRequest, KvStoreKind, NativeBackend,
-    PagedNativeBackend, SamplingParams, ServeOptions, StopCriteria,
+    serve, serve_batch, Cluster, ClusterMetrics, ClusterOptions, Fault,
+    FaultPlan, GenRequest, KvStoreKind, NativeBackend, PagedNativeBackend,
+    ReplicaEngine, RoundCtx, SamplingParams, ServeMetrics, ServeOptions,
+    StopCriteria,
 };
 use ganq::model::forward::Weights;
 use ganq::model::{LayerWeights, ModelConfig, QuantizedModel, WeightStore};
@@ -30,6 +44,7 @@ use ganq::obs::trace;
 use ganq::quant::ganq::fit_codebook_identity;
 use ganq::quant::lut::lut_from_parts;
 use ganq::tensor::Mat;
+use ganq::util::cli::Args;
 use ganq::util::json::{self, Json};
 use ganq::util::timer::Table;
 
@@ -97,6 +112,7 @@ fn traffic_round(pattern: Arrivals, seed: u64) -> TrafficReport {
         pattern,
         seed,
         vocab: cfg.vocab,
+        deadline_ms: None,
     };
     let opts = ServeOptions::default();
     // the engine thread owns the weights; the backend (and with it the
@@ -122,6 +138,76 @@ fn traffic_round(pattern: Arrivals, seed: u64) -> TrafficReport {
         report.classes_sent()
     );
     report
+}
+
+/// One cluster replica over the shared weights: a fresh paged-native
+/// backend per micro-batch round, same shape as the single-server
+/// bench's engine loop.
+struct PagedReplica {
+    store: Arc<WeightStore>,
+    slots: usize,
+    blocks: usize,
+}
+
+impl ReplicaEngine for PagedReplica {
+    fn run(&mut self, round: RoundCtx<'_>) -> Result<ServeMetrics, String> {
+        let w = Weights::Fp(&self.store);
+        let mut be = PagedNativeBackend::new(
+            w,
+            self.slots,
+            16,
+            self.blocks,
+            KvStoreKind::F32,
+        );
+        round.run(&mut be)
+    }
+}
+
+/// One open-loop round through the cluster router. Identical spec +
+/// seed across calls, so a faulted run is directly comparable to a
+/// clean one.
+fn cluster_round(
+    pattern: Arrivals,
+    seed: u64,
+    replicas: usize,
+    plan: &FaultPlan,
+) -> (TrafficReport, ClusterMetrics) {
+    let (scale, n_requests, mean_gap_ms, slots, blocks) = if smoke() {
+        (8usize, 18usize, 5.0f64, 6usize, 48usize)
+    } else {
+        (1, 96, 20.0, 8, 256)
+    };
+    let cfg = long_ctx_cfg();
+    let spec = TrafficSpec {
+        classes: standard_classes(scale),
+        n_requests,
+        mean_gap_ms,
+        pattern,
+        seed,
+        vocab: cfg.vocab,
+        deadline_ms: None,
+    };
+    let opts = ClusterOptions {
+        backoff_ms: 5, // requeue fast: the kill is the point, not the wait
+        ..ClusterOptions::default()
+    };
+    let store = Arc::new(WeightStore::random("traffic", cfg, 611));
+    let engines: Vec<PagedReplica> = (0..replicas)
+        .map(|_| PagedReplica { store: Arc::clone(&store), slots, blocks })
+        .collect();
+    let cluster = Cluster::spawn(engines, opts, plan);
+    let (report, cm) = run_open_loop_cluster(&spec, cluster);
+    assert_eq!(
+        report.lost, 0,
+        "every stream must end in a Done, even under faults"
+    );
+    assert!(
+        report.classes_sent() >= 4,
+        "cluster {} run covered only {} traffic classes",
+        pattern.tag(),
+        report.classes_sent()
+    );
+    (report, cm)
 }
 
 fn overhead_requests(max_new: usize) -> Vec<GenRequest> {
@@ -193,6 +279,11 @@ fn tracing_overhead() -> (f64, f64, f64) {
 
 fn main() {
     let t_all = Instant::now();
+    let args = Args::from_env();
+    let replicas = args.get_usize_min("replicas", 2, 1);
+    let plan_spec = args.get_or("fault-plan", "kill:1@6");
+    let plan = FaultPlan::parse(plan_spec)
+        .unwrap_or_else(|e| panic!("--fault-plan: {}", e));
     println!(
         "open-loop serve traffic, paged-native on longctx-micro{}",
         if smoke() { " [smoke]" } else { "" }
@@ -202,6 +293,31 @@ fn main() {
         traffic_round(Arrivals::Poisson, 99),
         traffic_round(Arrivals::Bursty, 100),
     ];
+
+    // goodput retention: the identical workload through the cluster,
+    // clean vs fault-injected
+    println!(
+        "cluster rounds: {} replicas, fault plan `{}`",
+        replicas, plan_spec
+    );
+    let (clean, cm_clean) =
+        cluster_round(Arrivals::Poisson, 7, replicas, &FaultPlan::none());
+    let (faulted, cm_faulted) =
+        cluster_round(Arrivals::Poisson, 7, replicas, &plan);
+    let goodput_retention = if clean.goodput_tok_s > 0.0 {
+        faulted.goodput_tok_s / clean.goodput_tok_s
+    } else {
+        1.0
+    };
+    println!("  clean:   {}", cm_clean.summary());
+    println!("  faulted: {}", cm_faulted.summary());
+    for r in &cm_faulted.replicas {
+        println!("  {}", r.summary());
+    }
+    println!(
+        "  goodput {:.1} -> {:.1} tok/s, retention {:.2}",
+        clean.goodput_tok_s, faulted.goodput_tok_s, goodput_retention
+    );
 
     let mut t = Table::new(
         "open-loop traffic by arrival pattern",
@@ -294,8 +410,31 @@ fn main() {
         ("trace_overhead_frac", json::num(overhead)),
         ("trace_off_tok_s", json::num(off_tok_s)),
         ("trace_on_tok_s", json::num(on_tok_s)),
+        ("replicas", json::num(replicas as f64)),
+        ("fault_plan", json::s(plan_spec)),
+        ("cluster_goodput", json::num(clean.goodput_tok_s)),
+        ("cluster_goodput_faulted", json::num(faulted.goodput_tok_s)),
+        ("goodput_retention", json::num(goodput_retention)),
+        (
+            "cluster_workers_died",
+            json::num(cm_faulted.workers_died as f64),
+        ),
+        ("cluster_requeues", json::num(cm_faulted.requeues as f64)),
+        ("cluster_shed", json::num(cm_faulted.shed as f64)),
+        (
+            "cluster_affinity_hits",
+            json::num(cm_faulted.affinity_hits as f64),
+        ),
         ("wall_s", json::num(t_all.elapsed().as_secs_f64())),
-        ("runs", Json::Arr(runs.iter().map(|r| r.to_json()).collect())),
+        (
+            "runs",
+            Json::Arr(
+                runs.iter()
+                    .chain([&clean, &faulted])
+                    .map(|r| r.to_json())
+                    .collect(),
+            ),
+        ),
     ]);
     std::fs::write("BENCH_serve.json", out.to_string_pretty())
         .expect("write BENCH_serve.json");
@@ -305,6 +444,25 @@ fn main() {
         goodput.is_finite() && goodput >= 0.0,
         "goodput must be a finite number, got {}",
         goodput
+    );
+    let killed = plan
+        .faults
+        .iter()
+        .any(|f| matches!(f, Fault::Kill { .. }));
+    if killed {
+        assert!(
+            cm_faulted.workers_died >= 1,
+            "acceptance FAILED: fault plan `{}` includes a kill but no \
+             worker died",
+            plan_spec
+        );
+    }
+    assert!(
+        goodput_retention >= 0.70,
+        "acceptance FAILED: goodput retention {:.2} under fault plan `{}` \
+         (need >= 0.70: survivors must absorb a killed replica's load)",
+        goodput_retention,
+        plan_spec
     );
     let bar = if smoke() { 0.50 } else { 0.05 };
     assert!(
@@ -316,10 +474,14 @@ fn main() {
     );
     println!(
         "acceptance OK: tracing overhead {:.2}% < {:.0}% on batch-16 lut4 \
-         decode; goodput {:.1} tok/s over {} requests x 2 arrival patterns",
+         decode; goodput {:.1} tok/s over {} requests x 2 arrival patterns; \
+         goodput retention {:.2} >= 0.70 under `{}` with {} replicas",
         100.0 * overhead,
         100.0 * bar,
         goodput,
-        total_requests
+        total_requests,
+        goodput_retention,
+        plan_spec,
+        replicas
     );
 }

@@ -10,7 +10,11 @@
 //! is submitted to a [`ServerHandle`] at its arrival offset and drained
 //! by its own consumer thread (which also plays the mid-flight
 //! canceller role); [`run_open_loop`] then distills the server's
-//! [`ServeMetrics`] into a per-class [`TrafficReport`].
+//! [`ServeMetrics`] into a per-class [`TrafficReport`]. The same
+//! workload drives a multi-replica [`Cluster`] through
+//! [`run_open_loop_cluster`] — identical spec + seed produce identical
+//! requests, so faulted and unfaulted cluster runs are directly
+//! comparable (the goodput-retention gate in `benches/serve_traffic`).
 //!
 //! **Goodput** is throughput that met its class SLO: a request counts
 //! only if it completed normally (budget, stop token, or stop sequence
@@ -23,8 +27,9 @@ use std::sync::mpsc::{Receiver, Sender};
 use std::time::Instant;
 
 use crate::coordinator::{
-    FinishReason, GenRequest, RequestMetrics, SamplingParams, ServeMetrics,
-    ServeOptions, ServerHandle, StopCriteria, TokenEvent,
+    CancelHandle, Cluster, ClusterMetrics, FinishReason, GenRequest,
+    RequestMetrics, SamplingParams, ServeMetrics, ServeOptions,
+    ServerHandle, StopCriteria, TokenEvent,
 };
 use crate::obs::hist::{fnum, Samples};
 use crate::util::json::{self, Json};
@@ -198,6 +203,10 @@ pub struct TrafficSpec {
     pub seed: u64,
     /// vocab to draw prompt tokens from (match the serving model)
     pub vocab: usize,
+    /// optional per-request wall-clock deadline applied to every
+    /// request (`GenRequest::with_deadline_ms`); expired requests end
+    /// [`FinishReason::DeadlineExceeded`] with partial output
+    pub deadline_ms: Option<f64>,
 }
 
 /// Class index per request. The first `classes.len()` requests get one
@@ -257,7 +266,7 @@ struct Drained {
 
 fn drain_stream(
     rx: Receiver<TokenEvent>,
-    cancel: crate::coordinator::CancelHandle,
+    cancel: CancelHandle,
     cancel_after: Option<usize>,
 ) -> Drained {
     let mut streamed = 0usize;
@@ -286,6 +295,8 @@ pub struct ClassStats {
     pub completed: usize,
     pub cancelled: usize,
     pub rejected: usize,
+    /// ended [`FinishReason::DeadlineExceeded`] (partial output)
+    pub deadline: usize,
     pub slo_attained: usize,
     pub generated_tokens: usize,
     pub attained_tokens: usize,
@@ -302,6 +313,7 @@ impl ClassStats {
             ("completed", json::num(self.completed as f64)),
             ("cancelled", json::num(self.cancelled as f64)),
             ("rejected", json::num(self.rejected as f64)),
+            ("deadline_exceeded", json::num(self.deadline as f64)),
             ("slo_attained", json::num(self.slo_attained as f64)),
             (
                 "generated_tokens",
@@ -355,6 +367,10 @@ impl TrafficReport {
         self.per_class.iter().map(|c| c.cancelled).sum()
     }
 
+    pub fn deadline_exceeded(&self) -> usize {
+        self.per_class.iter().map(|c| c.deadline).sum()
+    }
+
     /// Classes that actually sent at least one request.
     pub fn classes_sent(&self) -> usize {
         self.per_class.iter().filter(|c| c.sent > 0).count()
@@ -372,6 +388,10 @@ impl TrafficReport {
             ("slo_attained", json::num(self.attained() as f64)),
             ("rejected", json::num(self.rejected() as f64)),
             ("cancelled", json::num(self.cancelled() as f64)),
+            (
+                "deadline_exceeded",
+                json::num(self.deadline_exceeded() as f64),
+            ),
             ("lost", json::num(self.lost as f64)),
             ("ttft_p50_ms", fnum(m.ttft_p50_ms())),
             ("ttft_p99_ms", fnum(m.ttft_p99_ms())),
@@ -409,6 +429,48 @@ where
         + Send
         + 'static,
 {
+    let (assignment, arrivals, requests) = prepare(spec);
+    let handle = ServerHandle::spawn(opts, engine_loop);
+    let (drained, wall_s) =
+        drive_requests(spec, &assignment, &arrivals, requests, &|req| {
+            handle.submit_request(req)
+        });
+    // an engine panic already disconnected the streams (counted as
+    // lost); keep reporting with whatever metrics survived
+    let metrics = handle.shutdown().unwrap_or_else(|e| {
+        eprintln!("traffic: engine failed: {}", e);
+        ServeMetrics::default()
+    });
+    rollup(spec, &assignment, &drained, metrics, wall_s)
+}
+
+/// [`run_open_loop`] against a multi-replica [`Cluster`]: the same
+/// deterministic workload, submitted through the router. The cluster
+/// is drained by `Cluster::shutdown`, its merged [`ServeMetrics`]
+/// become the report's, and the full [`ClusterMetrics`] (per-replica
+/// stats + routing/robustness counters) ride along for fault-plan
+/// benches.
+pub fn run_open_loop_cluster(
+    spec: &TrafficSpec,
+    cluster: Cluster,
+) -> (TrafficReport, ClusterMetrics) {
+    let (assignment, arrivals, requests) = prepare(spec);
+    let (drained, wall_s) =
+        drive_requests(spec, &assignment, &arrivals, requests, &|req| {
+            cluster.submit_request(req)
+        });
+    let cm = cluster.shutdown();
+    let report =
+        rollup(spec, &assignment, &drained, cm.total.clone(), wall_s);
+    (report, cm)
+}
+
+/// Deterministic workload materialization shared by the single-server
+/// and cluster drivers: class assignment, arrival offsets, and the
+/// built requests (with the spec's deadline applied). Same spec + seed
+/// ⇒ identical workload, which is what makes faulted/unfaulted runs
+/// comparable.
+fn prepare(spec: &TrafficSpec) -> (Vec<usize>, Vec<f64>, Vec<GenRequest>) {
     assert!(!spec.classes.is_empty(), "traffic needs at least one class");
     assert!(spec.n_requests > 0, "traffic needs at least one request");
     let mut rng = Rng::new(spec.seed);
@@ -423,13 +485,34 @@ where
         .iter()
         .enumerate()
         .map(|(i, &ci)| {
-            build_request(i, &spec.classes[ci], spec.vocab.max(2), &mut rng)
+            let req = build_request(
+                i,
+                &spec.classes[ci],
+                spec.vocab.max(2),
+                &mut rng,
+            );
+            match spec.deadline_ms {
+                Some(d) => req.with_deadline_ms(d),
+                None => req,
+            }
         })
         .collect();
+    (assignment, arrivals, requests)
+}
 
-    let handle = ServerHandle::spawn(opts, engine_loop);
+/// Submit every request at its scheduled arrival offset through
+/// `submit` and drain each stream on its own consumer thread
+/// (cancellers fire from there). Returns each consumer's observation
+/// plus the wall time to the last terminal event.
+fn drive_requests(
+    spec: &TrafficSpec,
+    assignment: &[usize],
+    arrivals: &[f64],
+    requests: Vec<GenRequest>,
+    submit: &dyn Fn(GenRequest) -> (Receiver<TokenEvent>, CancelHandle),
+) -> (Vec<Drained>, f64) {
     let t0 = Instant::now();
-    let mut consumers = Vec::with_capacity(spec.n_requests);
+    let mut consumers = Vec::with_capacity(requests.len());
     for (i, req) in requests.into_iter().enumerate() {
         let target_s = arrivals[i] / 1e3;
         let now_s = t0.elapsed().as_secs_f64();
@@ -439,7 +522,7 @@ where
             ));
         }
         let cancel_after = spec.classes[assignment[i]].cancel_after;
-        let (rx, cancel) = handle.submit_request(req);
+        let (rx, cancel) = submit(req);
         consumers.push(std::thread::spawn(move || {
             drain_stream(rx, cancel, cancel_after)
         }));
@@ -449,10 +532,18 @@ where
         .map(|j| j.join().expect("consumer thread"))
         .collect();
     let wall_s = t0.elapsed().as_secs_f64();
-    let metrics = handle.shutdown();
+    (drained, wall_s)
+}
 
-    // roll up per class, joining the server's request timelines (by id)
-    // with each consumer's observed finish
+/// Join the serve-side request timelines (by id) with each consumer's
+/// observed finish and distill per-class stats + goodput.
+fn rollup(
+    spec: &TrafficSpec,
+    assignment: &[usize],
+    drained: &[Drained],
+    metrics: ServeMetrics,
+    wall_s: f64,
+) -> TrafficReport {
     let by_id: std::collections::HashMap<u64, &RequestMetrics> =
         metrics.requests.iter().map(|r| (r.id, r)).collect();
     let mut per_class: Vec<ClassStats> = spec
@@ -464,6 +555,7 @@ where
             completed: 0,
             cancelled: 0,
             rejected: 0,
+            deadline: 0,
             slo_attained: 0,
             generated_tokens: 0,
             attained_tokens: 0,
@@ -493,6 +585,7 @@ where
         match d.finish {
             Some(FinishReason::Cancelled) => cs.cancelled += 1,
             Some(FinishReason::Rejected) => cs.rejected += 1,
+            Some(FinishReason::DeadlineExceeded) => cs.deadline += 1,
             Some(_) => {
                 cs.completed += 1;
                 if cs.slo.attained(ttft.unwrap_or(f64::INFINITY), tpot) {
@@ -565,6 +658,7 @@ mod tests {
             pattern: Arrivals::Poisson,
             seed: 3,
             vocab: 256,
+            deadline_ms: None,
         };
         let mut rng = Rng::new(spec.seed);
         let assign = assign_classes(&spec, &mut rng);
@@ -601,6 +695,7 @@ mod tests {
             pattern: Arrivals::Poisson,
             seed: 11,
             vocab: 64,
+            deadline_ms: None,
         };
         let opts = ServeOptions::default();
         let report = run_open_loop(&spec, opts, move |batch| {

@@ -1,0 +1,1279 @@
+//! Fault-tolerant multi-replica serving: N worker threads, each owning
+//! a [`DecodeBackend`] replica, fronted by a router thread that owns all
+//! cluster state (no shared locks on the hot path).
+//!
+//! * **Prefix-affinity load balancing** — the router keeps a
+//!   [`PrefixIndex`] whose "blocks" are replica ids: a request routes to
+//!   the replica that served the longest cached prefix of its prompt
+//!   ([`PrefixIndex::peek_blocks`], so routing probes never perturb the
+//!   LRU), because that replica's paged KV pool already holds those
+//!   blocks. When the affine replica's queue is deeper than
+//!   [`ClusterOptions::spill_depth`] the request spills to the
+//!   least-loaded live replica.
+//! * **Failure detection and requeue** — every worker round runs under
+//!   `catch_unwind`; a panic (or backend error) reports the worker dead.
+//!   Wedged workers are caught by a heartbeat: the scheduler loop ticks
+//!   a per-worker [`Heartbeat`] every step, and a busy worker whose tick
+//!   is older than [`ClusterOptions::stall_timeout_ms`] is marked down.
+//!   Down workers' in-flight and queued requests requeue onto survivors
+//!   with capped exponential backoff and an at-most-N-retries budget.
+//!   Retries are idempotent by construction: sampling is a pure function
+//!   of `(seed, token index)`, so a replayed request reproduces the same
+//!   tokens, and the router de-duplicates the replayed stream so clients
+//!   see each token and the final `Done` exactly once.
+//! * **Graceful degradation** — requests carry an optional
+//!   `deadline_ms` (enforced inside the scheduler at admission and step
+//!   boundaries → [`FinishReason::DeadlineExceeded`] with partial
+//!   output) and a `priority`; when the cluster's outstanding depth
+//!   crosses [`ClusterOptions::shed_watermark`], requests below
+//!   [`ClusterOptions::shed_below_priority`] are fast-rejected at
+//!   submission instead of queued.
+//! * **Deterministic fault injection** — a [`FaultPlan`] threads
+//!   per-worker faults (kill at step s, stall for d ms at step s, fail
+//!   one admission) through the worker spawn path, so chaos scenarios
+//!   replay identically in tests (`tests/cluster.rs`).
+//!
+//! Observability: per-round [`ServeMetrics`] roll up through
+//! `merge_round` into [`ClusterMetrics`] (plus per-replica stats and
+//! router counters), and the router emits `cluster.route` /
+//! `cluster.requeue` / `cluster.retry` / `cluster.shed` /
+//! `cluster.worker_down` trace instants.
+
+use std::collections::HashMap;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Once};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::metrics::ServeMetrics;
+use super::serve::{
+    serve_events, CancelHandle, DecodeBackend, FinishReason, GenOutcome,
+    GenRequest, SamplingParams, ServeOptions, SlotWork, StopCriteria,
+    TokenEvent,
+};
+use crate::kv::{KvPoolStats, PrefixIndex};
+use crate::model::ModelConfig;
+use crate::obs::trace;
+use crate::util::json::{self, Json};
+
+// ---------------------------------------------------------------------------
+// fault injection
+// ---------------------------------------------------------------------------
+
+/// One injected fault, addressed to a worker. Steps count that worker's
+/// scheduler steps monotonically across rounds (first step is 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// panic the worker's engine loop on its `step`-th scheduler step
+    Kill { worker: usize, step: u64 },
+    /// sleep `ms` inside the worker's `step`-th scheduler step (wedges
+    /// the heartbeat; recovers afterwards)
+    Stall { worker: usize, step: u64, ms: u64 },
+    /// refuse the worker's next admission once (transient pool-full)
+    AdmitFail { worker: usize },
+}
+
+/// A deterministic chaos scenario: the set of faults each worker will
+/// execute. Parsed from CLI specs like `kill:1@8,stall:0@3:50,admit:0`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn with(mut self, f: Fault) -> FaultPlan {
+        self.faults.push(f);
+        self
+    }
+
+    /// Parse a comma/semicolon-separated spec: `kill:<w>@<s>`,
+    /// `stall:<w>@<s>:<ms>`, `admit:<w>`.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        fn num<T: std::str::FromStr>(s: &str, what: &str) -> Result<T, String> {
+            s.trim()
+                .parse()
+                .map_err(|_| format!("fault spec: bad {} `{}`", what, s))
+        }
+        let mut plan = FaultPlan::default();
+        for part in spec.split([',', ';']) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (kind, rest) = part.split_once(':').ok_or_else(|| {
+                format!("fault `{}`: expected kind:args", part)
+            })?;
+            match kind {
+                "kill" => {
+                    let (w, s) = rest.split_once('@').ok_or_else(|| {
+                        format!("kill `{}`: expected worker@step", rest)
+                    })?;
+                    plan.faults.push(Fault::Kill {
+                        worker: num(w, "worker")?,
+                        step: num(s, "step")?,
+                    });
+                }
+                "stall" => {
+                    let (w, tail) = rest.split_once('@').ok_or_else(|| {
+                        format!("stall `{}`: expected worker@step:ms", rest)
+                    })?;
+                    let (s, ms) = tail.split_once(':').ok_or_else(|| {
+                        format!("stall `{}`: expected worker@step:ms", rest)
+                    })?;
+                    plan.faults.push(Fault::Stall {
+                        worker: num(w, "worker")?,
+                        step: num(s, "step")?,
+                        ms: num(ms, "ms")?,
+                    });
+                }
+                "admit" => plan.faults.push(Fault::AdmitFail {
+                    worker: num(rest, "worker")?,
+                }),
+                other => {
+                    return Err(format!(
+                        "unknown fault kind `{}` (kill|stall|admit)",
+                        other
+                    ))
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// The runtime fault state handed to worker `w` at spawn.
+    fn for_worker(&self, w: usize) -> WorkerFaults {
+        let mut out = WorkerFaults::default();
+        for f in &self.faults {
+            match *f {
+                Fault::Kill { worker, step } if worker == w => {
+                    out.kill_at = Some(step);
+                }
+                Fault::Stall { worker, step, ms } if worker == w => {
+                    out.stalls.push((step, ms));
+                }
+                Fault::AdmitFail { worker } if worker == w => {
+                    out.admit_fails += 1;
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+}
+
+/// Per-worker runtime fault state: a monotonic step counter (across
+/// rounds) plus the pending faults addressed to this worker.
+#[derive(Debug, Default)]
+struct WorkerFaults {
+    step: u64,
+    kill_at: Option<u64>,
+    stalls: Vec<(u64, u64)>,
+    admit_fails: usize,
+}
+
+impl WorkerFaults {
+    /// Called at the top of every scheduler step; fires stalls and
+    /// kills scheduled for this step.
+    fn on_step(&mut self) {
+        self.step += 1;
+        let s = self.step;
+        if let Some(i) = self.stalls.iter().position(|&(at, _)| at == s) {
+            let (_, ms) = self.stalls.remove(i);
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        if self.kill_at == Some(s) {
+            panic!("fault-plan kill at step {}", s);
+        }
+    }
+
+    /// True once per queued admit-fail fault: the admission is refused.
+    fn take_admit_fail(&mut self) -> bool {
+        if self.admit_fails > 0 {
+            self.admit_fails -= 1;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// heartbeat + monitored backend
+// ---------------------------------------------------------------------------
+
+/// Shared liveness state for one worker, pulsed from inside its
+/// scheduler loop and read by the router's stall scan.
+#[derive(Debug)]
+pub struct Heartbeat {
+    epoch: Instant,
+    steps: AtomicU64,
+    last_beat_ms: AtomicU64,
+    busy: AtomicBool,
+}
+
+impl Heartbeat {
+    fn new(epoch: Instant) -> Heartbeat {
+        Heartbeat {
+            epoch,
+            steps: AtomicU64::new(0),
+            last_beat_ms: AtomicU64::new(0),
+            busy: AtomicBool::new(false),
+        }
+    }
+
+    fn now_ms(&self, now: Instant) -> u64 {
+        now.saturating_duration_since(self.epoch).as_millis() as u64
+    }
+
+    fn beat(&self) {
+        self.last_beat_ms
+            .store(self.now_ms(Instant::now()), Ordering::Relaxed);
+    }
+
+    fn begin_round(&self) {
+        self.busy.store(true, Ordering::Relaxed);
+        self.beat();
+    }
+
+    fn end_round(&self) {
+        self.beat();
+        self.busy.store(false, Ordering::Relaxed);
+    }
+
+    fn step_tick(&self) {
+        self.steps.fetch_add(1, Ordering::Relaxed);
+        self.beat();
+    }
+
+    /// Total scheduler steps this worker has run.
+    pub fn steps(&self) -> u64 {
+        self.steps.load(Ordering::Relaxed)
+    }
+
+    /// Milliseconds since the last pulse (0 while the clock agrees the
+    /// pulse is current).
+    fn age_ms(&self, now: Instant) -> u64 {
+        self.now_ms(now)
+            .saturating_sub(self.last_beat_ms.load(Ordering::Relaxed))
+    }
+
+    fn is_busy(&self) -> bool {
+        self.busy.load(Ordering::Relaxed)
+    }
+}
+
+/// Backend wrapper threading heartbeat pulses and fault injection into
+/// the scheduler's step path. Every worker round serves through this.
+struct Monitored<'m> {
+    inner: &'m mut dyn DecodeBackend,
+    hb: &'m Heartbeat,
+    faults: &'m mut WorkerFaults,
+}
+
+impl DecodeBackend for Monitored<'_> {
+    fn slots(&self) -> usize {
+        self.inner.slots()
+    }
+    fn cfg(&self) -> ModelConfig {
+        self.inner.cfg()
+    }
+    fn max_chunk(&self) -> usize {
+        self.inner.max_chunk()
+    }
+    fn plan_chunk(&self, cap: usize) -> usize {
+        self.inner.plan_chunk(cap)
+    }
+    fn step(&mut self, work: &[SlotWork]) -> Result<Vec<Vec<f32>>, String> {
+        self.hb.step_tick();
+        self.faults.on_step();
+        self.inner.step(work)
+    }
+    fn reset_slot(&mut self, slot: usize) {
+        self.inner.reset_slot(slot)
+    }
+    fn slot_pos(&self, slot: usize) -> usize {
+        self.inner.slot_pos(slot)
+    }
+    fn weight_bytes_per_step(&self) -> usize {
+        self.inner.weight_bytes_per_step()
+    }
+    fn kv_bytes_per_step(&self) -> usize {
+        self.inner.kv_bytes_per_step()
+    }
+    fn admit(
+        &mut self,
+        slot: usize,
+        prompt: &[i32],
+        max_new: usize,
+    ) -> Option<usize> {
+        if self.faults.take_admit_fail() {
+            return None;
+        }
+        self.inner.admit(slot, prompt, max_new)
+    }
+    fn pre_step(&mut self, need: &[usize]) -> Vec<usize> {
+        self.hb.beat();
+        self.inner.pre_step(need)
+    }
+    fn release_slot(&mut self, slot: usize) {
+        self.inner.release_slot(slot)
+    }
+    fn pool_stats(&self) -> Option<KvPoolStats> {
+        self.inner.pool_stats()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// replica engines
+// ---------------------------------------------------------------------------
+
+/// One continuous-batching round handed to a [`ReplicaEngine`]: the
+/// drained micro-batch plus the cluster's monitoring hooks. The engine
+/// builds (or reuses) its backend and calls [`RoundCtx::run`].
+pub struct RoundCtx<'c> {
+    reqs: Vec<GenRequest>,
+    opts: ServeOptions,
+    hb: &'c Heartbeat,
+    faults: &'c mut WorkerFaults,
+    sink: &'c mut dyn FnMut(TokenEvent),
+}
+
+impl RoundCtx<'_> {
+    /// Serve the round through `backend` (wrapped with heartbeat pulses
+    /// and fault injection), returning the round's metrics.
+    pub fn run(
+        self,
+        backend: &mut dyn DecodeBackend,
+    ) -> Result<ServeMetrics, String> {
+        let RoundCtx { reqs, opts, hb, faults, sink } = self;
+        let mut mon = Monitored { inner: backend, hb, faults };
+        serve_events(&mut mon, reqs, opts, sink).map(|(_, m)| m)
+    }
+}
+
+/// A factory-plus-loop for one replica: called on the worker thread
+/// with each drained round. Implementations own whatever shared state
+/// the backend needs (typically an `Arc<WeightStore>`) and construct
+/// the non-`Send` backend per round — the same inversion
+/// `server::ServerHandle::spawn` uses, made a trait so the cluster can
+/// hold a heterogeneous `Vec<Box<dyn ReplicaEngine>>`.
+pub trait ReplicaEngine: Send {
+    fn run(&mut self, round: RoundCtx<'_>) -> Result<ServeMetrics, String>;
+}
+
+impl ReplicaEngine for Box<dyn ReplicaEngine> {
+    fn run(&mut self, round: RoundCtx<'_>) -> Result<ServeMetrics, String> {
+        (**self).run(round)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// options + metrics
+// ---------------------------------------------------------------------------
+
+/// Cluster routing/robustness knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterOptions {
+    /// per-replica scheduling knobs (each worker runs its own loop)
+    pub serve: ServeOptions,
+    /// token-block size of the affinity routing key; requests matching
+    /// a cached chain route to the replica that served it
+    pub affinity_block: usize,
+    /// spill to least-loaded when the affine replica already has this
+    /// many outstanding requests
+    pub spill_depth: usize,
+    /// how many times a request may be requeued after worker failures
+    /// before it finishes [`FinishReason::Rejected`]
+    pub max_retries: usize,
+    /// base requeue backoff, doubled per retry attempt
+    pub backoff_ms: u64,
+    /// backoff ceiling
+    pub backoff_cap_ms: u64,
+    /// a busy worker whose heartbeat is older than this is marked down
+    pub stall_timeout_ms: u64,
+    /// shed when outstanding requests reach this depth
+    /// (`usize::MAX` = shedding off)
+    pub shed_watermark: usize,
+    /// shed only requests whose priority is below this cutoff
+    pub shed_below_priority: u8,
+}
+
+impl Default for ClusterOptions {
+    fn default() -> ClusterOptions {
+        ClusterOptions {
+            serve: ServeOptions::default(),
+            affinity_block: 16,
+            spill_depth: 8,
+            max_retries: 3,
+            backoff_ms: 10,
+            backoff_cap_ms: 500,
+            stall_timeout_ms: 10_000,
+            shed_watermark: usize::MAX,
+            shed_below_priority: 1,
+        }
+    }
+}
+
+/// Final per-replica accounting.
+#[derive(Debug, Clone, Default)]
+pub struct ReplicaStats {
+    pub worker: usize,
+    pub alive: bool,
+    pub rounds: usize,
+    pub steps: u64,
+    /// outcomes this replica delivered (as the request's final owner)
+    pub served: usize,
+    pub fail_reason: Option<String>,
+    pub metrics: ServeMetrics,
+}
+
+impl ReplicaStats {
+    /// One human line for the CLI's per-replica report.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "replica {}: {} | rounds {}, steps {}, served {}, {} tokens",
+            self.worker,
+            if self.alive { "up" } else { "DOWN" },
+            self.rounds,
+            self.steps,
+            self.served,
+            self.metrics.total_generated(),
+        );
+        if let Some(why) = &self.fail_reason {
+            s.push_str(&format!(" — {}", why));
+        }
+        s
+    }
+}
+
+/// Cluster-wide rollup: per-round [`ServeMetrics`] merged across all
+/// replicas, per-replica stats, and the router's own counters.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterMetrics {
+    pub total: ServeMetrics,
+    pub replicas: Vec<ReplicaStats>,
+    /// requests pulled off a dead/wedged worker and rescheduled
+    pub requeues: usize,
+    /// requests that exhausted the retry budget (finished Rejected)
+    pub retries_exhausted: usize,
+    /// requests fast-rejected by the load-shed watermark
+    pub shed: usize,
+    pub workers_died: usize,
+    /// routing decisions that followed the prefix-affinity chain
+    pub affinity_hits: usize,
+    /// affine routes redirected because the affine replica was too deep
+    pub spills: usize,
+}
+
+impl ClusterMetrics {
+    pub fn replicas_alive(&self) -> usize {
+        self.replicas.iter().filter(|r| r.alive).count()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "cluster: {}/{} replicas up, {} requeues, {} retries-exhausted, \
+             {} shed, {} died, affinity {} hit / {} spill",
+            self.replicas_alive(),
+            self.replicas.len(),
+            self.requeues,
+            self.retries_exhausted,
+            self.shed,
+            self.workers_died,
+            self.affinity_hits,
+            self.spills,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let replicas: Vec<Json> = self
+            .replicas
+            .iter()
+            .map(|r| {
+                json::obj(vec![
+                    ("worker", json::num(r.worker as f64)),
+                    ("alive", Json::Bool(r.alive)),
+                    ("rounds", json::num(r.rounds as f64)),
+                    ("steps", json::num(r.steps as f64)),
+                    ("served", json::num(r.served as f64)),
+                    (
+                        "fail_reason",
+                        match &r.fail_reason {
+                            Some(why) => json::s(why),
+                            None => Json::Null,
+                        },
+                    ),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("replicas", Json::Arr(replicas)),
+            ("requeues", json::num(self.requeues as f64)),
+            (
+                "retries_exhausted",
+                json::num(self.retries_exhausted as f64),
+            ),
+            ("shed", json::num(self.shed as f64)),
+            ("workers_died", json::num(self.workers_died as f64)),
+            ("affinity_hits", json::num(self.affinity_hits as f64)),
+            ("spills", json::num(self.spills as f64)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// router
+// ---------------------------------------------------------------------------
+
+enum WorkerJob {
+    Run(Vec<GenRequest>),
+    Stop,
+}
+
+enum RouterMsg {
+    Submit(GenRequest, Sender<TokenEvent>),
+    Event { worker: usize, ev: TokenEvent },
+    Round { worker: usize, metrics: ServeMetrics },
+    Died { worker: usize, reason: String },
+    Shutdown(Sender<ClusterMetrics>),
+}
+
+/// One live request, as the router sees it. `seen`/`delivered` replay
+/// de-duplication: a requeued request regenerates its stream from token
+/// 0 (sampling is pure in `(seed, index)`), and only tokens past the
+/// delivered high-water mark are forwarded — so the client stream is
+/// exactly-once even across retries.
+struct Tracked {
+    req: GenRequest,
+    client: Sender<TokenEvent>,
+    worker: Option<usize>,
+    /// tokens forwarded to the client so far (also kept by value, so a
+    /// retries-exhausted rejection can deliver the partial output)
+    tokens: Vec<i32>,
+    delivered: usize,
+    seen: usize,
+    /// times this request has been requeued after a worker failure
+    attempts: usize,
+}
+
+struct WorkerState {
+    tx: Sender<WorkerJob>,
+    hb: Arc<Heartbeat>,
+    alive: bool,
+    /// outstanding requests currently assigned to this worker
+    load: usize,
+    rounds: usize,
+    served: usize,
+    fail_reason: Option<String>,
+    metrics: ServeMetrics,
+}
+
+struct Router {
+    opts: ClusterOptions,
+    workers: Vec<WorkerState>,
+    tracked: HashMap<u64, Tracked>,
+    /// prefix-affinity routing history: chains of replica ids keyed by
+    /// prompt blocks
+    affinity: PrefixIndex,
+    /// backoff-delayed requeues: (due, request id)
+    pending: Vec<(Instant, u64)>,
+    draining: Option<Sender<ClusterMetrics>>,
+    requeues: usize,
+    retries_exhausted: usize,
+    shed: usize,
+    workers_died: usize,
+    affinity_hits: usize,
+    spills: usize,
+}
+
+impl Router {
+    fn run(mut self, rx: Receiver<RouterMsg>) {
+        loop {
+            match rx.recv_timeout(self.next_wakeup()) {
+                Ok(RouterMsg::Shutdown(reply)) => {
+                    self.draining = Some(reply)
+                }
+                Ok(msg) => self.handle(msg),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => return,
+            }
+            self.fire_due_retries();
+            self.scan_stalled();
+            if self.draining.is_some()
+                && self.tracked.is_empty()
+                && self.pending.is_empty()
+            {
+                self.finish_drain();
+                return;
+            }
+        }
+    }
+
+    /// Sleep until the next retry comes due, but never longer than the
+    /// stall-scan interval (a quarter of the stall timeout).
+    fn next_wakeup(&self) -> Duration {
+        let scan = Duration::from_millis(
+            (self.opts.stall_timeout_ms / 4).clamp(5, 500),
+        );
+        let now = Instant::now();
+        self.pending
+            .iter()
+            .map(|(due, _)| due.saturating_duration_since(now))
+            .min()
+            .map_or(scan, |d| d.min(scan))
+    }
+
+    fn handle(&mut self, msg: RouterMsg) {
+        match msg {
+            RouterMsg::Submit(req, client) => self.submit(req, client),
+            RouterMsg::Event { worker, ev } => self.event(worker, ev),
+            RouterMsg::Round { worker, metrics } => {
+                self.workers[worker].rounds += 1;
+                self.workers[worker].metrics.merge_round(metrics);
+            }
+            RouterMsg::Died { worker, reason } => {
+                if self.workers[worker].alive {
+                    self.mark_down(worker, reason);
+                } else if self.workers[worker].fail_reason.is_none() {
+                    self.workers[worker].fail_reason = Some(reason);
+                }
+            }
+            RouterMsg::Shutdown(reply) => self.draining = Some(reply),
+        }
+    }
+
+    fn submit(&mut self, req: GenRequest, client: Sender<TokenEvent>) {
+        let id = req.id;
+        if self.tracked.len() >= self.opts.shed_watermark
+            && req.priority < self.opts.shed_below_priority
+        {
+            self.shed += 1;
+            trace::instant("cluster.shed", &[("id", id as f64)]);
+            let _ = client.send(TokenEvent::Done(GenOutcome {
+                id,
+                tokens: Vec::new(),
+                finish: FinishReason::Rejected,
+            }));
+            return;
+        }
+        debug_assert!(
+            !self.tracked.contains_key(&id),
+            "duplicate request id {} submitted to the cluster",
+            id
+        );
+        self.tracked.insert(
+            id,
+            Tracked {
+                req,
+                client,
+                worker: None,
+                tokens: Vec::new(),
+                delivered: 0,
+                seen: 0,
+                attempts: 0,
+            },
+        );
+        self.assign(id);
+    }
+
+    /// Route by prefix affinity, spilling to least-loaded; `None` when
+    /// no replica is alive.
+    fn route(&mut self, prompt: &[i32]) -> Option<usize> {
+        let n = self.workers.len();
+        let alive: Vec<usize> =
+            (0..n).filter(|&w| self.workers[w].alive).collect();
+        if alive.is_empty() {
+            return None;
+        }
+        let bs = self.opts.affinity_block.max(1);
+        // deepest live replica on the cached chain = most shared blocks
+        let affine = self
+            .affinity
+            .peek_blocks(prompt, bs)
+            .into_iter()
+            .rev()
+            .find(|&w| w < n && self.workers[w].alive);
+        let pick = match affine {
+            Some(w) if self.workers[w].load < self.opts.spill_depth => {
+                self.affinity_hits += 1;
+                w
+            }
+            other => {
+                let least = alive
+                    .into_iter()
+                    .min_by_key(|&w| self.workers[w].load)
+                    .expect("alive nonempty");
+                if other.is_some() {
+                    self.spills += 1;
+                }
+                least
+            }
+        };
+        // record the routing decision for future prefix matches
+        let chunks = prompt.len() / bs;
+        if chunks > 0 {
+            self.affinity.insert_chain(prompt, bs, &vec![pick; chunks]);
+        }
+        Some(pick)
+    }
+
+    fn assign(&mut self, id: u64) {
+        let Some(prompt) =
+            self.tracked.get(&id).map(|t| t.req.prompt.clone())
+        else {
+            return;
+        };
+        match self.route(&prompt) {
+            Some(w) => {
+                let req = {
+                    let t = self.tracked.get_mut(&id).expect("tracked");
+                    t.worker = Some(w);
+                    t.seen = 0; // replayed stream starts over
+                    t.req.clone()
+                };
+                self.workers[w].load += 1;
+                trace::instant(
+                    "cluster.route",
+                    &[("id", id as f64), ("worker", w as f64)],
+                );
+                let _ = self.workers[w].tx.send(WorkerJob::Run(vec![req]));
+            }
+            // no live replicas left: fail fast instead of queueing on
+            // a cluster that cannot recover
+            None => self.finish_direct(id, FinishReason::Rejected),
+        }
+    }
+
+    /// Deliver a terminal outcome from the router itself (shed, retry
+    /// budget exhausted, no live replicas), carrying the tokens already
+    /// streamed to the client.
+    fn finish_direct(&mut self, id: u64, why: FinishReason) {
+        if let Some(t) = self.tracked.remove(&id) {
+            if let Some(w) = t.worker {
+                self.workers[w].load =
+                    self.workers[w].load.saturating_sub(1);
+            }
+            let _ = t.client.send(TokenEvent::Done(GenOutcome {
+                id,
+                tokens: t.tokens,
+                finish: why,
+            }));
+        }
+    }
+
+    fn event(&mut self, worker: usize, ev: TokenEvent) {
+        match ev {
+            TokenEvent::Token { id, tok } => {
+                let Some(t) = self.tracked.get_mut(&id) else { return };
+                if t.worker != Some(worker) {
+                    return; // stale stream from a de-assigned worker
+                }
+                t.seen += 1;
+                if t.seen > t.delivered {
+                    t.delivered = t.seen;
+                    t.tokens.push(tok);
+                    let _ = t.client.send(TokenEvent::Token { id, tok });
+                }
+            }
+            TokenEvent::Done(o) => {
+                let current = self
+                    .tracked
+                    .get(&o.id)
+                    .map(|t| t.worker == Some(worker))
+                    .unwrap_or(false);
+                if !current {
+                    return; // late Done from a superseded assignment
+                }
+                let t = self.tracked.remove(&o.id).expect("checked");
+                self.workers[worker].load =
+                    self.workers[worker].load.saturating_sub(1);
+                self.workers[worker].served += 1;
+                let _ = t.client.send(TokenEvent::Done(o));
+            }
+        }
+    }
+
+    fn mark_down(&mut self, worker: usize, reason: String) {
+        self.workers[worker].alive = false;
+        self.workers[worker].fail_reason = Some(reason);
+        self.workers[worker].load = 0;
+        self.workers_died += 1;
+        trace::instant(
+            "cluster.worker_down",
+            &[("worker", worker as f64)],
+        );
+        let orphans: Vec<u64> = self
+            .tracked
+            .iter()
+            .filter(|(_, t)| t.worker == Some(worker))
+            .map(|(&id, _)| id)
+            .collect();
+        for id in orphans {
+            self.requeue(id);
+        }
+    }
+
+    /// Reschedule a request whose worker died, with capped exponential
+    /// backoff; exhausting the retry budget finishes it Rejected.
+    fn requeue(&mut self, id: u64) {
+        let attempts = {
+            let Some(t) = self.tracked.get_mut(&id) else { return };
+            t.worker = None;
+            t.attempts += 1;
+            t.attempts
+        };
+        self.requeues += 1;
+        trace::instant(
+            "cluster.requeue",
+            &[("id", id as f64), ("attempt", attempts as f64)],
+        );
+        if attempts > self.opts.max_retries {
+            self.retries_exhausted += 1;
+            self.finish_direct(id, FinishReason::Rejected);
+            return;
+        }
+        let backoff = self
+            .opts
+            .backoff_ms
+            .saturating_mul(1u64 << (attempts - 1).min(16))
+            .min(self.opts.backoff_cap_ms);
+        self.pending
+            .push((Instant::now() + Duration::from_millis(backoff), id));
+    }
+
+    fn fire_due_retries(&mut self) {
+        let now = Instant::now();
+        let mut due = Vec::new();
+        self.pending.retain(|&(at, id)| {
+            if at <= now {
+                due.push(id);
+                false
+            } else {
+                true
+            }
+        });
+        for id in due {
+            if self.tracked.contains_key(&id) {
+                trace::instant("cluster.retry", &[("id", id as f64)]);
+                self.assign(id);
+            }
+        }
+    }
+
+    /// A busy worker whose heartbeat went silent past the stall timeout
+    /// is as good as dead: mark it down and requeue its requests. (If
+    /// it later wakes and finishes, its stale events are filtered by
+    /// the assignment check.)
+    fn scan_stalled(&mut self) {
+        let now = Instant::now();
+        let stalled: Vec<usize> = (0..self.workers.len())
+            .filter(|&w| {
+                let ws = &self.workers[w];
+                ws.alive
+                    && ws.load > 0
+                    && ws.hb.is_busy()
+                    && ws.hb.age_ms(now) > self.opts.stall_timeout_ms
+            })
+            .collect();
+        for w in stalled {
+            self.mark_down(
+                w,
+                format!(
+                    "stalled: no heartbeat for {}ms",
+                    self.opts.stall_timeout_ms
+                ),
+            );
+        }
+    }
+
+    fn finish_drain(&mut self) {
+        for ws in &self.workers {
+            let _ = ws.tx.send(WorkerJob::Stop);
+        }
+        let mut cm = ClusterMetrics {
+            requeues: self.requeues,
+            retries_exhausted: self.retries_exhausted,
+            shed: self.shed,
+            workers_died: self.workers_died,
+            affinity_hits: self.affinity_hits,
+            spills: self.spills,
+            ..ClusterMetrics::default()
+        };
+        for (w, ws) in self.workers.iter().enumerate() {
+            cm.total.merge_round(ws.metrics.clone());
+            cm.replicas.push(ReplicaStats {
+                worker: w,
+                alive: ws.alive,
+                rounds: ws.rounds,
+                steps: ws.hb.steps(),
+                served: ws.served,
+                fail_reason: ws.fail_reason.clone(),
+                metrics: ws.metrics.clone(),
+            });
+        }
+        if let Some(reply) = self.draining.take() {
+            let _ = reply.send(cm);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// worker loop + cluster front-end
+// ---------------------------------------------------------------------------
+
+/// Suppress the default panic printout for `ganq-`named engine/worker
+/// threads (their panics are caught, reported through channels, and
+/// surfaced in metrics — the stderr backtrace is pure noise in chaos
+/// tests). Other threads keep the previous hook. Process-global,
+/// installed once.
+pub fn quiet_ganq_thread_panics() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let prev = panic::take_hook();
+        panic::set_hook(Box::new(move |info| {
+            let quiet = std::thread::current()
+                .name()
+                .map(|n| n.starts_with("ganq-"))
+                .unwrap_or(false);
+            if !quiet {
+                prev(info);
+            }
+        }));
+    });
+}
+
+fn worker_loop<E: ReplicaEngine>(
+    wid: usize,
+    mut engine: E,
+    opts: ServeOptions,
+    mut faults: WorkerFaults,
+    hb: Arc<Heartbeat>,
+    rx: Receiver<WorkerJob>,
+    tx: Sender<RouterMsg>,
+) {
+    let window = opts.serve_window.max(1);
+    loop {
+        let mut reqs = match rx.recv() {
+            Ok(WorkerJob::Run(r)) => r,
+            Ok(WorkerJob::Stop) | Err(_) => break,
+        };
+        let mut stop = false;
+        while reqs.len() < window {
+            match rx.try_recv() {
+                Ok(WorkerJob::Run(r)) => reqs.extend(r),
+                Ok(WorkerJob::Stop) => {
+                    stop = true;
+                    break;
+                }
+                Err(_) => break,
+            }
+        }
+        hb.begin_round();
+        let round = panic::catch_unwind(AssertUnwindSafe(|| {
+            let mut sink = |ev: TokenEvent| {
+                let _ = tx.send(RouterMsg::Event { worker: wid, ev });
+            };
+            engine.run(RoundCtx {
+                reqs,
+                opts,
+                hb: &hb,
+                faults: &mut faults,
+                sink: &mut sink,
+            })
+        }));
+        hb.end_round();
+        match round {
+            Ok(Ok(metrics)) => {
+                let _ = tx.send(RouterMsg::Round { worker: wid, metrics });
+            }
+            Ok(Err(e)) => {
+                let _ = tx.send(RouterMsg::Died {
+                    worker: wid,
+                    reason: format!("engine error: {}", e),
+                });
+                return;
+            }
+            Err(p) => {
+                let _ = tx.send(RouterMsg::Died {
+                    worker: wid,
+                    reason: super::server::panic_message(&*p),
+                });
+                return;
+            }
+        }
+        if stop {
+            break;
+        }
+    }
+}
+
+/// Handle to a running cluster: submit from any thread, then
+/// [`Cluster::shutdown`] to drain and collect [`ClusterMetrics`].
+pub struct Cluster {
+    router_tx: Sender<RouterMsg>,
+    next_id: AtomicU64,
+    router_join: Option<JoinHandle<()>>,
+    worker_joins: Vec<JoinHandle<()>>,
+}
+
+impl Cluster {
+    /// Spawn one worker thread per engine plus the router thread.
+    /// `plan` injects deterministic faults (pass
+    /// [`FaultPlan::none()`] for production).
+    pub fn spawn<E: ReplicaEngine + 'static>(
+        engines: Vec<E>,
+        opts: ClusterOptions,
+        plan: &FaultPlan,
+    ) -> Cluster {
+        assert!(!engines.is_empty(), "cluster needs at least one replica");
+        if !plan.is_empty() {
+            // injected kills panic on purpose; keep stderr clean
+            quiet_ganq_thread_panics();
+        }
+        let epoch = Instant::now();
+        let (router_tx, router_rx) = mpsc::channel();
+        let mut workers = Vec::new();
+        let mut worker_joins = Vec::new();
+        for (wid, engine) in engines.into_iter().enumerate() {
+            let (wtx, wrx) = mpsc::channel();
+            let hb = Arc::new(Heartbeat::new(epoch));
+            let hb_worker = Arc::clone(&hb);
+            let faults = plan.for_worker(wid);
+            let tx = router_tx.clone();
+            let serve_opts = opts.serve;
+            let join = std::thread::Builder::new()
+                .name(format!("ganq-replica-{}", wid))
+                .spawn(move || {
+                    worker_loop(
+                        wid, engine, serve_opts, faults, hb_worker, wrx,
+                        tx,
+                    )
+                })
+                .expect("spawn replica thread");
+            worker_joins.push(join);
+            workers.push(WorkerState {
+                tx: wtx,
+                hb,
+                alive: true,
+                load: 0,
+                rounds: 0,
+                served: 0,
+                fail_reason: None,
+                metrics: ServeMetrics::default(),
+            });
+        }
+        let router = Router {
+            opts,
+            workers,
+            tracked: HashMap::new(),
+            affinity: PrefixIndex::new(),
+            pending: Vec::new(),
+            draining: None,
+            requeues: 0,
+            retries_exhausted: 0,
+            shed: 0,
+            workers_died: 0,
+            affinity_hits: 0,
+            spills: 0,
+        };
+        let router_join = std::thread::Builder::new()
+            .name("ganq-router".into())
+            .spawn(move || router.run(router_rx))
+            .expect("spawn router thread");
+        Cluster {
+            router_tx,
+            next_id: AtomicU64::new(1),
+            router_join: Some(router_join),
+            worker_joins,
+        }
+    }
+
+    /// Submit a pre-built request (caller-chosen id, unique across the
+    /// cluster's lifetime); mirrors `ServerHandle::submit_request`.
+    pub fn submit_request(
+        &self,
+        mut req: GenRequest,
+    ) -> (Receiver<TokenEvent>, CancelHandle) {
+        req.mark_submitted();
+        self.next_id.fetch_max(req.id + 1, Ordering::Relaxed);
+        let cancel = req.cancel_handle();
+        let (tx, rx) = mpsc::channel();
+        let _ = self.router_tx.send(RouterMsg::Submit(req, tx));
+        (rx, cancel)
+    }
+
+    /// Submit with an auto-assigned id.
+    pub fn submit(
+        &self,
+        prompt: Vec<i32>,
+        sampling: SamplingParams,
+        stop: StopCriteria,
+    ) -> (Receiver<TokenEvent>, CancelHandle) {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.submit_request(GenRequest::new(id, prompt, sampling, stop))
+    }
+
+    /// Drain every outstanding request to a terminal outcome, stop all
+    /// threads, and return the cluster rollup.
+    pub fn shutdown(mut self) -> ClusterMetrics {
+        let (tx, rx) = mpsc::channel();
+        let _ = self.router_tx.send(RouterMsg::Shutdown(tx));
+        let cm = rx.recv().unwrap_or_default();
+        if let Some(j) = self.router_join.take() {
+            let _ = j.join();
+        }
+        for j in self.worker_joins.drain(..) {
+            let _ = j.join();
+        }
+        cm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::serve::NativeBackend;
+    use crate::coordinator::server::recv_outcome;
+    use crate::model::forward::Weights;
+    use crate::model::{ModelConfig, WeightStore};
+
+    struct NativeReplica {
+        store: Arc<WeightStore>,
+        slots: usize,
+    }
+
+    impl ReplicaEngine for NativeReplica {
+        fn run(
+            &mut self,
+            round: RoundCtx<'_>,
+        ) -> Result<ServeMetrics, String> {
+            let w = Weights::Fp(&self.store);
+            let mut be = NativeBackend::new(w, self.slots);
+            round.run(&mut be)
+        }
+    }
+
+    fn engines(n: usize, seed: u64) -> Vec<NativeReplica> {
+        let cfg = ModelConfig::builtin("opt-micro").unwrap();
+        let store = Arc::new(WeightStore::random("t", cfg, seed));
+        (0..n)
+            .map(|_| NativeReplica { store: Arc::clone(&store), slots: 2 })
+            .collect()
+    }
+
+    #[test]
+    fn fault_plan_parses_every_kind() {
+        let plan =
+            FaultPlan::parse("kill:1@8, stall:0@3:50; admit:0").unwrap();
+        assert_eq!(
+            plan.faults,
+            vec![
+                Fault::Kill { worker: 1, step: 8 },
+                Fault::Stall { worker: 0, step: 3, ms: 50 },
+                Fault::AdmitFail { worker: 0 },
+            ]
+        );
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("kill:1").is_err());
+        assert!(FaultPlan::parse("stall:0@3").is_err());
+        assert!(FaultPlan::parse("explode:2@1").is_err());
+        assert!(FaultPlan::parse("kill:x@1").is_err());
+    }
+
+    #[test]
+    fn fault_plan_routes_faults_per_worker() {
+        let plan = FaultPlan::none()
+            .with(Fault::Kill { worker: 1, step: 4 })
+            .with(Fault::AdmitFail { worker: 0 });
+        let f0 = plan.for_worker(0);
+        assert_eq!(f0.kill_at, None);
+        assert_eq!(f0.admit_fails, 1);
+        let f1 = plan.for_worker(1);
+        assert_eq!(f1.kill_at, Some(4));
+        assert_eq!(f1.admit_fails, 0);
+    }
+
+    #[test]
+    fn two_replicas_serve_and_route_by_prefix_affinity() {
+        let cluster = Cluster::spawn(
+            engines(2, 51),
+            ClusterOptions::default(),
+            &FaultPlan::none(),
+        );
+        // two prompt families, each one affinity block (16 tokens) plus
+        // a distinct tail: the first of each family routes least-loaded,
+        // the second must follow the recorded chain (affinity hit)
+        let family = |base: i32, tail: i32| {
+            let mut p: Vec<i32> = (base..base + 16).collect();
+            p.push(tail);
+            p
+        };
+        let prompts = [
+            family(10, 1),
+            family(10, 2),
+            family(60, 1),
+            family(60, 2),
+        ];
+        let rxs: Vec<_> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let req =
+                    GenRequest::greedy(i as u64 + 1, p.clone(), 3);
+                cluster.submit_request(req).0
+            })
+            .collect();
+        for rx in &rxs {
+            let o = recv_outcome(rx).unwrap();
+            assert_eq!(o.finish, FinishReason::MaxTokens);
+            assert_eq!(o.tokens.len(), 3);
+        }
+        let cm = cluster.shutdown();
+        assert_eq!(cm.replicas.len(), 2);
+        assert_eq!(cm.replicas_alive(), 2);
+        assert_eq!(cm.workers_died, 0);
+        assert_eq!(cm.total.total_generated(), 12);
+        assert_eq!(cm.total.finish.max_tokens, 4);
+        assert_eq!(cm.affinity_hits, 2, "{}", cm.summary());
+        assert_eq!(
+            cm.replicas.iter().map(|r| r.served).sum::<usize>(),
+            4
+        );
+    }
+
+    #[test]
+    fn load_shed_fast_rejects_low_priority() {
+        let opts = ClusterOptions {
+            shed_watermark: 0, // shed everything below the cutoff
+            shed_below_priority: 1,
+            ..ClusterOptions::default()
+        };
+        let cluster =
+            Cluster::spawn(engines(1, 52), opts, &FaultPlan::none());
+        let low = GenRequest::greedy(1, vec![1, 2], 4).with_priority(0);
+        let (rx_low, _) = cluster.submit_request(low);
+        let o = recv_outcome(&rx_low).unwrap();
+        assert_eq!(o.finish, FinishReason::Rejected);
+        assert!(o.tokens.is_empty());
+        // default priority rides above the cutoff and still serves
+        let (rx_hi, _) =
+            cluster.submit_request(GenRequest::greedy(2, vec![3, 4], 4));
+        assert_eq!(
+            recv_outcome(&rx_hi).unwrap().finish,
+            FinishReason::MaxTokens
+        );
+        let cm = cluster.shutdown();
+        assert_eq!(cm.shed, 1);
+        assert_eq!(cm.total.finish.max_tokens, 1);
+    }
+}

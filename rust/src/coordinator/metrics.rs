@@ -37,6 +37,7 @@ pub struct FinishCounts {
     pub stop_seq: usize,
     pub cancelled: usize,
     pub rejected: usize,
+    pub deadline: usize,
 }
 
 impl FinishCounts {
@@ -47,6 +48,7 @@ impl FinishCounts {
             FinishReason::StopSeq => self.stop_seq += 1,
             FinishReason::Cancelled => self.cancelled += 1,
             FinishReason::Rejected => self.rejected += 1,
+            FinishReason::DeadlineExceeded => self.deadline += 1,
         }
     }
 
@@ -56,6 +58,7 @@ impl FinishCounts {
         self.stop_seq += other.stop_seq;
         self.cancelled += other.cancelled;
         self.rejected += other.rejected;
+        self.deadline += other.deadline;
     }
 
     pub fn total(&self) -> usize {
@@ -64,6 +67,7 @@ impl FinishCounts {
             + self.stop_seq
             + self.cancelled
             + self.rejected
+            + self.deadline
     }
 
     pub fn to_json(&self) -> Json {
@@ -73,6 +77,7 @@ impl FinishCounts {
             ("stop_seq", json::num(self.stop_seq as f64)),
             ("cancelled", json::num(self.cancelled as f64)),
             ("rejected", json::num(self.rejected as f64)),
+            ("deadline", json::num(self.deadline as f64)),
         ])
     }
 }
@@ -422,6 +427,7 @@ impl ServeMetrics {
             (f.stop_seq, "stop-seq"),
             (f.cancelled, "cancelled"),
             (f.rejected, "rejected"),
+            (f.deadline, "deadline"),
         ] {
             if n > 0 {
                 s.push_str(&format!(", {} {}", n, tag));

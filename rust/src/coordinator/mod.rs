@@ -32,7 +32,24 @@
 //! * `server` — a threaded front: submit requests from any thread,
 //!   consume a per-request `TokenEvent` stream, cancel via the returned
 //!   handle; a dedicated engine thread owns the (non-Send) runtime and
-//!   drains up to `ServeOptions::serve_window` requests per round.
+//!   drains up to `ServeOptions::serve_window` requests per round. The
+//!   engine loop runs under `catch_unwind`: a panic disconnects the
+//!   outstanding streams and surfaces as an error from
+//!   `ServerHandle::shutdown` instead of a hang.
+//! * `cluster` — fault-tolerant multi-replica serving on top of the
+//!   same request lifecycle: N worker threads each drive one
+//!   [`DecodeBackend`] replica (built per round via [`ReplicaEngine`]),
+//!   fronted by a router that load-balances with prefix affinity
+//!   (`kv::PrefixIndex` chains keyed by prompt blocks, replica ids as
+//!   "blocks"), detects dead/wedged workers (`catch_unwind` + per-step
+//!   heartbeat with a stall timeout) and requeues their requests onto
+//!   survivors with capped exponential backoff — retried streams are
+//!   de-duplicated, exploiting the sampler's `(seed, draw index)`
+//!   determinism. Degradation is explicit: per-request deadlines end in
+//!   [`FinishReason::DeadlineExceeded`] with partial output, and a
+//!   load-shed watermark fast-rejects low-priority requests. A
+//!   [`FaultPlan`] injects deterministic kills/stalls/admit-failures
+//!   for chaos testing (`tests/cluster.rs`).
 //!
 //! ## Observability flow
 //!
@@ -40,7 +57,10 @@
 //! scheduler emits spans/instants per step (`sched.plan`,
 //! `backend.step`, `sched.sample`, admit/preempt/reject markers), the
 //! engine its per-layer phases, the paged pool its CoW/eviction/
-//! preemption events, and the PJRT runtime its dispatches — all into a
+//! preemption events, the cluster router its routing/robustness
+//! decisions (`cluster.route`, `cluster.requeue`, `cluster.retry`,
+//! `cluster.shed`, `cluster.worker_down`), and the PJRT runtime its
+//! dispatches — all into a
 //! thread-local ring recorder exportable as Chrome `trace_event` JSON
 //! (`serve --trace-out`). In parallel, every round records step
 //! latencies and KV occupancy into `obs::hist` histograms carried on
@@ -50,11 +70,16 @@
 //! `benches/serve_traffic.rs`) drives this whole pipeline and distills
 //! it to `BENCH_serve.json`: engine → sink → snapshot → BENCH_serve.
 
+pub mod cluster;
 pub mod metrics;
 pub mod pipeline;
 pub mod serve;
 pub mod server;
 
+pub use cluster::{
+    quiet_ganq_thread_panics, Cluster, ClusterMetrics, ClusterOptions,
+    Fault, FaultPlan, ReplicaEngine, ReplicaStats, RoundCtx,
+};
 pub use metrics::{FinishCounts, RequestMetrics, ServeMetrics};
 pub use pipeline::{calibrate, quantize_model, Calibration, QuantEngine};
 pub use serve::{
@@ -64,4 +89,6 @@ pub use serve::{
     SamplingParams, ServeOptions, SlotWork, StopCriteria, TokenEvent,
     WeightFmt, DEFAULT_PREFILL_CHUNK, DEFAULT_SERVE_WINDOW,
 };
-pub use server::{recv_outcome, serve_batch, ServerHandle};
+pub use server::{
+    recv_outcome, recv_outcome_timeout, serve_batch, ServerHandle,
+};

@@ -176,8 +176,12 @@ pub enum FinishReason {
     StopSeq,
     /// the submitter cancelled mid-flight (partial tokens are returned)
     Cancelled,
-    /// the request can never fit the backend's KV pool
+    /// the request can never fit the backend's KV pool, or the cluster
+    /// router shed it (load watermark / retry budget exhausted)
     Rejected,
+    /// the request's `deadline_ms` elapsed before it finished (partial
+    /// tokens are returned, like a cancellation)
+    DeadlineExceeded,
 }
 
 impl FinishReason {
@@ -188,6 +192,7 @@ impl FinishReason {
             FinishReason::StopSeq => "stop_seq",
             FinishReason::Cancelled => "cancelled",
             FinishReason::Rejected => "rejected",
+            FinishReason::DeadlineExceeded => "deadline",
         }
     }
 }
@@ -229,6 +234,17 @@ pub struct GenRequest {
     /// Queue delay and TTFT measure from here; unset requests measure
     /// from the serve round's start.
     pub submitted: Option<Instant>,
+    /// optional wall-clock budget measured from `submitted` (or the
+    /// serve round's start when never stamped). The scheduler checks it
+    /// at admission and every step boundary and finishes the request
+    /// with [`FinishReason::DeadlineExceeded`], delivering whatever it
+    /// generated so far.
+    pub deadline_ms: Option<f64>,
+    /// load-shedding class: when a cluster router's queue depth crosses
+    /// its watermark, requests below its priority cutoff are
+    /// fast-rejected instead of queued. Higher is more important;
+    /// default 1.
+    pub priority: u8,
 }
 
 impl GenRequest {
@@ -236,8 +252,11 @@ impl GenRequest {
         id: u64,
         prompt: Vec<i32>,
         sampling: SamplingParams,
-        stop: StopCriteria,
+        mut stop: StopCriteria,
     ) -> GenRequest {
+        // an empty stop sequence can never match (and historically
+        // panicked the matcher) — drop them at the boundary
+        stop.stop_seqs.retain(|s| !s.is_empty());
         GenRequest {
             id,
             prompt,
@@ -245,6 +264,8 @@ impl GenRequest {
             stop,
             cancel: CancelHandle::new(),
             submitted: None,
+            deadline_ms: None,
+            priority: 1,
         }
     }
 
@@ -268,6 +289,29 @@ impl GenRequest {
         if self.submitted.is_none() {
             self.submitted = Some(Instant::now());
         }
+    }
+
+    /// Set a wall-clock deadline in milliseconds (see `deadline_ms`).
+    pub fn with_deadline_ms(mut self, ms: f64) -> GenRequest {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    /// Set the load-shedding priority class (see `priority`).
+    pub fn with_priority(mut self, priority: u8) -> GenRequest {
+        self.priority = priority;
+        self
+    }
+
+    /// True once the optional deadline has elapsed. `epoch` is the
+    /// fallback basis for requests never stamped by
+    /// [`GenRequest::mark_submitted`].
+    pub fn deadline_hit(&self, epoch: Instant, now: Instant) -> bool {
+        let Some(d) = self.deadline_ms else { return false };
+        let basis = self.submitted.unwrap_or(epoch);
+        now.checked_duration_since(basis)
+            .map(|el| el.as_secs_f64() * 1e3 > d)
+            .unwrap_or(false)
     }
 }
 
@@ -588,33 +632,46 @@ pub fn serve_events(
     }
 
     loop {
-        // step boundary: observe cancellations first. Active slots hand
-        // their KV back right here; queued requests finish without ever
-        // being admitted.
+        // step boundary: observe cancellations and expired deadlines
+        // first. Active slots hand their KV back right here (with
+        // partial output); queued requests finish without ever being
+        // admitted — which is also what enforces deadlines at admission.
+        let t_scan = Instant::now();
         for si in 0..nslots {
-            let cancelled = slots[si]
-                .as_ref()
-                .map(|st| st.req.cancel.is_cancelled())
-                .unwrap_or(false);
-            if cancelled {
-                finish_slot!(si, FinishReason::Cancelled, 0);
+            let verdict = slots[si].as_ref().and_then(|st| {
+                if st.req.cancel.is_cancelled() {
+                    Some(FinishReason::Cancelled)
+                } else if st.req.deadline_hit(t_start, t_scan) {
+                    Some(FinishReason::DeadlineExceeded)
+                } else {
+                    None
+                }
+            });
+            if let Some(why) = verdict {
+                finish_slot!(si, why, 0);
             }
         }
         for _ in 0..queue.len() {
             let q = queue.pop_front().expect("iterating queue length");
-            if q.req.cancel.is_cancelled() {
+            let why = if q.req.cancel.is_cancelled() {
                 cancelled_tokens += q.generated.len();
-                finish_queued(
+                Some(FinishReason::Cancelled)
+            } else if q.req.deadline_hit(t_start, t_scan) {
+                Some(FinishReason::DeadlineExceeded)
+            } else {
+                None
+            };
+            match why {
+                Some(why) => finish_queued(
                     q,
-                    FinishReason::Cancelled,
+                    why,
                     t_start,
                     &mut outcomes,
                     &mut all_metrics,
                     &mut finish,
                     sink,
-                );
-            } else {
-                queue.push_back(q);
+                ),
+                None => queue.push_back(q),
             }
         }
 
@@ -1993,6 +2050,95 @@ mod tests {
         assert_eq!(resp[0].finish, FinishReason::Cancelled);
         assert!(resp[0].tokens.is_empty());
         assert_eq!(m.decode_steps, 0, "no step ran for a dead request");
+    }
+
+    #[test]
+    fn empty_stop_seq_is_filtered_not_fatal() {
+        // regression: an empty stop_seqs entry used to reach the
+        // matcher, whose tail inspection panicked the engine thread
+        let sc = StopCriteria::max_tokens(8).with_stop_seq(Vec::new());
+        assert_eq!(sc.stop_seq_hit(&[], 3), None);
+        assert_eq!(sc.stop_seq_hit(&[1, 2], 3), None);
+
+        // construction drops empties even when they were injected
+        // directly into the struct
+        let mut raw = StopCriteria::max_tokens(4);
+        raw.stop_seqs = vec![Vec::new(), vec![9_999], Vec::new()];
+        let req = GenRequest::new(
+            1,
+            vec![104, 105],
+            SamplingParams::greedy(),
+            raw,
+        );
+        assert_eq!(req.stop.stop_seqs, vec![vec![9_999]]);
+
+        let (store, _) = backend();
+        let w = Weights::Fp(&store);
+        let mut be = NativeBackend::new(w, 1);
+        let (resp, _) = serve(&mut be, vec![req]).unwrap();
+        assert_eq!(resp[0].finish, FinishReason::MaxTokens);
+        assert_eq!(resp[0].tokens.len(), 4);
+    }
+
+    #[test]
+    fn deadline_expired_before_admission_returns_empty() {
+        let (store, _) = backend();
+        let w = Weights::Fp(&store);
+        // deadline 0ms measured from the round's start: the admission
+        // scan finishes it before any step runs
+        let req = GenRequest::greedy(5, vec![1, 2, 3], 6)
+            .with_deadline_ms(0.0);
+        let mut be = NativeBackend::new(w, 1);
+        let (resp, m) = serve(&mut be, vec![req]).unwrap();
+        assert_eq!(resp[0].finish, FinishReason::DeadlineExceeded);
+        assert!(resp[0].tokens.is_empty());
+        assert_eq!(m.decode_steps, 0);
+        assert_eq!(m.finish.deadline, 1);
+    }
+
+    #[test]
+    fn deadline_mid_decode_returns_partial_output() {
+        // a backend that sleeps per step so the wall clock moves
+        struct Slow<B>(B);
+        impl<B: DecodeBackend> DecodeBackend for Slow<B> {
+            fn slots(&self) -> usize {
+                self.0.slots()
+            }
+            fn cfg(&self) -> ModelConfig {
+                self.0.cfg()
+            }
+            fn step(
+                &mut self,
+                work: &[SlotWork],
+            ) -> Result<Vec<Vec<f32>>, String> {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                self.0.step(work)
+            }
+            fn reset_slot(&mut self, slot: usize) {
+                self.0.reset_slot(slot)
+            }
+            fn slot_pos(&self, slot: usize) -> usize {
+                self.0.slot_pos(slot)
+            }
+            fn weight_bytes_per_step(&self) -> usize {
+                self.0.weight_bytes_per_step()
+            }
+            fn kv_bytes_per_step(&self) -> usize {
+                self.0.kv_bytes_per_step()
+            }
+        }
+        let (store, _) = backend();
+        let w = Weights::Fp(&store);
+        let req = GenRequest::greedy(7, vec![104, 105], 64)
+            .with_deadline_ms(25.0);
+        let mut be = Slow(NativeBackend::new(w, 1));
+        let (resp, m) = serve(&mut be, vec![req]).unwrap();
+        assert_eq!(resp[0].finish, FinishReason::DeadlineExceeded);
+        assert!(
+            resp[0].tokens.len() < 64,
+            "deadline must cut the budget short"
+        );
+        assert_eq!(m.finish.deadline, 1);
     }
 
     #[test]

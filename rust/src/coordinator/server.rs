@@ -8,15 +8,38 @@
 //! boundary. Requests are micro-batched: the engine drains whatever is
 //! queued (up to `ServeOptions::serve_window`) and runs one
 //! continuous-batching round.
+//!
+//! The engine loop runs under `catch_unwind`: a panicking round drops
+//! its per-request senders (receivers observe the disconnect instead of
+//! hanging) and [`ServerHandle::shutdown`] surfaces the captured panic
+//! as an error. [`recv_outcome_timeout`] bounds the wait on a stream
+//! whose engine may have died.
 
-use std::sync::mpsc::{self, Receiver, RecvError, Sender};
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::mpsc::{
+    self, Receiver, RecvError, RecvTimeoutError, Sender,
+};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use super::metrics::ServeMetrics;
 use super::serve::{
     serve_events, CancelHandle, DecodeBackend, GenOutcome, GenRequest,
     SamplingParams, ServeOptions, StopCriteria, TokenEvent,
 };
+
+/// Render a caught panic payload (`&str` or `String`) for error
+/// reporting; the cluster router reuses this for worker post-mortems.
+pub(crate) fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with non-string payload".to_string()
+    }
+}
 
 pub enum Job {
     Run(GenRequest, Sender<TokenEvent>),
@@ -74,10 +97,31 @@ pub fn recv_outcome(rx: &Receiver<TokenEvent>) -> Result<GenOutcome, RecvError> 
     }
 }
 
+/// [`recv_outcome`] with a bound on the *total* wait: `Err(Timeout)`
+/// when no `Done` arrives within `timeout`, `Err(Disconnected)` when
+/// the engine dropped the stream (e.g. its thread panicked mid-round).
+pub fn recv_outcome_timeout(
+    rx: &Receiver<TokenEvent>,
+    timeout: Duration,
+) -> Result<GenOutcome, RecvTimeoutError> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let remaining = deadline
+            .checked_duration_since(Instant::now())
+            .unwrap_or(Duration::ZERO);
+        if let TokenEvent::Done(o) = rx.recv_timeout(remaining)? {
+            return Ok(o);
+        }
+    }
+}
+
 pub struct ServerHandle {
     tx: Sender<Job>,
     join: Option<JoinHandle<()>>,
     next_id: std::sync::atomic::AtomicU64,
+    /// set by the engine thread when a round panicked; surfaced by
+    /// [`ServerHandle::shutdown`]
+    panic: Arc<Mutex<Option<String>>>,
 }
 
 impl ServerHandle {
@@ -94,47 +138,66 @@ impl ServerHandle {
     {
         let window = opts.serve_window.max(1);
         let (tx, rx): (Sender<Job>, Receiver<Job>) = mpsc::channel();
-        let join = std::thread::spawn(move || {
-            let mut total = ServeMetrics::default();
-            loop {
-                // block for the first job, then drain a window
-                let first = match rx.recv() {
-                    Ok(j) => j,
-                    Err(_) => break,
-                };
-                let mut batch = Vec::new();
-                let mut shutdown: Option<Sender<ServeMetrics>> = None;
-                match first {
-                    Job::Run(r, s) => batch.push((r, s)),
-                    Job::Shutdown(s) => shutdown = Some(s),
-                }
-                if shutdown.is_none() {
-                    // micro-batch window: drain whatever is already queued
-                    while batch.len() < window {
-                        match rx.try_recv() {
-                            Ok(Job::Run(r, s)) => batch.push((r, s)),
-                            Ok(Job::Shutdown(s)) => {
-                                shutdown = Some(s);
-                                break;
+        let panic_slot: Arc<Mutex<Option<String>>> =
+            Arc::new(Mutex::new(None));
+        let panic_in = Arc::clone(&panic_slot);
+        let join = std::thread::Builder::new()
+            .name("ganq-engine".into())
+            .spawn(move || {
+                let mut total = ServeMetrics::default();
+                loop {
+                    // block for the first job, then drain a window
+                    let first = match rx.recv() {
+                        Ok(j) => j,
+                        Err(_) => break,
+                    };
+                    let mut batch = Vec::new();
+                    let mut shutdown: Option<Sender<ServeMetrics>> = None;
+                    match first {
+                        Job::Run(r, s) => batch.push((r, s)),
+                        Job::Shutdown(s) => shutdown = Some(s),
+                    }
+                    if shutdown.is_none() {
+                        // micro-batch window: drain whatever is queued
+                        while batch.len() < window {
+                            match rx.try_recv() {
+                                Ok(Job::Run(r, s)) => batch.push((r, s)),
+                                Ok(Job::Shutdown(s)) => {
+                                    shutdown = Some(s);
+                                    break;
+                                }
+                                Err(_) => break,
                             }
-                            Err(_) => break,
                         }
                     }
+                    if !batch.is_empty() {
+                        // a panicking round drops its senders mid-unwind,
+                        // so receivers observe a disconnect, not a hang
+                        let round = panic::catch_unwind(
+                            AssertUnwindSafe(|| engine_loop(batch)),
+                        );
+                        match round {
+                            Ok(m) => total.merge_round(m),
+                            Err(p) => {
+                                if let Ok(mut slot) = panic_in.lock() {
+                                    *slot = Some(panic_message(&*p));
+                                }
+                                break;
+                            }
+                        }
+                    }
+                    if let Some(s) = shutdown {
+                        let _ = s.send(total.clone());
+                        break;
+                    }
                 }
-                if !batch.is_empty() {
-                    let m = engine_loop(batch);
-                    total.merge_round(m);
-                }
-                if let Some(s) = shutdown {
-                    let _ = s.send(total.clone());
-                    break;
-                }
-            }
-        });
+            })
+            .expect("spawn engine thread");
         ServerHandle {
             tx,
             join: Some(join),
             next_id: std::sync::atomic::AtomicU64::new(1),
+            panic: panic_slot,
         }
     }
 
@@ -186,14 +249,19 @@ impl ServerHandle {
     }
 
     /// Drain, stop the engine thread, and return aggregate metrics.
-    pub fn shutdown(mut self) -> ServeMetrics {
+    /// `Err` carries the panic message when an engine round panicked
+    /// (the thread was already torn down — this never hangs on join).
+    pub fn shutdown(mut self) -> Result<ServeMetrics, String> {
         let (tx, rx) = mpsc::channel();
         let _ = self.tx.send(Job::Shutdown(tx));
-        let m = rx.recv().unwrap_or_default();
+        let reply = rx.recv();
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
-        m
+        if let Some(p) = self.panic.lock().ok().and_then(|mut g| g.take()) {
+            return Err(format!("engine thread panicked: {}", p));
+        }
+        reply.map_err(|_| "engine thread exited before shutdown".to_string())
     }
 }
 
@@ -234,7 +302,7 @@ mod tests {
         assert_eq!(o1.finish, FinishReason::MaxTokens);
         let o2 = recv_outcome(&rx2).unwrap();
         assert_eq!(o2.tokens.len(), 5);
-        let m = handle.shutdown();
+        let m = handle.shutdown().unwrap();
         assert_eq!(m.total_generated(), 8);
         assert_eq!(m.finish.max_tokens, 2);
     }
@@ -300,7 +368,7 @@ mod tests {
         let o = recv_outcome(&rx).unwrap();
         assert_eq!(o.finish, FinishReason::Cancelled);
         assert!(o.tokens.len() < 64, "cancelled well before the budget");
-        let m = handle.shutdown();
+        let m = handle.shutdown().unwrap();
         assert_eq!(m.finish.cancelled, 1);
         assert!(m.cancelled_tokens > 0);
     }
@@ -314,7 +382,44 @@ mod tests {
         let rx2 = handle.submit_greedy(vec![97], 2);
         assert_eq!(recv_outcome(&rx1).unwrap().tokens.len(), 2);
         assert_eq!(recv_outcome(&rx2).unwrap().tokens.len(), 2);
-        let m = handle.shutdown();
+        let m = handle.shutdown().unwrap();
         assert_eq!(m.total_generated(), 4);
+    }
+
+    #[test]
+    fn engine_panic_disconnects_streams_and_surfaces_on_shutdown() {
+        crate::coordinator::cluster::quiet_ganq_thread_panics();
+        let handle = ServerHandle::spawn(ServeOptions::default(), |_batch| {
+            panic!("injected engine failure");
+        });
+        let (rx, _cancel) = handle.submit(
+            vec![104, 105],
+            SamplingParams::greedy(),
+            StopCriteria::max_tokens(4),
+        );
+        // the stream disconnects instead of hanging...
+        let got =
+            recv_outcome_timeout(&rx, Duration::from_secs(10));
+        assert_eq!(got.unwrap_err(), RecvTimeoutError::Disconnected);
+        // ...and shutdown reports the captured panic instead of
+        // unwrapping a dead reply channel
+        let err = handle.shutdown().unwrap_err();
+        assert!(
+            err.contains("injected engine failure"),
+            "unexpected shutdown error: {}",
+            err
+        );
+    }
+
+    #[test]
+    fn recv_outcome_timeout_bounds_the_wait() {
+        // a server that never receives work never sends events; the
+        // timed drain returns Timeout instead of blocking forever
+        let handle = spawn_native(16);
+        let (tx, rx) = mpsc::channel::<TokenEvent>();
+        let got = recv_outcome_timeout(&rx, Duration::from_millis(20));
+        assert_eq!(got.unwrap_err(), RecvTimeoutError::Timeout);
+        drop(tx);
+        handle.shutdown().unwrap();
     }
 }

@@ -108,6 +108,26 @@ impl PrefixIndex {
         hits
     }
 
+    /// Non-mutating [`PrefixIndex::lookup`]: the matched block chain in
+    /// position order, without touching the LRU stamps. The cluster
+    /// router uses this as its prefix-affinity routing key (its "blocks"
+    /// are replica ids), where a routing probe must not perturb eviction
+    /// order.
+    pub fn peek_blocks(&self, tokens: &[i32], bs: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut node = ROOT;
+        for chunk in tokens.chunks_exact(bs) {
+            match self.nodes[node].children.get(chunk) {
+                Some(&c) => {
+                    out.push(self.nodes[c].block);
+                    node = c;
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
     /// Index a sequence's sealed blocks: `blocks[i]` holds the KV of
     /// `tokens[i*bs..(i+1)*bs]`. Chunks already cached (possibly under a
     /// different physical block) are left as-is; the return value lists
@@ -224,6 +244,28 @@ mod tests {
         assert_eq!(ix.lookup(&other, 4), vec![10, 11, 20]);
         // partial chunks never match
         assert_eq!(ix.peek(&toks[..7], 4), 1);
+    }
+
+    #[test]
+    fn peek_blocks_matches_lookup_without_lru_touch() {
+        let mut ix = PrefixIndex::new();
+        let a: Vec<i32> = (0..8).collect();
+        let mut b = a.clone();
+        b[7] = 77; // shares the first chunk
+        ix.insert_chain(&a, 4, &[1, 2]);
+        ix.insert_chain(&b, 4, &[1, 3]);
+
+        assert_eq!(ix.peek_blocks(&a, 4), vec![1, 2]);
+        assert_eq!(ix.peek_blocks(&b, 4), vec![1, 3]);
+        assert_eq!(ix.peek_blocks(&a[..7], 4), vec![1]);
+        assert!(ix.peek_blocks(&[9, 9, 9, 9], 4).is_empty());
+
+        // peeking must not change eviction order: after a real touch of
+        // branch b, a's leaf is the LRU victim, and a peek of branch a
+        // does not rescue it
+        ix.lookup(&b, 4);
+        ix.peek_blocks(&a, 4);
+        assert_eq!(ix.evict_lru(|_| true), Some(2));
     }
 
     #[test]

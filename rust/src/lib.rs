@@ -76,6 +76,25 @@
 //! `GenOutcome` and a `FinishReason`, tallied per reason (plus
 //! cancelled-token waste) in `ServeMetrics`.
 //!
+//! ## Robustness: multi-replica serving under failure
+//!
+//! `coordinator::cluster` scales the same lifecycle across N replica
+//! workers behind a router. Routing is prefix-affine (a
+//! `kv::PrefixIndex` over prompt blocks with replica ids as "blocks",
+//! spilling to the least-loaded worker past a queue depth); failure
+//! handling is explicit — worker panics are caught, wedged workers are
+//! detected by a per-step heartbeat with a stall timeout, and both
+//! requeue their in-flight requests onto survivors with capped
+//! exponential backoff. Retries are safe because sampling is pure in
+//! `(seed, token index)`: a replayed request regenerates the identical
+//! stream and the router de-duplicates already-delivered tokens, so
+//! client streams are exactly-once end to end. Overload degrades
+//! predictably via per-request deadlines (`FinishReason::
+//! DeadlineExceeded` with partial output) and a load-shed watermark.
+//! A `FaultPlan` injects deterministic kills/stalls/admit-failures;
+//! `tests/cluster.rs` is the chaos matrix and `benches/serve_traffic.rs`
+//! pins goodput retention >= 0.70 across a mid-run worker kill.
+//!
 //! ## Observability: tracing, histograms, and the traffic harness
 //!
 //! The `obs` module is the scoreboard layer. `obs::trace` records

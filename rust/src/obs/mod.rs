@@ -9,8 +9,13 @@
 //!   ([`crate::kv::paged`]), and the PJRT dispatch path
 //!   ([`crate::runtime`]) emit spans/instants/counters through a
 //!   thread-local ring recorder; `serve --trace-out trace.json` exports
-//!   Chrome `trace_event` JSON viewable in Perfetto. Disabled, every
-//!   site is one thread-local bool check.
+//!   Chrome `trace_event` JSON viewable in Perfetto. The cluster router
+//!   ([`crate::coordinator::cluster`]) marks its robustness decisions
+//!   the same way (`cluster.route` / `cluster.requeue` /
+//!   `cluster.retry` / `cluster.shed` / `cluster.worker_down`), though
+//!   ring drainage is per-thread, so `--trace-out` covers the
+//!   single-engine path only. Disabled, every site is one thread-local
+//!   bool check.
 //! - [`hist`] — the metrics core. One global log-scale histogram
 //!   layout (exact merges, quantiles within a bucket of exact), the
 //!   shared nearest-rank [`hist::percentile_exact`] every percentile in

@@ -1,0 +1,314 @@
+//! Chaos matrix for the multi-replica cluster (`coordinator::cluster`):
+//! deterministic fault injection (kill / stall / shared-prefix kill)
+//! against real replicas, asserting the robustness contract end to end:
+//!
+//! * every request reaches a terminal [`FinishReason`] — nothing hangs,
+//!   nothing is lost, even when a replica dies mid-decode;
+//! * retried requests produce **token-identical** output to an
+//!   unfaulted single-backend reference run (sampling is pure in
+//!   `(seed, draw index)`, so a replay on a survivor regenerates the
+//!   same stream and the router's de-duplication splices it seamlessly);
+//! * no stream sees a second `Done` (at-most-once delivery).
+
+use std::collections::HashMap;
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ganq::coordinator::{
+    quiet_ganq_thread_panics, serve, Cluster, ClusterOptions, Fault,
+    FaultPlan, FinishReason, GenOutcome, GenRequest, NativeBackend,
+    ReplicaEngine, RoundCtx, SamplingParams, ServeMetrics, StopCriteria,
+    TokenEvent,
+};
+use ganq::model::forward::Weights;
+use ganq::model::{ModelConfig, WeightStore};
+
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(60);
+
+fn shared_store(seed: u64) -> Arc<WeightStore> {
+    let cfg = ModelConfig::builtin("opt-micro").unwrap();
+    Arc::new(WeightStore::random("chaos", cfg, seed))
+}
+
+/// One replica = a fresh native backend per round over the shared
+/// weights (the same inversion the threaded server uses).
+struct NativeReplica {
+    store: Arc<WeightStore>,
+    slots: usize,
+}
+
+impl ReplicaEngine for NativeReplica {
+    fn run(&mut self, round: RoundCtx<'_>) -> Result<ServeMetrics, String> {
+        let w = Weights::Fp(&self.store);
+        let mut be = NativeBackend::new(w, self.slots);
+        round.run(&mut be)
+    }
+}
+
+fn replicas(store: &Arc<WeightStore>, n: usize, slots: usize) -> Vec<NativeReplica> {
+    (0..n)
+        .map(|_| NativeReplica { store: Arc::clone(store), slots })
+        .collect()
+}
+
+/// The test workload: request 1 samples (temperature 0.8, fixed seed)
+/// so replay-after-retry exercises the sampler's determinism; the rest
+/// are greedy.
+fn make_requests(prompts: &[Vec<i32>], max_new: usize) -> Vec<GenRequest> {
+    prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let id = i as u64 + 1;
+            if i == 0 {
+                GenRequest::new(
+                    id,
+                    p.clone(),
+                    SamplingParams::sample(0.8, 42),
+                    StopCriteria::max_tokens(max_new),
+                )
+            } else {
+                GenRequest::greedy(id, p.clone(), max_new)
+            }
+        })
+        .collect()
+}
+
+/// Unfaulted single-backend reference: batch composition differs from
+/// any cluster run, but per-request outputs must not.
+fn reference(
+    store: &WeightStore,
+    reqs: Vec<GenRequest>,
+    slots: usize,
+) -> HashMap<u64, GenOutcome> {
+    let w = Weights::Fp(store);
+    let mut be = NativeBackend::new(w, slots);
+    let (outs, _m) = serve(&mut be, reqs).unwrap();
+    outs.into_iter().map(|o| (o.id, o)).collect()
+}
+
+/// Drain one client stream: the streamed tokens, the single Done, and
+/// proof the channel closed right after it (no second Done possible).
+fn drain(rx: &Receiver<TokenEvent>) -> (Vec<i32>, GenOutcome) {
+    let deadline = Instant::now() + DRAIN_TIMEOUT;
+    let mut toks = Vec::new();
+    loop {
+        let left = deadline.saturating_duration_since(Instant::now());
+        match rx.recv_timeout(left) {
+            Ok(TokenEvent::Token { tok, .. }) => toks.push(tok),
+            Ok(TokenEvent::Done(o)) => {
+                assert!(
+                    rx.recv().is_err(),
+                    "stream must close after its Done (at-most-once)"
+                );
+                return (toks, o);
+            }
+            Err(e) => panic!("stream ended without a Done: {:?}", e),
+        }
+    }
+}
+
+/// Run `prompts` through a cluster under `plan` and check every request
+/// against the unfaulted reference. Returns the cluster rollup for
+/// fault-specific assertions.
+fn run_and_verify(
+    n_replicas: usize,
+    slots: usize,
+    prompts: &[Vec<i32>],
+    max_new: usize,
+    opts: ClusterOptions,
+    plan: &FaultPlan,
+) -> ganq::coordinator::ClusterMetrics {
+    quiet_ganq_thread_panics();
+    let store = shared_store(29);
+    let want = reference(&store, make_requests(prompts, max_new), slots);
+
+    let cluster = Cluster::spawn(replicas(&store, n_replicas, slots), opts, plan);
+    let streams: Vec<(u64, Receiver<TokenEvent>)> =
+        make_requests(prompts, max_new)
+            .into_iter()
+            .map(|req| {
+                let id = req.id;
+                (id, cluster.submit_request(req).0)
+            })
+            .collect();
+    for (id, rx) in &streams {
+        let (toks, o) = drain(rx);
+        assert_eq!(o.id, *id);
+        assert_eq!(
+            toks, o.tokens,
+            "req {}: streamed tokens must match the outcome exactly \
+             (replay de-dup must not duplicate or drop)",
+            id
+        );
+        let r = &want[id];
+        assert_eq!(
+            o.finish, r.finish,
+            "req {}: finish reason differs from unfaulted reference",
+            id
+        );
+        assert_eq!(
+            o.tokens, r.tokens,
+            "req {}: retried output must be token-identical to the \
+             unfaulted reference run",
+            id
+        );
+    }
+    cluster.shutdown()
+}
+
+fn distinct_prompts(n: usize, len: usize) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|i| (0..len).map(|j| (i * 31 + j * 7 + 3) as i32 % 100).collect())
+        .collect()
+}
+
+#[test]
+fn kill_one_replica_mid_decode_loses_nothing() {
+    let opts = ClusterOptions {
+        backoff_ms: 0, // retry instantly; the kill is the point
+        ..ClusterOptions::default()
+    };
+    let plan =
+        FaultPlan::none().with(Fault::Kill { worker: 1, step: 10 });
+    let cm = run_and_verify(2, 4, &distinct_prompts(6, 4), 24, opts, &plan);
+    assert_eq!(cm.workers_died, 1, "{}", cm.summary());
+    assert!(cm.requeues >= 1, "{}", cm.summary());
+    assert_eq!(cm.replicas_alive(), 1);
+    assert!(
+        cm.replicas[1].fail_reason.as_deref().unwrap_or("").contains("kill"),
+        "worker 1 should record the injected kill: {:?}",
+        cm.replicas[1].fail_reason
+    );
+}
+
+#[test]
+fn stall_below_timeout_recovers_without_failover() {
+    // 50ms hiccup vs the default 10s stall timeout: the worker is slow,
+    // not dead — nothing requeues, outputs unchanged
+    let plan =
+        FaultPlan::none().with(Fault::Stall { worker: 0, step: 2, ms: 50 });
+    let cm = run_and_verify(
+        2,
+        4,
+        &distinct_prompts(4, 4),
+        12,
+        ClusterOptions::default(),
+        &plan,
+    );
+    assert_eq!(cm.workers_died, 0, "{}", cm.summary());
+    assert_eq!(cm.requeues, 0, "{}", cm.summary());
+    assert_eq!(cm.replicas_alive(), 2);
+}
+
+#[test]
+fn stalled_worker_is_detected_and_its_requests_requeue() {
+    // 400ms wedge vs a 50ms stall timeout: the router declares worker 0
+    // down mid-sleep and reroutes. The zombie wakes and finishes its
+    // round; its stale events must be filtered (streams still see
+    // exactly one Done, tokens identical to the reference).
+    let opts = ClusterOptions {
+        stall_timeout_ms: 50,
+        backoff_ms: 0,
+        ..ClusterOptions::default()
+    };
+    let plan = FaultPlan::none()
+        .with(Fault::Stall { worker: 0, step: 3, ms: 400 });
+    let cm = run_and_verify(2, 4, &distinct_prompts(4, 4), 16, opts, &plan);
+    assert_eq!(cm.workers_died, 1, "{}", cm.summary());
+    assert!(cm.requeues >= 1, "{}", cm.summary());
+    assert!(
+        cm.replicas[0]
+            .fail_reason
+            .as_deref()
+            .unwrap_or("")
+            .contains("stalled"),
+        "worker 0 should be marked down as stalled: {:?}",
+        cm.replicas[0].fail_reason
+    );
+}
+
+#[test]
+fn kill_under_shared_prefix_traffic_fails_over() {
+    // all six requests share a 32-token prefix: affinity concentrates
+    // them on one replica (the first pick), which then dies — the
+    // survivor must absorb and reproduce every output
+    let prefix: Vec<i32> = (0..32).map(|j| (j * 5 + 1) % 90).collect();
+    let prompts: Vec<Vec<i32>> = (0..6)
+        .map(|i| {
+            let mut p = prefix.clone();
+            p.push(90 + i);
+            p
+        })
+        .collect();
+    let opts = ClusterOptions {
+        affinity_block: 16,
+        backoff_ms: 0,
+        ..ClusterOptions::default()
+    };
+    let plan = FaultPlan::none().with(Fault::Kill { worker: 0, step: 8 });
+    let cm = run_and_verify(2, 4, &prompts, 16, opts, &plan);
+    assert!(
+        cm.affinity_hits >= 1,
+        "shared-prefix requests must route by affinity: {}",
+        cm.summary()
+    );
+    assert_eq!(cm.workers_died, 1, "{}", cm.summary());
+    assert!(cm.requeues >= 1, "{}", cm.summary());
+}
+
+#[test]
+fn single_replica_kill_rejects_cleanly_instead_of_hanging() {
+    // no survivors: requests must still reach a terminal outcome
+    // (Rejected) — the cluster fails fast rather than queueing forever
+    quiet_ganq_thread_panics();
+    let store = shared_store(31);
+    let opts = ClusterOptions {
+        backoff_ms: 0,
+        max_retries: 1,
+        ..ClusterOptions::default()
+    };
+    let plan = FaultPlan::none().with(Fault::Kill { worker: 0, step: 2 });
+    let cluster = Cluster::spawn(replicas(&store, 1, 4), opts, &plan);
+    let streams: Vec<Receiver<TokenEvent>> = distinct_prompts(3, 4)
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            cluster
+                .submit_request(GenRequest::greedy(i as u64 + 1, p.clone(), 24))
+                .0
+        })
+        .collect();
+    for rx in &streams {
+        let (_toks, o) = drain(rx);
+        assert_eq!(o.finish, FinishReason::Rejected);
+    }
+    let cm = cluster.shutdown();
+    assert_eq!(cm.workers_died, 1, "{}", cm.summary());
+    assert_eq!(cm.replicas_alive(), 0);
+}
+
+#[test]
+fn deadline_propagates_through_the_cluster() {
+    // an already-expired deadline ends DeadlineExceeded (empty output)
+    // while a normal request on the same cluster completes untouched
+    let store = shared_store(37);
+    let cluster = Cluster::spawn(
+        replicas(&store, 1, 2),
+        ClusterOptions::default(),
+        &FaultPlan::none(),
+    );
+    let doomed = GenRequest::greedy(1, vec![5, 6, 7], 8).with_deadline_ms(0.0);
+    let (rx_doomed, _) = cluster.submit_request(doomed);
+    let (rx_ok, _) =
+        cluster.submit_request(GenRequest::greedy(2, vec![8, 9, 10], 8));
+    let (toks, o) = drain(&rx_doomed);
+    assert_eq!(o.finish, FinishReason::DeadlineExceeded);
+    assert!(toks.is_empty() && o.tokens.is_empty());
+    let (_t, ok) = drain(&rx_ok);
+    assert_eq!(ok.finish, FinishReason::MaxTokens);
+    assert_eq!(ok.tokens.len(), 8);
+    let cm = cluster.shutdown();
+    assert_eq!(cm.total.finish.deadline, 1, "{}", cm.total.summary());
+}
