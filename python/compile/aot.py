@@ -336,6 +336,31 @@ def build_goldens(out_dir: str, all_params: dict):
             f,
         )
 
+    # any-precision nested layout fixture: parent 4-bit codes decomposed
+    # into bit-planes + per-width count-weighted merged codebooks — the
+    # nested export rust/src/quant/anyprec.rs mirrors (ragged n pins the
+    # bitpacked row padding)
+    qa = rng.randint(0, 16, (3, 11))
+    ta = rng.randn(3, 16).astype(np.float32)
+    planes = ref.pack_bitplanes(qa, 4)
+    books = ref.anyprec_codebooks_np(ta, qa, 4, [2, 3, 4])
+    with open(os.path.join(g, "anyprec.json"), "w") as f:
+        json.dump(
+            {
+                "m": 3,
+                "n": 11,
+                "bits": 4,
+                "widths": [2, 3, 4],
+                "q": qa.flatten().tolist(),
+                "t": ta.flatten().tolist(),
+                "planes": [p.flatten().tolist() for p in planes],
+                "codebooks": {
+                    str(w): b.flatten().tolist() for w, b in books.items()
+                },
+            },
+            f,
+        )
+
     # outlier split fixture
     wo = rng.randn(4, 32).astype(np.float32)
     sp, dn = ref.outlier_split_np(wo, 0.125)

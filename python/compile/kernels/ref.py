@@ -81,6 +81,84 @@ def unpack3(qp: np.ndarray, n: int) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Any-precision bit-plane layout (nested export)
+# ---------------------------------------------------------------------------
+# Plane p holds bit p of every code (p = 0 is the LSB), each row bitpacked
+# into ceil(n/8) bytes LSB-first: bit (j % 8) of byte (j // 8) is column j.
+# The w-bit model is the top-w planes — code_w = code >> (bits - w) — with
+# a per-width codebook. Mirrors rust/src/quant/anyprec.rs exactly.
+
+
+def pack_bitplanes(q: np.ndarray, bits: int) -> list[np.ndarray]:
+    """q: [m, n] integer codes in 0..2^bits-1 -> `bits` uint8 planes of
+    shape [m, ceil(n/8)], plane p holding bit p."""
+    m, n = q.shape
+    rowb = (n + 7) // 8
+    q = q.astype(np.uint32)
+    planes = []
+    for p in range(bits):
+        bit = np.zeros((m, rowb * 8), dtype=np.uint8)
+        bit[:, :n] = (q >> p) & 1
+        plane = np.zeros((m, rowb), dtype=np.uint8)
+        for k in range(8):
+            plane |= bit[:, k::8] << k
+        planes.append(plane)
+    return planes
+
+
+def unpack_bitplanes(
+    planes: list[np.ndarray], n: int, w: int | None = None
+) -> np.ndarray:
+    """Top-`w` plane slice back to codes: code_w = parent >> (bits - w).
+    w=None reads the full-width parent codes."""
+    bits = len(planes)
+    w = bits if w is None else w
+    m = planes[0].shape[0]
+    out = np.zeros((m, n), dtype=np.int32)
+    for b in range(w):
+        plane = planes[bits - w + b]
+        bit = np.zeros((m, plane.shape[1] * 8), dtype=np.int32)
+        for k in range(8):
+            bit[:, k::8] = (plane >> k) & 1
+        out |= bit[:, :n] << b
+    return out
+
+
+def anyprec_merge_codebook_np(t: np.ndarray, q: np.ndarray) -> np.ndarray:
+    """One merge level of the upgrade path: the (w+1)-bit codebook t
+    [m, 2K] and codes q [m, n] at width w+1 -> the w-bit init codebook
+    [m, K]. Children 2c/2c+1 pair count-weighted (bucket mean of the
+    children's reconstruction = the identity-Hessian optimum); empty
+    pairs fall back to the midpoint. Matches quant::anyprec::merge_level."""
+    m, k2 = t.shape
+    out = np.zeros((m, k2 // 2), dtype=t.dtype)
+    for i in range(m):
+        counts = np.bincount(q[i], minlength=k2).astype(np.float64)
+        n0, n1 = counts[0::2], counts[1::2]
+        tot = n0 + n1
+        weighted = (n0 * t[i, 0::2] + n1 * t[i, 1::2]) / np.maximum(tot, 1)
+        mid = 0.5 * (t[i, 0::2] + t[i, 1::2])
+        out[i] = np.where(tot > 0, weighted, mid)
+    return out
+
+
+def anyprec_codebooks_np(
+    t: np.ndarray, q: np.ndarray, bits: int, widths: list[int]
+) -> dict[int, np.ndarray]:
+    """Per-width codebooks for the nested store, seedless path (no
+    calibration re-fit): repeated count-weighted merges from the parent
+    codebook down to min(widths). Matches BitPlaneStore::nest."""
+    books = {bits: t.astype(np.float32)}
+    cur = t.astype(np.float64)
+    for wd in range(bits - 1, min(widths) - 1, -1):
+        q_wd1 = (q >> (bits - (wd + 1))).astype(np.int64)
+        cur = anyprec_merge_codebook_np(cur, q_wd1)
+        if wd in widths:
+            books[wd] = cur.astype(np.float32)
+    return {w: books[w] for w in sorted(widths)}
+
+
+# ---------------------------------------------------------------------------
 # LUT-based mpGEMM reference
 # ---------------------------------------------------------------------------
 

@@ -32,6 +32,66 @@ def test_pack3_roundtrip(m, n, seed):
     assert (back == q).all()
 
 
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 10),
+    n=st.integers(1, 50),
+    bits=st.sampled_from([2, 3, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bitplane_roundtrip_and_slices(m, n, bits, seed):
+    """Planes round-trip the parent codes, and every narrower slice is
+    exactly the top-bits shift — incl. ragged n (bitpacked row padding)."""
+    q = np.random.RandomState(seed).randint(0, 2**bits, (m, n))
+    planes = ref.pack_bitplanes(q, bits)
+    assert len(planes) == bits
+    assert all(p.shape == (m, (n + 7) // 8) for p in planes)
+    assert (ref.unpack_bitplanes(planes, n) == q).all()
+    for w in range(1, bits + 1):
+        back = ref.unpack_bitplanes(planes, n, w)
+        assert (back == (q >> (bits - w))).all(), f"width {w}"
+
+
+def test_anyprec_merge_is_count_weighted_bucket_mean():
+    """Merged codeword = count-weighted mean of its two children; empty
+    pairs fall back to the midpoint."""
+    t = np.array([[0.0, 1.0, 10.0, 20.0]], dtype=np.float64)
+    # codes at width 2: three 0s, one 1, zero 2s/3s
+    q = np.array([[0, 0, 0, 1]])
+    out = ref.anyprec_merge_codebook_np(t, q)
+    assert out.shape == (1, 2)
+    assert np.isclose(out[0, 0], (3 * 0.0 + 1 * 1.0) / 4)
+    assert np.isclose(out[0, 1], 0.5 * (10.0 + 20.0))  # empty pair
+
+
+def test_anyprec_codebooks_nest_to_every_width():
+    """The seedless derivation yields one codebook per width whose w-bit
+    reconstruction is the bucket mean of the parent dequant (the
+    identity-Hessian optimum the Rust nest() path pins)."""
+    rng = np.random.RandomState(3)
+    m, n, bits = 4, 64, 4
+    q = rng.randint(0, 2**bits, (m, n))
+    t = rng.randn(m, 2**bits).astype(np.float32)
+    books = ref.anyprec_codebooks_np(t, q, bits, [2, 3, 4])
+    assert sorted(books) == [2, 3, 4]
+    assert (books[4] == t).all()
+    w_parent = np.take_along_axis(t, q, axis=1)
+    for w in (2, 3):
+        qw = q >> (bits - w)
+        assert books[w].shape == (m, 2**w)
+        # each occupied bucket's codeword is the mean of the parent
+        # dequant values it absorbed
+        for i in range(m):
+            for c in range(2**w):
+                mask = qw[i] == c
+                if mask.any():
+                    assert np.isclose(
+                        books[w][i, c],
+                        w_parent[i, mask].mean(),
+                        atol=1e-5,
+                    ), (w, i, c)
+
+
 def test_nibble_matches_jnp_unpack():
     import jax.numpy as jnp
 

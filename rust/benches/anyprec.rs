@@ -1,0 +1,207 @@
+//! Any-precision store bench: pins the two claims the nested bit-plane
+//! layout makes. (1) Memory: at a serving-scale linear shape the one
+//! resident artifact (max-width planes + per-width codebooks) costs
+//! <= 1.1x the largest standalone width — not the sum of widths. (2)
+//! Quality: serving the nested store at width w is perplexity-identical
+//! (<= 1e-3 relative) to the standalone w-bit sliced model, because the
+//! plane slice is bitwise the standalone layer. Emits
+//! `BENCH_anyprec.json`. `GANQ_SMOKE=1` shrinks the ppl token budget.
+
+use ganq::model::forward::{Engine, Weights};
+use ganq::model::{LayerWeights, ModelConfig, QuantizedModel, WeightStore};
+use ganq::quant::ganq::fit_codebook_identity;
+use ganq::quant::lut::lut_from_parts;
+use ganq::quant::BitPlaneStore;
+use ganq::tensor::Mat;
+use ganq::util::json::{self, Json};
+use ganq::util::rng::Rng;
+
+const WIDTHS: [u8; 3] = [2, 3, 4];
+
+fn smoke() -> bool {
+    std::env::var("GANQ_SMOKE").is_ok()
+}
+
+/// Random 4-bit parent layer at a serving-scale shape (micro shapes are
+/// misleading here: codebooks would dominate the planes).
+fn big_parent(m: usize, n: usize) -> ganq::quant::LutLayer {
+    let mut rng = Rng::new(77);
+    let codes: Vec<u8> = (0..m * n).map(|_| rng.below(16) as u8).collect();
+    let cb = Mat::from_vec(
+        m,
+        16,
+        rng.normal_vec_f32(m * 16).into_iter().map(|v| v * 0.08).collect(),
+    );
+    lut_from_parts(m, n, 4, codes, cb)
+}
+
+/// Every linear nested: identity-Hessian 4-bit fit, then bit-plane
+/// decomposition with codebooks for each width.
+fn anyprec_model(store: &WeightStore) -> QuantizedModel {
+    let mut linears = std::collections::BTreeMap::new();
+    for (name, _m, _n) in store.cfg.linear_shapes() {
+        let w = store.mat(&name);
+        let mut codes = vec![0u8; w.rows * w.cols];
+        let mut cb = Mat::zeros(w.rows, 16);
+        for i in 0..w.rows {
+            let (c, t) = fit_codebook_identity(w.row(i), 4, 2);
+            codes[i * w.cols..(i + 1) * w.cols].copy_from_slice(&c);
+            cb.row_mut(i).copy_from_slice(&t);
+        }
+        let parent = lut_from_parts(w.rows, w.cols, 4, codes, cb);
+        linears.insert(
+            name,
+            LayerWeights::AnyPrec(BitPlaneStore::nest(&parent, &WIDTHS)),
+        );
+    }
+    QuantizedModel {
+        base: store.clone(),
+        method: "ganq-anyprec".into(),
+        bits: 4,
+        linears,
+        weight_bits: 0,
+    }
+}
+
+/// The standalone width-w model the nested store must match: every
+/// linear materialized as its sliced `LutLayer`.
+fn sliced_model(qm: &QuantizedModel, w: u8) -> QuantizedModel {
+    let mut out = qm.clone();
+    out.bits = w;
+    out.method = format!("lut{}-sliced", w);
+    for lw in out.linears.values_mut() {
+        if let LayerWeights::AnyPrec(b) = lw {
+            *lw = LayerWeights::Lut(b.slice(w));
+        }
+    }
+    out
+}
+
+fn main() {
+    // -- memory: one resident artifact vs standalone width families --
+    let (m, n) = (512usize, 2048usize);
+    let parent = big_parent(m, n);
+    let bp = BitPlaneStore::nest(&parent, &WIDTHS);
+    let resident = bp.resident_bytes();
+    let mut standalone = Vec::new();
+    for &w in &WIDTHS {
+        standalone.push((w, bp.slice(w).bytes_per_decode()));
+    }
+    let max_width = standalone.iter().map(|&(_, b)| b).max().unwrap();
+    let sum_widths: usize = standalone.iter().map(|&(_, b)| b).sum();
+    let ratio = resident as f64 / max_width as f64;
+    println!(
+        "resident memory at {}x{}: anyprec(2,3,4) {} B vs lut4 {} B \
+         ({:.3}x max width; sum of widths {} B)",
+        m, n, resident, max_width, ratio, sum_widths
+    );
+    for &(w, b) in &standalone {
+        println!(
+            "  width {}: standalone {} B, nested streams {} B/step",
+            w,
+            b,
+            bp.bytes_per_decode(w)
+        );
+    }
+
+    // -- quality: per-width ppl parity with the standalone slices --
+    let cfg = ModelConfig::builtin("opt-micro").unwrap();
+    let store = WeightStore::random("bench", cfg, 413);
+    let qm = anyprec_model(&store);
+    let (bsz, s_len) = if smoke() { (2, 32) } else { (4, 64) };
+    let mut rng = Rng::new(99);
+    let tokens: Vec<Vec<i32>> = (0..bsz)
+        .map(|_| (0..s_len).map(|_| rng.below(256) as i32).collect())
+        .collect();
+    let preds = (bsz * (s_len - 1)) as f64;
+    let w_any = Weights::Quant(&qm);
+    let mut ppl_rows = Vec::new();
+    let mut worst_rel = 0.0f64;
+    for &w in &WIDTHS {
+        let nll_any = Engine::new_at(&w_any, Some(w))
+            .nll_sum_chunked(&tokens, usize::MAX);
+        let std = sliced_model(&qm, w);
+        let w_std = Weights::Quant(&std);
+        let nll_std = Engine::new(&w_std).nll_sum_chunked(&tokens, usize::MAX);
+        let (ppl_a, ppl_s) =
+            ((nll_any / preds).exp(), (nll_std / preds).exp());
+        let rel = (ppl_a - ppl_s).abs() / ppl_s;
+        worst_rel = worst_rel.max(rel);
+        println!(
+            "width {}: ppl nested {:.4} vs standalone {:.4} (rel {:.2e})",
+            w, ppl_a, ppl_s, rel
+        );
+        ppl_rows.push(json::obj(vec![
+            ("width", json::num(w as f64)),
+            ("ppl_anyprec", json::num(ppl_a)),
+            ("ppl_standalone", json::num(ppl_s)),
+            ("rel_diff", json::num(rel)),
+        ]));
+    }
+
+    let out = json::obj(vec![
+        ("shape", Json::Arr(vec![json::num(m as f64), json::num(n as f64)])),
+        ("smoke", Json::Bool(smoke())),
+        (
+            "resident_bytes",
+            json::obj(vec![
+                ("anyprec", json::num(resident as f64)),
+                ("lut4", json::num(standalone[2].1 as f64)),
+                ("lut3", json::num(standalone[1].1 as f64)),
+                ("lut2", json::num(standalone[0].1 as f64)),
+            ]),
+        ),
+        ("resident_ratio_vs_max_width", json::num(ratio)),
+        ("sum_widths_bytes", json::num(sum_widths as f64)),
+        (
+            "bytes_per_decode",
+            Json::Arr(
+                WIDTHS
+                    .iter()
+                    .map(|&w| {
+                        json::obj(vec![
+                            ("width", json::num(w as f64)),
+                            (
+                                "nested",
+                                json::num(bp.bytes_per_decode(w) as f64),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("ppl", Json::Arr(ppl_rows)),
+        ("ppl_worst_rel_diff", json::num(worst_rel)),
+    ]);
+    std::fs::write("BENCH_anyprec.json", out.to_string_pretty())
+        .expect("write BENCH_anyprec.json");
+    println!("\nwrote BENCH_anyprec.json");
+
+    assert!(
+        ratio <= 1.1,
+        "acceptance FAILED: anyprec resident {} B is {:.3}x the largest \
+         standalone width ({} B); the nested layout must cost ~max(width), \
+         not sum(widths)",
+        resident,
+        ratio,
+        max_width
+    );
+    assert!(
+        resident < sum_widths,
+        "acceptance FAILED: anyprec resident {} B >= sum of standalone \
+         widths {} B",
+        resident,
+        sum_widths
+    );
+    assert!(
+        worst_rel <= 1e-3,
+        "acceptance FAILED: nested-vs-standalone ppl diverged ({:.2e} \
+         relative; slices must be bitwise)",
+        worst_rel
+    );
+    println!(
+        "acceptance OK: resident = {:.3}x max width (<= 1.1x), per-width \
+         ppl parity {:.2e} (<= 1e-3)",
+        ratio, worst_rel
+    );
+}

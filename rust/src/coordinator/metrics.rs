@@ -13,6 +13,7 @@
 //! negative `enqueued_ms`; all derived durations (TTFT, queue delay,
 //! end-to-end) remain correct differences.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use super::serve::FinishReason;
@@ -181,6 +182,13 @@ pub struct ServeMetrics {
     pub cancelled_tokens: usize,
     /// maximum simultaneously-decoding requests observed
     pub peak_concurrency: usize,
+    /// precision-policy transitions (the scheduler switching its
+    /// admission width under an auto policy — see
+    /// [`super::serve::PrecisionPolicy`])
+    pub precision_switches: usize,
+    /// generated tokens per decode width, for width-pinned admissions
+    /// (empty when the round served at the backend's native width)
+    pub tokens_by_width: BTreeMap<u8, u64>,
     /// block-pool counters (None for contiguous-cache backends)
     pub kv: Option<KvPoolStats>,
     /// per-step `DecodeBackend::step` dispatch latency (ms)
@@ -295,6 +303,10 @@ impl ServeMetrics {
         self.finish.merge(&m.finish);
         self.cancelled_tokens += m.cancelled_tokens;
         self.peak_concurrency = self.peak_concurrency.max(m.peak_concurrency);
+        self.precision_switches += m.precision_switches;
+        for (w, n) in m.tokens_by_width {
+            *self.tokens_by_width.entry(w).or_insert(0) += n;
+        }
         if m.kv.is_some() {
             self.kv = m.kv;
         }
@@ -366,6 +378,21 @@ impl ServeMetrics {
                 "peak_concurrency",
                 json::num(self.peak_concurrency as f64),
             ),
+            (
+                "precision_switches",
+                json::num(self.precision_switches as f64),
+            ),
+            (
+                "tokens_by_width",
+                Json::Obj(
+                    self.tokens_by_width
+                        .iter()
+                        .map(|(w, n)| {
+                            (format!("w{}", w), json::num(*n as f64))
+                        })
+                        .collect(),
+                ),
+            ),
             ("finish", self.finish.to_json()),
             ("kv_pool", kv),
             ("step_ms", self.step_ms.to_json()),
@@ -419,6 +446,18 @@ impl ServeMetrics {
                 100.0 * kv.prefix_hit_rate(),
                 self.preemptions,
                 kv.evictions,
+            ));
+        }
+        if !self.tokens_by_width.is_empty() {
+            let per: Vec<String> = self
+                .tokens_by_width
+                .iter()
+                .map(|(w, n)| format!("{}tok@{}b", n, w))
+                .collect();
+            s.push_str(&format!(
+                ", precision {} switches ({})",
+                self.precision_switches,
+                per.join(" ")
             ));
         }
         let f = &self.finish;
@@ -625,6 +664,11 @@ mod tests {
         round2.step_ms.record(4.0);
         round2.step_ms.record(6.0);
         round2.kv_occupancy.record(0.5);
+        round1.precision_switches = 1;
+        round1.tokens_by_width.insert(3, 6);
+        round2.precision_switches = 2;
+        round2.tokens_by_width.insert(3, 4);
+        round2.tokens_by_width.insert(4, 10);
 
         let mut total = ServeMetrics::default();
         total.merge_round(round1);
@@ -643,6 +687,12 @@ mod tests {
         assert_eq!(total.step_ms.count(), 3);
         assert_eq!(total.kv_occupancy.count(), 2);
         assert_eq!(total.total_generated(), 30);
+        assert_eq!(total.precision_switches, 3);
+        assert_eq!(total.tokens_by_width.get(&3), Some(&10));
+        assert_eq!(total.tokens_by_width.get(&4), Some(&10));
+        let s = total.summary();
+        assert!(s.contains("precision 3 switches"), "{}", s);
+        assert!(s.contains("10tok@3b"), "{}", s);
     }
 
     #[test]
@@ -677,6 +727,8 @@ mod tests {
             "queue_delay_p50_ms",
             "queue_delay_p99_ms",
             "preemptions",
+            "precision_switches",
+            "tokens_by_width",
             "finish",
             "kv_pool",
             "step_ms",

@@ -2,7 +2,10 @@
 //!
 //! * `pipeline` — the offline layer-wise PTQ path: calibration capture,
 //!   per-layer GANQ/baseline quantization (native or through the AOT HLO
-//!   solver graph), servable model assembly.
+//!   solver graph), servable model assembly. `quantize_model_anyprec`
+//!   produces the nested bit-plane layout instead: one max-width GANQ
+//!   solve per layer plus per-width codebook re-fits, servable at every
+//!   requested width from a single resident artifact.
 //! * `serve` — the online path, organized around a request lifecycle:
 //!   a [`GenRequest`] carries per-request [`SamplingParams`]
 //!   (temperature / top-k / top-p / seed; temperature 0 is the exact
@@ -20,7 +23,10 @@
 //!   `(seed, draw index)` regardless of batch composition, preemption,
 //!   or prefill chunking. [`serve_events`] streams [`TokenEvent`]s
 //!   incrementally; every request ends in a [`GenOutcome`] with a
-//!   [`FinishReason`].
+//!   [`FinishReason`]. On any-precision models ([`AnyPrecBackend`]) a
+//!   [`PrecisionPolicy`] picks the serving width per admission — fixed,
+//!   or load-adaptive with queue-depth hysteresis — with admitted
+//!   requests pinned to their admission-time width.
 //! * `metrics` — request latency + throughput + weight-traffic accounting
 //!   (Table 6's CUDA-time/speedup/peak-memory analogues), per-finish-
 //!   reason counts and cancelled-token waste, plus block-pool occupancy /
@@ -81,13 +87,17 @@ pub use cluster::{
     Fault, FaultPlan, ReplicaEngine, ReplicaStats, RoundCtx,
 };
 pub use metrics::{FinishCounts, RequestMetrics, ServeMetrics};
-pub use pipeline::{calibrate, quantize_model, Calibration, QuantEngine};
+pub use pipeline::{
+    calibrate, quantize_model, quantize_model_anyprec, Calibration,
+    QuantEngine,
+};
 pub use serve::{
-    serve, serve_events, serve_with, CancelHandle, DecodeBackend,
-    FinishReason, GenOutcome, GenRequest, HloBackend, KvStoreKind,
-    NativeBackend, PagedNativeBackend, Sampler, SamplerStep,
-    SamplingParams, ServeOptions, SlotWork, StopCriteria, TokenEvent,
-    WeightFmt, DEFAULT_PREFILL_CHUNK, DEFAULT_SERVE_WINDOW,
+    serve, serve_events, serve_with, AnyPrecBackend, CancelHandle,
+    DecodeBackend, FinishReason, GenOutcome, GenRequest, HloBackend,
+    KvStoreKind, NativeBackend, PagedNativeBackend, PrecisionPolicy,
+    Sampler, SamplerStep, SamplingParams, ServeOptions, SlotWork,
+    StopCriteria, TokenEvent, WeightFmt, DEFAULT_PREFILL_CHUNK,
+    DEFAULT_SERVE_WINDOW,
 };
 pub use server::{
     recv_outcome, recv_outcome_timeout, serve_batch, ServerHandle,

@@ -108,6 +108,77 @@ pub fn quantize_model(
     })
 }
 
+/// Quantize every decoder linear into the nested any-precision layout:
+/// one GANQ solve at the max width per layer, then
+/// [`BitPlaneStore::derive`] re-fits a codebook for each narrower width
+/// against the same calibration Gram (the seedless upgrade path — no
+/// second calibration pass). The resulting model serves every width in
+/// `widths` from one resident artifact (`QuantizedModel::anyprec_widths`),
+/// and `weight_bits` counts the nested storage: max-width planes once +
+/// all per-width codebooks.
+pub fn quantize_model_anyprec(
+    store: &WeightStore,
+    calib: &Calibration,
+    widths: &[u8],
+    engine: &QuantEngine,
+    verbose: bool,
+) -> Result<QuantizedModel, String> {
+    let mut ws: Vec<u8> = widths.to_vec();
+    ws.sort_unstable();
+    ws.dedup();
+    if ws.is_empty() {
+        return Err("anyprec needs at least one width".into());
+    }
+    if ws[0] < 1 || *ws.last().expect("nonempty") > 8 {
+        return Err(format!("unsupported widths {:?}", ws));
+    }
+    let bits = *ws.last().expect("nonempty");
+    let q: Box<dyn Quantizer> =
+        quant::by_name("ganq", bits).ok_or("ganq unavailable")?;
+    let mut linears = BTreeMap::new();
+    let mut weight_bits = 0usize;
+    for (name, _m, _n) in store.cfg.linear_shapes() {
+        let w = store.mat(&name);
+        let h = calib
+            .grams
+            .get(&name)
+            .ok_or_else(|| format!("no calibration for {}", name))?;
+        let result = match engine {
+            QuantEngine::Hlo(rt) => {
+                match ganq_hlo::quantize_layer_hlo(rt, &w, h, bits)? {
+                    Some(r) => r,
+                    None => q.quantize(&w, h),
+                }
+            }
+            QuantEngine::Native => q.quantize(&w, h),
+        };
+        let lut = result
+            .lut
+            .as_ref()
+            .ok_or_else(|| format!("{}: ganq produced no LUT layer", name))?;
+        let bp = crate::quant::BitPlaneStore::derive(lut, &w, h, &ws);
+        if verbose {
+            let rep = bp.storage_report();
+            eprintln!(
+                "  [anyprec {:?}b] {}: nested {} bits vs standalone {} bits",
+                ws,
+                name,
+                rep.nested.total_bits(),
+                rep.standalone_total_bits()
+            );
+        }
+        weight_bits += bp.storage().total_bits();
+        linears.insert(name.clone(), LayerWeights::AnyPrec(bp));
+    }
+    Ok(QuantizedModel {
+        base: store.clone(),
+        method: "ganq-anyprec".to_string(),
+        bits,
+        linears,
+        weight_bits,
+    })
+}
+
 /// Sequential (error-propagating) variant: decoder blocks are quantized
 /// in order, and the calibration Grams for each block are captured by
 /// forwarding through the *already-quantized* prefix — so later layers
@@ -286,6 +357,68 @@ mod tests {
         let e_par = total_layer_error(&store, &qm_par, &calib);
         assert!(e_seq.is_finite() && e_par.is_finite());
         assert!(e_seq < 4.0 * e_par + 1e-9, "{} vs {}", e_seq, e_par);
+    }
+
+    #[test]
+    fn anyprec_pipeline_nests_and_matches_max_width_ganq() {
+        let (store, calib) = setup();
+        let qa = quantize_model_anyprec(
+            &store,
+            &calib,
+            &[2, 3, 4],
+            &QuantEngine::Native,
+            false,
+        )
+        .unwrap();
+        assert_eq!(qa.method, "ganq-anyprec");
+        assert_eq!(qa.bits, 4);
+        assert_eq!(qa.anyprec_widths(), vec![2, 3, 4]);
+        assert_eq!(qa.linears.len(), store.cfg.linear_shapes().len());
+        // the max-width family is the plain 4-bit GANQ solve verbatim, so
+        // the model-level error matches the non-nested pipeline exactly
+        let qg =
+            quantize_model(&store, "ganq", 4, &calib, &QuantEngine::Native, false)
+                .unwrap();
+        let ea = total_layer_error(&store, &qa, &calib);
+        let eg = total_layer_error(&store, &qg, &calib);
+        assert!(
+            (ea - eg).abs() <= 1e-6 * eg.max(1e-12),
+            "anyprec@4 {} vs ganq4 {}",
+            ea,
+            eg
+        );
+        // nested accounting: one plane set + 3 codebooks beats 3
+        // standalone width families, and weight_bits records the former
+        let mut nested = 0usize;
+        let mut standalone = 0usize;
+        for lw in qa.linears.values() {
+            let LayerWeights::AnyPrec(b) = lw else {
+                panic!("expected nested linears")
+            };
+            let rep = b.storage_report();
+            nested += rep.nested.total_bits();
+            standalone += rep.standalone_total_bits();
+        }
+        assert_eq!(nested, qa.weight_bits);
+        assert!(nested < standalone, "{} !< {}", nested, standalone);
+        // narrower slices trade accuracy for bits
+        let e2: f64 = store
+            .cfg
+            .linear_shapes()
+            .iter()
+            .map(|(name, _, _)| {
+                let w = store.mat(name);
+                let LayerWeights::AnyPrec(b) = &qa.linears[name] else {
+                    panic!("expected nested linears")
+                };
+                crate::tensor::linalg::layer_error(
+                    &w,
+                    &b.slice(2).dequant(),
+                    &calib.grams[name],
+                )
+            })
+            .sum();
+        assert!(e2 > ea, "2-bit err {} should exceed 4-bit {}", e2, ea);
     }
 
     #[test]

@@ -76,7 +76,25 @@
 //! immediately preempted) is rejected rather than wedging the batch: it
 //! completes with [`FinishReason::Rejected`] carrying whatever it
 //! generated so far (usually nothing).
+//!
+//! ## Load-adaptive precision (any-precision backends)
+//!
+//! When the backend serves a nested any-precision model
+//! ([`AnyPrecBackend`] over `quant::anyprec::BitPlaneStore`s), the
+//! scheduler can trade a little accuracy for queue drain under load via
+//! a [`PrecisionPolicy`] in [`ServeOptions`]: `Fixed(w)` pins every
+//! admission to `w` bits; `Auto` degrades **new admissions** to the low
+//! width once queue depth crosses `degrade_depth` and restores the high
+//! width when it falls back to `restore_depth` (hysteresis, so the
+//! policy cannot flap every round). A request's width is pinned at its
+//! first admission and survives preemption/re-admission, so every
+//! already-admitted stream is unaffected by later switches and each
+//! output is a deterministic function of `(request, width)`. Switches
+//! and per-width token counts surface in
+//! [`ServeMetrics::precision_switches`] / `tokens_by_width` and as
+//! `serve.precision_switch` trace instants.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
@@ -464,6 +482,20 @@ pub trait DecodeBackend {
     fn pool_stats(&self) -> Option<KvPoolStats> {
         None
     }
+
+    /// Decode widths this backend can pin per slot, ascending (nested
+    /// any-precision models). Empty means fixed-width: only
+    /// [`PrecisionPolicy::Native`] is valid.
+    fn widths(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Pin `slot` to decode at `w` bits for its current residency
+    /// (called right after a successful `admit`). No-op on fixed-width
+    /// backends; any-precision backends ignore unsupported widths.
+    fn set_slot_width(&mut self, slot: usize, w: u8) {
+        let _ = (slot, w);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -476,7 +508,47 @@ pub const DEFAULT_PREFILL_CHUNK: usize = 128;
 /// Default threaded-server micro-batch drain window (`server`).
 pub const DEFAULT_SERVE_WINDOW: usize = 16;
 
-/// Scheduling knobs (`--prefill-chunk` / `--serve-window` on the CLI).
+/// How the scheduler picks a decode width for new admissions on a
+/// backend that serves several nested widths (see the module docs'
+/// *Load-adaptive precision* section). The policy only ever applies at
+/// admission: an admitted request keeps its width for its whole
+/// lifetime, across preemptions, so its output stays deterministic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PrecisionPolicy {
+    /// Serve at the backend's native width; no per-slot pinning. The
+    /// only valid policy for fixed-width backends.
+    #[default]
+    Native,
+    /// Pin every admission to `w` bits.
+    Fixed(u8),
+    /// Degrade admissions from `high` to `low` bits while the queue is
+    /// deeper than `degrade_depth`; restore once it drains to
+    /// `restore_depth` or below. `restore_depth < degrade_depth` gives
+    /// the hysteresis band.
+    Auto {
+        high: u8,
+        low: u8,
+        degrade_depth: usize,
+        restore_depth: usize,
+    },
+}
+
+impl PrecisionPolicy {
+    /// The default auto policy between the two widths (degrade when
+    /// more requests wait than fit the backend, restore when nearly
+    /// drained).
+    pub fn auto(high: u8, low: u8, slots: usize) -> PrecisionPolicy {
+        PrecisionPolicy::Auto {
+            high,
+            low,
+            degrade_depth: slots.max(1) * 2,
+            restore_depth: 1,
+        }
+    }
+}
+
+/// Scheduling knobs (`--prefill-chunk` / `--serve-window` /
+/// `--precision` on the CLI).
 #[derive(Debug, Clone, Copy)]
 pub struct ServeOptions {
     /// Prompt positions the scheduler may feed per step, across slots.
@@ -486,6 +558,8 @@ pub struct ServeOptions {
     /// Most requests the threaded server (`coordinator::server`) drains
     /// into one continuous-batching round.
     pub serve_window: usize,
+    /// Admission-width policy for any-precision backends.
+    pub precision: PrecisionPolicy,
 }
 
 impl Default for ServeOptions {
@@ -493,6 +567,7 @@ impl Default for ServeOptions {
         ServeOptions {
             prefill_chunk: DEFAULT_PREFILL_CHUNK,
             serve_window: DEFAULT_SERVE_WINDOW,
+            precision: PrecisionPolicy::Native,
         }
     }
 }
@@ -506,6 +581,8 @@ struct SlotState {
     /// the full generated stream across residencies — its length is the
     /// sampler's RNG draw index, so preemption cannot shift draws
     generated: Vec<i32>,
+    /// decode width pinned at first admission (0 = backend-native)
+    width: u8,
     metrics: RequestMetrics,
 }
 
@@ -514,6 +591,9 @@ struct SlotState {
 struct Queued {
     req: GenRequest,
     generated: Vec<i32>,
+    /// width pinned at a previous residency (0 = not yet admitted);
+    /// preserved so preemption cannot change an output mid-stream
+    width: u8,
     metrics: Option<RequestMetrics>,
 }
 
@@ -591,7 +671,7 @@ pub fn serve_events(
             if r.prompt.len() > budget {
                 r.prompt = r.prompt[r.prompt.len() - budget..].to_vec();
             }
-            Queued { req: r, generated: Vec::new(), metrics: None }
+            Queued { req: r, generated: Vec::new(), width: 0, metrics: None }
         })
         .collect();
     let mut slots: Vec<Option<SlotState>> =
@@ -607,6 +687,46 @@ pub fn serve_events(
     let mut stalls = 0usize;
     let mut step_ms = Histogram::new();
     let mut kv_occupancy = Histogram::new();
+
+    // resolve the admission-width policy against the backend up front so
+    // a misconfigured serve fails loudly instead of silently pinning
+    // widths a backend ignores
+    let policy = opts.precision;
+    let bwidths = backend.widths();
+    let mut cur_width: u8 = match policy {
+        PrecisionPolicy::Native => 0,
+        PrecisionPolicy::Fixed(w) => {
+            if !bwidths.contains(&w) {
+                return Err(format!(
+                    "precision policy wants {}-bit but the backend serves \
+                     {:?}",
+                    w, bwidths
+                ));
+            }
+            w
+        }
+        PrecisionPolicy::Auto { high, low, degrade_depth, restore_depth } => {
+            for w in [high, low] {
+                if !bwidths.contains(&w) {
+                    return Err(format!(
+                        "precision policy wants {}-bit but the backend \
+                         serves {:?}",
+                        w, bwidths
+                    ));
+                }
+            }
+            if low >= high || restore_depth >= degrade_depth {
+                return Err(format!(
+                    "auto precision needs low < high and restore_depth < \
+                     degrade_depth, got {:?}",
+                    policy
+                ));
+            }
+            high
+        }
+    };
+    let mut precision_switches = 0usize;
+    let mut tokens_by_width: BTreeMap<u8, u64> = BTreeMap::new();
 
     // finish an active slot: release its KV, trim the output, emit Done
     macro_rules! finish_slot {
@@ -675,6 +795,38 @@ pub fn serve_events(
             }
         }
 
+        // precision hysteresis: pick this round's admission width from
+        // the queue depth BEFORE admitting, so the requests admitted
+        // this round already see the updated width
+        if let PrecisionPolicy::Auto {
+            high,
+            low,
+            degrade_depth,
+            restore_depth,
+        } = policy
+        {
+            let depth = queue.len();
+            let want = if cur_width == high {
+                if depth >= degrade_depth {
+                    low
+                } else {
+                    high
+                }
+            } else if depth <= restore_depth {
+                high
+            } else {
+                low
+            };
+            if want != cur_width {
+                cur_width = want;
+                precision_switches += 1;
+                trace::instant(
+                    "serve.precision_switch",
+                    &[("width", want as f64), ("depth", depth as f64)],
+                );
+            }
+        }
+
         // admit in FIFO order; a paged backend may refuse (pool full)
         let mut admitted_n = 0usize;
         let mut prefix_skipped = 0usize;
@@ -720,11 +872,19 @@ pub fn serve_events(
                     }
                     admitted_n += 1;
                     prefix_skipped += cached;
+                    // first admission picks up the round's width; a
+                    // re-admitted preemption victim keeps its pin
+                    let width =
+                        if q.width != 0 { q.width } else { cur_width };
+                    if width != 0 {
+                        backend.set_slot_width(si, width);
+                    }
                     slots[si] = Some(SlotState {
                         req: q.req,
                         prompt,
                         prompt_idx: cached,
                         generated: q.generated,
+                        width,
                         metrics,
                     });
                 }
@@ -808,6 +968,7 @@ pub fn serve_events(
             queue.push_front(Queued {
                 req: st.req,
                 generated: st.generated,
+                width: st.width,
                 metrics: Some(m),
             });
         }
@@ -909,6 +1070,11 @@ pub fn serve_events(
                             st.metrics.first_token_ms =
                                 Some(rel_ms(t_start, Instant::now()));
                         }
+                        if st.width != 0 {
+                            *tokens_by_width
+                                .entry(st.width)
+                                .or_insert(0) += 1;
+                        }
                         sink(TokenEvent::Token { id: st.req.id, tok });
                     };
                     match Sampler::next(
@@ -955,6 +1121,8 @@ pub fn serve_events(
         finish,
         cancelled_tokens,
         peak_concurrency,
+        precision_switches,
+        tokens_by_width,
         kv: backend.pool_stats(),
         step_ms,
         kv_occupancy,
@@ -1056,6 +1224,144 @@ impl<'a> DecodeBackend for NativeBackend<'a> {
         let c = self.cfg();
         // read whole cache + write one position, per layer, K and V
         c.layers * c.heads * c.ctx * c.head_dim() * 4 * 2
+    }
+}
+
+// ---------------------------------------------------------------------------
+// any-precision backend
+// ---------------------------------------------------------------------------
+
+/// Native serving over one nested any-precision artifact
+/// (`quant::anyprec::BitPlaneStore` linears): each supported width gets
+/// its own [`Engine`] resolved at that width, all borrowing the same
+/// resident weights — the bit-planes are stored once, only the per-width
+/// codebooks differ. Slots are pinned to a width at admission
+/// ([`DecodeBackend::set_slot_width`]); a step partitions its work by
+/// slot width and advances each group through its engine, so mixed-width
+/// batches stream the shared planes once per width present in the batch.
+pub struct AnyPrecBackend<'a> {
+    /// `(width, engine-at-width)`, ascending width
+    engines: Vec<(u8, Engine<'a>)>,
+    caches: Vec<KvCache>,
+    /// current decode width per slot
+    slot_w: Vec<u8>,
+    /// max nested width — what fresh slots decode at
+    default_w: u8,
+}
+
+impl<'a> AnyPrecBackend<'a> {
+    /// Build over a quantized model whose every linear is a nested
+    /// [`crate::model::LayerWeights::AnyPrec`] store (see
+    /// `coordinator::pipeline::quantize_model_anyprec`).
+    pub fn new(
+        qm: &'a QuantizedModel,
+        slots: usize,
+    ) -> Result<AnyPrecBackend<'a>, String> {
+        let widths = qm.anyprec_widths();
+        if widths.is_empty() {
+            return Err(
+                "model has no nested any-precision linears (quantize \
+                 with --widths 2,3,4)"
+                    .into(),
+            );
+        }
+        let cfg = qm.base.cfg;
+        let w = Weights::Quant(qm);
+        let engines: Vec<(u8, Engine<'a>)> = widths
+            .iter()
+            .map(|&wd| (wd, Engine::new_at(&w, Some(wd))))
+            .collect();
+        let default_w = *widths.last().expect("nonempty widths");
+        Ok(AnyPrecBackend {
+            engines,
+            caches: (0..slots).map(|_| KvCache::new(cfg)).collect(),
+            slot_w: vec![default_w; slots],
+            default_w,
+        })
+    }
+}
+
+impl<'a> DecodeBackend for AnyPrecBackend<'a> {
+    fn slots(&self) -> usize {
+        self.caches.len()
+    }
+
+    fn cfg(&self) -> ModelConfig {
+        self.engines[0].1.cfg()
+    }
+
+    fn max_chunk(&self) -> usize {
+        usize::MAX
+    }
+
+    fn step(&mut self, work: &[SlotWork]) -> Result<Vec<Vec<f32>>, String> {
+        // partition by pinned width: one engine step per width present,
+        // each over that width's slots only
+        let mut out: Vec<Vec<f32>> = vec![Vec::new(); work.len()];
+        let slot_w = &self.slot_w;
+        let caches = &mut self.caches;
+        for (wd, eng) in self.engines.iter_mut() {
+            let idxs: Vec<usize> = work
+                .iter()
+                .enumerate()
+                .filter(|(_, wk)| slot_w[wk.slot] == *wd)
+                .map(|(i, _)| i)
+                .collect();
+            if idxs.is_empty() {
+                continue;
+            }
+            let sub: Vec<SlotWork> =
+                idxs.iter().map(|&i| work[i].clone()).collect();
+            let plan = plan_from_work(&sub);
+            let mut active = vec![false; caches.len()];
+            for wk in &sub {
+                active[wk.slot] = true;
+            }
+            let mut refs: Vec<&mut dyn KvSeq> = caches
+                .iter_mut()
+                .enumerate()
+                .filter(|(si, _)| active[*si])
+                .map(|(_, c)| c as &mut dyn KvSeq)
+                .collect();
+            let outs = eng.step(&plan, &mut SeqRefs(&mut refs));
+            for (&i, m) in idxs.iter().zip(outs) {
+                out[i] = m.data;
+            }
+        }
+        Ok(out)
+    }
+
+    fn reset_slot(&mut self, slot: usize) {
+        self.caches[slot] = KvCache::new(self.cfg());
+        self.slot_w[slot] = self.default_w;
+    }
+
+    fn slot_pos(&self, slot: usize) -> usize {
+        self.caches[slot].len
+    }
+
+    fn weight_bytes_per_step(&self) -> usize {
+        // report the widest plan — the conservative (policy-idle) figure
+        self.engines
+            .last()
+            .expect("nonempty engines")
+            .1
+            .weight_bytes_per_step()
+    }
+
+    fn kv_bytes_per_step(&self) -> usize {
+        let c = self.cfg();
+        c.layers * c.heads * c.ctx * c.head_dim() * 4 * 2
+    }
+
+    fn widths(&self) -> Vec<u8> {
+        self.engines.iter().map(|(w, _)| *w).collect()
+    }
+
+    fn set_slot_width(&mut self, slot: usize, w: u8) {
+        if self.engines.iter().any(|(x, _)| *x == w) {
+            self.slot_w[slot] = w;
+        }
     }
 }
 
@@ -1250,6 +1556,14 @@ pub fn weight_tensors_lut(
                         name
                     ))
                 }
+                Some(LayerWeights::AnyPrec(_)) => {
+                    return Err(format!(
+                        "{}: nested any-precision models serve via \
+                         AnyPrecBackend (--precision), not the AOT LUT \
+                         graphs",
+                        name
+                    ))
+                }
                 _ => {
                     return Err(format!(
                         "{} has no LUT form (method {})",
@@ -1359,6 +1673,9 @@ impl<'a> HloBackend<'a> {
                         l.bytes_per_decode() + s.storage_bytes()
                     }
                     LayerWeights::Dense(m) => m.data.len() * 4,
+                    LayerWeights::AnyPrec(b) => {
+                        b.bytes_per_decode(b.max_bits)
+                    }
                 })
                 .sum(),
             _ => 0,
@@ -1663,6 +1980,56 @@ impl<'a> DecodeBackend for HloBackend<'a> {
 mod tests {
     use super::*;
     use crate::model::WeightStore;
+    use crate::quant::lut::lut_from_parts;
+    use crate::quant::BitPlaneStore;
+    use crate::tensor::Mat;
+
+    /// Quantized model whose every linear is a random nested
+    /// any-precision store (widths 2/3/4).
+    fn anyprec_model(s: &WeightStore, seed: u64) -> QuantizedModel {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut linears = std::collections::BTreeMap::new();
+        for (name, m, n) in s.cfg.linear_shapes() {
+            let codes: Vec<u8> =
+                (0..m * n).map(|_| rng.below(16) as u8).collect();
+            let cb = Mat::from_vec(
+                m,
+                16,
+                rng.normal_vec_f32(m * 16)
+                    .into_iter()
+                    .map(|v| v * 0.08)
+                    .collect(),
+            );
+            let parent = lut_from_parts(m, n, 4, codes, cb);
+            linears.insert(
+                name,
+                LayerWeights::AnyPrec(BitPlaneStore::nest(
+                    &parent,
+                    &[2, 3, 4],
+                )),
+            );
+        }
+        QuantizedModel {
+            base: s.clone(),
+            method: "ganq-anyprec".into(),
+            bits: 4,
+            linears,
+            weight_bits: 0,
+        }
+    }
+
+    /// The same model with every store materialized as a standalone
+    /// `w`-bit LUT layer.
+    fn sliced_model(qm: &QuantizedModel, w: u8) -> QuantizedModel {
+        let mut out = qm.clone();
+        for lw in out.linears.values_mut() {
+            if let LayerWeights::AnyPrec(b) = lw {
+                *lw = LayerWeights::Lut(b.slice(w));
+            }
+        }
+        out.bits = w;
+        out
+    }
 
     fn backend() -> (WeightStore, Vec<GenRequest>) {
         let cfg = ModelConfig::builtin("opt-micro").unwrap();
@@ -2139,6 +2506,195 @@ mod tests {
             "deadline must cut the budget short"
         );
         assert_eq!(m.finish.deadline, 1);
+    }
+
+    #[test]
+    fn anyprec_fixed_width_matches_sliced_native() {
+        // Fixed(w) through the nested store must reproduce, token for
+        // token, a NativeBackend over the separately materialized w-bit
+        // model — the serving path changes, the math does not
+        let cfg = ModelConfig::builtin("opt-micro").unwrap();
+        let store = WeightStore::random("t", cfg, 41);
+        let qm = anyprec_model(&store, 41);
+        let reqs = vec![
+            GenRequest::greedy(1, vec![104, 105], 4),
+            GenRequest::greedy(2, vec![97, 98, 99], 6),
+            GenRequest::greedy(3, vec![120], 3),
+        ];
+        for w in [2u8, 3, 4] {
+            let mut be = AnyPrecBackend::new(&qm, 2).unwrap();
+            let (got, m) = serve_with(
+                &mut be,
+                reqs.clone(),
+                ServeOptions {
+                    precision: PrecisionPolicy::Fixed(w),
+                    ..ServeOptions::default()
+                },
+            )
+            .unwrap();
+            let std = sliced_model(&qm, w);
+            let ws = Weights::Quant(&std);
+            let mut nb = NativeBackend::new(ws, 2);
+            let (want, _) = serve(&mut nb, reqs.clone()).unwrap();
+            for (g, e) in got.iter().zip(&want) {
+                assert_eq!(g.id, e.id);
+                assert_eq!(g.tokens, e.tokens, "req {} width {}", g.id, w);
+            }
+            assert_eq!(
+                m.tokens_by_width.get(&w).copied(),
+                Some(m.total_generated() as u64),
+                "every token counted at the pinned width"
+            );
+            assert_eq!(m.precision_switches, 0, "fixed policy never flips");
+        }
+    }
+
+    #[test]
+    fn anyprec_native_policy_serves_at_max_width() {
+        let cfg = ModelConfig::builtin("opt-micro").unwrap();
+        let store = WeightStore::random("t", cfg, 44);
+        let qm = anyprec_model(&store, 44);
+        let reqs = vec![GenRequest::greedy(1, vec![9, 8, 7], 5)];
+        let mut be = AnyPrecBackend::new(&qm, 1).unwrap();
+        let (got, m) = serve(&mut be, reqs.clone()).unwrap();
+        let mut be4 = AnyPrecBackend::new(&qm, 1).unwrap();
+        let (want, _) = serve_with(
+            &mut be4,
+            reqs,
+            ServeOptions {
+                precision: PrecisionPolicy::Fixed(4),
+                ..ServeOptions::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(got[0].tokens, want[0].tokens);
+        assert!(m.tokens_by_width.is_empty(), "native policy tracks none");
+    }
+
+    #[test]
+    fn auto_policy_degrades_restores_and_pins_admission_width() {
+        // 6 requests through 1 slot with Auto{4→3}: the opening queue
+        // depth (6 ≥ degrade_depth) degrades admissions to 3-bit; the
+        // queue drains to restore_depth while the 5th request is still
+        // decoding — it keeps its admission-time width (the mid-run pin)
+        // and only the last request is admitted back at 4-bit
+        let cfg = ModelConfig::builtin("opt-micro").unwrap();
+        let store = WeightStore::random("t", cfg, 42);
+        let qm = anyprec_model(&store, 42);
+        let reqs: Vec<GenRequest> = (0..6)
+            .map(|i| {
+                GenRequest::greedy(i, vec![10 + i as i32, 3, 7], 3)
+            })
+            .collect();
+        let mut be = AnyPrecBackend::new(&qm, 1).unwrap();
+        let (got, m) = serve_with(
+            &mut be,
+            reqs.clone(),
+            ServeOptions {
+                precision: PrecisionPolicy::Auto {
+                    high: 4,
+                    low: 3,
+                    degrade_depth: 3,
+                    restore_depth: 1,
+                },
+                ..ServeOptions::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(m.precision_switches, 2, "one degrade + one restore");
+        assert_eq!(m.tokens_by_width.get(&3), Some(&15));
+        assert_eq!(m.tokens_by_width.get(&4), Some(&3));
+        // outputs are a pure function of (request, admission width):
+        // compare each against solo generation through the standalone
+        // slice at its pinned width
+        for r in &got {
+            let w = if r.id < 5 { 3 } else { 4 };
+            let req = reqs.iter().find(|q| q.id == r.id).unwrap();
+            let std = sliced_model(&qm, w);
+            let ws = Weights::Quant(&std);
+            let want = Engine::new(&ws).generate(
+                &req.prompt,
+                3,
+                &SamplingParams::greedy(),
+            );
+            assert_eq!(r.tokens, want, "req {} at {} bits", r.id, w);
+        }
+    }
+
+    #[test]
+    fn anyprec_mixed_width_step_partitions_by_slot() {
+        // one step with slots pinned at different widths must return
+        // each slot the same logits row a single-width step would
+        let cfg = ModelConfig::builtin("opt-micro").unwrap();
+        let store = WeightStore::random("t", cfg, 43);
+        let qm = anyprec_model(&store, 43);
+        let prompt = vec![5i32, 6, 7];
+        let mut be = AnyPrecBackend::new(&qm, 2).unwrap();
+        be.admit(0, &prompt, 4).unwrap();
+        be.set_slot_width(0, 2);
+        be.admit(1, &prompt, 4).unwrap();
+        be.set_slot_width(1, 4);
+        let mk = |slot: usize| SlotWork {
+            slot,
+            tokens: prompt.clone(),
+            want_logits: true,
+        };
+        let out = be.step(&[mk(0), mk(1)]).unwrap();
+        for (w, row) in [(2u8, &out[0]), (4u8, &out[1])] {
+            let mut rb = AnyPrecBackend::new(&qm, 1).unwrap();
+            rb.admit(0, &prompt, 4).unwrap();
+            rb.set_slot_width(0, w);
+            let want = rb.step(&[mk(0)]).unwrap();
+            assert_eq!(row, &want[0], "width {}", w);
+        }
+    }
+
+    #[test]
+    fn precision_policy_validation_fails_loudly() {
+        let cfg = ModelConfig::builtin("opt-micro").unwrap();
+        let store = WeightStore::random("t", cfg, 45);
+        let qm = anyprec_model(&store, 45);
+        let reqs = vec![GenRequest::greedy(1, vec![1, 2], 2)];
+
+        // width the nested store does not carry
+        let mut be = AnyPrecBackend::new(&qm, 1).unwrap();
+        let opts = ServeOptions {
+            precision: PrecisionPolicy::Fixed(5),
+            ..ServeOptions::default()
+        };
+        assert!(serve_with(&mut be, reqs.clone(), opts).is_err());
+
+        // fixed-width backend rejects any non-native policy
+        let w = Weights::Fp(&store);
+        let mut nb = NativeBackend::new(w, 1);
+        let opts = ServeOptions {
+            precision: PrecisionPolicy::Fixed(4),
+            ..ServeOptions::default()
+        };
+        assert!(serve_with(&mut nb, reqs.clone(), opts).is_err());
+
+        // inverted hysteresis band
+        let mut be = AnyPrecBackend::new(&qm, 1).unwrap();
+        let opts = ServeOptions {
+            precision: PrecisionPolicy::Auto {
+                high: 4,
+                low: 3,
+                degrade_depth: 2,
+                restore_depth: 2,
+            },
+            ..ServeOptions::default()
+        };
+        assert!(serve_with(&mut be, reqs, opts).is_err());
+
+        // and a non-anyprec model cannot build the backend at all
+        let plain = QuantizedModel {
+            base: store.clone(),
+            method: "rtn".into(),
+            bits: 4,
+            linears: std::collections::BTreeMap::new(),
+            weight_bits: 0,
+        };
+        assert!(AnyPrecBackend::new(&plain, 1).is_err());
     }
 
     #[test]

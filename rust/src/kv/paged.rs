@@ -273,6 +273,57 @@ impl PagedKv {
         seq.tokens.extend_from_slice(toks);
     }
 
+    /// Roll a slot back to `n` cached positions (no-op when `n >= pos`):
+    /// the speculative-decoding rollback primitive. Tail blocks past the
+    /// new length are released (freed unless the prefix index still
+    /// caches them); a kept mid-block tail that was already sealed is
+    /// handled by ownership: exclusively-owned blocks are re-opened in
+    /// place (`copy_block(b, b)` materializes the staged form), shared
+    /// ones stay sealed and the next append copy-on-writes them exactly
+    /// like a divergent append into a shared prefix.
+    pub fn truncate_slot(&mut self, slot: usize, n: usize) {
+        let bs = self.block_size();
+        let (old_pos, tail) = {
+            let Some(seq) = self.slots[slot].as_mut() else {
+                return;
+            };
+            if n >= seq.pos {
+                return;
+            }
+            let old_pos = seq.pos;
+            let keep = n.div_ceil(bs);
+            let tail = seq.blocks.split_off(keep);
+            seq.tokens.truncate(n);
+            seq.pos = n;
+            (old_pos, tail)
+        };
+        let dropped = tail.len();
+        for b in tail {
+            if self.pool.release(b) {
+                self.store.clear(b);
+            }
+        }
+        let keep = n.div_ceil(bs);
+        if n % bs != 0 && old_pos >= keep * bs {
+            // the kept tail block was full (and sealed at the boundary);
+            // re-open it for the coming appends if we own it outright —
+            // sealed blocks the index or another slot still references
+            // keep their state and CoW on the next prepare_step
+            let tb = self.slots[slot].as_ref().unwrap().blocks[keep - 1];
+            if self.pool.refcount(tb) == 1 {
+                self.store.copy_block(tb, tb);
+            }
+        }
+        trace::instant(
+            "kv.truncate",
+            &[
+                ("slot", slot as f64),
+                ("dropped", (old_pos - n) as f64),
+                ("blocks", dropped as f64),
+            ],
+        );
+    }
+
     /// KvSeq view of one slot for single-sequence engine steps.
     pub fn slot_view(&mut self, slot: usize) -> SlotView<'_> {
         SlotView { kv: self, slot }
@@ -489,6 +540,10 @@ impl KvSeq for SlotView<'_> {
 
     fn advance(&mut self, n: usize) {
         self.kv.advance_n(self.slot, n);
+    }
+
+    fn truncate(&mut self, n: usize) {
+        self.kv.truncate_slot(self.slot, n);
     }
 }
 
@@ -770,5 +825,140 @@ mod tests {
         assert_eq!(kv.admit(0, &long, 4), None);
         let short: Vec<i32> = vec![1, 2];
         assert!(kv.admit(0, &short, 2).is_some());
+    }
+
+    #[test]
+    fn truncate_releases_tail_blocks() {
+        let mut kv = paged(8, 1);
+        let toks: Vec<i32> = (0..10).collect(); // 2.5 blocks of 4
+        kv.admit(0, &toks, 1).unwrap();
+        run_tokens(&mut kv, 0, &toks);
+        assert_eq!(kv.slots[0].as_ref().unwrap().blocks.len(), 3);
+        let free_before = kv.pool.free_blocks();
+
+        // drop back to 5 positions: the open tail block (8..10) is freed
+        // outright; the sealed mid-block tail (4..8) stays (index-cached)
+        kv.slot_view(0).truncate(5);
+        assert_eq!(kv.pos(0), 5);
+        assert_eq!(kv.slots[0].as_ref().unwrap().blocks.len(), 2);
+        assert_eq!(kv.pool.free_blocks(), free_before + 1);
+
+        // kept positions still read back exactly (dense store)
+        let mut row = [0.0f32; 2];
+        for sj in 0..5 {
+            kv.slot_view(0).read_k(0, 0, sj, &mut row);
+            assert_eq!(row, [sj as f32, -(sj as f32)], "pos {}", sj);
+        }
+        // truncating at or past the current length is a no-op
+        kv.slot_view(0).truncate(5);
+        kv.slot_view(0).truncate(99);
+        assert_eq!(kv.pos(0), 5);
+    }
+
+    #[test]
+    fn truncate_shared_sealed_tail_cows_on_next_append() {
+        let mut kv = paged(8, 1);
+        let toks: Vec<i32> = (0..8).collect(); // exactly 2 sealed blocks
+        kv.admit(0, &toks, 1).unwrap();
+        run_tokens(&mut kv, 0, &toks);
+        let b1 = kv.slots[0].as_ref().unwrap().blocks[1];
+        assert_eq!(kv.pool.refcount(b1), 2, "slot + index");
+
+        // roll back into the sealed tail: it stays sealed (the index
+        // still caches it), so the divergent re-append must CoW
+        kv.slot_view(0).truncate(5);
+        assert_eq!(kv.pos(0), 5);
+        assert_eq!(kv.slots[0].as_ref().unwrap().blocks[1], b1);
+        run_tokens(&mut kv, 0, &[70, 80, 90]);
+        assert_eq!(kv.stats().cow_copies, 1);
+        assert_ne!(kv.slots[0].as_ref().unwrap().blocks[1], b1);
+
+        // the slot sees kept history + the rewrite...
+        let mut row = [0.0f32; 2];
+        kv.slot_view(0).read_k(0, 0, 4, &mut row);
+        assert_eq!(row, [4.0, -4.0]);
+        kv.slot_view(0).read_k(0, 0, 5, &mut row);
+        assert_eq!(row, [70.0, -70.0]);
+        // ...while the original prefix stays intact in the index
+        assert_eq!(kv.index.peek(&toks, 4), 2);
+    }
+
+    #[test]
+    fn truncate_to_zero_then_reuse_slot() {
+        let mut kv = paged(4, 1);
+        let toks: Vec<i32> = (0..6).collect();
+        kv.admit(0, &toks, 1).unwrap();
+        run_tokens(&mut kv, 0, &toks);
+        kv.slot_view(0).truncate(0);
+        assert_eq!(kv.pos(0), 0);
+        assert!(kv.slots[0].as_ref().unwrap().blocks.is_empty());
+        // the slot stays admitted and can rebuild from scratch
+        run_tokens(&mut kv, 0, &[9, 8, 7]);
+        assert_eq!(kv.pos(0), 3);
+        let mut row = [0.0f32; 2];
+        kv.slot_view(0).read_k(0, 0, 0, &mut row);
+        assert_eq!(row, [9.0, -9.0]);
+    }
+
+    #[test]
+    fn truncate_matches_straight_run_after_reappend() {
+        // rollback + re-append must be indistinguishable from a cache
+        // that only ever saw the final history
+        let mut kv = paged(8, 1);
+        kv.admit(0, &(0..10).collect::<Vec<i32>>(), 1).unwrap();
+        run_tokens(&mut kv, 0, &(0..10).collect::<Vec<i32>>());
+        kv.slot_view(0).truncate(6);
+        run_tokens(&mut kv, 0, &[60, 61, 62]);
+
+        let straight: Vec<i32> =
+            (0..6).chain([60, 61, 62]).collect();
+        let mut kv_ref = paged(8, 1);
+        kv_ref.admit(0, &straight, 1).unwrap();
+        run_tokens(&mut kv_ref, 0, &straight);
+
+        assert_eq!(kv.pos(0), kv_ref.pos(0));
+        let mut a = [0.0f32; 2];
+        let mut b = [0.0f32; 2];
+        for sj in 0..9 {
+            kv.slot_view(0).read_k(0, 0, sj, &mut a);
+            kv_ref.slot_view(0).read_k(0, 0, sj, &mut b);
+            assert_eq!(a, b, "k pos {}", sj);
+            kv.slot_view(0).read_v(0, 0, sj, &mut a);
+            kv_ref.slot_view(0).read_v(0, 0, sj, &mut b);
+            assert_eq!(a, b, "v pos {}", sj);
+        }
+    }
+
+    #[test]
+    fn truncate_through_quantized_store() {
+        use super::super::store::LutBlocks;
+        let l = KvLayout { layers: 1, heads: 1, head_dim: 2, block_size: 4 };
+        let mut kv = PagedKv::new(Box::new(LutBlocks::new(l, 8)), 8, 1);
+        let toks: Vec<i32> = (0..10).collect();
+        kv.admit(0, &toks, 1).unwrap();
+        run_tokens(&mut kv, 0, &toks);
+
+        // roll back into the sealed second block and re-append: the CoW
+        // copy dequantizes the kept rows, so reads stay within LUT
+        // tolerance and new rows are exact (staged f32)
+        kv.slot_view(0).truncate(5);
+        run_tokens(&mut kv, 0, &[21, 22]);
+        assert_eq!(kv.pos(0), 7);
+        let mut row = [0.0f32; 2];
+        for sj in 0..5 {
+            kv.slot_view(0).read_k(0, 0, sj, &mut row);
+            let want = sj as f32;
+            // same single-quantization error bound the store tests pin
+            assert!(
+                (row[0] - want).abs() < 0.8 && (row[1] + want).abs() < 0.8,
+                "pos {}: {:?}",
+                sj,
+                row
+            );
+        }
+        kv.slot_view(0).read_k(0, 0, 5, &mut row);
+        assert_eq!(row, [21.0, -21.0]);
+        kv.slot_view(0).read_k(0, 0, 6, &mut row);
+        assert_eq!(row, [22.0, -22.0]);
     }
 }

@@ -60,6 +60,28 @@
 //! and with it the TTFT win, is uniform across all three serving
 //! backends.
 //!
+//! ## Any-precision weights: one artifact, many widths
+//!
+//! `quant::anyprec::BitPlaneStore` decomposes a parent 4-bit GANQ
+//! solution into per-bit planes (bit p of every code, bitpacked row by
+//! row) with a fitted codebook per width, so the top-`w` planes plus the
+//! `w`-bit codebook reconstruct a valid `w`-bit model for every
+//! `w ∈ {2,3,4}` — memory holds max-width planes once plus the small
+//! per-width codebooks, not one model per width.
+//! `coordinator::quantize_model_anyprec` builds it from a single
+//! max-width solve (narrower codebooks come from count-weighted child
+//! merges refined by one exact GANQ T-step against the same calibration
+//! Gram — the seedless upgrade path), `quant::kernels` streams only the
+//! top-`w` planes through the mpGEMM (`lut_gemm_planes_into`, bitwise
+//! equal to the standalone sliced layer), and `Engine::new_at` /
+//! `set_width` re-resolve the per-layer plans at any stored width. In
+//! serving, `coordinator::AnyPrecBackend` holds one engine per width
+//! over the shared planes and a `PrecisionPolicy` picks the width per
+//! admission — `Fixed(w)`, or `Auto` with queue-depth hysteresis that
+//! degrades new admissions under load and restores when drained, each
+//! request pinned to its admission-time width for determinism
+//! (`ganq serve --precision auto|2|3|4`).
+//!
 //! ## Serving: the request lifecycle
 //!
 //! The serving front (`coordinator::serve` / `coordinator::server`) is

@@ -26,7 +26,7 @@ use crate::model::{
 };
 use crate::obs::trace;
 use crate::quant::kernels::{self, LutScratch, PackedLut};
-use crate::quant::LutLayer;
+use crate::quant::{BitPlaneStore, LutLayer};
 use crate::sparse::Csr;
 use crate::tensor::{self, Mat};
 use crate::util::pool;
@@ -180,6 +180,13 @@ pub trait KvSeq {
     }
     /// Commit the step: `pos += n` appended positions.
     fn advance(&mut self, n: usize);
+    /// Roll the sequence back to `n` cached positions (no-op when
+    /// `n >= pos()`). The rollback primitive for speculative decoding:
+    /// rejected draft positions are discarded, and paged stores release
+    /// the now-unused tail blocks. After `truncate(n)`, the next step's
+    /// writes land at `n..` exactly as if positions `n..` were never
+    /// appended.
+    fn truncate(&mut self, n: usize);
 }
 
 /// Per-sequence contiguous KV cache for the native path.
@@ -290,6 +297,13 @@ impl KvSeq for KvCache {
 
     fn advance(&mut self, n: usize) {
         self.len += n;
+    }
+
+    fn truncate(&mut self, n: usize) {
+        // contiguous storage: clamping the length suffices — stale rows
+        // beyond `n` are overwritten by the next append at those
+        // positions before anything reads them
+        self.len = n.min(self.len);
     }
 }
 
@@ -592,6 +606,11 @@ enum LinearPlan<'w> {
     /// single-row steps holds at every code width
     Codes(&'w LutLayer),
     CodesSparse(&'w LutLayer, &'w Csr),
+    /// nested any-precision store served at one of its widths: the
+    /// kernel streams only the top-`w` bit-planes (no per-width packed
+    /// copy exists), bitwise identical to `Packed` over the
+    /// materialized `w`-bit slice
+    Planes(&'w BitPlaneStore, u8),
 }
 
 impl LinearPlan<'_> {
@@ -625,6 +644,9 @@ impl LinearPlan<'_> {
                 );
                 sp.spmm_add(x, out);
             }
+            LinearPlan::Planes(b, w) => {
+                kernels::lut_gemm_planes_into(b, *w, x, sc, out)
+            }
         }
     }
 
@@ -642,6 +664,8 @@ impl LinearPlan<'_> {
             LinearPlan::CodesSparse(l, sp) => {
                 l.m * l.n + l.m * l.k() * 4 + sp.storage_bytes()
             }
+            // only the top-w planes + that width's codebook stream
+            LinearPlan::Planes(b, w) => b.bytes_per_decode(*w),
         }
     }
 }
@@ -741,6 +765,12 @@ impl BatchScratch {
 /// point.
 pub struct Engine<'w> {
     cfg: ModelConfig,
+    /// the weight provider, kept so plans can be re-resolved at another
+    /// serving width ([`Engine::set_width`]) without rebuilding the
+    /// engine or touching the FP tensors
+    weights: Weights<'w>,
+    /// serving width for any-precision linears (None = each store's max)
+    width: Option<u8>,
     /// token embedding, borrowed — doubles as the tied head weight
     /// (`Tensor::as_mat` clones per call; the engine never does)
     tok_emb: &'w Tensor,
@@ -755,6 +785,13 @@ pub struct Engine<'w> {
 
 impl<'w> Engine<'w> {
     pub fn new(w: &Weights<'w>) -> Engine<'w> {
+        Engine::new_at(w, None)
+    }
+
+    /// Engine serving any-precision linears at `width` bits (`None` =
+    /// each nested store's maximum width). Non-anyprec weights ignore
+    /// the width entirely.
+    pub fn new_at(w: &Weights<'w>, width: Option<u8>) -> Engine<'w> {
         let store = w.store();
         let cfg = store.cfg;
         let keys = LayerKeys::build(cfg.layers);
@@ -768,13 +805,15 @@ impl<'w> Engine<'w> {
                 linears: key
                     .lin
                     .iter()
-                    .map(|(wn, _)| plan_linear(w, wn))
+                    .map(|(wn, _)| plan_linear(w, wn, width))
                     .collect(),
                 biases: key.lin.iter().map(|(_, bn)| store.vec(bn)).collect(),
             })
             .collect();
         Engine {
             cfg,
+            weights: *w,
+            width,
             tok_emb: store.get("tok_emb"),
             pos_emb: &store.get("pos_emb").data,
             ln_f_g: store.vec("ln_f_g"),
@@ -787,6 +826,28 @@ impl<'w> Engine<'w> {
 
     pub fn cfg(&self) -> ModelConfig {
         self.cfg
+    }
+
+    /// Serving width for any-precision linears (None = max width).
+    pub fn width(&self) -> Option<u8> {
+        self.width
+    }
+
+    /// Re-resolve every linear plan at a different any-precision width.
+    /// The weight planes are shared across widths, so this only swaps
+    /// which codebook + how many planes each plan reads — no FP weights
+    /// are touched and KV caches are unaffected.
+    pub fn set_width(&mut self, width: u8) {
+        if self.width == Some(width) {
+            return;
+        }
+        self.width = Some(width);
+        let w = self.weights;
+        for (lp, key) in self.layers.iter_mut().zip(&self.keys) {
+            for (slot, (wn, _)) in key.lin.iter().enumerate() {
+                lp.linears[slot] = plan_linear(&w, wn, Some(width));
+            }
+        }
     }
 
     /// Weight bytes streamed per step (each linear exactly once,
@@ -1309,7 +1370,11 @@ fn apply_linear(
     add_bias(out, lp.biases[slot]);
 }
 
-fn plan_linear<'w>(w: &Weights<'w>, name: &str) -> LinearPlan<'w> {
+fn plan_linear<'w>(
+    w: &Weights<'w>,
+    name: &str,
+    width: Option<u8>,
+) -> LinearPlan<'w> {
     match *w {
         Weights::Fp(s) => LinearPlan::Fp(s.get(name)),
         Weights::Quant(q) => match q.linears.get(name) {
@@ -1323,6 +1388,17 @@ fn plan_linear<'w>(w: &Weights<'w>, name: &str) -> LinearPlan<'w> {
             }
             Some(LayerWeights::LutSparse(l, sp)) => {
                 LinearPlan::CodesSparse(l, sp)
+            }
+            Some(LayerWeights::AnyPrec(b)) => {
+                let w = width.unwrap_or(b.max_bits);
+                assert!(
+                    b.codebooks.contains_key(&w),
+                    "{}: width {} not in anyprec store {:?}",
+                    name,
+                    w,
+                    b.widths()
+                );
+                LinearPlan::Planes(b, w)
             }
             None => LinearPlan::Fp(q.base.get(name)),
         },
@@ -1736,6 +1812,146 @@ mod tests {
             .map(|(_, m, n)| m * n * 4)
             .sum();
         assert_eq!(engine.weight_bytes_per_step(), expect);
+    }
+
+    #[test]
+    fn kv_truncate_rolls_back_decode_state() {
+        // decoding past n, truncating back to n, then continuing must be
+        // bitwise identical to never having decoded past n — the
+        // speculative-decoding rollback contract
+        let s = micro();
+        let w = Weights::Fp(&s);
+        let mut engine = Engine::new(&w);
+        let toks = [3i32, 14, 15, 92, 65, 35, 89];
+
+        let mut c_ref = KvCache::new(s.cfg);
+        for &t in &toks[..4] {
+            decode_one(&mut engine, t, &mut c_ref);
+        }
+        let expect = decode_one(&mut engine, 42, &mut c_ref);
+
+        let mut c = KvCache::new(s.cfg);
+        for &t in &toks {
+            decode_one(&mut engine, t, &mut c);
+        }
+        c.truncate(4);
+        assert_eq!(c.pos(), 4);
+        let got = decode_one(&mut engine, 42, &mut c);
+        assert_eq!(got, expect, "post-truncate decode diverged");
+    }
+
+    #[test]
+    fn kv_truncate_past_len_is_noop() {
+        let s = micro();
+        let w = Weights::Fp(&s);
+        let mut engine = Engine::new(&w);
+        let mut c = KvCache::new(s.cfg);
+        for &t in &[1i32, 2, 3] {
+            decode_one(&mut engine, t, &mut c);
+        }
+        c.truncate(99);
+        assert_eq!(c.pos(), 3);
+        c.truncate(0);
+        assert_eq!(c.pos(), 0);
+    }
+
+    /// Quantized model whose every linear is a random nested
+    /// any-precision store (widths 2/3/4).
+    fn anyprec_model(s: &WeightStore, seed: u64) -> crate::model::QuantizedModel {
+        use crate::quant::lut::lut_from_parts;
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut linears = std::collections::BTreeMap::new();
+        for (name, m, n) in s.cfg.linear_shapes() {
+            let codes: Vec<u8> =
+                (0..m * n).map(|_| rng.below(16) as u8).collect();
+            let cb = Mat::from_vec(
+                m,
+                16,
+                rng.normal_vec_f32(m * 16)
+                    .into_iter()
+                    .map(|v| v * 0.08)
+                    .collect(),
+            );
+            let parent = lut_from_parts(m, n, 4, codes, cb);
+            linears.insert(
+                name,
+                LayerWeights::AnyPrec(BitPlaneStore::nest(
+                    &parent,
+                    &[2, 3, 4],
+                )),
+            );
+        }
+        crate::model::QuantizedModel {
+            base: s.clone(),
+            method: "ganq-anyprec".into(),
+            bits: 4,
+            linears,
+            weight_bits: 0,
+        }
+    }
+
+    /// The same model with every store materialized as a standalone
+    /// `w`-bit LUT layer.
+    fn sliced_model(
+        qm: &crate::model::QuantizedModel,
+        w: u8,
+    ) -> crate::model::QuantizedModel {
+        let mut out = qm.clone();
+        for lw in out.linears.values_mut() {
+            if let LayerWeights::AnyPrec(b) = lw {
+                *lw = LayerWeights::Lut(b.slice(w));
+            }
+        }
+        out.bits = w;
+        out
+    }
+
+    #[test]
+    fn anyprec_engine_matches_standalone_slices_bitwise() {
+        // serving through the plane-streaming plan must equal the packed
+        // path over a separately materialized w-bit model, bit for bit
+        let s = micro();
+        let qm = anyprec_model(&s, 21);
+        assert_eq!(qm.anyprec_widths(), vec![2, 3, 4]);
+        let toks = vec![vec![3i32, 1, 4, 1, 5, 9, 2, 6]];
+        for w in [2u8, 3, 4] {
+            let a = Engine::new_at(&Weights::Quant(&qm), Some(w))
+                .prefill_full(&toks, None);
+            let std = sliced_model(&qm, w);
+            let b = Engine::new(&Weights::Quant(&std)).prefill_full(&toks, None);
+            assert_eq!(a.data, b.data, "width {}", w);
+        }
+    }
+
+    #[test]
+    fn engine_set_width_reresolves_plans() {
+        let s = micro();
+        let qm = anyprec_model(&s, 22);
+        let toks = vec![vec![8i32, 6, 7, 5, 3, 0, 9]];
+        let w4 = Engine::new_at(&Weights::Quant(&qm), Some(4))
+            .prefill_full(&toks, None);
+        let w3 = Engine::new_at(&Weights::Quant(&qm), Some(3))
+            .prefill_full(&toks, None);
+        assert_ne!(w4.data, w3.data, "widths should differ on random codes");
+
+        let mut engine = Engine::new_at(&Weights::Quant(&qm), Some(4));
+        assert_eq!(engine.width(), Some(4));
+        assert_eq!(engine.prefill_full(&toks, None).data, w4.data);
+        engine.set_width(3);
+        assert_eq!(engine.prefill_full(&toks, None).data, w3.data);
+        engine.set_width(4);
+        assert_eq!(engine.prefill_full(&toks, None).data, w4.data);
+    }
+
+    #[test]
+    fn anyprec_weight_bytes_shrink_with_width() {
+        let s = micro();
+        let qm = anyprec_model(&s, 23);
+        let w = Weights::Quant(&qm);
+        let b2 = Engine::new_at(&w, Some(2)).weight_bytes_per_step();
+        let b3 = Engine::new_at(&w, Some(3)).weight_bytes_per_step();
+        let b4 = Engine::new_at(&w, Some(4)).weight_bytes_per_step();
+        assert!(b2 < b3 && b3 < b4, "{} {} {}", b2, b3, b4);
     }
 
     #[test]

@@ -8,7 +8,7 @@ pub mod storage;
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use crate::quant::{LutLayer, QuantResult};
+use crate::quant::{BitPlaneStore, LutLayer, QuantResult};
 use crate::sparse::Csr;
 use crate::tensor::Mat;
 use crate::util::json::Json;
@@ -230,6 +230,9 @@ pub enum LayerWeights {
     Dense(Mat),
     Lut(LutLayer),
     LutSparse(LutLayer, Csr),
+    /// Nested any-precision store: one resident artifact serving every
+    /// width in `store.widths()` (dense form reads the max width).
+    AnyPrec(BitPlaneStore),
 }
 
 impl LayerWeights {
@@ -242,6 +245,7 @@ impl LayerWeights {
                 m.add_assign(&s.to_dense());
                 m
             }
+            LayerWeights::AnyPrec(b) => b.dequant_max(),
         }
     }
 
@@ -272,6 +276,26 @@ impl QuantizedModel {
             Some(lw) => lw.dense(),
             None => self.base.mat(name),
         }
+    }
+
+    /// Widths every quantized linear can serve: the intersection of the
+    /// nested stores' width sets. Empty unless the model was quantized
+    /// into the any-precision layout (`quantize_model_anyprec`).
+    pub fn anyprec_widths(&self) -> Vec<u8> {
+        let mut acc: Option<Vec<u8>> = None;
+        for lw in self.linears.values() {
+            let ws = match lw {
+                LayerWeights::AnyPrec(b) => b.widths(),
+                _ => return Vec::new(),
+            };
+            acc = Some(match acc {
+                None => ws,
+                Some(prev) => {
+                    prev.into_iter().filter(|w| ws.contains(w)).collect()
+                }
+            });
+        }
+        acc.unwrap_or_default()
     }
 }
 

@@ -1,0 +1,543 @@
+//! Any-precision nested weight store (after *Any-Precision LLM*, see
+//! PAPERS.md): one memory-resident artifact serving every bit-width.
+//!
+//! A [`BitPlaneStore`] decomposes a parent `max_bits`-bit [`LutLayer`]'s
+//! codes into per-bit planes — plane `p` holds bit `p` of every code,
+//! packed bitwise (`ceil(n/8)` bytes per row, LSB-first within a byte) —
+//! plus one per-row codebook *per served width*. Reading only the top
+//! `w` planes reconstructs a valid `w`-bit model: the `w`-bit code is
+//! exactly `parent_code >> (max_bits - w)`, so the 2- and 3-bit models
+//! are prefix-slices of the 4-bit codes and cost no extra code storage.
+//! Resident memory is therefore max(width) planes + the (tiny) sum of
+//! per-width codebooks — not sum(widths) of independently packed models.
+//!
+//! The per-width codebooks come from a seedless upgrade path off the
+//! GANQ solver's `max_bits` solution: dropping the LSB merges the two
+//! children `2c` / `2c+1` of each surviving code `c`, so the `w`-bit
+//! codebook is initialized by count-weighted child merging and then
+//! re-fitted against the calibration Gram already produced for the
+//! parent solve ([`BitPlaneStore::derive`] runs one exact
+//! [`ganq::tstep`] per width on the preconditioned H). Without
+//! calibration stats ([`BitPlaneStore::nest`]) the count-weighted merge
+//! *is* the identity-Hessian optimum w.r.t. the parent reconstruction
+//! (bucket means of the parent's dequantized values), matching the
+//! H = I degeneration documented on [`ganq::fit_codebook_identity`].
+//!
+//! Serving reads the planes without materializing per-width packed
+//! copies: `quant::kernels::lut_gemm_planes_into` streams the top `w`
+//! planes straight into the bucket-lane mpGEMM, and
+//! `PackedLut::from_planes` materializes a standalone packed form
+//! (byte-identical to packing the slice) for parity tests and the AOT
+//! export path.
+
+use std::collections::BTreeMap;
+
+use crate::tensor::{linalg, Mat};
+use crate::util::pool;
+
+use super::ganq;
+use super::lut::{lut_from_parts, LutLayer};
+use super::Storage;
+
+/// Nested bit-plane weight store: parent codes as per-bit planes plus a
+/// codebook per served width. See the module docs for the layout.
+#[derive(Debug, Clone)]
+pub struct BitPlaneStore {
+    pub m: usize,
+    pub n: usize,
+    /// parent (maximum served) code width
+    pub max_bits: u8,
+    /// `planes[p]` holds bit `p` (0 = LSB) of every code, row-major with
+    /// `ceil(n/8)` bytes per row; column `j` sits at byte `j/8`, bit
+    /// `j%8` (LSB-first)
+    pub planes: Vec<Vec<u8>>,
+    /// per-row codebooks keyed by width: `codebooks[&w]` is `[m, 2^w]`.
+    /// The `max_bits` entry is the parent solver's codebook verbatim.
+    pub codebooks: BTreeMap<u8, Mat>,
+}
+
+/// Bytes per plane row for `n` columns.
+#[inline]
+pub fn plane_row_bytes(n: usize) -> usize {
+    n.div_ceil(8)
+}
+
+/// Decompose flat `[m * n]` codes into `bits` bit-planes.
+fn pack_planes(codes: &[u8], m: usize, n: usize, bits: u8) -> Vec<Vec<u8>> {
+    let rowb = plane_row_bytes(n);
+    let mut planes = vec![vec![0u8; m * rowb]; bits as usize];
+    for i in 0..m {
+        for j in 0..n {
+            let c = codes[i * n + j];
+            debug_assert!((c as usize) < (1usize << bits));
+            for (p, plane) in planes.iter_mut().enumerate() {
+                plane[i * rowb + j / 8] |= ((c >> p) & 1) << (j % 8);
+            }
+        }
+    }
+    planes
+}
+
+/// One merge level of the upgrade path: the `w`-bit init codebook from
+/// the `(w+1)`-bit one. The two children `2c` / `2c+1` of each surviving
+/// code are paired, weighted by their bucket counts so the merged
+/// centroid is the bucket mean of the children's reconstruction; a pair
+/// with no assigned codes falls back to the plain midpoint.
+fn merge_level(t: &Mat, counts: &[usize]) -> Mat {
+    let m = t.rows;
+    let k2 = t.cols;
+    let k = k2 / 2;
+    let mut out = Mat::zeros(m, k);
+    for i in 0..m {
+        let tr = t.row(i);
+        let cr = &counts[i * k2..(i + 1) * k2];
+        let orow = out.row_mut(i);
+        for c in 0..k {
+            let (n0, n1) = (cr[2 * c] as f32, cr[2 * c + 1] as f32);
+            orow[c] = if n0 + n1 > 0.0 {
+                (n0 * tr[2 * c] + n1 * tr[2 * c + 1]) / (n0 + n1)
+            } else {
+                0.5 * (tr[2 * c] + tr[2 * c + 1])
+            };
+        }
+    }
+    out
+}
+
+fn build(
+    parent: &LutLayer,
+    widths: &[u8],
+    refit: Option<(&Mat, &Mat)>,
+) -> BitPlaneStore {
+    assert!(!widths.is_empty(), "need at least one width");
+    let mut ws: Vec<u8> = widths.to_vec();
+    ws.sort_unstable();
+    ws.dedup();
+    assert!(ws[0] >= 1, "width 0 is not servable");
+    assert_eq!(
+        *ws.last().expect("nonempty"),
+        parent.bits,
+        "max width must equal the parent's bits"
+    );
+    let (m, n) = (parent.m, parent.n);
+    let planes = pack_planes(&parent.codes, m, n, parent.bits);
+    let mut codebooks = BTreeMap::new();
+    codebooks.insert(parent.bits, parent.codebook.clone());
+    // preconditioned Gram for the exact per-width T-step refit (same
+    // regularization the parent GANQ solve used)
+    let hp = refit.map(|(_, h)| linalg::precondition(h));
+    let mut t = parent.codebook.clone();
+    for wd in (ws[0]..parent.bits).rev() {
+        // bucket counts at width wd+1 drive the count-weighted merge
+        let shift = parent.bits - (wd + 1);
+        let k2 = 1usize << (wd + 1);
+        let mut counts = vec![0usize; m * k2];
+        for i in 0..m {
+            for j in 0..n {
+                let c = (parent.codes[i * n + j] >> shift) as usize;
+                counts[i * k2 + c] += 1;
+            }
+        }
+        t = merge_level(&t, &counts);
+        if ws.contains(&wd) {
+            if let (Some((w_mat, _)), Some(hp)) = (refit, hp.as_ref()) {
+                // one T-step is the exact per-row solve given the sliced
+                // codes; empty buckets keep the merged init
+                let codes_w: Vec<u8> = parent
+                    .codes
+                    .iter()
+                    .map(|&c| c >> (parent.bits - wd))
+                    .collect();
+                let threads = pool::threads_for(m * n * (1usize << wd));
+                t = ganq::tstep(w_mat, hp, &codes_w, &t, threads);
+            }
+            codebooks.insert(wd, t.clone());
+        }
+    }
+    BitPlaneStore { m, n, max_bits: parent.bits, planes, codebooks }
+}
+
+/// Nested vs standalone storage accounting (the double-counting fix:
+/// shared planes are charged once, only codebooks repeat per width).
+#[derive(Debug, Clone)]
+pub struct StorageReport {
+    /// the one resident artifact: max-width planes + every codebook
+    pub nested: Storage,
+    /// what each width would cost as an independent [`LutLayer`]
+    pub standalone: Vec<(u8, Storage)>,
+}
+
+impl StorageReport {
+    /// Sum-of-widths bits if every width were packed independently.
+    pub fn standalone_total_bits(&self) -> usize {
+        self.standalone.iter().map(|(_, s)| s.total_bits()).sum()
+    }
+}
+
+impl BitPlaneStore {
+    /// Nest a parent LUT layer without calibration statistics: per-width
+    /// codebooks are count-weighted child merges (= bucket means of the
+    /// parent's dequantized values, the identity-Hessian optimum).
+    pub fn nest(parent: &LutLayer, widths: &[u8]) -> BitPlaneStore {
+        build(parent, widths, None)
+    }
+
+    /// The seedless upgrade path: nest a parent GANQ solution and re-fit
+    /// each narrower codebook against the layer's weights `w` and
+    /// calibration Gram `h` (one exact [`ganq::tstep`] per width on the
+    /// preconditioned H — the stats the parent solve already produced).
+    pub fn derive(
+        parent: &LutLayer,
+        w: &Mat,
+        h: &Mat,
+        widths: &[u8],
+    ) -> BitPlaneStore {
+        build(parent, widths, Some((w, h)))
+    }
+
+    /// Widths this store can serve, ascending.
+    pub fn widths(&self) -> Vec<u8> {
+        self.codebooks.keys().copied().collect()
+    }
+
+    /// Bit `p` of the code at `(i, j)` read from its plane.
+    #[inline]
+    pub fn bit(&self, p: usize, i: usize, j: usize) -> u8 {
+        let rowb = plane_row_bytes(self.n);
+        (self.planes[p][i * rowb + j / 8] >> (j % 8)) & 1
+    }
+
+    /// Full-width (parent) code at `(i, j)`.
+    pub fn code(&self, i: usize, j: usize) -> u8 {
+        self.code_at(i, j, self.max_bits)
+    }
+
+    /// `w`-bit code at `(i, j)`: the top `w` planes, i.e.
+    /// `parent_code >> (max_bits - w)`.
+    #[inline]
+    pub fn code_at(&self, i: usize, j: usize, w: u8) -> u8 {
+        let shift = (self.max_bits - w) as usize;
+        let mut c = 0u8;
+        for b in 0..w as usize {
+            c |= self.bit(b + shift, i, j) << b;
+        }
+        c
+    }
+
+    /// Materialize the standalone `w`-bit [`LutLayer`] (codes are the
+    /// top-`w` plane slice, codebook the fitted per-width one). Used for
+    /// parity tests, perplexity evaluation, and the AOT export path; the
+    /// native serving kernel streams the planes directly instead.
+    pub fn slice(&self, w: u8) -> LutLayer {
+        let t = self
+            .codebooks
+            .get(&w)
+            .unwrap_or_else(|| panic!("width {} not in store", w));
+        let mut codes = vec![0u8; self.m * self.n];
+        for i in 0..self.m {
+            for j in 0..self.n {
+                codes[i * self.n + j] = self.code_at(i, j, w);
+            }
+        }
+        lut_from_parts(self.m, self.n, w, codes, t.clone())
+    }
+
+    /// Nested storage accounting: the planes are charged **once** at
+    /// `max_bits` per code (they are shared by every width); only the
+    /// fp16 codebooks repeat per width family.
+    pub fn storage(&self) -> Storage {
+        Storage {
+            code_bits: self.m * self.n * self.max_bits as usize,
+            meta_bits: self
+                .codebooks
+                .keys()
+                .map(|&w| self.m * (1usize << w) * 16)
+                .sum(),
+            sparse_bits: 0,
+        }
+    }
+
+    /// Nested vs per-width-standalone storage.
+    pub fn storage_report(&self) -> StorageReport {
+        StorageReport {
+            nested: self.storage(),
+            standalone: self
+                .widths()
+                .iter()
+                .map(|&w| (w, self.slice(w).storage()))
+                .collect(),
+        }
+    }
+
+    /// Resident bytes of the one in-memory artifact: every plane plus
+    /// every per-width f32 codebook.
+    pub fn resident_bytes(&self) -> usize {
+        let planes: usize = self.planes.iter().map(|p| p.len()).sum();
+        let books: usize = self
+            .codebooks
+            .keys()
+            .map(|&w| self.m * (1usize << w) * 4)
+            .sum();
+        planes + books
+    }
+
+    /// Weight bytes that stream per decode step at width `w`: only the
+    /// top `w` planes plus that width's codebook (narrower widths read
+    /// strictly less memory — the degradation win).
+    pub fn bytes_per_decode(&self, w: u8) -> usize {
+        self.m * plane_row_bytes(self.n) * w as usize
+            + self.m * (1usize << w) * 4
+    }
+
+    /// Dense reconstruction at the maximum width.
+    pub fn dequant_max(&self) -> Mat {
+        self.slice(self.max_bits).dequant()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_parent(
+        rng: &mut Rng,
+        m: usize,
+        n: usize,
+        bits: u8,
+    ) -> LutLayer {
+        let k = 1usize << bits;
+        let codes = (0..m * n).map(|_| rng.below(k as u64) as u8).collect();
+        // sorted codebook rows so merges look like real quantizer output
+        let mut cb = Mat::zeros(m, k);
+        for i in 0..m {
+            let mut row = rng.normal_vec_f32(k);
+            row.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            cb.row_mut(i).copy_from_slice(&row);
+        }
+        lut_from_parts(m, n, bits, codes, cb)
+    }
+
+    #[test]
+    fn plane_roundtrip_recovers_parent_codes() {
+        prop::check("anyprec_planes", 51, 16, |rng, case| {
+            let m = 1 + rng.below(6) as usize;
+            // force ragged (non-multiple-of-8) n on half the cases
+            let mut n = 1 + rng.below(40) as usize;
+            if case % 2 == 0 && n % 8 == 0 {
+                n += 3;
+            }
+            let bits = if rng.below(2) == 0 { 3 } else { 4 };
+            let parent = random_parent(rng, m, n, bits);
+            let store = BitPlaneStore::nest(&parent, &[bits]);
+            for i in 0..m {
+                for j in 0..n {
+                    crate::prop_assert!(
+                        store.code(i, j) == parent.code(i, j),
+                        "code mismatch at ({}, {})",
+                        i,
+                        j
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn max_width_slice_is_parent_verbatim() {
+        let mut rng = Rng::new(52);
+        let parent = random_parent(&mut rng, 5, 19, 4);
+        let store = BitPlaneStore::nest(&parent, &[2, 3, 4]);
+        let s4 = store.slice(4);
+        assert_eq!(s4.codes, parent.codes);
+        assert_eq!(s4.codebook.data, parent.codebook.data);
+        assert_eq!(store.widths(), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn slice_codes_are_top_bits_of_parent() {
+        prop::check("anyprec_slice", 53, 12, |rng, _| {
+            let m = 1 + rng.below(5) as usize;
+            let n = 1 + rng.below(33) as usize;
+            let parent = random_parent(rng, m, n, 4);
+            let store = BitPlaneStore::nest(&parent, &[2, 3, 4]);
+            for w in [2u8, 3, 4] {
+                let s = store.slice(w);
+                for (c, &pc) in s.codes.iter().zip(&parent.codes) {
+                    crate::prop_assert!(
+                        *c == pc >> (4 - w),
+                        "width {} code {} != parent {} >> {}",
+                        w,
+                        c,
+                        pc,
+                        4 - w
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn slice_matmul_matches_standalone_layer_bitwise() {
+        // a slice must behave exactly like a standalone LutLayer built
+        // from the same codes + codebook — including the mpGEMM output
+        prop::check("anyprec_matmul", 54, 8, |rng, _| {
+            let m = 1 + rng.below(16) as usize;
+            let n = 1 + rng.below(24) as usize;
+            let p = 1 + rng.below(5) as usize;
+            let parent = random_parent(rng, m, n, 4);
+            let store = BitPlaneStore::nest(&parent, &[2, 3, 4]);
+            let x = Mat::from_vec(p, n, rng.normal_vec_f32(p * n));
+            for w in [2u8, 3, 4] {
+                let s = store.slice(w);
+                let standalone = lut_from_parts(
+                    m,
+                    n,
+                    w,
+                    s.codes.clone(),
+                    s.codebook.clone(),
+                );
+                let a = s.lut_matmul(&x);
+                let b = standalone.lut_matmul(&x);
+                crate::prop_assert!(
+                    a.data == b.data,
+                    "width {} matmul not bitwise-identical",
+                    w
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_is_count_weighted_bucket_mean() {
+        // 1 row, 2-bit parent, codes [0, 0, 1, 3]:
+        //   width-1 bucket 0 <- children {0 (x2), 1 (x1)} = (2*t0+t1)/3
+        //   width-1 bucket 1 <- children {2 (x0), 3 (x1)} = t3
+        let parent = lut_from_parts(
+            1,
+            4,
+            2,
+            vec![0, 0, 1, 3],
+            Mat::from_vec(1, 4, vec![0.0, 1.0, 2.0, 3.0]),
+        );
+        let store = BitPlaneStore::nest(&parent, &[1, 2]);
+        let t1 = &store.codebooks[&1];
+        assert!((t1[(0, 0)] - 1.0 / 3.0).abs() < 1e-6, "{}", t1[(0, 0)]);
+        assert!((t1[(0, 1)] - 3.0).abs() < 1e-6, "{}", t1[(0, 1)]);
+    }
+
+    #[test]
+    fn nest_equals_identity_bucket_means_of_parent_dequant() {
+        let mut rng = Rng::new(55);
+        let parent = random_parent(&mut rng, 4, 30, 4);
+        let store = BitPlaneStore::nest(&parent, &[2, 4]);
+        let deq = parent.dequant();
+        let s2 = store.slice(2);
+        for i in 0..4 {
+            for c in 0..4u8 {
+                let vals: Vec<f32> = (0..30)
+                    .filter(|&j| s2.code(i, j) == c)
+                    .map(|j| deq[(i, j)])
+                    .collect();
+                if vals.is_empty() {
+                    continue;
+                }
+                let mean = vals.iter().sum::<f32>() / vals.len() as f32;
+                assert!(
+                    (s2.codebook[(i, c as usize)] - mean).abs() < 1e-4,
+                    "row {} bucket {}: {} vs {}",
+                    i,
+                    c,
+                    s2.codebook[(i, c as usize)],
+                    mean
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn derive_refit_no_worse_than_plain_merge() {
+        // Gram-refit codebooks must not lose to the calibration-free
+        // merge on the layer-wise objective tr(D H D^T)
+        let mut rng = Rng::new(56);
+        let (m, n, p) = (6, 24, 48);
+        let w = Mat::from_vec(m, n, rng.normal_vec_f32(m * n));
+        let x = Mat::from_vec(p, n, rng.normal_vec_f32(p * n));
+        let h = x.t().matmul(&x);
+        let sol = ganq::solve(&w, &h, 4, 4, ganq::Precond::Adaptive, false);
+        let parent =
+            lut_from_parts(m, n, 4, sol.codes.clone(), sol.codebook.clone());
+        let nested = BitPlaneStore::nest(&parent, &[2, 3, 4]);
+        let derived = BitPlaneStore::derive(&parent, &w, &h, &[2, 3, 4]);
+        for wd in [2u8, 3] {
+            let e_nest = linalg::layer_error(
+                &w,
+                &nested.slice(wd).dequant(),
+                &h,
+            );
+            let e_drv = linalg::layer_error(
+                &w,
+                &derived.slice(wd).dequant(),
+                &h,
+            );
+            assert!(
+                e_drv <= e_nest * 1.0001 + 1e-9,
+                "width {}: refit {} worse than merge {}",
+                wd,
+                e_drv,
+                e_nest
+            );
+        }
+    }
+
+    #[test]
+    fn storage_report_pins_nested_accounting() {
+        // nested total = max-width planes (counted once) + sum of
+        // per-width codebooks — strictly below sum-of-standalone
+        let mut rng = Rng::new(57);
+        let (m, n) = (32, 96);
+        let parent = random_parent(&mut rng, m, n, 4);
+        let store = BitPlaneStore::nest(&parent, &[2, 3, 4]);
+        let rep = store.storage_report();
+        let expect_code = m * n * 4;
+        let expect_meta = m * (4 + 8 + 16) * 16;
+        assert_eq!(rep.nested.code_bits, expect_code);
+        assert_eq!(rep.nested.meta_bits, expect_meta);
+        assert_eq!(rep.nested.total_bits(), expect_code + expect_meta);
+        assert!(
+            rep.nested.total_bits() < rep.standalone_total_bits(),
+            "nested {} !< standalone {}",
+            rep.nested.total_bits(),
+            rep.standalone_total_bits()
+        );
+        // and the resident artifact is ~ the 4-bit model alone, not 2+3+4
+        let lut4_bytes = store.slice(4).bytes_per_decode();
+        assert!(
+            store.resident_bytes() < 2 * lut4_bytes,
+            "resident {} vs lut4 {}",
+            store.resident_bytes(),
+            lut4_bytes
+        );
+    }
+
+    #[test]
+    fn narrower_widths_stream_less_memory() {
+        let mut rng = Rng::new(58);
+        let parent = random_parent(&mut rng, 64, 256, 4);
+        let store = BitPlaneStore::nest(&parent, &[2, 3, 4]);
+        assert!(store.bytes_per_decode(2) < store.bytes_per_decode(3));
+        assert!(store.bytes_per_decode(3) < store.bytes_per_decode(4));
+    }
+
+    #[test]
+    #[should_panic(expected = "max width must equal")]
+    fn widths_must_include_parent_bits() {
+        let mut rng = Rng::new(59);
+        let parent = random_parent(&mut rng, 2, 8, 4);
+        let _ = BitPlaneStore::nest(&parent, &[2, 3]);
+    }
+}

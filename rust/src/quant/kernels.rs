@@ -40,6 +40,7 @@
 use crate::tensor::Mat;
 use crate::util::pool;
 
+use super::anyprec::BitPlaneStore;
 use super::lut::LutLayer;
 
 /// A LUT linear in packed-code form, ready for the serving hot path:
@@ -82,6 +83,16 @@ impl PackedLut {
             codes,
             codebook: l.codebook.clone(),
         }
+    }
+
+    /// Materialize the `w`-bit packed form from a nested
+    /// [`BitPlaneStore`], reading only the top-`w` planes. Byte-identical
+    /// to `PackedLut::pack(&store.slice(w))` — the parity contract the
+    /// AOT export path and the streaming kernel both rely on. For
+    /// serving, prefer [`lut_gemm_planes_into`], which skips this
+    /// materialization entirely.
+    pub fn from_planes(store: &BitPlaneStore, w: u8) -> PackedLut {
+        PackedLut::pack(&store.slice(w))
     }
 
     pub fn k(&self) -> usize {
@@ -154,6 +165,49 @@ pub fn lut_gemm_codes_into(
     mpgemm_driver(codebook, n, x, sc, out, |i, p, xt, bk| {
         for (j, &c) in codes[i * n..(i + 1) * n].iter().enumerate() {
             bucket_add(bk, c as usize, p, &xt[j * p..(j + 1) * p]);
+        }
+    });
+}
+
+/// Any-precision variant: stream the top-`w` bit-planes of a nested
+/// [`BitPlaneStore`] straight into the bucket kernel, assembling each
+/// `w`-bit code in-register from one byte of each plane (8 codes per
+/// gather). No per-width packed copy is ever materialized — the weight
+/// bytes read per step are exactly `m * ceil(n/8) * w` plus that width's
+/// codebook. Codes are consumed `j` ascending, so the output is bitwise
+/// identical to [`lut_gemm_codes_into`] over `store.slice(w)` (and hence
+/// to the packed paths).
+pub fn lut_gemm_planes_into(
+    store: &BitPlaneStore,
+    w: u8,
+    x: &Mat,
+    sc: &mut LutScratch,
+    out: &mut Mat,
+) {
+    assert_eq!(x.cols, store.n, "activation width");
+    let codebook = store
+        .codebooks
+        .get(&w)
+        .unwrap_or_else(|| panic!("width {} not in store", w));
+    let n = store.n;
+    let rowb = n.div_ceil(8);
+    let shift = (store.max_bits - w) as usize;
+    let planes = &store.planes[shift..store.max_bits as usize];
+    mpgemm_driver(codebook, n, x, sc, out, |i, p, xt, bk| {
+        for jb in 0..rowb {
+            let mut bytes = [0u8; 8];
+            for (b, plane) in planes.iter().enumerate() {
+                bytes[b] = plane[i * rowb + jb];
+            }
+            let in_group = (n - jb * 8).min(8);
+            for t in 0..in_group {
+                let j = jb * 8 + t;
+                let mut c = 0usize;
+                for (b, &byte) in bytes[..planes.len()].iter().enumerate() {
+                    c |= (((byte >> t) & 1) as usize) << b;
+                }
+                bucket_add(bk, c, p, &xt[j * p..(j + 1) * p]);
+            }
         }
     });
 }
@@ -372,6 +426,69 @@ mod tests {
             let pl = PackedLut::pack(&l);
             assert_eq!(pl.bytes_per_decode(), l.bytes_per_decode());
         }
+    }
+
+    fn random_store(rng: &mut Rng, m: usize, n: usize) -> BitPlaneStore {
+        BitPlaneStore::nest(&random_lut(rng, m, n, 4), &[2, 3, 4])
+    }
+
+    #[test]
+    fn from_planes_byte_identical_to_packing_the_slice() {
+        prop::check("from_planes_parity", 77, 10, |rng, case| {
+            let m = 1 + rng.below(24) as usize;
+            let mut n = 1 + rng.below(40) as usize;
+            if case % 2 == 0 && n % 8 == 0 {
+                n += 5; // ragged tail group
+            }
+            let store = random_store(rng, m, n);
+            for w in [2u8, 3, 4] {
+                let a = PackedLut::from_planes(&store, w);
+                let b = PackedLut::pack(&store.slice(w));
+                crate::prop_assert!(a.codes == b.codes, "width {} codes", w);
+                crate::prop_assert!(
+                    a.codebook.data == b.codebook.data
+                        && a.row_bytes == b.row_bytes
+                        && a.bits == b.bits,
+                    "width {} meta",
+                    w
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn planes_matmul_bitwise_matches_packed_slice() {
+        // the streaming path consumes codes j-ascending like every other
+        // fill_row, so all three decode paths must agree bit for bit
+        prop::check("planes_mpgemm", 78, 10, |rng, case| {
+            let m = 1 + rng.below(24) as usize;
+            let mut n = 1 + rng.below(40) as usize;
+            if case % 2 == 0 && n % 8 == 0 {
+                n += 3;
+            }
+            let p = 1 + rng.below(5) as usize;
+            let store = random_store(rng, m, n);
+            let x = Mat::from_vec(p, n, rng.normal_vec_f32(p * n));
+            for w in [2u8, 3, 4] {
+                let mut out = Mat::zeros(p, m);
+                let mut sc = LutScratch::new();
+                lut_gemm_planes_into(&store, w, &x, &mut sc, &mut out);
+                let packed = PackedLut::from_planes(&store, w).matmul(&x);
+                let unpacked = store.slice(w).lut_matmul(&x);
+                crate::prop_assert!(
+                    out.data == packed.data,
+                    "width {}: planes != packed",
+                    w
+                );
+                crate::prop_assert!(
+                    out.data == unpacked.data,
+                    "width {}: planes != unpacked",
+                    w
+                );
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -9,7 +9,14 @@
 //! `nll_fp32_*` graph), an optional LUT-servable form (codes + per-channel
 //! codebook, for the `*_lut*` serving graphs and the native LUT path), and
 //! exact storage accounting (Table 1).
+//!
+//! On top of the per-width methods, `anyprec` nests a GANQ solution into
+//! a single any-precision artifact: [`BitPlaneStore`] holds the 4-bit
+//! codes as bit-planes with per-width codebooks, so one resident copy
+//! serves 2/3/4-bit (`kernels::lut_gemm_planes_into` streams only the
+//! top-`w` planes).
 
+pub mod anyprec;
 pub mod awq;
 pub mod ganq;
 pub mod gptq;
@@ -23,6 +30,7 @@ pub mod stats;
 
 use crate::sparse::Csr;
 use crate::tensor::{linalg, Mat};
+pub use anyprec::{BitPlaneStore, StorageReport};
 pub use kernels::{LutScratch, PackedLut};
 pub use lut::LutLayer;
 

@@ -54,10 +54,22 @@ pub struct GraphSpec {
     pub outputs: Vec<String>,
 }
 
+/// One nested any-precision artifact for a model: a single bit-plane
+/// file serving every width in `widths` (resident once; only per-width
+/// codebooks repeat). Written by python/compile/aot.py's nested export.
+#[derive(Debug, Clone)]
+pub struct AnyPrecEntry {
+    pub widths: Vec<u8>,
+    pub path: PathBuf,
+}
+
 #[derive(Debug, Clone)]
 pub struct ModelEntry {
     pub config: ModelConfig,
     pub base_config: String,
+    /// Optional nested any-precision family (`"anyprec"` in the
+    /// manifest): one artifact, many servable widths.
+    pub anyprec: Option<AnyPrecEntry>,
 }
 
 #[derive(Debug, Clone)]
@@ -93,7 +105,32 @@ impl Manifest {
                 .and_then(|v| v.as_str())
                 .unwrap_or(name)
                 .to_string();
-            models.insert(name.clone(), ModelEntry { config, base_config });
+            let anyprec = match m.get("anyprec") {
+                None => None,
+                Some(a) => {
+                    let mut widths: Vec<u8> = a
+                        .get("widths")
+                        .and_then(|v| v.as_usize_vec())
+                        .ok_or("anyprec widths")?
+                        .into_iter()
+                        .map(|w| w as u8)
+                        .collect();
+                    widths.sort_unstable();
+                    widths.dedup();
+                    if widths.is_empty() {
+                        return Err(format!("{}: empty anyprec widths", name));
+                    }
+                    let rel = a
+                        .get("path")
+                        .and_then(|v| v.as_str())
+                        .ok_or("anyprec path")?;
+                    Some(AnyPrecEntry { widths, path: base.join(rel) })
+                }
+            };
+            models.insert(
+                name.clone(),
+                ModelEntry { config, base_config, anyprec },
+            );
         }
         let mut graphs = BTreeMap::new();
         for (name, g) in
@@ -162,6 +199,12 @@ impl Manifest {
         out
     }
 
+    /// The nested any-precision family for a model, if the manifest
+    /// declares one (one artifact path + its servable widths).
+    pub fn anyprec(&self, model: &str) -> Option<&AnyPrecEntry> {
+        self.models.get(model).and_then(|m| m.anyprec.as_ref())
+    }
+
     /// The graph name `prefill_chunks` enumerated — one compiled chunk.
     pub fn prefill_graph(
         fmt: &str,
@@ -222,6 +265,38 @@ mod tests {
             Manifest::prefill_graph("lut4", "opt-mini", 4, 8),
             "prefill_lut4_opt-mini_b4_c8"
         );
+    }
+
+    #[test]
+    fn parses_anyprec_family() {
+        // no family declared -> None
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        assert!(m.anyprec("opt-micro").is_none());
+        assert!(m.anyprec("nope").is_none());
+        // declared family: widths sorted + deduped, path joined on base
+        let with = SAMPLE.replace(
+            "\"base_config\": \"opt-micro\"",
+            "\"base_config\": \"opt-micro\", \
+             \"anyprec\": {\"widths\": [4, 2, 3, 3], \
+                           \"path\": \"quant/opt-micro.anyprec.bin\"}",
+        );
+        let m = Manifest::parse(&with, Path::new("/art")).unwrap();
+        let ap = m.anyprec("opt-micro").unwrap();
+        assert_eq!(ap.widths, vec![2, 3, 4]);
+        assert!(ap.path.ends_with("quant/opt-micro.anyprec.bin"));
+        // malformed families fail loudly
+        let empty = SAMPLE.replace(
+            "\"base_config\": \"opt-micro\"",
+            "\"base_config\": \"opt-micro\", \
+             \"anyprec\": {\"widths\": [], \"path\": \"q.bin\"}",
+        );
+        assert!(Manifest::parse(&empty, Path::new("/art")).is_err());
+        let no_path = SAMPLE.replace(
+            "\"base_config\": \"opt-micro\"",
+            "\"base_config\": \"opt-micro\", \
+             \"anyprec\": {\"widths\": [2, 4]}",
+        );
+        assert!(Manifest::parse(&no_path, Path::new("/art")).is_err());
     }
 
     #[test]

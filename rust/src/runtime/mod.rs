@@ -14,7 +14,7 @@ use std::rc::Rc;
 
 use crate::obs::trace;
 
-pub use artifacts::{Dtype, GraphSpec, Manifest, TensorSpec};
+pub use artifacts::{AnyPrecEntry, Dtype, GraphSpec, Manifest, TensorSpec};
 
 /// Host-side tensor value crossing the runtime boundary.
 #[derive(Debug, Clone)]
