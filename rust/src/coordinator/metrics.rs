@@ -189,6 +189,16 @@ pub struct ServeMetrics {
     /// generated tokens per decode width, for width-pinned admissions
     /// (empty when the round served at the backend's native width)
     pub tokens_by_width: BTreeMap<u8, u64>,
+    /// draft tokens proposed by a speculative backend (0 when the round
+    /// decoded plainly)
+    pub draft_tokens: usize,
+    /// draft tokens the verifier accepted (each one is a generated
+    /// token that skipped a full-width weight stream)
+    pub accepted_tokens: usize,
+    /// draft tokens rejected and rolled back (`KvSeq::truncate`d)
+    pub rollback_tokens: usize,
+    /// speculative draft→verify→accept rounds executed
+    pub spec_rounds: usize,
     /// block-pool counters (None for contiguous-cache backends)
     pub kv: Option<KvPoolStats>,
     /// per-step `DecodeBackend::step` dispatch latency (ms)
@@ -288,6 +298,16 @@ impl ServeMetrics {
         self.weight_bytes_per_step * self.decode_steps
     }
 
+    /// Fraction of drafted tokens the verifier accepted (NaN when the
+    /// run never speculated).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.draft_tokens > 0 {
+            self.accepted_tokens as f64 / self.draft_tokens as f64
+        } else {
+            f64::NAN
+        }
+    }
+
     /// Fold one serve round into a running total (the
     /// [`super::server::ServerHandle`] engine thread aggregates windows
     /// this way). Counters add, histograms merge bucket-wise, rates
@@ -307,6 +327,10 @@ impl ServeMetrics {
         for (w, n) in m.tokens_by_width {
             *self.tokens_by_width.entry(w).or_insert(0) += n;
         }
+        self.draft_tokens += m.draft_tokens;
+        self.accepted_tokens += m.accepted_tokens;
+        self.rollback_tokens += m.rollback_tokens;
+        self.spec_rounds += m.spec_rounds;
         if m.kv.is_some() {
             self.kv = m.kv;
         }
@@ -382,6 +406,11 @@ impl ServeMetrics {
                 "precision_switches",
                 json::num(self.precision_switches as f64),
             ),
+            ("draft_tokens", json::num(self.draft_tokens as f64)),
+            ("accepted_tokens", json::num(self.accepted_tokens as f64)),
+            ("rollback_tokens", json::num(self.rollback_tokens as f64)),
+            ("acceptance_rate", fnum(self.acceptance_rate())),
+            ("spec_rounds", json::num(self.spec_rounds as f64)),
             (
                 "tokens_by_width",
                 Json::Obj(
@@ -458,6 +487,16 @@ impl ServeMetrics {
                 ", precision {} switches ({})",
                 self.precision_switches,
                 per.join(" ")
+            ));
+        }
+        if self.spec_rounds > 0 {
+            s.push_str(&format!(
+                ", spec {} rounds ({} drafted, {} accepted = {:.0}%, {} rolled back)",
+                self.spec_rounds,
+                self.draft_tokens,
+                self.accepted_tokens,
+                100.0 * self.acceptance_rate(),
+                self.rollback_tokens,
             ));
         }
         let f = &self.finish;
@@ -625,6 +664,55 @@ mod tests {
         assert!(s.contains("17 tokens wasted"), "{}", s);
         // max_tokens is the normal case and stays out of the summary
         assert!(!s.contains("max"), "{}", s);
+    }
+
+    #[test]
+    fn spec_counters_surface_and_merge() {
+        let mut a = ServeMetrics {
+            draft_tokens: 10,
+            accepted_tokens: 7,
+            rollback_tokens: 3,
+            spec_rounds: 4,
+            ..Default::default()
+        };
+        assert!((a.acceptance_rate() - 0.7).abs() < 1e-12);
+        let b = ServeMetrics {
+            draft_tokens: 10,
+            accepted_tokens: 3,
+            rollback_tokens: 7,
+            spec_rounds: 2,
+            ..Default::default()
+        };
+        a.merge_round(b);
+        assert_eq!(a.draft_tokens, 20);
+        assert_eq!(a.accepted_tokens, 10);
+        assert_eq!(a.rollback_tokens, 10);
+        assert_eq!(a.spec_rounds, 6);
+        assert!((a.acceptance_rate() - 0.5).abs() < 1e-12);
+        let s = a.summary();
+        assert!(s.contains("spec 6 rounds"), "{}", s);
+        assert!(s.contains("50%"), "{}", s);
+        let parsed = Json::parse(&a.snapshot().to_string_pretty())
+            .expect("parses");
+        assert_eq!(
+            parsed.get("draft_tokens").and_then(|v| v.as_f64()),
+            Some(20.0)
+        );
+        assert_eq!(
+            parsed.get("acceptance_rate").and_then(|v| v.as_f64()),
+            Some(0.5)
+        );
+        assert_eq!(
+            parsed.get("spec_rounds").and_then(|v| v.as_f64()),
+            Some(6.0)
+        );
+        // a plain run keeps NaN out of the json and spec off the summary
+        let plain = ServeMetrics::default();
+        assert!(plain.acceptance_rate().is_nan());
+        assert!(!plain.summary().contains("spec"));
+        let pj = Json::parse(&plain.snapshot().to_string_pretty())
+            .expect("parses");
+        assert_eq!(pj.get("acceptance_rate"), Some(&Json::Null));
     }
 
     #[test]

@@ -27,6 +27,22 @@
 //!   [`PrecisionPolicy`] picks the serving width per admission — fixed,
 //!   or load-adaptive with queue-depth hysteresis — with admitted
 //!   requests pinned to their admission-time width.
+//! * `speculative` — self-speculative decoding over one shared
+//!   [`quant::BitPlaneStore`](crate::quant::BitPlaneStore): a
+//!   [`SpecBackend`] holds a low-width draft engine and a max-width
+//!   verify engine over the *same* resident nested planes (no second
+//!   model in memory), drafts k tokens per greedy slot at the cheap
+//!   width, re-scores them as one verification chunk
+//!   (`StepItem::verify`, `LogitsMode::All`), accepts the longest
+//!   matching prefix and rolls the KV back past the first mismatch
+//!   (`truncate`). It plugs in as a [`DecodeBackend`] under the
+//!   unchanged scheduler/server/cluster stack: per-slot draft state
+//!   lives beside the slot, mixed steps may combine speculative decode
+//!   slots with plain prefill chunks, an adaptive controller resizes k
+//!   per request from the running acceptance rate, and sampled
+//!   (temperature > 0) requests explicitly fall back to plain decode.
+//!   Acceptance is temperature-0 exact-match, so speculative greedy
+//!   output is bitwise-identical to plain greedy output.
 //! * `metrics` — request latency + throughput + weight-traffic accounting
 //!   (Table 6's CUDA-time/speedup/peak-memory analogues), per-finish-
 //!   reason counts and cancelled-token waste, plus block-pool occupancy /
@@ -81,6 +97,7 @@ pub mod metrics;
 pub mod pipeline;
 pub mod serve;
 pub mod server;
+pub mod speculative;
 
 pub use cluster::{
     quiet_ganq_thread_panics, Cluster, ClusterMetrics, ClusterOptions,
@@ -102,3 +119,4 @@ pub use serve::{
 pub use server::{
     recv_outcome, recv_outcome_timeout, serve_batch, ServerHandle,
 };
+pub use speculative::{SpecBackend, SpecOptions, SpecStats};

@@ -110,6 +110,7 @@ use crate::model::{LayerWeights, ModelConfig, QuantizedModel, WeightStore};
 use crate::runtime::{HostTensor, Manifest, Runtime};
 
 use super::metrics::{rel_ms, FinishCounts, RequestMetrics, ServeMetrics};
+use super::speculative::SpecStats;
 use crate::obs::hist::Histogram;
 use crate::obs::trace;
 
@@ -496,6 +497,30 @@ pub trait DecodeBackend {
     fn set_slot_width(&mut self, slot: usize, w: u8) {
         let _ = (slot, w);
     }
+
+    /// Mark whether `slot`'s request may decode speculatively (called
+    /// right after a successful `admit` with the request's greediness —
+    /// exact-match draft acceptance needs temperature 0, so sampled
+    /// requests explicitly fall back to plain decode). No-op on
+    /// non-speculative backends.
+    fn set_slot_speculative(&mut self, slot: usize, on: bool) {
+        let _ = (slot, on);
+    }
+
+    /// Drain the draft tokens the backend committed for `slot` during
+    /// the last [`DecodeBackend::step`] (a verified exact-match prefix).
+    /// The scheduler appends them — running each through the stop
+    /// checks — *before* sampling the returned logits row, which
+    /// already reflects these tokens. Default: none.
+    fn take_committed(&mut self, slot: usize) -> Vec<i32> {
+        let _ = slot;
+        Vec::new()
+    }
+
+    /// Cumulative speculation counters (speculative backends only).
+    fn spec_stats(&self) -> Option<SpecStats> {
+        None
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -658,6 +683,9 @@ pub fn serve_events(
     let nslots = backend.slots();
     let ctx = backend.cfg().ctx;
     let max_chunk = backend.max_chunk().max(1);
+    // speculation counters are cumulative on the backend (which may be
+    // reused across server rounds); this serve reports only its delta
+    let spec_base = backend.spec_stats().unwrap_or_default();
     // serve epoch: every RequestMetrics offset is relative to this
     let t_start = Instant::now();
     let total_reqs = requests.len();
@@ -879,6 +907,8 @@ pub fn serve_events(
                     if width != 0 {
                         backend.set_slot_width(si, width);
                     }
+                    backend
+                        .set_slot_speculative(si, q.req.sampling.is_greedy());
                     slots[si] = Some(SlotState {
                         req: q.req,
                         prompt,
@@ -1077,23 +1107,49 @@ pub fn serve_events(
                         }
                         sink(TokenEvent::Token { id: st.req.id, tok });
                     };
-                    match Sampler::next(
-                        &st.req.sampling,
-                        &st.req.stop,
-                        &st.generated,
-                        &logits[wi],
-                    ) {
-                        SamplerStep::Token { tok } => {
+                    // a speculative backend may have committed verified
+                    // draft tokens during this step; fold each through
+                    // the same stop checks the sampler applies, in the
+                    // same order, before sampling the returned row
+                    // (which already reflects these tokens)
+                    for tok in backend.take_committed(si) {
+                        if done.is_some() {
+                            break;
+                        }
+                        if st.req.stop.is_stop_token(tok) {
+                            done = Some((FinishReason::StopToken, 0));
+                        } else if let Some(trim) =
+                            st.req.stop.stop_seq_hit(&st.generated, tok)
+                        {
                             push(st, tok);
-                            if backend.slot_pos(si) + 1 >= ctx {
+                            done = Some((FinishReason::StopSeq, trim));
+                        } else {
+                            push(st, tok);
+                            if st.generated.len() >= st.req.stop.max_new {
                                 done = Some((FinishReason::MaxTokens, 0));
                             }
                         }
-                        SamplerStep::Finish { tok, why, trim } => {
-                            if let Some(t) = tok {
-                                push(st, t);
+                    }
+                    if done.is_none() {
+                        match Sampler::next(
+                            &st.req.sampling,
+                            &st.req.stop,
+                            &st.generated,
+                            &logits[wi],
+                        ) {
+                            SamplerStep::Token { tok } => {
+                                push(st, tok);
+                                if backend.slot_pos(si) + 1 >= ctx {
+                                    done =
+                                        Some((FinishReason::MaxTokens, 0));
+                                }
                             }
-                            done = Some((why, trim));
+                            SamplerStep::Finish { tok, why, trim } => {
+                                if let Some(t) = tok {
+                                    push(st, t);
+                                }
+                                done = Some((why, trim));
+                            }
                         }
                     }
                 } else if st.generated.len() >= st.req.stop.max_new
@@ -1110,6 +1166,10 @@ pub fn serve_events(
         }
     }
 
+    let spec = backend
+        .spec_stats()
+        .unwrap_or_default()
+        .delta_since(&spec_base);
     let metrics = ServeMetrics {
         requests: all_metrics,
         decode_steps: steps,
@@ -1123,6 +1183,10 @@ pub fn serve_events(
         peak_concurrency,
         precision_switches,
         tokens_by_width,
+        draft_tokens: spec.draft_tokens,
+        accepted_tokens: spec.accepted_tokens,
+        rollback_tokens: spec.rollback_tokens,
+        spec_rounds: spec.rounds,
         kv: backend.pool_stats(),
         step_ms,
         kv_occupancy,

@@ -386,6 +386,85 @@ mod tests {
         assert_eq!(m.total_generated(), 4);
     }
 
+    /// Quantized model whose every linear is a random nested
+    /// any-precision store (widths 2/3/4) — the serve-test idiom.
+    fn anyprec_model(seed: u64) -> crate::model::QuantizedModel {
+        use crate::model::LayerWeights;
+        use crate::quant::lut::lut_from_parts;
+        use crate::quant::BitPlaneStore;
+        use crate::tensor::Mat;
+        let cfg = ModelConfig::builtin("opt-micro").unwrap();
+        let store = WeightStore::random("t", cfg, seed);
+        let mut rng = crate::util::rng::Rng::new(seed ^ 0x5bec);
+        let mut linears = std::collections::BTreeMap::new();
+        for (name, m, n) in store.cfg.linear_shapes() {
+            let codes: Vec<u8> =
+                (0..m * n).map(|_| rng.below(16) as u8).collect();
+            let cb = Mat::from_vec(
+                m,
+                16,
+                rng.normal_vec_f32(m * 16)
+                    .into_iter()
+                    .map(|v| v * 0.08)
+                    .collect(),
+            );
+            let parent = lut_from_parts(m, n, 4, codes, cb);
+            linears.insert(
+                name,
+                LayerWeights::AnyPrec(BitPlaneStore::nest(
+                    &parent,
+                    &[2, 3, 4],
+                )),
+            );
+        }
+        crate::model::QuantizedModel {
+            base: store,
+            method: "ganq-anyprec".into(),
+            bits: 4,
+            linears,
+            weight_bits: 0,
+        }
+    }
+
+    #[test]
+    fn threaded_server_serves_speculative_backend() {
+        use crate::coordinator::speculative::{SpecBackend, SpecOptions};
+        use crate::coordinator::GenRequest;
+
+        let opts = ServeOptions::default();
+        let handle = ServerHandle::spawn(opts, move |batch| {
+            // engine thread: the speculative backend is one more
+            // DecodeBackend, so the server loop needs no changes
+            let qm = anyprec_model(29);
+            let mut be = SpecBackend::dense(&qm, 2, SpecOptions::new(2, 4))
+                .expect("anyprec model");
+            serve_batch(&mut be, batch, opts)
+        });
+        let rx1 = handle.submit_greedy(vec![104, 105], 6);
+        let rx2 = handle.submit_greedy(vec![97], 4);
+        let o1 = recv_outcome(&rx1).unwrap();
+        let o2 = recv_outcome(&rx2).unwrap();
+        assert_eq!(o1.tokens.len(), 6);
+        assert_eq!(o2.tokens.len(), 4);
+        let m = handle.shutdown().unwrap();
+        assert!(m.spec_rounds > 0, "greedy requests must speculate");
+        assert_eq!(m.accepted_tokens + m.rollback_tokens, m.draft_tokens);
+
+        // bitwise identical to plain greedy over the same model
+        let qm = anyprec_model(29);
+        let mut plain = NativeBackend::new(Weights::Quant(&qm), 2);
+        let (outs, _) = crate::coordinator::serve(
+            &mut plain,
+            vec![
+                GenRequest::greedy(1, vec![104, 105], 6),
+                GenRequest::greedy(2, vec![97], 4),
+            ],
+        )
+        .unwrap();
+        assert_eq!(o1.tokens, outs[0].tokens);
+        assert_eq!(o2.tokens, outs[1].tokens);
+    }
+
     #[test]
     fn engine_panic_disconnects_streams_and_surfaces_on_shutdown() {
         crate::coordinator::cluster::quiet_ganq_thread_panics();

@@ -1,0 +1,886 @@
+//! Self-speculative decoding over the any-precision store.
+//!
+//! Decode is memory-bound — the paper's premise — so the biggest
+//! per-request lever after batching is emitting more than one token per
+//! weight stream. The nested [`crate::quant::anyprec::BitPlaneStore`]
+//! makes the classic draft/verify split nearly free: the low-width
+//! *drafter* and the max-width *verifier* are two width-views of the
+//! same resident planes (`Engine::new_at(w, Some(width))`), so
+//! speculation costs no extra weight memory — the drafter just streams
+//! fewer planes per step
+//! ([`crate::quant::anyprec::BitPlaneStore::draft_cost_frac`]).
+//!
+//! One speculative round for a slot whose committed stream ends in the
+//! pending (not yet fed) token `c`:
+//!
+//! 1. **Draft** — feed `c, d_1, .., d_{k-1}` through the draft engine
+//!    as `k` single-token micro-steps (batched across speculative
+//!    slots), taking the argmax each time: draft tokens `d_1..d_k`.
+//!    Paged appends run inside the KV *draft window*
+//!    ([`PagedKv::set_draft_window`]) so the draft-width rows are never
+//!    sealed or prefix-indexed.
+//! 2. **Rollback** — `KvSeq::truncate` back to the anchor position:
+//!    the persistent KV only ever holds verify-width rows.
+//! 3. **Verify** — one chunked step `[c, d_1..d_k]` through the verify
+//!    engine with `LogitsMode::All`: exactly a prefill chunk, sharing
+//!    the step with any plain prefill/decode items in the batch. Row
+//!    `i` is the logits plain greedy would see after `i` accepted
+//!    tokens.
+//! 4. **Accept** — the longest prefix with `d_i == argmax(row_{i-1})`
+//!    (`a` tokens); truncate the rejected tail to `anchor + 1 + a` and
+//!    return row `a` to the scheduler, which samples the bonus token
+//!    from it. The accepted drafts surface through
+//!    [`super::serve::DecodeBackend::take_committed`].
+//!
+//! Acceptance is temperature-0 exact match, so speculative output is
+//! bitwise identical to plain greedy decode; sampled requests
+//! explicitly fall back to plain decode
+//! ([`super::serve::DecodeBackend::set_slot_speculative`]). An adaptive
+//! controller grows `k` while a slot's running acceptance is high and
+//! shrinks it toward 1 when drafts keep missing, so a poorly-matched
+//! drafter degrades to plain decode cost plus one draft per round.
+
+use crate::kv::{
+    F32Blocks, KvBlockStore, KvLayout, KvPoolStats, LutBlocks, PagedKv,
+};
+use crate::model::forward::{
+    argmax, Engine, KvCache, KvSeq, LogitsMode, SeqRefs, StepItem, StepPlan,
+    Weights,
+};
+use crate::model::{ModelConfig, QuantizedModel};
+use crate::obs::trace;
+use crate::tensor::Mat;
+
+use super::serve::{DecodeBackend, KvStoreKind, SlotWork};
+
+/// Cumulative speculation counters since backend construction
+/// (monotone; the scheduler records per-round deltas into
+/// [`super::metrics::ServeMetrics`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// draft tokens proposed
+    pub draft_tokens: usize,
+    /// drafts accepted by exact-match verification
+    pub accepted_tokens: usize,
+    /// drafts rejected and rolled back
+    pub rollback_tokens: usize,
+    /// draft→verify→accept rounds executed
+    pub rounds: usize,
+}
+
+impl SpecStats {
+    /// Counters accumulated since `earlier` (a snapshot of the same
+    /// backend taken before a serve round).
+    pub fn delta_since(&self, earlier: &SpecStats) -> SpecStats {
+        SpecStats {
+            draft_tokens: self.draft_tokens - earlier.draft_tokens,
+            accepted_tokens: self.accepted_tokens - earlier.accepted_tokens,
+            rollback_tokens: self.rollback_tokens - earlier.rollback_tokens,
+            rounds: self.rounds - earlier.rounds,
+        }
+    }
+
+    /// Fraction of drafted tokens the verifier accepted.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.draft_tokens > 0 {
+            self.accepted_tokens as f64 / self.draft_tokens as f64
+        } else {
+            f64::NAN
+        }
+    }
+}
+
+/// Speculation knobs (`serve --speculative --draft-width W
+/// --draft-len K` on the CLI).
+#[derive(Debug, Clone, Copy)]
+pub struct SpecOptions {
+    /// drafter width; must be nested in the store and below the
+    /// (maximum) verify width
+    pub draft_width: u8,
+    /// draft length `k` each fresh request starts at
+    pub draft_len: usize,
+    /// adapt `k` per slot from its running acceptance rate
+    pub adaptive: bool,
+    /// ceiling for adaptive growth (floor is always 1)
+    pub max_draft_len: usize,
+}
+
+impl SpecOptions {
+    /// Adaptive speculation starting at `draft_len` and growing up to
+    /// twice that while acceptance stays high.
+    pub fn new(draft_width: u8, draft_len: usize) -> SpecOptions {
+        let k = draft_len.max(1);
+        SpecOptions {
+            draft_width,
+            draft_len: k,
+            adaptive: true,
+            max_draft_len: 2 * k,
+        }
+    }
+
+    /// Fixed draft length (the exact-match property tests sweep this).
+    pub fn fixed(draft_width: u8, draft_len: usize) -> SpecOptions {
+        let k = draft_len.max(1);
+        SpecOptions {
+            draft_width,
+            draft_len: k,
+            adaptive: false,
+            max_draft_len: k,
+        }
+    }
+}
+
+/// Per-slot draft state, living beside the slot exactly like the
+/// scheduler's own `SlotState`.
+#[derive(Debug, Clone)]
+struct SlotSpec {
+    /// greedy request — may speculate (set by the scheduler right
+    /// after admission)
+    eligible: bool,
+    /// current draft length
+    k: usize,
+    /// running acceptance rate (EWMA over rounds)
+    accept_ewma: f64,
+    /// accepted tokens awaiting `take_committed`
+    committed: Vec<i32>,
+    /// remaining generation budget — drafting past it is pure waste
+    budget: usize,
+    /// draft length planned by `pre_step` for the coming step (0 =
+    /// plain decode; the paged path reserves its blocks there)
+    planned: usize,
+}
+
+impl SlotSpec {
+    fn fresh(opts: &SpecOptions, budget: usize) -> SlotSpec {
+        SlotSpec {
+            eligible: false,
+            k: opts.draft_len,
+            accept_ewma: 1.0,
+            committed: Vec::new(),
+            budget,
+            planned: 0,
+        }
+    }
+}
+
+/// KV storage behind the backend: one contiguous cache per slot, or
+/// the shared paged block pool.
+enum SpecKv {
+    Dense(Vec<KvCache>),
+    Paged(PagedKv),
+}
+
+/// Speculative [`DecodeBackend`]: a draft engine and a verify engine
+/// over one shared bit-plane artifact, slotting under the existing
+/// scheduler / server / cluster machinery with no router changes.
+/// Mixed steps are fine — speculative decode slots and plain prefill
+/// chunks share one verify dispatch.
+pub struct SpecBackend<'a> {
+    draft: Engine<'a>,
+    verify: Engine<'a>,
+    kv: SpecKv,
+    slots: Vec<SlotSpec>,
+    opts: SpecOptions,
+    stats: SpecStats,
+}
+
+fn build_engines<'a>(
+    qm: &'a QuantizedModel,
+    draft_width: u8,
+) -> Result<(Engine<'a>, Engine<'a>), String> {
+    let widths = qm.anyprec_widths();
+    if widths.is_empty() {
+        return Err(
+            "model has no nested any-precision linears (quantize with \
+             --widths 2,3,4); self-speculative decoding drafts and \
+             verifies over one bit-plane store"
+                .into(),
+        );
+    }
+    let verify_w = *widths.last().expect("nonempty widths");
+    if !widths.contains(&draft_width) {
+        return Err(format!(
+            "draft width {} is not in the nested family {:?}",
+            draft_width, widths
+        ));
+    }
+    if draft_width >= verify_w {
+        return Err(format!(
+            "draft width {} must be below the verify width {}",
+            draft_width, verify_w
+        ));
+    }
+    let w = Weights::Quant(qm);
+    Ok((
+        Engine::new_at(&w, Some(draft_width)),
+        Engine::new_at(&w, Some(verify_w)),
+    ))
+}
+
+impl<'a> SpecBackend<'a> {
+    /// Speculative serving over contiguous per-slot caches (the
+    /// [`super::serve::NativeBackend`] layout).
+    pub fn dense(
+        qm: &'a QuantizedModel,
+        slots: usize,
+        opts: SpecOptions,
+    ) -> Result<SpecBackend<'a>, String> {
+        let (draft, verify) = build_engines(qm, opts.draft_width)?;
+        let cfg = verify.cfg();
+        Ok(SpecBackend {
+            draft,
+            verify,
+            kv: SpecKv::Dense(
+                (0..slots).map(|_| KvCache::new(cfg)).collect(),
+            ),
+            slots: vec![SlotSpec::fresh(&opts, 0); slots],
+            opts,
+            stats: SpecStats::default(),
+        })
+    }
+
+    /// Speculative serving over the paged KV cache (prefix sharing,
+    /// CoW, preemption — the [`super::serve::PagedNativeBackend`]
+    /// layout). Draft rows append inside the KV draft window so they
+    /// are never sealed or prefix-indexed.
+    pub fn paged(
+        qm: &'a QuantizedModel,
+        slots: usize,
+        block_size: usize,
+        num_blocks: usize,
+        kind: KvStoreKind,
+        opts: SpecOptions,
+    ) -> Result<SpecBackend<'a>, String> {
+        let (draft, verify) = build_engines(qm, opts.draft_width)?;
+        let cfg = verify.cfg();
+        let layout = KvLayout::new(&cfg, block_size);
+        let store: Box<dyn KvBlockStore> = match kind {
+            KvStoreKind::F32 => Box::new(F32Blocks::new(layout, num_blocks)),
+            KvStoreKind::Lut4 => {
+                Box::new(LutBlocks::new(layout, num_blocks))
+            }
+        };
+        Ok(SpecBackend {
+            draft,
+            verify,
+            kv: SpecKv::Paged(PagedKv::new(store, num_blocks, slots)),
+            slots: vec![SlotSpec::fresh(&opts, 0); slots],
+            opts,
+            stats: SpecStats::default(),
+        })
+    }
+
+    /// The speculation knobs this backend runs with.
+    pub fn options(&self) -> SpecOptions {
+        self.opts
+    }
+
+    fn pos_of(&self, slot: usize) -> usize {
+        match &self.kv {
+            SpecKv::Dense(caches) => caches[slot].len,
+            SpecKv::Paged(kv) => kv.pos(slot),
+        }
+    }
+
+    fn truncate_to(&mut self, slot: usize, n: usize) {
+        match &mut self.kv {
+            SpecKv::Dense(caches) => caches[slot].truncate(n),
+            SpecKv::Paged(kv) => kv.truncate_slot(slot, n),
+        }
+    }
+
+    /// Plain verify-width step (no speculative item this round) — the
+    /// exact [`super::serve::NativeBackend`] / `PagedNativeBackend`
+    /// behavior.
+    fn plain_step(&mut self, work: &[SlotWork]) -> Vec<Vec<f32>> {
+        let items = work
+            .iter()
+            .enumerate()
+            .map(|(i, wk)| StepItem {
+                seq: i,
+                tokens: wk.tokens.clone(),
+                logits: if wk.want_logits {
+                    LogitsMode::Last
+                } else {
+                    LogitsMode::None
+                },
+            })
+            .collect();
+        let pushes: Vec<Vec<i32>> =
+            work.iter().map(|wk| wk.tokens.clone()).collect();
+        let slot_ids: Vec<usize> = work.iter().map(|wk| wk.slot).collect();
+        let outs = run_plan(
+            &mut self.verify,
+            &mut self.kv,
+            &slot_ids,
+            &pushes,
+            &StepPlan { items },
+        );
+        for wk in work {
+            if wk.want_logits {
+                let s = &mut self.slots[wk.slot];
+                s.budget = s.budget.saturating_sub(1);
+            }
+        }
+        outs.into_iter().map(|m| m.data).collect()
+    }
+}
+
+/// Run `plan` over `slot_ids` through `engine`: the one dispatch shape
+/// both phases and both KV layouts share. `pushes[x]` records the
+/// tokens item `x` appends (the paged table needs token identity;
+/// dense caches ignore it).
+fn run_plan(
+    engine: &mut Engine<'_>,
+    kv: &mut SpecKv,
+    slot_ids: &[usize],
+    pushes: &[Vec<i32>],
+    plan: &StepPlan,
+) -> Vec<Mat> {
+    match kv {
+        SpecKv::Dense(caches) => {
+            let mut refs: Vec<&mut dyn KvSeq> = caches
+                .iter_mut()
+                .enumerate()
+                .filter(|(si, _)| slot_ids.contains(si))
+                .map(|(_, c)| c as &mut dyn KvSeq)
+                .collect();
+            engine.step(plan, &mut SeqRefs(&mut refs))
+        }
+        SpecKv::Paged(pkv) => {
+            for (x, &slot) in slot_ids.iter().enumerate() {
+                pkv.push_tokens(slot, &pushes[x]);
+            }
+            let mut seqs = pkv.seqs(slot_ids.to_vec());
+            engine.step(plan, &mut seqs)
+        }
+    }
+}
+
+impl<'a> DecodeBackend for SpecBackend<'a> {
+    fn slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn cfg(&self) -> ModelConfig {
+        self.verify.cfg()
+    }
+
+    fn max_chunk(&self) -> usize {
+        usize::MAX
+    }
+
+    fn step(&mut self, work: &[SlotWork]) -> Result<Vec<Vec<f32>>, String> {
+        let ctx = self.verify.cfg().ctx;
+        let opts = self.opts;
+        // classify: a speculative item is a single-token logits-wanting
+        // feed (a decode position — or the final token of a one-token
+        // prompt run, same semantics) on an eligible slot with a usable
+        // draft length once the ctx/budget caps apply
+        let mut spec: Vec<(usize, usize)> = Vec::new(); // (work idx, k)
+        for (i, wk) in work.iter().enumerate() {
+            let s = &self.slots[wk.slot];
+            if !(wk.want_logits && wk.tokens.len() == 1 && s.eligible) {
+                continue;
+            }
+            let pos = self.pos_of(wk.slot);
+            // the verify chunk feeds k+1 positions from pos. Capping at
+            // ctx - pos - 2 keeps a round from emitting more tokens
+            // than plain greedy would before the scheduler's
+            // pos+1 >= ctx stop; the budget cap stops drafting past
+            // max_new
+            let k = s
+                .planned
+                .min(s.budget.saturating_sub(1))
+                .min(ctx.saturating_sub(pos + 2));
+            if k >= 1 {
+                spec.push((i, k));
+            }
+        }
+        for s in &mut self.slots {
+            s.planned = 0;
+        }
+        if spec.is_empty() {
+            return Ok(self.plain_step(work));
+        }
+
+        // ---- draft phase: k_max single-token micro-steps at the draft
+        // width, batched across speculative slots
+        let anchors: Vec<usize> = spec
+            .iter()
+            .map(|&(i, _)| self.pos_of(work[i].slot))
+            .collect();
+        let mut drafts: Vec<Vec<i32>> = vec![Vec::new(); spec.len()];
+        let mut pend: Vec<i32> =
+            spec.iter().map(|&(i, _)| work[i].tokens[0]).collect();
+        if let SpecKv::Paged(pkv) = &mut self.kv {
+            pkv.set_draft_window(true);
+        }
+        let kmax = spec.iter().map(|&(_, k)| k).max().unwrap_or(0);
+        for _ in 0..kmax {
+            let live: Vec<usize> = (0..spec.len())
+                .filter(|&x| drafts[x].len() < spec[x].1)
+                .collect();
+            if live.is_empty() {
+                break;
+            }
+            let slot_ids: Vec<usize> =
+                live.iter().map(|&x| work[spec[x].0].slot).collect();
+            let toks: Vec<i32> = live.iter().map(|&x| pend[x]).collect();
+            let pushes: Vec<Vec<i32>> =
+                toks.iter().map(|&t| vec![t]).collect();
+            let plan = StepPlan::decode(&toks);
+            let outs = run_plan(
+                &mut self.draft,
+                &mut self.kv,
+                &slot_ids,
+                &pushes,
+                &plan,
+            );
+            for (j, &x) in live.iter().enumerate() {
+                let d = argmax(&outs[j].data) as i32;
+                drafts[x].push(d);
+                pend[x] = d;
+            }
+        }
+        if let SpecKv::Paged(pkv) = &mut self.kv {
+            pkv.set_draft_window(false);
+        }
+        // roll every draft row back before verification: the
+        // persistent KV only ever holds verify-width rows
+        for (x, &(i, _)) in spec.iter().enumerate() {
+            self.truncate_to(work[i].slot, anchors[x]);
+        }
+        let drafted: usize = drafts.iter().map(|d| d.len()).sum();
+        trace::instant(
+            "spec.draft",
+            &[("slots", spec.len() as f64), ("tokens", drafted as f64)],
+        );
+
+        // ---- verify phase: one chunked verify-width step over every
+        // worked slot — speculative items feed [pending, d_1..d_k] and
+        // score every position; plain prefill/decode items ride along
+        let mut spec_of = vec![usize::MAX; work.len()];
+        for (x, &(i, _)) in spec.iter().enumerate() {
+            spec_of[i] = x;
+        }
+        let mut items = Vec::with_capacity(work.len());
+        let mut pushes = Vec::with_capacity(work.len());
+        for (i, wk) in work.iter().enumerate() {
+            let x = spec_of[i];
+            let item = if x != usize::MAX {
+                let mut t = Vec::with_capacity(drafts[x].len() + 1);
+                t.push(wk.tokens[0]);
+                t.extend_from_slice(&drafts[x]);
+                StepItem::verify(i, t)
+            } else {
+                StepItem {
+                    seq: i,
+                    tokens: wk.tokens.clone(),
+                    logits: if wk.want_logits {
+                        LogitsMode::Last
+                    } else {
+                        LogitsMode::None
+                    },
+                }
+            };
+            pushes.push(item.tokens.clone());
+            items.push(item);
+        }
+        let slot_ids: Vec<usize> = work.iter().map(|wk| wk.slot).collect();
+        let mut outs = run_plan(
+            &mut self.verify,
+            &mut self.kv,
+            &slot_ids,
+            &pushes,
+            &StepPlan { items },
+        );
+        trace::instant(
+            "spec.verify",
+            &[
+                ("slots", spec.len() as f64),
+                ("tokens", (drafted + spec.len()) as f64),
+            ],
+        );
+
+        // ---- accept the longest exact-match prefix per speculative
+        // slot, truncate the rejected tail, hand the scheduler row `a`
+        let mut out: Vec<Vec<f32>> = vec![Vec::new(); work.len()];
+        for (i, wk) in work.iter().enumerate() {
+            let x = spec_of[i];
+            if x == usize::MAX {
+                out[i] = std::mem::take(&mut outs[i].data);
+                if wk.want_logits {
+                    let s = &mut self.slots[wk.slot];
+                    s.budget = s.budget.saturating_sub(1);
+                }
+                continue;
+            }
+            let k = drafts[x].len();
+            let m = &outs[i];
+            debug_assert_eq!(m.rows, k + 1, "verify scores every position");
+            let mut a = 0usize;
+            while a < k && argmax(m.row(a)) as i32 == drafts[x][a] {
+                a += 1;
+            }
+            // row `a` is what plain greedy would see after the `a`
+            // accepted tokens — the scheduler samples the bonus from it
+            out[i] = m.row(a).to_vec();
+            self.truncate_to(wk.slot, anchors[x] + 1 + a);
+            let s = &mut self.slots[wk.slot];
+            s.committed = drafts[x][..a].to_vec();
+            s.budget = s.budget.saturating_sub(a + 1);
+            let rate = a as f64 / k as f64;
+            s.accept_ewma = 0.5 * s.accept_ewma + 0.5 * rate;
+            if opts.adaptive {
+                let old = s.k;
+                if a == k && s.accept_ewma >= 0.75 {
+                    s.k = (s.k + 1).min(opts.max_draft_len);
+                } else if s.accept_ewma < 0.4 {
+                    s.k = s.k.saturating_sub(1).max(1);
+                }
+                if s.k != old {
+                    trace::counter("spec.k", s.k as f64);
+                }
+            }
+            self.stats.draft_tokens += k;
+            self.stats.accepted_tokens += a;
+            self.stats.rollback_tokens += k - a;
+            self.stats.rounds += 1;
+            trace::instant(
+                "spec.accept",
+                &[
+                    ("slot", wk.slot as f64),
+                    ("accepted", a as f64),
+                    ("k", k as f64),
+                ],
+            );
+            if k > a {
+                trace::instant(
+                    "spec.rollback",
+                    &[
+                        ("slot", wk.slot as f64),
+                        ("dropped", (k - a) as f64),
+                    ],
+                );
+            }
+        }
+        Ok(out)
+    }
+
+    fn reset_slot(&mut self, slot: usize) {
+        let cfg = self.verify.cfg();
+        match &mut self.kv {
+            SpecKv::Dense(caches) => caches[slot] = KvCache::new(cfg),
+            SpecKv::Paged(kv) => kv.release(slot),
+        }
+        self.slots[slot] = SlotSpec::fresh(&self.opts, 0);
+    }
+
+    fn slot_pos(&self, slot: usize) -> usize {
+        self.pos_of(slot)
+    }
+
+    fn weight_bytes_per_step(&self) -> usize {
+        // the verify plan — the figure comparable to plain decode (the
+        // drafter streams draft_cost_frac of it per micro-step)
+        self.verify.weight_bytes_per_step()
+    }
+
+    fn kv_bytes_per_step(&self) -> usize {
+        match &self.kv {
+            SpecKv::Dense(_) => {
+                let c = self.cfg();
+                c.layers * c.heads * c.ctx * c.head_dim() * 4 * 2
+            }
+            SpecKv::Paged(kv) => {
+                kv.bytes_per_block() * kv.stats().peak_blocks_in_use
+            }
+        }
+    }
+
+    fn admit(
+        &mut self,
+        slot: usize,
+        prompt: &[i32],
+        max_new: usize,
+    ) -> Option<usize> {
+        let cfg = self.verify.cfg();
+        let cached = match &mut self.kv {
+            SpecKv::Dense(caches) => {
+                caches[slot] = KvCache::new(cfg);
+                Some(0)
+            }
+            SpecKv::Paged(kv) => {
+                kv.release(slot);
+                kv.admit(slot, prompt, max_new)
+            }
+        };
+        if cached.is_some() {
+            self.slots[slot] = SlotSpec::fresh(&self.opts, max_new);
+        }
+        cached
+    }
+
+    fn pre_step(&mut self, need: &[usize]) -> Vec<usize> {
+        // plan this step's draft length per speculative decode slot;
+        // the paged pool must reserve the whole k+1-position verify
+        // window up front (the draft phase peaks at k appended rows
+        // before rollback, the verify chunk at k+1)
+        let mut planned = vec![0usize; need.len()];
+        for (si, s) in self.slots.iter().enumerate().take(need.len()) {
+            if need[si] == 1 && s.eligible && s.budget > 1 {
+                planned[si] = s.k;
+            }
+        }
+        match &mut self.kv {
+            SpecKv::Dense(_) => {
+                for (si, &p) in planned.iter().enumerate() {
+                    self.slots[si].planned = p;
+                }
+                Vec::new()
+            }
+            SpecKv::Paged(kv) => {
+                // split the pool headroom beyond what the plain step
+                // needs across the speculative slots, so drafting never
+                // preempts a slot that plain decode could have served
+                let bs = kv.block_size();
+                let plain_blocks: usize =
+                    need.iter().map(|&n| n.div_ceil(bs) + 1).sum();
+                let spare = kv
+                    .reclaimable_blocks()
+                    .saturating_sub(plain_blocks)
+                    * bs;
+                let nspec =
+                    planned.iter().filter(|&&p| p > 0).count().max(1);
+                let mut inflated = need.to_vec();
+                for (si, p) in planned.iter_mut().enumerate() {
+                    if *p == 0 {
+                        continue;
+                    }
+                    *p = (*p).min(spare / nspec);
+                    inflated[si] = need[si] + *p;
+                }
+                for (si, &p) in planned.iter().enumerate() {
+                    self.slots[si].planned = p;
+                }
+                kv.prepare_step_n(&inflated)
+            }
+        }
+    }
+
+    fn release_slot(&mut self, slot: usize) {
+        if let SpecKv::Paged(kv) = &mut self.kv {
+            kv.release(slot);
+        }
+        self.slots[slot] = SlotSpec::fresh(&self.opts, 0);
+    }
+
+    fn pool_stats(&self) -> Option<KvPoolStats> {
+        match &self.kv {
+            SpecKv::Dense(_) => None,
+            SpecKv::Paged(kv) => Some(kv.stats()),
+        }
+    }
+
+    // widths() stays empty on purpose: this backend's width policy IS
+    // speculation (draft low, verify high); pinning admissions to one
+    // width would defeat it, so only PrecisionPolicy::Native is valid.
+
+    fn set_slot_speculative(&mut self, slot: usize, on: bool) {
+        self.slots[slot].eligible = on;
+    }
+
+    fn take_committed(&mut self, slot: usize) -> Vec<i32> {
+        std::mem::take(&mut self.slots[slot].committed)
+    }
+
+    fn spec_stats(&self) -> Option<SpecStats> {
+        Some(self.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{GenRequest, SamplingParams, StopCriteria};
+    use crate::model::{LayerWeights, WeightStore};
+    use crate::quant::lut::lut_from_parts;
+    use crate::quant::BitPlaneStore;
+
+    /// Quantized model whose every linear is a random nested
+    /// any-precision store (widths 2/3/4) — the serve-test idiom.
+    fn anyprec_model(seed: u64) -> QuantizedModel {
+        let cfg = ModelConfig::builtin("opt-micro").unwrap();
+        let store = WeightStore::random("t", cfg, seed);
+        let mut rng = crate::util::rng::Rng::new(seed ^ 0x5bec);
+        let mut linears = std::collections::BTreeMap::new();
+        for (name, m, n) in store.cfg.linear_shapes() {
+            let codes: Vec<u8> =
+                (0..m * n).map(|_| rng.below(16) as u8).collect();
+            let cb = Mat::from_vec(
+                m,
+                16,
+                rng.normal_vec_f32(m * 16)
+                    .into_iter()
+                    .map(|v| v * 0.08)
+                    .collect(),
+            );
+            let parent = lut_from_parts(m, n, 4, codes, cb);
+            linears.insert(
+                name,
+                LayerWeights::AnyPrec(BitPlaneStore::nest(
+                    &parent,
+                    &[2, 3, 4],
+                )),
+            );
+        }
+        QuantizedModel {
+            base: store,
+            method: "ganq-anyprec".into(),
+            bits: 4,
+            linears,
+            weight_bits: 0,
+        }
+    }
+
+    #[test]
+    fn rejects_non_anyprec_models() {
+        let cfg = ModelConfig::builtin("opt-micro").unwrap();
+        let store = WeightStore::random("t", cfg, 7);
+        let calib = super::super::pipeline::calibrate(&store, 2, 16);
+        let qm = super::super::pipeline::quantize_model(
+            &store,
+            "rtn",
+            4,
+            &calib,
+            &super::super::pipeline::QuantEngine::Native,
+            false,
+        )
+        .unwrap();
+        let err = SpecBackend::dense(&qm, 1, SpecOptions::new(2, 4))
+            .err()
+            .expect("plain lut model must be rejected");
+        assert!(err.contains("any-precision"), "err: {}", err);
+    }
+
+    #[test]
+    fn rejects_bad_draft_widths() {
+        let qm = anyprec_model(11);
+        // verify width (4) cannot draft for itself
+        assert!(SpecBackend::dense(&qm, 1, SpecOptions::new(4, 4)).is_err());
+        // width outside the nested family
+        assert!(SpecBackend::dense(&qm, 1, SpecOptions::new(5, 4)).is_err());
+        assert!(SpecBackend::dense(&qm, 1, SpecOptions::new(2, 4)).is_ok());
+    }
+
+    #[test]
+    fn spec_stats_add_up_and_delta() {
+        let qm = anyprec_model(12);
+        let mut be = SpecBackend::dense(&qm, 2, SpecOptions::fixed(2, 4))
+            .expect("backend");
+        let reqs = vec![
+            GenRequest::greedy(1, vec![3, 4, 5], 8),
+            GenRequest::greedy(2, vec![9, 1], 6),
+        ];
+        let base = be.spec_stats().unwrap();
+        assert_eq!(base, SpecStats::default());
+        let (_, m) = super::super::serve::serve(&mut be, reqs).unwrap();
+        let s = be.spec_stats().unwrap();
+        assert!(s.rounds > 0, "greedy requests must speculate");
+        assert_eq!(
+            s.accepted_tokens + s.rollback_tokens,
+            s.draft_tokens,
+            "every draft is either accepted or rolled back"
+        );
+        let d = s.delta_since(&base);
+        assert_eq!(d, s);
+        // the scheduler surfaced the same counters in ServeMetrics
+        assert_eq!(m.draft_tokens, s.draft_tokens);
+        assert_eq!(m.accepted_tokens, s.accepted_tokens);
+        assert_eq!(m.rollback_tokens, s.rollback_tokens);
+        assert_eq!(m.spec_rounds, s.rounds);
+    }
+
+    #[test]
+    fn sampled_requests_fall_back_to_plain_decode() {
+        let qm = anyprec_model(13);
+        let sampling = SamplingParams {
+            temperature: 0.8,
+            top_k: 0,
+            top_p: 1.0,
+            seed: 5,
+        };
+        let stop = StopCriteria::max_tokens(6);
+        let reqs = vec![GenRequest::new(
+            1,
+            vec![4, 5, 6],
+            sampling,
+            stop.clone(),
+        )];
+        let mut be = SpecBackend::dense(&qm, 1, SpecOptions::new(2, 4))
+            .expect("backend");
+        let (out, m) = super::super::serve::serve(&mut be, reqs).unwrap();
+        assert_eq!(be.spec_stats().unwrap().rounds, 0);
+        assert_eq!(m.spec_rounds, 0);
+        // identical to the plain max-width engine under the same seed
+        let mut plain =
+            super::super::serve::NativeBackend::new(Weights::Quant(&qm), 1);
+        let reqs2 =
+            vec![GenRequest::new(1, vec![4, 5, 6], sampling, stop)];
+        let (out2, _) =
+            super::super::serve::serve(&mut plain, reqs2).unwrap();
+        assert_eq!(out[0].tokens, out2[0].tokens);
+    }
+
+    #[test]
+    fn speculative_greedy_matches_plain_greedy_dense() {
+        let qm = anyprec_model(21);
+        let prompts: Vec<Vec<i32>> =
+            vec![vec![1, 2, 3, 4], vec![7, 8], vec![5; 6], vec![9]];
+        let reqs = |off: u64| -> Vec<GenRequest> {
+            prompts
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    GenRequest::greedy(off + i as u64, p.clone(), 12)
+                })
+                .collect()
+        };
+        let mut plain =
+            super::super::serve::NativeBackend::new(Weights::Quant(&qm), 4);
+        let (want, _) =
+            super::super::serve::serve(&mut plain, reqs(0)).unwrap();
+        for k in [1usize, 4, 8] {
+            let mut be =
+                SpecBackend::dense(&qm, 4, SpecOptions::fixed(2, k))
+                    .expect("backend");
+            let (got, _) =
+                super::super::serve::serve(&mut be, reqs(0)).unwrap();
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(
+                    g.tokens, w.tokens,
+                    "spec k={} diverged from plain greedy",
+                    k
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ctx_edge_matches_plain_greedy() {
+        // a huge max_new forces generation to the context-full stop on
+        // opt-micro (ctx 128): speculation must finish at the same token
+        let qm = anyprec_model(22);
+        let reqs = || vec![GenRequest::greedy(1, vec![3, 1, 2], 4096)];
+        let mut plain =
+            super::super::serve::NativeBackend::new(Weights::Quant(&qm), 1);
+        let (want, _) =
+            super::super::serve::serve(&mut plain, reqs()).unwrap();
+        let mut be = SpecBackend::dense(&qm, 1, SpecOptions::new(3, 6))
+            .expect("backend");
+        let (got, _) = super::super::serve::serve(&mut be, reqs()).unwrap();
+        assert_eq!(got[0].tokens, want[0].tokens);
+        assert_eq!(got[0].finish, want[0].finish);
+    }
+}

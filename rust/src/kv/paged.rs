@@ -48,6 +48,7 @@ pub struct PagedKv {
     index: PrefixIndex,
     slots: Vec<Option<Seq>>,
     clock: u64,
+    draft_window: bool,
     prefix_lookup_tokens: usize,
     prefix_hit_tokens: usize,
     preemptions: usize,
@@ -64,6 +65,7 @@ impl PagedKv {
             index: PrefixIndex::new(),
             slots: (0..slots).map(|_| None).collect(),
             clock: 0,
+            draft_window: false,
             prefix_lookup_tokens: 0,
             prefix_hit_tokens: 0,
             preemptions: 0,
@@ -324,6 +326,18 @@ impl PagedKv {
         );
     }
 
+    /// Toggle the speculative draft window. While on, appended positions
+    /// advance without sealing or prefix-indexing the blocks they fill:
+    /// draft rows are written at the draft width and rolled back before
+    /// the verifier rewrites the same positions, so indexing them would
+    /// poison the prefix cache with content future admissions must never
+    /// share. Verify-phase appends (window off) seal and index normally —
+    /// their rows are a pure function of the token sequence, so even
+    /// later-truncated blocks stay valid cache entries.
+    pub fn set_draft_window(&mut self, on: bool) {
+        self.draft_window = on;
+    }
+
     /// KvSeq view of one slot for single-sequence engine steps.
     pub fn slot_view(&mut self, slot: usize) -> SlotView<'_> {
         SlotView { kv: self, slot }
@@ -407,7 +421,7 @@ impl PagedKv {
                 seq.pos += 1;
                 seq.pos
             };
-            if pos % bs == 0 {
+            if pos % bs == 0 && !self.draft_window {
                 // The block holding positions [pos-bs, pos) just filled.
                 // insert_chain re-walks the chain from the root on every
                 // seal: ctx/bs is small (<= 16 for the builtin configs)
@@ -927,6 +941,80 @@ mod tests {
             kv_ref.slot_view(0).read_v(0, 0, sj, &mut b);
             assert_eq!(a, b, "v pos {}", sj);
         }
+    }
+
+    #[test]
+    fn draft_window_skips_seal_and_index() {
+        let mut kv = paged(8, 1);
+        kv.admit(0, &[1, 2], 8).unwrap();
+        run_tokens(&mut kv, 0, &[1, 2]);
+        let sealed_before = kv.stats().sealed_blocks;
+
+        // six draft positions cross two block boundaries inside the
+        // window: nothing seals, nothing lands in the prefix index
+        kv.set_draft_window(true);
+        run_tokens(&mut kv, 0, &[10, 11, 12, 13, 14, 15]);
+        kv.set_draft_window(false);
+        assert_eq!(kv.pos(0), 8);
+        assert_eq!(kv.stats().sealed_blocks, sealed_before);
+        let drafted: Vec<i32> = vec![1, 2, 10, 11, 12, 13, 14, 15];
+        assert_eq!(
+            kv.index.peek(&drafted, 4),
+            0,
+            "draft-width rows must never be prefix-cached"
+        );
+
+        // roll the draft back and re-append the verify rows for the
+        // same positions: now the blocks seal and index normally
+        kv.slot_view(0).truncate(2);
+        assert_eq!(kv.pos(0), 2);
+        run_chunk(&mut kv, 0, &[10, 11, 12, 13, 14, 15]);
+        assert_eq!(kv.stats().sealed_blocks, sealed_before + 2);
+        assert_eq!(kv.index.peek(&drafted, 4), 2);
+        let mut row = [0.0f32; 2];
+        kv.slot_view(0).read_k(0, 0, 2, &mut row);
+        assert_eq!(row, [10.0, -10.0], "verify row overwrote the draft");
+    }
+
+    #[test]
+    fn truncate_mid_speculation_on_shared_sealed_tail() {
+        let mut kv = paged(8, 2);
+        let prompt: Vec<i32> = (0..8).collect(); // exactly 2 sealed blocks
+        kv.admit(0, &prompt, 4).unwrap();
+        run_tokens(&mut kv, 0, &prompt);
+        assert_eq!(kv.admit(1, &prompt, 4), Some(7));
+        let b = kv.slots[0].as_ref().unwrap().blocks.clone();
+
+        // slot 1 speculates straight into the shared sealed tail: the
+        // draft append CoWs a private copy (slot 0 and the index keep
+        // the original), fills a third block in the window, rolls back
+        kv.set_draft_window(true);
+        run_tokens(&mut kv, 1, &[7, 90, 91]);
+        kv.set_draft_window(false);
+        assert_eq!(kv.stats().cow_copies, 1);
+        let b1 = kv.slots[1].as_ref().unwrap().blocks.clone();
+        assert_eq!(b1[0], b[0], "full block still shared");
+        assert_ne!(b1[1], b[1], "draft went into a private copy");
+        kv.slot_view(1).truncate(7);
+        assert_eq!(kv.pos(1), 7);
+
+        // slot 0's rows and the cached prefix are untouched by the
+        // rolled-back speculation
+        let mut row = [0.0f32; 2];
+        kv.slot_view(0).read_k(0, 0, 7, &mut row);
+        assert_eq!(row, [7.0, -7.0]);
+        assert_eq!(kv.index.peek(&prompt, 4), 2);
+
+        // resume with verify-width rows: slot 1 rebuilds from position
+        // 7 and both slots read back their own histories
+        run_tokens(&mut kv, 1, &[7, 80, 81]);
+        assert_eq!(kv.pos(1), 10);
+        kv.slot_view(1).read_k(0, 0, 7, &mut row);
+        assert_eq!(row, [7.0, -7.0]);
+        kv.slot_view(1).read_k(0, 0, 8, &mut row);
+        assert_eq!(row, [80.0, -80.0]);
+        kv.slot_view(0).read_k(0, 0, 7, &mut row);
+        assert_eq!(row, [7.0, -7.0], "slot 0 unaffected");
     }
 
     #[test]

@@ -82,6 +82,28 @@
 //! request pinned to its admission-time width for determinism
 //! (`ganq serve --precision auto|2|3|4`).
 //!
+//! ## Self-speculative decoding: the store drafts for itself
+//!
+//! `coordinator::speculative::SpecBackend` turns the nested bit-plane
+//! layout into a lossless decode accelerator: a low-width draft engine
+//! and the max-width verify engine share one resident `BitPlaneStore`
+//! (via `Engine::new_at`, the `AnyPrecBackend` pattern — no second
+//! model in memory). Each round drafts `k` tokens per greedy slot
+//! through the cheap width, rolls the KV back to the anchor
+//! (`truncate`), then re-scores pending-token + draft as a single
+//! verification chunk (`StepItem::verify` with `LogitsMode::All`) —
+//! one max-width weight stream amortized over `k+1` positions. The
+//! longest draft prefix matching the verifier's argmaxes is accepted
+//! plus one bonus token from the verifier's own logits; acceptance is
+//! temperature-0 exact-match, so speculative greedy output is bitwise
+//! identical to plain greedy on dense and paged-f32 KV
+//! (`tests/speculative.rs`). An adaptive controller resizes `k` per
+//! request from a running acceptance EWMA; sampled requests fall back
+//! to plain decode explicitly. The whole thing is one more
+//! `DecodeBackend` — scheduler, server, cluster router, and metrics
+//! are unchanged (`ganq serve --speculative --draft-width 2
+//! --draft-len 8`; `benches/speculative.rs` pins the speedup).
+//!
 //! ## Serving: the request lifecycle
 //!
 //! The serving front (`coordinator::serve` / `coordinator::server`) is

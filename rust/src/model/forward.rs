@@ -528,6 +528,15 @@ impl StepItem {
         assert!(!tokens.is_empty(), "empty prefill chunk");
         StepItem { seq, tokens, logits }
     }
+
+    /// Speculative verification chunk: feed the pending token plus the
+    /// draft run and score *every* position, so row `i` of the output is
+    /// exactly the logits greedy decode would see after accepting `i`
+    /// draft tokens.
+    pub fn verify(seq: usize, tokens: Vec<i32>) -> StepItem {
+        assert!(!tokens.is_empty(), "empty verify chunk");
+        StepItem { seq, tokens, logits: LogitsMode::All }
+    }
 }
 
 /// A mixed batch of work items advanced together by one [`Engine::step`]:

@@ -293,6 +293,16 @@ impl BitPlaneStore {
     pub fn dequant_max(&self) -> Mat {
         self.slice(self.max_bits).dequant()
     }
+
+    /// What a decode step at width `w` streams relative to the full
+    /// max-width stream — the per-draft-token cost of self-speculative
+    /// decoding, where the drafter is the `w`-bit view of this store
+    /// and the verifier the max-width view. Well under `w / max_bits`
+    /// for wide layers, since narrow codebooks also shrink.
+    pub fn draft_cost_frac(&self, w: u8) -> f64 {
+        self.bytes_per_decode(w) as f64
+            / self.bytes_per_decode(self.max_bits) as f64
+    }
 }
 
 #[cfg(test)]
@@ -343,6 +353,20 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn draft_cost_frac_tracks_decode_bytes() {
+        let mut rng = Rng::new(55);
+        let parent = random_parent(&mut rng, 64, 256, 4);
+        let store = BitPlaneStore::nest(&parent, &[2, 3, 4]);
+        assert_eq!(store.draft_cost_frac(4), 1.0);
+        let f2 = store.draft_cost_frac(2);
+        let f3 = store.draft_cost_frac(3);
+        assert!(f2 < f3 && f3 < 1.0, "f2={} f3={}", f2, f3);
+        // narrow drafts undercut the naive w/max ratio: planes shrink
+        // linearly, but the 2^w codebook shrinks much faster
+        assert!(f2 < 0.5, "2-bit draft should stream <half: {}", f2);
     }
 
     #[test]

@@ -226,3 +226,90 @@ fn metrics_snapshot_carries_step_and_occupancy_histograms() {
         Some(m.decode_steps as f64)
     );
 }
+
+/// The speculative decode path narrates itself: every round leaves
+/// `spec.draft` / `spec.verify` / `spec.accept` instants (plus
+/// `spec.rollback` and `kv.truncate` when drafts miss), the adaptive
+/// controller emits the `spec.k` counter, and the spans still balance.
+#[test]
+fn speculative_serve_emits_spec_trace_events() {
+    use ganq::coordinator::{SpecBackend, SpecOptions};
+    use ganq::model::{LayerWeights, QuantizedModel};
+    use ganq::quant::lut::lut_from_parts;
+    use ganq::quant::BitPlaneStore;
+    use ganq::tensor::Mat;
+
+    // nested any-precision model over random codes (the serve-test idiom)
+    let store = micro_store(36);
+    let mut rng = ganq::util::rng::Rng::new(0x5bec);
+    let mut linears = std::collections::BTreeMap::new();
+    for (name, mm, n) in store.cfg.linear_shapes() {
+        let codes: Vec<u8> =
+            (0..mm * n).map(|_| rng.below(16) as u8).collect();
+        let cb = Mat::from_vec(
+            mm,
+            16,
+            rng.normal_vec_f32(mm * 16)
+                .into_iter()
+                .map(|v| v * 0.08)
+                .collect(),
+        );
+        let parent = lut_from_parts(mm, n, 4, codes, cb);
+        linears.insert(
+            name,
+            LayerWeights::AnyPrec(BitPlaneStore::nest(&parent, &[2, 3, 4])),
+        );
+    }
+    let qm = QuantizedModel {
+        base: store,
+        method: "ganq-anyprec".into(),
+        bits: 4,
+        linears,
+        weight_bits: 0,
+    };
+
+    trace::enable(1 << 20);
+    let mut be = SpecBackend::paged(
+        &qm,
+        2,
+        4,
+        64,
+        KvStoreKind::F32,
+        SpecOptions::new(2, 4),
+    )
+    .expect("backend");
+    let reqs: Vec<GenRequest> = (0..2)
+        .map(|i| GenRequest::greedy(i, vec![10 + i as i32, 20, 30], 10))
+        .collect();
+    let (resp, m) = serve(&mut be, reqs).unwrap();
+    let (events, dropped) = trace::take();
+    trace::disable();
+
+    assert_eq!(resp.len(), 2);
+    assert_eq!(dropped, 0);
+    assert!(m.spec_rounds > 0, "greedy requests must speculate");
+    let has = |name: &str, ph: Phase| {
+        events.iter().any(|e| e.name == name && e.ph == ph)
+    };
+    assert!(has("spec.draft", Phase::Instant));
+    assert!(has("spec.verify", Phase::Instant));
+    assert!(has("spec.accept", Phase::Instant));
+    if m.rollback_tokens > 0 {
+        assert!(has("spec.rollback", Phase::Instant));
+        assert!(has("kv.truncate", Phase::Instant));
+    }
+    // random 2-bit drafts miss often, so the adaptive controller must
+    // have shrunk k at least once
+    assert!(has("spec.k", Phase::Counter));
+    // spans from the engines underneath still balance
+    let mut depth = 0i64;
+    for ev in &events {
+        match ev.ph {
+            Phase::Begin => depth += 1,
+            Phase::End => depth -= 1,
+            _ => {}
+        }
+        assert!(depth >= 0, "End without Begin at {}", ev.name);
+    }
+    assert_eq!(depth, 0, "unclosed spans");
+}

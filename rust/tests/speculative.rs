@@ -1,0 +1,231 @@
+//! Self-speculative decoding integration tests: the exact-match
+//! property — speculative greedy output is bitwise-identical to plain
+//! greedy output — across draft widths, draft lengths, batch sizes,
+//! and both KV layouts (dense caches and paged F32 blocks); plus the
+//! rollback-then-preempt-then-resume path on a tiny block pool and
+//! stop-criteria handling on speculatively committed tokens.
+
+use ganq::coordinator::{
+    serve, GenRequest, KvStoreKind, NativeBackend, SamplingParams,
+    SpecBackend, SpecOptions, StopCriteria,
+};
+use ganq::model::forward::Weights;
+use ganq::model::{
+    LayerWeights, ModelConfig, QuantizedModel, WeightStore,
+};
+use ganq::quant::lut::lut_from_parts;
+use ganq::quant::BitPlaneStore;
+use ganq::tensor::Mat;
+
+/// Quantized model whose every linear is a random nested any-precision
+/// store (widths 2/3/4) — the serve-test idiom.
+fn anyprec_model(seed: u64) -> QuantizedModel {
+    let cfg = ModelConfig::builtin("opt-micro").unwrap();
+    let store = WeightStore::random("t", cfg, seed);
+    let mut rng = ganq::util::rng::Rng::new(seed ^ 0x5bec);
+    let mut linears = std::collections::BTreeMap::new();
+    for (name, m, n) in store.cfg.linear_shapes() {
+        let codes: Vec<u8> = (0..m * n).map(|_| rng.below(16) as u8).collect();
+        let cb = Mat::from_vec(
+            m,
+            16,
+            rng.normal_vec_f32(m * 16)
+                .into_iter()
+                .map(|v| v * 0.08)
+                .collect(),
+        );
+        let parent = lut_from_parts(m, n, 4, codes, cb);
+        linears.insert(
+            name,
+            LayerWeights::AnyPrec(BitPlaneStore::nest(&parent, &[2, 3, 4])),
+        );
+    }
+    QuantizedModel {
+        base: store,
+        method: "ganq-anyprec".into(),
+        bits: 4,
+        linears,
+        weight_bits: 0,
+    }
+}
+
+fn greedy_reqs(max_new: usize) -> Vec<GenRequest> {
+    vec![
+        GenRequest::greedy(1, vec![3, 4, 5, 6], max_new),
+        GenRequest::greedy(2, vec![9, 1], max_new),
+        GenRequest::greedy(3, vec![7, 7, 2, 8, 11], max_new),
+        GenRequest::greedy(4, vec![12], max_new),
+    ]
+}
+
+/// The tentpole property: speculative greedy decode is bitwise equal to
+/// plain greedy decode — acceptance is temperature-0 exact-match, so a
+/// mismatched draft is rolled back and replaced by the verifier's own
+/// argmax. Sweeps draft width x draft length x batch x KV layout.
+#[test]
+fn speculative_greedy_matches_plain_greedy_everywhere() {
+    let qm = anyprec_model(61);
+    for batch in [1usize, 4] {
+        let mut plain = NativeBackend::new(Weights::Quant(&qm), batch);
+        let (want, _) = serve(&mut plain, greedy_reqs(10)).unwrap();
+        for width in [2u8, 3] {
+            for k in [1usize, 4, 8] {
+                let so = SpecOptions::fixed(width, k);
+                let mut dense =
+                    SpecBackend::dense(&qm, batch, so).expect("backend");
+                let (got, m) = serve(&mut dense, greedy_reqs(10)).unwrap();
+                for (w, g) in want.iter().zip(&got) {
+                    assert_eq!(
+                        w.tokens, g.tokens,
+                        "dense w={} k={} batch={} req {}",
+                        width, k, batch, w.id
+                    );
+                    assert_eq!(w.finish, g.finish);
+                }
+                assert!(
+                    m.spec_rounds > 0,
+                    "dense w={} k={} batch={}: no speculation",
+                    width,
+                    k,
+                    batch
+                );
+                assert_eq!(
+                    m.accepted_tokens + m.rollback_tokens,
+                    m.draft_tokens
+                );
+
+                let mut paged = SpecBackend::paged(
+                    &qm,
+                    batch,
+                    8,
+                    64,
+                    KvStoreKind::F32,
+                    so,
+                )
+                .expect("backend");
+                let (got, m) = serve(&mut paged, greedy_reqs(10)).unwrap();
+                for (w, g) in want.iter().zip(&got) {
+                    assert_eq!(
+                        w.tokens, g.tokens,
+                        "paged w={} k={} batch={} req {}",
+                        width, k, batch, w.id
+                    );
+                    assert_eq!(w.finish, g.finish);
+                }
+                assert!(m.spec_rounds > 0);
+            }
+        }
+    }
+}
+
+/// Tiny block pool: speculation rounds roll drafts back while the pool
+/// pressure forces preempt-and-resume — the combination must still be
+/// token-identical to plain greedy decode (rollback-then-preempt-then-
+/// resume is the hardest KV path in the subsystem).
+#[test]
+fn rollback_then_preempt_then_resume_is_token_identical() {
+    let qm = anyprec_model(62);
+    let reqs: Vec<GenRequest> = (0..4)
+        .map(|i| {
+            GenRequest::greedy(
+                i as u64 + 1,
+                vec![2 + i, 5, 9 - i, 4, 1 + i, 8],
+                12,
+            )
+        })
+        .collect();
+    let mut plain = NativeBackend::new(Weights::Quant(&qm), 4);
+    let (want, _) = serve(&mut plain, reqs.clone()).unwrap();
+
+    // 12 blocks of 4 tokens cannot hold 4 sequences of 6+12 tokens:
+    // the scheduler must preempt and resume mid-run
+    let mut spec = SpecBackend::paged(
+        &qm,
+        4,
+        4,
+        12,
+        KvStoreKind::F32,
+        SpecOptions::fixed(2, 4),
+    )
+    .expect("backend");
+    let (got, m) = serve(&mut spec, reqs).unwrap();
+    for (w, g) in want.iter().zip(&got) {
+        assert_eq!(w.tokens, g.tokens, "req {}", w.id);
+        assert_eq!(w.finish, g.finish);
+    }
+    assert!(m.preemptions > 0, "pool never filled: {:?}", m.kv);
+    assert!(m.spec_rounds > 0, "headroom never allowed a draft");
+    assert!(
+        m.rollback_tokens > 0,
+        "random weights should reject some drafts"
+    );
+}
+
+/// Mixed batch: greedy requests speculate, sampled requests fall back
+/// to plain decode — and both must match the plain backend exactly
+/// (sampling is a pure function of (seed, draw index)).
+#[test]
+fn mixed_greedy_and_sampled_batch_matches_plain() {
+    let qm = anyprec_model(63);
+    let sampled = SamplingParams {
+        temperature: 0.9,
+        top_k: 0,
+        top_p: 1.0,
+        seed: 17,
+    };
+    let reqs = vec![
+        GenRequest::greedy(1, vec![3, 4, 5], 8),
+        GenRequest::new(2, vec![9, 1], sampled, StopCriteria::max_tokens(8)),
+        GenRequest::greedy(3, vec![7, 2, 8], 8),
+        GenRequest::new(4, vec![6], sampled, StopCriteria::max_tokens(8)),
+    ];
+    let mut plain = NativeBackend::new(Weights::Quant(&qm), 4);
+    let (want, _) = serve(&mut plain, reqs.clone()).unwrap();
+    let mut spec =
+        SpecBackend::dense(&qm, 4, SpecOptions::new(2, 4)).expect("backend");
+    let (got, m) = serve(&mut spec, reqs).unwrap();
+    for (w, g) in want.iter().zip(&got) {
+        assert_eq!(w.tokens, g.tokens, "req {}", w.id);
+        assert_eq!(w.finish, g.finish);
+    }
+    assert!(m.spec_rounds > 0, "greedy slots must still speculate");
+}
+
+/// Stop criteria fold over speculatively committed tokens in sampler
+/// order: a stop token inside an accepted draft run ends the request at
+/// the same position and with the same finish reason as plain decode.
+#[test]
+fn stop_token_inside_committed_run_matches_plain() {
+    let qm = anyprec_model(64);
+    // find what plain greedy emits, then make its third token a stop
+    let mut plain = NativeBackend::new(Weights::Quant(&qm), 1);
+    let (base, _) =
+        serve(&mut plain, vec![GenRequest::greedy(1, vec![5, 6], 8)])
+            .unwrap();
+    assert!(base[0].tokens.len() >= 3, "need a stream to stop inside");
+    let stop_tok = base[0].tokens[2];
+    let stop =
+        StopCriteria::max_tokens(8).with_stop_tokens(vec![stop_tok]);
+    let req = GenRequest::new(
+        1,
+        vec![5, 6],
+        SamplingParams::greedy(),
+        stop,
+    );
+
+    let mut plain = NativeBackend::new(Weights::Quant(&qm), 1);
+    let (want, _) = serve(&mut plain, vec![req.clone()]).unwrap();
+    // a draft length past the stop position: the stop token lands
+    // inside one committed run
+    let mut spec =
+        SpecBackend::dense(&qm, 1, SpecOptions::fixed(2, 8)).expect("backend");
+    let (got, _) = serve(&mut spec, vec![req]).unwrap();
+    assert_eq!(want[0].tokens, got[0].tokens);
+    assert_eq!(want[0].finish, got[0].finish);
+    assert_eq!(
+        want[0].finish,
+        ganq::coordinator::FinishReason::StopToken,
+        "the stop token must end the request"
+    );
+    assert!(got[0].tokens.len() <= 2, "stopped at the stop token");
+}
