@@ -57,6 +57,7 @@ use crate::kv::{KvPoolStats, PrefixIndex};
 use crate::model::ModelConfig;
 use crate::obs::trace;
 use crate::util::json::{self, Json};
+use crate::util::ordered_lock::{rank, OrderedMutex};
 
 // ---------------------------------------------------------------------------
 // fault injection
@@ -192,6 +193,8 @@ impl WorkerFaults {
             std::thread::sleep(Duration::from_millis(ms));
         }
         if self.kill_at == Some(s) {
+            // lint:allow(hot-panic): deliberate fault injection — the
+            // worker loop catches this and reports the replica dead
             panic!("fault-plan kill at step {}", s);
         }
     }
@@ -235,19 +238,35 @@ impl Heartbeat {
         now.saturating_duration_since(self.epoch).as_millis() as u64
     }
 
+    // Every mutation has an explicit-clock `_at` variant so the model
+    // checker (`modelcheck_*` tests below) can replay the worker/router
+    // handoff deterministically at chosen timestamps; the wall-clock
+    // entry points delegate.
+
+    fn beat_at(&self, now: Instant) {
+        self.last_beat_ms.store(self.now_ms(now), Ordering::Relaxed);
+    }
+
     fn beat(&self) {
-        self.last_beat_ms
-            .store(self.now_ms(Instant::now()), Ordering::Relaxed);
+        self.beat_at(Instant::now());
+    }
+
+    fn begin_round_at(&self, now: Instant) {
+        self.busy.store(true, Ordering::Relaxed);
+        self.beat_at(now);
     }
 
     fn begin_round(&self) {
-        self.busy.store(true, Ordering::Relaxed);
-        self.beat();
+        self.begin_round_at(Instant::now());
+    }
+
+    fn end_round_at(&self, now: Instant) {
+        self.beat_at(now);
+        self.busy.store(false, Ordering::Relaxed);
     }
 
     fn end_round(&self) {
-        self.beat();
-        self.busy.store(false, Ordering::Relaxed);
+        self.end_round_at(Instant::now());
     }
 
     fn step_tick(&self) {
@@ -535,6 +554,36 @@ impl ClusterMetrics {
 // router
 // ---------------------------------------------------------------------------
 
+/// The stall predicate, pure in its inputs so the model checker
+/// (`modelcheck_heartbeat_*` below) can drive it through every
+/// worker/router interleaving at explicit timestamps: a live worker
+/// with assigned load whose busy-flagged heartbeat went silent past
+/// the timeout.
+fn is_stalled(
+    alive: bool,
+    load: usize,
+    busy: bool,
+    age_ms: u64,
+    timeout_ms: u64,
+) -> bool {
+    alive && load > 0 && busy && age_ms > timeout_ms
+}
+
+/// Point-in-time cluster occupancy, published by the router after
+/// every message batch and readable from any thread through
+/// [`Cluster::status`] without a router round-trip. Guarded by a
+/// rank-tagged [`OrderedMutex`] (`rank::CLUSTER_STATUS`) so the lock
+/// lint can prove it participates in no cycle.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ClusterStatus {
+    pub alive_workers: usize,
+    pub tracked_requests: usize,
+    pub pending_retries: usize,
+    /// outstanding assignments summed over live workers
+    pub total_load: usize,
+    pub draining: bool,
+}
+
 enum WorkerJob {
     Run(Vec<GenRequest>),
     Stop,
@@ -548,20 +597,60 @@ enum RouterMsg {
     Shutdown(Sender<ClusterMetrics>),
 }
 
-/// One live request, as the router sees it. `seen`/`delivered` replay
-/// de-duplication: a requeued request regenerates its stream from token
-/// 0 (sampling is pure in `(seed, index)`), and only tokens past the
-/// delivered high-water mark are forwarded — so the client stream is
-/// exactly-once even across retries.
-struct Tracked {
-    req: GenRequest,
-    client: Sender<TokenEvent>,
-    worker: Option<usize>,
-    /// tokens forwarded to the client so far (also kept by value, so a
+/// Exactly-once client-stream bookkeeping for one tracked request,
+/// factored out of [`Tracked`] so the replay protocol is a pure state
+/// machine the model checker can drive through every interleaving
+/// (`modelcheck_stream_dedup_*` below). A requeued request regenerates
+/// its stream from token 0 (sampling is pure in `(seed, index)`), and
+/// only tokens past the delivered high-water mark are forwarded — so
+/// the client stream is exactly-once even across retries.
+#[derive(Debug, Default)]
+struct StreamDedup {
+    /// tokens forwarded to the client so far (kept by value, so a
     /// retries-exhausted rejection can deliver the partial output)
     tokens: Vec<i32>,
     delivered: usize,
     seen: usize,
+}
+
+impl StreamDedup {
+    /// A fresh worker assignment replays the stream from position 0.
+    fn begin_replay(&mut self) {
+        self.seen = 0;
+    }
+
+    /// Observe the next streamed token; `true` means it is new to the
+    /// client and must be forwarded, `false` that the replay is still
+    /// at or below the delivered high-water mark.
+    fn on_token(&mut self, tok: i32) -> bool {
+        self.seen += 1;
+        if self.seen > self.delivered {
+            self.delivered = self.seen;
+            self.tokens.push(tok);
+            true
+        } else {
+            debug_assert_eq!(
+                self.tokens.get(self.seen - 1),
+                Some(&tok),
+                "replayed stream diverged from the delivered one"
+            );
+            false
+        }
+    }
+
+    /// Everything forwarded so far, surrendered for a terminal outcome.
+    fn into_tokens(self) -> Vec<i32> {
+        self.tokens
+    }
+}
+
+/// One live request, as the router sees it.
+struct Tracked {
+    req: GenRequest,
+    client: Sender<TokenEvent>,
+    worker: Option<usize>,
+    /// replay de-duplication state for the client-facing stream
+    stream: StreamDedup,
     /// times this request has been requeued after a worker failure
     attempts: usize,
 }
@@ -588,6 +677,9 @@ struct Router {
     /// backoff-delayed requeues: (due, request id)
     pending: Vec<(Instant, u64)>,
     draining: Option<Sender<ClusterMetrics>>,
+    /// occupancy board shared with [`Cluster::status`]; the router is
+    /// the only writer
+    status: Arc<OrderedMutex<ClusterStatus>>,
     requeues: usize,
     retries_exhausted: usize,
     shed: usize,
@@ -609,6 +701,7 @@ impl Router {
             }
             self.fire_due_retries();
             self.scan_stalled();
+            self.publish_status();
             if self.draining.is_some()
                 && self.tracked.is_empty()
                 && self.pending.is_empty()
@@ -617,6 +710,20 @@ impl Router {
                 return;
             }
         }
+    }
+
+    /// Refresh the shared occupancy board. Routing state stays owned by
+    /// this thread; the board is a copied-out snapshot, so the lock is
+    /// held only for the swap and nests inside nothing.
+    fn publish_status(&self) {
+        let snap = ClusterStatus {
+            alive_workers: self.workers.iter().filter(|w| w.alive).count(),
+            tracked_requests: self.tracked.len(),
+            pending_retries: self.pending.len(),
+            total_load: self.workers.iter().map(|w| w.load).sum(),
+            draining: self.draining.is_some(),
+        };
+        *self.status.lock() = snap;
     }
 
     /// Sleep until the next retry comes due, but never longer than the
@@ -677,9 +784,7 @@ impl Router {
                 req,
                 client,
                 worker: None,
-                tokens: Vec::new(),
-                delivered: 0,
-                seen: 0,
+                stream: StreamDedup::default(),
                 attempts: 0,
             },
         );
@@ -712,6 +817,8 @@ impl Router {
                 let least = alive
                     .into_iter()
                     .min_by_key(|&w| self.workers[w].load)
+                    // lint:allow(hot-expect): the is_empty check above
+                    // returned None before this arm
                     .expect("alive nonempty");
                 if other.is_some() {
                     self.spills += 1;
@@ -722,7 +829,8 @@ impl Router {
         // record the routing decision for future prefix matches
         let chunks = prompt.len() / bs;
         if chunks > 0 {
-            self.affinity.insert_chain(prompt, bs, &vec![pick; chunks]);
+            let picks = vec![pick; chunks];
+            self.affinity.insert_chain(prompt, bs, &picks);
         }
         Some(pick)
     }
@@ -736,9 +844,11 @@ impl Router {
         match self.route(&prompt) {
             Some(w) => {
                 let req = {
+                    // lint:allow(hot-expect): presence checked at the
+                    // top of assign() (prompt clone returned early)
                     let t = self.tracked.get_mut(&id).expect("tracked");
                     t.worker = Some(w);
-                    t.seen = 0; // replayed stream starts over
+                    t.stream.begin_replay();
                     t.req.clone()
                 };
                 self.workers[w].load += 1;
@@ -765,7 +875,7 @@ impl Router {
             }
             let _ = t.client.send(TokenEvent::Done(GenOutcome {
                 id,
-                tokens: t.tokens,
+                tokens: t.stream.into_tokens(),
                 finish: why,
             }));
         }
@@ -778,10 +888,7 @@ impl Router {
                 if t.worker != Some(worker) {
                     return; // stale stream from a de-assigned worker
                 }
-                t.seen += 1;
-                if t.seen > t.delivered {
-                    t.delivered = t.seen;
-                    t.tokens.push(tok);
+                if t.stream.on_token(tok) {
                     let _ = t.client.send(TokenEvent::Token { id, tok });
                 }
             }
@@ -794,6 +901,8 @@ impl Router {
                 if !current {
                     return; // late Done from a superseded assignment
                 }
+                // lint:allow(hot-expect): `current` above proved the
+                // entry exists and belongs to this worker
                 let t = self.tracked.remove(&o.id).expect("checked");
                 self.workers[worker].load =
                     self.workers[worker].load.saturating_sub(1);
@@ -879,10 +988,13 @@ impl Router {
         let stalled: Vec<usize> = (0..self.workers.len())
             .filter(|&w| {
                 let ws = &self.workers[w];
-                ws.alive
-                    && ws.load > 0
-                    && ws.hb.is_busy()
-                    && ws.hb.age_ms(now) > self.opts.stall_timeout_ms
+                is_stalled(
+                    ws.alive,
+                    ws.load,
+                    ws.hb.is_busy(),
+                    ws.hb.age_ms(now),
+                    self.opts.stall_timeout_ms,
+                )
             })
             .collect();
         for w in stalled {
@@ -1022,6 +1134,7 @@ fn worker_loop<E: ReplicaEngine>(
 pub struct Cluster {
     router_tx: Sender<RouterMsg>,
     next_id: AtomicU64,
+    status: Arc<OrderedMutex<ClusterStatus>>,
     router_join: Option<JoinHandle<()>>,
     worker_joins: Vec<JoinHandle<()>>,
 }
@@ -1059,6 +1172,8 @@ impl Cluster {
                         tx,
                     )
                 })
+                // lint:allow(hot-expect): thread spawn fails only on OS
+                // resource exhaustion at cluster startup, never mid-serve
                 .expect("spawn replica thread");
             worker_joins.push(join);
             workers.push(WorkerState {
@@ -1072,6 +1187,11 @@ impl Cluster {
                 metrics: ServeMetrics::default(),
             });
         }
+        let status = Arc::new(OrderedMutex::new(
+            rank::CLUSTER_STATUS,
+            "cluster.status",
+            ClusterStatus::default(),
+        ));
         let router = Router {
             opts,
             workers,
@@ -1079,6 +1199,7 @@ impl Cluster {
             affinity: PrefixIndex::new(),
             pending: Vec::new(),
             draining: None,
+            status: Arc::clone(&status),
             requeues: 0,
             retries_exhausted: 0,
             shed: 0,
@@ -1089,13 +1210,22 @@ impl Cluster {
         let router_join = std::thread::Builder::new()
             .name("ganq-router".into())
             .spawn(move || router.run(router_rx))
+            // lint:allow(hot-expect): thread spawn fails only on OS
+            // resource exhaustion at cluster startup, never mid-serve
             .expect("spawn router thread");
         Cluster {
             router_tx,
             next_id: AtomicU64::new(1),
+            status,
             router_join: Some(router_join),
             worker_joins,
         }
+    }
+
+    /// Latest router-published occupancy snapshot (refreshed after
+    /// every router message batch; may lag in-flight messages).
+    pub fn status(&self) -> ClusterStatus {
+        self.status.lock().clone()
     }
 
     /// Submit a pre-built request (caller-chosen id, unique across the
@@ -1146,6 +1276,117 @@ mod tests {
     use crate::coordinator::server::recv_outcome;
     use crate::model::forward::Weights;
     use crate::model::{ModelConfig, WeightStore};
+    use crate::util::modelcheck::explore;
+
+    // ---- model-checked protocol scenarios (CI: `cargo test --release
+    // modelcheck`). Each replays the worker/router handoff under EVERY
+    // interleaving of the participating threads' operations and asserts
+    // the protocol invariant in all of them.
+
+    /// Exactly-once stream delivery across a worker failure: the stale
+    /// worker's remaining tokens race the router's reassignment and the
+    /// replacement's full replay. In every interleaving the client must
+    /// see the stream exactly once, in order.
+    #[test]
+    fn modelcheck_stream_dedup_exactly_once() {
+        let stream = [10i32, 11, 12];
+        // thread 0 = stale worker 0 streaming its first two tokens;
+        // thread 1 = router reassignment to worker 1, then worker 1's
+        // full replay
+        let schedules = explore(&[2, 4], 10_000, |order| {
+            let mut dedup = StreamDedup::default();
+            let mut assigned = 0usize;
+            let mut client: Vec<i32> = Vec::new();
+            let mut sent0 = 0usize;
+            let mut step1 = 0usize;
+            for &th in order {
+                if th == 0 {
+                    // stale worker streams its next token
+                    let tok = stream[sent0];
+                    sent0 += 1;
+                    if assigned == 0 && dedup.on_token(tok) {
+                        client.push(tok);
+                    }
+                } else if step1 == 0 {
+                    // router: worker 0 died — reassign to worker 1
+                    assigned = 1;
+                    dedup.begin_replay();
+                    step1 += 1;
+                } else {
+                    // replacement worker replays from token 0
+                    let tok = stream[step1 - 1];
+                    step1 += 1;
+                    if assigned == 1 && dedup.on_token(tok) {
+                        client.push(tok);
+                    }
+                }
+            }
+            assert_eq!(
+                client, stream,
+                "client stream must be exactly-once and in order"
+            );
+        });
+        assert_eq!(schedules, 15, "C(6,2) interleavings of [2,4]");
+    }
+
+    /// Heartbeat/stall-detection handoff at explicit timestamps: a
+    /// worker wedges mid-round (begins, never beats again, eventually
+    /// ends late); the router scans twice. In every interleaving the
+    /// worker is marked down at most once, never after its round ended
+    /// (busy flag down), and some interleaving does catch the stall.
+    #[test]
+    fn modelcheck_heartbeat_stall_handoff() {
+        let epoch = Instant::now();
+        let at = |ms: u64| epoch + Duration::from_millis(ms);
+        let timeout_ms = 100u64;
+        let mut detections = 0usize;
+        let schedules = explore(&[2, 2], 10_000, |order| {
+            let hb = Heartbeat::new(epoch);
+            let mut wstep = 0usize;
+            let mut scan = 0usize;
+            let mut alive = true;
+            let mut downs = 0usize;
+            let mut ended = false;
+            for &th in order {
+                if th == 0 {
+                    // worker: begin at t=0 (then wedge), end at t=200
+                    if wstep == 0 {
+                        hb.begin_round_at(at(0));
+                    } else {
+                        hb.end_round_at(at(200));
+                        ended = true;
+                    }
+                    wstep += 1;
+                } else {
+                    // router: stall scans at t=150 and t=300
+                    scan += 1;
+                    let now = at(if scan == 1 { 150 } else { 300 });
+                    if is_stalled(
+                        alive,
+                        1,
+                        hb.is_busy(),
+                        hb.age_ms(now),
+                        timeout_ms,
+                    ) {
+                        assert!(
+                            !ended,
+                            "a cleanly finished round must never be \
+                             declared stalled"
+                        );
+                        alive = false;
+                        downs += 1;
+                    }
+                }
+            }
+            assert!(downs <= 1, "mark_down must fire at most once");
+            detections += downs;
+        });
+        assert_eq!(schedules, 6, "C(4,2) interleavings of [2,2]");
+        assert!(
+            detections > 0,
+            "some interleaving must catch the wedged round"
+        );
+    }
 
     struct NativeReplica {
         store: Arc<WeightStore>,

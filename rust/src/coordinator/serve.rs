@@ -175,6 +175,7 @@ impl StopCriteria {
             .iter()
             .filter(|s| !s.is_empty() && s.len() <= stream.len() + 1)
             .filter(|s| {
+                // lint:allow(hot-expect): prior filter dropped empty seqs
                 *s.last().expect("nonempty") == tok
                     && stream[stream.len() - (s.len() - 1)..]
                         == s[..s.len() - 1]
@@ -759,6 +760,8 @@ pub fn serve_events(
     // finish an active slot: release its KV, trim the output, emit Done
     macro_rules! finish_slot {
         ($si:expr, $why:expr, $trim:expr) => {{
+            // lint:allow(hot-expect): only invoked on slots the caller
+            // just observed as occupied (scan/step loops above each site)
             let st = slots[$si].take().expect("finished slot occupied");
             backend.release_slot($si);
             let why: FinishReason = $why;
@@ -800,6 +803,7 @@ pub fn serve_events(
             }
         }
         for _ in 0..queue.len() {
+            // lint:allow(hot-expect): the loop pops at most len() items
             let q = queue.pop_front().expect("iterating queue length");
             let why = if q.req.cancel.is_cancelled() {
                 cancelled_tokens += q.generated.len();
@@ -878,6 +882,8 @@ pub fn serve_events(
                         cached < prompt.len().max(1),
                         "prefix hit must leave the last prompt token"
                     );
+                    // lint:allow(hot-expect): queue.front() was Some or
+                    // the admit loop broke out above
                     let q = queue.pop_front().expect("front checked");
                     let mut metrics =
                         q.metrics.unwrap_or(RequestMetrics {
@@ -939,6 +945,8 @@ pub fn serve_events(
             // had one (a full rotation) reject the front as unserveable
             stalls += 1;
             if stalls > queue.len() + 1 {
+                // lint:allow(hot-expect): the is_empty branch above broke
+                // out of the serve loop
                 let q = queue.pop_front().expect("queue nonempty");
                 trace::instant("sched.reject", &[("id", q.req.id as f64)]);
                 finish_queued(
@@ -986,6 +994,8 @@ pub fn serve_events(
         // let the backend reclaim KV memory; requeue its victims with
         // their generated tokens folded into the replay prompt
         for vi in backend.pre_step(&need) {
+            // lint:allow(hot-expect): backends only preempt slots the
+            // need[] vector marked active this step
             let st = slots[vi].take().expect("victim slot was active");
             need[vi] = 0;
             preemptions += 1;
@@ -1035,6 +1045,8 @@ pub fn serve_events(
             if need[si] == 0 {
                 continue;
             }
+            // lint:allow(hot-expect): need[si] > 0 is only ever set for
+            // occupied slots (computed from slots[] two loops up)
             let st = slot.as_ref().expect("need only set for occupied slots");
             if st.prompt_idx < st.prompt.len() {
                 let take = need[si];
@@ -1044,6 +1056,8 @@ pub fn serve_events(
                 prompt_positions += take;
                 work.push(SlotWork { slot: si, tokens, want_logits: want });
             } else {
+                // lint:allow(hot-expect): past the prompt ⇒ at least the
+                // first generated token exists to feed back
                 let t = *st.generated.last().expect("generated nonempty");
                 work.push(SlotWork {
                     slot: si,
@@ -1081,6 +1095,8 @@ pub fn serve_events(
             let si = wk.slot;
             let mut done: Option<(FinishReason, usize)> = None;
             {
+                // lint:allow(hot-expect): work was built from occupied
+                // slots this same step; nothing vacated them since
                 let st = slots[si].as_mut().expect("worked slot occupied");
                 if st.prompt_idx < st.prompt.len() {
                     st.prompt_idx += wk.tokens.len();
@@ -1199,6 +1215,7 @@ pub fn serve_events(
 /// within the work list) — shared by both native backends.
 fn plan_from_work(work: &[SlotWork]) -> StepPlan {
     debug_assert!(
+        // bound: windows(2) yields exactly two elements per window
         work.windows(2).all(|w| w[0].slot < w[1].slot),
         "work must be in ascending slot order"
     );
@@ -1238,7 +1255,7 @@ impl<'a> NativeBackend<'a> {
     }
 }
 
-impl<'a> DecodeBackend for NativeBackend<'a> {
+impl DecodeBackend for NativeBackend<'_> {
     fn slots(&self) -> usize {
         self.caches.len()
     }
@@ -1335,6 +1352,7 @@ impl<'a> AnyPrecBackend<'a> {
             .iter()
             .map(|&wd| (wd, Engine::new_at(&w, Some(wd))))
             .collect();
+        // lint:allow(hot-expect): the is_empty check above returned Err
         let default_w = *widths.last().expect("nonempty widths");
         Ok(AnyPrecBackend {
             engines,
@@ -1345,12 +1363,13 @@ impl<'a> AnyPrecBackend<'a> {
     }
 }
 
-impl<'a> DecodeBackend for AnyPrecBackend<'a> {
+impl DecodeBackend for AnyPrecBackend<'_> {
     fn slots(&self) -> usize {
         self.caches.len()
     }
 
     fn cfg(&self) -> ModelConfig {
+        // bound: construction guarantees at least one engine
         self.engines[0].1.cfg()
     }
 
@@ -1408,6 +1427,7 @@ impl<'a> DecodeBackend for AnyPrecBackend<'a> {
         // report the widest plan — the conservative (policy-idle) figure
         self.engines
             .last()
+            // lint:allow(hot-expect): new() rejects empty width lists
             .expect("nonempty engines")
             .1
             .weight_bytes_per_step()
@@ -1496,9 +1516,15 @@ impl<'a> PagedNativeBackend<'a> {
     pub fn kv(&self) -> &PagedKv {
         &self.kv
     }
+
+    /// Mutable pool handle for auditor control ([`PagedKv::set_audit`])
+    /// and fault injection in tests.
+    pub fn kv_mut(&mut self) -> &mut PagedKv {
+        &mut self.kv
+    }
 }
 
-impl<'a> DecodeBackend for PagedNativeBackend<'a> {
+impl DecodeBackend for PagedNativeBackend<'_> {
     fn slots(&self) -> usize {
         self.kv.num_slots()
     }
@@ -1521,6 +1547,9 @@ impl<'a> DecodeBackend for PagedNativeBackend<'a> {
         let slots: Vec<usize> = work.iter().map(|wk| wk.slot).collect();
         let mut seqs = self.kv.seqs(slots);
         let outs = self.engine.step(&plan, &mut seqs);
+        // step boundary: sweep the pool invariants (debug builds and
+        // GANQ_AUDIT=1 serving; one boolean test otherwise)
+        self.kv.maybe_audit();
         Ok(outs.into_iter().map(|m| m.data).collect())
     }
 
@@ -1554,7 +1583,11 @@ impl<'a> DecodeBackend for PagedNativeBackend<'a> {
     }
 
     fn pre_step(&mut self, need: &[usize]) -> Vec<usize> {
-        self.kv.prepare_step_n(need)
+        let victims = self.kv.prepare_step_n(need);
+        // preemption/eviction just moved references around — audit the
+        // pool before the engine writes through the new tables
+        self.kv.maybe_audit();
+        victims
     }
 
     fn release_slot(&mut self, slot: usize) {
@@ -1641,6 +1674,7 @@ pub fn weight_tensors_lut(
                     name, lut.bits, bits
                 ));
             }
+            // bound: linear weight shapes are validated 2-D above
             let (m, n) = (shape[0], shape[1]);
             out.push(HostTensor::U8(
                 vec![m, n.div_ceil(2)],
@@ -1835,6 +1869,7 @@ impl<'a> HloBackend<'a> {
         let mut tok = vec![0i32; self.b];
         let mut active = vec![false; self.b];
         for wk in work {
+            // bound: decode work items carry exactly one token
             tok[wk.slot] = wk.tokens[0];
             active[wk.slot] = true;
         }
@@ -1864,8 +1899,12 @@ impl<'a> HloBackend<'a> {
                 return Err(e);
             }
         };
+        // lint:allow(hot-expect): the decode graph is compiled with
+        // exactly three outputs (logits, kcache, vcache)
         self.vcache = out.pop().expect("vcache output");
+        // lint:allow(hot-expect): second of the three graph outputs
         self.kcache = out.pop().expect("kcache output");
+        // bound: the remaining graph output is the logits tensor
         let logits_flat = out[0].as_f32()?;
         let vocab = self.cfg.vocab;
         for i in 0..self.b {
@@ -1920,6 +1959,8 @@ impl<'a> HloBackend<'a> {
                 .find(|(c, _)| *c >= longest)
                 .or_else(|| self.prefill.last())
                 .cloned()
+                // lint:allow(hot-expect): compile() builds at least one
+                // prefill graph before serving starts
                 .expect("prefill family checked nonempty");
             trace::instant(
                 "hlo.chunk",
@@ -1959,8 +2000,12 @@ impl<'a> HloBackend<'a> {
                     return Err(e);
                 }
             };
+            // lint:allow(hot-expect): prefill graphs are compiled with
+            // exactly three outputs (logits, kcache, vcache)
             self.vcache = out.pop().expect("vcache output");
+            // lint:allow(hot-expect): second of the three graph outputs
             self.kcache = out.pop().expect("kcache output");
+            // bound: the remaining graph output is the logits tensor
             let logits_flat = out[0].as_f32()?;
             for (wi, wk) in work.iter().enumerate() {
                 if took[wi] == 0 {
@@ -1978,7 +2023,7 @@ impl<'a> HloBackend<'a> {
     }
 }
 
-impl<'a> DecodeBackend for HloBackend<'a> {
+impl DecodeBackend for HloBackend<'_> {
     fn slots(&self) -> usize {
         self.b
     }

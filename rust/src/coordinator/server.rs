@@ -19,9 +19,11 @@ use std::panic::{self, AssertUnwindSafe};
 use std::sync::mpsc::{
     self, Receiver, RecvError, RecvTimeoutError, Sender,
 };
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+use crate::util::ordered_lock::{rank, OrderedMutex};
 
 use super::metrics::ServeMetrics;
 use super::serve::{
@@ -120,8 +122,9 @@ pub struct ServerHandle {
     join: Option<JoinHandle<()>>,
     next_id: std::sync::atomic::AtomicU64,
     /// set by the engine thread when a round panicked; surfaced by
-    /// [`ServerHandle::shutdown`]
-    panic: Arc<Mutex<Option<String>>>,
+    /// [`ServerHandle::shutdown`]. Rank-tagged (`rank::SERVER_PANIC`)
+    /// so the lock lint can order it against every other lock.
+    panic: Arc<OrderedMutex<Option<String>>>,
 }
 
 impl ServerHandle {
@@ -138,8 +141,11 @@ impl ServerHandle {
     {
         let window = opts.serve_window.max(1);
         let (tx, rx): (Sender<Job>, Receiver<Job>) = mpsc::channel();
-        let panic_slot: Arc<Mutex<Option<String>>> =
-            Arc::new(Mutex::new(None));
+        let panic_slot = Arc::new(OrderedMutex::new(
+            rank::SERVER_PANIC,
+            "server.panic",
+            None::<String>,
+        ));
         let panic_in = Arc::clone(&panic_slot);
         let join = std::thread::Builder::new()
             .name("ganq-engine".into())
@@ -179,9 +185,7 @@ impl ServerHandle {
                         match round {
                             Ok(m) => total.merge_round(m),
                             Err(p) => {
-                                if let Ok(mut slot) = panic_in.lock() {
-                                    *slot = Some(panic_message(&*p));
-                                }
+                                *panic_in.lock() = Some(panic_message(&*p));
                                 break;
                             }
                         }
@@ -258,7 +262,7 @@ impl ServerHandle {
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
-        if let Some(p) = self.panic.lock().ok().and_then(|mut g| g.take()) {
+        if let Some(p) = self.panic.lock().take() {
             return Err(format!("engine thread panicked: {}", p));
         }
         reply.map_err(|_| "engine thread exited before shutdown".to_string())

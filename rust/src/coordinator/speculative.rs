@@ -197,6 +197,7 @@ fn build_engines<'a>(
                 .into(),
         );
     }
+    // lint:allow(hot-expect): the is_empty check above returned Err
     let verify_w = *widths.last().expect("nonempty widths");
     if !widths.contains(&draft_width) {
         return Err(format!(
@@ -273,6 +274,15 @@ impl<'a> SpecBackend<'a> {
     /// The speculation knobs this backend runs with.
     pub fn options(&self) -> SpecOptions {
         self.opts
+    }
+
+    /// Mutable paged-pool handle (None on the dense arm) for auditor
+    /// control ([`PagedKv::set_audit`]) and fault injection in tests.
+    pub fn paged_kv_mut(&mut self) -> Option<&mut PagedKv> {
+        match &mut self.kv {
+            SpecKv::Dense(_) => None,
+            SpecKv::Paged(kv) => Some(kv),
+        }
     }
 
     fn pos_of(&self, slot: usize) -> usize {
@@ -357,7 +367,7 @@ fn run_plan(
     }
 }
 
-impl<'a> DecodeBackend for SpecBackend<'a> {
+impl DecodeBackend for SpecBackend<'_> {
     fn slots(&self) -> usize {
         self.slots.len()
     }
@@ -412,6 +422,7 @@ impl<'a> DecodeBackend for SpecBackend<'a> {
             .collect();
         let mut drafts: Vec<Vec<i32>> = vec![Vec::new(); spec.len()];
         let mut pend: Vec<i32> =
+            // bound: speculative work items are single-token decodes
             spec.iter().map(|&(i, _)| work[i].tokens[0]).collect();
         if let SpecKv::Paged(pkv) = &mut self.kv {
             pkv.set_draft_window(true);
@@ -444,6 +455,9 @@ impl<'a> DecodeBackend for SpecBackend<'a> {
             }
         }
         if let SpecKv::Paged(pkv) = &mut self.kv {
+            // audit inside the still-open window: catches draft rows
+            // leaking into the prefix index at the moment it matters
+            pkv.maybe_audit();
             pkv.set_draft_window(false);
         }
         // roll every draft row back before verification: the
@@ -470,6 +484,7 @@ impl<'a> DecodeBackend for SpecBackend<'a> {
             let x = spec_of[i];
             let item = if x != usize::MAX {
                 let mut t = Vec::with_capacity(drafts[x].len() + 1);
+                // bound: speculative work items are single-token decodes
                 t.push(wk.tokens[0]);
                 t.extend_from_slice(&drafts[x]);
                 StepItem::verify(i, t)
@@ -564,6 +579,11 @@ impl<'a> DecodeBackend for SpecBackend<'a> {
                     ],
                 );
             }
+        }
+        if let SpecKv::Paged(kv) = &mut self.kv {
+            // step boundary: every rollback/commit has settled — sweep
+            // refcount conservation over the shared pool
+            kv.maybe_audit();
         }
         Ok(out)
     }
@@ -664,7 +684,11 @@ impl<'a> DecodeBackend for SpecBackend<'a> {
                 for (si, &p) in planned.iter().enumerate() {
                     self.slots[si].planned = p;
                 }
-                kv.prepare_step_n(&inflated)
+                let victims = kv.prepare_step_n(&inflated);
+                // preemption/eviction just moved references; audit
+                // before the draft phase writes through the new tables
+                kv.maybe_audit();
+                victims
             }
         }
     }

@@ -49,12 +49,36 @@ pub struct PagedKv {
     slots: Vec<Option<Seq>>,
     clock: u64,
     draft_window: bool,
+    /// per-slot block-table length when the draft window opened: blocks
+    /// acquired after the anchor hold draft rows and must never be
+    /// prefix-indexed (see [`PagedKv::audit`])
+    draft_anchor: Vec<Option<usize>>,
+    /// indexed-block count when the draft window opened (the index must
+    /// not grow while drafting)
+    window_cached: Option<usize>,
+    /// invariant sweep switch: `debug_assertions || GANQ_AUDIT=1` at
+    /// construction, overridable via [`PagedKv::set_audit`]
+    audit_on: bool,
+    audits: usize,
     prefix_lookup_tokens: usize,
     prefix_hit_tokens: usize,
     preemptions: usize,
     cow_copies: usize,
     evictions: usize,
     sealed_blocks: usize,
+}
+
+/// Default auditor enablement: always in debug builds, `GANQ_AUDIT=1`
+/// opt-in for release serving. The env is read once per process so the
+/// release fast path stays one boolean test per step.
+fn audit_default() -> bool {
+    if cfg!(debug_assertions) {
+        return true;
+    }
+    static FROM_ENV: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *FROM_ENV.get_or_init(|| {
+        matches!(std::env::var("GANQ_AUDIT").as_deref(), Ok("1"))
+    })
 }
 
 impl PagedKv {
@@ -66,6 +90,10 @@ impl PagedKv {
             slots: (0..slots).map(|_| None).collect(),
             clock: 0,
             draft_window: false,
+            draft_anchor: (0..slots).map(|_| None).collect(),
+            window_cached: None,
+            audit_on: audit_default(),
+            audits: 0,
             prefix_lookup_tokens: 0,
             prefix_hit_tokens: 0,
             preemptions: 0,
@@ -73,6 +101,20 @@ impl PagedKv {
             evictions: 0,
             sealed_blocks: 0,
         }
+    }
+
+    /// The slot's live sequence. Callers pass slots the scheduler keeps
+    /// admitted (active sets, router assignments); a vacant slot here is
+    /// a scheduler bug, not a load condition.
+    fn seq(&self, slot: usize) -> &Seq {
+        // lint:allow(hot-expect): scheduler invariant — see doc above
+        self.slots[slot].as_ref().expect("active slot")
+    }
+
+    /// Mutable twin of [`PagedKv::seq`], same invariant.
+    fn seq_mut(&mut self, slot: usize) -> &mut Seq {
+        // lint:allow(hot-expect): scheduler invariant — see seq() doc
+        self.slots[slot].as_mut().expect("active slot")
     }
 
     pub fn num_slots(&self) -> usize {
@@ -144,6 +186,12 @@ impl PagedKv {
             pos: hit,
             admitted_at: self.clock,
         });
+        if self.draft_window {
+            // a slot admitted mid-window anchors at its shared prefix:
+            // every block it acquires before the window closes is
+            // draft-only and must stay out of the index
+            self.draft_anchor[slot] = Some(nshare);
+        }
         Some(hit)
     }
 
@@ -157,6 +205,7 @@ impl PagedKv {
                 }
             }
         }
+        self.draft_anchor[slot] = None;
     }
 
     /// Allocate a block, evicting LRU cached prefixes if needed.
@@ -182,25 +231,25 @@ impl PagedKv {
     fn ensure_appendable_n(&mut self, slot: usize, n: usize) -> bool {
         let bs = self.block_size();
         let (pos, nblocks, tail) = {
-            let seq = self.slots[slot].as_ref().expect("active slot");
+            let seq = self.seq(slot);
             (seq.pos, seq.blocks.len(), seq.blocks.last().copied())
         };
         debug_assert!(pos <= nblocks * bs, "block table behind pos");
         if pos < nblocks * bs {
             // mid-block tail: CoW the first divergent append into a
             // shared block
+            // lint:allow(hot-expect): pos < nblocks*bs ⇒ the table is
+            // nonempty, so a last block exists
             let tail = tail.expect("mid-block position implies a tail");
             if self.pool.refcount(tail) > 1 {
                 match self.alloc_block() {
                     Some(dst) => {
                         self.store.copy_block(tail, dst);
                         self.pool.release(tail);
-                        *self.slots[slot]
-                            .as_mut()
-                            .unwrap()
-                            .blocks
-                            .last_mut()
-                            .unwrap() = dst;
+                        // lint:allow(hot-expect): same nonempty-table
+                        // argument as the read of `tail` above
+                        let last = self.seq_mut(slot).blocks.last_mut().expect("tail");
+                        *last = dst;
                         self.cow_copies += 1;
                         trace::instant(
                             "kv.cow",
@@ -212,9 +261,9 @@ impl PagedKv {
             }
         }
         let target = (pos + n).div_ceil(bs);
-        while self.slots[slot].as_ref().unwrap().blocks.len() < target {
+        while self.seq(slot).blocks.len() < target {
             match self.alloc_block() {
-                Some(b) => self.slots[slot].as_mut().unwrap().blocks.push(b),
+                Some(b) => self.seq_mut(slot).blocks.push(b),
                 None => return false,
             }
         }
@@ -241,7 +290,7 @@ impl PagedKv {
             .filter(|&i| need[i] > 0 && self.slots[i].is_some())
             .collect();
         // oldest admission first: under pressure the young yield to the old
-        alive.sort_by_key(|&i| self.slots[i].as_ref().unwrap().admitted_at);
+        alive.sort_by_key(|&i| self.seq(i).admitted_at);
         let mut idx = 0;
         while idx < alive.len() {
             let slot = alive[idx];
@@ -249,7 +298,8 @@ impl PagedKv {
                 idx += 1;
                 continue;
             }
-            let victim = *alive.last().unwrap();
+            // lint:allow(hot-expect): idx < alive.len() ⇒ nonempty
+            let victim = *alive.last().expect("alive is nonempty");
             self.release(victim);
             self.preemptions += 1;
             trace::instant("kv.preempt", &[("slot", victim as f64)]);
@@ -270,7 +320,7 @@ impl PagedKv {
     /// Record the run of tokens about to be appended this step (a
     /// prefill chunk; sealing indexes blocks under their token content).
     pub fn push_tokens(&mut self, slot: usize, toks: &[i32]) {
-        let seq = self.slots[slot].as_mut().expect("active slot");
+        let seq = self.seq_mut(slot);
         debug_assert_eq!(seq.tokens.len(), seq.pos, "tokens behind pos");
         seq.tokens.extend_from_slice(toks);
     }
@@ -311,7 +361,7 @@ impl PagedKv {
             // re-open it for the coming appends if we own it outright —
             // sealed blocks the index or another slot still references
             // keep their state and CoW on the next prepare_step
-            let tb = self.slots[slot].as_ref().unwrap().blocks[keep - 1];
+            let tb = self.seq(slot).blocks[keep - 1];
             if self.pool.refcount(tb) == 1 {
                 self.store.copy_block(tb, tb);
             }
@@ -335,6 +385,19 @@ impl PagedKv {
     /// their rows are a pure function of the token sequence, so even
     /// later-truncated blocks stay valid cache entries.
     pub fn set_draft_window(&mut self, on: bool) {
+        if on && !self.draft_window {
+            // anchor the auditor's draft-isolation invariant: blocks a
+            // slot acquires from here on hold draft rows and must never
+            // show up in the prefix index, and the index itself must not
+            // grow until the window closes
+            for (slot, seq) in self.slots.iter().enumerate() {
+                self.draft_anchor[slot] = seq.as_ref().map(|s| s.blocks.len());
+            }
+            self.window_cached = Some(self.index.cached_blocks());
+        } else if !on {
+            self.draft_anchor.iter_mut().for_each(|a| *a = None);
+            self.window_cached = None;
+        }
         self.draft_window = on;
     }
 
@@ -351,7 +414,7 @@ impl PagedKv {
     }
 
     fn locate(&self, slot: usize, sj: usize) -> (usize, usize) {
-        let seq = self.slots[slot].as_ref().expect("active slot");
+        let seq = self.seq(slot);
         let bs = self.block_size();
         (seq.blocks[sj / bs], sj % bs)
     }
@@ -374,7 +437,7 @@ impl PagedKv {
         }
         let bs = self.block_size();
         let hd = out.len() / rows;
-        let seq = self.slots[slot].as_ref().expect("active slot");
+        let seq = self.seq(slot);
         let mut done = 0usize;
         while done < rows {
             let sj = sj0 + done;
@@ -409,7 +472,7 @@ impl PagedKv {
     fn advance_n(&mut self, slot: usize, n: usize) {
         let bs = self.block_size();
         {
-            let seq = self.slots[slot].as_ref().expect("active slot");
+            let seq = self.seq(slot);
             debug_assert!(
                 seq.tokens.len() >= seq.pos + n,
                 "push_tokens must cover the advance"
@@ -417,7 +480,7 @@ impl PagedKv {
         }
         for _ in 0..n {
             let pos = {
-                let seq = self.slots[slot].as_mut().unwrap();
+                let seq = self.seq_mut(slot);
                 seq.pos += 1;
                 seq.pos
             };
@@ -428,7 +491,7 @@ impl PagedKv {
                 // and a cached node handle could go stale under LRU
                 // eviction of ancestors between seals.
                 let (blk, tokens, blocks) = {
-                    let seq = self.slots[slot].as_ref().unwrap();
+                    let seq = self.seq(slot);
                     (
                         seq.blocks[pos / bs - 1],
                         seq.tokens[..pos].to_vec(),
@@ -457,6 +520,138 @@ impl PagedKv {
             evictions: self.evictions,
             sealed_blocks: self.sealed_blocks,
         }
+    }
+
+    /// Full invariant sweep over the paged cache (see
+    /// `rust/xtask/README.md`, "The paged-KV auditor"):
+    ///
+    /// 1. refcount conservation + leak freedom + free-list consistency,
+    ///    delegated to [`BlockPool::audit`] with the expectation derived
+    ///    from the two legal reference sources (slot block tables and
+    ///    prefix-index pins);
+    /// 2. index liveness — a cached block whose refcount went to zero
+    ///    shows up as a conservation mismatch in (1);
+    /// 3. block tables cover their slot's position and token history;
+    /// 4. draft-window isolation — while the window is on, no block
+    ///    acquired past a slot's draft anchor may be indexed, and the
+    ///    index must not have grown since the window opened.
+    ///
+    /// Read-only and allocation-light (one `u32` per pool block); the
+    /// caller decides whether a violation panics.
+    pub fn audit(&self) -> Result<(), String> {
+        let n = self.pool.num_blocks();
+        let bs = self.block_size();
+        let mut expected = vec![0u32; n];
+        for (slot, seq) in self.slots.iter().enumerate() {
+            let Some(seq) = seq.as_ref() else { continue };
+            for &b in &seq.blocks {
+                if b >= n {
+                    return Err(format!(
+                        "slot {} maps bogus block {}",
+                        slot, b
+                    ));
+                }
+                expected[b] += 1;
+            }
+            if seq.blocks.len() * bs < seq.pos {
+                return Err(format!(
+                    "slot {} block table covers {} positions but pos={}",
+                    slot,
+                    seq.blocks.len() * bs,
+                    seq.pos
+                ));
+            }
+            if seq.tokens.len() < seq.pos {
+                return Err(format!(
+                    "slot {} has {} tokens behind pos={}",
+                    slot,
+                    seq.tokens.len(),
+                    seq.pos
+                ));
+            }
+        }
+        let cached = self.index.cached_block_ids();
+        for &b in &cached {
+            if b >= n {
+                return Err(format!("prefix index caches bogus block {}", b));
+            }
+            // a dead cached block (refcount 0) surfaces as a
+            // conservation mismatch below: expected >= 1, pool holds 0
+            expected[b] += 1;
+        }
+        self.pool
+            .audit(&expected)
+            .map_err(|e| format!("pool audit: {}", e))?;
+        if self.draft_window {
+            if let Some(cap) = self.window_cached {
+                if self.index.cached_blocks() > cap {
+                    return Err(format!(
+                        "prefix index grew {} -> {} inside the draft \
+                         window",
+                        cap,
+                        self.index.cached_blocks()
+                    ));
+                }
+            }
+            let indexed: std::collections::BTreeSet<usize> =
+                cached.iter().copied().collect();
+            for (slot, seq) in self.slots.iter().enumerate() {
+                let Some(seq) = seq.as_ref() else { continue };
+                let Some(anchor) = self.draft_anchor[slot] else {
+                    continue;
+                };
+                for &b in &seq.blocks[anchor.min(seq.blocks.len())..] {
+                    if indexed.contains(&b) {
+                        return Err(format!(
+                            "draft row leaked into the prefix index: \
+                             slot {} block {} was acquired after the \
+                             draft anchor ({} blocks) yet is cached",
+                            slot, b, anchor
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Step-boundary audit hook: free when disabled (one boolean test),
+    /// panics on the first violated invariant when enabled.
+    pub fn maybe_audit(&mut self) {
+        if !self.audit_on {
+            return;
+        }
+        self.audits += 1;
+        trace::instant("kv.audit", &[("n", self.audits as f64)]);
+        if let Err(e) = self.audit() {
+            // lint:allow(hot-panic): the auditor is debug/env-gated and
+            // a violated pool invariant means corrupted KV state — dying
+            // loudly here is the feature
+            panic!("kv audit failed: {}", e);
+        }
+    }
+
+    /// Override the `debug_assertions || GANQ_AUDIT=1` default.
+    pub fn set_audit(&mut self, on: bool) {
+        self.audit_on = on;
+    }
+
+    pub fn audit_enabled(&self) -> bool {
+        self.audit_on
+    }
+
+    /// Number of sweeps [`PagedKv::maybe_audit`] has actually run — the
+    /// zero-overhead contract for disabled release builds is pinned by
+    /// asserting this stays 0.
+    pub fn audits_run(&self) -> usize {
+        self.audits
+    }
+
+    /// Test-only fault injection: leak one reference on `blk` so the
+    /// next audit must report a conservation violation. Proves the
+    /// auditor catches real refcount bugs, not just vacuous truths.
+    pub fn debug_retain_block(&mut self, blk: usize) {
+        self.pool.retain(blk);
     }
 }
 

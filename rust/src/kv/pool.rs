@@ -70,6 +70,59 @@ impl BlockPool {
             false
         }
     }
+
+    /// Invariant sweep against an externally-derived expectation:
+    /// `expected[b]` is the number of references block `b` should hold
+    /// (slot block-table mappings plus prefix-index pins — the only two
+    /// legal reference sources). Checks refcount conservation, free-list
+    /// consistency (free blocks have refcount 0 and appear exactly
+    /// once), and leak freedom (every refcount-0 block is on the free
+    /// list). Read-only; the caller decides whether a violation panics.
+    pub fn audit(&self, expected: &[u32]) -> Result<(), String> {
+        if expected.len() != self.refs.len() {
+            return Err(format!(
+                "expectation covers {} blocks, pool has {}",
+                expected.len(),
+                self.refs.len()
+            ));
+        }
+        for (b, (&have, &want)) in
+            self.refs.iter().zip(expected).enumerate()
+        {
+            if have != want {
+                return Err(format!(
+                    "refcount conservation broken at block {}: pool \
+                     holds {}, reachable references total {}",
+                    b, have, want
+                ));
+            }
+        }
+        let mut on_free = vec![false; self.refs.len()];
+        for &b in &self.free {
+            if b >= self.refs.len() {
+                return Err(format!("free list holds bogus block {}", b));
+            }
+            if on_free[b] {
+                return Err(format!("block {} on the free list twice", b));
+            }
+            on_free[b] = true;
+            if self.refs[b] != 0 {
+                return Err(format!(
+                    "block {} is on the free list with refcount {}",
+                    b, self.refs[b]
+                ));
+            }
+        }
+        for (b, &r) in self.refs.iter().enumerate() {
+            if r == 0 && !on_free[b] {
+                return Err(format!(
+                    "block {} leaked: refcount 0 but not free-listed",
+                    b
+                ));
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

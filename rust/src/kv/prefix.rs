@@ -60,6 +60,19 @@ impl PrefixIndex {
         self.cached
     }
 
+    /// Physical block ids of every cached chunk (the root and tombstoned
+    /// slab entries carry `NO_BLOCK` and are skipped). Each id appears
+    /// once per node that pins it, so the auditor can count index-held
+    /// references directly from the returned list.
+    pub fn cached_block_ids(&self) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|&(id, n)| id != ROOT && n.block != NO_BLOCK)
+            .map(|(_, n)| n.block)
+            .collect()
+    }
+
     /// Refresh LRU stamps along the path from `node` to the root so an
     /// ancestor is never older than a live descendant (eviction is
     /// leaf-first).

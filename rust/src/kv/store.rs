@@ -674,7 +674,7 @@ mod tests {
         assert_eq!(qv, cv);
 
         s.clear(0);
-        s.write(0, 0, 0, 0, &vec![1.0; 8], &vec![2.0; 8]);
+        s.write(0, 0, 0, 0, &[1.0; 8], &[2.0; 8]);
         let mut row = vec![0.0f32; 8];
         s.read_k(0, 0, 0, 0, &mut row);
         assert_eq!(row, vec![1.0; 8]);

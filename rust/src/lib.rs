@@ -159,12 +159,34 @@
 //! engine → trace sink + step histograms → `ServeMetrics::snapshot` →
 //! `BENCH_serve.json`.
 //!
+//! ## Static analysis & invariants: the `ganq-lint` layer
+//!
+//! Correctness tooling that checks repo-specific invariants no generic
+//! lint can see, mechanically, on every commit. `cargo xtask lint`
+//! (`lint::engine`, also compiled standalone under `rust/xtask/`) bans
+//! `.unwrap()`/`.expect()`/`panic!`/unbounded literal indexing in the
+//! serve hot path except under justified `// lint:allow(rule): reason`
+//! escapes, pins every `obs::trace` name to the canonical registry in
+//! `obs::names`, pairs every `BENCH_*.json` emitter with a CI schema
+//! gate, and checks the declared lock-rank table
+//! (`util::ordered_lock::rank`) against nested acquisitions in the
+//! cluster/server/traffic modules. `util::ordered_lock::OrderedMutex`
+//! enforces the same ranks dynamically in debug builds;
+//! `util::modelcheck` exhaustively explores interleavings of the
+//! cluster's dedup/heartbeat protocols (`modelcheck_*` tests); and
+//! `kv::PagedKv::audit` sweeps refcount conservation / leak freedom /
+//! index liveness / draft-window isolation at step boundaries (on in
+//! debug builds and under `GANQ_AUDIT=1`, compiled out of release serve
+//! paths otherwise). See `rust/xtask/README.md` for the full catalogue.
+//!
 //! See DESIGN.md for the system inventory and experiment index.
 
 // House style tolerated under `cargo clippy --all-targets -- -D
 // warnings` (the CI gate): index-loop numerics and small-arg-count
 // conventions predate the gate and are kept for readability next to the
-// paper's pseudocode.
+// paper's pseudocode. `uninlined_format_args` is deliberate: positional
+// `format!("{}", x)` across hundreds of sites matches the codebase's
+// paper-pseudocode style, and mass inlining buys nothing mechanical.
 #![allow(
     clippy::needless_range_loop,
     clippy::new_without_default,
@@ -173,8 +195,6 @@
     clippy::type_complexity,
     clippy::len_without_is_empty,
     clippy::large_enum_variant,
-    clippy::needless_lifetimes,
-    clippy::useless_vec,
     clippy::uninlined_format_args
 )]
 
@@ -183,6 +203,7 @@ pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod kv;
+pub mod lint;
 pub mod model;
 pub mod obs;
 pub mod quant;

@@ -1,0 +1,1265 @@
+//! The `ganq-lint` engine: repo-invariant static analysis over the Rust
+//! tree, dependency-free so the same source file compiles into both the
+//! `ganq` library (`crate::lint`, giving the rules tier-1 test
+//! coverage) and the standalone `cargo xtask lint` binary (via
+//! `#[path]` inclusion — this module must never reference `crate::`
+//! items outside itself).
+//!
+//! The analysis is lexical, not syntactic: a hand-rolled Rust lexer
+//! (strings, raw strings, char-vs-lifetime disambiguation, nested block
+//! comments) feeds line-tagged tokens to pattern rules. That is exactly
+//! enough for the invariants we check — call-shape patterns like
+//! `.unwrap()`, `trace::span("name")`, `OrderedMutex::new(rank::X)` —
+//! and keeps the linter runnable in the offline build where `syn` is
+//! unavailable.
+//!
+//! Rules (each escapable per-site with `// lint:allow(<rule>): <reason>`
+//! on the same or an immediately preceding comment line):
+//!
+//! | rule             | scope            | forbids                                    |
+//! |------------------|------------------|--------------------------------------------|
+//! | `hot-unwrap`     | hot-path files   | `.unwrap()`                                |
+//! | `hot-expect`     | hot-path files   | `.expect(..)` without justification        |
+//! | `hot-panic`      | hot-path files   | `panic!`/`unreachable!`/`todo!`/`unimplemented!` |
+//! | `hot-index`      | hot-path files   | integer-literal indexing without a bound comment |
+//! | `trace-registry` | everywhere       | trace names outside `obs::names`, non-literal names |
+//! | `bench-gate`     | everywhere       | `BENCH_*.json` emitters with no CI schema gate |
+//! | `raw-mutex`      | watched modules  | raw `Mutex`/`RwLock` (use `util::ordered_lock`) |
+//! | `lock-rank`      | watched modules  | nested lock acquisition with non-increasing rank |
+//! | `safety-comment` | everywhere       | `unsafe` without a `// SAFETY:` comment    |
+//! | `allow-format`   | everywhere       | malformed `lint:allow` (unknown rule / no reason) |
+//!
+//! `#[cfg(test)]` module bodies are exempt (tests assert on invariants
+//! by violating them), as is any path containing a `fixtures` segment
+//! (the lint's own seeded-violation corpus).
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Serve hot-path files: panics here take down a request (or a whole
+/// replica round) for traffic that retries could have saved.
+pub const HOT_FILES: &[&str] = &[
+    "src/coordinator/serve.rs",
+    "src/coordinator/speculative.rs",
+    "src/coordinator/cluster.rs",
+    "src/kv/paged.rs",
+    "src/quant/kernels.rs",
+    "src/model/forward.rs",
+];
+
+/// Modules the lock-rank rules watch: everywhere threads and locks meet.
+pub const LOCK_WATCHED: &[&str] = &[
+    "src/coordinator/cluster.rs",
+    "src/coordinator/server.rs",
+    "src/bench/traffic.rs",
+    "src/main.rs",
+];
+
+/// Every rule name, for `lint:allow` validation.
+pub const RULES: &[&str] = &[
+    "hot-unwrap",
+    "hot-expect",
+    "hot-panic",
+    "hot-index",
+    "trace-registry",
+    "bench-gate",
+    "raw-mutex",
+    "lock-rank",
+    "safety-comment",
+    "allow-format",
+];
+
+/// One finding. `file` is crate-root-relative.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.msg
+        )
+    }
+}
+
+/// Cross-file facts the per-file rules check against.
+#[derive(Debug, Default, Clone)]
+pub struct LintCtx {
+    /// Canonical trace names (parsed from `src/obs/names.rs`).
+    pub trace_names: Vec<String>,
+    /// Declared lock ranks, `(NAME, value)` (parsed from
+    /// `src/util/ordered_lock.rs`'s `pub mod rank`).
+    pub lock_ranks: Vec<(String, u32)>,
+    /// `BENCH_*.json` artifacts with a CI schema gate (parsed from
+    /// `.github/workflows/ci.yml`).
+    pub bench_gates: Vec<String>,
+}
+
+// ---------------------------------------------------------------------
+// Lexer
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Ident,
+    Num,
+    Str,
+    Punct,
+    Lifetime,
+}
+
+#[derive(Debug, Clone)]
+struct Tok {
+    kind: Kind,
+    text: String,
+    line: usize,
+}
+
+#[derive(Debug, Default)]
+struct Lexed {
+    toks: Vec<Tok>,
+    /// `(line, text)` per comment, line/block alike (text without the
+    /// delimiters, block comments keyed by their starting line).
+    comments: Vec<(usize, String)>,
+}
+
+fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let n = b.len();
+    while i < n {
+        let c = b[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_whitespace() => i += 1,
+            '/' if i + 1 < n && b[i + 1] == '/' => {
+                let start = i + 2;
+                while i < n && b[i] != '\n' {
+                    i += 1;
+                }
+                out.comments
+                    .push((line, b[start..i].iter().collect::<String>()));
+            }
+            '/' if i + 1 < n && b[i + 1] == '*' => {
+                let start_line = line;
+                let start = i + 2;
+                let mut depth = 1;
+                i += 2;
+                while i < n && depth > 0 {
+                    if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        if b[i] == '\n' {
+                            line += 1;
+                        }
+                        i += 1;
+                    }
+                }
+                let end = i.saturating_sub(2).max(start);
+                out.comments.push((
+                    start_line,
+                    b[start..end].iter().collect::<String>(),
+                ));
+            }
+            '"' => {
+                let (text, len, nl) = scan_string(&b[i..]);
+                out.toks.push(Tok { kind: Kind::Str, text, line });
+                line += nl;
+                i += len;
+            }
+            'r' | 'b' if starts_raw_or_byte_string(&b[i..]) => {
+                let (text, len, nl) = scan_raw_or_byte(&b[i..]);
+                out.toks.push(Tok { kind: Kind::Str, text, line });
+                line += nl;
+                i += len;
+            }
+            '\'' => {
+                // char literal vs lifetime
+                if i + 1 < n
+                    && (b[i + 1] == '\\'
+                        || (i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\''))
+                {
+                    // char literal: consume to the closing quote
+                    let mut j = i + 1;
+                    while j < n {
+                        if b[j] == '\\' {
+                            j += 2;
+                            continue;
+                        }
+                        if b[j] == '\'' {
+                            j += 1;
+                            break;
+                        }
+                        j += 1;
+                    }
+                    let text: String = b[i..j.min(n)].iter().collect();
+                    out.toks.push(Tok { kind: Kind::Str, text, line });
+                    i = j;
+                } else {
+                    // lifetime: 'ident
+                    let mut j = i + 1;
+                    while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                        j += 1;
+                    }
+                    out.toks.push(Tok {
+                        kind: Kind::Lifetime,
+                        text: b[i..j].iter().collect(),
+                        line,
+                    });
+                    i = j;
+                }
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                let mut j = i;
+                while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                    j += 1;
+                }
+                out.toks.push(Tok {
+                    kind: Kind::Ident,
+                    text: b[i..j].iter().collect(),
+                    line,
+                });
+                i = j;
+            }
+            c if c.is_ascii_digit() => {
+                let mut j = i;
+                while j < n
+                    && (b[j].is_alphanumeric() || b[j] == '_' || b[j] == '.')
+                {
+                    // `0..n` range: the dots are punctuation, not a float
+                    if b[j] == '.' && j + 1 < n && b[j + 1] == '.' {
+                        break;
+                    }
+                    j += 1;
+                }
+                out.toks.push(Tok {
+                    kind: Kind::Num,
+                    text: b[i..j].iter().collect(),
+                    line,
+                });
+                i = j;
+            }
+            _ => {
+                out.toks.push(Tok {
+                    kind: Kind::Punct,
+                    text: c.to_string(),
+                    line,
+                });
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+fn starts_raw_or_byte_string(b: &[char]) -> bool {
+    // r"..", r#".."#, b"..", br"..", br#".."#
+    let mut i = 0;
+    if b[i] == 'b' {
+        i += 1;
+    }
+    if i < b.len() && b[i] == 'r' {
+        i += 1;
+        while i < b.len() && b[i] == '#' {
+            i += 1;
+        }
+    }
+    i > 0 && i < b.len() && b[i] == '"' && (b[0] == 'r' || b[0] == 'b')
+}
+
+/// Scan a `"..."` with escapes; returns (contents, chars consumed,
+/// newlines inside).
+fn scan_string(b: &[char]) -> (String, usize, usize) {
+    let mut i = 1;
+    let mut nl = 0;
+    while i < b.len() {
+        match b[i] {
+            '\\' => i += 2,
+            '"' => {
+                i += 1;
+                break;
+            }
+            c => {
+                if c == '\n' {
+                    nl += 1;
+                }
+                i += 1;
+            }
+        }
+    }
+    let end = i.saturating_sub(1).max(1);
+    (b[1..end.min(b.len())].iter().collect(), i, nl)
+}
+
+fn scan_raw_or_byte(b: &[char]) -> (String, usize, usize) {
+    let mut i = 0;
+    if b[i] == 'b' {
+        i += 1;
+    }
+    let raw = i < b.len() && b[i] == 'r';
+    if raw {
+        i += 1;
+    }
+    let mut hashes = 0;
+    while i < b.len() && b[i] == '#' {
+        hashes += 1;
+        i += 1;
+    }
+    debug_assert!(i < b.len() && b[i] == '"');
+    let start = i + 1;
+    i += 1;
+    let mut nl = 0;
+    while i < b.len() {
+        if b[i] == '\n' {
+            nl += 1;
+        }
+        if !raw && b[i] == '\\' {
+            i += 2;
+            continue;
+        }
+        if b[i] == '"' {
+            // raw strings close only on `"` + the right number of `#`
+            let mut j = i + 1;
+            let mut h = 0;
+            while h < hashes && j < b.len() && b[j] == '#' {
+                h += 1;
+                j += 1;
+            }
+            if h == hashes {
+                return (b[start..i].iter().collect(), j, nl);
+            }
+        }
+        i += 1;
+    }
+    (b[start.min(b.len())..].iter().collect(), b.len(), nl)
+}
+
+// ---------------------------------------------------------------------
+// Allow-comment parsing
+// ---------------------------------------------------------------------
+
+#[derive(Debug)]
+struct Allows {
+    /// `(line, rule)` of each well-formed allow.
+    entries: Vec<(usize, String)>,
+    /// lines that contain any comment (bound-comment satisfaction for
+    /// `hot-index`)
+    comment_lines: BTreeSet<usize>,
+    /// lines whose entire content is a comment (allow blocks above code)
+    pure_comment_lines: BTreeSet<usize>,
+    /// malformed allows, reported as `allow-format`
+    malformed: Vec<(usize, String)>,
+    /// lines with a `SAFETY:` comment
+    safety_lines: BTreeSet<usize>,
+}
+
+fn parse_allows(src: &str, lexed: &Lexed) -> Allows {
+    let mut a = Allows {
+        entries: Vec::new(),
+        comment_lines: BTreeSet::new(),
+        pure_comment_lines: BTreeSet::new(),
+        malformed: Vec::new(),
+        safety_lines: BTreeSet::new(),
+    };
+    for (lineno, text) in src.lines().enumerate() {
+        let t = text.trim_start();
+        if t.starts_with("//") {
+            a.pure_comment_lines.insert(lineno + 1);
+        }
+    }
+    for &(line, ref text) in &lexed.comments {
+        a.comment_lines.insert(line);
+        // doc comments (`///` lex as a line comment whose text starts
+        // with `/`, `//!` with `!`) describe the allow syntax rather
+        // than using it — never parse allows or SAFETY out of them
+        if text.starts_with('/') || text.starts_with('!') {
+            continue;
+        }
+        if text.contains("SAFETY:") {
+            a.safety_lines.insert(line);
+        }
+        let mut rest = text.as_str();
+        while let Some(p) = rest.find("lint:allow") {
+            rest = &rest[p + "lint:allow".len()..];
+            let Some(open) = rest.find('(') else {
+                a.malformed.push((line, "missing (rule)".into()));
+                break;
+            };
+            let Some(close) = rest[open..].find(')') else {
+                a.malformed.push((line, "unclosed (rule)".into()));
+                break;
+            };
+            let rule = rest[open + 1..open + close].trim().to_string();
+            let after = rest[open + close + 1..].trim_start();
+            if !RULES.contains(&rule.as_str()) {
+                a.malformed.push((line, format!("unknown rule {:?}", rule)));
+            } else if !after.starts_with(':')
+                || after[1..].trim().is_empty()
+            {
+                a.malformed.push((
+                    line,
+                    format!("allow({}) needs a `: <reason>`", rule),
+                ));
+            } else {
+                a.entries.push((line, rule));
+            }
+            rest = &rest[open + close + 1..];
+        }
+    }
+    a
+}
+
+impl Allows {
+    /// Is `rule` allowed at `line`? Same-line trailing comment, or a
+    /// contiguous run of pure comment lines immediately above.
+    fn allowed(&self, rule: &str, line: usize) -> bool {
+        let hit = |l: usize| {
+            self.entries
+                .iter()
+                .any(|(al, ar)| *al == l && ar == rule)
+        };
+        if hit(line) {
+            return true;
+        }
+        let mut l = line.saturating_sub(1);
+        while l > 0 && self.pure_comment_lines.contains(&l) {
+            if hit(l) {
+                return true;
+            }
+            l -= 1;
+        }
+        false
+    }
+
+    /// `hot-index` bound comment: any comment on the same or previous
+    /// line counts as documenting the bound.
+    fn bound_comment(&self, line: usize) -> bool {
+        self.comment_lines.contains(&line)
+            || line > 1 && self.comment_lines.contains(&(line - 1))
+    }
+
+    /// `// SAFETY:` within `window` lines above (or on) `line`.
+    fn safety_near(&self, line: usize, window: usize) -> bool {
+        self.safety_lines
+            .range(line.saturating_sub(window)..=line)
+            .next()
+            .is_some()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Test-region detection
+// ---------------------------------------------------------------------
+
+/// Token index ranges covered by `#[cfg(test)]`-gated items.
+fn test_regions(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut regions = Vec::new();
+    let n = toks.len();
+    let mut i = 0;
+    while i + 6 < n {
+        let is_cfg_test = toks[i].text == "#"
+            && toks[i + 1].text == "["
+            && toks[i + 2].text == "cfg"
+            && toks[i + 3].text == "("
+            && toks[i + 4].text == "test"
+            && toks[i + 5].text == ")"
+            && toks[i + 6].text == "]";
+        if !is_cfg_test {
+            i += 1;
+            continue;
+        }
+        // skip to the item's opening brace, then to its matching close
+        let mut j = i + 7;
+        while j < n && toks[j].text != "{" {
+            j += 1;
+        }
+        let mut depth = 0usize;
+        let start = j;
+        while j < n {
+            match toks[j].text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        regions.push((start, j.min(n.saturating_sub(1))));
+        i = j + 1;
+    }
+    regions
+}
+
+fn in_regions(regions: &[(usize, usize)], idx: usize) -> bool {
+    regions.iter().any(|&(a, b)| idx >= a && idx <= b)
+}
+
+// ---------------------------------------------------------------------
+// Context parsers (registry / ranks / CI gates)
+// ---------------------------------------------------------------------
+
+/// Parse `pub const TRACE_NAMES: &[&str] = [ "a.b", ... ]` string
+/// literals out of `obs/names.rs` source.
+pub fn parse_trace_registry(src: &str) -> Vec<String> {
+    let lexed = lex(src);
+    let toks = &lexed.toks;
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].kind == Kind::Ident && toks[i].text == "TRACE_NAMES" {
+            // collect every string literal up to the closing `]` of the
+            // slice literal
+            let mut j = i + 1;
+            while j < toks.len() && toks[j].text != "[" {
+                j += 1;
+            }
+            let mut depth = 0usize;
+            while j < toks.len() {
+                match (toks[j].kind, toks[j].text.as_str()) {
+                    (Kind::Punct, "[") => depth += 1,
+                    (Kind::Punct, "]") => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    (Kind::Str, _) => out.push(toks[j].text.clone()),
+                    _ => {}
+                }
+                j += 1;
+            }
+            break;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Parse the `pub mod rank { pub const NAME: u32 = N; ... }` table out
+/// of `util/ordered_lock.rs` source.
+pub fn parse_rank_table(src: &str) -> Vec<(String, u32)> {
+    let lexed = lex(src);
+    let toks = &lexed.toks;
+    let mut out = Vec::new();
+    // find `mod rank {`, then scan its braces for `const NAME ... = N`
+    let mut i = 0;
+    while i + 2 < toks.len() {
+        if toks[i].text == "mod" && toks[i + 1].text == "rank" {
+            let mut j = i + 2;
+            while j < toks.len() && toks[j].text != "{" {
+                j += 1;
+            }
+            let mut depth = 0usize;
+            while j < toks.len() {
+                match toks[j].text.as_str() {
+                    "{" => depth += 1,
+                    "}" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            return out;
+                        }
+                    }
+                    "const" => {
+                        let name = toks.get(j + 1).map(|t| t.text.clone());
+                        let mut k = j + 2;
+                        while k < toks.len()
+                            && toks[k].text != "="
+                            && toks[k].text != ";"
+                        {
+                            k += 1;
+                        }
+                        if let (Some(name), Some(v)) =
+                            (name, toks.get(k + 1))
+                        {
+                            if let Ok(num) =
+                                v.text.replace('_', "").parse::<u32>()
+                            {
+                                out.push((name, num));
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// `BENCH_*.json` names that appear inside an `open("BENCH_x.json")` in
+/// the CI workflow (the schema-gate idiom).
+pub fn parse_bench_gates(ci_yml: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = ci_yml;
+    while let Some(p) = rest.find("open(\"BENCH_") {
+        let tail = &rest[p + "open(\"".len()..];
+        if let Some(q) = tail.find('"') {
+            let name = &tail[..q];
+            if name.ends_with(".json") && !out.contains(&name.to_string()) {
+                out.push(name.to_string());
+            }
+        }
+        rest = &rest[p + 1..];
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Per-file analysis
+// ---------------------------------------------------------------------
+
+/// Lint one file's source. `relpath` is crate-root-relative with `/`
+/// separators (it selects which rule sets apply).
+pub fn lint_source(relpath: &str, src: &str, ctx: &LintCtx) -> Vec<Violation> {
+    if relpath.split('/').any(|seg| seg == "fixtures") {
+        return Vec::new();
+    }
+    let lexed = lex(src);
+    let toks = &lexed.toks;
+    let allows = parse_allows(src, &lexed);
+    let regions = test_regions(toks);
+    let hot = HOT_FILES.contains(&relpath);
+    let watched = LOCK_WATCHED.contains(&relpath);
+    let is_ordered_lock = relpath.ends_with("util/ordered_lock.rs");
+    let is_names = relpath.ends_with("obs/names.rs");
+    let mut v: Vec<Violation> = Vec::new();
+    let mut push = |rule: &'static str, line: usize, msg: String| {
+        v.push(Violation { file: relpath.to_string(), line, rule, msg });
+    };
+
+    for (line, msg) in &allows.malformed {
+        push("allow-format", *line, msg.clone());
+    }
+
+    // Pre-pass for lock-rank: map binding idents to declared ranks via
+    // `NAME (=|:) ... OrderedMutex::new(rank::R`
+    let mut lock_vars: Vec<(String, u32)> = Vec::new();
+    if watched {
+        for i in 0..toks.len() {
+            if toks[i].text != "OrderedMutex" {
+                continue;
+            }
+            let is_new = toks.get(i + 1).map(|t| t.text.as_str())
+                == Some(":")
+                && toks.get(i + 2).map(|t| t.text.as_str()) == Some(":")
+                && toks.get(i + 3).map(|t| t.text.as_str()) == Some("new");
+            if !is_new {
+                continue;
+            }
+            // rank constant: first `rank :: R` after the open paren
+            let mut rank_name = None;
+            for j in i + 4..(i + 14).min(toks.len()) {
+                if toks[j].text == "rank"
+                    && toks.get(j + 1).map(|t| t.text.as_str()) == Some(":")
+                    && toks.get(j + 2).map(|t| t.text.as_str()) == Some(":")
+                {
+                    rank_name = toks.get(j + 3).map(|t| t.text.clone());
+                    break;
+                }
+            }
+            let Some(rank_name) = rank_name else { continue };
+            let Some(&(_, rank_val)) = ctx
+                .lock_ranks
+                .iter()
+                .find(|(n, _)| *n == rank_name)
+            else {
+                push(
+                    "lock-rank",
+                    toks[i].line,
+                    format!("rank::{} is not in the declared table", rank_name),
+                );
+                continue;
+            };
+            // binding name: nearest `IDENT (=|:)` walking backwards
+            for back in 1..=8usize {
+                let Some(bi) = i.checked_sub(back) else { break };
+                let next = &toks[bi + 1].text;
+                if toks[bi].kind == Kind::Ident
+                    && (next == "=" || next == ":")
+                    && toks
+                        .get(bi + 2)
+                        .map(|t| t.text != ":")
+                        .unwrap_or(true)
+                    && !matches!(
+                        toks[bi].text.as_str(),
+                        "Arc" | "Box" | "Some" | "new" | "rank"
+                    )
+                {
+                    lock_vars.push((toks[bi].text.clone(), rank_val));
+                    break;
+                }
+            }
+        }
+    }
+
+    // duplicate rank declarations (only meaningful on the table file)
+    if is_ordered_lock {
+        let table = parse_rank_table(src);
+        for (i, (name, val)) in table.iter().enumerate() {
+            for (name2, val2) in &table[i + 1..] {
+                if name == name2 || val == val2 {
+                    push(
+                        "lock-rank",
+                        1,
+                        format!(
+                            "duplicate rank declaration: {}={} vs {}={}",
+                            name, val, name2, val2
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    // registry well-formedness (only on the registry file)
+    if is_names {
+        for name in parse_trace_registry(src) {
+            if !trace_name_well_formed(&name) {
+                push(
+                    "trace-registry",
+                    1,
+                    format!("malformed registry entry {:?}", name),
+                );
+            }
+        }
+    }
+
+    // token-pattern rules + lexical nested-lock tracking
+    struct Guard {
+        depth: usize,
+        rank: u32,
+        temp: bool,
+    }
+    let mut depth = 0usize;
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut let_stmt = false;
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        let test_code = in_regions(&regions, i);
+        let text = t.text.as_str();
+        match (t.kind, text) {
+            (Kind::Punct, "{") => {
+                depth += 1;
+                let_stmt = false;
+            }
+            (Kind::Punct, "}") => {
+                depth = depth.saturating_sub(1);
+                guards.retain(|g| g.depth <= depth);
+            }
+            (Kind::Punct, ";") => {
+                let_stmt = false;
+                guards.retain(|g| !(g.temp && g.depth >= depth));
+            }
+            (Kind::Ident, "let") => let_stmt = true,
+            (Kind::Ident, "unwrap") if hot && !test_code => {
+                if prev_is(toks, i, ".")
+                    && next_is(toks, i, "(")
+                    && !allows.allowed("hot-unwrap", t.line)
+                {
+                    push(
+                        "hot-unwrap",
+                        t.line,
+                        ".unwrap() in a serve hot path (convert to a \
+                         typed error, or expect + lint:allow)"
+                            .into(),
+                    );
+                }
+            }
+            (Kind::Ident, "expect") if hot && !test_code => {
+                if prev_is(toks, i, ".")
+                    && next_is(toks, i, "(")
+                    && !allows.allowed("hot-expect", t.line)
+                {
+                    push(
+                        "hot-expect",
+                        t.line,
+                        ".expect() in a serve hot path needs \
+                         `// lint:allow(hot-expect): <why the invariant holds>`"
+                            .into(),
+                    );
+                }
+            }
+            (
+                Kind::Ident,
+                "panic" | "unreachable" | "todo" | "unimplemented",
+            ) if hot && !test_code => {
+                if next_is(toks, i, "!")
+                    && !allows.allowed("hot-panic", t.line)
+                {
+                    push(
+                        "hot-panic",
+                        t.line,
+                        format!(
+                            "{}! in a serve hot path needs \
+                             `// lint:allow(hot-panic): <reason>`",
+                            text
+                        ),
+                    );
+                }
+            }
+            (Kind::Ident, "unsafe") if !test_code => {
+                if !allows.safety_near(t.line, 10)
+                    && !allows.allowed("safety-comment", t.line)
+                {
+                    push(
+                        "safety-comment",
+                        t.line,
+                        "`unsafe` without a `// SAFETY:` comment within \
+                         10 lines"
+                            .into(),
+                    );
+                }
+            }
+            (Kind::Ident, "Mutex" | "RwLock")
+                if watched && !test_code =>
+            {
+                if !allows.allowed("raw-mutex", t.line) {
+                    push(
+                        "raw-mutex",
+                        t.line,
+                        format!(
+                            "raw {} in a lock-ranked module; use \
+                             util::ordered_lock::OrderedMutex",
+                            text
+                        ),
+                    );
+                }
+            }
+            (Kind::Ident, "lock") if watched && !test_code => {
+                // `VAR.lock(` where VAR maps to a declared rank
+                if prev_is(toks, i, ".") && next_is(toks, i, "(") {
+                    let var = i
+                        .checked_sub(2)
+                        .map(|j| toks[j].text.as_str())
+                        .unwrap_or("");
+                    if let Some(&(_, rank)) =
+                        lock_vars.iter().find(|(n, _)| n == var)
+                    {
+                        if let Some(held) = guards
+                            .iter()
+                            .find(|g| g.rank >= rank)
+                        {
+                            if !allows.allowed("lock-rank", t.line) {
+                                push(
+                                    "lock-rank",
+                                    t.line,
+                                    format!(
+                                        "acquiring rank {} while rank {} \
+                                         is held (acquisition order must \
+                                         be strictly increasing)",
+                                        rank, held.rank
+                                    ),
+                                );
+                            }
+                        }
+                        guards.push(Guard {
+                            depth,
+                            rank,
+                            temp: !let_stmt,
+                        });
+                    }
+                }
+            }
+            (Kind::Ident, "span" | "instant" | "counter")
+                if !test_code =>
+            {
+                // `trace :: span (` — the obs::trace call shape
+                let is_trace_call = i >= 3
+                    && toks[i - 1].text == ":"
+                    && toks[i - 2].text == ":"
+                    && toks[i - 3].text == "trace"
+                    && next_is(toks, i, "(");
+                if is_trace_call {
+                    match toks.get(i + 2) {
+                        Some(name) if name.kind == Kind::Str => {
+                            if !ctx
+                                .trace_names
+                                .iter()
+                                .any(|n| n == &name.text)
+                                && !allows
+                                    .allowed("trace-registry", t.line)
+                            {
+                                push(
+                                    "trace-registry",
+                                    t.line,
+                                    format!(
+                                        "trace name {:?} is not in \
+                                         obs::names::TRACE_NAMES",
+                                        name.text
+                                    ),
+                                );
+                            }
+                        }
+                        _ => {
+                            if !allows.allowed("trace-registry", t.line) {
+                                push(
+                                    "trace-registry",
+                                    t.line,
+                                    "trace name must be a string literal \
+                                     (the registry is checked statically)"
+                                        .into(),
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            (Kind::Str, _) if !test_code => {
+                if text.starts_with("BENCH_")
+                    && text.ends_with(".json")
+                    && !ctx.bench_gates.iter().any(|g| g == text)
+                    && !allows.allowed("bench-gate", t.line)
+                {
+                    push(
+                        "bench-gate",
+                        t.line,
+                        format!(
+                            "{} has no schema-gate step in \
+                             .github/workflows/ci.yml",
+                            text
+                        ),
+                    );
+                }
+            }
+            (Kind::Punct, "[") if hot && !test_code => {
+                // integer-literal indexing `x[0]` / `)[1]` / `][2]`
+                let prev_ok = i > 0
+                    && (toks[i - 1].kind == Kind::Ident
+                        && !matches!(
+                            toks[i - 1].text.as_str(),
+                            // attribute/macro heads, not indexing
+                            "derive" | "cfg" | "doc" | "must_use"
+                        )
+                        || toks[i - 1].text == ")"
+                        || toks[i - 1].text == "]");
+                // preceded by `#` → attribute, not indexing
+                let attr = i > 0 && toks[i - 1].text == "#";
+                let lit_index = toks.get(i + 1).is_some_and(|t| {
+                    t.kind == Kind::Num
+                        && t.text.chars().all(|c| {
+                            c.is_ascii_digit() || c == '_'
+                        })
+                }) && toks.get(i + 2).map(|t| t.text.as_str())
+                    == Some("]");
+                if prev_ok && !attr && lit_index {
+                    let line = t.line;
+                    if !allows.allowed("hot-index", line)
+                        && !allows.bound_comment(line)
+                    {
+                        push(
+                            "hot-index",
+                            line,
+                            "integer-literal indexing in a serve hot \
+                             path needs a bound comment or \
+                             `// lint:allow(hot-index): <reason>`"
+                                .into(),
+                        );
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    v
+}
+
+fn prev_is(toks: &[Tok], i: usize, s: &str) -> bool {
+    i > 0 && toks[i - 1].text == s
+}
+
+fn next_is(toks: &[Tok], i: usize, s: &str) -> bool {
+    toks.get(i + 1).map(|t| t.text.as_str()) == Some(s)
+}
+
+fn trace_name_well_formed(name: &str) -> bool {
+    let mut segments = 0;
+    for seg in name.split('.') {
+        segments += 1;
+        if seg.is_empty()
+            || !seg.chars().all(|c| {
+                c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_'
+            })
+        {
+            return false;
+        }
+    }
+    segments >= 2
+}
+
+// ---------------------------------------------------------------------
+// Tree walk
+// ---------------------------------------------------------------------
+
+/// Build the [`LintCtx`] from a crate root (the directory holding
+/// `src/`); the CI workflow is looked up at `<root>/../.github/...`.
+pub fn build_ctx(root: &Path) -> Result<LintCtx, String> {
+    let names = std::fs::read_to_string(root.join("src/obs/names.rs"))
+        .map_err(|e| format!("read src/obs/names.rs: {}", e))?;
+    let locks =
+        std::fs::read_to_string(root.join("src/util/ordered_lock.rs"))
+            .map_err(|e| format!("read src/util/ordered_lock.rs: {}", e))?;
+    let ci_path = root
+        .parent()
+        .map(|p| p.join(".github/workflows/ci.yml"))
+        .filter(|p| p.exists())
+        .unwrap_or_else(|| root.join(".github/workflows/ci.yml"));
+    let ci = std::fs::read_to_string(&ci_path).unwrap_or_default();
+    Ok(LintCtx {
+        trace_names: parse_trace_registry(&names),
+        lock_ranks: parse_rank_table(&locks),
+        bench_gates: parse_bench_gates(&ci),
+    })
+}
+
+/// Lint `src/`, `tests/`, `benches/` under the crate root. Returns all
+/// findings, file order.
+pub fn lint_tree(root: &Path) -> Result<Vec<Violation>, String> {
+    let ctx = build_ctx(root)?;
+    let mut files = Vec::new();
+    for sub in ["src", "tests", "benches"] {
+        collect_rs(&root.join(sub), &mut files);
+    }
+    files.sort();
+    let mut out = Vec::new();
+    for f in files {
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(&f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(&f)
+            .map_err(|e| format!("read {}: {}", rel, e))?;
+        out.extend(lint_source(&rel, &src, &ctx));
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for e in entries.flatten() {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(&p, out);
+        } else if p.extension().map(|x| x == "rs") == Some(true) {
+            out.push(p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> LintCtx {
+        LintCtx {
+            trace_names: vec!["kv.evict".into(), "sched.admit".into()],
+            lock_ranks: vec![("LOW".into(), 10), ("HIGH".into(), 30)],
+            bench_gates: vec!["BENCH_gated.json".into()],
+        }
+    }
+
+    fn rules_of(v: &[Violation]) -> Vec<&'static str> {
+        v.iter().map(|x| x.rule).collect()
+    }
+
+    #[test]
+    fn lexer_skips_strings_and_comments() {
+        let src = r####"
+            // a comment with .unwrap() inside
+            /* block /* nested */ .unwrap() */
+            let s = "quoted .unwrap() text";
+            let r = r#"raw "inner" .unwrap()"#;
+            let c = '\'';
+            let lt: &'static str = "x";
+        "####;
+        let v = lint_source("src/kv/paged.rs", src, &ctx());
+        assert!(v.is_empty(), "{:?}", v);
+    }
+
+    #[test]
+    fn hot_unwrap_fires_only_in_hot_files() {
+        let src = "fn f(x: Option<u8>) -> u8 { x.unwrap() }";
+        let hot = lint_source("src/kv/paged.rs", src, &ctx());
+        assert_eq!(rules_of(&hot), vec!["hot-unwrap"]);
+        let cold = lint_source("src/kv/store.rs", src, &ctx());
+        assert!(cold.is_empty());
+    }
+
+    #[test]
+    fn allow_with_reason_suppresses() {
+        let src = "fn f(x: Option<u8>) -> u8 {\n\
+                   // lint:allow(hot-unwrap): slot checked two lines up\n\
+                   x.unwrap()\n}";
+        assert!(lint_source("src/kv/paged.rs", src, &ctx()).is_empty());
+    }
+
+    #[test]
+    fn allow_without_reason_is_its_own_violation() {
+        let src = "fn f(x: Option<u8>) -> u8 {\n\
+                   // lint:allow(hot-unwrap)\n\
+                   x.unwrap()\n}";
+        let v = lint_source("src/kv/paged.rs", src, &ctx());
+        assert!(rules_of(&v).contains(&"allow-format"), "{:?}", v);
+        assert!(rules_of(&v).contains(&"hot-unwrap"));
+    }
+
+    #[test]
+    fn test_modules_are_exempt() {
+        let src = "fn ok() {}\n\
+                   #[cfg(test)]\nmod tests {\n\
+                   fn f(x: Option<u8>) -> u8 { x.unwrap() }\n\
+                   }";
+        assert!(lint_source("src/kv/paged.rs", src, &ctx()).is_empty());
+    }
+
+    #[test]
+    fn trace_registry_checks_literals() {
+        let good = "fn f() { trace::instant(\"kv.evict\", &[]); }";
+        assert!(lint_source("src/kv/other.rs", good, &ctx()).is_empty());
+        let bad = "fn f() { trace::instant(\"kv.bogus\", &[]); }";
+        let v = lint_source("src/kv/other.rs", bad, &ctx());
+        assert_eq!(rules_of(&v), vec!["trace-registry"]);
+        let dynamic = "fn f(n: &'static str) { trace::span(n); }";
+        let v = lint_source("src/kv/other.rs", dynamic, &ctx());
+        assert_eq!(rules_of(&v), vec!["trace-registry"]);
+    }
+
+    #[test]
+    fn bench_gate_requires_ci_pairing() {
+        let gated = "fn f() { write(\"BENCH_gated.json\"); }";
+        assert!(lint_source("benches/x.rs", gated, &ctx()).is_empty());
+        let orphan = "fn f() { write(\"BENCH_orphan.json\"); }";
+        let v = lint_source("benches/x.rs", orphan, &ctx());
+        assert_eq!(rules_of(&v), vec!["bench-gate"]);
+    }
+
+    #[test]
+    fn raw_mutex_banned_in_watched_modules() {
+        let src = "use std::sync::Mutex;\n";
+        let v = lint_source("src/main.rs", src, &ctx());
+        assert_eq!(rules_of(&v), vec!["raw-mutex"]);
+        assert!(lint_source("src/kv/store.rs", src, &ctx()).is_empty());
+    }
+
+    #[test]
+    fn lock_rank_inversion_detected_lexically() {
+        let src = "\
+            fn f() {\n\
+                let hi = OrderedMutex::new(rank::HIGH, \"hi\", ());\n\
+                let lo = OrderedMutex::new(rank::LOW, \"lo\", ());\n\
+                let g1 = hi.lock();\n\
+                let g2 = lo.lock();\n\
+            }\n";
+        let v = lint_source("src/main.rs", src, &ctx());
+        assert_eq!(rules_of(&v), vec!["lock-rank"], "{:?}", v);
+        // increasing order is clean
+        let ok = src
+            .replace("rank::HIGH", "rank::TMP")
+            .replace("rank::LOW", "rank::HIGH")
+            .replace("rank::TMP", "rank::LOW");
+        assert!(lint_source("src/main.rs", &ok, &ctx()).is_empty());
+    }
+
+    #[test]
+    fn temporary_guard_releases_at_statement_end() {
+        // two sequential temporary acquisitions of the same lock are
+        // not nested
+        let src = "\
+            fn f() {\n\
+                let lo = OrderedMutex::new(rank::LOW, \"lo\", 0);\n\
+                *lo.lock() += 1;\n\
+                *lo.lock() += 1;\n\
+            }\n";
+        assert!(lint_source("src/main.rs", src, &ctx()).is_empty());
+    }
+
+    #[test]
+    fn unknown_rank_flagged() {
+        let src =
+            "fn f() { let m = OrderedMutex::new(rank::NOPE, \"x\", ()); }";
+        let v = lint_source("src/main.rs", src, &ctx());
+        assert_eq!(rules_of(&v), vec!["lock-rank"]);
+    }
+
+    #[test]
+    fn safety_comment_required_for_unsafe() {
+        let bare = "fn f() { unsafe { core::hint::unreachable_unchecked() } }";
+        let v = lint_source("src/quant/x.rs", bare, &ctx());
+        assert_eq!(rules_of(&v), vec!["safety-comment"]);
+        let ok = "// SAFETY: caller guarantees the branch is dead\n\
+                  fn f() { unsafe { core::hint::unreachable_unchecked() } }";
+        assert!(lint_source("src/quant/x.rs", ok, &ctx()).is_empty());
+    }
+
+    #[test]
+    fn hot_index_needs_bound_comment() {
+        let bad = "fn f(v: &[u8]) -> u8 { v[0] }";
+        let v = lint_source("src/kv/paged.rs", bad, &ctx());
+        assert_eq!(rules_of(&v), vec!["hot-index"]);
+        let ok = "fn f(v: &[u8]) -> u8 {\n\
+                  // nonempty: admit() rejects empty prompts\n\
+                  v[0]\n}";
+        assert!(lint_source("src/kv/paged.rs", ok, &ctx()).is_empty());
+        // non-literal indices are the borrow checker's problem
+        let expr = "fn f(v: &[u8], i: usize) -> u8 { v[i + 1] }";
+        assert!(lint_source("src/kv/paged.rs", expr, &ctx()).is_empty());
+    }
+
+    #[test]
+    fn fixtures_are_skipped() {
+        let src = "fn f(x: Option<u8>) -> u8 { x.unwrap() }";
+        assert!(lint_source(
+            "tests/fixtures/lint/src/kv/paged.rs",
+            src,
+            &ctx()
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn registry_and_rank_parsers() {
+        let names_src = "pub const TRACE_NAMES: &[&str] = &[\n\
+                         \"a.b\",\n    \"c.d\",\n];";
+        assert_eq!(parse_trace_registry(names_src), vec!["a.b", "c.d"]);
+        let rank_src = "pub mod rank {\n\
+                        pub const A: u32 = 10;\n\
+                        pub const B: u32 = 20;\n}";
+        assert_eq!(
+            parse_rank_table(rank_src),
+            vec![("A".into(), 10), ("B".into(), 20)]
+        );
+        let ci = "run: |\n  python3 - <<'EOF'\n  with open(\"BENCH_x.json\") as f:\n";
+        assert_eq!(parse_bench_gates(ci), vec!["BENCH_x.json"]);
+    }
+
+    #[test]
+    fn duplicate_ranks_flagged_on_table_file() {
+        let src = "pub mod rank {\n\
+                   pub const A: u32 = 10;\n\
+                   pub const B: u32 = 10;\n}";
+        let v = lint_source("src/util/ordered_lock.rs", src, &ctx());
+        assert_eq!(rules_of(&v), vec!["lock-rank"]);
+    }
+}

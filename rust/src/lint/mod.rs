@@ -1,0 +1,19 @@
+//! Repo-invariant static analysis (`ganq-lint`).
+//!
+//! The engine lives in [`engine`] as a dependency-free, self-contained
+//! source file: the `rust/xtask` binary includes the same file via
+//! `#[path]`, so `cargo xtask lint` and `crate::lint` are always the
+//! same analysis — and the engine's rules get tier-1 test coverage
+//! through this module (`tests/lint_self.rs` runs the linter over the
+//! live tree and over seeded-violation fixtures).
+//!
+//! See `rust/xtask/README.md` for the rule catalogue, the
+//! `lint:allow` escape-hatch format, and how the trace-name registry /
+//! lock-rank table / CI bench gates are declared.
+
+pub mod engine;
+
+pub use engine::{
+    build_ctx, lint_source, lint_tree, parse_bench_gates, parse_rank_table,
+    parse_trace_registry, LintCtx, Violation, HOT_FILES, LOCK_WATCHED, RULES,
+};

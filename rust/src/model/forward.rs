@@ -465,7 +465,7 @@ pub fn sample_logits(
         idx.truncate(params.top_k);
     }
     idx.sort_by(by_logit_desc);
-    let m = logits[idx[0] as usize];
+    let m = logits[idx[0] as usize]; // bound: idx nonempty (vocab > 0)
     let mut probs: Vec<f32> = idx
         .iter()
         .map(|&i| ((logits[i as usize] - m) * inv_t).exp())
@@ -626,6 +626,7 @@ impl LinearPlan<'_> {
     fn apply(&self, x: &Mat, sc: &mut LutScratch, out: &mut Mat) {
         match self {
             LinearPlan::Fp(t) => {
+                // bound: checkpoint tensors are always 2-d [rows, cols]
                 tensor::matmul_tb_slice_into(x, &t.data, t.shape[0], out)
             }
             LinearPlan::DenseRef(w) => x.matmul_tb_into(w, out),
@@ -968,8 +969,10 @@ impl<'w> Engine<'w> {
             .enumerate()
             .map(|(j, it)| pos[j] + it.tokens.len())
             .max()
+            // lint:allow(hot-expect): step() contract — plan items nonempty
             .expect("items nonempty");
         let max_c =
+            // lint:allow(hot-expect): step() contract — plan items nonempty
             items.iter().map(|it| it.tokens.len()).max().expect("nonempty");
         let gstride = max_rows * hd;
         let jstride = Q_TILE * hd + max_rows;
@@ -1225,7 +1228,7 @@ impl<'w> Engine<'w> {
     ) -> Mat {
         let cfg = self.cfg;
         let bsz = tokens.len();
-        let s_len = tokens[0].len();
+        let s_len = tokens[0].len(); // bound: caller passes >= 1 sequence
         assert!(tokens.iter().all(|t| t.len() == s_len));
         assert!(s_len <= cfg.ctx);
         let mut caches: Vec<KvCache> = (0..bsz)
@@ -1245,7 +1248,7 @@ impl<'w> Engine<'w> {
             .map(|c| c as &mut dyn KvSeq)
             .collect();
         let outs = self.step_with(&plan, &mut SeqRefs(&mut refs), observer);
-        let vocab = outs[0].cols;
+        let vocab = outs[0].cols; // bound: one output per plan item, bsz >= 1
         let mut out = Mat::zeros(bsz * s_len, vocab);
         for (b, m) in outs.iter().enumerate() {
             out.data[b * s_len * vocab..(b + 1) * s_len * vocab]
@@ -1264,7 +1267,7 @@ impl<'w> Engine<'w> {
     ) -> f64 {
         let cfg = self.cfg;
         let bsz = tokens.len();
-        let s_len = tokens[0].len();
+        let s_len = tokens[0].len(); // bound: caller passes >= 1 sequence
         assert!(tokens.iter().all(|t| t.len() == s_len));
         assert!(s_len <= cfg.ctx);
         let chunk = chunk.max(1);
@@ -1338,6 +1341,7 @@ impl<'w> Engine<'w> {
         let mut logits = {
             let mut refs: Vec<&mut dyn KvSeq> = vec![&mut cache];
             let outs = self.step(&plan, &mut SeqRefs(&mut refs));
+            // lint:allow(hot-expect): step() returns one output per plan item
             outs.into_iter().next().expect("one item").data
         };
         for _ in 0..max_new {
@@ -1351,6 +1355,7 @@ impl<'w> Engine<'w> {
                 .decode_batch(&[next], &mut SeqRefs(&mut refs))
                 .into_iter()
                 .next()
+                // lint:allow(hot-expect): decode_batch returns one row per token
                 .expect("one row");
         }
         out

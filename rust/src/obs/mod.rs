@@ -16,6 +16,9 @@
 //!   ring drainage is per-thread, so `--trace-out` covers the
 //!   single-engine path only. Disabled, every site is one thread-local
 //!   bool check.
+//! - [`names`] — the canonical dotted-name registry every trace site
+//!   must draw from; `cargo xtask lint` enforces the pairing statically
+//!   and debug builds re-check it at emit time.
 //! - [`hist`] — the metrics core. One global log-scale histogram
 //!   layout (exact merges, quantiles within a bucket of exact), the
 //!   shared nearest-rank [`hist::percentile_exact`] every percentile in
@@ -28,6 +31,7 @@
 //! `bench::traffic` + `benches/serve_traffic.rs`).
 
 pub mod hist;
+pub mod names;
 pub mod trace;
 
 pub use hist::{percentile_exact, Histogram, Registry, Samples};

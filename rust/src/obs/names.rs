@@ -1,0 +1,114 @@
+//! Canonical registry of trace event names.
+//!
+//! Every `obs::trace` span/instant/counter site must use a name from
+//! this table — the dotted `subsystem.event` vocabulary is a public
+//! contract consumed by the Perfetto export, the `sched.*`/`kv.*`/
+//! `spec.*` trace analyses in the traffic bench, and the python schema
+//! gates in CI. `cargo xtask lint` (rule `trace-registry`) enforces the
+//! pairing statically; debug builds also check it at emit time.
+//!
+//! Adding an event name is a two-line change: the emit site and one
+//! entry here (keep the table sorted — registration is a binary
+//! search). Names are `subsystem.event`, lowercase, `_` inside a
+//! segment, no trailing dot.
+
+/// Sorted table of every registered trace name.
+pub const TRACE_NAMES: &[&str] = &[
+    "backend.step",
+    "cluster.requeue",
+    "cluster.retry",
+    "cluster.route",
+    "cluster.shed",
+    "cluster.worker_down",
+    "engine.attn",
+    "engine.kv",
+    "engine.logits",
+    "engine.mlp",
+    "engine.qkv",
+    "engine.step",
+    "hlo.chunk",
+    "hlo.dispatch",
+    "kv.audit",
+    "kv.cow",
+    "kv.evict",
+    "kv.occupancy",
+    "kv.preempt",
+    "kv.prefix_hit",
+    "kv.truncate",
+    "pjrt.run",
+    "sched.active",
+    "sched.admit",
+    "sched.chunk",
+    "sched.plan",
+    "sched.preempt",
+    "sched.queue",
+    "sched.reject",
+    "sched.sample",
+    "serve.precision_switch",
+    "spec.accept",
+    "spec.draft",
+    "spec.k",
+    "spec.rollback",
+    "spec.verify",
+];
+
+/// Is `name` in the canonical registry?
+pub fn is_registered(name: &str) -> bool {
+    TRACE_NAMES.binary_search(&name).is_ok()
+}
+
+/// A registered name must be dotted (`subsystem.event`), lowercase
+/// alphanumeric/underscore segments. The lint uses this shape check for
+/// names it finds in the registry itself.
+pub fn well_formed(name: &str) -> bool {
+    let mut segments = 0;
+    for seg in name.split('.') {
+        segments += 1;
+        if seg.is_empty()
+            || !seg
+                .chars()
+                .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+        {
+            return false;
+        }
+    }
+    segments >= 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_is_sorted_and_unique() {
+        for w in TRACE_NAMES.windows(2) {
+            assert!(w[0] < w[1], "registry out of order at {:?}", w);
+        }
+    }
+
+    #[test]
+    fn every_entry_is_well_formed() {
+        for name in TRACE_NAMES {
+            assert!(well_formed(name), "malformed registry entry {:?}", name);
+        }
+    }
+
+    #[test]
+    fn registration_lookup() {
+        assert!(is_registered("kv.prefix_hit"));
+        assert!(is_registered("sched.admit"));
+        assert!(!is_registered("kv.bogus"));
+        assert!(!is_registered(""));
+    }
+
+    #[test]
+    fn shape_check_rejects_junk() {
+        assert!(well_formed("a.b"));
+        assert!(well_formed("kv.prefix_hit"));
+        assert!(!well_formed("flat"));
+        assert!(!well_formed("Upper.case"));
+        assert!(!well_formed("trailing."));
+        assert!(!well_formed(".leading"));
+        assert!(!well_formed("space in.name"));
+    }
+}

@@ -119,6 +119,24 @@ pub fn enabled() -> bool {
     ENABLED.with(|e| e.get())
 }
 
+/// Debug-build guard: every emit site must use a name from the
+/// canonical [`super::names`] registry (the static half of the same
+/// contract is `cargo xtask lint`, rule `trace-registry`). The module's
+/// own unit tests exercise the recorder with ad-hoc names, so the check
+/// compiles out under `cfg(test)`; release builds compile it out via
+/// `debug_assert!`.
+#[inline]
+fn check_registered(name: &'static str) {
+    #[cfg(not(test))]
+    debug_assert!(
+        super::names::is_registered(name),
+        "trace name {:?} is not in obs::names::TRACE_NAMES",
+        name
+    );
+    #[cfg(test)]
+    let _ = name;
+}
+
 fn emit(name: &'static str, ph: Phase, args: Vec<(&'static str, f64)>) {
     RECORDER.with(|r| {
         if let Some(rec) = r.borrow_mut().as_mut() {
@@ -144,6 +162,7 @@ pub struct SpanGuard {
 /// Open a span covering the guard's scope.
 #[inline]
 pub fn span(name: &'static str) -> SpanGuard {
+    check_registered(name);
     let armed = enabled();
     if armed {
         emit(name, Phase::Begin, Vec::new());
@@ -165,6 +184,7 @@ impl Drop for SpanGuard {
 /// Point event with numeric args (e.g. `("tokens", 17.0)`).
 #[inline]
 pub fn instant(name: &'static str, args: &[(&'static str, f64)]) {
+    check_registered(name);
     if enabled() {
         emit(name, Phase::Instant, args.to_vec());
     }
@@ -173,6 +193,7 @@ pub fn instant(name: &'static str, args: &[(&'static str, f64)]) {
 /// Counter track sample (e.g. queue depth, KV occupancy).
 #[inline]
 pub fn counter(name: &'static str, value: f64) {
+    check_registered(name);
     if enabled() {
         emit(name, Phase::Counter, vec![("value", value)]);
     }

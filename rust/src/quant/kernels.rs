@@ -188,6 +188,8 @@ pub fn lut_gemm_planes_into(
     let codebook = store
         .codebooks
         .get(&w)
+        // lint:allow(hot-panic): caller selects w from store.widths(); a miss
+        // is a programming error worth a loud crash, not a recoverable state
         .unwrap_or_else(|| panic!("width {} not in store", w));
     let n = store.n;
     let rowb = n.div_ceil(8);

@@ -131,27 +131,30 @@ impl Quantizer for SqueezeLlm {
         let mut codebook = Mat::zeros(m, k);
         let iters = self.kmeans_iters;
         let threads = pool::default_threads();
-        // parallel across rows: codes and codebook rows are disjoint
+        // parallel across rows: each worker owns the same row range of
+        // both outputs (codes stride n, codebook stride k)
         let dense_ref = &dense;
         let weights_ref = &weights;
-        let cb_ptr = codebook.data.as_mut_ptr() as usize;
-        pool::par_rows_mut(&mut codes, n, threads, |row0, chunk| {
-            for (ri, crow) in chunk.chunks_mut(n).enumerate() {
-                let i = row0 + ri;
-                let (c, cent) = weighted_kmeans_row(
-                    dense_ref.row(i),
-                    weights_ref,
-                    k,
-                    iters,
-                );
-                crow.copy_from_slice(&c);
-                // disjoint row write (i is unique per chunk element)
-                unsafe {
-                    let dst = (cb_ptr as *mut f32).add(i * k);
-                    std::ptr::copy_nonoverlapping(cent.as_ptr(), dst, k);
+        pool::par_rows_mut2(
+            &mut codes,
+            n,
+            &mut codebook.data,
+            k,
+            threads,
+            |row0, crows, cbrows| {
+                let rows = crows.chunks_mut(n).zip(cbrows.chunks_mut(k));
+                for (ri, (crow, cbrow)) in rows.enumerate() {
+                    let (c, cent) = weighted_kmeans_row(
+                        dense_ref.row(row0 + ri),
+                        weights_ref,
+                        k,
+                        iters,
+                    );
+                    crow.copy_from_slice(&c);
+                    cbrow.copy_from_slice(&cent);
                 }
-            }
-        });
+            },
+        );
         let lut = lut_from_parts(m, n, self.bits, codes, codebook);
         let mut w_hat = lut.dequant();
         let mut storage = lut.storage();

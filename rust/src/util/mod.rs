@@ -4,6 +4,8 @@
 
 pub mod cli;
 pub mod json;
+pub mod modelcheck;
+pub mod ordered_lock;
 pub mod pool;
 pub mod prop;
 pub mod rng;

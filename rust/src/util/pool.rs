@@ -86,6 +86,49 @@ pub fn par_rows_mut<T: Send, F>(
     });
 }
 
+/// Like [`par_rows_mut`] but over two flat buffers that share a row
+/// count (possibly different strides): each thread gets the *same* row
+/// range of both, so a worker can fill matching rows of two outputs
+/// (e.g. per-row codes and per-row codebooks) without raw pointers.
+/// Calls `f(row_start, chunk_a, chunk_b)`.
+pub fn par_rows_mut2<A: Send, B: Send, F>(
+    a: &mut [A],
+    stride_a: usize,
+    b: &mut [B],
+    stride_b: usize,
+    threads: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [A], &mut [B]) + Sync,
+{
+    assert!(stride_a > 0 && a.len() % stride_a == 0);
+    assert!(stride_b > 0 && b.len() % stride_b == 0);
+    let n = a.len() / stride_a;
+    assert_eq!(n, b.len() / stride_b, "row counts must match");
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        f(0, a, b);
+        return;
+    }
+    let chunk_rows = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest_a = a;
+        let mut rest_b = b;
+        let mut row = 0usize;
+        let fr = &f;
+        while !rest_a.is_empty() {
+            let rows = chunk_rows.min(rest_a.len() / stride_a);
+            let (head_a, tail_a) = rest_a.split_at_mut(rows * stride_a);
+            let (head_b, tail_b) = rest_b.split_at_mut(rows * stride_b);
+            rest_a = tail_a;
+            rest_b = tail_b;
+            let r0 = row;
+            row += rows;
+            s.spawn(move || fr(r0, head_a, head_b));
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,6 +159,24 @@ mod tests {
         });
         for r in 0..12 {
             assert!(data[r * 5..(r + 1) * 5].iter().all(|&v| v == r as u32));
+        }
+    }
+
+    #[test]
+    fn par_rows_mut2_rows_line_up() {
+        let mut a = vec![0u32; 13 * 3];
+        let mut b = vec![0u32; 13 * 7];
+        par_rows_mut2(&mut a, 3, &mut b, 7, 4, |row0, ca, cb| {
+            for (i, row) in ca.chunks_mut(3).enumerate() {
+                row.fill((row0 + i) as u32);
+            }
+            for (i, row) in cb.chunks_mut(7).enumerate() {
+                row.fill((row0 + i) as u32);
+            }
+        });
+        for r in 0..13 {
+            assert!(a[r * 3..(r + 1) * 3].iter().all(|&v| v == r as u32));
+            assert!(b[r * 7..(r + 1) * 7].iter().all(|&v| v == r as u32));
         }
     }
 

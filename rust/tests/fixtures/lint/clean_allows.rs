@@ -1,0 +1,19 @@
+//@path: src/coordinator/serve.rs
+//! Clean fixture: every rule that applies to a serve hot path is
+//! satisfied through its documented escape hatch, so linting this file
+//! must yield zero violations.
+
+use ganq::obs::trace;
+
+pub fn escapes(v: Option<u32>, xs: &[u32]) -> u32 {
+    // lint:allow(hot-expect): fixture invariant — caller passes Some
+    let a = v.expect("always some");
+    let b = xs[0]; // bound: xs nonempty by construction
+    let _sp = trace::span("engine.step");
+    a + b
+}
+
+pub fn documented_unsafe(p: *const u8) -> u8 {
+    // SAFETY: fixture contract — p points at a live, aligned byte
+    unsafe { *p }
+}

@@ -1,0 +1,6 @@
+//@path: src/kv/paged.rs
+//! Seeded violation: `.expect()` without a lint:allow (hot-expect).
+
+pub fn take(v: Option<u32>) -> u32 {
+    v.expect("always some")
+}

@@ -1,0 +1,8 @@
+//@path: src/model/forward.rs
+//! Seeded violation: integer-literal indexing, no bound comment
+//! (hot-index). The blank line below keeps the doc comment from
+//! counting as a bound comment for the indexing line.
+
+pub fn first(xs: &[f32]) -> f32 {
+    xs[0]
+}

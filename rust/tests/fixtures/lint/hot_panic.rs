@@ -1,0 +1,6 @@
+//@path: src/quant/kernels.rs
+//! Seeded violation: panic! on a serve hot path (hot-panic).
+
+pub fn reject(w: u8) {
+    panic!("width {} unsupported", w);
+}

@@ -1,0 +1,14 @@
+//@path: src/main.rs
+//! Seeded violation: nested acquisition in decreasing rank order
+//! (lock-rank). CLUSTER_STATUS (20) is held when TRACE_SINK (10) is
+//! taken; ranks must be strictly increasing inward.
+
+use ganq::util::ordered_lock::{rank, OrderedMutex};
+
+pub fn inverted() -> u32 {
+    let hi = OrderedMutex::new(rank::CLUSTER_STATUS, "fixture.hi", 1u32);
+    let lo = OrderedMutex::new(rank::TRACE_SINK, "fixture.lo", 2u32);
+    let g1 = hi.lock();
+    let g2 = lo.lock();
+    *g1 + *g2
+}

@@ -1,0 +1,16 @@
+//@path: src/util/buf.rs
+//! Seeded violation: `unsafe` with no `// SAFETY:` comment within 10
+//! lines above (safety-comment). Padding pushes the doc block out of
+//! the lookback window so it cannot satisfy the rule by accident.
+//!
+//! pad
+//! pad
+//! pad
+//! pad
+//! pad
+//! pad
+//! pad
+
+pub fn deref(p: *const u8) -> u8 {
+    unsafe { *p }
+}

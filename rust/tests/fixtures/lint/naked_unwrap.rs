@@ -1,0 +1,6 @@
+//@path: src/coordinator/serve.rs
+//! Seeded violation: bare `.unwrap()` on a serve hot path (hot-unwrap).
+
+pub fn take(v: Option<u32>) -> u32 {
+    v.unwrap()
+}

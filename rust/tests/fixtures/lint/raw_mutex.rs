@@ -1,0 +1,9 @@
+//@path: src/coordinator/cluster.rs
+//! Seeded violations: raw std Mutex in a lock-ranked module (raw-mutex,
+//! once per mention).
+
+use std::sync::Mutex;
+
+pub fn make() -> Mutex<u32> {
+    Mutex::new(0)
+}

@@ -1,0 +1,9 @@
+//@path: src/coordinator/server.rs
+//! Seeded violation: an OrderedMutex built with a rank constant that is
+//! not in util::ordered_lock::rank's declared table (lock-rank).
+
+use ganq::util::ordered_lock::{rank, OrderedMutex};
+
+pub fn bogus() -> OrderedMutex<u32> {
+    OrderedMutex::new(rank::NOT_A_DECLARED_RANK, "fixture.bogus", 0u32)
+}

@@ -1,0 +1,7 @@
+//@path: src/bench/results.rs
+//! Seeded violation: a BENCH_*.json artifact with no schema-gate step
+//! in .github/workflows/ci.yml (bench-gate).
+
+pub fn emit() {
+    std::fs::write("BENCH_unpaired.json", "{}").ok();
+}

@@ -1,0 +1,13 @@
+//@path: src/coordinator/serve.rs
+//! Seeded violations: a trace name missing from obs::names::TRACE_NAMES
+//! and a non-literal trace name (trace-registry, twice).
+
+use ganq::obs::trace;
+
+pub fn bad_literal() {
+    let _sp = trace::span("bogus.not_in_registry");
+}
+
+pub fn non_literal(name: &'static str) {
+    let _sp = trace::span(name);
+}

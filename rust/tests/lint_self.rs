@@ -1,0 +1,100 @@
+//! The linter lints itself: the live tree must be clean, and every
+//! seeded-violation fixture under `tests/fixtures/lint/` must fire
+//! exactly the rules it was written to demonstrate. `cargo xtask lint`
+//! runs the same engine over the same tree, so these tests keep the
+//! lint honest without needing a second binary in the tier-1 loop.
+
+use std::path::Path;
+
+use ganq::lint::{build_ctx, lint_source, lint_tree};
+
+fn crate_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn live_tree_is_lint_clean() {
+    let v = lint_tree(crate_root()).expect("lint tree walk");
+    for x in &v {
+        eprintln!("{}", x);
+    }
+    assert!(
+        v.is_empty(),
+        "{} lint violation(s) in the live tree (listed above)",
+        v.len()
+    );
+}
+
+/// Fixture file name -> rules it must (only) fire. An empty list means
+/// the fixture must lint clean.
+const EXPECT: &[(&str, &[&str])] = &[
+    ("clean_allows.rs", &[]),
+    ("hot_expect.rs", &["hot-expect"]),
+    ("hot_index.rs", &["hot-index"]),
+    ("hot_panic.rs", &["hot-panic"]),
+    ("lock_inversion.rs", &["lock-rank"]),
+    ("missing_safety.rs", &["safety-comment"]),
+    ("naked_unwrap.rs", &["hot-unwrap"]),
+    ("raw_mutex.rs", &["raw-mutex"]),
+    ("unknown_rank.rs", &["lock-rank"]),
+    ("unpaired_bench.rs", &["bench-gate"]),
+    ("unregistered_trace.rs", &["trace-registry"]),
+];
+
+#[test]
+fn fixtures_fire_their_seeded_rules() {
+    let ctx = build_ctx(crate_root()).expect("lint context");
+    let dir = crate_root().join("tests/fixtures/lint");
+    for (file, rules) in EXPECT {
+        let path = dir.join(file);
+        let src = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read {}: {}", path.display(), e));
+        let rel = src
+            .lines()
+            .next()
+            .and_then(|l| l.strip_prefix("//@path: "))
+            .map(str::trim)
+            .unwrap_or_else(|| panic!("{} missing //@path header", file));
+        let v = lint_source(rel, &src, &ctx);
+        if rules.is_empty() {
+            assert!(v.is_empty(), "{}: expected clean, got {:?}", file, v);
+            continue;
+        }
+        for rule in *rules {
+            assert!(
+                v.iter().any(|x| x.rule == *rule),
+                "{}: expected rule {} to fire, got {:?}",
+                file,
+                rule,
+                v
+            );
+        }
+        for x in &v {
+            assert!(
+                rules.contains(&x.rule),
+                "{}: unexpected extra rule {}: {:?}",
+                file,
+                x.rule,
+                v
+            );
+        }
+    }
+}
+
+/// Every fixture on disk is accounted for in [`EXPECT`], so adding a
+/// fixture without wiring its expectation fails loudly.
+#[test]
+fn fixture_corpus_matches_expectations() {
+    let dir = crate_root().join("tests/fixtures/lint");
+    let mut on_disk: Vec<String> = std::fs::read_dir(&dir)
+        .expect("fixtures dir")
+        .flatten()
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.ends_with(".rs"))
+        .collect();
+    on_disk.sort();
+    let mut listed: Vec<String> =
+        EXPECT.iter().map(|(f, _)| f.to_string()).collect();
+    listed.sort();
+    assert_eq!(on_disk, listed);
+}

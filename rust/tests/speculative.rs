@@ -229,3 +229,35 @@ fn stop_token_inside_committed_run_matches_plain() {
     );
     assert!(got[0].tokens.len() <= 2, "stopped at the stop token");
 }
+
+/// The paged-KV auditor runs inside speculative decode — mid-round
+/// while the draft window is open (exercising the draft-isolation
+/// invariant) and again at every step boundary. An audit-enabled run
+/// must stay clean and remain token-identical to plain greedy decode.
+#[test]
+fn audited_speculative_paged_run_stays_clean() {
+    let qm = anyprec_model(65);
+    let mut plain = NativeBackend::new(Weights::Quant(&qm), 2);
+    let (want, _) = serve(&mut plain, greedy_reqs(10)).unwrap();
+
+    let mut spec = SpecBackend::paged(
+        &qm,
+        2,
+        4,
+        48,
+        KvStoreKind::F32,
+        SpecOptions::fixed(2, 4),
+    )
+    .expect("backend");
+    spec.paged_kv_mut().expect("paged spec backend").set_audit(true);
+    let (got, m) = serve(&mut spec, greedy_reqs(10)).unwrap();
+    for (w, g) in want.iter().zip(&got) {
+        assert_eq!(w.tokens, g.tokens, "req {}", w.id);
+        assert_eq!(w.finish, g.finish);
+    }
+    assert!(m.spec_rounds > 0, "no speculation happened");
+
+    let kv = spec.paged_kv_mut().expect("paged spec backend");
+    assert!(kv.audits_run() > 0, "audit hooks never fired");
+    kv.audit().expect("post-serve audit clean");
+}

@@ -1,0 +1,111 @@
+//! `cargo xtask` — repo tooling. Subcommands:
+//!
+//! * `lint` — run the ganq-lint repo-invariant static analysis over
+//!   `src/`, `tests/`, `benches/` (see `rust/xtask/README.md` for the
+//!   rule catalogue). Exit 1 on any violation.
+//! * `lint --fixtures <dir>` — lint a fixture tree instead of the crate
+//!   (each fixture file's first line `//@path: <relpath>` selects the
+//!   rules that apply); used by the lint's own test corpus.
+//!
+//! The engine source is shared with the `ganq` crate (`crate::lint::
+//! engine`) via `#[path]` inclusion, so this binary needs no
+//! dependencies — not even on `ganq` — and builds before the main crate
+//! does.
+
+#[path = "../../src/lint/engine.rs"]
+mod engine;
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn crate_root() -> PathBuf {
+    // xtask lives at <crate root>/xtask
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    manifest
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or(manifest)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("lint") => run_lint(&args[1..]),
+        Some(other) => {
+            eprintln!("unknown xtask subcommand {:?}; try `lint`", other);
+            ExitCode::FAILURE
+        }
+        None => {
+            eprintln!("usage: cargo xtask lint");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run_lint(args: &[String]) -> ExitCode {
+    let root = crate_root();
+    let violations = if let Some(i) =
+        args.iter().position(|a| a == "--fixtures")
+    {
+        let Some(dir) = args.get(i + 1) else {
+            eprintln!("--fixtures needs a directory");
+            return ExitCode::FAILURE;
+        };
+        lint_fixtures(&root, &PathBuf::from(dir))
+    } else {
+        engine::lint_tree(&root)
+    };
+    match violations {
+        Ok(v) if v.is_empty() => {
+            println!("ganq-lint: clean ({})", root.display());
+            ExitCode::SUCCESS
+        }
+        Ok(v) => {
+            for violation in &v {
+                eprintln!("{}", violation);
+            }
+            eprintln!("ganq-lint: {} violation(s)", v.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("ganq-lint: {}", e);
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Lint every `.rs` file under `dir` as if it lived at the path named
+/// by its `//@path: <relpath>` header (defaults to the file name under
+/// `src/`). The real crate's registry/rank/CI context applies.
+fn lint_fixtures(
+    root: &std::path::Path,
+    dir: &std::path::Path,
+) -> Result<Vec<engine::Violation>, String> {
+    let ctx = engine::build_ctx(root)?;
+    let mut out = Vec::new();
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| format!("read {}: {}", dir.display(), e))?;
+    let mut files: Vec<PathBuf> = entries
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|x| x == "rs") == Some(true))
+        .collect();
+    files.sort();
+    for f in files {
+        let src = std::fs::read_to_string(&f)
+            .map_err(|e| format!("read {}: {}", f.display(), e))?;
+        let rel = src
+            .lines()
+            .next()
+            .and_then(|l| l.strip_prefix("//@path: "))
+            .map(|p| p.trim().to_string())
+            .unwrap_or_else(|| {
+                format!(
+                    "src/{}",
+                    f.file_name().unwrap_or_default().to_string_lossy()
+                )
+            });
+        out.extend(engine::lint_source(&rel, &src, &ctx));
+    }
+    Ok(out)
+}
